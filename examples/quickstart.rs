@@ -1,0 +1,54 @@
+//! Quickstart: open the workspace, prune one model with SparseFW, and
+//! compare perplexity against the Wanda baseline.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! Flags via env: SPARSEFW_ARTIFACTS (workspace dir).
+
+use anyhow::Result;
+use sparsefw::coordinator::PrunePipeline;
+use sparsefw::eval::{perplexity_native, zero_shot};
+use sparsefw::prelude::*;
+use sparsefw::pruner::PruneMethod;
+
+fn main() -> Result<()> {
+    let ws = Workspace::open_default()?;
+    let model_name = ws.manifest.model_names()[0].clone();
+    let model = ws.load_model(&model_name)?;
+    println!(
+        "model {model_name}: {} params, dense build-time ppl {:?}",
+        model.n_params(),
+        ws.manifest.dense_test_ppl(&model_name)
+    );
+
+    // 1. Calibrate: G = XXᵀ per pruned linear, from 64 train sequences.
+    let calib = Calibration::collect(&model, &ws.train_bin()?, 64, 7)?;
+
+    // 2. Prune to 60% per-row sparsity: Wanda baseline vs SparseFW.
+    let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
+    let pipe = PrunePipeline::new(&model, &calib);
+
+    let wanda = pipe.run(&PruneMethod::Wanda, &pattern)?;
+    let fw = pipe.run(
+        &PruneMethod::SparseFw(SparseFwConfig { iters: 300, ..Default::default() }),
+        &pattern,
+    )?;
+    println!(
+        "SparseFW mean per-layer error reduction vs Wanda warmstart: {:.1}%",
+        fw.mean_rel_reduction().unwrap_or(0.0) * 100.0
+    );
+
+    // 3. Evaluate both masked models.
+    let test = ws.test_bin()?;
+    for (name, res) in [("wanda", &wanda), ("sparsefw", &fw)] {
+        let pruned = res.apply(&model)?;
+        let ppl = perplexity_native(&pruned, &test, 48)?;
+        let zs = zero_shot(&pruned, 0xE7A1, 48)?;
+        println!(
+            "{name:>9}: ppl {ppl:7.3}  zero-shot {:5.2}%  (sparsity {:.3})",
+            zs.mean() * 100.0,
+            pruned.pruned_sparsity()
+        );
+    }
+    Ok(())
+}

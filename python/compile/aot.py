@@ -1,0 +1,233 @@
+"""AOT driver: python runs ONCE, here, and never again at runtime.
+
+``python -m compile.aot`` produces everything the rust coordinator needs:
+
+  artifacts/
+    manifest.json                 — index of all of the below
+    train.bin / val.bin / test.bin — synthetic corpus token bins (u8)
+    <model>.safetensors           — build-time-pretrained checkpoints
+    model_fwd_<model>.hlo.txt     — (tokens, *params) → logits
+    fw_grad_<dout>x<din>.hlo.txt  — Algorithm 1 line 3 (Pallas)
+    objective_<dout>x<din>.hlo.txt— pruning error L(M) (Pallas)
+    gram_<din>x<B>.hlo.txt        — G ← G + XXᵀ chunk (Pallas)
+    fw_chunk_<dout>x<din>_c<C>.hlo.txt — fused C-iteration FW (perf path)
+
+Interchange format is HLO **text**: the image's xla_extension 0.5.1
+rejects jax≥0.5 serialized HloModuleProtos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import checkpoint, configs, data, fw_step, model, train
+from .kernels.fw_grad import default_blocks, vmem_bytes
+
+FW_CHUNK_ITERS = 20
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (NOT .serialize())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, example_args, path: str) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+def gen_corpus(out: str, manifest: Dict, force: bool) -> None:
+    sizes = {
+        "train": configs.TRAIN_TOKENS,
+        "val": configs.VAL_TOKENS,
+        "test": configs.TEST_TOKENS,
+    }
+    entry = {}
+    for split, n in sizes.items():
+        path = os.path.join(out, f"{split}.bin")
+        if force or not os.path.exists(path) or os.path.getsize(path) != n:
+            t0 = time.time()
+            toks = data.generate(configs.CORPUS_SEEDS[split], n)
+            data.write_bin(path, toks)
+            print(f"[data] wrote {split}.bin ({n} tokens, {time.time()-t0:.1f}s)")
+        entry[split] = f"{split}.bin"
+    entry.update(
+        vocab=configs.VOCAB_SIZE,
+        seq_len=configs.SEQ_LEN,
+        seeds=configs.CORPUS_SEEDS,
+        sizes=sizes,
+    )
+    manifest["data"] = entry
+    # golden tokens for the rust corpus-parity test
+    manifest["golden"] = {
+        "corpus": {
+            str(seed): data.golden_tokens(seed, 64)
+            for seed in (1, 42, configs.CORPUS_SEEDS["train"])
+        }
+    }
+
+
+def train_models(out: str, names: List[str], manifest: Dict, force: bool, fast: bool) -> Dict:
+    corpus = np.fromfile(os.path.join(out, "train.bin"), dtype=np.uint8)
+    test_tokens = np.fromfile(os.path.join(out, "test.bin"), dtype=np.uint8)
+    params_by_model = {}
+    manifest.setdefault("models", {})
+    for name in names:
+        cfg = configs.get_config(name)
+        if fast:
+            cfg = configs.dataclasses.replace(cfg, train_steps=60, warmup_steps=10)
+        ckpt_path = os.path.join(out, f"{name}.safetensors")
+        meta_path = os.path.join(out, f"{name}.train.json")
+        if not force and os.path.exists(ckpt_path) and os.path.exists(meta_path):
+            print(f"[train] reusing cached checkpoint {ckpt_path}")
+            arrs = checkpoint.load(ckpt_path)
+            params = {k: jnp.asarray(v) for k, v in arrs.items()}
+            log = json.load(open(meta_path))
+        else:
+            params, log = train.train(cfg, corpus)
+            ppl = train.eval_perplexity(params, cfg, test_tokens)
+            log["dense_test_ppl"] = round(ppl, 4)
+            checkpoint.save(ckpt_path, {k: np.asarray(v) for k, v in params.items()})
+            json.dump(log, open(meta_path, "w"), indent=1)
+            print(f"[train] {name}: dense test ppl = {ppl:.3f}")
+        params_by_model[name] = params
+        manifest["models"][name] = {
+            "config": cfg.to_dict(),
+            "checkpoint": f"{name}.safetensors",
+            "param_order": cfg.param_names(),
+            "param_shapes": {k: list(np.asarray(v).shape) for k, v in params.items()},
+            "layers": [
+                {"name": n, "family": fam, "d_out": do, "d_in": di}
+                for (n, fam, do, di) in cfg.layer_shapes()
+            ],
+            "dense_test_ppl": log.get("dense_test_ppl"),
+            "train_log": {k: log[k] for k in ("final_loss", "wall_seconds") if k in log},
+        }
+    return params_by_model
+
+
+def lower_model_fwd(out: str, names: List[str], manifest: Dict) -> None:
+    for name in names:
+        cfg = configs.get_config(name)
+        path = os.path.join(out, f"model_fwd_{name}.hlo.txt")
+        tok_spec = spec((configs.EVAL_BATCH, cfg.seq_len), jnp.int32)
+        param_specs = []
+        shapes = manifest["models"][name]["param_shapes"]
+        for pname in cfg.param_names():
+            param_specs.append(spec(tuple(shapes[pname])))
+        n = lower_and_write(model.fwd_for_aot(cfg), [tok_spec] + param_specs, path)
+        manifest["models"][name]["fwd_hlo"] = os.path.basename(path)
+        manifest["models"][name]["eval_batch"] = configs.EVAL_BATCH
+        print(f"[aot] model_fwd_{name}: {n} chars")
+
+
+def lower_kernels(out: str, names: List[str], manifest: Dict) -> None:
+    shapes = []
+    dins = set()
+    seen = set()
+    for name in names:
+        cfg = configs.get_config(name)
+        for dout, din in cfg.distinct_prune_shapes():
+            if (dout, din) not in seen:
+                seen.add((dout, din))
+                shapes.append((dout, din))
+            dins.add(din)
+
+    kman = manifest.setdefault("kernels", {})
+    fw, obj, chunk = {}, {}, {}
+    for dout, din in shapes:
+        key = f"{dout}x{din}"
+        w, m, h = spec((dout, din)), spec((dout, din)), spec((dout, din))
+        g = spec((din, din))
+        p = os.path.join(out, f"fw_grad_{key}.hlo.txt")
+        lower_and_write(fw_step.fw_grad_fn, [w, m, g, h], p)
+        fw[key] = os.path.basename(p)
+        p = os.path.join(out, f"objective_{key}.hlo.txt")
+        lower_and_write(fw_step.objective_fn, [w, m, g], p)
+        obj[key] = os.path.basename(p)
+        p = os.path.join(out, f"fw_chunk_{key}_c{FW_CHUNK_ITERS}.hlo.txt")
+        fixed = spec((dout, din))
+        k_new = spec((), jnp.float32)
+        t0 = spec((), jnp.float32)
+        lower_and_write(
+            fw_step.make_fw_chunk(FW_CHUNK_ITERS), [w, m, g, h, fixed, k_new, t0], p
+        )
+        chunk[key] = os.path.basename(p)
+        print(f"[aot] kernels {key} done")
+    kman["fw_grad"] = fw
+    kman["objective"] = obj
+    kman["fw_chunk"] = {"iters": FW_CHUNK_ITERS, "paths": chunk}
+
+    grams = {}
+    for din in sorted(dins):
+        key = f"{din}x{configs.GRAM_CHUNK}"
+        p = os.path.join(out, f"gram_{key}.hlo.txt")
+        g, x = spec((din, din)), spec((din, configs.GRAM_CHUNK))
+        lower_and_write(fw_step.gram_fn, [g, x], p)
+        grams[str(din)] = os.path.basename(p)
+    kman["gram"] = {"chunk": configs.GRAM_CHUNK, "paths": grams}
+
+    # §Perf metadata: per-shape tile choices + VMEM footprint estimates
+    kman["tiling"] = {
+        f"{dout}x{din}": {
+            "blocks": list(default_blocks(dout, din)),
+            "vmem_bytes": vmem_bytes(dout, din),
+        }
+        for dout, din in shapes
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", nargs="*", default=list(configs.MODEL_CONFIGS))
+    ap.add_argument("--force", action="store_true", help="retrain + regenerate everything")
+    ap.add_argument("--fast", action="store_true", help="tiny training budget (CI smoke)")
+    args = ap.parse_args(argv)
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+    manifest: Dict = {"version": 1, "fast": bool(args.fast)}
+
+    gen_corpus(out, manifest, args.force)
+    train_models(out, args.models, manifest, args.force, args.fast)
+    lower_model_fwd(out, args.models, manifest)
+    lower_kernels(out, args.models, manifest)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] manifest written; total {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Minimal safetensors-format checkpoint writer/reader.
+
+Format (https://github.com/huggingface/safetensors):
+  [8-byte little-endian header length N][N bytes JSON header][raw data]
+Header maps tensor name → {"dtype", "shape", "data_offsets": [begin, end]}
+with offsets relative to the start of the data section.  Only f32 is
+needed here.  The rust counterpart is ``rust/src/model/safetensors.rs``.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict
+
+import numpy as np
+
+_DTYPES = {"F32": np.float32}
+
+
+def save(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    header: Dict[str, dict] = {}
+    offset = 0
+    blobs = []
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+        blob = arr.tobytes()
+        header[name] = {
+            "dtype": "F32",
+            "shape": list(arr.shape),
+            "data_offsets": [offset, offset + len(blob)],
+        }
+        offset += len(blob)
+        blobs.append(blob)
+    hjson = json.dumps(header, sort_keys=True).encode("utf-8")
+    # pad header to 8-byte alignment (spec recommendation)
+    pad = (-len(hjson)) % 8
+    hjson += b" " * pad
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for blob in blobs:
+            f.write(blob)
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen))
+        data = f.read()
+    out: Dict[str, np.ndarray] = {}
+    for name, meta in header.items():
+        if name == "__metadata__":
+            continue
+        dt = _DTYPES[meta["dtype"]]
+        b, e = meta["data_offsets"]
+        out[name] = np.frombuffer(data[b:e], dtype=dt).reshape(meta["shape"]).copy()
+    return out

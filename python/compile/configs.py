@@ -1,0 +1,153 @@
+"""Model / data / AOT configuration shared between the python compile path
+and the rust runtime.
+
+The single source of truth is this module; ``aot.py`` serializes the
+resolved configuration into ``artifacts/manifest.json`` which the rust
+coordinator reads.  Keep field names in sync with
+``rust/src/config/mod.rs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# ---------------------------------------------------------------------------
+# Data / corpus
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 256
+SEQ_LEN = 128
+
+#: tokens in the training bin (sequences are sampled at random offsets)
+TRAIN_TOKENS = 2_000_000
+#: tokens in the validation bin
+VAL_TOKENS = 64 * SEQ_LEN
+#: tokens in the held-out test bin (the "WikiText" stand-in, see DESIGN.md §3)
+TEST_TOKENS = 128 * SEQ_LEN
+
+#: corpus generator seeds per split (SplitMix64 streams, see data.py)
+CORPUS_SEEDS = {"train": 0x5EED_0001, "val": 0x5EED_0002, "test": 0x5EED_0003}
+
+#: batch size (sequences) baked into the AOT model-forward artifact
+EVAL_BATCH = 8
+
+#: calibration gram chunk size (columns of X per gram-kernel launch)
+GRAM_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Model configurations
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one mini-GPT pruning target.
+
+    Linear layer families mirror the paper's pruned matrices: ``attn_qkv``,
+    ``attn_out``, ``mlp_up``, ``mlp_down``.  Embeddings and the (tied) LM
+    head stay dense, following Sun et al. (2023) / the paper's protocol.
+    """
+
+    name: str
+    vocab_size: int = VOCAB_SIZE
+    seq_len: int = SEQ_LEN
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    # training hyper-parameters (build-time only)
+    train_steps: int = 1200
+    batch_size: int = 16
+    lr: float = 1e-3
+    warmup_steps: int = 100
+    weight_decay: float = 0.01
+    seed: int = 17
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def layer_shapes(self) -> List[Tuple[str, str, int, int]]:
+        """(param_name, family, d_out, d_in) for every pruned linear."""
+        out = []
+        for i in range(self.n_layers):
+            p = f"blocks.{i}."
+            out.append((p + "wqkv", "attn_qkv", 3 * self.d_model, self.d_model))
+            out.append((p + "wo", "attn_out", self.d_model, self.d_model))
+            out.append((p + "wup", "mlp_up", self.d_ff, self.d_model))
+            out.append((p + "wdown", "mlp_down", self.d_model, self.d_ff))
+        return out
+
+    def distinct_prune_shapes(self) -> List[Tuple[int, int]]:
+        seen, out = set(), []
+        for _, _, dout, din in self.layer_shapes():
+            if (dout, din) not in seen:
+                seen.add((dout, din))
+                out.append((dout, din))
+        return out
+
+    def param_names(self) -> List[str]:
+        """Deterministic parameter order used for the flattened AOT
+        signature of the model-forward executable (and the safetensors
+        checkpoint)."""
+        names = ["tok_emb", "pos_emb"]
+        for i in range(self.n_layers):
+            p = f"blocks.{i}."
+            names += [
+                p + "ln1_g",
+                p + "ln1_b",
+                p + "wqkv",
+                p + "wo",
+                p + "ln2_g",
+                p + "ln2_b",
+                p + "wup",
+                p + "wdown",
+            ]
+        names += ["lnf_g", "lnf_b"]
+        return names
+
+    def n_params(self) -> int:
+        d, v, f, L = self.d_model, self.vocab_size, self.d_ff, self.n_layers
+        per_block = 4 * d + 3 * d * d + d * d + 2 * d * f
+        return v * d + self.seq_len * d + L * per_block + 2 * d
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+MODEL_CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        name="tiny",
+        d_model=64,
+        n_layers=4,
+        n_heads=4,
+        d_ff=256,
+        train_steps=1200,
+        batch_size=16,
+        seed=17,
+    ),
+    "small": ModelConfig(
+        name="small",
+        d_model=128,
+        n_layers=4,
+        n_heads=4,
+        d_ff=512,
+        train_steps=1400,
+        batch_size=16,
+        lr=8e-4,
+        seed=23,
+    ),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return MODEL_CONFIGS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown model config {name!r}; available: {sorted(MODEL_CONFIGS)}"
+        ) from None

@@ -1,0 +1,115 @@
+"""Synthetic corpus generator (build-time side).
+
+Mirrored line-for-line by ``rust/src/data/corpus.rs``; golden tokens are
+embedded in the AOT manifest so the rust test-suite can verify parity.
+
+The corpus is a seeded stochastic process over a 256-token alphabet
+mixing four mechanisms (DESIGN.md §4):
+
+* **Zipf unigrams** — heavy-tailed marginal distribution (integer CDF).
+* **Order-1 Markov structure** — each token has 4 preferred successors
+  derived from a stateless hash; taken with probability 0.65.
+* **Copy motifs** — with probability 0.04 the process replays the 8
+  tokens seen 16 positions ago, rewarding models that use context.
+* **Super-token chains** — rare tokens >= 248 deterministically chain
+  (p=0.9) to a hashed successor, a stand-in for the rare-but-critical
+  "super weight / activation outlier" structure in real LLMs.
+
+Everything is 64-bit integer arithmetic via SplitMix64 so python and rust
+produce bit-identical streams.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .prng import SplitMix64, mix64
+
+VOCAB = 256
+
+P_COPY = 0.04
+P_MARKOV = 0.65
+P_SUPER = 0.90
+COPY_BACK = 16
+COPY_LEN = 8
+SUPER_MIN_TOKEN = 248
+N_SUCCESSORS = 4
+
+SUCC_SALT = 0xC0FFEE
+SUPER_SALT = 0x5EEDBEEF
+
+ZIPF_SCALE = 1 << 20
+
+
+def zipf_cdf(vocab: int = VOCAB) -> List[int]:
+    """Integer cumulative weights, w_i = ZIPF_SCALE // (i + 4)."""
+    cdf, acc = [], 0
+    for i in range(vocab):
+        acc += ZIPF_SCALE // (i + 4)
+        cdf.append(acc)
+    return cdf
+
+
+_ZIPF_CDF = zipf_cdf()
+_ZIPF_TOTAL = _ZIPF_CDF[-1]
+
+
+def _zipf_sample(rng: SplitMix64) -> int:
+    u = rng.next_below(_ZIPF_TOTAL)
+    # binary search for first cdf entry > u
+    lo, hi = 0, VOCAB - 1
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if _ZIPF_CDF[mid] > u:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+def successor(prev: int, slot: int) -> int:
+    """slot-th preferred successor of token ``prev``."""
+    return mix64(prev * N_SUCCESSORS + slot + SUCC_SALT) % VOCAB
+
+
+def super_successor(prev: int) -> int:
+    return mix64(prev + SUPER_SALT) % VOCAB
+
+
+def generate(seed: int, n_tokens: int) -> np.ndarray:
+    """Generate ``n_tokens`` corpus tokens for ``seed`` (uint8 array)."""
+    rng = SplitMix64(seed)
+    out: List[int] = []
+    copy_remaining = 0
+    while len(out) < n_tokens:
+        if copy_remaining > 0:
+            t = out[len(out) - COPY_BACK]
+            copy_remaining -= 1
+        else:
+            r = rng.next_f64()
+            n = len(out)
+            if n > 0 and out[n - 1] >= SUPER_MIN_TOKEN and r < P_SUPER:
+                t = super_successor(out[n - 1])
+            elif n >= COPY_BACK + COPY_LEN and r < P_COPY:
+                copy_remaining = COPY_LEN - 1
+                t = out[n - COPY_BACK]
+            elif n > 0 and r < P_COPY + P_MARKOV:
+                slot = rng.next_below(N_SUCCESSORS)
+                t = successor(out[n - 1], slot)
+            else:
+                t = _zipf_sample(rng)
+        out.append(t)
+    return np.asarray(out, dtype=np.uint8)
+
+
+def write_bin(path: str, tokens: np.ndarray) -> None:
+    assert tokens.dtype == np.uint8
+    tokens.tofile(path)
+
+
+def golden_tokens(seed: int, n: int = 64) -> List[int]:
+    """First ``n`` tokens for a seed — embedded in the manifest for the
+    rust parity test."""
+    return [int(t) for t in generate(seed, n)]

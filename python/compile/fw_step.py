@@ -1,0 +1,110 @@
+"""Layer-2 FW-step functions — the jax functions that are AOT-lowered and
+executed from the rust hot loop.
+
+Each function composes the Layer-1 Pallas kernels; lowering happens in
+``aot.py``, once per distinct pruned-layer shape.  Rust drives the FW
+iteration (LMO + convex update + α-fixing are coordination, see
+DESIGN.md §2), calling:
+
+* ``fw_grad_fn``   — Algorithm 1 line 3 (the FLOP hot-spot),
+* ``objective_fn`` — pruning-error evaluation (Fig 2/4 series),
+* ``gram_fn``      — streaming calibration G ← G + XXᵀ,
+* ``fw_chunk_fn``  — perf variant: C full FW iterations fused into one
+  executable (LMO included), eliminating the per-iteration Rust↔PJRT
+  round-trip (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fw_grad import fw_grad
+from .kernels.gram import gram_acc
+from .kernels.objective import objective
+
+
+def fw_grad_fn(w, m, g, h):
+    return (fw_grad(w, m, g, h),)
+
+
+def objective_fn(w, m, g):
+    return (objective(w, m, g),)
+
+
+def gram_fn(g, x):
+    return (gram_acc(g, x),)
+
+
+BISECT_STEPS = 64
+
+
+def _lmo_relaxed(neg_needed: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Dynamic-k LMO over C_k via bisection on the selection threshold.
+
+    Selects (up to) the k most-negative gradient entries and sets them to
+    one (paper Eq. 12).  ``k`` is a runtime scalar, so one artifact serves
+    every sparsity level / α.
+
+    §Perf note (EXPERIMENTS.md §Perf): XLA-CPU ``sort`` costs ~8 ms for a
+    12k-element gradient — 30× the fused gradient matmul — so instead of
+    ranking we *bisect* the threshold t, maintaining the invariant
+    ``count(flat < lo) ≤ k``: 64 compare+count sweeps (O(n) each, no
+    sort).  After convergence ``flat < lo`` selects exactly k entries
+    unless exact float ties straddle the boundary, in which case it
+    selects fewer — still a feasible vertex of C_k, making this an
+    ε-exact LMO (FW convergence tolerates approximate oracles; the
+    rounding step restores the exact budget).  The upper bracket starts
+    at 0 because the LMO never selects non-negative coefficients.
+    """
+    flat = neg_needed.reshape(-1)
+    kf = k.astype(jnp.float32)
+
+    lo0 = jnp.minimum(jnp.min(flat), 0.0) - 1e-3
+    hi0 = jnp.float32(0.0)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((flat < mid).astype(jnp.float32))
+        ok = cnt <= kf
+        return (jnp.where(ok, mid, lo), jnp.where(ok, hi, mid))
+
+    lo, _hi = jax.lax.fori_loop(0, BISECT_STEPS, body, (lo0, hi0))
+    chosen = flat < lo
+    return chosen.astype(jnp.float32).reshape(neg_needed.shape)
+
+
+def fw_chunk_fn(w, m, g, h, fixed, k_new, t0, n_iters: int):
+    """Run ``n_iters`` FW iterations (Algorithm 2 lines 5–9) in one
+    executable.
+
+    Args:
+      w, g, h: layer data (W, G=XXᵀ, H=WG).
+      m: current relaxed mask over *free* coordinates (fixed coords 0).
+      fixed: binary mask M̄ of α-fixed (unprunable) coordinates.
+      k_new: f32 scalar — remaining LMO budget k(1−α).
+      t0: f32 scalar — global iteration offset (η_t = 2/(t0+t+2)).
+      n_iters: static chunk length.
+
+    Returns the updated relaxed mask.  The gradient is evaluated at the
+    *total* mask M̄ + M_t and masked to the free coordinates before the
+    LMO, exactly as Algorithm 2 line 7.
+    """
+
+    def body(t, m):
+        grad = fw_grad(w, m + fixed, g, h)
+        grad_free = grad * (1.0 - fixed)
+        v = _lmo_relaxed(grad_free, k_new)
+        eta = 2.0 / (t0 + t.astype(jnp.float32) + 2.0)
+        return (1.0 - eta) * m + eta * v
+
+    m_out = jax.lax.fori_loop(0, n_iters, body, m)
+    return (m_out,)
+
+
+def make_fw_chunk(n_iters: int):
+    def fn(w, m, g, h, fixed, k_new, t0):
+        return fw_chunk_fn(w, m, g, h, fixed, k_new, t0, n_iters)
+
+    return fn

@@ -1,0 +1,116 @@
+"""Pallas kernel for the SparseFW gradient — the per-iteration hot-spot.
+
+Reference semantics (``ref.fw_grad_ref``):
+
+    ∇L(M) = −2 · W ⊙ (H − (W ⊙ M) G)
+
+with W, M, H of shape (d_out, d_in) and G of shape (d_in, d_in).
+
+TPU-oriented design (DESIGN.md §6): the (W⊙M)·G contraction is tiled into
+(bm, bk) × (bk, bn) MXU-shaped blocks; the two Hadamard products and the
+subtraction are *fused into the epilogue* of the matmul so the W(i,j) and
+H(i,j) tiles are streamed exactly once per output tile.  The accumulator
+lives in the output block, which is VMEM-resident across the k reduction
+steps because its index map is constant in k — the Pallas equivalent of a
+threadblock-register accumulator in the paper's CUDA baselines.
+
+The kernel is lowered with ``interpret=True`` everywhere in this repo:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, so interpret-mode
+lowering (plain HLO ops) is the correctness- and interchange-path; the
+MXU/VMEM structure is what a real TPU lowering would use (§Perf records
+the per-shape VMEM footprints).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest power-of-two tile <= target that divides ``dim``."""
+    b = 1
+    while b * 2 <= min(dim, target) and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def default_blocks(d_out: int, d_in: int) -> Tuple[int, int, int]:
+    """(bm, bn, bk) aiming at 128-multiples (full MXU tiles) where the
+    layer shape allows, under a 16 MiB VMEM budget with double-buffering
+    headroom (see ``vmem_bytes``)."""
+    bm = pick_block(d_out, 128)
+    bn = pick_block(d_in, 128)
+    bk = pick_block(d_in, 128)
+    return bm, bn, bk
+
+
+def _fw_grad_kernel(w_ik_ref, m_ik_ref, g_kj_ref, w_ij_ref, h_ij_ref, o_ref, *, nk: int):
+    """Grid = (d_out/bm, d_in/bn, d_in/bk); axis 2 is the reduction."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU contraction of the masked-weight tile with the gram tile.
+    wm = w_ik_ref[...] * m_ik_ref[...]
+    o_ref[...] += jnp.dot(wm, g_kj_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = -2.0 * w_ij_ref[...] * (h_ij_ref[...] - o_ref[...])
+
+
+def fw_grad(
+    w: jnp.ndarray,
+    m: jnp.ndarray,
+    g: jnp.ndarray,
+    h: jnp.ndarray,
+    *,
+    blocks: Tuple[int, int, int] | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Compute ∇L(M) = −2·W⊙(H − (W⊙M)G) with a fused Pallas kernel."""
+    d_out, d_in = w.shape
+    assert m.shape == (d_out, d_in) and h.shape == (d_out, d_in)
+    assert g.shape == (d_in, d_in)
+    bm, bn, bk = blocks or default_blocks(d_out, d_in)
+    assert d_out % bm == 0 and d_in % bn == 0 and d_in % bk == 0, (
+        f"blocks {(bm, bn, bk)} must divide shape {(d_out, d_in)}"
+    )
+    nk = d_in // bk
+    grid = (d_out // bm, d_in // bn, nk)
+
+    return pl.pallas_call(
+        functools.partial(_fw_grad_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # W  (reduction view)
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # M
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # G
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # W  (epilogue view)
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # H
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),
+        interpret=interpret,
+    )(w, m, g, w, h)
+
+
+def vmem_bytes(d_out: int, d_in: int, blocks: Tuple[int, int, int] | None = None) -> int:
+    """Bytes resident in VMEM per grid step (double-buffered inputs), for
+    the §Perf roofline estimate: 2×(W_ik + M_ik + G_kj input tiles)
+    + W_ij + H_ij + output accumulator."""
+    bm, bn, bk = blocks or default_blocks(d_out, d_in)
+    words = 2 * (2 * bm * bk + bk * bn) + 2 * bm * bn + bm * bn
+    return 4 * words
+
+
+def flops(d_out: int, d_in: int) -> int:
+    """MXU FLOPs of one gradient evaluation (the matmul dominates)."""
+    return 2 * d_out * d_in * d_in

@@ -1,0 +1,73 @@
+"""Pallas kernel for streaming gram-matrix accumulation (calibration).
+
+Reference semantics (``ref.gram_acc_ref``):
+
+    G ← G + X Xᵀ
+
+with X a (d_in, B) calibration chunk.  The coordinator streams batches of
+activations through this kernel; G's (d_in, d_in) footprint is what makes
+SparseFW independent of the calibration sequence length (paper §2.3).
+
+Tiling: grid (d_in/bm, d_in/bn, B/bk); the X·Xᵀ contraction reads X twice
+under two index maps (rows i and rows j), accumulating into the
+VMEM-resident output tile, with the running G tile added at k == 0.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fw_grad import pick_block
+
+
+def gram_blocks(d_in: int, batch: int) -> Tuple[int, int, int]:
+    bm = pick_block(d_in, 128)
+    bn = pick_block(d_in, 128)
+    bk = pick_block(batch, 256)
+    return bm, bn, bk
+
+
+def _gram_kernel(g_ref, x_ik_ref, x_jk_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = g_ref[...]
+
+    o_ref[...] += jnp.dot(
+        x_ik_ref[...], x_jk_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def gram_acc(
+    g: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    blocks: Tuple[int, int, int] | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Return G + X Xᵀ (X is (d_in, B))."""
+    d_in, batch = x.shape
+    assert g.shape == (d_in, d_in)
+    bm, bn, bk = blocks or gram_blocks(d_in, batch)
+    assert d_in % bm == 0 and d_in % bn == 0 and batch % bk == 0
+    nk = batch // bk
+    grid = (d_in // bm, d_in // bn, nk)
+
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # running G
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # X rows i
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),  # X rows j
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_in, d_in), jnp.float32),
+        interpret=interpret,
+    )(g, x, x)

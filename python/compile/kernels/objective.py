@@ -1,0 +1,87 @@
+"""Pallas kernel for the layerwise pruning objective.
+
+Reference semantics (``ref.objective_ref``):
+
+    L(M) = ‖WX − (M⊙W)X‖_F² = Σ_ij [(Z G) ⊙ Z]_ij,   Z = W ⊙ (1 − M)
+
+The kernel fuses the Z·G tile contraction with the Hadamard-and-reduce
+epilogue, accumulating the scalar across the whole grid in a single
+(1, 1) output block (its index map is constant, so it stays VMEM-resident
+for the entire launch — on TPU this is the canonical scalar-reduction
+pattern; grid steps execute sequentially per core).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fw_grad import default_blocks
+
+
+def _objective_kernel(w_ik_ref, m_ik_ref, g_kj_ref, w_ij_ref, m_ij_ref, o_ref, acc_ref, *, nk: int):
+    """Grid = (d_out/bm, d_in/bn, d_in/bk).
+
+    acc_ref is a (bm, bn) accumulator output holding the running Z·G tile
+    (re-used across k); o_ref is the (1, 1) scalar accumulator.
+    """
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == 0) & (j == 0) & (k == 0))
+    def _init_scalar():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_tile():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z_ik = w_ik_ref[...] * (1.0 - m_ik_ref[...])
+    acc_ref[...] += jnp.dot(z_ik, g_kj_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        z_ij = w_ij_ref[...] * (1.0 - m_ij_ref[...])
+        o_ref[...] += jnp.sum(acc_ref[...] * z_ij)
+
+
+def objective(
+    w: jnp.ndarray,
+    m: jnp.ndarray,
+    g: jnp.ndarray,
+    *,
+    blocks: Tuple[int, int, int] | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """L(M) = ‖WX − (M⊙W)X‖_F² from precomputed G = XXᵀ; returns (1,1)."""
+    d_out, d_in = w.shape
+    assert m.shape == (d_out, d_in) and g.shape == (d_in, d_in)
+    bm, bn, bk = blocks or default_blocks(d_out, d_in)
+    assert d_out % bm == 0 and d_in % bn == 0 and d_in % bk == 0
+    nk = d_in // bk
+    grid = (d_out // bm, d_in // bn, nk)
+
+    out, _ = pl.pallas_call(
+        functools.partial(_objective_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # W (reduction view)
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),  # M
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # G
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # W (epilogue view)
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # M
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),  # ZG workspace
+        ],
+        interpret=interpret,
+    )(w, m, g, w, m)
+    return out

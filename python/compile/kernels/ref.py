@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest (+ hypothesis shape sweeps)
+asserts kernel == oracle to float tolerance.  They are also what the
+kernels' docstrings mean by "the reference semantics".
+
+Notation follows the paper (Section 2.3): W is the layer weight
+(d_out × d_in), M the (relaxed) mask, X the calibration input
+(d_in × B), G = X Xᵀ the gram matrix and H = W G.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fw_grad_ref(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """∇L(M) = −2 · W ⊙ (H − (W ⊙ M) G)   (Algorithm 1, line 3)."""
+    return -2.0 * w * (h - (w * m) @ g)
+
+
+def objective_ref(w: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """L(M) = ‖WX − (M⊙W)X‖_F² expressed through G:
+
+    L(M) = Tr(Z G Zᵀ) with Z = W ⊙ (1 − M) = Σ_ij [(Z G) ⊙ Z]_ij.
+    """
+    z = w * (1.0 - m)
+    return jnp.sum((z @ g) * z)
+
+
+def gram_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """G = X Xᵀ for a calibration chunk X (d_in × B)."""
+    return x @ x.T
+
+
+def gram_acc_ref(g: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Streaming accumulation G ← G + X Xᵀ (batched calibration)."""
+    return g + x @ x.T
+
+
+def pruning_error_ref(w: jnp.ndarray, m: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Direct (X-space) evaluation of the objective, used to validate the
+    G-space formulation: ‖WX − (M⊙W)X‖_F²."""
+    return jnp.sum((w @ x - (m * w) @ x) ** 2)

@@ -1,0 +1,175 @@
+"""Layer-2 JAX model: a mini-GPT pruning target.
+
+Pre-LN transformer with learned positional embeddings, GELU MLP and a
+weight-tied LM head.  The four pruned linear families (``attn_qkv``,
+``attn_out``, ``mlp_up``, ``mlp_down``) are stored as (d_out, d_in)
+matrices applied as ``x @ W.T`` — the same layout the rust coordinator
+and the safetensors checkpoints use.
+
+Params are a *flat* dict keyed by the names in
+``configs.ModelConfig.param_names()`` so the AOT signature, the
+checkpoint and the rust loader all agree on ordering.
+
+The FW hot-spot lives in ``fw_step.py`` (which calls the Pallas kernels);
+the model here is the substrate that produces calibration activations and
+evaluation logits.  Its forward is lowered to ``model_fwd_<cfg>.hlo.txt``
+and executed from rust via PJRT — python never runs at eval time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """GPT-2-style init: N(0, 0.02) embeddings/projections, residual
+    projections scaled by 1/sqrt(2·n_layers), LN at identity."""
+    d, v, f, L = cfg.d_model, cfg.vocab_size, cfg.d_ff, cfg.n_layers
+    std = 0.02
+    resid_std = std / np.sqrt(2.0 * L)
+    keys = jax.random.split(key, 2 + 4 * L)
+    params: Params = {
+        "tok_emb": std * jax.random.normal(keys[0], (v, d)),
+        "pos_emb": std * jax.random.normal(keys[1], (cfg.seq_len, d)),
+        "lnf_g": jnp.ones((d,)),
+        "lnf_b": jnp.zeros((d,)),
+    }
+    for i in range(L):
+        p = f"blocks.{i}."
+        k = keys[2 + 4 * i : 6 + 4 * i]
+        params[p + "ln1_g"] = jnp.ones((d,))
+        params[p + "ln1_b"] = jnp.zeros((d,))
+        params[p + "wqkv"] = std * jax.random.normal(k[0], (3 * d, d))
+        params[p + "wo"] = resid_std * jax.random.normal(k[1], (d, d))
+        params[p + "ln2_g"] = jnp.ones((d,))
+        params[p + "ln2_b"] = jnp.zeros((d,))
+        params[p + "wup"] = std * jax.random.normal(k[2], (f, d))
+        params[p + "wdown"] = resid_std * jax.random.normal(k[3], (d, f))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches the rust implementation)."""
+    c = np.sqrt(2.0 / np.pi).astype(np.float32)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _attention(h: jnp.ndarray, wqkv: jnp.ndarray, wo: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    B, L, d = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    qkv = h @ wqkv.T  # (B, L, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, L, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, L, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, L, nh, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd).astype(np.float32)
+    causal = jnp.tril(jnp.ones((L, L), dtype=bool))
+    att = jnp.where(causal[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, L, d)
+    return out @ wo.T
+
+
+def forward(
+    params: Params, tokens: jnp.ndarray, cfg: ModelConfig, collect_inputs: bool = False
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Forward pass.
+
+    Returns ``(logits, layer_inputs)``; ``layer_inputs`` maps pruned-layer
+    param names to their linear-layer input activations of shape
+    (B, L, d_in) when ``collect_inputs`` — this is the calibration-capture
+    path (X matrices for G = XXᵀ).
+    """
+    B, L = tokens.shape
+    captured: Dict[str, jnp.ndarray] = {}
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :L]
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        h = _layernorm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+        if collect_inputs:
+            captured[p + "wqkv"] = h
+        nh, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+        qkv = h @ params[p + "wqkv"].T
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, L, nh, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(B, L, nh, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, L, nh, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd).astype(np.float32)
+        causal = jnp.tril(jnp.ones((L, L), dtype=bool))
+        att = jnp.where(causal[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        attn_h = (att @ v).transpose(0, 2, 1, 3).reshape(B, L, d)
+        if collect_inputs:
+            captured[p + "wo"] = attn_h
+        x = x + attn_h @ params[p + "wo"].T
+        h2 = _layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"])
+        if collect_inputs:
+            captured[p + "wup"] = h2
+        up = _gelu(h2 @ params[p + "wup"].T)
+        if collect_inputs:
+            captured[p + "wdown"] = up
+        x = x + up @ params[p + "wdown"].T
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T  # tied head
+    return logits, captured
+
+
+def loss_fn(params: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Next-token cross-entropy (mean over B×(L−1) positions)."""
+    logits, _ = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def flat_params(params: Params, cfg: ModelConfig) -> List[jnp.ndarray]:
+    """Params in the canonical AOT/checkpoint order."""
+    return [params[n] for n in cfg.param_names()]
+
+
+def unflatten_params(arrays: List[jnp.ndarray], cfg: ModelConfig) -> Params:
+    names = cfg.param_names()
+    assert len(arrays) == len(names)
+    return dict(zip(names, arrays))
+
+
+def fwd_for_aot(cfg: ModelConfig):
+    """The function lowered to ``model_fwd_<cfg>.hlo.txt``.
+
+    Signature: (tokens int32 (B, L), *params in canonical order) →
+    (logits f32 (B, L, V),).  Masks are applied rust-side by multiplying
+    them into the weights before upload, so a single artifact serves both
+    dense and pruned evaluation.
+    """
+
+    def fn(tokens, *arrays):
+        params = unflatten_params(list(arrays), cfg)
+        logits, _ = forward(params, tokens, cfg)
+        return (logits,)
+
+    return fn

@@ -1,0 +1,47 @@
+"""SplitMix64 PRNG — bit-identical counterpart of ``rust/src/util/prng.rs``.
+
+The synthetic corpus (data.py) must be reproducible from the rust side for
+tests and for regenerating evaluation workloads without python.  Both
+implementations are pure 64-bit integer arithmetic, cross-checked by the
+golden values embedded in ``artifacts/manifest.json``.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Sebastiano Vigna's splitmix64; also used to seed Xoshiro on the rust
+    side."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def next_below(self, bound: int) -> int:
+        """Unbiased-enough modulo draw in [0, bound); bound must be > 0.
+
+        We deliberately use plain modulo (not rejection sampling) so the
+        rust implementation is a line-for-line mirror.
+        """
+        assert bound > 0
+        return self.next_u64() % bound
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits of entropy."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+def mix64(x: int) -> int:
+    """Stateless splitmix-style mixer for derived streams (hash of a key)."""
+    z = (x + 0x9E3779B97F4A7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return (z ^ (z >> 31)) & MASK64

@@ -1,0 +1,124 @@
+"""Build-time pretraining of the mini-GPT pruning targets.
+
+This runs exactly once, inside ``make artifacts`` (DESIGN.md §3): the
+paper prunes pretrained HuggingFace checkpoints; our stand-ins are
+pretrained here on the synthetic corpus so pruning-quality comparisons
+have a real signal.  AdamW + linear-warmup/cosine-decay, hand-rolled
+(the build image has no optax).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .configs import ModelConfig
+from .model import Params, init_params, loss_fn
+
+
+def _adamw_update(params, grads, m, v, step, lr, wd, b1=0.9, b2=0.999, eps=1e-8):
+    def upd(p, g, m_, v_):
+        m_new = b1 * m_ + (1 - b1) * g
+        v_new = b2 * v_ + (1 - b2) * g * g
+        mhat = m_new / (1 - b1**step)
+        vhat = v_new / (1 - b2**step)
+        p_new = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+        return p_new, m_new, v_new
+
+    flat = {k: upd(params[k], grads[k], m[k], v[k]) for k in params}
+    return (
+        {k: f[0] for k, f in flat.items()},
+        {k: f[1] for k, f in flat.items()},
+        {k: f[2] for k, f in flat.items()},
+    )
+
+
+def _lr_at(step: int, cfg: ModelConfig) -> float:
+    if step <= cfg.warmup_steps:
+        return cfg.lr * step / max(1, cfg.warmup_steps)
+    t = (step - cfg.warmup_steps) / max(1, cfg.train_steps - cfg.warmup_steps)
+    return cfg.lr * 0.5 * (1.0 + float(np.cos(np.pi * min(1.0, t))))
+
+
+def sample_batch(tokens: np.ndarray, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+    offs = rng.integers(0, len(tokens) - seq - 1, size=batch)
+    return np.stack([tokens[o : o + seq] for o in offs]).astype(np.int32)
+
+
+def train(cfg: ModelConfig, corpus: np.ndarray, log_every: int = 100) -> Tuple[Params, Dict]:
+    """Train and return (params, training_log)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(cfg, key)
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    rng = np.random.default_rng(cfg.seed)
+
+    # weight decay is skipped on LN params and biases, GPT-style
+    decay_mask = {k: float(("_g" not in k) and ("_b" not in k)) for k in params}
+
+    @jax.jit
+    def step_fn(params, m, v, batch, lr, step):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch, cfg))(params)
+
+        def upd(p, g, m_, v_, dk):
+            b1, b2, eps = 0.9, 0.999, 1e-8
+            m_new = b1 * m_ + (1 - b1) * g
+            v_new = b2 * v_ + (1 - b2) * g * g
+            mhat = m_new / (1 - b1**step)
+            vhat = v_new / (1 - b2**step)
+            p_new = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + cfg.weight_decay * dk * p)
+            return p_new, m_new, v_new
+
+        new = {k: upd(params[k], grads[k], m[k], v[k], decay_mask[k]) for k in params}
+        return (
+            {k: n[0] for k, n in new.items()},
+            {k: n[1] for k, n in new.items()},
+            {k: n[2] for k, n in new.items()},
+            loss,
+        )
+
+    log = {"steps": [], "loss": [], "lr": []}
+    t0 = time.time()
+    ema = None
+    for step in range(1, cfg.train_steps + 1):
+        batch = jnp.asarray(sample_batch(corpus, rng, cfg.batch_size, cfg.seq_len))
+        lr = _lr_at(step, cfg)
+        params, m, v, loss = step_fn(params, m, v, batch, lr, step)
+        lval = float(loss)
+        ema = lval if ema is None else 0.95 * ema + 0.05 * lval
+        if step % log_every == 0 or step == 1:
+            log["steps"].append(step)
+            log["loss"].append(round(ema, 4))
+            log["lr"].append(round(lr, 6))
+            print(
+                f"[train:{cfg.name}] step {step:5d}/{cfg.train_steps}"
+                f" loss={ema:.4f} lr={lr:.5f} ({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    log["final_loss"] = round(ema, 4)
+    log["wall_seconds"] = round(time.time() - t0, 1)
+    return params, log
+
+
+def eval_perplexity(params: Params, cfg: ModelConfig, tokens: np.ndarray, batch: int = 8) -> float:
+    """Build-time perplexity of the dense model (recorded in the manifest
+    as a cross-check for the rust evaluator)."""
+    seq = cfg.seq_len
+    n_seq = len(tokens) // seq
+    seqs = tokens[: n_seq * seq].reshape(n_seq, seq).astype(np.int32)
+    total, count = 0.0, 0
+
+    @jax.jit
+    def nll_fn(params, b):
+        return loss_fn(params, b, cfg)
+
+    for i in range(0, n_seq, batch):
+        b = jnp.asarray(seqs[i : i + batch])
+        total += float(nll_fn(params, b)) * b.shape[0]
+        count += b.shape[0]
+    return float(np.exp(total / count))

@@ -1,0 +1,7 @@
+"""Make the ``compile`` package importable regardless of pytest's
+invocation directory (repo root or python/)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

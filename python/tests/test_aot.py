@@ -1,0 +1,105 @@
+"""AOT lowering tests: HLO text generation must work for every artifact
+family, and the manifest contract must hold.  These run the actual
+lowering (fast) but not training.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, configs, fw_step
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_to_hlo_text_basic():
+    lowered = jax.jit(lambda a, b: (a @ b,)).lower(spec((4, 4)), spec((4, 4)))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_fw_grad_lowering():
+    args = [spec((16, 8)), spec((16, 8)), spec((8, 8)), spec((16, 8))]
+    lowered = jax.jit(fw_step.fw_grad_fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # interpret-mode pallas must lower to plain HLO: no custom-calls that
+    # the CPU PJRT client cannot execute
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_fw_chunk_lowering_contains_loop():
+    args = [
+        spec((8, 8)),
+        spec((8, 8)),
+        spec((8, 8)),
+        spec((8, 8)),
+        spec((8, 8)),
+        spec((), jnp.float32),
+        spec((), jnp.float32),
+    ]
+    lowered = jax.jit(fw_step.make_fw_chunk(5)).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "while" in text.lower()
+
+
+def test_distinct_prune_shapes_cover_all_layers():
+    for cfg in configs.MODEL_CONFIGS.values():
+        shapes = set(cfg.distinct_prune_shapes())
+        for _, _, dout, din in cfg.layer_shapes():
+            assert (dout, din) in shapes
+
+
+def test_configs_consistency():
+    for name, cfg in configs.MODEL_CONFIGS.items():
+        assert cfg.name == name
+        assert cfg.d_model % cfg.n_heads == 0
+        assert len(cfg.param_names()) == 4 + 8 * cfg.n_layers
+        assert cfg.vocab_size == configs.VOCAB_SIZE
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_contract():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    for name, entry in m["models"].items():
+        cfg = configs.get_config(name)
+        assert entry["param_order"] == cfg.param_names()
+        for f_ in [entry["checkpoint"], entry["fwd_hlo"]]:
+            assert os.path.exists(os.path.join(ARTIFACTS, f_)), f_
+        for layer in entry["layers"]:
+            key = f"{layer['d_out']}x{layer['d_in']}"
+            assert key in m["kernels"]["fw_grad"], key
+            assert key in m["kernels"]["objective"], key
+            assert key in m["kernels"]["fw_chunk"]["paths"], key
+            assert str(layer["d_in"]) in m["kernels"]["gram"]["paths"]
+    for group in ["fw_grad", "objective"]:
+        for f_ in m["kernels"][group].values():
+            assert os.path.exists(os.path.join(ARTIFACTS, f_)), f_
+    # golden corpus entries present for the rust parity test
+    assert len(m["golden"]["corpus"]) >= 1
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_data_bins_exist_with_declared_sizes():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    for split, size in m["data"]["sizes"].items():
+        p = os.path.join(ARTIFACTS, m["data"][split])
+        assert os.path.getsize(p) == size

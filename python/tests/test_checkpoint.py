@@ -1,0 +1,55 @@
+"""safetensors writer/reader round-trip (python side of the contract
+with rust/src/model/safetensors.rs)."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import checkpoint
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.safetensors")
+    tensors = {
+        "a.weight": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.asarray([1.5, -2.5], dtype=np.float32),
+    }
+    checkpoint.save(path, tensors)
+    out = checkpoint.load(path)
+    assert set(out) == {"a.weight", "b"}
+    np.testing.assert_array_equal(out["a.weight"], tensors["a.weight"])
+    np.testing.assert_array_equal(out["b"], tensors["b"])
+
+
+def test_header_is_8_byte_aligned(tmp_path):
+    path = str(tmp_path / "t.safetensors")
+    checkpoint.save(path, {"x": np.zeros((3, 3), dtype=np.float32)})
+    with open(path, "rb") as f:
+        (hlen,) = struct.unpack("<Q", f.read(8))
+    assert hlen % 8 == 0
+
+
+def test_casts_to_f32(tmp_path):
+    path = str(tmp_path / "t.safetensors")
+    checkpoint.save(path, {"x": np.asarray([1.0, 2.0], dtype=np.float64)})
+    out = checkpoint.load(path)
+    assert out["x"].dtype == np.float32
+
+
+def test_empty_checkpoint(tmp_path):
+    path = str(tmp_path / "e.safetensors")
+    checkpoint.save(path, {})
+    assert checkpoint.load(path) == {}
+
+
+def test_rejects_wrong_dtype_header(tmp_path):
+    path = str(tmp_path / "bad.safetensors")
+    header = b'{"x": {"dtype": "I64", "shape": [1], "data_offsets": [0, 8]}}'
+    pad = b" " * ((8 - len(header) % 8) % 8)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(header) + len(pad)))
+        f.write(header + pad)
+        f.write(b"\0" * 8)
+    with pytest.raises(KeyError):
+        checkpoint.load(path)

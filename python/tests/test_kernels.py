@@ -1,0 +1,153 @@
+"""Kernel-vs-oracle correctness — the core L1 signal.
+
+Hypothesis sweeps shapes and magnitudes; every Pallas kernel must match
+its pure-jnp oracle within float32 tolerance, including non-default
+block configurations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fw_grad import default_blocks, flops, fw_grad, pick_block, vmem_bytes
+from compile.kernels.gram import gram_acc, gram_blocks
+from compile.kernels.objective import objective
+
+DIMS = st.sampled_from([8, 16, 24, 32, 64, 96, 128])
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def make_layer(seed, dout, din, batch=64):
+    w = rand(seed, (dout, din))
+    x = rand(seed + 1, (din, batch))
+    g = x @ x.T
+    h = w @ g
+    m = jax.random.uniform(jax.random.PRNGKey(seed + 2), (dout, din), dtype=jnp.float32)
+    return w, x, g, h, m
+
+
+# ---------------------------------------------------------------------------
+# fw_grad
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(dout=DIMS, din=DIMS, seed=st.integers(0, 100))
+def test_fw_grad_matches_ref(dout, din, seed):
+    w, _x, g, h, m = make_layer(seed, dout, din)
+    out = fw_grad(w, m, g, h)
+    want = ref.fw_grad_ref(w, m, g, h)
+    tol = 1e-4 * max(1.0, float(jnp.abs(want).max()))
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 32, 8), (32, 16, 32)])
+def test_fw_grad_custom_blocks(blocks):
+    w, _x, g, h, m = make_layer(7, 32, 32)
+    out = fw_grad(w, m, g, h, blocks=blocks)
+    want = ref.fw_grad_ref(w, m, g, h)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-2 * float(jnp.abs(want).max()))
+
+
+def test_fw_grad_rejects_bad_blocks():
+    w, _x, g, h, m = make_layer(3, 24, 24)
+    with pytest.raises(AssertionError):
+        fw_grad(w, m, g, h, blocks=(7, 8, 8))
+
+
+def test_fw_grad_zero_at_full_mask():
+    w, _x, g, h, _ = make_layer(5, 16, 16)
+    out = fw_grad(w, jnp.ones_like(w), g, h)
+    assert float(jnp.abs(out).max()) < 1e-2
+
+
+def test_fw_grad_is_minus_2w_h_at_zero_mask():
+    w, _x, g, h, _ = make_layer(6, 16, 24)
+    out = fw_grad(w, jnp.zeros_like(w), g, h)
+    np.testing.assert_allclose(out, -2.0 * w * h, rtol=1e-4, atol=1e-2 * float(jnp.abs(h).max()))
+
+
+# ---------------------------------------------------------------------------
+# objective
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(dout=DIMS, din=DIMS, seed=st.integers(0, 100))
+def test_objective_matches_ref(dout, din, seed):
+    w, _x, g, _h, m = make_layer(seed, dout, din)
+    out = float(np.asarray(objective(w, m, g)).reshape(()))
+    want = float(ref.objective_ref(w, m, g))
+    assert out == pytest.approx(want, rel=1e-4, abs=1e-3)
+
+
+def test_objective_matches_x_space():
+    w, x, g, _h, m = make_layer(11, 24, 32, batch=128)
+    grams = float(np.asarray(objective(w, m, g)).reshape(()))
+    direct = float(ref.pruning_error_ref(w, m, x))
+    assert grams == pytest.approx(direct, rel=5e-3)
+
+
+def test_objective_zero_at_full_mask():
+    w, _x, g, _h, _m = make_layer(12, 16, 16)
+    out = float(np.asarray(objective(w, jnp.ones_like(w), g)).reshape(()))
+    assert abs(out) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    din=DIMS,
+    batch=st.sampled_from([32, 64, 256, 1024]),
+    seed=st.integers(0, 100),
+)
+def test_gram_acc_matches_ref(din, batch, seed):
+    x = rand(seed, (din, batch))
+    g0 = rand(seed + 3, (din, din))
+    out = gram_acc(g0, x)
+    want = ref.gram_acc_ref(g0, x)
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-2 * float(jnp.abs(want).max()))
+
+
+def test_gram_zero_padding_is_identity():
+    # padded (zero) columns must not change G — the runtime relies on this
+    x = rand(1, (16, 48))
+    xp = jnp.concatenate([x, jnp.zeros((16, 16))], axis=1)
+    g0 = jnp.zeros((16, 16))
+    np.testing.assert_allclose(gram_acc(g0, xp), gram_acc(g0, x), rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# tiling metadata
+# ---------------------------------------------------------------------------
+
+
+def test_pick_block_divides():
+    for dim in [8, 24, 64, 96, 128, 384, 512]:
+        b = pick_block(dim, 128)
+        assert dim % b == 0
+        assert b <= 128
+
+
+def test_default_blocks_vmem_budget():
+    # every shape in the AOT manifest must fit the 16 MiB VMEM budget
+    for dout, din in [(192, 64), (64, 64), (256, 64), (64, 256), (384, 128), (512, 128), (128, 512)]:
+        bm, bn, bk = default_blocks(dout, din)
+        assert dout % bm == 0 and din % bn == 0 and din % bk == 0
+        assert vmem_bytes(dout, din) < 16 * 1024 * 1024
+        assert flops(dout, din) == 2 * dout * din * din
+
+
+def test_gram_blocks_divide():
+    bm, bn, bk = gram_blocks(128, 1024)
+    assert 128 % bm == 0 and 128 % bn == 0 and 1024 % bk == 0

@@ -1,0 +1,82 @@
+"""L2 model tests: shapes, causality, loss behaviour, capture, and the
+flatten/unflatten contract the AOT signature depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return configs.ModelConfig(
+        name="t", d_model=32, n_layers=2, n_heads=4, d_ff=64, seq_len=24, vocab_size=64
+    )
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_param_names_match_init(cfg, params):
+    assert sorted(params.keys()) == sorted(cfg.param_names())
+    assert cfg.n_params() == sum(int(np.prod(p.shape)) for p in params.values())
+
+
+def test_forward_shapes(cfg, params):
+    tokens = jnp.zeros((3, cfg.seq_len), dtype=jnp.int32)
+    logits, caps = model.forward(params, tokens, cfg, collect_inputs=True)
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab_size)
+    assert len(caps) == 4 * cfg.n_layers
+    assert caps["blocks.0.wqkv"].shape == (3, cfg.seq_len, cfg.d_model)
+    assert caps["blocks.0.wdown"].shape == (3, cfg.seq_len, cfg.d_ff)
+
+
+def test_causality(cfg, params):
+    key = jax.random.PRNGKey(1)
+    t1 = jax.random.randint(key, (1, cfg.seq_len), 0, cfg.vocab_size)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % cfg.vocab_size)
+    l1, _ = model.forward(params, t1, cfg)
+    l2, _ = model.forward(params, t2, cfg)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], atol=1e-5)
+    assert float(jnp.abs(l1[0, -1] - l2[0, -1]).max()) > 1e-6
+
+
+def test_loss_near_log_vocab_at_init(cfg, params):
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (4, cfg.seq_len), 0, cfg.vocab_size)
+    loss = float(model.loss_fn(params, tokens, cfg))
+    assert abs(loss - np.log(cfg.vocab_size)) < 0.5
+
+
+def test_grad_step_reduces_loss(cfg, params):
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (4, cfg.seq_len), 0, cfg.vocab_size)
+    loss, grads = jax.value_and_grad(lambda p: model.loss_fn(p, tokens, cfg))(params)
+    stepped = {k: params[k] - 0.5 * grads[k] for k in params}
+    loss2 = float(model.loss_fn(stepped, tokens, cfg))
+    assert loss2 < float(loss)
+
+
+def test_flatten_roundtrip(cfg, params):
+    flat = model.flat_params(params, cfg)
+    back = model.unflatten_params(flat, cfg)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k]), np.asarray(back[k]))
+
+
+def test_fwd_for_aot_matches_forward(cfg, params):
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, cfg.seq_len), 0, cfg.vocab_size)
+    fn = model.fwd_for_aot(cfg)
+    (logits_aot,) = fn(tokens, *model.flat_params(params, cfg))
+    logits, _ = model.forward(params, tokens, cfg)
+    np.testing.assert_allclose(logits_aot, logits, atol=1e-6)
+
+
+def test_layer_shapes_families(cfg):
+    fams = {f for (_, f, _, _) in cfg.layer_shapes()}
+    assert fams == {"attn_qkv", "attn_out", "mlp_up", "mlp_down"}
+    for name, _f, dout, din in cfg.layer_shapes():
+        assert name.startswith("blocks.")
+        assert dout > 0 and din > 0

@@ -1,0 +1,80 @@
+//! Hot-path benchmark: one FW iteration (gradient + LMO + update) per
+//! layer shape, across the three kernel backends.  This is the §Perf
+//! primary metric — the per-iteration cost the paper's "cost of a single
+//! FW iteration is independent of the sample count" claim refers to.
+//!
+//!   cargo bench --bench fw_hot_loop            (needs artifacts/)
+
+use sparsefw::bench::{gflops, Bencher};
+use sparsefw::config::Workspace;
+use sparsefw::pruner::fw_math;
+use sparsefw::pruner::lmo::lmo;
+use sparsefw::pruner::mask::BudgetSpec;
+use sparsefw::pruner::sparsefw::{FwKernels, NativeKernels};
+use sparsefw::runtime::PjrtKernels;
+use sparsefw::tensor::{matmul_a_bt, Mat};
+use sparsefw::util::prng::Xoshiro256;
+
+fn main() {
+    let shapes = [(192usize, 64usize), (256, 64), (384, 128), (512, 128), (128, 512)];
+    let mut rng = Xoshiro256::new(1);
+    let mut b = Bencher::new("fw_hot_loop");
+
+    // native per-iteration cost per shape
+    for &(dout, din) in &shapes {
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let x = Mat::gaussian(din, 2048, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x);
+        let h = fw_math::precompute_h(&w, &g);
+        let m = Mat::from_fn(dout, din, |_, _| rng.next_f32());
+        let k = dout * din * 2 / 5;
+        let budget = BudgetSpec::Global { keep: k };
+
+        let flops = 2 * (dout * din * din) as u64;
+        let s = b.bench(&format!("native/iter/{dout}x{din}"), || {
+            let grad = NativeKernels.fw_grad(&w, &m, &g, &h).unwrap();
+            let v = lmo(&grad, &budget);
+            let mut mm = m.clone();
+            mm.axby(0.9, 0.1, &v);
+            std::hint::black_box(mm.data[0]);
+        });
+        println!(
+            "  -> {dout}x{din}: {:.2} GF/s (gradient matmul share)",
+            gflops(flops, s.mean)
+        );
+    }
+
+    // PJRT (AOT Pallas) per-iteration cost, when artifacts exist
+    if let Ok(ws) = Workspace::open_default() {
+        if let Ok(rt) = ws.runtime() {
+            let kern = PjrtKernels::new(&rt);
+            for &(dout, din) in &shapes[..3] {
+                let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+                let x = Mat::gaussian(din, 2048, 1.0, &mut rng);
+                let g = matmul_a_bt(&x, &x);
+                let h = fw_math::precompute_h(&w, &g);
+                let m = Mat::from_fn(dout, din, |_, _| rng.next_f32());
+                if kern.fw_grad(&w, &m, &g, &h).is_err() {
+                    continue; // shape not in manifest
+                }
+                b.bench(&format!("pjrt/grad/{dout}x{din}"), || {
+                    std::hint::black_box(kern.fw_grad(&w, &m, &g, &h).unwrap());
+                });
+                // fused 20-iteration chunk (per-iteration amortized cost)
+                let fixed = Mat::zeros(dout, din);
+                let k = dout * din * 2 / 5;
+                if rt.fw_chunk(&w, &m, &g, &h, &fixed, k, 0).is_ok() {
+                    b.bench(&format!("pjrt/chunk20/{dout}x{din}"), || {
+                        std::hint::black_box(
+                            rt.fw_chunk(&w, &m, &g, &h, &fixed, k, 0).unwrap(),
+                        );
+                    });
+                }
+            }
+        }
+    } else {
+        eprintln!("(artifacts/ not found — PJRT benches skipped)");
+    }
+
+    b.report();
+}

@@ -1,0 +1,51 @@
+//! Calibration-path benchmark: gram accumulation G ← G + XXᵀ (native
+//! matmul vs the AOT Pallas gram kernel) and the full capture pipeline.
+
+use sparsefw::bench::{gflops, Bencher};
+use sparsefw::calib::Calibration;
+use sparsefw::config::Workspace;
+use sparsefw::tensor::{matmul_a_bt, Mat};
+use sparsefw::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::new(3);
+    let mut b = Bencher::new("gram");
+
+    for &(din, batch) in &[(64usize, 1024usize), (128, 1024), (512, 1024)] {
+        let x = Mat::gaussian(din, batch, 1.0, &mut rng);
+        let flops = 2 * (din * din * batch) as u64;
+        let s = b.bench(&format!("native/xxT/{din}x{batch}"), || {
+            std::hint::black_box(matmul_a_bt(&x, &x));
+        });
+        println!("  -> {din}x{batch}: {:.2} GF/s", gflops(flops, s.mean));
+    }
+
+    if let Ok(ws) = Workspace::open_default() {
+        if let Ok(rt) = ws.runtime() {
+            for &din in &[64usize, 128, 512] {
+                let x = Mat::gaussian(din, 1024, 1.0, &mut rng);
+                let g = Mat::zeros(din, din);
+                if rt.gram_acc(&g, &x).is_err() {
+                    continue;
+                }
+                b.bench(&format!("pjrt/gram/{din}x1024"), || {
+                    std::hint::black_box(rt.gram_acc(&g, &x).unwrap());
+                });
+            }
+        }
+        // whole calibration pass on the first model (capture + fold)
+        if let Ok(model) = ws.load_model(&ws.manifest.model_names()[0]) {
+            if let Ok(train) = ws.train_bin() {
+                b.bench("calibrate/16-seqs", || {
+                    std::hint::black_box(
+                        Calibration::collect(&model, &train, 16, 1).unwrap(),
+                    );
+                });
+            }
+        }
+    } else {
+        eprintln!("(artifacts/ not found — PJRT + calibration benches skipped)");
+    }
+
+    b.report();
+}

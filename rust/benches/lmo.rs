@@ -1,0 +1,44 @@
+//! LMO + rounding micro-benchmarks across constraint geometries and
+//! problem sizes — the coordination-side share of a FW iteration
+//! (select-k is expected O(n); confirms it never dominates the matmul).
+
+use sparsefw::bench::Bencher;
+use sparsefw::pruner::lmo::lmo;
+use sparsefw::pruner::mask::{BudgetSpec, SparsityPattern};
+use sparsefw::pruner::rounding::threshold;
+use sparsefw::tensor::Mat;
+use sparsefw::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::new(2);
+    let mut b = Bencher::new("lmo");
+
+    for &(dout, din) in &[(192usize, 64usize), (512, 128), (128, 512), (1024, 1024)] {
+        let grad = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let m = Mat::from_fn(dout, din, |_, _| rng.next_f32());
+        let k = dout * din * 2 / 5;
+
+        let global = BudgetSpec::Global { keep: k };
+        b.bench(&format!("lmo/global/{dout}x{din}"), || {
+            std::hint::black_box(lmo(&grad, &global));
+        });
+
+        let per_row = BudgetSpec::full(&SparsityPattern::PerRow { sparsity: 0.6 }, dout, din);
+        b.bench(&format!("lmo/per-row/{dout}x{din}"), || {
+            std::hint::black_box(lmo(&grad, &per_row));
+        });
+
+        if din % 4 == 0 {
+            let nm = BudgetSpec::full(&SparsityPattern::NM { keep: 2, block: 4 }, dout, din);
+            b.bench(&format!("lmo/2:4/{dout}x{din}"), || {
+                std::hint::black_box(lmo(&grad, &nm));
+            });
+        }
+
+        b.bench(&format!("round/global/{dout}x{din}"), || {
+            std::hint::black_box(threshold(&m, &global, None));
+        });
+    }
+
+    b.report();
+}

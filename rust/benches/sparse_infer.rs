@@ -1,0 +1,47 @@
+//! Deployment payoff bench: dense vs CSR linear-layer application at
+//! the paper's sparsity levels — the end-use case motivating pruning.
+//! Reported in EXPERIMENTS.md §Extensions.
+
+use sparsefw::bench::Bencher;
+use sparsefw::pruner::mask::SparsityPattern;
+use sparsefw::pruner::saliency::{magnitude_scores, saliency_mask};
+use sparsefw::tensor::sparse::CsrMat;
+use sparsefw::tensor::{matmul_a_bt, Mat};
+use sparsefw::util::prng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::new(9);
+    let mut b = Bencher::new("sparse_infer");
+    let batch = 128; // tokens per forward chunk
+
+    for &(dout, din) in &[(512usize, 128usize), (128, 512), (384, 128)] {
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let x = Mat::gaussian(batch, din, 1.0, &mut rng);
+
+        let s = b.bench(&format!("dense/{dout}x{din}"), || {
+            std::hint::black_box(matmul_a_bt(&x, &w));
+        });
+        let dense_mean = s.mean;
+
+        for sparsity in [0.5, 0.6, 0.75, 0.9] {
+            let mask = saliency_mask(
+                &magnitude_scores(&w),
+                &SparsityPattern::PerRow { sparsity },
+            );
+            let csr = CsrMat::from_masked(&w, &mask);
+            let s = b.bench(
+                &format!("csr{:.0}%/{dout}x{din}", sparsity * 100.0),
+                || {
+                    std::hint::black_box(csr.matmul_a_bt(&x));
+                },
+            );
+            println!(
+                "  -> {dout}x{din} @ {:.0}%: speedup {:.2}x, size {:.2}x dense",
+                sparsity * 100.0,
+                dense_mean.as_secs_f64() / s.mean.as_secs_f64(),
+                csr.size_bytes() as f64 / (dout * din * 4) as f64,
+            );
+        }
+    }
+    b.report();
+}

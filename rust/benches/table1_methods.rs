@@ -1,0 +1,58 @@
+//! End-to-end method timing — the wall-clock cost behind every Table 1
+//! cell: full-pipeline pruning (all layers) per method, plus the
+//! evaluation cost.  The paper's claim that SparseFW is "clearly more
+//! compute-intensive than Wanda and RIA" is quantified here as the
+//! method-time ratio.
+
+use sparsefw::bench::Bencher;
+use sparsefw::calib::Calibration;
+use sparsefw::config::Workspace;
+use sparsefw::coordinator::PrunePipeline;
+use sparsefw::eval::perplexity_native;
+use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern};
+
+fn main() {
+    let Ok(ws) = Workspace::open_default() else {
+        eprintln!("artifacts/ not found — run `make artifacts` first");
+        return;
+    };
+    let model_name = ws.manifest.model_names()[0].clone();
+    let model = ws.load_model(&model_name).unwrap();
+    let train = ws.train_bin().unwrap();
+    let test = ws.test_bin().unwrap();
+    let calib = Calibration::collect(&model, &train, 64, 7).unwrap();
+    let pipe = PrunePipeline::new(&model, &calib);
+    let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
+
+    let mut b = Bencher::new(format!("table1_methods/{model_name}").as_str());
+    b.budget = std::time::Duration::from_secs(5);
+    b.max_iters = 10;
+
+    for (label, method) in [
+        ("magnitude", PruneMethod::Magnitude),
+        ("wanda", PruneMethod::Wanda),
+        ("ria", PruneMethod::Ria),
+        ("sparsegpt", PruneMethod::SparseGpt { percdamp: 0.01, blocksize: 128 }),
+        (
+            "sparsefw-t100",
+            PruneMethod::SparseFw(SparseFwConfig { iters: 100, ..Default::default() }),
+        ),
+        (
+            "sparsefw-t400",
+            PruneMethod::SparseFw(SparseFwConfig { iters: 400, ..Default::default() }),
+        ),
+    ] {
+        b.bench(&format!("prune/{label}"), || {
+            std::hint::black_box(pipe.run(&method, &pattern).unwrap());
+        });
+    }
+
+    b.bench("calibrate/64-seqs", || {
+        std::hint::black_box(Calibration::collect(&model, &train, 64, 7).unwrap());
+    });
+    b.bench("eval/ppl-32-seqs", || {
+        std::hint::black_box(perplexity_native(&model, &test, 32).unwrap());
+    });
+
+    b.report();
+}

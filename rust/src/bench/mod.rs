@@ -1,0 +1,144 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```no_run
+//! use sparsefw::bench::Bencher;
+//! let mut b = Bencher::new("matmul");
+//! b.bench("256x256x256", || { /* work */ });
+//! b.report();
+//! ```
+//!
+//! Methodology: warmup runs until ~200 ms or 3 iterations, then samples
+//! until ~1 s or 30 iterations; reports mean / p50 / p95 / min with the
+//! sample count.  Good enough to rank implementations and detect >5%
+//! regressions, which is all the §Perf loop needs.
+
+use std::time::{Duration, Instant};
+
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+pub struct Bencher {
+    group: String,
+    samples: Vec<Sample>,
+    /// Max wall budget per benchmark.
+    pub budget: Duration,
+    /// Max sample count per benchmark.
+    pub max_iters: usize,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            samples: Vec::new(),
+            budget: Duration::from_secs(1),
+            max_iters: 30,
+        }
+    }
+
+    /// Time `f`, recording a sample under `name`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Sample {
+        // warmup
+        let wstart = Instant::now();
+        let mut warm = 0;
+        while warm < 3 && wstart.elapsed() < Duration::from_millis(200) {
+            f();
+            warm += 1;
+        }
+        // measure
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.max_iters
+            && (start.elapsed() < self.budget || times.len() < 3)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let n = times.len();
+        let mean = times.iter().sum::<Duration>() / n as u32;
+        let sample = Sample {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            p50: times[n / 2],
+            p95: times[(n * 95 / 100).min(n - 1)],
+            min: times[0],
+        };
+        self.samples.push(sample);
+        self.samples.last().unwrap()
+    }
+
+    /// Print a criterion-style table to stdout.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<42} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            "name", "iters", "mean", "p50", "p95", "min"
+        );
+        for s in &self.samples {
+            println!(
+                "{:<42} {:>8} {:>12} {:>12} {:>12} {:>12}",
+                s.name,
+                s.iters,
+                fmt_dur(s.mean),
+                fmt_dur(s.p50),
+                fmt_dur(s.p95),
+                fmt_dur(s.min)
+            );
+        }
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Throughput helper: GFLOP/s for `flops` work done in `d`.
+pub fn gflops(flops: u64, d: Duration) -> f64 {
+    flops as f64 / d.as_secs_f64() / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_samples() {
+        let mut b = Bencher::new("test");
+        b.budget = Duration::from_millis(50);
+        b.max_iters = 5;
+        let s = b.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000s");
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+    }
+}

@@ -1,0 +1,159 @@
+//! Calibration: collect per-layer gram matrices `G = XXᵀ` from forward
+//! passes over calibration sequences.
+//!
+//! This is the paper's §2.3 memory trick: the FW objective and gradient
+//! depend on X only through `G` (d_in × d_in) and `H = WG`, so the
+//! calibration footprint is independent of the number of samples N and
+//! sequence length L.  Batches are streamed: each captured activation
+//! block (L × d_in) is folded into G and dropped.
+//!
+//! Two accumulation backends: native (`matmul_at_b`) and the AOT Pallas
+//! `gram` kernel via PJRT (cross-checked in integration tests).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::data::TokenBin;
+use crate::model::{forward::forward, Gpt};
+use crate::runtime::PjrtRuntime;
+use crate::tensor::{matmul_at_b, Mat};
+use crate::util::pool::parallel_map;
+
+/// Per-layer gram matrices for one model + calibration sample.
+#[derive(Clone)]
+pub struct Calibration {
+    /// Layer param name → G = XXᵀ (d_in × d_in), summed over all
+    /// calibration positions.
+    pub grams: BTreeMap<String, Mat>,
+    pub n_samples: usize,
+    pub seq_len: usize,
+}
+
+impl Calibration {
+    /// Sample `n_samples` sequences from `bin` (seeded) and accumulate
+    /// grams with the native backend, parallel over sequences.
+    pub fn collect(model: &Gpt, bin: &TokenBin, n_samples: usize, seed: u64) -> Result<Self> {
+        let seq_len = model.cfg.seq_len;
+        let seqs = bin.sample(seq_len, n_samples, seed);
+        Self::from_sequences(model, &seqs)
+    }
+
+    /// Accumulate grams from explicit sequences (native backend).
+    pub fn from_sequences(model: &Gpt, seqs: &[Vec<u8>]) -> Result<Self> {
+        ensure!(!seqs.is_empty(), "no calibration sequences");
+        let layers = model.cfg.layers();
+
+        // Map over sequences in parallel (each forward is itself cheap);
+        // reduce partial grams at the end.
+        let partials: Vec<BTreeMap<String, Mat>> = parallel_map(seqs.len(), |i| {
+            let out = forward(model, &seqs[i], true);
+            let caps = out.captures.unwrap();
+            let mut grams = BTreeMap::new();
+            for l in &layers {
+                let x = &caps[&l.name]; // (L, d_in)
+                grams.insert(l.name.clone(), matmul_at_b(x, x));
+            }
+            grams
+        });
+
+        let mut grams: BTreeMap<String, Mat> = BTreeMap::new();
+        for p in partials {
+            for (name, g) in p {
+                match grams.get_mut(&name) {
+                    Some(acc) => acc.add_inplace(&g),
+                    None => {
+                        grams.insert(name, g);
+                    }
+                }
+            }
+        }
+        Ok(Self { grams, n_samples: seqs.len(), seq_len: seqs[0].len() })
+    }
+
+    /// Accumulate grams through the AOT Pallas `gram` kernel: native
+    /// forward captures X, PJRT folds each chunk into G.
+    pub fn from_sequences_pjrt(
+        model: &Gpt,
+        seqs: &[Vec<u8>],
+        runtime: &PjrtRuntime,
+    ) -> Result<Self> {
+        ensure!(!seqs.is_empty(), "no calibration sequences");
+        let layers = model.cfg.layers();
+        let mut grams: BTreeMap<String, Mat> = layers
+            .iter()
+            .map(|l| (l.name.clone(), Mat::zeros(l.d_in, l.d_in)))
+            .collect();
+        for seq in seqs {
+            let out = forward(model, seq, true);
+            let caps = out.captures.unwrap();
+            for l in &layers {
+                let x = caps[&l.name].transpose(); // (d_in, L) chunk
+                let g = grams.get_mut(&l.name).unwrap();
+                *g = runtime.gram_acc(g, &x)?;
+            }
+        }
+        Ok(Self { grams, n_samples: seqs.len(), seq_len: seqs[0].len() })
+    }
+
+    pub fn gram(&self, layer: &str) -> &Mat {
+        self.grams
+            .get(layer)
+            .unwrap_or_else(|| panic!("no gram for layer {layer}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::{random_model, tiny_cfg};
+
+    fn test_bin(n: usize) -> TokenBin {
+        TokenBin::from_tokens(crate::data::corpus::generate(5, n))
+    }
+
+    #[test]
+    fn grams_are_psd_and_shaped() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 1);
+        let calib = Calibration::collect(&model, &test_bin(4096), 6, 3).unwrap();
+        assert_eq!(calib.grams.len(), 4 * cfg.n_layers);
+        for l in cfg.layers() {
+            let g = calib.gram(&l.name);
+            assert_eq!((g.rows, g.cols), (l.d_in, l.d_in));
+            // symmetric
+            for i in 0..g.rows {
+                for j in 0..i {
+                    assert!((g.at(i, j) - g.at(j, i)).abs() < 2e-2 * (1.0 + g.at(i, j).abs()));
+                }
+                // PSD necessary condition: nonneg diagonal
+                assert!(g.at(i, i) >= -1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_scales_with_samples() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 2);
+        let bin = test_bin(8192);
+        let c1 = Calibration::collect(&model, &bin, 2, 7).unwrap();
+        let c2 = Calibration::collect(&model, &bin, 8, 7).unwrap();
+        // more samples => larger trace (G is a sum, not a mean)
+        let l = &cfg.layers()[0].name;
+        let tr1: f32 = (0..16).map(|i| c1.gram(l).at(i, i)).sum();
+        let tr2: f32 = (0..16).map(|i| c2.gram(l).at(i, i)).sum();
+        assert!(tr2 > tr1 * 2.0, "{tr2} vs {tr1}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 3);
+        let bin = test_bin(4096);
+        let a = Calibration::collect(&model, &bin, 4, 11).unwrap();
+        let b = Calibration::collect(&model, &bin, 4, 11).unwrap();
+        let l = &cfg.layers()[2].name;
+        assert_eq!(a.gram(l).data, b.gram(l).data);
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal CLI argument parser (the offline registry has no `clap`).
+//!
+//! Grammar: `sparsefw <subcommand> [--key value | --key=value | --flag]…`
+//! Values never begin with `--`; a `--key` followed by another `--key`
+//! (or end-of-args) is a boolean flag.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub bools: BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(key.to_string(), v);
+                } else {
+                    args.bools.insert(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(a);
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{key} must be a number")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.get_usize(key, default as usize)? as u64)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.contains(key)
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Parse a sparsity pattern: `unstructured:0.6`, `per-row:0.5`, `2:4`,
+/// or `nm:2:4`.
+pub fn parse_pattern(s: &str) -> Result<SparsityPattern> {
+    let parts: Vec<&str> = s.split(':').collect();
+    match parts.as_slice() {
+        ["unstructured", v] => Ok(SparsityPattern::Unstructured { sparsity: v.parse()? }),
+        ["per-row", v] | ["per_row", v] => Ok(SparsityPattern::PerRow { sparsity: v.parse()? }),
+        ["nm", k, b] => Ok(SparsityPattern::NM { keep: k.parse()?, block: b.parse()? }),
+        [k, b] if k.parse::<usize>().is_ok() && b.parse::<usize>().is_ok() => {
+            Ok(SparsityPattern::NM { keep: k.parse()?, block: b.parse()? })
+        }
+        _ => bail!("cannot parse pattern {s:?} (try unstructured:0.6, per-row:0.5, 2:4)"),
+    }
+}
+
+pub fn parse_warmstart(s: &str) -> Result<Warmstart> {
+    Ok(match s {
+        "wanda" => Warmstart::Wanda,
+        "ria" => Warmstart::Ria,
+        "magnitude" => Warmstart::Magnitude,
+        _ => bail!("unknown warmstart {s:?}"),
+    })
+}
+
+/// Build a [`PruneMethod`] from CLI flags.
+pub fn parse_method(args: &Args) -> Result<PruneMethod> {
+    match args.get("method").unwrap_or("sparsefw") {
+        "magnitude" => Ok(PruneMethod::Magnitude),
+        "wanda" => Ok(PruneMethod::Wanda),
+        "ria" => Ok(PruneMethod::Ria),
+        "sparsegpt" => Ok(PruneMethod::SparseGpt {
+            percdamp: args.get_f64("percdamp", 0.01)?,
+            blocksize: args.get_usize("blocksize", 128)?,
+        }),
+        "sparsefw" => Ok(PruneMethod::SparseFw(SparseFwConfig {
+            iters: args.get_usize("iters", 500)?,
+            alpha: args.get_f64("alpha", 0.9)?,
+            warmstart: parse_warmstart(args.get("warmstart").unwrap_or("wanda"))?,
+            trace_every: args.get_usize("trace-every", 0)?,
+            use_chunk: !args.has("no-chunk"),
+            keep_best: !args.has("no-keep-best"),
+            line_search: args.has("line-search"),
+        })),
+        other => bail!("unknown method {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_basic() {
+        let a = Args::parse(argv("prune --model tiny --iters=300 --fast --alpha 0.5")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("prune"));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 300);
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.5);
+        assert!(a.has("fast"));
+        assert_eq!(a.get_usize("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn parse_lists_and_errors() {
+        let a = Args::parse(argv("x --models tiny,small")).unwrap();
+        assert_eq!(a.get_list("models"), vec!["tiny", "small"]);
+        assert!(Args::parse(argv("x stray extra")).is_err());
+    }
+
+    #[test]
+    fn patterns() {
+        assert_eq!(
+            parse_pattern("unstructured:0.6").unwrap(),
+            SparsityPattern::Unstructured { sparsity: 0.6 }
+        );
+        assert_eq!(
+            parse_pattern("per-row:0.5").unwrap(),
+            SparsityPattern::PerRow { sparsity: 0.5 }
+        );
+        assert_eq!(parse_pattern("2:4").unwrap(), SparsityPattern::NM { keep: 2, block: 4 });
+        assert_eq!(parse_pattern("nm:1:4").unwrap(), SparsityPattern::NM { keep: 1, block: 4 });
+        assert!(parse_pattern("wat").is_err());
+    }
+
+    #[test]
+    fn methods() {
+        let a = Args::parse(argv("p --method sparsefw --iters 100 --alpha 0.25 --warmstart ria"))
+            .unwrap();
+        match parse_method(&a).unwrap() {
+            PruneMethod::SparseFw(c) => {
+                assert_eq!(c.iters, 100);
+                assert_eq!(c.alpha, 0.25);
+                assert_eq!(c.warmstart, Warmstart::Ria);
+            }
+            _ => panic!(),
+        }
+        let a = Args::parse(argv("p --method wanda")).unwrap();
+        assert!(matches!(parse_method(&a).unwrap(), PruneMethod::Wanda));
+    }
+}

@@ -1,0 +1,264 @@
+//! Workspace + run configuration.
+//!
+//! [`Workspace`] ties together the artifacts directory (manifest, token
+//! bins, checkpoints, HLO executables).  [`PruneRunConfig`] is the
+//! JSON-serializable description of one pruning run — what the CLI
+//! builds from flags and what reports embed for reproducibility.
+
+pub mod cli;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::TokenBin;
+use crate::model::Gpt;
+use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::runtime::{Manifest, PjrtRuntime};
+use crate::util::json::Json;
+
+/// An opened artifacts directory.
+pub struct Workspace {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Workspace {
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Default location: `$SPARSEFW_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("SPARSEFW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn load_model(&self, name: &str) -> Result<Gpt> {
+        let cfg = self.manifest.model_config(name)?;
+        let ckpt = self.manifest.checkpoint_path(name)?;
+        Gpt::load(cfg, &ckpt).with_context(|| format!("loading model {name}"))
+    }
+
+    pub fn train_bin(&self) -> Result<TokenBin> {
+        TokenBin::load(&self.manifest.data_bin("train")?)
+    }
+
+    pub fn val_bin(&self) -> Result<TokenBin> {
+        TokenBin::load(&self.manifest.data_bin("val")?)
+    }
+
+    pub fn test_bin(&self) -> Result<TokenBin> {
+        TokenBin::load(&self.manifest.data_bin("test")?)
+    }
+
+    pub fn runtime(&self) -> Result<PjrtRuntime> {
+        PjrtRuntime::new(self.manifest.clone())
+    }
+}
+
+/// Which FW-kernel backend executes the hot loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Rust-native matmuls (no artifacts needed).
+    Native,
+    /// AOT Pallas kernels through PJRT, per-iteration round-trips.
+    Pjrt,
+    /// PJRT with the fused multi-iteration chunk executable.
+    PjrtChunk,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => Backend::Native,
+            "pjrt" => Backend::Pjrt,
+            "pjrt-chunk" | "pjrt_chunk" => Backend::PjrtChunk,
+            _ => bail!("unknown backend {s:?} (native|pjrt|pjrt-chunk)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+            Backend::PjrtChunk => "pjrt-chunk",
+        }
+    }
+}
+
+/// Full description of one pruning run (JSON round-trippable).
+#[derive(Clone, Debug)]
+pub struct PruneRunConfig {
+    pub model: String,
+    pub method: PruneMethod,
+    pub pattern: SparsityPattern,
+    pub calib_samples: usize,
+    pub calib_seed: u64,
+    pub backend: Backend,
+}
+
+impl Default for PruneRunConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            method: PruneMethod::SparseFw(SparseFwConfig::default()),
+            pattern: SparsityPattern::Unstructured { sparsity: 0.6 },
+            calib_samples: 128,
+            calib_seed: 7,
+            backend: Backend::Native,
+        }
+    }
+}
+
+impl PruneRunConfig {
+    pub fn to_json(&self) -> Json {
+        let method = match &self.method {
+            PruneMethod::Magnitude => Json::obj(vec![("kind", "magnitude".into())]),
+            PruneMethod::Wanda => Json::obj(vec![("kind", "wanda".into())]),
+            PruneMethod::Ria => Json::obj(vec![("kind", "ria".into())]),
+            PruneMethod::SparseFw(c) => Json::obj(vec![
+                ("kind", "sparsefw".into()),
+                ("iters", c.iters.into()),
+                ("alpha", c.alpha.into()),
+                ("warmstart", c.warmstart.label().into()),
+                ("trace_every", c.trace_every.into()),
+                ("use_chunk", c.use_chunk.into()),
+                ("keep_best", c.keep_best.into()),
+                ("line_search", c.line_search.into()),
+            ]),
+            PruneMethod::SparseGpt { percdamp, blocksize } => Json::obj(vec![
+                ("kind", "sparsegpt".into()),
+                ("percdamp", (*percdamp).into()),
+                ("blocksize", (*blocksize).into()),
+            ]),
+        };
+        let pattern = match &self.pattern {
+            SparsityPattern::Unstructured { sparsity } => Json::obj(vec![
+                ("kind", "unstructured".into()),
+                ("sparsity", (*sparsity).into()),
+            ]),
+            SparsityPattern::PerRow { sparsity } => Json::obj(vec![
+                ("kind", "per_row".into()),
+                ("sparsity", (*sparsity).into()),
+            ]),
+            SparsityPattern::NM { keep, block } => Json::obj(vec![
+                ("kind", "nm".into()),
+                ("keep", (*keep).into()),
+                ("block", (*block).into()),
+            ]),
+        };
+        Json::obj(vec![
+            ("model", self.model.as_str().into()),
+            ("method", method),
+            ("pattern", pattern),
+            ("calib_samples", self.calib_samples.into()),
+            ("calib_seed", (self.calib_seed as usize).into()),
+            ("backend", self.backend.label().into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let warmstart = |s: Option<&str>| -> Result<Warmstart> {
+            Ok(match s.unwrap_or("wanda") {
+                "wanda" => Warmstart::Wanda,
+                "ria" => Warmstart::Ria,
+                "magnitude" => Warmstart::Magnitude,
+                other => bail!("unknown warmstart {other:?}"),
+            })
+        };
+        let mj = v.at(&["method"]);
+        let method = match mj.at(&["kind"]).as_str().unwrap_or("sparsefw") {
+            "magnitude" => PruneMethod::Magnitude,
+            "wanda" => PruneMethod::Wanda,
+            "ria" => PruneMethod::Ria,
+            "sparsegpt" => PruneMethod::SparseGpt {
+                percdamp: mj.at(&["percdamp"]).as_f64().unwrap_or(0.01),
+                blocksize: mj.at(&["blocksize"]).as_usize().unwrap_or(128),
+            },
+            "sparsefw" => PruneMethod::SparseFw(SparseFwConfig {
+                iters: mj.at(&["iters"]).as_usize().unwrap_or(500),
+                alpha: mj.at(&["alpha"]).as_f64().unwrap_or(0.9),
+                warmstart: warmstart(mj.at(&["warmstart"]).as_str())?,
+                trace_every: mj.at(&["trace_every"]).as_usize().unwrap_or(0),
+                use_chunk: mj.at(&["use_chunk"]).as_bool().unwrap_or(true),
+                keep_best: mj.at(&["keep_best"]).as_bool().unwrap_or(true),
+                line_search: mj.at(&["line_search"]).as_bool().unwrap_or(false),
+            }),
+            other => bail!("unknown method {other:?}"),
+        };
+        let pj = v.at(&["pattern"]);
+        let pattern = match pj.at(&["kind"]).as_str().unwrap_or("unstructured") {
+            "unstructured" => SparsityPattern::Unstructured {
+                sparsity: pj.at(&["sparsity"]).as_f64().unwrap_or(0.5),
+            },
+            "per_row" => SparsityPattern::PerRow {
+                sparsity: pj.at(&["sparsity"]).as_f64().unwrap_or(0.5),
+            },
+            "nm" => SparsityPattern::NM {
+                keep: pj.at(&["keep"]).as_usize().unwrap_or(2),
+                block: pj.at(&["block"]).as_usize().unwrap_or(4),
+            },
+            other => bail!("unknown pattern {other:?}"),
+        };
+        Ok(Self {
+            model: v.at(&["model"]).as_str().unwrap_or("tiny").to_string(),
+            method,
+            pattern,
+            calib_samples: v.at(&["calib_samples"]).as_usize().unwrap_or(128),
+            calib_seed: v.at(&["calib_seed"]).as_f64().unwrap_or(7.0) as u64,
+            backend: Backend::parse(v.at(&["backend"]).as_str().unwrap_or("native"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn run_config_roundtrip() {
+        let cfg = PruneRunConfig {
+            model: "small".into(),
+            method: PruneMethod::SparseFw(SparseFwConfig {
+                iters: 123,
+                alpha: 0.25,
+                warmstart: Warmstart::Ria,
+                trace_every: 10,
+                use_chunk: false,
+                keep_best: true,
+                line_search: false,
+            }),
+            pattern: SparsityPattern::NM { keep: 2, block: 4 },
+            calib_samples: 64,
+            calib_seed: 99,
+            backend: Backend::PjrtChunk,
+        };
+        let j = cfg.to_json();
+        let back = PruneRunConfig::from_json(&json::parse(&json::to_string(&j)).unwrap()).unwrap();
+        assert_eq!(back.model, "small");
+        assert_eq!(back.calib_samples, 64);
+        assert_eq!(back.calib_seed, 99);
+        assert_eq!(back.backend, Backend::PjrtChunk);
+        match back.method {
+            PruneMethod::SparseFw(c) => {
+                assert_eq!(c.iters, 123);
+                assert_eq!(c.alpha, 0.25);
+                assert_eq!(c.warmstart, Warmstart::Ria);
+                assert!(!c.use_chunk);
+            }
+            _ => panic!("wrong method"),
+        }
+        assert_eq!(back.pattern, SparsityPattern::NM { keep: 2, block: 4 });
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert!(Backend::parse("native").is_ok());
+        assert!(Backend::parse("pjrt-chunk").is_ok());
+        assert!(Backend::parse("gpu").is_err());
+    }
+}

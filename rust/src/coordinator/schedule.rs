@@ -1,0 +1,59 @@
+//! Layer scheduling policies.
+//!
+//! The native backend fans independent layer jobs across threads; this
+//! module decides the dispatch order.  Longest-processing-time-first
+//! (LPT) over the per-layer FLOP estimate minimizes makespan for the
+//! work-stealing pool: big `mlp_down` (d_out × d_ff²-gram) jobs start
+//! first so the tail of the schedule is short jobs.
+
+use crate::model::LayerInfo;
+
+/// FW per-iteration FLOPs for a layer: the (d_out×d_in)·(d_in×d_in)
+/// gradient contraction dominates.
+pub fn layer_flops(l: &LayerInfo) -> u64 {
+    2 * l.d_out as u64 * l.d_in as u64 * l.d_in as u64
+}
+
+/// Indices of `layers` in LPT (descending-cost) order.
+pub fn lpt_order(layers: &[LayerInfo]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..layers.len()).collect();
+    idx.sort_by_key(|&i| std::cmp::Reverse(layer_flops(&layers[i])));
+    idx
+}
+
+/// Simple makespan estimate for `workers` under LPT (for logs/reports).
+pub fn estimated_makespan(layers: &[LayerInfo], workers: usize) -> u64 {
+    let mut loads = vec![0u64; workers.max(1)];
+    for &i in &lpt_order(layers) {
+        let min = loads.iter_mut().min().unwrap();
+        *min += layer_flops(&layers[i]);
+    }
+    loads.into_iter().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(name: &str, d_out: usize, d_in: usize) -> LayerInfo {
+        LayerInfo { name: name.into(), family: "t".into(), d_out, d_in }
+    }
+
+    #[test]
+    fn lpt_sorts_descending() {
+        let layers = vec![layer("a", 64, 64), layer("b", 128, 512), layer("c", 256, 64)];
+        let order = lpt_order(&layers);
+        assert_eq!(order[0], 1); // b: 128·512² is largest
+        assert_eq!(order[2], 0);
+    }
+
+    #[test]
+    fn makespan_bounds() {
+        let layers: Vec<LayerInfo> = (0..8).map(|i| layer(&format!("l{i}"), 64, 64)).collect();
+        let total: u64 = layers.iter().map(layer_flops).sum();
+        let m1 = estimated_makespan(&layers, 1);
+        let m4 = estimated_makespan(&layers, 4);
+        assert_eq!(m1, total);
+        assert!(m4 >= total / 4 && m4 < total);
+    }
+}

@@ -1,0 +1,177 @@
+//! Synthetic corpus generator — line-for-line mirror of
+//! `python/compile/data.py` (see that file and DESIGN.md §4 for the
+//! process definition).  Parity with the python stream is asserted
+//! against golden tokens embedded in the AOT manifest.
+
+use crate::util::prng::{mix64, SplitMix64};
+
+pub const VOCAB: usize = 256;
+
+pub const P_COPY: f64 = 0.04;
+pub const P_MARKOV: f64 = 0.65;
+pub const P_SUPER: f64 = 0.90;
+pub const COPY_BACK: usize = 16;
+pub const COPY_LEN: usize = 8;
+pub const SUPER_MIN_TOKEN: u8 = 248;
+pub const N_SUCCESSORS: u64 = 4;
+
+const SUCC_SALT: u64 = 0xC0FFEE;
+const SUPER_SALT: u64 = 0x5EED_BEEF;
+
+const ZIPF_SCALE: u64 = 1 << 20;
+
+/// Integer cumulative Zipf weights, w_i = ZIPF_SCALE / (i + 4).
+fn zipf_cdf() -> Vec<u64> {
+    let mut cdf = Vec::with_capacity(VOCAB);
+    let mut acc = 0u64;
+    for i in 0..VOCAB as u64 {
+        acc += ZIPF_SCALE / (i + 4);
+        cdf.push(acc);
+    }
+    cdf
+}
+
+/// `slot`-th preferred successor of token `prev`.
+pub fn successor(prev: u8, slot: u64) -> u8 {
+    (mix64(prev as u64 * N_SUCCESSORS + slot + SUCC_SALT) % VOCAB as u64) as u8
+}
+
+pub fn super_successor(prev: u8) -> u8 {
+    (mix64(prev as u64 + SUPER_SALT) % VOCAB as u64) as u8
+}
+
+/// Streaming generator over the corpus process.
+pub struct CorpusGen {
+    rng: SplitMix64,
+    cdf: Vec<u64>,
+    total: u64,
+    history: Vec<u8>,
+    copy_remaining: usize,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64) -> Self {
+        let cdf = zipf_cdf();
+        let total = *cdf.last().unwrap();
+        Self {
+            rng: SplitMix64::new(seed),
+            cdf,
+            total,
+            history: Vec::new(),
+            copy_remaining: 0,
+        }
+    }
+
+    fn zipf_sample(&mut self) -> u8 {
+        let u = self.rng.next_below(self.total);
+        // first index with cdf[i] > u
+        let (mut lo, mut hi) = (0usize, VOCAB - 1);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.cdf[mid] > u {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo as u8
+    }
+
+    pub fn next_token(&mut self) -> u8 {
+        let n = self.history.len();
+        let t = if self.copy_remaining > 0 {
+            self.copy_remaining -= 1;
+            self.history[n - COPY_BACK]
+        } else {
+            let r = self.rng.next_f64();
+            if n > 0 && self.history[n - 1] >= SUPER_MIN_TOKEN && r < P_SUPER {
+                super_successor(self.history[n - 1])
+            } else if n >= COPY_BACK + COPY_LEN && r < P_COPY {
+                self.copy_remaining = COPY_LEN - 1;
+                self.history[n - COPY_BACK]
+            } else if n > 0 && r < P_COPY + P_MARKOV {
+                let slot = self.rng.next_below(N_SUCCESSORS);
+                successor(self.history[n - 1], slot)
+            } else {
+                self.zipf_sample()
+            }
+        };
+        self.history.push(t);
+        t
+    }
+
+    pub fn generate(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| self.next_token()).collect()
+    }
+}
+
+/// Generate `n` tokens for `seed` (one-shot convenience).
+pub fn generate(seed: u64, n: usize) -> Vec<u8> {
+    CorpusGen::new(seed).generate(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(42, 256), generate(42, 256));
+        assert_ne!(generate(42, 256), generate(43, 256));
+    }
+
+    #[test]
+    fn prefix_stability() {
+        // generating more tokens must not change the prefix
+        let a = generate(7, 64);
+        let b = generate(7, 256);
+        assert_eq!(a[..], b[..64]);
+    }
+
+    #[test]
+    fn copy_motifs_present() {
+        let toks = generate(1, 20_000);
+        // count positions where t[i] == t[i-COPY_BACK]; with 4% copy
+        // triggers of length 8 this should be well above chance (~1/256
+        // baseline plus markov recurrence).
+        let hits = (COPY_BACK..toks.len())
+            .filter(|&i| toks[i] == toks[i - COPY_BACK])
+            .count();
+        let rate = hits as f64 / (toks.len() - COPY_BACK) as f64;
+        assert!(rate > 0.10, "copy-rate {rate} too low");
+    }
+
+    #[test]
+    fn super_tokens_chain() {
+        let toks = generate(2, 50_000);
+        let mut chained = 0usize;
+        let mut total = 0usize;
+        for i in 1..toks.len() {
+            if toks[i - 1] >= SUPER_MIN_TOKEN {
+                total += 1;
+                if toks[i] == super_successor(toks[i - 1]) {
+                    chained += 1;
+                }
+            }
+        }
+        assert!(total > 50, "super tokens too rare ({total})");
+        let rate = chained as f64 / total as f64;
+        assert!(rate > 0.8, "super-chain rate {rate}");
+    }
+
+    #[test]
+    fn marginal_is_heavy_tailed() {
+        let toks = generate(3, 100_000);
+        let mut counts = [0usize; VOCAB];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        // the markov/copy layers spread mass via hashing, so the tail is
+        // fatter than pure zipf; still, the lowest-index tokens must be
+        // clearly over-represented vs uniform (16/256 = 6.25%)
+        let head: usize = counts[..16].iter().sum();
+        assert!(head as f64 > 0.10 * toks.len() as f64, "head mass {head}");
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(max > 4.0 * (toks.len() as f64 / VOCAB as f64), "max {max}");
+    }
+}

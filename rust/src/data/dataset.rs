@@ -1,0 +1,107 @@
+//! Token-bin datasets and sequence batching.
+//!
+//! The AOT step writes `train.bin` / `val.bin` / `test.bin` as raw u8
+//! token streams (vocab 256).  This module loads them, slices them into
+//! fixed-length sequences, and samples calibration batches the way the
+//! paper samples C4 sequences (random offsets, seeded).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::prng::Xoshiro256;
+
+/// A loaded token stream.
+#[derive(Clone)]
+pub struct TokenBin {
+    pub tokens: Vec<u8>,
+}
+
+impl TokenBin {
+    pub fn load(path: &Path) -> Result<Self> {
+        let tokens =
+            std::fs::read(path).with_context(|| format!("reading token bin {path:?}"))?;
+        ensure!(!tokens.is_empty(), "empty token bin {path:?}");
+        Ok(Self { tokens })
+    }
+
+    pub fn from_tokens(tokens: Vec<u8>) -> Self {
+        Self { tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Deterministic non-overlapping sequences (evaluation protocol:
+    /// "100 sequences from the validation split").
+    pub fn sequential(&self, seq_len: usize, max_seqs: usize) -> Vec<Vec<u8>> {
+        let n = (self.tokens.len() / seq_len).min(max_seqs);
+        (0..n)
+            .map(|i| self.tokens[i * seq_len..(i + 1) * seq_len].to_vec())
+            .collect()
+    }
+
+    /// Random-offset calibration sample (paper: "randomly sample
+    /// 2048-token sequences from C4"), seeded for reproducibility.
+    pub fn sample(&self, seq_len: usize, n_seqs: usize, seed: u64) -> Vec<Vec<u8>> {
+        assert!(self.tokens.len() > seq_len, "bin shorter than seq_len");
+        let mut rng = Xoshiro256::new(seed);
+        let bound = (self.tokens.len() - seq_len) as u64;
+        (0..n_seqs)
+            .map(|_| {
+                let off = rng.next_below(bound) as usize;
+                self.tokens[off..off + seq_len].to_vec()
+            })
+            .collect()
+    }
+}
+
+/// Group sequences into batches of at most `batch` sequences each.
+pub fn batches(seqs: &[Vec<u8>], batch: usize) -> Vec<&[Vec<u8>]> {
+    assert!(batch > 0);
+    seqs.chunks(batch).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bin(n: usize) -> TokenBin {
+        TokenBin::from_tokens((0..n).map(|i| (i % 256) as u8).collect())
+    }
+
+    #[test]
+    fn sequential_slices() {
+        let b = bin(1000);
+        let seqs = b.sequential(128, 100);
+        assert_eq!(seqs.len(), 7);
+        assert!(seqs.iter().all(|s| s.len() == 128));
+        assert_eq!(seqs[1][0], 128u8);
+        assert_eq!(b.sequential(128, 3).len(), 3);
+    }
+
+    #[test]
+    fn sample_deterministic_and_in_bounds() {
+        let b = bin(5000);
+        let a = b.sample(128, 16, 9);
+        let c = b.sample(128, 16, 9);
+        assert_eq!(a, c);
+        let d = b.sample(128, 16, 10);
+        assert_ne!(a, d);
+        assert!(a.iter().all(|s| s.len() == 128));
+    }
+
+    #[test]
+    fn batching() {
+        let b = bin(5000);
+        let seqs = b.sample(64, 10, 1);
+        let bs = batches(&seqs, 4);
+        assert_eq!(bs.len(), 3);
+        assert_eq!(bs[2].len(), 2);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data substrate: the synthetic corpus generator (python mirror) and
+//! token-bin dataset loading/batching.
+
+pub mod corpus;
+pub mod dataset;
+
+pub use corpus::CorpusGen;
+pub use dataset::TokenBin;

@@ -1,0 +1,82 @@
+//! Evaluation: perplexity (WikiText stand-in), zero-shot task suite, and
+//! per-layer pruning-error summaries (the Fig 2 metric).
+
+pub mod perplexity;
+pub mod zeroshot;
+
+pub use perplexity::{perplexity_native, perplexity_pjrt};
+pub use zeroshot::{evaluate as zero_shot, ZeroShotReport};
+
+use std::collections::BTreeMap;
+
+use crate::calib::Calibration;
+use crate::model::Gpt;
+use crate::pruner::fw_math;
+use crate::tensor::Mat;
+
+/// Per-layer pruning error L(M) = ‖WX − (M⊙W)X‖² for a set of masks,
+/// evaluated in gram form.
+pub fn layer_errors(
+    model: &Gpt,
+    calib: &Calibration,
+    masks: &BTreeMap<String, Mat>,
+) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    for l in model.cfg.layers() {
+        if let Some(mask) = masks.get(&l.name) {
+            let w = model.mat(&l.name);
+            let g = calib.gram(&l.name);
+            out.insert(l.name.clone(), fw_math::objective(w, mask, g));
+        }
+    }
+    out
+}
+
+/// Relative error reduction per layer: (base − new) / base, the Fig 2
+/// y-axis (vs a warmstart/baseline mask set).
+pub fn relative_reductions(
+    base: &BTreeMap<String, f64>,
+    new: &BTreeMap<String, f64>,
+) -> BTreeMap<String, f64> {
+    base.iter()
+        .filter_map(|(k, &b)| {
+            let n = *new.get(k)?;
+            Some((k.clone(), if b > 0.0 { (b - n) / b } else { 0.0 }))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TokenBin;
+    use crate::model::testutil::{random_model, tiny_cfg};
+    use crate::pruner::saliency::{saliency_mask, wanda_scores};
+    use crate::pruner::SparsityPattern;
+
+    #[test]
+    fn layer_errors_and_reductions() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 1);
+        let bin = TokenBin::from_tokens(crate::data::corpus::generate(4, 4096));
+        let calib = Calibration::collect(&model, &bin, 4, 1).unwrap();
+        let pat = SparsityPattern::PerRow { sparsity: 0.5 };
+
+        let mut wanda_masks = BTreeMap::new();
+        let mut dense_masks = BTreeMap::new();
+        for l in cfg.layers() {
+            let w = model.mat(&l.name);
+            let g = calib.gram(&l.name);
+            wanda_masks.insert(l.name.clone(), saliency_mask(&wanda_scores(w, g), &pat));
+            dense_masks.insert(l.name.clone(), Mat::ones(l.d_out, l.d_in));
+        }
+        let errs = layer_errors(&model, &calib, &wanda_masks);
+        assert_eq!(errs.len(), 8);
+        assert!(errs.values().all(|&e| e > 0.0));
+        let dense_errs = layer_errors(&model, &calib, &dense_masks);
+        assert!(dense_errs.values().all(|&e| e.abs() < 1e-1));
+
+        let red = relative_reductions(&errs, &dense_errs);
+        assert!(red.values().all(|&r| r > 0.99), "{red:?}");
+    }
+}

@@ -1,0 +1,32 @@
+//! # SparseFW — pruning LLMs via Frank-Wolfe
+//!
+//! Rust + JAX + Pallas reproduction of *"Don't Be Greedy, Just Relax!
+//! Pruning LLMs via Frank-Wolfe"* (Roux, Zimmer, d'Aspremont, Pokutta,
+//! 2025).  Layer map (DESIGN.md):
+//!
+//! * Layer 1 — Pallas kernels (`python/compile/kernels/`), AOT-lowered.
+//! * Layer 2 — JAX model + FW step (`python/compile/`), AOT-lowered.
+//! * Layer 3 — this crate: the pruning coordinator. Python never runs at
+//!   request time; HLO artifacts execute through PJRT (`runtime`).
+
+pub mod bench;
+pub mod calib;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod model;
+pub mod pruner;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::calib::Calibration;
+    pub use crate::config::Workspace;
+    pub use crate::coordinator::PrunePipeline;
+    pub use crate::model::{Gpt, GptConfig};
+    pub use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+    pub use crate::tensor::Mat;
+}

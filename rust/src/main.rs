@@ -1,0 +1,316 @@
+//! `sparsefw` — CLI launcher for the pruning coordinator.
+//!
+//! Subcommands:
+//!   inspect                      — summarize the artifacts workspace
+//!   prune    [--model --method --pattern --backend …]
+//!   eval     [--model --masks file]
+//!   selfcheck                    — PJRT vs native numerical cross-check
+//!   report-table1 / report-table2 / report-fig2 / report-fig3 / report-fig4
+//!
+//! Common flags: --artifacts DIR (default ./artifacts or
+//! $SPARSEFW_ARTIFACTS), --models a,b, --iters N, --samples N, --fast.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use sparsefw::config::cli::{parse_method, parse_pattern, Args};
+use sparsefw::config::{Backend, Workspace};
+use sparsefw::coordinator::PrunePipeline;
+use sparsefw::eval::{perplexity_native, perplexity_pjrt, zero_shot};
+use sparsefw::model::safetensors::{self, TensorData};
+use sparsefw::prelude::*;
+use sparsefw::report::{figs, tables, ReportCtx};
+use sparsefw::util::json::Json;
+use sparsefw::{info, runtime};
+
+const USAGE: &str = "\
+sparsefw — pruning LLMs via Frank-Wolfe (paper reproduction)
+
+USAGE: sparsefw <subcommand> [flags]
+
+  inspect                         summarize artifacts + models
+  prune      --model M --method {sparsefw|wanda|ria|magnitude|sparsegpt}
+             --pattern {unstructured:S|per-row:S|K:B}
+             [--iters N --alpha A --warmstart wanda|ria|magnitude]
+             [--samples N --seed S --backend native|pjrt|pjrt-chunk]
+             [--out masks.safetensors] [--eval]
+  eval       --model M [--masks masks.safetensors]
+  selfcheck                       cross-check PJRT kernels vs native math
+  report-table1 | report-table2 | report-fig2 | report-fig3 | report-fig4
+             [--models a,b --iters N --samples N --fast]
+
+Flags everywhere: --artifacts DIR (default $SPARSEFW_ARTIFACTS or ./artifacts)
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn open_ws(args: &Args) -> Result<Workspace> {
+    match args.get("artifacts") {
+        Some(dir) => Workspace::open(dir),
+        None => Workspace::open_default(),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("inspect") => inspect(args),
+        Some("prune") => prune(args),
+        Some("eval") => eval_cmd(args),
+        Some("selfcheck") => selfcheck(args),
+        Some(report) if report.starts_with("report-") => report_cmd(args, report),
+        Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let ws = open_ws(args)?;
+    println!("workspace: {:?}", ws.dir);
+    println!("seq_len={} vocab={}", ws.manifest.seq_len(), ws.manifest.vocab());
+    for name in ws.manifest.model_names() {
+        let model = ws.load_model(&name)?;
+        println!(
+            "model {name}: d_model={} layers={} heads={} d_ff={} params={} dense_ppl={:?}",
+            model.cfg.d_model,
+            model.cfg.n_layers,
+            model.cfg.n_heads,
+            model.cfg.d_ff,
+            model.n_params(),
+            ws.manifest.dense_test_ppl(&name),
+        );
+        for l in model.cfg.layers().iter().take(4) {
+            println!("  layer {} ({}) {}x{}", l.name, l.family, l.d_out, l.d_in);
+        }
+        println!("  … {} pruned linears total", model.cfg.layers().len());
+    }
+    Ok(())
+}
+
+fn prune(args: &Args) -> Result<()> {
+    let ws = open_ws(args)?;
+    let model_name = args.get("model").unwrap_or("tiny").to_string();
+    let method = parse_method(args)?;
+    let pattern = parse_pattern(args.get("pattern").unwrap_or("per-row:0.5"))?;
+    let samples = args.get_usize("samples", 128)?;
+    let seed = args.get_u64("seed", 7)?;
+    let backend = Backend::parse(args.get("backend").unwrap_or("native"))?;
+
+    let model = ws.load_model(&model_name)?;
+    info!(
+        "pruning {model_name} with {} to {} ({} backend, {} calib samples)",
+        method.label(),
+        pattern.label(),
+        backend.label(),
+        samples
+    );
+    let calib = Calibration::collect(&model, &ws.train_bin()?, samples, seed)?;
+    let pipe = PrunePipeline::new(&model, &calib);
+
+    let rt;
+    let result = match backend {
+        Backend::Native => pipe.run(&method, &pattern)?,
+        _ => {
+            rt = ws.runtime()?;
+            pipe.run_with_backend(backend, Some(&rt), &method, &pattern)?
+        }
+    };
+
+    let total_err: f64 = result.layer_objs.values().sum();
+    info!(
+        "pruned {} layers in {:.1}s; Σ layer error = {:.4e}{}",
+        result.masks.len(),
+        result.wall_seconds,
+        total_err,
+        result
+            .mean_rel_reduction()
+            .map(|r| format!(", mean reduction vs warmstart = {:.1}%", r * 100.0))
+            .unwrap_or_default()
+    );
+
+    if let Some(out) = args.get("out") {
+        let tensors: BTreeMap<String, TensorData> = result
+            .masks
+            .iter()
+            .map(|(k, m)| {
+                (
+                    k.clone(),
+                    TensorData { shape: vec![m.rows, m.cols], data: m.data.clone() },
+                )
+            })
+            .collect();
+        safetensors::save(std::path::Path::new(out), &tensors)?;
+        info!("masks written to {out}");
+    }
+
+    if args.has("eval") {
+        let pruned = result.apply(&model)?;
+        let ppl = perplexity_native(&pruned, &ws.test_bin()?, args.get_usize("eval-seqs", 64)?)?;
+        let zs = zero_shot(&pruned, 0xE7A1, args.get_usize("zs-items", 60)?)?;
+        println!(
+            "pruned model: ppl={ppl:.3} zero-shot={:.2}% (cloze {:.1}%, copy {:.1}%, bigram {:.1}%)",
+            zs.mean() * 100.0,
+            zs.cloze * 100.0,
+            zs.copy_detect * 100.0,
+            zs.bigram * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let ws = open_ws(args)?;
+    let model_name = args.get("model").unwrap_or("tiny").to_string();
+    let mut model = ws.load_model(&model_name)?;
+
+    if let Some(mask_file) = args.get("masks") {
+        let tensors = safetensors::load(std::path::Path::new(mask_file))?;
+        let masks: BTreeMap<String, Mat> = tensors
+            .into_iter()
+            .map(|(k, t)| Ok((k, t.to_mat()?)))
+            .collect::<Result<_>>()?;
+        model = model.apply_masks(&masks)?;
+        info!("applied {mask_file}; sparsity = {:.3}", model.pruned_sparsity());
+    }
+
+    let test = ws.test_bin()?;
+    let n = args.get_usize("eval-seqs", 64)?;
+    let ppl = if args.has("pjrt") {
+        let rt = ws.runtime()?;
+        perplexity_pjrt(&rt, &model, &model_name, &test, n)?
+    } else {
+        perplexity_native(&model, &test, n)?
+    };
+    let zs = zero_shot(&model, 0xE7A1, args.get_usize("zs-items", 60)?)?;
+    println!(
+        "{model_name}: ppl={ppl:.3} zero-shot={:.2}% (cloze {:.1}%, copy {:.1}%, bigram {:.1}%)",
+        zs.mean() * 100.0,
+        zs.cloze * 100.0,
+        zs.copy_detect * 100.0,
+        zs.bigram * 100.0
+    );
+    Ok(())
+}
+
+/// Cross-check the PJRT (AOT Pallas) kernels against the native math on
+/// real model layers — the fastest way to verify artifacts are sane.
+fn selfcheck(args: &Args) -> Result<()> {
+    use sparsefw::pruner::fw_math;
+    let ws = open_ws(args)?;
+    let rt = ws.runtime()?;
+    let model_name = ws
+        .manifest
+        .model_names()
+        .first()
+        .context("no models in manifest")?
+        .clone();
+    let model = ws.load_model(&model_name)?;
+    let calib = Calibration::collect(&model, &ws.train_bin()?, 8, 3)?;
+
+    let mut worst = 0.0f32;
+    for l in model.cfg.layers().iter().take(4) {
+        let w = model.mat(&l.name);
+        let g = calib.gram(&l.name);
+        let h = fw_math::precompute_h(w, g);
+        let mut m = Mat::ones(l.d_out, l.d_in);
+        for (i, v) in m.data.iter_mut().enumerate() {
+            *v = ((i * 2654435761) % 1000) as f32 / 1000.0;
+        }
+        let g_native = fw_math::fw_grad(w, &m, g, &h);
+        let g_pjrt = rt.fw_grad(w, &m, g, &h)?;
+        let scale = g_native.abs_max().max(1.0);
+        let diff = g_native.max_abs_diff(&g_pjrt) / scale;
+        worst = worst.max(diff);
+        let obj_native = fw_math::objective(w, &m, g);
+        let obj_pjrt = rt.objective(w, &m, g)?;
+        let obj_diff = ((obj_native - obj_pjrt).abs() / (1.0 + obj_native.abs())) as f32;
+        worst = worst.max(obj_diff);
+        println!(
+            "layer {:<16} grad rel-diff {:.2e}, objective rel-diff {:.2e}",
+            l.name, diff, obj_diff
+        );
+    }
+    anyhow::ensure!(worst < 1e-3, "PJRT/native mismatch: {worst}");
+    println!("selfcheck OK (worst rel-diff {worst:.2e})");
+    Ok(())
+}
+
+fn report_cmd(args: &Args, which: &str) -> Result<()> {
+    let ws = open_ws(args)?;
+    let mut ctx = ReportCtx::new(ws, args.get_list("models"))?;
+    if args.has("fast") {
+        ctx.fast();
+    }
+    if let Some(n) = args.get("iters") {
+        ctx.iters = n.parse()?;
+    }
+    if let Some(n) = args.get("samples") {
+        ctx.calib_samples = n.parse()?;
+    }
+    if let Some(n) = args.get("eval-seqs") {
+        ctx.eval_seqs = n.parse()?;
+    }
+    match which {
+        "report-table1" => {
+            tables::table1(&mut ctx)?;
+        }
+        "report-table2" => {
+            tables::table2(&mut ctx)?;
+        }
+        "report-fig2" => {
+            figs::fig2(&mut ctx)?;
+        }
+        "report-fig3" => {
+            let axis = args.get("axis").unwrap_or("both");
+            if axis == "iters" || axis == "both" {
+                let grid = if args.has("fast") {
+                    vec![0, 10, 40]
+                } else {
+                    vec![0, 10, 50, 100, 250, 500, 1000, 2000]
+                };
+                figs::fig3_iters(&mut ctx, &grid)?;
+            }
+            if axis == "samples" || axis == "both" {
+                let grid = if args.has("fast") {
+                    vec![8, 16]
+                } else {
+                    vec![16, 32, 64, 128, 256, 512]
+                };
+                figs::fig3_samples(&mut ctx, &grid)?;
+            }
+        }
+        "report-fig4" => {
+            figs::fig4(&mut ctx)?;
+        }
+        other => bail!("unknown report {other:?}"),
+    }
+    Ok(())
+}
+
+// keep the runtime module linked even in minimal builds
+#[allow(unused_imports)]
+use runtime as _runtime_linked;
+
+#[allow(dead_code)]
+fn _assert_json_api(v: &Json) -> bool {
+    v.is_null()
+}

@@ -1,0 +1,236 @@
+//! Native transformer forward pass (f32), numerically matching
+//! `python/compile/model.py`.
+//!
+//! Used for (a) calibration-activation capture — the X matrices behind
+//! `G = XXᵀ` — and (b) evaluation when the PJRT path is not selected.
+//! An integration test checks logits against the AOT `model_fwd`
+//! executable to ~1e-3.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::{matmul_a_bt, Mat};
+
+use super::Gpt;
+
+/// Per-layer linear inputs captured during a forward pass, keyed by the
+/// pruned-layer param name; each is (L, d_in) for one sequence.
+pub type Captures = BTreeMap<String, Mat>;
+
+pub struct ForwardOutput {
+    /// (L, vocab) logits.
+    pub logits: Mat,
+    /// Present when capture was requested.
+    pub captures: Option<Captures>,
+}
+
+fn layernorm(x: &Mat, g: &Mat, b: &Mat) -> Mat {
+    let eps = 1e-5f32;
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / x.cols as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..x.cols {
+            orow[j] = (row[j] - mean) * inv * g.data[j] + b.data[j];
+        }
+    }
+    out
+}
+
+/// tanh-approximation GELU, identical to the jax model.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Causal multi-head self-attention for one sequence; `h` is (L, d).
+fn attention(h: &Mat, wqkv: &Mat, n_heads: usize) -> Mat {
+    let (l, d) = (h.rows, h.cols);
+    let hd = d / n_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let qkv = matmul_a_bt(h, wqkv); // (L, 3d)
+
+    let mut out = Mat::zeros(l, d);
+    for head in 0..n_heads {
+        let (qoff, koff, voff) = (head * hd, d + head * hd, 2 * d + head * hd);
+        // scores (L, L) lower-triangular
+        let mut scores = Mat::zeros(l, l);
+        for i in 0..l {
+            let qrow = &qkv.row(i)[qoff..qoff + hd];
+            let srow = scores.row_mut(i);
+            for j in 0..=i {
+                let krow = &qkv.row(j)[koff..koff + hd];
+                srow[j] = crate::tensor::matmul::dot(qrow, krow) * scale;
+            }
+            for s in srow.iter_mut().skip(i + 1) {
+                *s = f32::NEG_INFINITY;
+            }
+            softmax_row(&mut srow[..]);
+        }
+        // out_head = scores · V_head
+        for i in 0..l {
+            let srow = scores.row(i);
+            let orow = &mut out.row_mut(i)[head * hd..(head + 1) * hd];
+            for j in 0..=i {
+                let vrow = &qkv.row(j)[voff..voff + hd];
+                let s = srow[j];
+                for (o, v) in orow.iter_mut().zip(vrow) {
+                    *o += s * v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Forward one sequence of token ids; optionally capture pruned-linear
+/// inputs.  Mirrors `model.forward` in python.
+pub fn forward(model: &Gpt, tokens: &[u8], capture: bool) -> ForwardOutput {
+    let cfg = &model.cfg;
+    let l = tokens.len();
+    assert!(l <= cfg.seq_len, "sequence longer than model seq_len");
+    let d = cfg.d_model;
+
+    let tok_emb = model.mat("tok_emb");
+    let pos_emb = model.mat("pos_emb");
+    let mut x = Mat::zeros(l, d);
+    for (i, &t) in tokens.iter().enumerate() {
+        let te = tok_emb.row(t as usize);
+        let pe = pos_emb.row(i);
+        let row = x.row_mut(i);
+        for j in 0..d {
+            row[j] = te[j] + pe[j];
+        }
+    }
+
+    let mut captures: Captures = BTreeMap::new();
+    for bi in 0..cfg.n_layers {
+        let p = format!("blocks.{bi}.");
+        let h = layernorm(&x, model.mat(&(p.clone() + "ln1_g")), model.mat(&(p.clone() + "ln1_b")));
+        if capture {
+            captures.insert(p.clone() + "wqkv", h.clone());
+        }
+        let attn_h = attention(&h, model.mat(&(p.clone() + "wqkv")), cfg.n_heads);
+        if capture {
+            captures.insert(p.clone() + "wo", attn_h.clone());
+        }
+        let proj = matmul_a_bt(&attn_h, model.mat(&(p.clone() + "wo")));
+        x.add_inplace(&proj);
+
+        let h2 = layernorm(&x, model.mat(&(p.clone() + "ln2_g")), model.mat(&(p.clone() + "ln2_b")));
+        if capture {
+            captures.insert(p.clone() + "wup", h2.clone());
+        }
+        let mut up = matmul_a_bt(&h2, model.mat(&(p.clone() + "wup")));
+        for v in &mut up.data {
+            *v = gelu(*v);
+        }
+        if capture {
+            captures.insert(p.clone() + "wdown", up.clone());
+        }
+        let down = matmul_a_bt(&up, model.mat(&(p.clone() + "wdown")));
+        x.add_inplace(&down);
+    }
+
+    let xf = layernorm(&x, model.mat("lnf_g"), model.mat("lnf_b"));
+    let logits = matmul_a_bt(&xf, tok_emb);
+    ForwardOutput {
+        logits,
+        captures: capture.then_some(captures),
+    }
+}
+
+/// Mean next-token negative log-likelihood of one sequence (positions
+/// 0..L-1 predict 1..L), from raw logits.
+pub fn sequence_nll(logits: &Mat, tokens: &[u8]) -> f64 {
+    let l = tokens.len();
+    assert_eq!(logits.rows, l);
+    let mut total = 0.0f64;
+    for i in 0..l - 1 {
+        let row = logits.row(i);
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let logsum = row.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln() + max as f64;
+        let tgt = tokens[i + 1] as usize;
+        total += logsum - row[tgt] as f64;
+    }
+    total / (l - 1) as f64
+}
+
+/// Total log-likelihood of a sequence (for zero-shot A/B scoring).
+pub fn sequence_loglik(logits: &Mat, tokens: &[u8]) -> f64 {
+    -sequence_nll(logits, tokens) * (tokens.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::{random_model, tiny_cfg};
+
+    #[test]
+    fn forward_shapes_and_captures() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 3);
+        let tokens: Vec<u8> = (0..cfg.seq_len as u8).map(|i| i % 60).collect();
+        let out = forward(&model, &tokens, true);
+        assert_eq!(out.logits.rows, cfg.seq_len);
+        assert_eq!(out.logits.cols, cfg.vocab_size);
+        let caps = out.captures.unwrap();
+        assert_eq!(caps.len(), 4 * cfg.n_layers);
+        assert_eq!(caps["blocks.0.wqkv"].cols, cfg.d_model);
+        assert_eq!(caps["blocks.0.wdown"].cols, cfg.d_ff);
+    }
+
+    #[test]
+    fn causality() {
+        // changing a later token must not affect earlier logits
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 4);
+        let mut t1: Vec<u8> = (0..16).map(|i| (i * 3) % 60).collect();
+        let out1 = forward(&model, &t1, false);
+        t1[15] = 59;
+        let out2 = forward(&model, &t1, false);
+        for i in 0..15 {
+            for j in 0..cfg.vocab_size {
+                assert!((out1.logits.at(i, j) - out2.logits.at(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn nll_of_uniform_logits_is_log_vocab() {
+        let cfg = tiny_cfg();
+        let tokens: Vec<u8> = vec![1, 2, 3, 4];
+        let logits = Mat::zeros(4, cfg.vocab_size);
+        let nll = sequence_nll(&logits, &tokens);
+        assert!((nll - (cfg.vocab_size as f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_mask_changes_logits() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 5);
+        let tokens: Vec<u8> = (0..16).collect();
+        let base = forward(&model, &tokens, false);
+        let mut masks = std::collections::BTreeMap::new();
+        masks.insert("blocks.0.wup".to_string(), Mat::zeros(cfg.d_ff, cfg.d_model));
+        let pruned = model.apply_masks(&masks).unwrap();
+        let out = forward(&pruned, &tokens, false);
+        assert!(base.logits.max_abs_diff(&out.logits) > 1e-4);
+    }
+}

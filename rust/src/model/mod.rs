@@ -1,0 +1,282 @@
+//! The mini-GPT pruning target: architecture description, checkpoint
+//! loading, and the native forward pass.
+//!
+//! The architecture mirrors `python/compile/model.py` exactly (pre-LN
+//! transformer, learned positions, tanh-GELU MLP, weight-tied head);
+//! an integration test cross-checks native logits against the AOT
+//! `model_fwd` executable.
+
+pub mod forward;
+pub mod safetensors;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::tensor::Mat;
+use crate::util::json::Json;
+
+/// Architecture hyper-parameters (mirrors `configs.ModelConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GptConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+}
+
+/// One pruned linear layer (name + family + shape), in model order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerInfo {
+    pub name: String,
+    pub family: String,
+    pub d_out: usize,
+    pub d_in: usize,
+}
+
+impl GptConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let g = |k: &str| -> Result<usize> {
+            v.at(&[k]).as_usize().with_context(|| format!("config field {k}"))
+        };
+        Ok(Self {
+            name: v.at(&["name"]).as_str().unwrap_or("unnamed").to_string(),
+            vocab_size: g("vocab_size")?,
+            seq_len: g("seq_len")?,
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            d_ff: g("d_ff")?,
+        })
+    }
+
+    /// Pruned linear layers in canonical order (mirror of
+    /// `ModelConfig.layer_shapes`).
+    pub fn layers(&self) -> Vec<LayerInfo> {
+        let mut out = Vec::with_capacity(4 * self.n_layers);
+        for i in 0..self.n_layers {
+            let p = format!("blocks.{i}.");
+            out.push(LayerInfo {
+                name: format!("{p}wqkv"),
+                family: "attn_qkv".into(),
+                d_out: 3 * self.d_model,
+                d_in: self.d_model,
+            });
+            out.push(LayerInfo {
+                name: format!("{p}wo"),
+                family: "attn_out".into(),
+                d_out: self.d_model,
+                d_in: self.d_model,
+            });
+            out.push(LayerInfo {
+                name: format!("{p}wup"),
+                family: "mlp_up".into(),
+                d_out: self.d_ff,
+                d_in: self.d_model,
+            });
+            out.push(LayerInfo {
+                name: format!("{p}wdown"),
+                family: "mlp_down".into(),
+                d_out: self.d_model,
+                d_in: self.d_ff,
+            });
+        }
+        out
+    }
+
+    /// Canonical parameter order (mirror of `ModelConfig.param_names`) —
+    /// the flattened AOT signature of `model_fwd`.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string(), "pos_emb".to_string()];
+        for i in 0..self.n_layers {
+            let p = format!("blocks.{i}.");
+            for s in ["ln1_g", "ln1_b", "wqkv", "wo", "ln2_g", "ln2_b", "wup", "wdown"] {
+                names.push(format!("{p}{s}"));
+            }
+        }
+        names.push("lnf_g".to_string());
+        names.push("lnf_b".to_string());
+        names
+    }
+}
+
+/// A loaded model: config + parameter matrices.
+#[derive(Clone)]
+pub struct Gpt {
+    pub cfg: GptConfig,
+    pub params: BTreeMap<String, Mat>,
+}
+
+impl Gpt {
+    pub fn load(cfg: GptConfig, checkpoint: &Path) -> Result<Self> {
+        let raw = safetensors::load(checkpoint)?;
+        let mut params = BTreeMap::new();
+        for name in cfg.param_names() {
+            let t = raw
+                .get(&name)
+                .with_context(|| format!("checkpoint missing param {name}"))?;
+            params.insert(name.clone(), t.to_mat()?);
+        }
+        let model = Self { cfg, params };
+        model.validate()?;
+        Ok(model)
+    }
+
+    pub fn from_params(cfg: GptConfig, params: BTreeMap<String, Mat>) -> Result<Self> {
+        let model = Self { cfg, params };
+        model.validate()?;
+        Ok(model)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let c = &self.cfg;
+        ensure!(c.d_model % c.n_heads == 0, "d_model % n_heads != 0");
+        let expect = |name: &str, r: usize, co: usize| -> Result<()> {
+            let m = self.params.get(name).with_context(|| format!("missing {name}"))?;
+            ensure!(
+                m.rows == r && m.cols == co,
+                "param {name}: got {}x{}, want {r}x{co}",
+                m.rows,
+                m.cols
+            );
+            Ok(())
+        };
+        expect("tok_emb", c.vocab_size, c.d_model)?;
+        expect("pos_emb", c.seq_len, c.d_model)?;
+        for l in self.cfg.layers() {
+            expect(&l.name, l.d_out, l.d_in)?;
+        }
+        expect("lnf_g", 1, c.d_model)?;
+        Ok(())
+    }
+
+    pub fn mat(&self, name: &str) -> &Mat {
+        self.params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.values().map(Mat::numel).sum()
+    }
+
+    /// Clone with binary masks multiplied into the pruned linears —
+    /// evaluation-side application of a pruning result.
+    pub fn apply_masks(&self, masks: &BTreeMap<String, Mat>) -> Result<Self> {
+        let mut out = self.clone();
+        for (name, mask) in masks {
+            let w = out
+                .params
+                .get_mut(name)
+                .with_context(|| format!("mask for unknown layer {name}"))?;
+            ensure!(
+                w.rows == mask.rows && w.cols == mask.cols,
+                "mask shape mismatch for {name}"
+            );
+            w.hadamard_inplace(mask);
+        }
+        Ok(out)
+    }
+
+    /// Fraction of zero weights over the pruned linear layers.
+    pub fn pruned_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for l in self.cfg.layers() {
+            let m = self.mat(&l.name);
+            total += m.numel();
+            zeros += m.numel() - m.count_nonzero();
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    //! Randomly-initialized models for unit tests (no artifacts needed).
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    /// Vocab matches the corpus generator (256) so corpus-driven tests
+    /// can feed tokens straight into a test model.
+    pub fn tiny_cfg() -> GptConfig {
+        GptConfig {
+            name: "test".into(),
+            vocab_size: 256,
+            seq_len: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+        }
+    }
+
+    pub fn random_model(cfg: &GptConfig, seed: u64) -> Gpt {
+        let mut rng = Xoshiro256::new(seed);
+        let mut params = BTreeMap::new();
+        let d = cfg.d_model;
+        params.insert("tok_emb".into(), Mat::gaussian(cfg.vocab_size, d, 0.05, &mut rng));
+        params.insert("pos_emb".into(), Mat::gaussian(cfg.seq_len, d, 0.05, &mut rng));
+        for i in 0..cfg.n_layers {
+            let p = format!("blocks.{i}.");
+            params.insert(format!("{p}ln1_g"), Mat::ones(1, d));
+            params.insert(format!("{p}ln1_b"), Mat::zeros(1, d));
+            params.insert(format!("{p}wqkv"), Mat::gaussian(3 * d, d, 0.1, &mut rng));
+            params.insert(format!("{p}wo"), Mat::gaussian(d, d, 0.05, &mut rng));
+            params.insert(format!("{p}ln2_g"), Mat::ones(1, d));
+            params.insert(format!("{p}ln2_b"), Mat::zeros(1, d));
+            params.insert(format!("{p}wup"), Mat::gaussian(cfg.d_ff, d, 0.1, &mut rng));
+            params.insert(format!("{p}wdown"), Mat::gaussian(d, cfg.d_ff, 0.05, &mut rng));
+        }
+        params.insert("lnf_g".into(), Mat::ones(1, d));
+        params.insert("lnf_b".into(), Mat::zeros(1, d));
+        Gpt::from_params(cfg.clone(), params).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn layers_and_params() {
+        let cfg = tiny_cfg();
+        let layers = cfg.layers();
+        assert_eq!(layers.len(), 8);
+        assert_eq!(layers[0].d_out, 48);
+        assert_eq!(cfg.param_names().len(), 2 + 8 * 2 + 2);
+    }
+
+    #[test]
+    fn mask_application() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 1);
+        let mut masks = BTreeMap::new();
+        masks.insert("blocks.0.wqkv".to_string(), Mat::zeros(48, 16));
+        let pruned = model.apply_masks(&masks).unwrap();
+        assert_eq!(pruned.mat("blocks.0.wqkv").count_nonzero(), 0);
+        assert!(pruned.pruned_sparsity() > 0.0);
+        // unmasked layers untouched
+        assert_eq!(
+            pruned.mat("blocks.1.wqkv").data,
+            model.mat("blocks.1.wqkv").data
+        );
+    }
+
+    #[test]
+    fn validate_rejects_bad_shape() {
+        let cfg = tiny_cfg();
+        let mut model = random_model(&cfg, 2);
+        model.params.insert("tok_emb".into(), Mat::zeros(3, 3));
+        assert!(Gpt::from_params(cfg, model.params).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! safetensors reader/writer (f32 only) — counterpart of
+//! `python/compile/checkpoint.py`.
+//!
+//! Format: `[8-byte LE header length][JSON header][raw data]`, header
+//! maps tensor name → {dtype, shape, data_offsets}.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::Mat;
+use crate::util::json::{self, Json};
+
+/// A named tensor of arbitrary rank (we materialize rank ≤ 2 as [`Mat`]).
+#[derive(Clone, Debug)]
+pub struct TensorData {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorData {
+    /// View as a matrix: rank-2 as-is, rank-1 as a single row.
+    pub fn to_mat(&self) -> Result<Mat> {
+        match self.shape.len() {
+            1 => Ok(Mat::from_vec(1, self.shape[0], self.data.clone())),
+            2 => Ok(Mat::from_vec(self.shape[0], self.shape[1], self.data.clone())),
+            r => bail!("cannot view rank-{r} tensor as Mat"),
+        }
+    }
+}
+
+pub fn load(path: &Path) -> Result<BTreeMap<String, TensorData>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    ensure!(bytes.len() >= 8, "file too short");
+    let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+    ensure!(hlen <= bytes.len().saturating_sub(8), "header length out of range");
+    let header_str = std::str::from_utf8(&bytes[8..8 + hlen]).context("header not utf-8")?;
+    let header = json::parse(header_str).context("parsing safetensors header")?;
+    let data = &bytes[8 + hlen..];
+
+    let mut out = BTreeMap::new();
+    let obj = header.as_obj().context("header must be an object")?;
+    for (name, meta) in obj {
+        if name == "__metadata__" {
+            continue;
+        }
+        let dtype = meta.at(&["dtype"]).as_str().context("missing dtype")?;
+        ensure!(dtype == "F32", "unsupported dtype {dtype} for {name}");
+        let shape: Vec<usize> = meta
+            .at(&["shape"])
+            .as_arr()
+            .context("missing shape")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let offs = meta.at(&["data_offsets"]).as_arr().context("missing offsets")?;
+        ensure!(offs.len() == 2, "bad data_offsets");
+        let (b, e) = (offs[0].as_usize().unwrap(), offs[1].as_usize().unwrap());
+        ensure!(e <= data.len() && b <= e, "offsets out of range for {name}");
+        let numel: usize = shape.iter().product();
+        ensure!(e - b == numel * 4, "size mismatch for {name}");
+        let mut vals = Vec::with_capacity(numel);
+        for chunk in data[b..e].chunks_exact(4) {
+            vals.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        out.insert(name.clone(), TensorData { shape, data: vals });
+    }
+    Ok(out)
+}
+
+pub fn save(path: &Path, tensors: &BTreeMap<String, TensorData>) -> Result<()> {
+    let mut header = BTreeMap::new();
+    let mut offset = 0usize;
+    let mut blobs: Vec<&[f32]> = Vec::new();
+    for (name, t) in tensors {
+        let nbytes = t.data.len() * 4;
+        header.insert(
+            name.clone(),
+            Json::obj(vec![
+                ("dtype", Json::Str("F32".into())),
+                ("shape", Json::Arr(t.shape.iter().map(|&s| Json::from(s)).collect())),
+                (
+                    "data_offsets",
+                    Json::Arr(vec![Json::from(offset), Json::from(offset + nbytes)]),
+                ),
+            ]),
+        );
+        offset += nbytes;
+        blobs.push(&t.data);
+    }
+    let mut hjson = json::to_string(&Json::Obj(header)).into_bytes();
+    let pad = (8 - hjson.len() % 8) % 8;
+    hjson.extend(std::iter::repeat(b' ').take(pad));
+
+    let mut out = Vec::with_capacity(8 + hjson.len() + offset);
+    out.extend_from_slice(&(hjson.len() as u64).to_le_bytes());
+    out.extend_from_slice(&hjson);
+    for blob in blobs {
+        for &x in blob {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, out).with_context(|| format!("writing {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sparsefw_st_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.safetensors");
+        let mut tensors = BTreeMap::new();
+        tensors.insert(
+            "a.weight".to_string(),
+            TensorData { shape: vec![2, 3], data: vec![1.0, -2.0, 3.5, 0.0, 1e-8, -1e8] },
+        );
+        tensors.insert(
+            "b".to_string(),
+            TensorData { shape: vec![4], data: vec![0.5; 4] },
+        );
+        save(&path, &tensors).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded["a.weight"].shape, vec![2, 3]);
+        assert_eq!(loaded["a.weight"].data, tensors["a.weight"].data);
+        assert_eq!(loaded["b"].to_mat().unwrap().rows, 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("sparsefw_st_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.safetensors");
+        std::fs::write(&path, b"short").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, [0xFFu8; 64]).unwrap();
+        assert!(load(&path).is_err());
+    }
+}

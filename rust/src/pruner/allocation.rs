@@ -1,0 +1,166 @@
+//! Non-uniform layerwise sparsity allocation (OWL-style).
+//!
+//! The paper (and Wanda) use a *uniform* sparsity budget per layer; Yin
+//! et al. 2023 ("Outlier Weighed Layerwise sparsity"), cited in the
+//! paper's related work, show that skewing the budget by each layer's
+//! activation-outlier mass helps at high sparsity.  This module
+//! implements that allocation as a drop-in for any pruning method here:
+//!
+//! 1. per layer, compute the **outlier ratio** — the fraction of Wanda
+//!    saliencies `|W_ij|·‖X_j‖` exceeding `λ × layer mean`;
+//! 2. convert ratios to per-layer sparsity shifts, linearly rescaled to
+//!    `[−max_shift, +max_shift]` with outlier-heavy layers getting
+//!    *lower* sparsity;
+//! 3. re-center the shifts so the weighted mean sparsity equals the
+//!    target (the total parameter budget is preserved exactly).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::calib::Calibration;
+use crate::model::Gpt;
+use crate::pruner::saliency::wanda_scores;
+
+#[derive(Clone, Debug)]
+pub struct OwlConfig {
+    /// Outlier threshold multiplier λ (Yin et al. use M=5..7).
+    pub lambda: f64,
+    /// Maximum deviation of any layer from the target sparsity.
+    pub max_shift: f64,
+}
+
+impl Default for OwlConfig {
+    fn default() -> Self {
+        Self { lambda: 5.0, max_shift: 0.08 }
+    }
+}
+
+/// Fraction of saliencies above `λ ×` the layer mean.
+pub fn outlier_ratio(saliency: &[f32], lambda: f64) -> f64 {
+    if saliency.is_empty() {
+        return 0.0;
+    }
+    let mean = saliency.iter().map(|&x| x as f64).sum::<f64>() / saliency.len() as f64;
+    let thresh = lambda * mean;
+    saliency.iter().filter(|&&x| (x as f64) > thresh).count() as f64 / saliency.len() as f64
+}
+
+/// Per-layer sparsities averaging (parameter-weighted) to `target`.
+pub fn owl_sparsities(
+    model: &Gpt,
+    calib: &Calibration,
+    target: f64,
+    cfg: &OwlConfig,
+) -> Result<BTreeMap<String, f64>> {
+    ensure!((0.0..1.0).contains(&target), "target sparsity out of range");
+    let layers = model.cfg.layers();
+    let mut ratios = Vec::with_capacity(layers.len());
+    let mut weights = Vec::with_capacity(layers.len());
+    for l in &layers {
+        let s = wanda_scores(model.mat(&l.name), calib.gram(&l.name));
+        ratios.push(outlier_ratio(&s.data, cfg.lambda));
+        weights.push((l.d_out * l.d_in) as f64);
+    }
+
+    let (rmin, rmax) = ratios
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(a, b), &r| (a.min(r), b.max(r)));
+    let span = (rmax - rmin).max(1e-12);
+
+    // outlier-heavy layer → lower sparsity (keep more weights there)
+    let raw: Vec<f64> = ratios
+        .iter()
+        .map(|&r| -cfg.max_shift * (2.0 * (r - rmin) / span - 1.0))
+        .collect();
+    // re-center: parameter-weighted mean shift must be zero
+    let wsum: f64 = weights.iter().sum();
+    let mean_shift: f64 = raw.iter().zip(&weights).map(|(s, w)| s * w).sum::<f64>() / wsum;
+
+    let mut out = BTreeMap::new();
+    for ((l, s), _w) in layers.iter().zip(&raw).zip(&weights) {
+        let sp = (target + (s - mean_shift)).clamp(0.0, 0.999);
+        out.insert(l.name.clone(), sp);
+    }
+    Ok(out)
+}
+
+/// Parameter-weighted mean sparsity of an allocation (sanity metric).
+pub fn mean_sparsity(model: &Gpt, alloc: &BTreeMap<String, f64>) -> f64 {
+    let mut acc = 0.0;
+    let mut wsum = 0.0;
+    for l in model.cfg.layers() {
+        let w = (l.d_out * l.d_in) as f64;
+        acc += alloc[&l.name] * w;
+        wsum += w;
+    }
+    acc / wsum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TokenBin;
+    use crate::model::testutil::{random_model, tiny_cfg};
+
+    fn setup() -> (Gpt, Calibration) {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 3);
+        let bin = TokenBin::from_tokens(crate::data::corpus::generate(8, 8192));
+        let calib = Calibration::collect(&model, &bin, 6, 4).unwrap();
+        (model, calib)
+    }
+
+    #[test]
+    fn outlier_ratio_basics() {
+        assert_eq!(outlier_ratio(&[], 5.0), 0.0);
+        assert_eq!(outlier_ratio(&[1.0; 100], 5.0), 0.0); // no outliers
+        let mut v = vec![1.0f32; 99];
+        v.push(1000.0);
+        assert!((outlier_ratio(&v, 5.0) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allocation_preserves_budget_and_bounds() {
+        let (model, calib) = setup();
+        let cfg = OwlConfig::default();
+        for target in [0.5, 0.6, 0.7] {
+            let alloc = owl_sparsities(&model, &calib, target, &cfg).unwrap();
+            assert_eq!(alloc.len(), model.cfg.layers().len());
+            let mean = mean_sparsity(&model, &alloc);
+            assert!((mean - target).abs() < 1e-9, "mean {mean} vs {target}");
+            for (_name, &s) in &alloc {
+                assert!(s >= target - 2.0 * cfg.max_shift - 1e-9);
+                assert!(s <= target + 2.0 * cfg.max_shift + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn outlier_heavy_layer_gets_lower_sparsity() {
+        let (mut model, calib) = setup();
+        // inflate one layer's weights so its wanda saliencies have a
+        // heavy outlier tail
+        {
+            let w = model.params.get_mut("blocks.0.wup").unwrap();
+            for (i, v) in w.data.iter_mut().enumerate() {
+                if i % 97 == 0 {
+                    *v *= 50.0;
+                }
+            }
+        }
+        let alloc = owl_sparsities(&model, &calib, 0.6, &OwlConfig::default()).unwrap();
+        let heavy = alloc["blocks.0.wup"];
+        let mean = mean_sparsity(&model, &alloc);
+        assert!(
+            heavy < mean,
+            "outlier-heavy layer got sparsity {heavy} >= mean {mean}"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_target() {
+        let (model, calib) = setup();
+        assert!(owl_sparsities(&model, &calib, 1.5, &OwlConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Sparsity patterns and keep-budget accounting.
+//!
+//! The paper's constraint sets (§2.2, Appendix D):
+//!
+//! * **Unstructured** — `‖M‖₀ ≤ k` over the whole matrix (C_k).
+//! * **Per-row** — equal budget per row (what Wanda enforces; decouples
+//!   the rows).
+//! * **n:m semi-structured** — keep at most `keep` nonzeros in every
+//!   block of `block` consecutive entries of each row (C_{n:m});
+//!   "2:4" = `{ keep: 2, block: 4 }`.
+//!
+//! [`BudgetSpec`] turns a pattern (minus any α-fixed coordinates) into
+//! explicit per-unit keep counts consumed by the LMO and the rounding
+//! step.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SparsityPattern {
+    /// Global budget: keep `round((1−sparsity)·numel)` weights.
+    Unstructured { sparsity: f64 },
+    /// Per-row budget: keep `round((1−sparsity)·d_in)` weights per row.
+    PerRow { sparsity: f64 },
+    /// Keep `keep` of every `block` consecutive entries per row.
+    NM { keep: usize, block: usize },
+}
+
+impl SparsityPattern {
+    pub fn validate(&self, d_in: usize) -> Result<()> {
+        match self {
+            SparsityPattern::Unstructured { sparsity } | SparsityPattern::PerRow { sparsity } => {
+                ensure!(
+                    (0.0..=1.0).contains(sparsity),
+                    "sparsity must be in [0,1], got {sparsity}"
+                );
+            }
+            SparsityPattern::NM { keep, block } => {
+                ensure!(*block > 0 && keep <= block, "bad n:m pattern {keep}:{block}");
+                ensure!(
+                    d_in % *block == 0,
+                    "d_in={d_in} not divisible by block={block}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total kept weights for a (d_out × d_in) layer.
+    pub fn keep_total(&self, d_out: usize, d_in: usize) -> usize {
+        match self {
+            SparsityPattern::Unstructured { sparsity } => {
+                (((1.0 - sparsity) * (d_out * d_in) as f64).round() as usize).min(d_out * d_in)
+            }
+            SparsityPattern::PerRow { sparsity } => {
+                let per_row = ((1.0 - sparsity) * d_in as f64).round() as usize;
+                per_row.min(d_in) * d_out
+            }
+            SparsityPattern::NM { keep, block } => d_out * (d_in / block) * keep,
+        }
+    }
+
+    /// Achieved sparsity for a layer shape (reporting convenience).
+    pub fn sparsity(&self, d_out: usize, d_in: usize) -> f64 {
+        1.0 - self.keep_total(d_out, d_in) as f64 / (d_out * d_in) as f64
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SparsityPattern::Unstructured { sparsity } => format!("unstructured-{:.0}%", sparsity * 100.0),
+            SparsityPattern::PerRow { sparsity } => format!("per-row-{:.0}%", sparsity * 100.0),
+            SparsityPattern::NM { keep, block } => format!("{keep}:{block}"),
+        }
+    }
+}
+
+/// Explicit keep budgets per constraint unit, after removing α-fixed
+/// coordinates from the pattern's budget.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BudgetSpec {
+    /// One global budget over all free coordinates.
+    Global { keep: usize },
+    /// keep[i] for row i.
+    PerRow { keep: Vec<usize> },
+    /// keep[row * n_blocks + b] for block b of row `row`.
+    NM { keep: Vec<usize>, block: usize },
+}
+
+impl BudgetSpec {
+    /// Budgets of `pattern` with the ones of `fixed` already spent.
+    /// `fixed` must itself satisfy the pattern (checked by saturating
+    /// subtraction + debug assert).
+    pub fn free_budgets(pattern: &SparsityPattern, d_out: usize, d_in: usize, fixed: &Mat) -> Self {
+        assert_eq!((fixed.rows, fixed.cols), (d_out, d_in));
+        match pattern {
+            SparsityPattern::Unstructured { .. } => {
+                let used = fixed.data.iter().filter(|&&x| x != 0.0).count();
+                let total = pattern.keep_total(d_out, d_in);
+                debug_assert!(used <= total, "fixed mask exceeds budget");
+                BudgetSpec::Global { keep: total.saturating_sub(used) }
+            }
+            SparsityPattern::PerRow { sparsity } => {
+                let per_row = (((1.0 - sparsity) * d_in as f64).round() as usize).min(d_in);
+                let keep = (0..d_out)
+                    .map(|i| {
+                        let used = fixed.row(i).iter().filter(|&&x| x != 0.0).count();
+                        per_row.saturating_sub(used)
+                    })
+                    .collect();
+                BudgetSpec::PerRow { keep }
+            }
+            SparsityPattern::NM { keep, block } => {
+                let nb = d_in / block;
+                let mut keeps = Vec::with_capacity(d_out * nb);
+                for i in 0..d_out {
+                    let row = fixed.row(i);
+                    for b in 0..nb {
+                        let used = row[b * block..(b + 1) * block]
+                            .iter()
+                            .filter(|&&x| x != 0.0)
+                            .count();
+                        keeps.push(keep.saturating_sub(used));
+                    }
+                }
+                BudgetSpec::NM { keep: keeps, block: *block }
+            }
+        }
+    }
+
+    /// Budgets of the raw pattern (no fixed coordinates).
+    pub fn full(pattern: &SparsityPattern, d_out: usize, d_in: usize) -> Self {
+        Self::free_budgets(pattern, d_out, d_in, &Mat::zeros(d_out, d_in))
+    }
+
+    pub fn total(&self) -> usize {
+        match self {
+            BudgetSpec::Global { keep } => *keep,
+            BudgetSpec::PerRow { keep } => keep.iter().sum(),
+            BudgetSpec::NM { keep, .. } => keep.iter().sum(),
+        }
+    }
+}
+
+/// Check a binary mask against a pattern's constraints.
+pub fn mask_satisfies(mask: &Mat, pattern: &SparsityPattern) -> bool {
+    let (d_out, d_in) = (mask.rows, mask.cols);
+    if mask.data.iter().any(|&x| x != 0.0 && x != 1.0) {
+        return false;
+    }
+    match pattern {
+        SparsityPattern::Unstructured { .. } => {
+            mask.count_nonzero() <= pattern.keep_total(d_out, d_in)
+        }
+        SparsityPattern::PerRow { sparsity } => {
+            let per_row = (((1.0 - sparsity) * d_in as f64).round() as usize).min(d_in);
+            (0..d_out).all(|i| mask.row(i).iter().filter(|&&x| x != 0.0).count() <= per_row)
+        }
+        SparsityPattern::NM { keep, block } => {
+            if d_in % block != 0 {
+                return false;
+            }
+            (0..d_out).all(|i| {
+                mask.row(i)
+                    .chunks(*block)
+                    .all(|c| c.iter().filter(|&&x| x != 0.0).count() <= *keep)
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_totals() {
+        let p = SparsityPattern::Unstructured { sparsity: 0.6 };
+        assert_eq!(p.keep_total(10, 10), 40);
+        let p = SparsityPattern::PerRow { sparsity: 0.5 };
+        assert_eq!(p.keep_total(4, 10), 20);
+        let p = SparsityPattern::NM { keep: 2, block: 4 };
+        assert_eq!(p.keep_total(4, 16), 32);
+        assert!((p.sparsity(4, 16) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(SparsityPattern::NM { keep: 2, block: 4 }.validate(16).is_ok());
+        assert!(SparsityPattern::NM { keep: 2, block: 4 }.validate(18).is_err());
+        assert!(SparsityPattern::NM { keep: 5, block: 4 }.validate(16).is_err());
+        assert!(SparsityPattern::Unstructured { sparsity: 1.5 }.validate(8).is_err());
+    }
+
+    #[test]
+    fn free_budgets_subtract_fixed() {
+        let mut fixed = Mat::zeros(2, 8);
+        fixed.data[0] = 1.0; // row 0, block 0
+        fixed.data[9] = 1.0; // row 1, block 0 (col 1)
+        let b = BudgetSpec::free_budgets(
+            &SparsityPattern::PerRow { sparsity: 0.5 },
+            2,
+            8,
+            &fixed,
+        );
+        assert_eq!(b, BudgetSpec::PerRow { keep: vec![3, 3] });
+
+        let b = BudgetSpec::free_budgets(&SparsityPattern::NM { keep: 2, block: 4 }, 2, 8, &fixed);
+        assert_eq!(
+            b,
+            BudgetSpec::NM { keep: vec![1, 2, 1, 2], block: 4 }
+        );
+
+        let b = BudgetSpec::free_budgets(
+            &SparsityPattern::Unstructured { sparsity: 0.5 },
+            2,
+            8,
+            &fixed,
+        );
+        assert_eq!(b.total(), 6);
+    }
+
+    #[test]
+    fn satisfies_checks() {
+        let mut m = Mat::zeros(2, 8);
+        for j in 0..4 {
+            m.data[j] = 1.0;
+        }
+        assert!(mask_satisfies(&m, &SparsityPattern::Unstructured { sparsity: 0.5 }));
+        assert!(!mask_satisfies(&m, &SparsityPattern::NM { keep: 2, block: 4 }));
+        m.data[2] = 0.5;
+        assert!(!mask_satisfies(&m, &SparsityPattern::Unstructured { sparsity: 0.0 }));
+    }
+}

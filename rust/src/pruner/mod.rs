@@ -1,0 +1,112 @@
+//! Pruning methods: the paper's SparseFW plus every baseline it
+//! compares against or discusses (§2.1).
+//!
+//! * [`sparsefw`] — Frank-Wolfe on the convex relaxation (the paper's
+//!   contribution; Algorithms 1–2).
+//! * [`saliency`] — Wanda / RIA / magnitude greedy mask selection.
+//! * [`sparsegpt`] — greedy-with-reconstruction baseline (context).
+//! * [`lmo`], [`rounding`], [`mask`] — the constraint-set machinery.
+//! * [`fw_math`] — native mirror of the Pallas kernels.
+
+pub mod allocation;
+pub mod fw_math;
+pub mod lmo;
+pub mod mask;
+pub mod rounding;
+pub mod saliency;
+pub mod sparsefw;
+pub mod sparsegpt;
+
+pub use mask::{BudgetSpec, SparsityPattern};
+pub use sparsefw::{FwKernels, FwTrace, LayerResult, NativeKernels, SparseFwConfig, Warmstart};
+
+use crate::tensor::Mat;
+use anyhow::Result;
+
+/// A pruning method as selected in configs / CLI / reports.
+#[derive(Clone, Debug)]
+pub enum PruneMethod {
+    Magnitude,
+    Wanda,
+    Ria,
+    SparseFw(SparseFwConfig),
+    /// Greedy + weight reconstruction; `percdamp`, `blocksize`.
+    SparseGpt { percdamp: f64, blocksize: usize },
+}
+
+impl PruneMethod {
+    pub fn label(&self) -> String {
+        match self {
+            PruneMethod::Magnitude => "magnitude".into(),
+            PruneMethod::Wanda => "wanda".into(),
+            PruneMethod::Ria => "ria".into(),
+            PruneMethod::SparseFw(c) => format!("sparsefw({})", c.warmstart.label()),
+            PruneMethod::SparseGpt { .. } => "sparsegpt".into(),
+        }
+    }
+
+    /// Prune one layer. Returns the binary mask plus (for reconstruction
+    /// methods) replacement weights.
+    pub fn prune_layer<K: FwKernels + ?Sized>(
+        &self,
+        kernels: &K,
+        w: &Mat,
+        g: &Mat,
+        pattern: &SparsityPattern,
+    ) -> Result<LayerPruneOutput> {
+        match self {
+            PruneMethod::Magnitude => {
+                let m = saliency::saliency_mask(&saliency::magnitude_scores(w), pattern);
+                LayerPruneOutput::from_mask(kernels, w, g, m)
+            }
+            PruneMethod::Wanda => {
+                let m = saliency::saliency_mask(&saliency::wanda_scores(w, g), pattern);
+                LayerPruneOutput::from_mask(kernels, w, g, m)
+            }
+            PruneMethod::Ria => {
+                let m = saliency::saliency_mask(&saliency::ria_scores(w, g), pattern);
+                LayerPruneOutput::from_mask(kernels, w, g, m)
+            }
+            PruneMethod::SparseFw(cfg) => {
+                let r = sparsefw::run_layer(kernels, w, g, pattern, cfg)?;
+                Ok(LayerPruneOutput {
+                    obj: r.final_obj,
+                    warm_obj: Some(r.warm_obj),
+                    trace: r.trace,
+                    mask: r.mask,
+                    new_weights: None,
+                })
+            }
+            PruneMethod::SparseGpt { percdamp, blocksize } => {
+                let r = sparsegpt::sparsegpt(w, g, pattern, *percdamp, *blocksize)?;
+                let obj = kernels.objective(w, &r.mask, g)?;
+                Ok(LayerPruneOutput {
+                    obj,
+                    warm_obj: None,
+                    trace: None,
+                    mask: r.mask,
+                    new_weights: Some(r.weights),
+                })
+            }
+        }
+    }
+}
+
+/// Result of pruning one layer with any method.
+pub struct LayerPruneOutput {
+    pub mask: Mat,
+    /// L(mask) under the layer objective.
+    pub obj: f64,
+    /// L(warmstart) when the method has one (SparseFW).
+    pub warm_obj: Option<f64>,
+    /// Reconstructed weights (SparseGPT only).
+    pub new_weights: Option<Mat>,
+    pub trace: Option<FwTrace>,
+}
+
+impl LayerPruneOutput {
+    fn from_mask<K: FwKernels + ?Sized>(kernels: &K, w: &Mat, g: &Mat, mask: Mat) -> Result<Self> {
+        let obj = kernels.objective(w, &mask, g)?;
+        Ok(Self { mask, obj, warm_obj: None, new_weights: None, trace: None })
+    }
+}

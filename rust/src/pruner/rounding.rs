@@ -1,0 +1,108 @@
+//! Thresholding: rounding a relaxed mask `M_T ∈ [0,1]` to a binary mask
+//! satisfying the original constraints (Algorithm 1 line 7 / Algorithm 2
+//! line 10): keep the budget-many *largest* entries per constraint unit.
+//!
+//! `forbid` coordinates (the α-fixed set, which lives outside the free
+//! budget) are never selected.  The Lemma 2 analysis bounds the error
+//! this rounding introduces via the threshold residual
+//! `‖M_T − round(M_T)‖₁`, reported by [`threshold_residual`].
+
+use crate::pruner::mask::BudgetSpec;
+use crate::tensor::topk::top_k_indices;
+use crate::tensor::Mat;
+
+/// Round `m` (relaxed, in [0,1]) to a binary mask under `budget`,
+/// never selecting coordinates where `forbid` is nonzero.
+pub fn threshold(m: &Mat, budget: &BudgetSpec, forbid: Option<&Mat>) -> Mat {
+    let keyed: Vec<f32> = match forbid {
+        None => m.data.clone(),
+        Some(f) => {
+            assert_eq!((f.rows, f.cols), (m.rows, m.cols));
+            m.data
+                .iter()
+                .zip(&f.data)
+                .map(|(&v, &fb)| if fb != 0.0 { f32::NEG_INFINITY } else { v })
+                .collect()
+        }
+    };
+    let mut out = Mat::zeros(m.rows, m.cols);
+    match budget {
+        BudgetSpec::Global { keep } => {
+            for idx in top_k_indices(&keyed, *keep) {
+                if keyed[idx] > f32::NEG_INFINITY {
+                    out.data[idx] = 1.0;
+                }
+            }
+        }
+        BudgetSpec::PerRow { keep } => {
+            assert_eq!(keep.len(), m.rows);
+            for i in 0..m.rows {
+                let row = &keyed[i * m.cols..(i + 1) * m.cols];
+                for j in top_k_indices(row, keep[i]) {
+                    if row[j] > f32::NEG_INFINITY {
+                        out.data[i * m.cols + j] = 1.0;
+                    }
+                }
+            }
+        }
+        BudgetSpec::NM { keep, block } => {
+            let nb = m.cols / block;
+            assert_eq!(keep.len(), m.rows * nb);
+            for i in 0..m.rows {
+                for b in 0..nb {
+                    let off = i * m.cols + b * block;
+                    let seg = &keyed[off..off + block];
+                    for j in top_k_indices(seg, keep[i * nb + b]) {
+                        if seg[j] > f32::NEG_INFINITY {
+                            out.data[off + j] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Mean ℓ₁ threshold residual `‖M − round(M)‖₁ / numel` (Fig 4 right).
+pub fn threshold_residual(m: &Mat, rounded: &Mat) -> f64 {
+    m.l1_dist(rounded) / m.numel() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::mask::{mask_satisfies, SparsityPattern};
+
+    #[test]
+    fn keeps_largest() {
+        let m = Mat::from_vec(1, 5, vec![0.9, 0.1, 0.5, 0.8, 0.2]);
+        let r = threshold(&m, &BudgetSpec::Global { keep: 2 }, None);
+        assert_eq!(r.data, vec![1.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn respects_forbid() {
+        let m = Mat::from_vec(1, 4, vec![0.9, 0.8, 0.7, 0.6]);
+        let f = Mat::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]);
+        let r = threshold(&m, &BudgetSpec::Global { keep: 2 }, Some(&f));
+        assert_eq!(r.data, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn nm_rounding_is_feasible() {
+        let m = Mat::from_vec(2, 8, (0..16).map(|i| (i as f32 * 0.31) % 1.0).collect());
+        let pat = SparsityPattern::NM { keep: 2, block: 4 };
+        let b = BudgetSpec::full(&pat, 2, 8);
+        let r = threshold(&m, &b, None);
+        assert!(mask_satisfies(&r, &pat));
+        assert_eq!(r.count_nonzero(), 8);
+    }
+
+    #[test]
+    fn residual_zero_for_binary() {
+        let m = Mat::from_vec(1, 4, vec![1.0, 0.0, 1.0, 0.0]);
+        let r = threshold(&m, &BudgetSpec::Global { keep: 2 }, None);
+        assert_eq!(threshold_residual(&m, &r), 0.0);
+    }
+}

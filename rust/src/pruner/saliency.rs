@@ -1,0 +1,146 @@
+//! Saliency scores and the greedy baseline pruners built on them.
+//!
+//! * **Magnitude** — `S_ij = |W_ij|` (the classical criterion; the paper
+//!   notes it fails at LLM scale due to activation outliers).
+//! * **Wanda** (Sun et al., 2023) — `S_ij = |W_ij|·‖X_j,:‖₂`.  Note
+//!   `‖X_j,:‖₂ = √G_jj`, so scores come straight from the gram matrix.
+//! * **RIA** (Zhang et al., 2024) — Wanda on the relative-importance
+//!   rescaled weights (paper Eq. 6):
+//!   `S_ij = |W_ij|·(1/Σ_k|W_ik| + 1/Σ_k|W_kj|)·‖X_j,:‖₂`.
+//!
+//! A baseline *mask* is the per-unit top-k of the saliency matrix under
+//! the requested [`SparsityPattern`] — exactly the greedy solution of
+//! (MASK SELECTION) that §2.1 of the paper derives for these methods.
+
+use crate::pruner::mask::{BudgetSpec, SparsityPattern};
+use crate::pruner::rounding::threshold;
+use crate::tensor::Mat;
+
+/// Per-column activation norms `‖X_j,:‖₂ = sqrt(G_jj)`.
+pub fn act_norms(g: &Mat) -> Vec<f32> {
+    assert_eq!(g.rows, g.cols);
+    (0..g.rows).map(|j| g.at(j, j).max(0.0).sqrt()).collect()
+}
+
+pub fn magnitude_scores(w: &Mat) -> Mat {
+    Mat::from_vec(w.rows, w.cols, w.data.iter().map(|x| x.abs()).collect())
+}
+
+pub fn wanda_scores(w: &Mat, g: &Mat) -> Mat {
+    let norms = act_norms(g);
+    assert_eq!(norms.len(), w.cols);
+    Mat::from_fn(w.rows, w.cols, |i, j| w.at(i, j).abs() * norms[j])
+}
+
+pub fn ria_scores(w: &Mat, g: &Mat) -> Mat {
+    let norms = act_norms(g);
+    let row_sums: Vec<f32> = (0..w.rows)
+        .map(|i| w.row(i).iter().map(|x| x.abs()).sum::<f32>().max(1e-12))
+        .collect();
+    let mut col_sums = vec![0.0f32; w.cols];
+    for i in 0..w.rows {
+        for (j, cs) in col_sums.iter_mut().enumerate() {
+            *cs += w.at(i, j).abs();
+        }
+    }
+    for cs in &mut col_sums {
+        *cs = cs.max(1e-12);
+    }
+    Mat::from_fn(w.rows, w.cols, |i, j| {
+        w.at(i, j).abs() * (1.0 / row_sums[i] + 1.0 / col_sums[j]) * norms[j]
+    })
+}
+
+/// Greedy baseline mask: top-k saliency per constraint unit.
+pub fn saliency_mask(scores: &Mat, pattern: &SparsityPattern) -> Mat {
+    let budget = BudgetSpec::full(pattern, scores.rows, scores.cols);
+    threshold(scores, &budget, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::mask::mask_satisfies;
+    use crate::tensor::matmul_a_bt;
+    use crate::util::prng::Xoshiro256;
+
+    fn setup(dout: usize, din: usize, b: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let x = Mat::gaussian(din, b, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x);
+        (w, g)
+    }
+
+    #[test]
+    fn wanda_reduces_to_magnitude_for_isotropic_inputs() {
+        let mut rng = Xoshiro256::new(1);
+        let w = Mat::gaussian(6, 8, 1.0, &mut rng);
+        let g = {
+            let mut g = Mat::zeros(8, 8);
+            for j in 0..8 {
+                *g.at_mut(j, j) = 4.0; // equal column norms
+            }
+            g
+        };
+        let sw = wanda_scores(&w, &g);
+        let sm = magnitude_scores(&w);
+        let pat = SparsityPattern::PerRow { sparsity: 0.5 };
+        assert_eq!(saliency_mask(&sw, &pat).data, saliency_mask(&sm, &pat).data);
+    }
+
+    #[test]
+    fn wanda_prefers_high_activation_columns() {
+        // |w| identical everywhere; G has one huge-diag column -> every
+        // row must keep that column first.
+        let w = Mat::ones(4, 6);
+        let mut g = Mat::zeros(6, 6);
+        for j in 0..6 {
+            *g.at_mut(j, j) = if j == 3 { 100.0 } else { 1.0 };
+        }
+        let m = saliency_mask(
+            &wanda_scores(&w, &g),
+            &SparsityPattern::PerRow { sparsity: 5.0 / 6.0 },
+        );
+        for i in 0..4 {
+            assert_eq!(m.at(i, 3), 1.0, "row {i} must keep col 3");
+            assert_eq!(m.row(i).iter().filter(|&&x| x != 0.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn ria_is_wanda_on_rescaled_weights() {
+        let (w, g) = setup(5, 8, 32, 7);
+        // paper §2.1: RIA == Wanda applied to W′ with
+        // W′_ij = W_ij (1/row_i + 1/col_j)
+        let row_sums: Vec<f32> = (0..5).map(|i| w.row(i).iter().map(|x| x.abs()).sum()).collect();
+        let mut col_sums = vec![0.0f32; 8];
+        for i in 0..5 {
+            for j in 0..8 {
+                col_sums[j] += w.at(i, j).abs();
+            }
+        }
+        let wp = Mat::from_fn(5, 8, |i, j| {
+            w.at(i, j) * (1.0 / row_sums[i] + 1.0 / col_sums[j])
+        });
+        let s1 = ria_scores(&w, &g);
+        let s2 = wanda_scores(&wp, &g);
+        assert!(s1.max_abs_diff(&s2) < 1e-5);
+    }
+
+    #[test]
+    fn masks_satisfy_patterns() {
+        let (w, g) = setup(8, 16, 64, 3);
+        for pat in [
+            SparsityPattern::Unstructured { sparsity: 0.5 },
+            SparsityPattern::PerRow { sparsity: 0.6 },
+            SparsityPattern::NM { keep: 2, block: 4 },
+        ] {
+            for scores in [magnitude_scores(&w), wanda_scores(&w, &g), ria_scores(&w, &g)] {
+                let m = saliency_mask(&scores, &pat);
+                assert!(mask_satisfies(&m, &pat), "{pat:?}");
+                assert_eq!(m.count_nonzero(), pat.keep_total(8, 16));
+            }
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! SparseGPT-style greedy pruning with weight reconstruction
+//! (Frantar & Alistarh, 2023) — the greedy-with-reconstruction baseline
+//! the paper discusses in §2.1 (implemented for context/ablations; the
+//! paper's main comparisons are against pure mask-selection methods).
+//!
+//! Faithful port of the blocked OBS procedure: with damped Hessian
+//! `H = XXᵀ + λI`, compute `Hinv = H⁻¹` and its upper Cholesky factor
+//! `U` (`Hinv = UᵀU`).  Columns are processed left-to-right in blocks;
+//! within a block, pruning scores are `w_j²/U_jj²`, pruned weights are
+//! zeroed and their error `w_j/U_jj` propagated into the still-unseen
+//! columns through row `j` of `U` — the cheap sequential form of the
+//! optimal-brain-surgeon update.
+
+use anyhow::{anyhow, Result};
+
+use crate::pruner::mask::SparsityPattern;
+use crate::tensor::linalg::{chol_inverse, cholesky, MatF64};
+use crate::tensor::topk::top_k_indices;
+use crate::tensor::Mat;
+use crate::util::pool::parallel_for;
+use std::sync::Mutex;
+
+pub struct SparseGptResult {
+    /// Binary mask of kept weights.
+    pub mask: Mat,
+    /// Reconstructed weights (kept weights updated to compensate).
+    pub weights: Mat,
+}
+
+/// Run SparseGPT on one layer.
+///
+/// `percdamp` is the relative dampening λ = percdamp·mean(diag G)
+/// (0.01 in the reference implementation); `blocksize` the lazy-update
+/// block width (128 in the reference implementation).
+pub fn sparsegpt(
+    w: &Mat,
+    g: &Mat,
+    pattern: &SparsityPattern,
+    percdamp: f64,
+    blocksize: usize,
+) -> Result<SparseGptResult> {
+    pattern.validate(w.cols)?;
+    let din = w.cols;
+    let mut h = MatF64::from_mat(g);
+    let damp = percdamp * h.mean_diag() + 1e-10;
+    h.add_diag(damp);
+    let hinv = chol_inverse(&h).ok_or_else(|| anyhow!("gram matrix not PD after damping"))?;
+    // upper factor U with Hinv = UᵀU  (U = Lᵀ for Hinv = LLᵀ)
+    let l = cholesky(&hinv).ok_or_else(|| anyhow!("Hinv not PD"))?;
+    let u = {
+        let mut u = MatF64::zeros(din);
+        for i in 0..din {
+            for j in 0..=i {
+                *u.at_mut(j, i) = l.at(i, j);
+            }
+        }
+        u
+    };
+
+    // per-block prune quota
+    let prune_per_block = |j1: usize, j2: usize| -> usize {
+        let width = j2 - j1;
+        match pattern {
+            SparsityPattern::Unstructured { sparsity } | SparsityPattern::PerRow { sparsity } => {
+                (sparsity * width as f64).round() as usize
+            }
+            SparsityPattern::NM { .. } => 0, // handled at m-block granularity below
+        }
+    };
+
+    let mask = Mutex::new(Mat::zeros(w.rows, w.cols));
+    let weights = Mutex::new(Mat::zeros(w.rows, w.cols));
+
+    parallel_for(w.rows, |i| {
+        let mut row: Vec<f64> = w.row(i).iter().map(|&x| x as f64).collect();
+        let mut keep = vec![true; din];
+
+        let mut j1 = 0;
+        while j1 < din {
+            let j2 = (j1 + blocksize).min(din);
+            // --- select prune set for this block from current weights ---
+            let scores: Vec<f32> = (j1..j2)
+                .map(|j| {
+                    let d = u.at(j, j);
+                    (-(row[j] * row[j]) / (d * d)) as f32 // negated: top-k of -score = smallest scores
+                })
+                .collect();
+            match pattern {
+                SparsityPattern::Unstructured { .. } | SparsityPattern::PerRow { .. } => {
+                    let np = prune_per_block(j1, j2).min(j2 - j1);
+                    for jj in top_k_indices(&scores, np) {
+                        keep[j1 + jj] = false;
+                    }
+                }
+                SparsityPattern::NM { keep: km, block } => {
+                    let mut b = j1;
+                    while b < j2 {
+                        let be = (b + block).min(j2);
+                        let seg: Vec<f32> = scores[b - j1..be - j1].to_vec();
+                        let np = (be - b).saturating_sub(*km);
+                        for jj in top_k_indices(&seg, np) {
+                            keep[b + jj] = false;
+                        }
+                        b = be;
+                    }
+                }
+            }
+            // --- sequential OBS elimination within the block ---
+            for j in j1..j2 {
+                let d = u.at(j, j);
+                if !keep[j] {
+                    let err = row[j] / d;
+                    row[j] = 0.0;
+                    // propagate into all later columns via row j of U
+                    for t in j + 1..din {
+                        row[t] -= err * u.at(j, t);
+                    }
+                }
+            }
+            j1 = j2;
+        }
+
+        let mut mk = mask.lock().unwrap();
+        let mut wt = weights.lock().unwrap();
+        for j in 0..din {
+            *mk.at_mut(i, j) = if keep[j] { 1.0 } else { 0.0 };
+            *wt.at_mut(i, j) = row[j] as f32;
+        }
+    });
+
+    Ok(SparseGptResult {
+        mask: mask.into_inner().unwrap(),
+        weights: weights.into_inner().unwrap(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::fw_math::objective_from_x;
+    use crate::tensor::{matmul, matmul_a_bt};
+    use crate::util::prng::Xoshiro256;
+
+    fn setup(dout: usize, din: usize, b: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let x = Mat::gaussian(din, b, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x);
+        (w, x, g)
+    }
+
+    #[test]
+    fn respects_nm_pattern() {
+        let (w, _x, g) = setup(8, 16, 64, 1);
+        let pat = SparsityPattern::NM { keep: 2, block: 4 };
+        let r = sparsegpt(&w, &g, &pat, 0.01, 8).unwrap();
+        assert!(crate::pruner::mask::mask_satisfies(&r.mask, &pat));
+        // reconstructed weights are zero exactly off-mask
+        for (m, wv) in r.mask.data.iter().zip(&r.weights.data) {
+            if *m == 0.0 {
+                assert_eq!(*wv, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruction_beats_pure_masking() {
+        // the OBS update must reduce ‖WX − ŴX‖² vs just zeroing the same
+        // weights
+        let (w, x, g) = setup(12, 32, 128, 2);
+        let pat = SparsityPattern::PerRow { sparsity: 0.5 };
+        let r = sparsegpt(&w, &g, &pat, 0.01, 8).unwrap();
+        let masked_err = objective_from_x(&w, &r.mask, &x);
+        let wx = matmul(&w, &x);
+        let rx = matmul(&r.weights, &x);
+        let recon_err: f64 = wx
+            .data
+            .iter()
+            .zip(&rx.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(
+            recon_err < masked_err,
+            "recon {recon_err} !< masked {masked_err}"
+        );
+    }
+
+    #[test]
+    fn single_prune_matches_obs_formula() {
+        // with blocksize = din and exactly one prune per row, SparseGPT's
+        // first elimination must agree with the closed-form OBS choice
+        // argmin_q w_q² / [H⁻¹]_qq
+        let (w, _x, g) = setup(4, 8, 64, 3);
+        let pat = SparsityPattern::PerRow { sparsity: 1.0 / 8.0 };
+        let r = sparsegpt(&w, &g, &pat, 0.01, 8).unwrap();
+
+        let mut h = MatF64::from_mat(&g);
+        h.add_diag(0.01 * h.mean_diag() + 1e-10);
+        let hinv = chol_inverse(&h).unwrap();
+        for i in 0..4 {
+            // OBS score uses Hinv diag; SparseGPT's in-order variant uses
+            // U_jj² which equals [Hinv]_jj only for the *last* column, so
+            // we only check that exactly one weight was pruned and that
+            // it has a low OBS score rank (sanity, not exact equality).
+            let pruned: Vec<usize> = (0..8).filter(|&j| r.mask.at(i, j) == 0.0).collect();
+            assert_eq!(pruned.len(), 1, "row {i}");
+            let scores: Vec<f64> = (0..8)
+                .map(|j| (w.at(i, j) as f64).powi(2) / hinv.at(j, j))
+                .collect();
+            let mut order: Vec<usize> = (0..8).collect();
+            order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+            let rank = order.iter().position(|&j| j == pruned[0]).unwrap();
+            assert!(rank <= 3, "row {i}: pruned col has OBS rank {rank}");
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Figure regenerators: Fig 2 (per-layer error reduction), Fig 3
+//! (perplexity vs iterations / vs samples), Fig 4 (continuous vs
+//! thresholded error + threshold residual).
+
+use anyhow::Result;
+
+use crate::coordinator::PrunePipeline;
+use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::util::json::Json;
+
+use super::{print_table, ReportCtx};
+
+/// Fig 2: relative reduction in pruning error vs the Wanda warmstart,
+/// per layer, grouped by matrix family (60% sparsity in the paper).
+pub fn fig2(ctx: &mut ReportCtx) -> Result<Json> {
+    let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
+    let model_name = ctx.models[0].clone();
+    ctx.calibration(&model_name)?;
+    let model = &ctx.loaded[&model_name];
+    let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
+
+    let method = PruneMethod::SparseFw(SparseFwConfig {
+        iters: ctx.iters,
+        warmstart: Warmstart::Wanda,
+        ..Default::default()
+    });
+    let res = PrunePipeline::new(model, calib).run(&method, &pattern)?;
+
+    let layers = model.cfg.layers();
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for l in &layers {
+        let warm = res.warm_objs[&l.name];
+        let fin = res.layer_objs[&l.name];
+        let red = if warm > 0.0 { (warm - fin) / warm } else { 0.0 };
+        let block: String = l
+            .name
+            .split('.')
+            .nth(1)
+            .unwrap_or("?")
+            .to_string();
+        rows.push(vec![
+            block.clone(),
+            l.family.clone(),
+            format!("{:.4e}", warm),
+            format!("{:.4e}", fin),
+            format!("{:.1}%", red * 100.0),
+        ]);
+        out.push(Json::obj(vec![
+            ("layer", l.name.as_str().into()),
+            ("block", block.parse::<usize>().unwrap_or(0).into()),
+            ("family", l.family.as_str().into()),
+            ("warm_err", warm.into()),
+            ("final_err", fin.into()),
+            ("rel_reduction", red.into()),
+        ]));
+    }
+
+    println!(
+        "\nFig 2 — per-layer pruning-error reduction vs Wanda warmstart ({model_name}, {}, {} iters)",
+        pattern.label(),
+        ctx.iters
+    );
+    print_table(&["block", "family", "warm err", "sparsefw err", "reduction"], &rows);
+    println!(
+        "mean relative reduction: {:.1}%",
+        res.mean_rel_reduction().unwrap_or(0.0) * 100.0
+    );
+
+    let report = Json::obj(vec![
+        ("figure", "fig2".into()),
+        ("model", model_name.as_str().into()),
+        ("pattern", pattern.label().into()),
+        ("iters", ctx.iters.into()),
+        ("mean_rel_reduction", res.mean_rel_reduction().unwrap_or(0.0).into()),
+        ("layers", Json::Arr(out)),
+    ]);
+    ctx.write_json("fig2", &report)?;
+    Ok(report)
+}
+
+/// Fig 3 left: perplexity vs number of FW iterations (2:4 pattern).
+pub fn fig3_iters(ctx: &mut ReportCtx, iter_grid: &[usize]) -> Result<Json> {
+    let pattern = SparsityPattern::NM { keep: 2, block: 4 };
+    let model_name = ctx.models[0].clone();
+    ctx.calibration(&model_name)?;
+
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &iters in iter_grid {
+        let method = PruneMethod::SparseFw(SparseFwConfig {
+            iters,
+            warmstart: Warmstart::Wanda,
+            ..Default::default()
+        });
+        let model = &ctx.loaded[&model_name];
+        let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
+        let res = PrunePipeline::new(model, calib).run(&method, &pattern)?;
+        let pruned = res.apply(model)?;
+        let (ppl, _) = ctx.evaluate(&pruned)?;
+        crate::info!("fig3-iters: T={iters} -> ppl {ppl:.3}");
+        rows.push(vec![iters.to_string(), format!("{ppl:.3}")]);
+        out.push(Json::obj(vec![("iters", iters.into()), ("ppl", ppl.into())]));
+    }
+
+    println!(
+        "\nFig 3 (left) — perplexity vs SparseFW iterations ({model_name}, {}, {} samples)",
+        pattern.label(),
+        ctx.calib_samples
+    );
+    print_table(&["iters", "ppl"], &rows);
+
+    let report = Json::obj(vec![
+        ("figure", "fig3_iters".into()),
+        ("model", model_name.as_str().into()),
+        ("series", Json::Arr(out)),
+    ]);
+    ctx.write_json("fig3_iters", &report)?;
+    Ok(report)
+}
+
+/// Fig 3 right: perplexity vs number of calibration samples for both
+/// SparseFW and the Wanda baseline (the paper's sample-efficiency
+/// contrast).
+pub fn fig3_samples(ctx: &mut ReportCtx, sample_grid: &[usize]) -> Result<Json> {
+    let pattern = SparsityPattern::NM { keep: 2, block: 4 };
+    let model_name = ctx.models[0].clone();
+
+    let mut rows = Vec::new();
+    let mut out = Vec::new();
+    for &samples in sample_grid {
+        ctx.calibration_with(&model_name, samples, ctx.calib_seed)?;
+        let model = &ctx.loaded[&model_name];
+        let calib = &ctx.calib_cache[&(model_name.clone(), samples, ctx.calib_seed)];
+        let pipe = PrunePipeline::new(model, calib);
+
+        let fw = pipe.run(
+            &PruneMethod::SparseFw(SparseFwConfig {
+                iters: ctx.iters,
+                warmstart: Warmstart::Wanda,
+                ..Default::default()
+            }),
+            &pattern,
+        )?;
+        let wanda = pipe.run(&PruneMethod::Wanda, &pattern)?;
+        let fw_ppl = ctx.evaluate(&fw.apply(model)?)?.0;
+        let wanda_ppl = ctx.evaluate(&wanda.apply(model)?)?.0;
+        crate::info!("fig3-samples: N={samples} -> sparsefw {fw_ppl:.3}, wanda {wanda_ppl:.3}");
+        rows.push(vec![
+            samples.to_string(),
+            format!("{fw_ppl:.3}"),
+            format!("{wanda_ppl:.3}"),
+        ]);
+        out.push(Json::obj(vec![
+            ("samples", samples.into()),
+            ("sparsefw_ppl", fw_ppl.into()),
+            ("wanda_ppl", wanda_ppl.into()),
+        ]));
+    }
+
+    println!(
+        "\nFig 3 (right) — perplexity vs calibration samples ({model_name}, {}, {} iters)",
+        pattern.label(),
+        ctx.iters
+    );
+    print_table(&["samples", "sparsefw", "wanda"], &rows);
+
+    let report = Json::obj(vec![
+        ("figure", "fig3_samples".into()),
+        ("model", model_name.as_str().into()),
+        ("series", Json::Arr(out)),
+    ]);
+    ctx.write_json("fig3_samples", &report)?;
+    Ok(report)
+}
+
+/// Fig 4: per-matrix relative error reduction of the continuous vs the
+/// thresholded iterate over FW iterations (left), and the mean ℓ₁
+/// threshold residual (right).  α = 0 and unstructured C_k, matching
+/// the paper's "optimized towards 60% unstructured" setting.
+pub fn fig4(ctx: &mut ReportCtx) -> Result<Json> {
+    let pattern = SparsityPattern::Unstructured { sparsity: 0.6 };
+    let model_name = ctx.models[0].clone();
+    ctx.calibration(&model_name)?;
+    let model = &ctx.loaded[&model_name];
+    let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
+
+    let trace_every = (ctx.iters / 25).max(1);
+    let method = PruneMethod::SparseFw(SparseFwConfig {
+        iters: ctx.iters,
+        alpha: 0.0,
+        warmstart: Warmstart::Wanda,
+        trace_every,
+        use_chunk: false,
+        keep_best: false, // raw Algorithm 1 behaviour for the trace
+        line_search: false,
+    });
+    let res = PrunePipeline::new(model, calib).run(&method, &pattern)?;
+
+    // median across matrices at each trace point
+    let names: Vec<&String> = res.traces.keys().collect();
+    anyhow::ensure!(!names.is_empty(), "no traces recorded");
+    let t_axis = res.traces[names[0]].iters.clone();
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    for (ti, &t) in t_axis.iter().enumerate() {
+        let mut cont_red = Vec::new();
+        let mut thr_red = Vec::new();
+        let mut resid = Vec::new();
+        for name in &names {
+            let tr = &res.traces[*name];
+            let warm = res.warm_objs[*name];
+            if warm <= 0.0 || ti >= tr.iters.len() {
+                continue;
+            }
+            cont_red.push((warm - tr.continuous_obj[ti]) / warm);
+            thr_red.push((warm - tr.thresholded_obj[ti]) / warm);
+            resid.push(tr.residual[ti]);
+        }
+        let med = |v: &mut Vec<f64>| -> f64 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[v.len() / 2]
+        };
+        let (c, th, r) = (med(&mut cont_red), med(&mut thr_red), med(&mut resid));
+        rows.push(vec![
+            t.to_string(),
+            format!("{:.1}%", c * 100.0),
+            format!("{:.1}%", th * 100.0),
+            format!("{:.4}", r),
+        ]);
+        series.push(Json::obj(vec![
+            ("iter", t.into()),
+            ("continuous_reduction_median", c.into()),
+            ("thresholded_reduction_median", th.into()),
+            ("residual_median", r.into()),
+        ]));
+    }
+
+    println!(
+        "\nFig 4 — median across {} matrices ({model_name}, {}, α=0)",
+        names.len(),
+        pattern.label()
+    );
+    print_table(
+        &["iter", "continuous red.", "thresholded red.", "ℓ₁ residual"],
+        &rows,
+    );
+
+    let report = Json::obj(vec![
+        ("figure", "fig4".into()),
+        ("model", model_name.as_str().into()),
+        ("pattern", pattern.label().into()),
+        ("series_median", Json::Arr(series)),
+    ]);
+    ctx.write_json("fig4", &report)?;
+    Ok(report)
+}

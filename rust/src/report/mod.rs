@@ -1,0 +1,166 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §5 experiment index):
+//!
+//! * [`tables::table1`] — perplexity + zero-shot accuracy grid.
+//! * [`tables::table2`] — α-ratio ablation.
+//! * [`figs::fig2`]     — per-layer relative error reduction by family.
+//! * [`figs::fig3`]     — perplexity vs iterations / vs samples.
+//! * [`figs::fig4`]     — continuous vs thresholded error + residual.
+//!
+//! Each regenerator prints the paper-style rows/series to stdout and
+//! writes machine-readable JSON under `reports/`.
+
+pub mod figs;
+pub mod tables;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::calib::Calibration;
+use crate::config::Workspace;
+use crate::data::TokenBin;
+use crate::eval::{perplexity_native, zero_shot};
+use crate::model::Gpt;
+use crate::util::json::{self, Json};
+
+/// Shared context: workspace, loaded models, calibration cache, eval
+/// data, and report-size knobs.
+pub struct ReportCtx {
+    pub ws: Workspace,
+    pub models: Vec<String>,
+    pub test: TokenBin,
+    pub train: TokenBin,
+    /// Calibration samples (paper: 256; we default lower for wall-time).
+    pub calib_samples: usize,
+    pub calib_seed: u64,
+    /// SparseFW iterations (paper: 2000).
+    pub iters: usize,
+    /// Perplexity eval sequences (paper: 100 validation sequences).
+    pub eval_seqs: usize,
+    /// Items per zero-shot task.
+    pub zs_items: usize,
+    pub out_dir: PathBuf,
+
+    pub(crate) loaded: BTreeMap<String, Gpt>,
+    pub(crate) calib_cache: BTreeMap<(String, usize, u64), Calibration>,
+}
+
+impl ReportCtx {
+    pub fn new(ws: Workspace, models: Vec<String>) -> Result<Self> {
+        let models = if models.is_empty() {
+            ws.manifest.model_names()
+        } else {
+            models
+        };
+        let test = ws.test_bin()?;
+        let train = ws.train_bin()?;
+        Ok(Self {
+            ws,
+            models,
+            test,
+            train,
+            calib_samples: 128,
+            calib_seed: 7,
+            iters: 400,
+            eval_seqs: 64,
+            zs_items: 60,
+            out_dir: PathBuf::from("reports"),
+            loaded: BTreeMap::new(),
+            calib_cache: BTreeMap::new(),
+        })
+    }
+
+    /// Shrink every knob for smoke-tests (`--fast`).
+    pub fn fast(&mut self) {
+        self.calib_samples = 16;
+        self.iters = 40;
+        self.eval_seqs = 16;
+        self.zs_items = 12;
+    }
+
+    pub fn model(&mut self, name: &str) -> Result<&Gpt> {
+        if !self.loaded.contains_key(name) {
+            let m = self.ws.load_model(name)?;
+            crate::info!(
+                "loaded model {name}: {} params, dense ppl (build-time) = {:?}",
+                m.n_params(),
+                self.ws.manifest.dense_test_ppl(name)
+            );
+            self.loaded.insert(name.to_string(), m);
+        }
+        Ok(&self.loaded[name])
+    }
+
+    pub fn calibration(&mut self, name: &str) -> Result<&Calibration> {
+        self.calibration_with(name, self.calib_samples, self.calib_seed)
+    }
+
+    pub fn calibration_with(
+        &mut self,
+        name: &str,
+        samples: usize,
+        seed: u64,
+    ) -> Result<&Calibration> {
+        let key = (name.to_string(), samples, seed);
+        if !self.calib_cache.contains_key(&key) {
+            self.model(name)?; // ensure loaded
+            let model = &self.loaded[name];
+            let t0 = std::time::Instant::now();
+            let calib = Calibration::collect(model, &self.train, samples, seed)?;
+            crate::info!(
+                "calibrated {name} with {samples} samples in {:.1}s",
+                t0.elapsed().as_secs_f64()
+            );
+            self.calib_cache.insert(key.clone(), calib);
+        }
+        Ok(&self.calib_cache[&key])
+    }
+
+    /// Perplexity + mean zero-shot accuracy of a (masked) model.
+    pub fn evaluate(&self, model: &Gpt) -> Result<(f64, f64)> {
+        let ppl = perplexity_native(model, &self.test, self.eval_seqs)?;
+        let zs = zero_shot(model, 0xE7A1, self.zs_items)?;
+        Ok((ppl, zs.mean()))
+    }
+
+    /// Write a report JSON under `reports/`.
+    pub fn write_json(&self, name: &str, v: &Json) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("creating {:?}", self.out_dir))?;
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, json::to_string_pretty(v))?;
+        crate::info!("wrote {path:?}");
+        Ok(path)
+    }
+}
+
+/// Fixed-width table printing helper.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            if i == 0 {
+                s.push_str(&format!("{:<w$}", c, w = widths[i]));
+            } else {
+                s.push_str(&format!("  {:>w$}", c, w = widths[i]));
+            }
+        }
+        s
+    };
+    let hdr: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    println!("{}", line(&hdr));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    for row in rows {
+        println!("{}", line(row));
+    }
+}

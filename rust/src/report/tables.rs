@@ -1,0 +1,176 @@
+//! Table 1 (method × sparsity grid) and Table 2 (α ablation).
+
+use anyhow::Result;
+
+use crate::coordinator::PrunePipeline;
+use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::util::json::Json;
+
+use super::{print_table, ReportCtx};
+
+/// The paper's sparsity regimes.  Protocol note (DESIGN.md §5): the
+/// baselines use the per-row budget (Wanda's native protocol, Sun et
+/// al. 2023); SparseFW relaxes over the same per-row polytope so keep
+/// budgets match exactly across methods.
+pub fn sparsity_grid() -> Vec<SparsityPattern> {
+    vec![
+        SparsityPattern::PerRow { sparsity: 0.5 },
+        SparsityPattern::PerRow { sparsity: 0.6 },
+        SparsityPattern::NM { keep: 2, block: 4 },
+    ]
+}
+
+fn table1_methods(iters: usize) -> Vec<PruneMethod> {
+    vec![
+        PruneMethod::Wanda,
+        PruneMethod::Ria,
+        PruneMethod::SparseFw(SparseFwConfig {
+            iters,
+            warmstart: Warmstart::Wanda,
+            ..Default::default()
+        }),
+        PruneMethod::SparseFw(SparseFwConfig {
+            iters,
+            warmstart: Warmstart::Ria,
+            ..Default::default()
+        }),
+    ]
+}
+
+/// Table 1: perplexity (↓) and zero-shot accuracy (↑) for every model ×
+/// sparsity × method.
+pub fn table1(ctx: &mut ReportCtx) -> Result<Json> {
+    let methods = table1_methods(ctx.iters);
+    let mut rows_ppl: Vec<Vec<String>> = Vec::new();
+    let mut rows_acc: Vec<Vec<String>> = Vec::new();
+    let mut out = Vec::new();
+
+    for pattern in sparsity_grid() {
+        for method in &methods {
+            let mut row_p = vec![method.label(), pattern.label()];
+            let mut row_a = vec![method.label(), pattern.label()];
+            for model_name in ctx.models.clone() {
+                ctx.calibration(&model_name)?;
+                let model = &ctx.loaded[&model_name];
+                let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
+                let t0 = std::time::Instant::now();
+                let res = PrunePipeline::new(model, calib).run(method, &pattern)?;
+                let pruned = res.apply(model)?;
+                let (ppl, acc) = ctx.evaluate(&pruned)?;
+                crate::info!(
+                    "table1: {model_name} {} {} -> ppl {ppl:.2} acc {:.1}% ({:.1}s prune)",
+                    method.label(),
+                    pattern.label(),
+                    acc * 100.0,
+                    res.wall_seconds,
+                );
+                let _ = t0;
+                row_p.push(format!("{ppl:.2}"));
+                row_a.push(format!("{:.2}", acc * 100.0));
+                out.push(Json::obj(vec![
+                    ("model", model_name.as_str().into()),
+                    ("method", method.label().into()),
+                    ("pattern", pattern.label().into()),
+                    ("ppl", ppl.into()),
+                    ("zero_shot_acc", acc.into()),
+                    ("mean_rel_reduction", res.mean_rel_reduction().unwrap_or(0.0).into()),
+                    ("prune_seconds", res.wall_seconds.into()),
+                ]));
+            }
+            rows_ppl.push(row_p);
+            rows_acc.push(row_a);
+        }
+    }
+
+    let mut headers = vec!["method", "sparsity"];
+    let model_names: Vec<&str> = ctx.models.iter().map(|s| s.as_str()).collect();
+    headers.extend(model_names);
+
+    println!("\nTable 1 — WikiText-proxy perplexity (lower is better)");
+    print_table(&headers, &rows_ppl);
+    println!("\nTable 1 — zero-shot accuracy % (higher is better)");
+    print_table(&headers, &rows_acc);
+
+    let report = Json::obj(vec![
+        ("table", "table1".into()),
+        ("iters", ctx.iters.into()),
+        ("calib_samples", ctx.calib_samples.into()),
+        ("rows", Json::Arr(out)),
+    ]);
+    ctx.write_json("table1", &report)?;
+    Ok(report)
+}
+
+/// Table 2: the α (fraction of fixed high-saliency weights) ablation at
+/// 60% per-row and 2:4 sparsity, Wanda warmstart.
+pub fn table2(ctx: &mut ReportCtx) -> Result<Json> {
+    let alphas = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0];
+    let patterns = [
+        SparsityPattern::NM { keep: 2, block: 4 },
+        SparsityPattern::PerRow { sparsity: 0.6 },
+    ];
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut out = Vec::new();
+
+    for pattern in &patterns {
+        for model_name in ctx.models.clone() {
+            ctx.calibration(&model_name)?;
+            let mut row = vec![model_name.clone(), pattern.label()];
+            for &alpha in &alphas {
+                let method = PruneMethod::SparseFw(SparseFwConfig {
+                    iters: ctx.iters,
+                    alpha,
+                    warmstart: Warmstart::Wanda,
+                    // raw Algorithm 2: the ablation's point is that small
+                    // α *degrades* quality despite lower local error —
+                    // the keep_best guard would mask exactly that.
+                    keep_best: false,
+                    ..Default::default()
+                });
+                let model = &ctx.loaded[&model_name];
+                let calib =
+                    &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
+                let res = PrunePipeline::new(model, calib).run(&method, pattern)?;
+                let pruned = res.apply(model)?;
+                let (ppl, _) = ctx.evaluate(&pruned)?;
+                crate::info!(
+                    "table2: {model_name} {} alpha={alpha} -> ppl {ppl:.2}",
+                    pattern.label()
+                );
+                row.push(format!("{ppl:.2}"));
+                out.push(Json::obj(vec![
+                    ("model", model_name.as_str().into()),
+                    ("pattern", pattern.label().into()),
+                    ("alpha", alpha.into()),
+                    ("ppl", ppl.into()),
+                ]));
+            }
+            rows.push(row);
+        }
+    }
+
+    let mut headers = vec!["model", "sparsity"];
+    let alpha_labels: Vec<String> = alphas
+        .iter()
+        .map(|a| {
+            if *a == 1.0 {
+                "1.0 (=Wanda)".to_string()
+            } else {
+                format!("{a}")
+            }
+        })
+        .collect();
+    let alpha_refs: Vec<&str> = alpha_labels.iter().map(|s| s.as_str()).collect();
+    headers.extend(alpha_refs);
+
+    println!("\nTable 2 — perplexity by α (fraction of fixed high-saliency weights)");
+    print_table(&headers, &rows);
+
+    let report = Json::obj(vec![
+        ("table", "table2".into()),
+        ("iters", ctx.iters.into()),
+        ("rows", Json::Arr(out)),
+    ]);
+    ctx.write_json("table2", &report)?;
+    Ok(report)
+}

@@ -1,0 +1,216 @@
+//! Typed view over `artifacts/manifest.json` — the contract between the
+//! python compile path (`python/compile/aot.py`) and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::GptConfig;
+use crate::util::json::{self, Json};
+
+#[derive(Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub json: Json,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = json::parse(&src).context("parsing manifest.json")?;
+        ensure!(
+            json.at(&["version"]).as_usize() == Some(1),
+            "unsupported manifest version"
+        );
+        Ok(Self { root: artifacts_dir.to_path_buf(), json })
+    }
+
+    fn path_of(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    // ---- models -----------------------------------------------------------
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.json
+            .at(&["models"])
+            .as_obj()
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    fn model_entry(&self, name: &str) -> Result<&Json> {
+        let e = self.json.at(&["models", name]);
+        if e.is_null() {
+            bail!(
+                "model {name:?} not in manifest (available: {:?})",
+                self.model_names()
+            );
+        }
+        Ok(e)
+    }
+
+    pub fn model_config(&self, name: &str) -> Result<GptConfig> {
+        GptConfig::from_json(self.model_entry(name)?.at(&["config"]))
+    }
+
+    pub fn checkpoint_path(&self, name: &str) -> Result<PathBuf> {
+        let rel = self
+            .model_entry(name)?
+            .at(&["checkpoint"])
+            .as_str()
+            .context("manifest: missing checkpoint")?;
+        Ok(self.path_of(rel))
+    }
+
+    pub fn model_fwd_hlo(&self, name: &str) -> Result<PathBuf> {
+        let rel = self
+            .model_entry(name)?
+            .at(&["fwd_hlo"])
+            .as_str()
+            .context("manifest: missing fwd_hlo")?;
+        Ok(self.path_of(rel))
+    }
+
+    pub fn eval_batch(&self, name: &str) -> Result<usize> {
+        self.model_entry(name)?
+            .at(&["eval_batch"])
+            .as_usize()
+            .context("manifest: missing eval_batch")
+    }
+
+    /// Dense test perplexity recorded at build time (python side) —
+    /// cross-checked against the rust evaluator in integration tests.
+    pub fn dense_test_ppl(&self, name: &str) -> Option<f64> {
+        self.model_entry(name).ok()?.at(&["dense_test_ppl"]).as_f64()
+    }
+
+    // ---- kernels ----------------------------------------------------------
+
+    fn kernel_path(&self, group: &[&str], key: &str) -> Result<PathBuf> {
+        let mut path = vec!["kernels"];
+        path.extend_from_slice(group);
+        path.push(key);
+        let rel = self
+            .json
+            .at(&path)
+            .as_str()
+            .with_context(|| format!("manifest: missing kernel {group:?}/{key}"))?;
+        Ok(self.path_of(rel))
+    }
+
+    pub fn fw_grad_hlo(&self, d_out: usize, d_in: usize) -> Result<PathBuf> {
+        self.kernel_path(&["fw_grad"], &format!("{d_out}x{d_in}"))
+    }
+
+    pub fn objective_hlo(&self, d_out: usize, d_in: usize) -> Result<PathBuf> {
+        self.kernel_path(&["objective"], &format!("{d_out}x{d_in}"))
+    }
+
+    pub fn fw_chunk_hlo(&self, d_out: usize, d_in: usize) -> Result<(PathBuf, usize)> {
+        let iters = self
+            .json
+            .at(&["kernels", "fw_chunk", "iters"])
+            .as_usize()
+            .context("manifest: missing fw_chunk.iters")?;
+        let p = self.kernel_path(&["fw_chunk", "paths"], &format!("{d_out}x{d_in}"))?;
+        Ok((p, iters))
+    }
+
+    pub fn gram_hlo(&self, d_in: usize) -> Result<(PathBuf, usize)> {
+        let chunk = self
+            .json
+            .at(&["kernels", "gram", "chunk"])
+            .as_usize()
+            .context("manifest: missing gram.chunk")?;
+        let p = self.kernel_path(&["gram", "paths"], &format!("{d_in}"))?;
+        Ok((p, chunk))
+    }
+
+    // ---- data -------------------------------------------------------------
+
+    pub fn data_bin(&self, split: &str) -> Result<PathBuf> {
+        let rel = self
+            .json
+            .at(&["data", split])
+            .as_str()
+            .with_context(|| format!("manifest: missing data split {split}"))?;
+        Ok(self.path_of(rel))
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.json.at(&["data", "seq_len"]).as_usize().unwrap_or(128)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.json.at(&["data", "vocab"]).as_usize().unwrap_or(256)
+    }
+
+    /// Golden corpus tokens (seed → first-64 tokens) for the python/rust
+    /// generator parity test.
+    pub fn golden_corpus(&self) -> Vec<(u64, Vec<u8>)> {
+        let Some(obj) = self.json.at(&["golden", "corpus"]).as_obj() else {
+            return Vec::new();
+        };
+        obj.iter()
+            .filter_map(|(seed, toks)| {
+                let seed: u64 = seed.parse().ok()?;
+                let toks = toks
+                    .as_arr()?
+                    .iter()
+                    .map(|t| t.as_usize().unwrap_or(0) as u8)
+                    .collect();
+                Some((seed, toks))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let src = r#"{
+  "version": 1,
+  "models": {"m": {
+    "config": {"name": "m", "vocab_size": 64, "seq_len": 32, "d_model": 16,
+               "n_layers": 1, "n_heads": 2, "d_ff": 32},
+    "checkpoint": "m.safetensors", "fwd_hlo": "model_fwd_m.hlo.txt",
+    "eval_batch": 4, "dense_test_ppl": 12.5}},
+  "kernels": {
+    "fw_grad": {"48x16": "fw_grad_48x16.hlo.txt"},
+    "objective": {"48x16": "objective_48x16.hlo.txt"},
+    "fw_chunk": {"iters": 20, "paths": {"48x16": "fw_chunk_48x16_c20.hlo.txt"}},
+    "gram": {"chunk": 1024, "paths": {"16": "gram_16x1024.hlo.txt"}}},
+  "data": {"train": "train.bin", "seq_len": 32, "vocab": 64},
+  "golden": {"corpus": {"1": [3, 1, 2]}}
+}"#;
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+    }
+
+    #[test]
+    fn parses_all_sections() {
+        let dir = std::env::temp_dir().join("sparsefw_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model_names(), vec!["m".to_string()]);
+        let cfg = m.model_config("m").unwrap();
+        assert_eq!(cfg.d_model, 16);
+        assert!(m.checkpoint_path("m").unwrap().ends_with("m.safetensors"));
+        assert_eq!(m.eval_batch("m").unwrap(), 4);
+        assert_eq!(m.dense_test_ppl("m"), Some(12.5));
+        assert!(m.fw_grad_hlo(48, 16).is_ok());
+        assert!(m.fw_grad_hlo(99, 16).is_err());
+        let (p, iters) = m.fw_chunk_hlo(48, 16).unwrap();
+        assert!(p.ends_with("fw_chunk_48x16_c20.hlo.txt"));
+        assert_eq!(iters, 20);
+        let (_, chunk) = m.gram_hlo(16).unwrap();
+        assert_eq!(chunk, 1024);
+        assert_eq!(m.golden_corpus(), vec![(1u64, vec![3u8, 1, 2])]);
+        assert!(m.model_config("nope").is_err());
+    }
+}

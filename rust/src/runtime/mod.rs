@@ -1,0 +1,262 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! from the rust hot path — the only place the Layer-1/Layer-2 compute
+//! runs at request time (python is never invoked).
+//!
+//! Pattern (see /opt/xla-example/load_hlo):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  Compiled executables are cached
+//! per artifact file; all artifacts return 1-tuples (lowered with
+//! `return_tuple=True`).
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::pruner::sparsefw::FwKernels;
+use crate::tensor::Mat;
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Mat (row-major f32) → XLA literal of shape (rows, cols).
+pub fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// Rank-2 f32 literal → Mat.
+pub fn literal_to_mat(l: &xla::Literal) -> Result<Mat> {
+    let shape = l.array_shape()?;
+    let dims = shape.dims();
+    ensure!(dims.len() == 2, "expected rank-2 literal, got {:?}", dims);
+    let data = l.to_vec::<f32>()?;
+    Ok(Mat::from_vec(dims[0] as usize, dims[1] as usize, data))
+}
+
+impl PjrtRuntime {
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::debuglog!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn executable(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?,
+        );
+        crate::debuglog!("compiled {:?} in {:.2}s", path.file_name().unwrap(), t0.elapsed().as_secs_f64());
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    fn run1(&self, path: &Path, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.executable(path)?;
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    // ---- kernel entry points ------------------------------------------
+
+    /// ∇L(M) via the AOT Pallas `fw_grad` kernel.
+    pub fn fw_grad(&self, w: &Mat, m: &Mat, g: &Mat, h: &Mat) -> Result<Mat> {
+        let path = self.manifest.fw_grad_hlo(w.rows, w.cols)?;
+        let out = self.run1(
+            &path,
+            &[
+                mat_to_literal(w)?,
+                mat_to_literal(m)?,
+                mat_to_literal(g)?,
+                mat_to_literal(h)?,
+            ],
+        )?;
+        literal_to_mat(&out)
+    }
+
+    /// L(M) via the AOT Pallas `objective` kernel.
+    pub fn objective(&self, w: &Mat, m: &Mat, g: &Mat) -> Result<f64> {
+        let path = self.manifest.objective_hlo(w.rows, w.cols)?;
+        let out = self.run1(
+            &path,
+            &[mat_to_literal(w)?, mat_to_literal(m)?, mat_to_literal(g)?],
+        )?;
+        Ok(out.to_vec::<f32>()?[0] as f64)
+    }
+
+    /// G ← G + X·Xᵀ via the AOT Pallas `gram` kernel.  `x` is
+    /// (d_in, B≤chunk); the chunk is zero-padded (zero columns contribute
+    /// nothing to XXᵀ).
+    pub fn gram_acc(&self, g: &Mat, x: &Mat) -> Result<Mat> {
+        let (path, chunk) = self.manifest.gram_hlo(x.rows)?;
+        ensure!(x.cols <= chunk, "gram chunk too large: {} > {chunk}", x.cols);
+        let xp = if x.cols == chunk {
+            x.clone()
+        } else {
+            let mut xp = Mat::zeros(x.rows, chunk);
+            for i in 0..x.rows {
+                xp.row_mut(i)[..x.cols].copy_from_slice(x.row(i));
+            }
+            xp
+        };
+        let out = self.run1(&path, &[mat_to_literal(g)?, mat_to_literal(&xp)?])?;
+        literal_to_mat(&out)
+    }
+
+    /// Fused FW chunk (see `python/compile/fw_step.py::fw_chunk_fn`).
+    /// Returns the updated free-coordinate relaxed mask and the chunk
+    /// length executed.
+    pub fn fw_chunk(
+        &self,
+        w: &Mat,
+        m: &Mat,
+        g: &Mat,
+        h: &Mat,
+        fixed: &Mat,
+        k_new: usize,
+        t0: usize,
+    ) -> Result<(Mat, usize)> {
+        let (path, iters) = self.manifest.fw_chunk_hlo(w.rows, w.cols)?;
+        let out = self.run1(
+            &path,
+            &[
+                mat_to_literal(w)?,
+                mat_to_literal(m)?,
+                mat_to_literal(g)?,
+                mat_to_literal(h)?,
+                mat_to_literal(fixed)?,
+                xla::Literal::scalar(k_new as f32),
+                xla::Literal::scalar(t0 as f32),
+            ],
+        )?;
+        Ok((literal_to_mat(&out)?, iters))
+    }
+
+    // ---- model forward --------------------------------------------------
+
+    /// Parameter literals in the canonical AOT order for a model.
+    pub fn param_literals(&self, model: &crate::model::Gpt) -> Result<Vec<xla::Literal>> {
+        model
+            .cfg
+            .param_names()
+            .iter()
+            .map(|n| {
+                let m = model.mat(n);
+                // rank-1 params were stored as (1, d) mats; the AOT
+                // signature wants their original (d,) shape.
+                if n.ends_with("_g") || n.ends_with("_b") {
+                    Ok(xla::Literal::vec1(&m.data))
+                } else {
+                    mat_to_literal(m)
+                }
+            })
+            .collect()
+    }
+
+    /// Run the AOT `model_fwd` executable on one batch of token ids.
+    /// `tokens` must have exactly `eval_batch` rows (pad externally);
+    /// returns logits as (batch·seq_len, vocab).
+    pub fn model_fwd(
+        &self,
+        model_name: &str,
+        tokens: &[Vec<u8>],
+        params: &[xla::Literal],
+    ) -> Result<Mat> {
+        let path = self.manifest.model_fwd_hlo(model_name)?;
+        let batch = self.manifest.eval_batch(model_name)?;
+        let seq = self.manifest.seq_len();
+        ensure!(tokens.len() == batch, "expected {batch} sequences, got {}", tokens.len());
+        let mut flat = Vec::with_capacity(batch * seq);
+        for t in tokens {
+            ensure!(t.len() == seq, "sequence length {} != {seq}", t.len());
+            flat.extend(t.iter().map(|&b| b as i32));
+        }
+        let tok_lit = xla::Literal::vec1(&flat).reshape(&[batch as i64, seq as i64])?;
+
+        let mut args = Vec::with_capacity(1 + params.len());
+        args.push(tok_lit);
+        // cheap literal clones are not exposed; re-borrow via Borrow impl
+        let exe = self.executable(&path)?;
+        let arg_refs: Vec<&xla::Literal> = std::iter::once(&args[0]).chain(params.iter()).collect();
+        let result = exe.execute::<&xla::Literal>(&arg_refs)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        let shape = logits.array_shape()?;
+        let dims = shape.dims();
+        ensure!(dims.len() == 3, "logits must be rank-3");
+        let (b, l, v) = (dims[0] as usize, dims[1] as usize, dims[2] as usize);
+        let data = logits.to_vec::<f32>()?;
+        Ok(Mat::from_vec(b * l, v, data))
+    }
+}
+
+/// [`FwKernels`] backend running the AOT Pallas kernels through PJRT.
+pub struct PjrtKernels<'a> {
+    pub runtime: &'a PjrtRuntime,
+    /// Fall back to the fused chunk executable when possible.
+    pub use_chunk: bool,
+}
+
+impl<'a> PjrtKernels<'a> {
+    pub fn new(runtime: &'a PjrtRuntime) -> Self {
+        Self { runtime, use_chunk: true }
+    }
+}
+
+impl FwKernels for PjrtKernels<'_> {
+    fn fw_grad(&self, w: &Mat, m: &Mat, g: &Mat, h: &Mat) -> Result<Mat> {
+        self.runtime.fw_grad(w, m, g, h)
+    }
+
+    fn objective(&self, w: &Mat, m: &Mat, g: &Mat) -> Result<f64> {
+        self.runtime.objective(w, m, g)
+    }
+
+    fn fw_chunk(
+        &self,
+        w: &Mat,
+        m: &Mat,
+        g: &Mat,
+        h: &Mat,
+        fixed: &Mat,
+        k_new: usize,
+        t0: usize,
+        max_iters: usize,
+    ) -> Result<Option<(Mat, usize)>> {
+        if !self.use_chunk {
+            return Ok(None);
+        }
+        // Only run the fused path when a whole chunk fits in the budget.
+        let Ok((_, iters)) = self.runtime.manifest().fw_chunk_hlo(w.rows, w.cols) else {
+            return Ok(None);
+        };
+        if max_iters < iters {
+            return Ok(None);
+        }
+        let (m_next, done) = self.runtime.fw_chunk(w, m, g, h, fixed, k_new, t0)?;
+        Ok(Some((m_next, done)))
+    }
+}

@@ -1,0 +1,224 @@
+//! Small dense linear algebra in f64 — the pieces SparseGPT needs.
+//!
+//! SparseGPT's greedy step requires `(XXᵀ + λI)⁻¹` (the damped inverse
+//! Hessian of the reconstruction objective). At coordinator scale
+//! (d_in ≤ 512) a straightforward Cholesky factorization is exact enough
+//! and fast enough; we work in f64 for stability, converting from the
+//! f32 gram matrices.
+
+use super::Mat;
+
+/// Symmetric positive-definite f64 matrix utilities.
+#[derive(Clone)]
+pub struct MatF64 {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn from_mat(m: &Mat) -> Self {
+        assert_eq!(m.rows, m.cols);
+        Self {
+            n: m.rows,
+            data: m.data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.n, self.n, self.data.iter().map(|&x| x as f32).collect())
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.n + j]
+    }
+
+    pub fn add_diag(&mut self, lambda: f64) {
+        for i in 0..self.n {
+            *self.at_mut(i, i) += lambda;
+        }
+    }
+
+    pub fn mean_diag(&self) -> f64 {
+        (0..self.n).map(|i| self.at(i, i)).sum::<f64>() / self.n.max(1) as f64
+    }
+}
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+/// Fails (None) if A is not positive definite.
+pub fn cholesky(a: &MatF64) -> Option<MatF64> {
+    let n = a.n;
+    let mut l = MatF64::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A·x = b given the Cholesky factor L of A (forward+back substitution).
+pub fn chol_solve(l: &MatF64, b: &[f64]) -> Vec<f64> {
+    let n = l.n;
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at(i, k) * y[k];
+        }
+        y[i] = s / l.at(i, i);
+    }
+    // backward: Lᵀ x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// Full inverse via Cholesky (n solves). Used once per layer by
+/// SparseGPT, so O(n³) at n ≤ 512 is fine.
+pub fn chol_inverse(a: &MatF64) -> Option<MatF64> {
+    let l = cholesky(a)?;
+    let n = a.n;
+    let mut inv = MatF64::zeros(n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = chol_solve(&l, &e);
+        e[j] = 0.0;
+        for i in 0..n {
+            *inv.at_mut(i, j) = col[i];
+        }
+    }
+    Some(inv)
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix by power iteration —
+/// used to evaluate the Lemma 2 bound (λmax(Q)).
+pub fn lambda_max(a: &MatF64, iters: usize) -> f64 {
+    let n = a.n;
+    if n == 0 {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.37).sin()).collect();
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let mut w = vec![0.0; n];
+        for i in 0..n {
+            let row = &a.data[i * n..(i + 1) * n];
+            w[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+        }
+        let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        lam = norm;
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / norm;
+        }
+    }
+    lam
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_a_bt;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_spd(n: usize, seed: u64) -> MatF64 {
+        let mut rng = Xoshiro256::new(seed);
+        let x = Mat::gaussian(n, 2 * n, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x); // X Xᵀ is PSD (a.s. PD for fat X)
+        let mut a = MatF64::from_mat(&g);
+        a.add_diag(1e-3);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(16, 5);
+        let l = cholesky(&a).unwrap();
+        for i in 0..a.n {
+            for j in 0..a.n {
+                let mut s = 0.0;
+                for k in 0..a.n {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                assert!((s - a.at(i, j)).abs() < 1e-6 * (1.0 + a.at(i, j).abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn solve_and_inverse() {
+        let a = random_spd(12, 6);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| (i as f64) - 3.0).collect();
+        let x = chol_solve(&l, &b);
+        // check A x == b
+        for i in 0..12 {
+            let mut s = 0.0;
+            for k in 0..12 {
+                s += a.at(i, k) * x[k];
+            }
+            assert!((s - b[i]).abs() < 1e-8 * (1.0 + b[i].abs()));
+        }
+        let inv = chol_inverse(&a).unwrap();
+        // A · A⁻¹ == I
+        for i in 0..12 {
+            for j in 0..12 {
+                let mut s = 0.0;
+                for k in 0..12 {
+                    s += a.at(i, k) * inv.at(k, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-7, "({i},{j}) -> {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn not_pd_fails() {
+        let mut a = MatF64::zeros(3);
+        *a.at_mut(0, 0) = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn lambda_max_diagonal() {
+        let mut a = MatF64::zeros(4);
+        for (i, v) in [1.0, 5.0, 3.0, 2.0].into_iter().enumerate() {
+            *a.at_mut(i, i) = v;
+        }
+        let lam = lambda_max(&a, 100);
+        assert!((lam - 5.0).abs() < 1e-6);
+    }
+}

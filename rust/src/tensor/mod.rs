@@ -1,0 +1,224 @@
+//! Dense f32 matrix substrate.
+//!
+//! Everything the coordinator computes natively (gram accumulation,
+//! baseline pruners, the native FW backend, the transformer forward)
+//! runs on [`Mat`]: a row-major, heap-backed f32 matrix with a blocked,
+//! multi-threaded matmul (see `matmul.rs`) and the small amount of
+//! linear algebra SparseGPT needs (`linalg.rs`).
+
+pub mod linalg;
+pub mod matmul;
+pub mod sparse;
+pub mod topk;
+
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt};
+
+use crate::util::prng::Xoshiro256;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![1.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std²) entries (deterministic from `rng`).
+    pub fn gaussian(rows: usize, cols: usize, std: f32, rng: &mut Xoshiro256) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| rng.next_gaussian() as f32 * std)
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Elementwise product (Hadamard).
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn hadamard_inplace(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_inplace(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self ← a·self + b·other (the FW convex-combination update).
+    pub fn axby(&mut self, a: f32, b: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x = a * *x + b * y;
+        }
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// ℓ₁ distance to another matrix (threshold-residual metric, Fig 4R).
+    pub fn l1_dist(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum()
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Max |a−b| against another matrix (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let a = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(a.at(1, 2), 5.0);
+        let t = a.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.at(2, 1), 5.0);
+        assert_eq!(t.transpose().data, a.data);
+
+        let h = a.hadamard(&a);
+        assert_eq!(h.at(1, 2), 25.0);
+        assert_eq!(a.frob_sq(), (0..6).map(|x| (x * x) as f64).sum::<f64>());
+    }
+
+    #[test]
+    fn axby_is_convex_update() {
+        let mut m = Mat::ones(2, 2);
+        let v = Mat::from_vec(2, 2, vec![0.0, 2.0, 4.0, 6.0]);
+        m.axby(0.5, 0.5, &v); // (1-eta)m + eta v with eta=0.5
+        assert_eq!(m.data, vec![0.5, 1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn l1_dist_and_nnz() {
+        let a = Mat::from_vec(1, 4, vec![0.0, 1.0, 0.0, -2.0]);
+        let b = Mat::zeros(1, 4);
+        assert_eq!(a.l1_dist(&b), 3.0);
+        assert_eq!(a.count_nonzero(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Mat::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

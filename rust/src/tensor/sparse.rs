@@ -1,0 +1,209 @@
+//! CSR sparse matrices — the deployment payoff of pruning.
+//!
+//! A pruned linear layer `y = x·Wᵀ` with mask sparsity s touches only
+//! (1−s)·numel weights; this module materializes masked weights as CSR
+//! and provides the sparse counterpart of the dense `matmul_a_bt` used
+//! by the model forward.  `benches/gram.rs`/`fw_hot_loop.rs` quantify
+//! the dense→sparse speedup at the paper's sparsity levels; the
+//! `semi_structured` example shows n:m masks keeping perfectly balanced
+//! rows (the hardware-friendliness argument for 2:4).
+
+use super::Mat;
+use crate::util::pool::{chunk_ranges, default_workers};
+
+/// Compressed sparse row f32 matrix.
+#[derive(Clone, Debug)]
+pub struct CsrMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// row_ptr[i]..row_ptr[i+1] indexes into (col_idx, values) for row i.
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMat {
+    /// Compress the nonzero pattern of `dense` (typically `W ⊙ M`).
+    pub fn from_dense(dense: &Mat) -> Self {
+        let mut row_ptr = Vec::with_capacity(dense.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..dense.rows {
+            for (j, &v) in dense.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Self { rows: dense.rows, cols: dense.cols, row_ptr, col_idx, values }
+    }
+
+    /// Masked-weight constructor: CSR of `w ⊙ mask` (the deployment
+    /// artifact of a pruning run).
+    pub fn from_masked(w: &Mat, mask: &Mat) -> Self {
+        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+        Self::from_dense(&w.hadamard(mask))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            for t in s..e {
+                out.data[i * self.cols + self.col_idx[t] as usize] = self.values[t];
+            }
+        }
+        out
+    }
+
+    /// y = W·x for a single input vector (x length = cols).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            let mut acc = 0.0f32;
+            for t in s..e {
+                acc += self.values[t] * x[self.col_idx[t] as usize];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// C = A·Wᵀ with A (n × cols) dense — the sparse counterpart of
+    /// `matmul_a_bt(a, w)` used by the linear layers.  Parallel over
+    /// rows of A.
+    pub fn matmul_a_bt(&self, a: &Mat) -> Mat {
+        assert_eq!(a.cols, self.cols, "sparse matmul_a_bt: inner dims");
+        let (n, m) = (a.rows, self.rows);
+        let mut c = Mat::zeros(n, m);
+        let workers = default_workers(n);
+        let ranges = chunk_ranges(n, workers);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = &mut c.data;
+            for r in &ranges {
+                let (stripe, tail) = rest.split_at_mut(r.len() * m);
+                rest = tail;
+                let r = r.clone();
+                s.spawn(move || {
+                    for (li, ai) in r.clone().enumerate() {
+                        let arow = a.row(ai);
+                        let crow = &mut stripe[li * m..(li + 1) * m];
+                        for i in 0..m {
+                            let (st, e) =
+                                (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+                            let mut acc = 0.0f32;
+                            for t in st..e {
+                                acc += self.values[t] * arow[self.col_idx[t] as usize];
+                            }
+                            crow[i] = acc;
+                        }
+                    }
+                });
+            }
+        });
+        c
+    }
+
+    /// Bytes of the CSR representation (deployment-size accounting).
+    pub fn size_bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.values.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_a_bt;
+    use crate::util::prng::Xoshiro256;
+
+    fn sparse_random(rows: usize, cols: usize, density: f64, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::new(seed);
+        Mat::from_fn(rows, cols, |_, _| {
+            if rng.next_f64() < density {
+                rng.next_gaussian() as f32
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        let d = sparse_random(17, 23, 0.4, 1);
+        let csr = CsrMat::from_dense(&d);
+        assert_eq!(csr.to_dense().data, d.data);
+        assert_eq!(csr.nnz(), d.count_nonzero());
+        assert!((csr.density() - 0.4).abs() < 0.15);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Xoshiro256::new(2);
+        let d = sparse_random(12, 20, 0.3, 3);
+        let csr = CsrMat::from_dense(&d);
+        let x: Vec<f32> = (0..20).map(|_| rng.next_f32()).collect();
+        let y = csr.matvec(&x);
+        for i in 0..12 {
+            let want: f32 = d.row(i).iter().zip(&x).map(|(a, b)| a * b).sum();
+            assert!((y[i] - want).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn sparse_matmul_matches_dense() {
+        let mut rng = Xoshiro256::new(4);
+        let w = sparse_random(24, 32, 0.4, 5);
+        let a = Mat::gaussian(10, 32, 1.0, &mut rng);
+        let csr = CsrMat::from_dense(&w);
+        let got = csr.matmul_a_bt(&a);
+        let want = matmul_a_bt(&a, &w);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn from_masked_zeroes_off_mask() {
+        let mut rng = Xoshiro256::new(6);
+        let w = Mat::gaussian(8, 8, 1.0, &mut rng);
+        let mask = Mat::from_fn(8, 8, |i, j| f32::from((i + j) % 2 == 0));
+        let csr = CsrMat::from_masked(&w, &mask);
+        assert_eq!(csr.nnz(), 32);
+        let back = csr.to_dense();
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if (i + j) % 2 == 0 { w.at(i, j) } else { 0.0 };
+                assert_eq!(back.at(i, j), want);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_full() {
+        let z = CsrMat::from_dense(&Mat::zeros(4, 4));
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.matvec(&[1.0; 4]), vec![0.0; 4]);
+        let f = CsrMat::from_dense(&Mat::ones(3, 3));
+        assert_eq!(f.nnz(), 9);
+        assert_eq!(f.matvec(&[1.0, 2.0, 3.0]), vec![6.0; 3]);
+    }
+
+    #[test]
+    fn size_accounting() {
+        let d = sparse_random(100, 100, 0.4, 7);
+        let csr = CsrMat::from_dense(&d);
+        // at 60% sparsity CSR must be smaller than dense f32
+        assert!(csr.size_bytes() < 100 * 100 * 4);
+    }
+}

@@ -1,0 +1,98 @@
+//! Top-k selection utilities — the heart of both the LMO (select the k
+//! most-negative gradient entries, paper Eq. 12) and the thresholding
+//! step (keep the k largest mask entries, Algorithm 1 line 7).
+//!
+//! Built on `select_nth_unstable` (expected O(n)); ties are broken by
+//! index so results are deterministic.
+
+/// Indices of the `k` smallest values (ascending ties broken by index).
+pub fn bottom_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(values.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    let cmp = |&a: &u32, &b: &u32| {
+        let (va, vb) = (values[a as usize], values[b as usize]);
+        va.partial_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.into_iter().map(|i| i as usize).collect()
+}
+
+/// Indices of the `k` largest values (ties broken by index).
+pub fn top_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(values.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    let cmp = |&a: &u32, &b: &u32| {
+        let (va, vb) = (values[a as usize], values[b as usize]);
+        vb.partial_cmp(&va).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.into_iter().map(|i| i as usize).collect()
+}
+
+/// Binary vector with ones at the `k` largest entries of `values`.
+pub fn top_k_mask(values: &[f32], k: usize) -> Vec<f32> {
+    let mut mask = vec![0.0f32; values.len()];
+    for i in top_k_indices(values, k) {
+        mask[i] = 1.0;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_and_bottom() {
+        let v = [3.0f32, -1.0, 4.0, -1.5, 0.0];
+        assert_eq!(sorted(top_k_indices(&v, 2)), vec![0, 2]);
+        assert_eq!(sorted(bottom_k_indices(&v, 2)), vec![1, 3]);
+        assert_eq!(top_k_indices(&v, 0), Vec::<usize>::new());
+        assert_eq!(sorted(top_k_indices(&v, 99)), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let v = [1.0f32; 6];
+        assert_eq!(sorted(top_k_indices(&v, 3)), vec![0, 1, 2]);
+        assert_eq!(sorted(bottom_k_indices(&v, 3)), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn mask_has_k_ones() {
+        let v: Vec<f32> = (0..100).map(|i| ((i * 37) % 100) as f32).collect();
+        let m = top_k_mask(&v, 30);
+        assert_eq!(m.iter().filter(|&&x| x == 1.0).count(), 30);
+        // the selected ones must all be >= the largest unselected value
+        let sel_min = v
+            .iter()
+            .zip(&m)
+            .filter(|(_, &mk)| mk == 1.0)
+            .map(|(&x, _)| x)
+            .fold(f32::MAX, f32::min);
+        let unsel_max = v
+            .iter()
+            .zip(&m)
+            .filter(|(_, &mk)| mk == 0.0)
+            .map(|(&x, _)| x)
+            .fold(f32::MIN, f32::max);
+        assert!(sel_min >= unsel_max);
+    }
+
+    fn sorted(mut v: Vec<usize>) -> Vec<usize> {
+        v.sort_unstable();
+        v
+    }
+}

@@ -1,0 +1,71 @@
+//! Tiny leveled logger with wall-clock timestamps.
+//!
+//! Keeps the coordinator's progress reporting dependency-free. Level is
+//! controlled by `SPARSEFW_LOG` (`error|warn|info|debug`, default `info`).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != u8::MAX {
+        return l;
+    }
+    let l = match std::env::var("SPARSEFW_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        _ => 2,
+    };
+    LEVEL.store(l, Ordering::Relaxed);
+    l
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if (l as u8) > level() {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => " WARN",
+        Level::Info => " INFO",
+        Level::Debug => "DEBUG",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:8.2}s {tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! errorlog {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($t)*)) };
+}

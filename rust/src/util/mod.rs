@@ -1,0 +1,8 @@
+//! In-tree substrates (DESIGN.md §3): the offline crate registry lacks
+//! serde / rayon / tokio / rand, so JSON, parallelism, PRNGs and logging
+//! are implemented here and tested like any other module.
+
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prng;

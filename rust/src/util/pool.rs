@@ -1,0 +1,127 @@
+//! Scoped data-parallel helpers.
+//!
+//! The offline registry has no `rayon`/`tokio`, so the coordinator's
+//! parallelism substrate is built on `std::thread::scope`: an atomic
+//! work-stealing counter over an index range.  Spawn cost (~tens of µs)
+//! is negligible against the matmul-dominated work items scheduled here.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use for `n` items.
+pub fn default_workers(n: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|c| c.get())
+        .unwrap_or(4);
+    cores.min(n).max(1)
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices dynamically
+/// over up to `default_workers(n)` threads. `f` must be `Sync`.
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for_with(default_workers(n), n, f)
+}
+
+/// Like [`parallel_for`] with an explicit worker count.
+pub fn parallel_for_with<F>(workers: usize, n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    if workers <= 1 || n == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    parallel_for(n, |i| {
+        let v = f(i);
+        *slots[i].lock().unwrap() = Some(v);
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_map slot unfilled"))
+        .collect()
+}
+
+/// Split `0..n` into `chunks` contiguous ranges of near-equal size.
+pub fn chunk_ranges(n: usize, chunks: usize) -> Vec<std::ops::Range<usize>> {
+    let chunks = chunks.clamp(1, n.max(1));
+    let base = n / chunks;
+    let rem = n % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_in_order() {
+        let v = parallel_map(257, |i| i * i);
+        assert_eq!(v, (0..257).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunk_ranges_partition() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for c in [1usize, 3, 8] {
+                let rs = chunk_ranges(n, c);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n, "n={n} c={c}");
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        parallel_for(0, |_| panic!("must not run"));
+        assert!(parallel_map(0, |i| i).is_empty());
+    }
+}

@@ -1,0 +1,195 @@
+//! Integration tests over the AOT artifacts: every PJRT executable must
+//! agree with its native-rust mirror on real model data.
+//!
+//! These are the tests that prove the three layers compose: the Pallas
+//! kernels (L1), lowered through the jax functions (L2), executed from
+//! rust via PJRT (L3), match the coordinator's own math.
+//!
+//! Skipped (with a note) when `artifacts/` has not been built.
+
+use sparsefw::calib::Calibration;
+use sparsefw::config::{Backend, Workspace};
+use sparsefw::coordinator::PrunePipeline;
+use sparsefw::eval::{perplexity_native, perplexity_pjrt};
+use sparsefw::model::forward::forward;
+use sparsefw::pruner::fw_math;
+use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern};
+use sparsefw::runtime::PjrtRuntime;
+use sparsefw::tensor::Mat;
+use sparsefw::util::prng::Xoshiro256;
+
+fn workspace() -> Option<Workspace> {
+    let dir = std::env::var("SPARSEFW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match Workspace::open(&dir) {
+        Ok(ws) => Some(ws),
+        Err(_) => {
+            eprintln!("NOTE: artifacts/ not built — PJRT integration tests skipped");
+            None
+        }
+    }
+}
+
+fn setup() -> Option<(Workspace, PjrtRuntime, sparsefw::model::Gpt, Calibration)> {
+    let ws = workspace()?;
+    let rt = ws.runtime().expect("PJRT runtime");
+    let name = ws.manifest.model_names()[0].clone();
+    let model = ws.load_model(&name).expect("model");
+    let calib =
+        Calibration::collect(&model, &ws.train_bin().unwrap(), 8, 3).expect("calibration");
+    Some((ws, rt, model, calib))
+}
+
+fn pseudo_mask(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.next_f32())
+}
+
+#[test]
+fn pjrt_fw_grad_matches_native() {
+    let Some((_ws, rt, model, calib)) = setup() else { return };
+    for l in model.cfg.layers() {
+        let w = model.mat(&l.name);
+        let g = calib.gram(&l.name);
+        let h = fw_math::precompute_h(w, g);
+        let m = pseudo_mask(l.d_out, l.d_in, 42);
+        let native = fw_math::fw_grad(w, &m, g, &h);
+        let pjrt = rt.fw_grad(w, &m, g, &h).expect("pjrt fw_grad");
+        let rel = native.max_abs_diff(&pjrt) / native.abs_max().max(1.0);
+        assert!(rel < 1e-4, "{}: rel diff {rel}", l.name);
+    }
+}
+
+#[test]
+fn pjrt_objective_matches_native() {
+    let Some((_ws, rt, model, calib)) = setup() else { return };
+    for l in model.cfg.layers().iter().step_by(3) {
+        let w = model.mat(&l.name);
+        let g = calib.gram(&l.name);
+        let m = pseudo_mask(l.d_out, l.d_in, 7);
+        let native = fw_math::objective(w, &m, g);
+        let pjrt = rt.objective(w, &m, g).expect("pjrt objective");
+        assert!(
+            (native - pjrt).abs() / (1.0 + native.abs()) < 1e-4,
+            "{}: {native} vs {pjrt}",
+            l.name
+        );
+    }
+}
+
+#[test]
+fn pjrt_gram_matches_native_with_padding() {
+    let Some((_ws, rt, model, _calib)) = setup() else { return };
+    let din = model.cfg.d_model;
+    let mut rng = Xoshiro256::new(5);
+    // deliberately not a multiple of the chunk: exercises zero-padding
+    let x = Mat::gaussian(din, 300, 1.0, &mut rng);
+    let g0 = Mat::gaussian(din, din, 0.1, &mut rng);
+    let native = {
+        let mut g = g0.clone();
+        g.add_inplace(&sparsefw::tensor::matmul_a_bt(&x, &x));
+        g
+    };
+    let pjrt = rt.gram_acc(&g0, &x).expect("pjrt gram");
+    let rel = native.max_abs_diff(&pjrt) / native.abs_max().max(1.0);
+    assert!(rel < 1e-4, "gram rel diff {rel}");
+}
+
+#[test]
+fn pjrt_chunk_matches_native_loop() {
+    let Some((_ws, rt, model, calib)) = setup() else { return };
+    let l = &model.cfg.layers()[0];
+    let w = model.mat(&l.name);
+    let g = calib.gram(&l.name);
+    let h = fw_math::precompute_h(w, g);
+    let fixed = Mat::zeros(l.d_out, l.d_in);
+    let k_new = l.d_out * l.d_in * 2 / 5;
+    let m0 = Mat::zeros(l.d_out, l.d_in);
+
+    let (m_pjrt, iters) = rt.fw_chunk(w, &m0, g, &h, &fixed, k_new, 0).expect("chunk");
+    assert!(iters > 0);
+
+    // native mirror of the same number of iterations
+    let mut m = m0;
+    let budget = sparsefw::pruner::mask::BudgetSpec::Global { keep: k_new };
+    for t in 0..iters {
+        let grad = fw_math::fw_grad(w, &m, g, &h);
+        let v = sparsefw::pruner::lmo::lmo(&grad, &budget);
+        let eta = 2.0 / (t as f32 + 2.0);
+        m.axby(1.0 - eta, eta, &v);
+    }
+    // LMO tie-breaks may differ between argsort (HLO) and select_nth
+    // (rust) under exact float ties; compare the objective, not the mask.
+    let obj_pjrt = fw_math::objective(w, &m_pjrt, g);
+    let obj_native = fw_math::objective(w, &m, g);
+    let rel = (obj_pjrt - obj_native).abs() / (1.0 + obj_native.abs());
+    assert!(rel < 1e-2, "chunk objective diverged: {obj_pjrt} vs {obj_native}");
+}
+
+#[test]
+fn pjrt_model_fwd_matches_native_forward() {
+    let Some((ws, rt, model, _calib)) = setup() else { return };
+    let name = ws.manifest.model_names()[0].clone();
+    let batch = ws.manifest.eval_batch(&name).unwrap();
+    let seqs = ws.test_bin().unwrap().sequential(model.cfg.seq_len, batch);
+    assert_eq!(seqs.len(), batch);
+    let params = rt.param_literals(&model).unwrap();
+    let logits = rt.model_fwd(&name, &seqs, &params).unwrap();
+
+    // compare a few rows of the first sequence against the native fwd
+    let native = forward(&model, &seqs[0], false);
+    for pos in [0usize, 5, model.cfg.seq_len - 1] {
+        for v in (0..model.cfg.vocab_size).step_by(37) {
+            let a = native.logits.at(pos, v);
+            let b = logits.at(pos, v);
+            assert!(
+                (a - b).abs() < 2e-2 * (1.0 + a.abs()),
+                "logit mismatch at ({pos},{v}): {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_perplexity_matches_native() {
+    let Some((ws, rt, model, _calib)) = setup() else { return };
+    let name = ws.manifest.model_names()[0].clone();
+    let test = ws.test_bin().unwrap();
+    let a = perplexity_native(&model, &test, 16).unwrap();
+    let b = perplexity_pjrt(&rt, &model, &name, &test, 16).unwrap();
+    assert!((a - b).abs() < 0.01 * a, "ppl native {a} vs pjrt {b}");
+    // and against the python-side build-time number (different eval
+    // subset size, so loose tolerance)
+    if let Some(py) = ws.manifest.dense_test_ppl(&name) {
+        assert!((a - py).abs() < 0.15 * py, "rust {a} vs python {py}");
+    }
+}
+
+#[test]
+fn pjrt_backend_pipeline_agrees_with_native() {
+    let Some((_ws, rt, model, calib)) = setup() else { return };
+    let pattern = SparsityPattern::Unstructured { sparsity: 0.5 };
+    let method = PruneMethod::SparseFw(SparseFwConfig {
+        iters: 20,
+        alpha: 0.5,
+        use_chunk: false, // per-iteration kernels: exact same path lengths
+        keep_best: false, // compare raw trajectories
+        ..Default::default()
+    });
+    let pipe = PrunePipeline::new(&model, &calib);
+    let native = pipe.run(&method, &pattern).unwrap();
+    let pjrt = pipe
+        .run_with_backend(Backend::Pjrt, Some(&rt), &method, &pattern)
+        .unwrap();
+    // The two backends accumulate f32 in different orders, so gradient
+    // entries near the LMO selection boundary can tie-flip and the FW
+    // trajectories diverge slightly.  The runs must still agree closely
+    // on the final objective.  (At T=20 the *thresholded* mask may be
+    // worse than the warmstart — that is the Fig 4 dip, not a bug — so
+    // no warmstart-dominance assertion here; see the lib tests for the
+    // long-T dominance property.)
+    for (name, obj_n) in &native.layer_objs {
+        let obj_p = pjrt.layer_objs[name];
+        let rel = (obj_n - obj_p).abs() / (1.0 + obj_n.abs());
+        assert!(rel < 0.05, "{name}: native {obj_n} vs pjrt {obj_p}");
+    }
+}

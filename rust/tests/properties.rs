@@ -1,0 +1,222 @@
+//! Property-based tests over randomized instances (in-tree harness —
+//! the offline registry has no proptest).  Each property runs across a
+//! seeded family of random shapes/instances; failures print the seed.
+
+use sparsefw::pruner::fw_math;
+use sparsefw::pruner::lmo::{lmo, lmo_value};
+use sparsefw::pruner::mask::{mask_satisfies, BudgetSpec, SparsityPattern};
+use sparsefw::pruner::rounding::threshold;
+use sparsefw::pruner::saliency::{ria_scores, saliency_mask, wanda_scores};
+use sparsefw::pruner::sparsefw::{run_layer, NativeKernels, SparseFwConfig, Warmstart};
+use sparsefw::tensor::{matmul_a_bt, topk, Mat};
+use sparsefw::util::prng::Xoshiro256;
+
+/// Run `prop(seed)` for many seeds, reporting the failing seed.
+fn for_seeds(n: u64, prop: impl Fn(u64)) {
+    for seed in 0..n {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(seed)));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_shape(rng: &mut Xoshiro256) -> (usize, usize) {
+    let dout = 4 + rng.next_below(28) as usize;
+    let din = 4 * (1 + rng.next_below(12) as usize); // multiple of 4 for n:m
+    (dout, din)
+}
+
+fn rand_instance(seed: u64) -> (Mat, Mat, Xoshiro256) {
+    let mut rng = Xoshiro256::new(seed * 7919 + 13);
+    let (dout, din) = rand_shape(&mut rng);
+    let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+    let x = Mat::gaussian(din, din * 2 + 8, 1.0, &mut rng);
+    let g = matmul_a_bt(&x, &x);
+    (w, g, rng)
+}
+
+fn rand_pattern(rng: &mut Xoshiro256) -> SparsityPattern {
+    match rng.next_below(3) {
+        0 => SparsityPattern::Unstructured { sparsity: 0.3 + rng.next_f64() * 0.5 },
+        1 => SparsityPattern::PerRow { sparsity: 0.3 + rng.next_f64() * 0.5 },
+        _ => SparsityPattern::NM { keep: 1 + rng.next_below(3) as usize, block: 4 },
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// LMO optimality: for every unit, swapping any selected coordinate for
+/// any unselected one never improves ⟨V, grad⟩.
+#[test]
+fn prop_lmo_exchange_optimality() {
+    for_seeds(40, |seed| {
+        let mut rng = Xoshiro256::new(seed + 1000);
+        let (dout, din) = rand_shape(&mut rng);
+        let grad = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let mut pattern = rand_pattern(&mut rng);
+        if let SparsityPattern::NM { ref mut block, .. } = pattern {
+            *block = 4;
+        }
+        let budget = BudgetSpec::full(&pattern, dout, din);
+        let v = lmo(&grad, &budget);
+        assert!(mask_satisfies(&v, &pattern), "LMO vertex infeasible");
+        // exchange argument on the global pattern (cheap to verify)
+        if let BudgetSpec::Global { .. } = budget {
+            let base = lmo_value(&v, &grad);
+            let sel_max = grad
+                .data
+                .iter()
+                .zip(&v.data)
+                .filter(|(_, &m)| m == 1.0)
+                .map(|(&g, _)| g)
+                .fold(f32::MIN, f32::max);
+            let unsel_min = grad
+                .data
+                .iter()
+                .zip(&v.data)
+                .filter(|(_, &m)| m == 0.0)
+                .map(|(&g, _)| g)
+                .fold(f32::MAX, f32::min);
+            // every selected coeff <= every unselected coeff (allowing
+            // the not-selected-because-nonnegative case)
+            assert!(
+                sel_max <= unsel_min.max(0.0) + 1e-6,
+                "exchange improves LMO: sel_max {sel_max} unsel_min {unsel_min} base {base}"
+            );
+        }
+    });
+}
+
+/// Thresholding always emits a feasible mask with exactly min(budget,
+/// positive-entries) ones, and never selects forbidden coordinates.
+#[test]
+fn prop_threshold_feasible() {
+    for_seeds(40, |seed| {
+        let mut rng = Xoshiro256::new(seed + 2000);
+        let (dout, din) = rand_shape(&mut rng);
+        let m = Mat::from_fn(dout, din, |_, _| rng.next_f32());
+        let pattern = rand_pattern(&mut rng);
+        let budget = BudgetSpec::full(&pattern, dout, din);
+        let r = threshold(&m, &budget, None);
+        assert!(mask_satisfies(&r, &pattern));
+        assert_eq!(r.count_nonzero(), budget.total().min(m.numel()));
+
+        // forbidding a random set removes it from the output
+        let forbid = Mat::from_fn(dout, din, |_, _| f32::from(rng.next_f64() < 0.3));
+        let free = BudgetSpec::free_budgets(&pattern, dout, din, &Mat::zeros(dout, din));
+        let r2 = threshold(&m, &free, Some(&forbid));
+        for (a, b) in r2.data.iter().zip(&forbid.data) {
+            assert!(!(*a == 1.0 && *b != 0.0), "forbidden coordinate selected");
+        }
+    });
+}
+
+/// FW iterates remain in the relaxed polytope C_k and the continuous
+/// objective at the end is never worse than at the warmstart.
+#[test]
+fn prop_fw_feasibility_and_descent() {
+    for_seeds(12, |seed| {
+        let (w, g, mut rng) = rand_instance(seed);
+        let pattern = rand_pattern(&mut rng);
+        let cfg = SparseFwConfig {
+            iters: 40,
+            alpha: rng.next_f64() * 0.9,
+            warmstart: Warmstart::Wanda,
+            trace_every: 0,
+            use_chunk: false,
+            keep_best: true,
+            line_search: rng.next_f64() < 0.3, // exercise both schedules
+        };
+        let res = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+        assert!(mask_satisfies(&res.mask, &pattern));
+        assert_eq!(res.mask.count_nonzero(), pattern.keep_total(w.rows, w.cols));
+        assert!(
+            res.final_obj <= res.warm_obj * 1.001 + 1e-6,
+            "seed {seed}: final {} > warm {}",
+            res.final_obj,
+            res.warm_obj
+        );
+    });
+}
+
+/// The gram-form objective equals the X-form objective.
+#[test]
+fn prop_objective_gram_equals_x() {
+    for_seeds(25, |seed| {
+        let mut rng = Xoshiro256::new(seed + 3000);
+        let (dout, din) = rand_shape(&mut rng);
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let x = Mat::gaussian(din, 64, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x);
+        let m = Mat::from_fn(dout, din, |_, _| rng.next_f32());
+        let a = fw_math::objective(&w, &m, &g);
+        let b = fw_math::objective_from_x(&w, &m, &x);
+        assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "{a} vs {b}");
+    });
+}
+
+/// Saliency masks are invariant to positive column rescaling of X for
+/// magnitude, and Wanda == magnitude under isotropic G.
+#[test]
+fn prop_wanda_scale_consistency() {
+    for_seeds(20, |seed| {
+        let mut rng = Xoshiro256::new(seed + 4000);
+        let (dout, din) = rand_shape(&mut rng);
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let x = Mat::gaussian(din, 48, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        // scaling X by c scales all saliencies by c — same mask
+        let mut x2 = x.clone();
+        x2.scale(3.0);
+        let g2 = matmul_a_bt(&x2, &x2);
+        let m1 = saliency_mask(&wanda_scores(&w, &g), &pattern);
+        let m2 = saliency_mask(&wanda_scores(&w, &g2), &pattern);
+        assert_eq!(m1.data, m2.data);
+        // RIA likewise
+        let r1 = saliency_mask(&ria_scores(&w, &g), &pattern);
+        let r2 = saliency_mask(&ria_scores(&w, &g2), &pattern);
+        assert_eq!(r1.data, r2.data);
+    });
+}
+
+/// top_k/bottom_k are consistent duals: top-k of v == bottom-k of -v.
+#[test]
+fn prop_topk_duality() {
+    for_seeds(30, |seed| {
+        let mut rng = Xoshiro256::new(seed + 5000);
+        let n = 1 + rng.next_below(200) as usize;
+        let v: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+        let neg: Vec<f32> = v.iter().map(|x| -x).collect();
+        let k = rng.next_below(n as u64 + 1) as usize;
+        let mut a = topk::top_k_indices(&v, k);
+        let mut b = topk::bottom_k_indices(&neg, k);
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    });
+}
+
+/// α-fixing monotonicity: the fixed set grows with α and stays within
+/// the keep budget.
+#[test]
+fn prop_alpha_fixed_monotone() {
+    use sparsefw::pruner::sparsefw::alpha_fixed_mask;
+    for_seeds(20, |seed| {
+        let mut rng = Xoshiro256::new(seed + 6000);
+        let (dout, din) = rand_shape(&mut rng);
+        let scores = Mat::from_fn(dout, din, |_, _| rng.next_f32());
+        let pattern = rand_pattern(&mut rng);
+        let mut prev = 0usize;
+        for alpha in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let fixed = alpha_fixed_mask(&scores, &pattern, alpha);
+            let n = fixed.count_nonzero();
+            assert!(n >= prev, "fixed set shrank at alpha={alpha}");
+            assert!(n <= pattern.keep_total(dout, din));
+            assert!(mask_satisfies(&fixed, &pattern));
+            prev = n;
+        }
+    });
+}
