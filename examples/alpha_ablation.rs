@@ -1,6 +1,8 @@
 //! α-ablation (paper Table 2 / Appendix C): sweep the fraction of
 //! high-saliency weights fixed as unprunable and watch both the local
-//! pruning error and the global perplexity.
+//! pruning error and the global perplexity.  One declarative
+//! [`JobSpec`] per α — the session memoizes the calibration, so the
+//! whole sweep collects grams once.
 //!
 //! Reproduces the paper's headline tension: α = 0 (vanilla FW) gives the
 //! *best local error* but *worse perplexity* than the warmstart, while
@@ -9,35 +11,34 @@
 //!   cargo run --release --example alpha_ablation
 
 use anyhow::Result;
-use sparsefw::coordinator::PrunePipeline;
-use sparsefw::eval::perplexity_native;
 use sparsefw::prelude::*;
-use sparsefw::pruner::PruneMethod;
 
 fn main() -> Result<()> {
-    let ws = Workspace::open_default()?;
-    let model_name = ws.manifest.model_names()[0].clone();
-    let model = ws.load_model(&model_name)?;
-    let calib = Calibration::collect(&model, &ws.train_bin()?, 128, 7)?;
-    let test = ws.test_bin()?;
-    let pipe = PrunePipeline::new(&model, &calib);
+    let mut session = PruneSession::open_default()?;
+    let model_name = session.model_names()[0].clone();
     let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
 
     println!("α-ablation on {model_name}, {} (300 iters, Wanda warmstart)", pattern.label());
     println!("{:>6} {:>12} {:>16} {:>10}", "alpha", "ppl", "Σ layer err", "err red.");
     for alpha in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0] {
-        let res = pipe.run(
-            &PruneMethod::SparseFw(SparseFwConfig {
+        let spec = JobSpec {
+            model: model_name.clone(),
+            method: PruneMethod::SparseFw(SparseFwConfig {
                 iters: 300,
                 alpha,
                 ..Default::default()
             }),
-            &pattern,
-        )?;
-        let ppl = perplexity_native(&res.apply(&model)?, &test, 64)?;
+            allocation: Allocation::Uniform(pattern.clone()),
+            calib_samples: 128,
+            // zs_items: 0 — this ablation only reads perplexity
+            eval: Some(EvalSpec { seqs: 64, zs_items: 0 }),
+            ..Default::default()
+        };
+        let res = session.execute(&spec)?;
+        let ppl = res.eval.as_ref().expect("spec requested eval").ppl;
         println!(
             "{alpha:>6} {ppl:>12.3} {:>16.4e} {:>9.1}%",
-            res.layer_objs.values().sum::<f64>(),
+            res.total_err(),
             res.mean_rel_reduction().unwrap_or(0.0) * 100.0
         );
     }

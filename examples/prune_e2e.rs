@@ -1,12 +1,13 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): exercises every layer of the
 //! stack on a real workload —
 //!
-//! 1. loads the build-time-pretrained checkpoints (both models),
-//! 2. calibrates grams over the synthetic corpus,
-//! 3. prunes with all four Table-1 methods at 60% per-row + 2:4,
-//!    running the FW hot loop through the **AOT Pallas kernels via
-//!    PJRT** for one configuration (proving L1→L2→L3 compose) and
-//!    natively for the grid,
+//! 1. opens one [`PruneSession`] over the build-time-pretrained
+//!    checkpoints (models load once, calibrations are memoized),
+//! 2. prunes with all four Table-1 methods at 60% per-row + 2:4 via
+//!    declarative [`JobSpec`]s on the native backend,
+//! 3. re-runs one SparseFW configuration with the **PJRT backend**
+//!    (AOT Pallas kernels, fused chunk) — same spec, different
+//!    `backend` field — proving L1→L2→L3 compose,
 //! 4. evaluates perplexity through both the native forward and the AOT
 //!    `model_fwd` executable, cross-checking the two,
 //! 5. prints a Table-1-shaped summary.
@@ -15,29 +16,21 @@
 //!   cargo run --release --example prune_e2e -- --fast  # smoke
 
 use anyhow::Result;
-use sparsefw::coordinator::PrunePipeline;
-use sparsefw::eval::{perplexity_native, perplexity_pjrt, zero_shot};
+use sparsefw::eval::{perplexity_native, perplexity_pjrt};
 use sparsefw::prelude::*;
-use sparsefw::pruner::PruneMethod;
 
 fn main() -> Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
-    let ws = Workspace::open_default()?;
+    let mut session = PruneSession::open_default()?;
     let (iters, samples, eval_seqs) = if fast { (40, 16, 16) } else { (400, 128, 64) };
+    let zs_items = if fast { 12 } else { 60 };
+    let test = session.test_bin()?.clone();
 
-    let test = ws.test_bin()?;
-    let train = ws.train_bin()?;
-    let runtime = ws.runtime()?;
-
-    for model_name in ws.manifest.model_names() {
-        let model = ws.load_model(&model_name)?;
+    for model_name in session.model_names() {
         println!(
-            "\n=== model {model_name} ({} params, dense ppl {:?}) ===",
-            model.n_params(),
-            ws.manifest.dense_test_ppl(&model_name)
+            "\n=== model {model_name} ({} params) ===",
+            session.model(&model_name)?.n_params()
         );
-        let calib = Calibration::collect(&model, &train, samples, 7)?;
-        let pipe = PrunePipeline::new(&model, &calib);
 
         for pattern in [
             SparsityPattern::PerRow { sparsity: 0.6 },
@@ -61,15 +54,22 @@ fn main() -> Result<()> {
                 ),
             ];
             for (label, method) in methods {
-                let res = pipe.run(&method, &pattern)?;
-                let pruned = res.apply(&model)?;
-                let ppl = perplexity_native(&pruned, &test, eval_seqs)?;
-                let zs = zero_shot(&pruned, 0xE7A1, if fast { 12 } else { 60 })?;
+                let spec = JobSpec {
+                    model: model_name.clone(),
+                    method,
+                    allocation: Allocation::Uniform(pattern.clone()),
+                    calib_samples: samples,
+                    eval: Some(EvalSpec { seqs: eval_seqs, zs_items }),
+                    ..Default::default()
+                };
+                let res = session.execute(&spec)?;
+                let ev = res.eval.as_ref().expect("spec requested eval");
                 println!(
-                    "{label:>16}: ppl {ppl:7.3}  0-shot {:5.2}%  Σerr {:9.3e}  ({:.1}s{})",
-                    zs.mean() * 100.0,
-                    res.layer_objs.values().sum::<f64>(),
-                    res.wall_seconds,
+                    "{label:>16}: ppl {:7.3}  0-shot {:5.2}%  Σerr {:9.3e}  ({:.1}s{})",
+                    ev.ppl,
+                    ev.zero_shot.mean() * 100.0,
+                    res.total_err(),
+                    res.wall_seconds(),
                     res.mean_rel_reduction()
                         .map(|r| format!(", red {:.0}%", r * 100.0))
                         .unwrap_or_default(),
@@ -78,33 +78,46 @@ fn main() -> Result<()> {
         }
 
         // --- AOT/PJRT composition proof -----------------------------------
-        // One SparseFW configuration executed through the Pallas kernels
-        // (PJRT backend, fused chunk), and perplexity through model_fwd.
+        // The same declarative job, switched to the PJRT-chunk backend:
+        // the FW hot loop runs through the AOT Pallas kernels, and
+        // perplexity is cross-checked through the model_fwd executable.
+        // Skipped gracefully when the runtime is unavailable (no
+        // artifacts, or a build without XLA bindings).
         println!("--- PJRT path (AOT Pallas kernels + model_fwd executable) ---");
-        let pattern = SparsityPattern::Unstructured { sparsity: 0.6 };
-        let method = PruneMethod::SparseFw(SparseFwConfig {
-            iters: if fast { 20 } else { 100 },
+        let pjrt_spec = JobSpec {
+            model: model_name.clone(),
+            method: PruneMethod::SparseFw(SparseFwConfig {
+                iters: if fast { 20 } else { 100 },
+                ..Default::default()
+            }),
+            allocation: Allocation::Uniform(SparsityPattern::Unstructured { sparsity: 0.6 }),
+            backend: Backend::PjrtChunk,
+            calib_samples: samples,
             ..Default::default()
-        });
-        let res = pipe.run_with_backend(
-            sparsefw::config::Backend::PjrtChunk,
-            Some(&runtime),
-            &method,
-            &pattern,
-        )?;
-        let pruned = res.apply(&model)?;
-        let ppl_native = perplexity_native(&pruned, &test, eval_seqs.min(24))?;
-        let ppl_pjrt = perplexity_pjrt(&runtime, &pruned, &model_name, &test, eval_seqs.min(24))?;
-        println!(
-            "sparsefw[pjrt-chunk] {}: ppl native {ppl_native:.3} vs pjrt {ppl_pjrt:.3} (Δ {:.2e}), prune {:.1}s",
-            pattern.label(),
-            (ppl_native - ppl_pjrt).abs(),
-            res.wall_seconds,
-        );
-        anyhow::ensure!(
-            (ppl_native - ppl_pjrt).abs() < 0.05 * ppl_native,
-            "native and PJRT perplexity disagree"
-        );
+        };
+        // skip only when the runtime itself is unavailable; a failure
+        // *inside* a PJRT-backed job is a real regression and propagates
+        let runtime_err = session.runtime().err();
+        if let Some(e) = runtime_err {
+            println!("(PJRT path skipped: {e:#})");
+        } else {
+            let res = session.execute(&pjrt_spec)?;
+            let pruned = res.apply(session.model(&model_name)?)?;
+            let n = eval_seqs.min(24);
+            let ppl_native = perplexity_native(&pruned, &test, n)?;
+            let ppl_pjrt =
+                perplexity_pjrt(session.runtime()?, &pruned, &model_name, &test, n)?;
+            println!(
+                "sparsefw[pjrt-chunk] {}: ppl native {ppl_native:.3} vs pjrt {ppl_pjrt:.3} (Δ {:.2e}), prune {:.1}s",
+                pjrt_spec.allocation.label(),
+                (ppl_native - ppl_pjrt).abs(),
+                res.wall_seconds(),
+            );
+            anyhow::ensure!(
+                (ppl_native - ppl_pjrt).abs() < 0.05 * ppl_native,
+                "native and PJRT perplexity disagree"
+            );
+        }
     }
     println!("\nprune_e2e OK");
     Ok(())

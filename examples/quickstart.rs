@@ -1,53 +1,59 @@
-//! Quickstart: open the workspace, prune one model with SparseFW, and
-//! compare perplexity against the Wanda baseline.
+//! Quickstart: open a [`PruneSession`], execute two declarative
+//! [`JobSpec`]s (the Wanda baseline and SparseFW), and compare
+//! perplexity.  The second job reuses the session's memoized
+//! calibration — grams are collected once.
 //!
 //!   make artifacts && cargo run --release --example quickstart
 //!
 //! Flags via env: SPARSEFW_ARTIFACTS (workspace dir).
 
 use anyhow::Result;
-use sparsefw::coordinator::PrunePipeline;
-use sparsefw::eval::{perplexity_native, zero_shot};
 use sparsefw::prelude::*;
-use sparsefw::pruner::PruneMethod;
 
 fn main() -> Result<()> {
-    let ws = Workspace::open_default()?;
-    let model_name = ws.manifest.model_names()[0].clone();
-    let model = ws.load_model(&model_name)?;
+    let mut session = PruneSession::open_default()?;
+    let model_name = session.model_names()[0].clone();
     println!(
-        "model {model_name}: {} params, dense build-time ppl {:?}",
-        model.n_params(),
-        ws.manifest.dense_test_ppl(&model_name)
+        "model {model_name}: {} params",
+        session.model(&model_name)?.n_params()
     );
 
-    // 1. Calibrate: G = XXᵀ per pruned linear, from 64 train sequences.
-    let calib = Calibration::collect(&model, &ws.train_bin()?, 64, 7)?;
+    // Per-layer progress events (completion order; the native backend
+    // prunes layers in parallel).
+    session.on_progress(|e| {
+        eprintln!("  [{}/{}] {} pruned (err {:.3e})", e.index + 1, e.total, e.layer, e.obj);
+    });
 
-    // 2. Prune to 60% per-row sparsity: Wanda baseline vs SparseFW.
-    let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
-    let pipe = PrunePipeline::new(&model, &calib);
+    // One declarative spec per run: 60% per-row sparsity, 64 calib
+    // sequences, evaluation included.  JobSpecs round-trip through
+    // JSON — `sparsefw prune --spec job.json` replays them.
+    let base = JobSpec {
+        model: model_name.clone(),
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
+        calib_samples: 64,
+        eval: Some(EvalSpec { seqs: 48, zs_items: 48 }),
+        ..Default::default()
+    };
 
-    let wanda = pipe.run(&PruneMethod::Wanda, &pattern)?;
-    let fw = pipe.run(
-        &PruneMethod::SparseFw(SparseFwConfig { iters: 300, ..Default::default() }),
-        &pattern,
-    )?;
+    let wanda = session.execute(&JobSpec { method: PruneMethod::Wanda, ..base.clone() })?;
+    let fw = session.execute(&JobSpec {
+        method: PruneMethod::SparseFw(SparseFwConfig { iters: 300, ..Default::default() }),
+        ..base
+    })?;
+    let (hits, misses) = session.calib_stats();
     println!(
-        "SparseFW mean per-layer error reduction vs Wanda warmstart: {:.1}%",
+        "SparseFW mean per-layer error reduction vs Wanda warmstart: {:.1}% \
+         (calibration cache: {hits} hits / {misses} misses)",
         fw.mean_rel_reduction().unwrap_or(0.0) * 100.0
     );
 
-    // 3. Evaluate both masked models.
-    let test = ws.test_bin()?;
     for (name, res) in [("wanda", &wanda), ("sparsefw", &fw)] {
-        let pruned = res.apply(&model)?;
-        let ppl = perplexity_native(&pruned, &test, 48)?;
-        let zs = zero_shot(&pruned, 0xE7A1, 48)?;
+        let ev = res.eval.as_ref().expect("spec requested eval");
         println!(
-            "{name:>9}: ppl {ppl:7.3}  zero-shot {:5.2}%  (sparsity {:.3})",
-            zs.mean() * 100.0,
-            pruned.pruned_sparsity()
+            "{name:>9}: ppl {:7.3}  zero-shot {:5.2}%  (sparsity {:.3})",
+            ev.ppl,
+            ev.zero_shot.mean() * 100.0,
+            res.pruned_sparsity.unwrap_or(0.0)
         );
     }
     Ok(())

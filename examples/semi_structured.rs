@@ -1,23 +1,26 @@
 //! Semi-structured (n:m) pruning walkthrough — the Appendix-D LMO in
-//! action: prune to 2:4 and 1:4, verify hardware-friendly block
-//! structure, and compare methods.
+//! action: prune to 2:4 and 1:4 via declarative [`JobSpec`]s, verify
+//! hardware-friendly block structure, and compare methods.
 //!
 //!   cargo run --release --example semi_structured
 
 use anyhow::Result;
-use sparsefw::coordinator::PrunePipeline;
-use sparsefw::eval::perplexity_native;
 use sparsefw::prelude::*;
 use sparsefw::pruner::mask::mask_satisfies;
-use sparsefw::pruner::PruneMethod;
 
 fn main() -> Result<()> {
-    let ws = Workspace::open_default()?;
-    let model_name = ws.manifest.model_names()[0].clone();
-    let model = ws.load_model(&model_name)?;
-    let calib = Calibration::collect(&model, &ws.train_bin()?, 64, 7)?;
-    let test = ws.test_bin()?;
-    let pipe = PrunePipeline::new(&model, &calib);
+    let mut session = PruneSession::open_default()?;
+    let model_name = session.model_names()[0].clone();
+
+    let spec_for = |method: PruneMethod, pattern: &SparsityPattern| JobSpec {
+        model: model_name.clone(),
+        method,
+        allocation: Allocation::Uniform(pattern.clone()),
+        calib_samples: 64,
+        // zs_items: 0 — only perplexity is printed here
+        eval: Some(EvalSpec { seqs: 48, zs_items: 0 }),
+        ..Default::default()
+    };
 
     for (keep, block) in [(2usize, 4usize), (1, 4)] {
         let pattern = SparsityPattern::NM { keep, block };
@@ -35,27 +38,28 @@ fn main() -> Result<()> {
                 PruneMethod::SparseFw(SparseFwConfig { iters: 300, ..Default::default() }),
             ),
         ] {
-            let res = pipe.run(&method, &pattern)?;
+            let res = session.execute(&spec_for(method, &pattern))?;
             // every mask must satisfy the block constraint exactly
-            for (name, m) in &res.masks {
+            for (name, m) in res.masks() {
                 anyhow::ensure!(mask_satisfies(m, &pattern), "{name} violates {keep}:{block}");
             }
-            let pruned = res.apply(&model)?;
-            let ppl = perplexity_native(&pruned, &test, 48)?;
+            let ppl = res.eval.as_ref().expect("spec requested eval").ppl;
             println!(
                 "{label:>10}: ppl {ppl:7.3}  Σ layer err {:9.3e}",
-                res.layer_objs.values().sum::<f64>()
+                res.total_err()
             );
         }
     }
 
     // Show the block structure of one pruned row.
     let pattern = SparsityPattern::NM { keep: 2, block: 4 };
-    let res = pipe.run(
-        &PruneMethod::SparseFw(SparseFwConfig { iters: 100, ..Default::default() }),
+    let mut spec = spec_for(
+        PruneMethod::SparseFw(SparseFwConfig { iters: 100, ..Default::default() }),
         &pattern,
-    )?;
-    let (name, mask) = res.masks.iter().next().unwrap();
+    );
+    spec.eval = None; // only the mask matters here
+    let res = session.execute(&spec)?;
+    let (name, mask) = res.masks().iter().next().unwrap();
     print!("\n{name} row 0 mask (blocks of 4): ");
     for (j, v) in mask.row(0).iter().enumerate().take(24) {
         if j % 4 == 0 {

@@ -3,25 +3,25 @@
 //! evaluation cost.  The paper's claim that SparseFW is "clearly more
 //! compute-intensive than Wanda and RIA" is quantified here as the
 //! method-time ratio.
+//!
+//! Each method runs as one declarative [`JobSpec`] through a shared
+//! [`PruneSession`] — the calibration is collected once and memoized,
+//! so the timings isolate the pruning work itself.
 
 use sparsefw::bench::Bencher;
 use sparsefw::calib::Calibration;
-use sparsefw::config::Workspace;
-use sparsefw::coordinator::PrunePipeline;
 use sparsefw::eval::perplexity_native;
-use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern};
+use sparsefw::prelude::*;
 
 fn main() {
-    let Ok(ws) = Workspace::open_default() else {
+    let Ok(mut session) = PruneSession::open_default() else {
         eprintln!("artifacts/ not found — run `make artifacts` first");
         return;
     };
-    let model_name = ws.manifest.model_names()[0].clone();
-    let model = ws.load_model(&model_name).unwrap();
-    let train = ws.train_bin().unwrap();
-    let test = ws.test_bin().unwrap();
-    let calib = Calibration::collect(&model, &train, 64, 7).unwrap();
-    let pipe = PrunePipeline::new(&model, &calib);
+    let model_name = session.model_names()[0].clone();
+    let model = session.model(&model_name).unwrap().clone();
+    let train = session.train_bin().unwrap().clone();
+    let test = session.test_bin().unwrap().clone();
     let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
 
     let mut b = Bencher::new(format!("table1_methods/{model_name}").as_str());
@@ -42,8 +42,15 @@ fn main() {
             PruneMethod::SparseFw(SparseFwConfig { iters: 400, ..Default::default() }),
         ),
     ] {
+        let spec = JobSpec {
+            model: model_name.clone(),
+            method,
+            allocation: Allocation::Uniform(pattern.clone()),
+            calib_samples: 64,
+            ..Default::default()
+        };
         b.bench(&format!("prune/{label}"), || {
-            std::hint::black_box(pipe.run(&method, &pattern).unwrap());
+            std::hint::black_box(session.execute(&spec).unwrap());
         });
     }
 

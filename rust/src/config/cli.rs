@@ -1,8 +1,11 @@
 //! Minimal CLI argument parser (the offline registry has no `clap`).
 //!
 //! Grammar: `sparsefw <subcommand> [--key value | --key=value | --flag]…`
-//! Values never begin with `--`; a `--key` followed by another `--key`
-//! (or end-of-args) is a boolean flag.
+//! A `--key` followed by another flag-looking token (or end-of-args) is
+//! a boolean flag.  Negative numbers are *values*, not flags: numeric
+//! keys accept `-`-prefixed tokens that parse as numbers
+//! (`--alpha -0.5`), while non-numeric `-`-prefixed tokens still read
+//! as flags.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -25,7 +28,7 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if it.peek().map(|n| is_value_token(n)).unwrap_or(false) {
                     let v = it.next().unwrap();
                     args.flags.insert(key.to_string(), v);
                 } else {
@@ -72,6 +75,13 @@ impl Args {
             .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
             .unwrap_or_default()
     }
+}
+
+/// A following token counts as a key's value when it does not look like
+/// a flag: anything not `-`-prefixed, plus negative numbers
+/// (`--alpha -0.5`, `--shift -2`) which numeric-style keys must accept.
+fn is_value_token(tok: &str) -> bool {
+    !tok.starts_with('-') || tok.parse::<f64>().is_ok()
 }
 
 /// Parse a sparsity pattern: `unstructured:0.6`, `per-row:0.5`, `2:4`,
@@ -138,6 +148,20 @@ mod tests {
         assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.5);
         assert!(a.has("fast"));
         assert_eq!(a.get_usize("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn negative_numeric_values() {
+        // regression: `--alpha -0.5` must bind -0.5 as the value, not
+        // turn `alpha` into a boolean flag
+        let a = Args::parse(argv("prune --alpha -0.5 --shift -2 --eps=-1e-3 --fast")).unwrap();
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), -0.5);
+        assert!(!a.bools.contains("alpha"));
+        assert_eq!(a.get_f64("shift", 0.0).unwrap(), -2.0);
+        assert_eq!(a.get_f64("eps", 0.0).unwrap(), -1e-3);
+        assert!(a.has("fast"));
+        // non-numeric `-`-prefixed tokens are not swallowed as values
+        assert!(Args::parse(argv("x --name -oops")).is_err());
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Workspace + run configuration.
 //!
 //! [`Workspace`] ties together the artifacts directory (manifest, token
-//! bins, checkpoints, HLO executables).  [`PruneRunConfig`] is the
-//! JSON-serializable description of one pruning run — what the CLI
-//! builds from flags and what reports embed for reproducibility.
+//! bins, checkpoints, HLO executables).  The CLI lowers its flags into
+//! a declarative [`crate::coordinator::JobSpec`]; the shared
+//! method/pattern JSON codecs live here ([`method_to_json`] & co), and
+//! the legacy [`PruneRunConfig`] remains for stored run configs.
 
 pub mod cli;
 
@@ -89,7 +90,109 @@ impl Backend {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared JSON codecs for method / pattern — the substrate behind both
+// the legacy [`PruneRunConfig`] and the declarative
+// [`crate::coordinator::JobSpec`].
+// ---------------------------------------------------------------------------
+
+/// Serialize a [`PruneMethod`] to its JSON object form.
+pub fn method_to_json(method: &PruneMethod) -> Json {
+    match method {
+        PruneMethod::Magnitude => Json::obj(vec![("kind", "magnitude".into())]),
+        PruneMethod::Wanda => Json::obj(vec![("kind", "wanda".into())]),
+        PruneMethod::Ria => Json::obj(vec![("kind", "ria".into())]),
+        PruneMethod::SparseFw(c) => Json::obj(vec![
+            ("kind", "sparsefw".into()),
+            ("iters", c.iters.into()),
+            ("alpha", c.alpha.into()),
+            ("warmstart", c.warmstart.label().into()),
+            ("trace_every", c.trace_every.into()),
+            ("use_chunk", c.use_chunk.into()),
+            ("keep_best", c.keep_best.into()),
+            ("line_search", c.line_search.into()),
+        ]),
+        PruneMethod::SparseGpt { percdamp, blocksize } => Json::obj(vec![
+            ("kind", "sparsegpt".into()),
+            ("percdamp", (*percdamp).into()),
+            ("blocksize", (*blocksize).into()),
+        ]),
+    }
+}
+
+/// Parse a [`PruneMethod`] from its JSON object form (missing fields
+/// fall back to the CLI defaults).
+pub fn method_from_json(mj: &Json) -> Result<PruneMethod> {
+    let warmstart = |s: Option<&str>| -> Result<Warmstart> {
+        Ok(match s.unwrap_or("wanda") {
+            "wanda" => Warmstart::Wanda,
+            "ria" => Warmstart::Ria,
+            "magnitude" => Warmstart::Magnitude,
+            other => bail!("unknown warmstart {other:?}"),
+        })
+    };
+    Ok(match mj.at(&["kind"]).as_str().unwrap_or("sparsefw") {
+        "magnitude" => PruneMethod::Magnitude,
+        "wanda" => PruneMethod::Wanda,
+        "ria" => PruneMethod::Ria,
+        "sparsegpt" => PruneMethod::SparseGpt {
+            percdamp: mj.at(&["percdamp"]).as_f64().unwrap_or(0.01),
+            blocksize: mj.at(&["blocksize"]).as_usize().unwrap_or(128),
+        },
+        "sparsefw" => PruneMethod::SparseFw(SparseFwConfig {
+            iters: mj.at(&["iters"]).as_usize().unwrap_or(500),
+            alpha: mj.at(&["alpha"]).as_f64().unwrap_or(0.9),
+            warmstart: warmstart(mj.at(&["warmstart"]).as_str())?,
+            trace_every: mj.at(&["trace_every"]).as_usize().unwrap_or(0),
+            use_chunk: mj.at(&["use_chunk"]).as_bool().unwrap_or(true),
+            keep_best: mj.at(&["keep_best"]).as_bool().unwrap_or(true),
+            line_search: mj.at(&["line_search"]).as_bool().unwrap_or(false),
+        }),
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+/// Serialize a [`SparsityPattern`] to its JSON object form.
+pub fn pattern_to_json(pattern: &SparsityPattern) -> Json {
+    match pattern {
+        SparsityPattern::Unstructured { sparsity } => Json::obj(vec![
+            ("kind", "unstructured".into()),
+            ("sparsity", (*sparsity).into()),
+        ]),
+        SparsityPattern::PerRow { sparsity } => Json::obj(vec![
+            ("kind", "per_row".into()),
+            ("sparsity", (*sparsity).into()),
+        ]),
+        SparsityPattern::NM { keep, block } => Json::obj(vec![
+            ("kind", "nm".into()),
+            ("keep", (*keep).into()),
+            ("block", (*block).into()),
+        ]),
+    }
+}
+
+/// Parse a [`SparsityPattern`] from its JSON object form.
+pub fn pattern_from_json(pj: &Json) -> Result<SparsityPattern> {
+    Ok(match pj.at(&["kind"]).as_str().unwrap_or("unstructured") {
+        "unstructured" => SparsityPattern::Unstructured {
+            sparsity: pj.at(&["sparsity"]).as_f64().unwrap_or(0.5),
+        },
+        "per_row" => SparsityPattern::PerRow {
+            sparsity: pj.at(&["sparsity"]).as_f64().unwrap_or(0.5),
+        },
+        "nm" => SparsityPattern::NM {
+            keep: pj.at(&["keep"]).as_usize().unwrap_or(2),
+            block: pj.at(&["block"]).as_usize().unwrap_or(4),
+        },
+        other => bail!("unknown pattern {other:?}"),
+    })
+}
+
 /// Full description of one pruning run (JSON round-trippable).
+///
+/// Superseded by the richer [`crate::coordinator::JobSpec`] (which adds
+/// non-uniform allocation, tracing and eval options); kept for
+/// callers that stored run configs in report JSON.
 #[derive(Clone, Debug)]
 pub struct PruneRunConfig {
     pub model: String,
@@ -115,45 +218,10 @@ impl Default for PruneRunConfig {
 
 impl PruneRunConfig {
     pub fn to_json(&self) -> Json {
-        let method = match &self.method {
-            PruneMethod::Magnitude => Json::obj(vec![("kind", "magnitude".into())]),
-            PruneMethod::Wanda => Json::obj(vec![("kind", "wanda".into())]),
-            PruneMethod::Ria => Json::obj(vec![("kind", "ria".into())]),
-            PruneMethod::SparseFw(c) => Json::obj(vec![
-                ("kind", "sparsefw".into()),
-                ("iters", c.iters.into()),
-                ("alpha", c.alpha.into()),
-                ("warmstart", c.warmstart.label().into()),
-                ("trace_every", c.trace_every.into()),
-                ("use_chunk", c.use_chunk.into()),
-                ("keep_best", c.keep_best.into()),
-                ("line_search", c.line_search.into()),
-            ]),
-            PruneMethod::SparseGpt { percdamp, blocksize } => Json::obj(vec![
-                ("kind", "sparsegpt".into()),
-                ("percdamp", (*percdamp).into()),
-                ("blocksize", (*blocksize).into()),
-            ]),
-        };
-        let pattern = match &self.pattern {
-            SparsityPattern::Unstructured { sparsity } => Json::obj(vec![
-                ("kind", "unstructured".into()),
-                ("sparsity", (*sparsity).into()),
-            ]),
-            SparsityPattern::PerRow { sparsity } => Json::obj(vec![
-                ("kind", "per_row".into()),
-                ("sparsity", (*sparsity).into()),
-            ]),
-            SparsityPattern::NM { keep, block } => Json::obj(vec![
-                ("kind", "nm".into()),
-                ("keep", (*keep).into()),
-                ("block", (*block).into()),
-            ]),
-        };
         Json::obj(vec![
             ("model", self.model.as_str().into()),
-            ("method", method),
-            ("pattern", pattern),
+            ("method", method_to_json(&self.method)),
+            ("pattern", pattern_to_json(&self.pattern)),
             ("calib_samples", self.calib_samples.into()),
             ("calib_seed", (self.calib_seed as usize).into()),
             ("backend", self.backend.label().into()),
@@ -161,52 +229,10 @@ impl PruneRunConfig {
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
-        let warmstart = |s: Option<&str>| -> Result<Warmstart> {
-            Ok(match s.unwrap_or("wanda") {
-                "wanda" => Warmstart::Wanda,
-                "ria" => Warmstart::Ria,
-                "magnitude" => Warmstart::Magnitude,
-                other => bail!("unknown warmstart {other:?}"),
-            })
-        };
-        let mj = v.at(&["method"]);
-        let method = match mj.at(&["kind"]).as_str().unwrap_or("sparsefw") {
-            "magnitude" => PruneMethod::Magnitude,
-            "wanda" => PruneMethod::Wanda,
-            "ria" => PruneMethod::Ria,
-            "sparsegpt" => PruneMethod::SparseGpt {
-                percdamp: mj.at(&["percdamp"]).as_f64().unwrap_or(0.01),
-                blocksize: mj.at(&["blocksize"]).as_usize().unwrap_or(128),
-            },
-            "sparsefw" => PruneMethod::SparseFw(SparseFwConfig {
-                iters: mj.at(&["iters"]).as_usize().unwrap_or(500),
-                alpha: mj.at(&["alpha"]).as_f64().unwrap_or(0.9),
-                warmstart: warmstart(mj.at(&["warmstart"]).as_str())?,
-                trace_every: mj.at(&["trace_every"]).as_usize().unwrap_or(0),
-                use_chunk: mj.at(&["use_chunk"]).as_bool().unwrap_or(true),
-                keep_best: mj.at(&["keep_best"]).as_bool().unwrap_or(true),
-                line_search: mj.at(&["line_search"]).as_bool().unwrap_or(false),
-            }),
-            other => bail!("unknown method {other:?}"),
-        };
-        let pj = v.at(&["pattern"]);
-        let pattern = match pj.at(&["kind"]).as_str().unwrap_or("unstructured") {
-            "unstructured" => SparsityPattern::Unstructured {
-                sparsity: pj.at(&["sparsity"]).as_f64().unwrap_or(0.5),
-            },
-            "per_row" => SparsityPattern::PerRow {
-                sparsity: pj.at(&["sparsity"]).as_f64().unwrap_or(0.5),
-            },
-            "nm" => SparsityPattern::NM {
-                keep: pj.at(&["keep"]).as_usize().unwrap_or(2),
-                block: pj.at(&["block"]).as_usize().unwrap_or(4),
-            },
-            other => bail!("unknown pattern {other:?}"),
-        };
         Ok(Self {
             model: v.at(&["model"]).as_str().unwrap_or("tiny").to_string(),
-            method,
-            pattern,
+            method: method_from_json(v.at(&["method"]))?,
+            pattern: pattern_from_json(v.at(&["pattern"]))?,
             calib_samples: v.at(&["calib_samples"]).as_usize().unwrap_or(128),
             calib_seed: v.at(&["calib_seed"]).as_f64().unwrap_or(7.0) as u64,
             backend: Backend::parse(v.at(&["backend"]).as_str().unwrap_or("native"))?,

@@ -1,0 +1,790 @@
+//! Declarative pruning jobs.
+//!
+//! A pruning run is a pure function of a small spec: the paper prunes
+//! layers "sequentially and independently" against calibration grams,
+//! so *what* to run ([`JobSpec`]) separates cleanly from *how* to run
+//! it ([`PruneSession`]).
+//!
+//! * [`JobSpec`] — model, method, [`Allocation`] (uniform pattern or
+//!   OWL-style per-layer sparsities), backend, calibration sample/seed,
+//!   tracing and eval options.  Round-trips through [`crate::util::json`]
+//!   so jobs can be saved, replayed, and submitted as files
+//!   (`sparsefw prune --spec job.json`).
+//! * [`PruneSession`] — owns the [`Workspace`], lazily loads models and
+//!   token bins, memoizes [`Calibration`] by `(model, samples, seed)`
+//!   (report sweeps and repeated jobs stop recollecting grams), creates
+//!   the PJRT runtime on first use, and emits per-layer [`LayerEvent`]
+//!   progress callbacks.
+//!
+//! [`PruneSession::execute`] replaces the four legacy
+//! `PrunePipeline::run*` entry points with one unified dispatch; in
+//! particular non-uniform allocation now works on every backend.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::calib::Calibration;
+use crate::config::{self, Backend, Workspace};
+use crate::data::TokenBin;
+use crate::eval::{perplexity_native, perplexity_pjrt, zero_shot, ZeroShotReport};
+use crate::model::Gpt;
+use crate::pruner::allocation::{owl_sparsities, OwlConfig};
+use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern};
+use crate::runtime::PjrtRuntime;
+use crate::tensor::Mat;
+use crate::util::json::{self, Json};
+
+use super::{per_layer_patterns, run_layers, PruneResult};
+
+// ---------------------------------------------------------------------------
+// Allocation
+// ---------------------------------------------------------------------------
+
+/// How the sparsity budget is allocated across layers: one uniform
+/// [`SparsityPattern`] (the paper's protocol), an explicit per-layer
+/// sparsity map, or an OWL-style allocation derived from the
+/// calibration at execute time (Yin et al. 2023).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Allocation {
+    /// The same pattern for every layer.
+    Uniform(SparsityPattern),
+    /// Explicit per-layer sparsities, applied as per-row budgets.
+    PerLayer(BTreeMap<String, f64>),
+    /// Outlier-weighed allocation computed from the calibration grams.
+    Owl { target: f64, lambda: f64, max_shift: f64 },
+}
+
+impl Allocation {
+    /// OWL with the [`OwlConfig`] defaults.
+    pub fn owl(target: f64) -> Self {
+        let cfg = OwlConfig::default();
+        Allocation::Owl { target, lambda: cfg.lambda, max_shift: cfg.max_shift }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Allocation::Uniform(p) => p.label(),
+            Allocation::PerLayer(m) => format!("per-layer({} layers)", m.len()),
+            Allocation::Owl { target, .. } => format!("owl-{:.0}%", target * 100.0),
+        }
+    }
+
+    /// Resolve to one pattern per pruned linear, in layer order.  This
+    /// is what makes non-uniform allocation backend-agnostic: every
+    /// backend consumes the same resolved pattern list.
+    pub fn resolve(&self, model: &Gpt, calib: &Calibration) -> Result<Vec<SparsityPattern>> {
+        match self {
+            Allocation::Uniform(p) => Ok(vec![p.clone(); model.cfg.layers().len()]),
+            Allocation::PerLayer(map) => per_layer_patterns(model, map),
+            Allocation::Owl { target, lambda, max_shift } => {
+                let cfg = OwlConfig { lambda: *lambda, max_shift: *max_shift };
+                let map = owl_sparsities(model, calib, *target, &cfg)?;
+                per_layer_patterns(model, &map)
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Allocation::Uniform(p) => Json::obj(vec![
+                ("kind", "uniform".into()),
+                ("pattern", config::pattern_to_json(p)),
+            ]),
+            Allocation::PerLayer(map) => {
+                let entries = map
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                    .collect();
+                Json::obj(vec![
+                    ("kind", "per_layer".into()),
+                    ("sparsities", Json::Obj(entries)),
+                ])
+            }
+            Allocation::Owl { target, lambda, max_shift } => Json::obj(vec![
+                ("kind", "owl".into()),
+                ("target", (*target).into()),
+                ("lambda", (*lambda).into()),
+                ("max_shift", (*max_shift).into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(match v.at(&["kind"]).as_str().unwrap_or("uniform") {
+            "uniform" => Allocation::Uniform(config::pattern_from_json(v.at(&["pattern"]))?),
+            "per_layer" => {
+                let obj = v
+                    .at(&["sparsities"])
+                    .as_obj()
+                    .context("per_layer allocation needs a \"sparsities\" object")?;
+                let mut map = BTreeMap::new();
+                for (k, s) in obj {
+                    let s = s
+                        .as_f64()
+                        .with_context(|| format!("sparsity for layer {k} must be a number"))?;
+                    map.insert(k.clone(), s);
+                }
+                Allocation::PerLayer(map)
+            }
+            "owl" => {
+                let defaults = OwlConfig::default();
+                Allocation::Owl {
+                    target: v.at(&["target"]).as_f64().unwrap_or(0.6),
+                    lambda: v.at(&["lambda"]).as_f64().unwrap_or(defaults.lambda),
+                    max_shift: v.at(&["max_shift"]).as_f64().unwrap_or(defaults.max_shift),
+                }
+            }
+            other => bail!("unknown allocation kind {other:?}"),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobSpec
+// ---------------------------------------------------------------------------
+
+/// Post-prune evaluation options (native perplexity + zero-shot suite).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalSpec {
+    /// Perplexity eval sequences (paper: 100 validation sequences).
+    pub seqs: usize,
+    /// Items per zero-shot task (0 = skip the zero-shot suite; the
+    /// report then carries all-zero accuracies).
+    pub zs_items: usize,
+}
+
+impl Default for EvalSpec {
+    fn default() -> Self {
+        Self { seqs: 64, zs_items: 60 }
+    }
+}
+
+/// Declarative description of one pruning job — everything
+/// [`PruneSession::execute`] needs, and nothing it can derive.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub model: String,
+    pub method: PruneMethod,
+    pub allocation: Allocation,
+    pub backend: Backend,
+    pub calib_samples: usize,
+    pub calib_seed: u64,
+    /// Record an optimization trace point every N iterations (SparseFW
+    /// only; 0 = leave the method's own `trace_every` untouched).
+    pub trace_every: usize,
+    /// Evaluate the masked model after pruning.
+    pub eval: Option<EvalSpec>,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            method: PruneMethod::SparseFw(SparseFwConfig::default()),
+            allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+            backend: Backend::Native,
+            calib_samples: 128,
+            calib_seed: 7,
+            trace_every: 0,
+            eval: None,
+        }
+    }
+}
+
+impl JobSpec {
+    /// One-line summary for logs.
+    pub fn label(&self) -> String {
+        format!(
+            "{} · {} · {} · {} backend · {} samples (seed {})",
+            self.model,
+            self.method.label(),
+            self.allocation.label(),
+            self.backend.label(),
+            self.calib_samples,
+            self.calib_seed,
+        )
+    }
+
+    /// The method with the spec-level tracing override applied.
+    pub fn effective_method(&self) -> PruneMethod {
+        if self.trace_every > 0 {
+            if let PruneMethod::SparseFw(c) = &self.method {
+                return PruneMethod::SparseFw(SparseFwConfig {
+                    trace_every: self.trace_every,
+                    ..c.clone()
+                });
+            }
+        }
+        self.method.clone()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("model", Json::from(self.model.as_str())),
+            ("method", config::method_to_json(&self.method)),
+            ("allocation", self.allocation.to_json()),
+            ("backend", self.backend.label().into()),
+            ("calib_samples", self.calib_samples.into()),
+            ("calib_seed", (self.calib_seed as usize).into()),
+            ("trace_every", self.trace_every.into()),
+        ];
+        if let Some(e) = &self.eval {
+            fields.push((
+                "eval",
+                Json::obj(vec![("seqs", e.seqs.into()), ("zs_items", e.zs_items.into())]),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse a spec.  Accepts the legacy [`config::PruneRunConfig`]
+    /// layout too (a top-level `"pattern"` instead of `"allocation"`).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let allocation = if v.get("allocation").is_some() {
+            Allocation::from_json(v.at(&["allocation"]))?
+        } else if v.get("pattern").is_some() {
+            Allocation::Uniform(config::pattern_from_json(v.at(&["pattern"]))?)
+        } else {
+            Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 })
+        };
+        let eval = v.get("eval").map(|e| EvalSpec {
+            seqs: e.at(&["seqs"]).as_usize().unwrap_or(64),
+            zs_items: e.at(&["zs_items"]).as_usize().unwrap_or(60),
+        });
+        Ok(Self {
+            model: v.at(&["model"]).as_str().unwrap_or("tiny").to_string(),
+            method: config::method_from_json(v.at(&["method"]))?,
+            allocation,
+            backend: Backend::parse(v.at(&["backend"]).as_str().unwrap_or("native"))?,
+            calib_samples: v.at(&["calib_samples"]).as_usize().unwrap_or(128),
+            calib_seed: v.at(&["calib_seed"]).as_f64().unwrap_or(7.0) as u64,
+            trace_every: v.at(&["trace_every"]).as_usize().unwrap_or(0),
+            eval,
+        })
+    }
+
+    /// Write the spec as pretty JSON (replay with `prune --spec FILE`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))
+            .with_context(|| format!("writing job spec {path:?}"))
+    }
+
+    /// Load a spec written by [`JobSpec::save`] (or by hand).
+    pub fn load(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading job spec {path:?}"))?;
+        let v = json::parse(&src).with_context(|| format!("parsing job spec {path:?}"))?;
+        Self::from_json(&v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Results + progress events
+// ---------------------------------------------------------------------------
+
+/// Post-prune evaluation metrics of the masked model.
+#[derive(Clone, Debug)]
+pub struct EvalSummary {
+    pub ppl: f64,
+    pub zero_shot: ZeroShotReport,
+}
+
+/// One pruned layer, reported as it completes (completion order, not
+/// layer order, on the layer-parallel native backend).
+#[derive(Clone, Debug)]
+pub struct LayerEvent {
+    pub layer: String,
+    /// 0-based completion index.
+    pub index: usize,
+    pub total: usize,
+    /// Final per-layer pruning error L(M).
+    pub obj: f64,
+}
+
+/// Everything one [`JobSpec`] execution produced.
+pub struct JobResult {
+    /// The spec that produced this result (embed for reproducibility).
+    pub spec: JobSpec,
+    pub prune: PruneResult,
+    /// Achieved sparsity of the masked model (set when it was
+    /// materialized, i.e. when the spec requested eval).
+    pub pruned_sparsity: Option<f64>,
+    pub eval: Option<EvalSummary>,
+}
+
+impl JobResult {
+    /// Apply masks (and reconstructed weights) to a model.
+    pub fn apply(&self, model: &Gpt) -> Result<Gpt> {
+        self.prune.apply(model)
+    }
+
+    pub fn masks(&self) -> &BTreeMap<String, Mat> {
+        &self.prune.masks
+    }
+
+    /// Σ of the per-layer pruning errors.
+    pub fn total_err(&self) -> f64 {
+        self.prune.layer_objs.values().sum()
+    }
+
+    pub fn mean_rel_reduction(&self) -> Option<f64> {
+        self.prune.mean_rel_reduction()
+    }
+
+    pub fn wall_seconds(&self) -> f64 {
+        self.prune.wall_seconds
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PruneSession
+// ---------------------------------------------------------------------------
+
+/// The zero-shot suite, honouring `zs_items == 0` as "skip".
+fn run_zero_shot(model: &Gpt, spec: &EvalSpec) -> Result<ZeroShotReport> {
+    if spec.zs_items == 0 {
+        return Ok(ZeroShotReport { cloze: 0.0, copy_detect: 0.0, bigram: 0.0 });
+    }
+    zero_shot(model, 0xE7A1, spec.zs_items)
+}
+
+type ProgressBox = Box<dyn Fn(&LayerEvent) + Send + Sync>;
+
+/// Executes [`JobSpec`]s with memoized state.
+///
+/// Owns the artifacts [`Workspace`] (when opened from one), loads
+/// models and token bins lazily, memoizes [`Calibration`] by
+/// `(model, samples, seed)`, and creates the PJRT runtime on first
+/// PJRT-backed job.  Sessions are long-lived by design: report sweeps
+/// and repeated jobs pay for model loading and gram collection once.
+pub struct PruneSession {
+    ws: Option<Workspace>,
+    train: Option<TokenBin>,
+    test: Option<TokenBin>,
+    models: BTreeMap<String, Gpt>,
+    calibs: BTreeMap<(String, usize, u64), Calibration>,
+    runtime: Option<PjrtRuntime>,
+    progress: Option<ProgressBox>,
+    calib_hits: usize,
+    calib_misses: usize,
+}
+
+impl PruneSession {
+    pub fn new(ws: Workspace) -> Self {
+        Self {
+            ws: Some(ws),
+            train: None,
+            test: None,
+            models: BTreeMap::new(),
+            calibs: BTreeMap::new(),
+            runtime: None,
+            progress: None,
+            calib_hits: 0,
+            calib_misses: 0,
+        }
+    }
+
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self::new(Workspace::open(dir)?))
+    }
+
+    /// `$SPARSEFW_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Workspace::open_default()?))
+    }
+
+    /// Workspace-free session over preloaded models and token bins —
+    /// for tests, benches, and embedding the coordinator in servers
+    /// that manage their own checkpoints.  PJRT backends are
+    /// unavailable (no artifacts to compile).
+    pub fn in_memory(models: BTreeMap<String, Gpt>, train: TokenBin, test: TokenBin) -> Self {
+        Self {
+            ws: None,
+            train: Some(train),
+            test: Some(test),
+            models,
+            calibs: BTreeMap::new(),
+            runtime: None,
+            progress: None,
+            calib_hits: 0,
+            calib_misses: 0,
+        }
+    }
+
+    pub fn workspace(&self) -> Option<&Workspace> {
+        self.ws.as_ref()
+    }
+
+    /// Models this session can execute against (manifest names when a
+    /// workspace is attached, otherwise the preloaded ones).
+    pub fn model_names(&self) -> Vec<String> {
+        match &self.ws {
+            Some(ws) => ws.manifest.model_names(),
+            None => self.models.keys().cloned().collect(),
+        }
+    }
+
+    /// Install a per-layer progress callback ([`LayerEvent`] per
+    /// completed layer).  Called from worker threads on the native
+    /// backend, so it must be `Send + Sync`.
+    pub fn on_progress(&mut self, cb: impl Fn(&LayerEvent) + Send + Sync + 'static) {
+        self.progress = Some(Box::new(cb));
+    }
+
+    pub fn clear_progress(&mut self) {
+        self.progress = None;
+    }
+
+    /// `(hits, misses)` of the calibration memo — a cheap way to verify
+    /// sweeps are not recollecting grams.
+    pub fn calib_stats(&self) -> (usize, usize) {
+        (self.calib_hits, self.calib_misses)
+    }
+
+    /// Load (or return the cached) model.
+    pub fn model(&mut self, name: &str) -> Result<&Gpt> {
+        if !self.models.contains_key(name) {
+            let ws = self
+                .ws
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("model {name:?} not loaded and session has no workspace"))?;
+            let m = ws.load_model(name)?;
+            crate::info!(
+                "loaded model {name}: {} params, dense ppl (build-time) = {:?}",
+                m.n_params(),
+                ws.manifest.dense_test_ppl(name)
+            );
+            self.models.insert(name.to_string(), m);
+        }
+        Ok(&self.models[name])
+    }
+
+    fn ensure_train(&mut self) -> Result<()> {
+        if self.train.is_none() {
+            let ws = self
+                .ws
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no calibration tokens: session has no workspace"))?;
+            self.train = Some(ws.train_bin()?);
+        }
+        Ok(())
+    }
+
+    fn ensure_test(&mut self) -> Result<()> {
+        if self.test.is_none() {
+            let ws = self
+                .ws
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no eval tokens: session has no workspace"))?;
+            self.test = Some(ws.test_bin()?);
+        }
+        Ok(())
+    }
+
+    fn ensure_runtime(&mut self) -> Result<()> {
+        if self.runtime.is_none() {
+            let ws = self.ws.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("PJRT backend requires a runtime: session has no artifacts workspace")
+            })?;
+            self.runtime = Some(ws.runtime().context("PJRT backend requires a runtime")?);
+        }
+        Ok(())
+    }
+
+    pub fn train_bin(&mut self) -> Result<&TokenBin> {
+        self.ensure_train()?;
+        Ok(self.train.as_ref().unwrap())
+    }
+
+    pub fn test_bin(&mut self) -> Result<&TokenBin> {
+        self.ensure_test()?;
+        Ok(self.test.as_ref().unwrap())
+    }
+
+    /// The (lazily created) PJRT runtime.
+    pub fn runtime(&mut self) -> Result<&PjrtRuntime> {
+        self.ensure_runtime()?;
+        Ok(self.runtime.as_ref().unwrap())
+    }
+
+    /// Collect (or return the memoized) calibration grams.
+    pub fn calibration(&mut self, name: &str, samples: usize, seed: u64) -> Result<&Calibration> {
+        let key = (name.to_string(), samples, seed);
+        if self.calibs.contains_key(&key) {
+            self.calib_hits += 1;
+        } else {
+            self.calib_misses += 1;
+            self.model(name)?;
+            self.ensure_train()?;
+            let model = &self.models[name];
+            let train = self.train.as_ref().unwrap();
+            let t0 = std::time::Instant::now();
+            let calib = Calibration::collect(model, train, samples, seed)?;
+            crate::info!(
+                "calibrated {name} ({samples} samples, seed {seed}) in {:.1}s",
+                t0.elapsed().as_secs_f64()
+            );
+            self.calibs.insert(key.clone(), calib);
+        }
+        Ok(&self.calibs[&key])
+    }
+
+    /// Native perplexity + zero-shot suite of any (masked) model.
+    pub fn evaluate(&mut self, model: &Gpt, spec: &EvalSpec) -> Result<EvalSummary> {
+        self.ensure_test()?;
+        let test = self.test.as_ref().unwrap();
+        let ppl = perplexity_native(model, test, spec.seqs)?;
+        Ok(EvalSummary { ppl, zero_shot: run_zero_shot(model, spec)? })
+    }
+
+    /// Like [`PruneSession::evaluate`] but scoring perplexity through
+    /// the AOT `model_fwd` executable.
+    pub fn evaluate_pjrt(
+        &mut self,
+        model: &Gpt,
+        model_name: &str,
+        spec: &EvalSpec,
+    ) -> Result<EvalSummary> {
+        self.ensure_test()?;
+        self.ensure_runtime()?;
+        let test = self.test.as_ref().unwrap();
+        let rt = self.runtime.as_ref().unwrap();
+        let ppl = perplexity_pjrt(rt, model, model_name, test, spec.seqs)?;
+        Ok(EvalSummary { ppl, zero_shot: run_zero_shot(model, spec)? })
+    }
+
+    /// Execute one declarative job: resolve the allocation, prune every
+    /// layer on the requested backend, and (optionally) evaluate the
+    /// masked model.  Repeated calls reuse cached models, calibrations,
+    /// and compiled PJRT executables.
+    pub fn execute(&mut self, spec: &JobSpec) -> Result<JobResult> {
+        ensure!(spec.calib_samples > 0, "calib_samples must be positive");
+        self.model(&spec.model)?;
+        // fail fast on a missing PJRT runtime *before* paying for
+        // calibration — gram collection is the most expensive step
+        if spec.backend != Backend::Native {
+            self.ensure_runtime()?;
+        }
+        self.calibration(&spec.model, spec.calib_samples, spec.calib_seed)?;
+
+        let method = spec.effective_method();
+        crate::debuglog!("executing job: {}", spec.label());
+        let prune = {
+            let model = &self.models[&spec.model];
+            let calib =
+                &self.calibs[&(spec.model.clone(), spec.calib_samples, spec.calib_seed)];
+            let patterns = spec.allocation.resolve(model, calib)?;
+            let runtime = self.runtime.as_ref();
+            let progress = self.progress.as_deref();
+            run_layers(model, calib, &method, &patterns, spec.backend, runtime, progress)?
+        };
+
+        let mut pruned_sparsity = None;
+        let mut eval = None;
+        if let Some(espec) = spec.eval {
+            let pruned = {
+                let model = &self.models[&spec.model];
+                prune.apply(model)?
+            };
+            pruned_sparsity = Some(pruned.pruned_sparsity());
+            eval = Some(self.evaluate(&pruned, &espec)?);
+        }
+
+        Ok(JobResult { spec: spec.clone(), prune, pruned_sparsity, eval })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TokenBin;
+    use crate::model::testutil::{random_model, tiny_cfg};
+    use crate::pruner::mask::mask_satisfies;
+    use crate::pruner::Warmstart;
+
+    fn session() -> PruneSession {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 1);
+        let bin = TokenBin::from_tokens(crate::data::corpus::generate(6, 8192));
+        let mut models = BTreeMap::new();
+        models.insert("test".to_string(), model);
+        PruneSession::in_memory(models, bin.clone(), bin)
+    }
+
+    fn base_spec() -> JobSpec {
+        JobSpec {
+            model: "test".into(),
+            method: PruneMethod::SparseFw(SparseFwConfig {
+                iters: 60,
+                alpha: 0.5,
+                warmstart: Warmstart::Ria,
+                ..Default::default()
+            }),
+            allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+            backend: Backend::Native,
+            calib_samples: 6,
+            calib_seed: 2,
+            trace_every: 0,
+            eval: None,
+        }
+    }
+
+    #[test]
+    fn jobspec_json_roundtrip_executes_identically() {
+        let spec = base_spec();
+        let text = json::to_string_pretty(&spec.to_json());
+        let back = JobSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        // structural identity of the serialized forms
+        assert_eq!(
+            json::to_string(&spec.to_json()),
+            json::to_string(&back.to_json())
+        );
+        // and execution equivalence with the directly-constructed spec
+        let mut s1 = session();
+        let mut s2 = session();
+        let a = s1.execute(&spec).unwrap();
+        let b = s2.execute(&back).unwrap();
+        assert_eq!(a.prune.layer_objs, b.prune.layer_objs);
+        for (k, m) in &a.prune.masks {
+            assert_eq!(m.data, b.prune.masks[k].data, "{k}");
+        }
+    }
+
+    #[test]
+    fn jobspec_saves_and_loads_from_disk() {
+        let spec = JobSpec {
+            eval: Some(EvalSpec { seqs: 12, zs_items: 8 }),
+            ..base_spec()
+        };
+        let path = std::env::temp_dir()
+            .join(format!("sparsefw-jobspec-{}.json", std::process::id()));
+        spec.save(&path).unwrap();
+        let back = JobSpec::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(
+            json::to_string(&spec.to_json()),
+            json::to_string(&back.to_json())
+        );
+        assert_eq!(back.eval, Some(EvalSpec { seqs: 12, zs_items: 8 }));
+    }
+
+    #[test]
+    fn session_memoizes_calibration() {
+        let mut s = session();
+        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        s.execute(&spec).unwrap();
+        s.execute(&spec).unwrap();
+        assert_eq!(s.calib_stats(), (1, 1), "second run must hit the memo");
+        let other = JobSpec { calib_seed: 9, ..spec };
+        s.execute(&other).unwrap();
+        assert_eq!(s.calib_stats(), (1, 2), "new seed must miss");
+    }
+
+    #[test]
+    fn pjrt_without_runtime_is_a_clean_error() {
+        let mut s = session();
+        let spec = JobSpec {
+            backend: Backend::Pjrt,
+            method: PruneMethod::Wanda,
+            ..base_spec()
+        };
+        let err = format!("{:#}", s.execute(&spec).unwrap_err());
+        assert!(err.contains("runtime"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn per_layer_allocation_executes_on_native() {
+        let mut s = session();
+        let layers = s.model("test").unwrap().cfg.layers();
+        let mut map = BTreeMap::new();
+        for (i, l) in layers.iter().enumerate() {
+            map.insert(l.name.clone(), if i % 2 == 0 { 0.5 } else { 0.7 });
+        }
+        let spec = JobSpec {
+            method: PruneMethod::Wanda,
+            allocation: Allocation::PerLayer(map.clone()),
+            ..base_spec()
+        };
+        let res = s.execute(&spec).unwrap();
+        for l in &layers {
+            let pat = SparsityPattern::PerRow { sparsity: map[&l.name] };
+            assert!(mask_satisfies(&res.prune.masks[&l.name], &pat), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn per_layer_allocation_rejects_missing_layer() {
+        let mut s = session();
+        let spec = JobSpec {
+            method: PruneMethod::Wanda,
+            allocation: Allocation::PerLayer(BTreeMap::new()),
+            ..base_spec()
+        };
+        let err = s.execute(&spec).unwrap_err().to_string();
+        assert!(err.contains("no sparsity for layer"), "{err}");
+    }
+
+    #[test]
+    fn owl_allocation_resolves_and_executes() {
+        let mut s = session();
+        let spec = JobSpec {
+            method: PruneMethod::Wanda,
+            allocation: Allocation::owl(0.6),
+            eval: Some(EvalSpec { seqs: 4, zs_items: 6 }),
+            ..base_spec()
+        };
+        let res = s.execute(&spec).unwrap();
+        let sp = res.pruned_sparsity.unwrap();
+        assert!((sp - 0.6).abs() < 0.03, "achieved sparsity {sp}");
+        assert!(res.eval.unwrap().ppl > 0.0);
+    }
+
+    #[test]
+    fn trace_every_override_records_traces() {
+        let mut s = session();
+        let spec = JobSpec { trace_every: 10, ..base_spec() };
+        let res = s.execute(&spec).unwrap();
+        assert!(!res.prune.traces.is_empty());
+        // without the override, no traces
+        let res = s.execute(&base_spec()).unwrap();
+        assert!(res.prune.traces.is_empty());
+    }
+
+    #[test]
+    fn allocation_json_roundtrips() {
+        let mut map = BTreeMap::new();
+        map.insert("blocks.0.wqkv".to_string(), 0.55);
+        map.insert("blocks.0.wo".to_string(), 0.65);
+        for alloc in [
+            Allocation::Uniform(SparsityPattern::NM { keep: 2, block: 4 }),
+            Allocation::PerLayer(map),
+            Allocation::Owl { target: 0.6, lambda: 7.0, max_shift: 0.05 },
+        ] {
+            let j = alloc.to_json();
+            let back =
+                Allocation::from_json(&json::parse(&json::to_string(&j)).unwrap()).unwrap();
+            assert_eq!(alloc, back);
+        }
+    }
+
+    #[test]
+    fn progress_callback_fires_per_layer() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let mut s = session();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        s.on_progress(move |e| {
+            assert_eq!(e.total, 8);
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        s.execute(&spec).unwrap();
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+        s.clear_progress();
+        s.execute(&spec).unwrap();
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+}

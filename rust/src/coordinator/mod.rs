@@ -2,6 +2,12 @@
 //! model's pruned linears, dispatches per-layer optimization to the
 //! selected kernel backend, and assembles the masked model + metrics.
 //!
+//! Public API: a declarative [`JobSpec`] describes one pruning run as
+//! data, and a [`PruneSession`] executes specs against an artifacts
+//! workspace with memoized models and calibrations (see [`job`]).  The
+//! legacy [`PrunePipeline`] entry points are thin deprecated shims over
+//! the same unified dispatch.
+//!
 //! Scheduling: layers are independent given the calibration grams (the
 //! paper prunes them "sequentially and independently"), so the native
 //! backend fans layers out across a work-stealing thread pool.  PJRT
@@ -9,9 +15,15 @@
 //! amortize cost through compiled-executable caching and the fused
 //! chunk artifact.
 
+pub mod job;
 pub mod schedule;
 
+pub use job::{
+    Allocation, EvalSpec, EvalSummary, JobResult, JobSpec, LayerEvent, PruneSession,
+};
+
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -20,7 +32,7 @@ use crate::calib::Calibration;
 use crate::config::Backend;
 use crate::model::{Gpt, LayerInfo};
 use crate::pruner::{
-    FwTrace, NativeKernels, PruneMethod, SparsityPattern,
+    FwTrace, LayerPruneOutput, NativeKernels, PruneMethod, SparsityPattern,
 };
 use crate::runtime::{PjrtKernels, PjrtRuntime};
 use crate::tensor::Mat;
@@ -70,7 +82,127 @@ impl PruneResult {
     }
 }
 
+/// Unified per-layer dispatch: prune `model`'s layers against `calib`
+/// with one resolved [`SparsityPattern`] per layer, on any backend.
+///
+/// This is the single execution path behind [`PruneSession::execute`]
+/// and the deprecated [`PrunePipeline`] shims.  The native backend is
+/// layer-parallel; PJRT backends run sequentially.  `progress` (when
+/// set) receives one [`LayerEvent`] per completed layer, in completion
+/// order — from worker threads on the native backend.
+pub(crate) fn run_layers(
+    model: &Gpt,
+    calib: &Calibration,
+    method: &PruneMethod,
+    patterns: &[SparsityPattern],
+    backend: Backend,
+    runtime: Option<&PjrtRuntime>,
+    progress: Option<&(dyn Fn(&LayerEvent) + Send + Sync)>,
+) -> Result<PruneResult> {
+    let t0 = Instant::now();
+    let layers = model.cfg.layers();
+    anyhow::ensure!(
+        layers.len() == patterns.len(),
+        "pattern count {} != layer count {}",
+        patterns.len(),
+        layers.len()
+    );
+    let total = layers.len();
+    let completed = AtomicUsize::new(0);
+    let emit = |l: &LayerInfo, out: &LayerPruneOutput| {
+        if let Some(cb) = progress {
+            let index = completed.fetch_add(1, Ordering::Relaxed);
+            cb(&LayerEvent { layer: l.name.clone(), index, total, obj: out.obj });
+        }
+    };
+
+    let outputs: Vec<Result<(LayerInfo, LayerPruneOutput)>> = match backend {
+        Backend::Native => parallel_map(total, |i| {
+            let l = &layers[i];
+            let w = model.mat(&l.name);
+            let g = calib.gram(&l.name);
+            let out = method.prune_layer(&NativeKernels, w, g, &patterns[i])?;
+            emit(l, &out);
+            Ok((l.clone(), out))
+        }),
+        Backend::Pjrt | Backend::PjrtChunk => {
+            let rt = runtime.ok_or_else(|| {
+                anyhow::anyhow!("PJRT backend requires a runtime (open a workspace with AOT artifacts)")
+            })?;
+            let mut kernels = PjrtKernels::new(rt);
+            kernels.use_chunk = backend == Backend::PjrtChunk;
+            let mut outputs = Vec::with_capacity(total);
+            for (i, l) in layers.iter().enumerate() {
+                let w = model.mat(&l.name);
+                let g = calib.gram(&l.name);
+                crate::debuglog!("pjrt-pruning layer {} ({}x{})", l.name, l.d_out, l.d_in);
+                // abort at the first failure: the remaining sequential
+                // PJRT work would be discarded anyway
+                let out = method.prune_layer(&kernels, w, g, &patterns[i])?;
+                emit(l, &out);
+                outputs.push(Ok((l.clone(), out)));
+            }
+            outputs
+        }
+    };
+    collect_outputs(outputs, t0)
+}
+
+/// Expand a per-layer sparsity map into per-row patterns in layer order.
+pub(crate) fn per_layer_patterns(
+    model: &Gpt,
+    sparsities: &BTreeMap<String, f64>,
+) -> Result<Vec<SparsityPattern>> {
+    model
+        .cfg
+        .layers()
+        .iter()
+        .map(|l| {
+            let sparsity = *sparsities
+                .get(&l.name)
+                .ok_or_else(|| anyhow::anyhow!("no sparsity for layer {}", l.name))?;
+            Ok(SparsityPattern::PerRow { sparsity })
+        })
+        .collect()
+}
+
+fn collect_outputs(
+    outputs: Vec<Result<(LayerInfo, LayerPruneOutput)>>,
+    t0: Instant,
+) -> Result<PruneResult> {
+    let mut result = PruneResult {
+        masks: BTreeMap::new(),
+        new_weights: BTreeMap::new(),
+        layer_objs: BTreeMap::new(),
+        warm_objs: BTreeMap::new(),
+        traces: BTreeMap::new(),
+        wall_seconds: 0.0,
+    };
+    for out in outputs {
+        let (l, o) = out?;
+        result.layer_objs.insert(l.name.clone(), o.obj);
+        if let Some(w) = o.warm_obj {
+            result.warm_objs.insert(l.name.clone(), w);
+        }
+        if let Some(nw) = o.new_weights {
+            result.new_weights.insert(l.name.clone(), nw);
+        }
+        if let Some(tr) = o.trace {
+            result.traces.insert(l.name.clone(), tr);
+        }
+        result.masks.insert(l.name, o.mask);
+    }
+    result.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(result)
+}
+
 /// Coordinates pruning of one model against one calibration result.
+///
+/// Deprecated: build a [`JobSpec`] and run it through
+/// [`PruneSession::execute`] instead — the session adds unified backend
+/// dispatch (non-uniform allocation on PJRT too), calibration
+/// memoization, and progress events.  These shims remain for borrowed
+/// model/calib call sites and delegate to the same dispatch.
 pub struct PrunePipeline<'a> {
     pub model: &'a Gpt,
     pub calib: &'a Calibration,
@@ -81,48 +213,27 @@ impl<'a> PrunePipeline<'a> {
         Self { model, calib }
     }
 
-    /// Non-uniform (OWL-style) run: per-layer sparsities from
-    /// [`crate::pruner::allocation::owl_sparsities`], applied as per-row
-    /// budgets so every method supports them.  Native backend,
-    /// layer-parallel.
+    /// Non-uniform (OWL-style) run: per-layer sparsities applied as
+    /// per-row budgets.  Native backend, layer-parallel.
+    #[deprecated(note = "use PruneSession::execute with Allocation::PerLayer")]
     pub fn run_nonuniform(
         &self,
         method: &PruneMethod,
         sparsities: &BTreeMap<String, f64>,
     ) -> Result<PruneResult> {
-        let t0 = Instant::now();
-        let layers = self.model.cfg.layers();
-        let outputs: Vec<Result<(LayerInfo, crate::pruner::LayerPruneOutput)>> =
-            parallel_map(layers.len(), |i| {
-                let l = &layers[i];
-                let sparsity = *sparsities
-                    .get(&l.name)
-                    .ok_or_else(|| anyhow::anyhow!("no sparsity for layer {}", l.name))?;
-                let pattern = SparsityPattern::PerRow { sparsity };
-                let w = self.model.mat(&l.name);
-                let g = self.calib.gram(&l.name);
-                let out = method.prune_layer(&NativeKernels, w, g, &pattern)?;
-                Ok((l.clone(), out))
-            });
-        self.collect(outputs, t0)
+        let patterns = per_layer_patterns(self.model, sparsities)?;
+        run_layers(self.model, self.calib, method, &patterns, Backend::Native, None, None)
     }
 
     /// Prune every layer with the native backend, layer-parallel.
+    #[deprecated(note = "use PruneSession::execute(&JobSpec)")]
     pub fn run(&self, method: &PruneMethod, pattern: &SparsityPattern) -> Result<PruneResult> {
-        let t0 = Instant::now();
-        let layers = self.model.cfg.layers();
-        let outputs: Vec<Result<(LayerInfo, crate::pruner::LayerPruneOutput)>> =
-            parallel_map(layers.len(), |i| {
-                let l = &layers[i];
-                let w = self.model.mat(&l.name);
-                let g = self.calib.gram(&l.name);
-                let out = method.prune_layer(&NativeKernels, w, g, pattern)?;
-                Ok((l.clone(), out))
-            });
-        self.collect(outputs, t0)
+        let patterns = vec![pattern.clone(); self.model.cfg.layers().len()];
+        run_layers(self.model, self.calib, method, &patterns, Backend::Native, None, None)
     }
 
     /// Prune sequentially through the PJRT backend (AOT Pallas kernels).
+    #[deprecated(note = "use PruneSession::execute(&JobSpec) with a PJRT backend")]
     pub fn run_pjrt(
         &self,
         runtime: &PjrtRuntime,
@@ -130,22 +241,17 @@ impl<'a> PrunePipeline<'a> {
         pattern: &SparsityPattern,
         backend: Backend,
     ) -> Result<PruneResult> {
-        let t0 = Instant::now();
-        let mut kernels = PjrtKernels::new(runtime);
-        kernels.use_chunk = backend == Backend::PjrtChunk;
-        let layers = self.model.cfg.layers();
-        let mut outputs = Vec::with_capacity(layers.len());
-        for l in layers {
-            let w = self.model.mat(&l.name);
-            let g = self.calib.gram(&l.name);
-            crate::debuglog!("pjrt-pruning layer {} ({}x{})", l.name, l.d_out, l.d_in);
-            let out = method.prune_layer(&kernels, w, g, pattern)?;
-            outputs.push(Ok((l, out)));
-        }
-        self.collect(outputs, t0)
+        let backend = match backend {
+            // historical behaviour: run_pjrt always went through PJRT
+            Backend::Native | Backend::Pjrt => Backend::Pjrt,
+            Backend::PjrtChunk => Backend::PjrtChunk,
+        };
+        let patterns = vec![pattern.clone(); self.model.cfg.layers().len()];
+        run_layers(self.model, self.calib, method, &patterns, backend, Some(runtime), None)
     }
 
     /// Backend dispatch helper.
+    #[deprecated(note = "use PruneSession::execute(&JobSpec)")]
     pub fn run_with_backend(
         &self,
         backend: Backend,
@@ -153,49 +259,13 @@ impl<'a> PrunePipeline<'a> {
         method: &PruneMethod,
         pattern: &SparsityPattern,
     ) -> Result<PruneResult> {
-        match backend {
-            Backend::Native => self.run(method, pattern),
-            Backend::Pjrt | Backend::PjrtChunk => {
-                let rt = runtime
-                    .ok_or_else(|| anyhow::anyhow!("PJRT backend requires a runtime"))?;
-                self.run_pjrt(rt, method, pattern, backend)
-            }
-        }
-    }
-
-    fn collect(
-        &self,
-        outputs: Vec<Result<(LayerInfo, crate::pruner::LayerPruneOutput)>>,
-        t0: Instant,
-    ) -> Result<PruneResult> {
-        let mut result = PruneResult {
-            masks: BTreeMap::new(),
-            new_weights: BTreeMap::new(),
-            layer_objs: BTreeMap::new(),
-            warm_objs: BTreeMap::new(),
-            traces: BTreeMap::new(),
-            wall_seconds: 0.0,
-        };
-        for out in outputs {
-            let (l, o) = out?;
-            result.layer_objs.insert(l.name.clone(), o.obj);
-            if let Some(w) = o.warm_obj {
-                result.warm_objs.insert(l.name.clone(), w);
-            }
-            if let Some(nw) = o.new_weights {
-                result.new_weights.insert(l.name.clone(), nw);
-            }
-            if let Some(tr) = o.trace {
-                result.traces.insert(l.name.clone(), tr);
-            }
-            result.masks.insert(l.name, o.mask);
-        }
-        result.wall_seconds = t0.elapsed().as_secs_f64();
-        Ok(result)
+        let patterns = vec![pattern.clone(); self.model.cfg.layers().len()];
+        run_layers(self.model, self.calib, method, &patterns, backend, runtime, None)
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::data::TokenBin;
@@ -282,5 +352,35 @@ mod tests {
         let pruned = res.apply(&model).unwrap();
         // reconstructed weights respect the masks (zeros off-mask)
         assert!((pruned.pruned_sparsity() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn progress_events_cover_every_layer() {
+        use std::sync::Mutex;
+        let (model, calib) = setup();
+        let pat = SparsityPattern::PerRow { sparsity: 0.5 };
+        let patterns = vec![pat; model.cfg.layers().len()];
+        let seen: Mutex<Vec<(String, usize, usize)>> = Mutex::new(Vec::new());
+        let cb = |e: &LayerEvent| {
+            seen.lock().unwrap().push((e.layer.clone(), e.index, e.total));
+        };
+        run_layers(
+            &model,
+            &calib,
+            &PruneMethod::Wanda,
+            &patterns,
+            Backend::Native,
+            None,
+            Some(&cb),
+        )
+        .unwrap();
+        let mut events = seen.into_inner().unwrap();
+        assert_eq!(events.len(), 8);
+        assert!(events.iter().all(|(_, _, total)| *total == 8));
+        // completion indices are a permutation of 0..8
+        events.sort_by_key(|(_, i, _)| *i);
+        for (want, (_, got, _)) in events.iter().enumerate() {
+            assert_eq!(want, *got);
+        }
     }
 }

@@ -8,6 +8,30 @@
 //! * Layer 2 — JAX model + FW step (`python/compile/`), AOT-lowered.
 //! * Layer 3 — this crate: the pruning coordinator. Python never runs at
 //!   request time; HLO artifacts execute through PJRT (`runtime`).
+//!
+//! The coordinator's public API is declarative: a
+//! [`coordinator::JobSpec`] describes one pruning run as data (model,
+//! method, [`coordinator::Allocation`], backend, calibration, tracing
+//! and eval options; JSON round-trippable), and a
+//! [`coordinator::PruneSession`] executes specs against an artifacts
+//! workspace with memoized models, calibrations, and compiled PJRT
+//! executables:
+//!
+//! ```no_run
+//! use sparsefw::prelude::*;
+//!
+//! let mut session = PruneSession::open_default()?;
+//! let spec = JobSpec {
+//!     model: "tiny".into(),
+//!     method: PruneMethod::Wanda,
+//!     allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
+//!     eval: Some(EvalSpec::default()),
+//!     ..Default::default()
+//! };
+//! let result = session.execute(&spec)?;
+//! println!("Σ err {:.3e}", result.total_err());
+//! # anyhow::Ok(())
+//! ```
 
 pub mod bench;
 pub mod calib;
@@ -24,8 +48,10 @@ pub mod util;
 
 pub mod prelude {
     pub use crate::calib::Calibration;
-    pub use crate::config::Workspace;
-    pub use crate::coordinator::PrunePipeline;
+    pub use crate::config::{Backend, Workspace};
+    pub use crate::coordinator::{
+        Allocation, EvalSpec, JobResult, JobSpec, PrunePipeline, PruneSession,
+    };
     pub use crate::model::{Gpt, GptConfig};
     pub use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
     pub use crate::tensor::Mat;

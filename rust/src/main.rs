@@ -2,22 +2,26 @@
 //!
 //! Subcommands:
 //!   inspect                      — summarize the artifacts workspace
-//!   prune    [--model --method --pattern --backend …]
+//!   prune    [--model --method --pattern|--owl --backend …]
+//!            [--spec job.json --save-spec job.json]
 //!   eval     [--model --masks file]
 //!   selfcheck                    — PJRT vs native numerical cross-check
 //!   report-table1 / report-table2 / report-fig2 / report-fig3 / report-fig4
+//!
+//! `prune` lowers its flags into a declarative [`JobSpec`] (replayable
+//! via `--spec job.json`) and executes it through a [`PruneSession`].
 //!
 //! Common flags: --artifacts DIR (default ./artifacts or
 //! $SPARSEFW_ARTIFACTS), --models a,b, --iters N, --samples N, --fast.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use sparsefw::config::cli::{parse_method, parse_pattern, Args};
 use sparsefw::config::{Backend, Workspace};
-use sparsefw::coordinator::PrunePipeline;
-use sparsefw::eval::{perplexity_native, perplexity_pjrt, zero_shot};
+use sparsefw::coordinator::{Allocation, EvalSpec, EvalSummary, JobSpec, PruneSession};
 use sparsefw::model::safetensors::{self, TensorData};
 use sparsefw::prelude::*;
 use sparsefw::report::{figs, tables, ReportCtx};
@@ -31,14 +35,22 @@ USAGE: sparsefw <subcommand> [flags]
 
   inspect                         summarize artifacts + models
   prune      --model M --method {sparsefw|wanda|ria|magnitude|sparsegpt}
-             --pattern {unstructured:S|per-row:S|K:B}
+             --pattern {unstructured:S|per-row:S|K:B} | --owl TARGET
              [--iters N --alpha A --warmstart wanda|ria|magnitude]
              [--samples N --seed S --backend native|pjrt|pjrt-chunk]
+             [--spec job.json] [--save-spec job.json]
              [--out masks.safetensors] [--eval]
-  eval       --model M [--masks masks.safetensors]
+  eval       --model M [--masks masks.safetensors] [--pjrt]
   selfcheck                       cross-check PJRT kernels vs native math
   report-table1 | report-table2 | report-fig2 | report-fig3 | report-fig4
              [--models a,b --iters N --samples N --fast]
+
+Jobs are declarative: `prune` lowers its flags into a JobSpec
+(--save-spec writes it as JSON, --spec replays one from disk with any
+explicitly-passed flags overriding the file), executed by a
+PruneSession that caches models and calibration grams across jobs.
+--owl switches from a uniform pattern to OWL-style non-uniform
+per-layer sparsities (works on every backend).
 
 Flags everywhere: --artifacts DIR (default $SPARSEFW_ARTIFACTS or ./artifacts)
 ";
@@ -66,6 +78,10 @@ fn open_ws(args: &Args) -> Result<Workspace> {
         Some(dir) => Workspace::open(dir),
         None => Workspace::open_default(),
     }
+}
+
+fn open_session(args: &Args) -> Result<PruneSession> {
+    Ok(PruneSession::new(open_ws(args)?))
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -106,41 +122,116 @@ fn inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn prune(args: &Args) -> Result<()> {
-    let ws = open_ws(args)?;
-    let model_name = args.get("model").unwrap_or("tiny").to_string();
-    let method = parse_method(args)?;
-    let pattern = parse_pattern(args.get("pattern").unwrap_or("per-row:0.5"))?;
-    let samples = args.get_usize("samples", 128)?;
-    let seed = args.get_u64("seed", 7)?;
-    let backend = Backend::parse(args.get("backend").unwrap_or("native"))?;
+/// `--eval-seqs` / `--zs-items` lowered into an [`EvalSpec`].
+fn eval_spec(args: &Args) -> Result<EvalSpec> {
+    Ok(EvalSpec {
+        seqs: args.get_usize("eval-seqs", 64)?,
+        zs_items: args.get_usize("zs-items", 60)?,
+    })
+}
 
-    let model = ws.load_model(&model_name)?;
-    info!(
-        "pruning {model_name} with {} to {} ({} backend, {} calib samples)",
-        method.label(),
-        pattern.label(),
-        backend.label(),
-        samples
-    );
-    let calib = Calibration::collect(&model, &ws.train_bin()?, samples, seed)?;
-    let pipe = PrunePipeline::new(&model, &calib);
+/// Parse the `--owl` / `--pattern` flags into an [`Allocation`].
+fn parse_allocation(args: &Args) -> Result<Allocation> {
+    if let Some(t) = args.get("owl") {
+        let target: f64 = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--owl must be a target sparsity in (0,1)"))?;
+        Ok(Allocation::Owl {
+            target,
+            lambda: args.get_f64("owl-lambda", 5.0)?,
+            max_shift: args.get_f64("owl-max-shift", 0.08)?,
+        })
+    } else {
+        Ok(Allocation::Uniform(parse_pattern(
+            args.get("pattern").unwrap_or("per-row:0.5"),
+        )?))
+    }
+}
 
-    let rt;
-    let result = match backend {
-        Backend::Native => pipe.run(&method, &pattern)?,
-        _ => {
-            rt = ws.runtime()?;
-            pipe.run_with_backend(backend, Some(&rt), &method, &pattern)?
+/// Lower CLI flags into a [`JobSpec`].  With `--spec FILE` the file is
+/// the base and explicitly-passed flags override its fields (a flag
+/// that is absent leaves the spec untouched).
+fn build_spec(args: &Args) -> Result<JobSpec> {
+    if let Some(path) = args.get("spec") {
+        let mut spec = JobSpec::load(Path::new(path))?;
+        if let Some(model) = args.get("model") {
+            spec.model = model.to_string();
         }
-    };
+        if args.get("method").is_some() {
+            spec.method = parse_method(args)?;
+        }
+        if args.get("owl").is_some() || args.get("pattern").is_some() {
+            spec.allocation = parse_allocation(args)?;
+        }
+        if let Some(b) = args.get("backend") {
+            spec.backend = Backend::parse(b)?;
+        }
+        if args.get("samples").is_some() {
+            spec.calib_samples = args.get_usize("samples", spec.calib_samples)?;
+        }
+        if args.get("seed").is_some() {
+            spec.calib_seed = args.get_u64("seed", spec.calib_seed)?;
+        }
+        if args.has("eval") && spec.eval.is_none() {
+            spec.eval = Some(EvalSpec::default());
+        }
+        if let Some(e) = spec.eval.as_mut() {
+            if args.get("eval-seqs").is_some() {
+                e.seqs = args.get_usize("eval-seqs", e.seqs)?;
+            }
+            if args.get("zs-items").is_some() {
+                e.zs_items = args.get_usize("zs-items", e.zs_items)?;
+            }
+        }
+        return Ok(spec);
+    }
+    Ok(JobSpec {
+        model: args.get("model").unwrap_or("tiny").to_string(),
+        method: parse_method(args)?,
+        allocation: parse_allocation(args)?,
+        backend: Backend::parse(args.get("backend").unwrap_or("native"))?,
+        calib_samples: args.get_usize("samples", 128)?,
+        calib_seed: args.get_u64("seed", 7)?,
+        trace_every: 0,
+        eval: if args.has("eval") { Some(eval_spec(args)?) } else { None },
+    })
+}
 
-    let total_err: f64 = result.layer_objs.values().sum();
+/// Shared result printing for `prune --eval` and the `eval` subcommand.
+fn print_eval(model_name: &str, ev: &EvalSummary, sparsity: Option<f64>) {
+    let zs = &ev.zero_shot;
+    println!(
+        "{model_name}: ppl={:.3} zero-shot={:.2}% (cloze {:.1}%, copy {:.1}%, bigram {:.1}%){}",
+        ev.ppl,
+        zs.mean() * 100.0,
+        zs.cloze * 100.0,
+        zs.copy_detect * 100.0,
+        zs.bigram * 100.0,
+        sparsity
+            .map(|s| format!("  [sparsity {s:.3}]"))
+            .unwrap_or_default(),
+    );
+}
+
+fn prune(args: &Args) -> Result<()> {
+    let mut session = open_session(args)?;
+    let spec = build_spec(args)?;
+    if let Some(path) = args.get("save-spec") {
+        spec.save(Path::new(path))?;
+        info!("job spec written to {path}");
+    }
+
+    info!("executing job: {}", spec.label());
+    session.on_progress(|e| {
+        info!("  [{}/{}] {} pruned (err {:.4e})", e.index + 1, e.total, e.layer, e.obj);
+    });
+    let result = session.execute(&spec)?;
+
     info!(
         "pruned {} layers in {:.1}s; Σ layer error = {:.4e}{}",
-        result.masks.len(),
-        result.wall_seconds,
-        total_err,
+        result.masks().len(),
+        result.wall_seconds(),
+        result.total_err(),
         result
             .mean_rel_reduction()
             .map(|r| format!(", mean reduction vs warmstart = {:.1}%", r * 100.0))
@@ -149,7 +240,7 @@ fn prune(args: &Args) -> Result<()> {
 
     if let Some(out) = args.get("out") {
         let tensors: BTreeMap<String, TensorData> = result
-            .masks
+            .masks()
             .iter()
             .map(|(k, m)| {
                 (
@@ -158,32 +249,28 @@ fn prune(args: &Args) -> Result<()> {
                 )
             })
             .collect();
-        safetensors::save(std::path::Path::new(out), &tensors)?;
+        safetensors::save(Path::new(out), &tensors)?;
         info!("masks written to {out}");
     }
 
-    if args.has("eval") {
-        let pruned = result.apply(&model)?;
-        let ppl = perplexity_native(&pruned, &ws.test_bin()?, args.get_usize("eval-seqs", 64)?)?;
-        let zs = zero_shot(&pruned, 0xE7A1, args.get_usize("zs-items", 60)?)?;
-        println!(
-            "pruned model: ppl={ppl:.3} zero-shot={:.2}% (cloze {:.1}%, copy {:.1}%, bigram {:.1}%)",
-            zs.mean() * 100.0,
-            zs.cloze * 100.0,
-            zs.copy_detect * 100.0,
-            zs.bigram * 100.0
-        );
+    if let Some(ev) = &result.eval {
+        print_eval(&spec.model, ev, result.pruned_sparsity);
     }
     Ok(())
 }
 
 fn eval_cmd(args: &Args) -> Result<()> {
-    let ws = open_ws(args)?;
+    let mut session = open_session(args)?;
     let model_name = args.get("model").unwrap_or("tiny").to_string();
-    let mut model = ws.load_model(&model_name)?;
+    // one-shot subcommand: load via the workspace directly instead of
+    // the session cache, so only one copy of the checkpoint is live
+    let mut model = {
+        let ws = session.workspace().expect("session opened from a workspace");
+        ws.load_model(&model_name)?
+    };
 
     if let Some(mask_file) = args.get("masks") {
-        let tensors = safetensors::load(std::path::Path::new(mask_file))?;
+        let tensors = safetensors::load(Path::new(mask_file))?;
         let masks: BTreeMap<String, Mat> = tensors
             .into_iter()
             .map(|(k, t)| Ok((k, t.to_mat()?)))
@@ -192,22 +279,13 @@ fn eval_cmd(args: &Args) -> Result<()> {
         info!("applied {mask_file}; sparsity = {:.3}", model.pruned_sparsity());
     }
 
-    let test = ws.test_bin()?;
-    let n = args.get_usize("eval-seqs", 64)?;
-    let ppl = if args.has("pjrt") {
-        let rt = ws.runtime()?;
-        perplexity_pjrt(&rt, &model, &model_name, &test, n)?
+    let espec = eval_spec(args)?;
+    let summary = if args.has("pjrt") {
+        session.evaluate_pjrt(&model, &model_name, &espec)?
     } else {
-        perplexity_native(&model, &test, n)?
+        session.evaluate(&model, &espec)?
     };
-    let zs = zero_shot(&model, 0xE7A1, args.get_usize("zs-items", 60)?)?;
-    println!(
-        "{model_name}: ppl={ppl:.3} zero-shot={:.2}% (cloze {:.1}%, copy {:.1}%, bigram {:.1}%)",
-        zs.mean() * 100.0,
-        zs.cloze * 100.0,
-        zs.copy_detect * 100.0,
-        zs.bigram * 100.0
-    );
+    print_eval(&model_name, &summary, None);
     Ok(())
 }
 

@@ -1,10 +1,11 @@
 //! Figure regenerators: Fig 2 (per-layer error reduction), Fig 3
 //! (perplexity vs iterations / vs samples), Fig 4 (continuous vs
-//! thresholded error + threshold residual).
+//! thresholded error + threshold residual).  Every pruning run is a
+//! [`JobSpec`](crate::coordinator::JobSpec) through the shared session,
+//! so sweeping a grid never recollects calibration grams.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::PrunePipeline;
 use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
 use crate::util::json::Json;
 
@@ -15,23 +16,22 @@ use super::{print_table, ReportCtx};
 pub fn fig2(ctx: &mut ReportCtx) -> Result<Json> {
     let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
     let model_name = ctx.models[0].clone();
-    ctx.calibration(&model_name)?;
-    let model = &ctx.loaded[&model_name];
-    let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
 
     let method = PruneMethod::SparseFw(SparseFwConfig {
         iters: ctx.iters,
         warmstart: Warmstart::Wanda,
         ..Default::default()
     });
-    let res = PrunePipeline::new(model, calib).run(&method, &pattern)?;
+    let mut spec = ctx.spec(&model_name, method, pattern.clone());
+    spec.eval = None; // fig 2 only needs the per-layer errors
+    let res = ctx.run(&spec)?;
 
-    let layers = model.cfg.layers();
+    let layers = ctx.session.model(&model_name)?.cfg.layers();
     let mut rows = Vec::new();
     let mut out = Vec::new();
     for l in &layers {
-        let warm = res.warm_objs[&l.name];
-        let fin = res.layer_objs[&l.name];
+        let warm = res.prune.warm_objs[&l.name];
+        let fin = res.prune.layer_objs[&l.name];
         let red = if warm > 0.0 { (warm - fin) / warm } else { 0.0 };
         let block: String = l
             .name
@@ -83,7 +83,6 @@ pub fn fig2(ctx: &mut ReportCtx) -> Result<Json> {
 pub fn fig3_iters(ctx: &mut ReportCtx, iter_grid: &[usize]) -> Result<Json> {
     let pattern = SparsityPattern::NM { keep: 2, block: 4 };
     let model_name = ctx.models[0].clone();
-    ctx.calibration(&model_name)?;
 
     let mut rows = Vec::new();
     let mut out = Vec::new();
@@ -93,11 +92,9 @@ pub fn fig3_iters(ctx: &mut ReportCtx, iter_grid: &[usize]) -> Result<Json> {
             warmstart: Warmstart::Wanda,
             ..Default::default()
         });
-        let model = &ctx.loaded[&model_name];
-        let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
-        let res = PrunePipeline::new(model, calib).run(&method, &pattern)?;
-        let pruned = res.apply(model)?;
-        let (ppl, _) = ctx.evaluate(&pruned)?;
+        let spec = ctx.spec(&model_name, method, pattern.clone());
+        let res = ctx.run(&spec)?;
+        let ppl = res.eval.as_ref().context("fig3 point missing eval")?.ppl;
         crate::info!("fig3-iters: T={iters} -> ppl {ppl:.3}");
         rows.push(vec![iters.to_string(), format!("{ppl:.3}")]);
         out.push(Json::obj(vec![("iters", iters.into()), ("ppl", ppl.into())]));
@@ -121,7 +118,8 @@ pub fn fig3_iters(ctx: &mut ReportCtx, iter_grid: &[usize]) -> Result<Json> {
 
 /// Fig 3 right: perplexity vs number of calibration samples for both
 /// SparseFW and the Wanda baseline (the paper's sample-efficiency
-/// contrast).
+/// contrast).  Both methods share the memoized calibration per sample
+/// count — one gram collection per grid point, not two.
 pub fn fig3_samples(ctx: &mut ReportCtx, sample_grid: &[usize]) -> Result<Json> {
     let pattern = SparsityPattern::NM { keep: 2, block: 4 };
     let model_name = ctx.models[0].clone();
@@ -129,22 +127,18 @@ pub fn fig3_samples(ctx: &mut ReportCtx, sample_grid: &[usize]) -> Result<Json> 
     let mut rows = Vec::new();
     let mut out = Vec::new();
     for &samples in sample_grid {
-        ctx.calibration_with(&model_name, samples, ctx.calib_seed)?;
-        let model = &ctx.loaded[&model_name];
-        let calib = &ctx.calib_cache[&(model_name.clone(), samples, ctx.calib_seed)];
-        let pipe = PrunePipeline::new(model, calib);
+        let fw_method = PruneMethod::SparseFw(SparseFwConfig {
+            iters: ctx.iters,
+            warmstart: Warmstart::Wanda,
+            ..Default::default()
+        });
+        let mut fw_spec = ctx.spec(&model_name, fw_method, pattern.clone());
+        fw_spec.calib_samples = samples;
+        let mut wanda_spec = ctx.spec(&model_name, PruneMethod::Wanda, pattern.clone());
+        wanda_spec.calib_samples = samples;
 
-        let fw = pipe.run(
-            &PruneMethod::SparseFw(SparseFwConfig {
-                iters: ctx.iters,
-                warmstart: Warmstart::Wanda,
-                ..Default::default()
-            }),
-            &pattern,
-        )?;
-        let wanda = pipe.run(&PruneMethod::Wanda, &pattern)?;
-        let fw_ppl = ctx.evaluate(&fw.apply(model)?)?.0;
-        let wanda_ppl = ctx.evaluate(&wanda.apply(model)?)?.0;
+        let fw_ppl = ctx.run(&fw_spec)?.eval.context("fig3 fw missing eval")?.ppl;
+        let wanda_ppl = ctx.run(&wanda_spec)?.eval.context("fig3 wanda missing eval")?.ppl;
         crate::info!("fig3-samples: N={samples} -> sparsefw {fw_ppl:.3}, wanda {wanda_ppl:.3}");
         rows.push(vec![
             samples.to_string(),
@@ -181,9 +175,6 @@ pub fn fig3_samples(ctx: &mut ReportCtx, sample_grid: &[usize]) -> Result<Json> 
 pub fn fig4(ctx: &mut ReportCtx) -> Result<Json> {
     let pattern = SparsityPattern::Unstructured { sparsity: 0.6 };
     let model_name = ctx.models[0].clone();
-    ctx.calibration(&model_name)?;
-    let model = &ctx.loaded[&model_name];
-    let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
 
     let trace_every = (ctx.iters / 25).max(1);
     let method = PruneMethod::SparseFw(SparseFwConfig {
@@ -195,12 +186,16 @@ pub fn fig4(ctx: &mut ReportCtx) -> Result<Json> {
         keep_best: false, // raw Algorithm 1 behaviour for the trace
         line_search: false,
     });
-    let res = PrunePipeline::new(model, calib).run(&method, &pattern)?;
+    let mut spec = ctx.spec(&model_name, method, pattern.clone());
+    spec.eval = None; // fig 4 reads the optimization traces only
+    let res = ctx.run(&spec)?;
+    let traces = &res.prune.traces;
+    let warm_objs = &res.prune.warm_objs;
 
     // median across matrices at each trace point
-    let names: Vec<&String> = res.traces.keys().collect();
+    let names: Vec<&String> = traces.keys().collect();
     anyhow::ensure!(!names.is_empty(), "no traces recorded");
-    let t_axis = res.traces[names[0]].iters.clone();
+    let t_axis = traces[names[0]].iters.clone();
     let mut rows = Vec::new();
     let mut series = Vec::new();
     for (ti, &t) in t_axis.iter().enumerate() {
@@ -208,8 +203,8 @@ pub fn fig4(ctx: &mut ReportCtx) -> Result<Json> {
         let mut thr_red = Vec::new();
         let mut resid = Vec::new();
         for name in &names {
-            let tr = &res.traces[*name];
-            let warm = res.warm_objs[*name];
+            let tr = &traces[*name];
+            let warm = warm_objs[*name];
             if warm <= 0.0 || ti >= tr.iters.len() {
                 continue;
             }

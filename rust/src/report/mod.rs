@@ -8,30 +8,27 @@
 //! * [`figs::fig4`]     — continuous vs thresholded error + residual.
 //!
 //! Each regenerator prints the paper-style rows/series to stdout and
-//! writes machine-readable JSON under `reports/`.
+//! writes machine-readable JSON under `reports/`.  Every cell is one
+//! declarative [`JobSpec`] executed through the shared
+//! [`PruneSession`], so models are loaded once and calibrations are
+//! memoized by `(model, samples, seed)` across the whole sweep.
 
 pub mod figs;
 pub mod tables;
 
-use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::calib::Calibration;
-use crate::config::Workspace;
-use crate::data::TokenBin;
-use crate::eval::{perplexity_native, zero_shot};
-use crate::model::Gpt;
+use crate::config::{Backend, Workspace};
+use crate::coordinator::{Allocation, EvalSpec, JobResult, JobSpec, PruneSession};
+use crate::pruner::{PruneMethod, SparsityPattern};
 use crate::util::json::{self, Json};
 
-/// Shared context: workspace, loaded models, calibration cache, eval
-/// data, and report-size knobs.
+/// Shared context: the executing session plus report-size knobs.
 pub struct ReportCtx {
-    pub ws: Workspace,
+    pub session: PruneSession,
     pub models: Vec<String>,
-    pub test: TokenBin,
-    pub train: TokenBin,
     /// Calibration samples (paper: 256; we default lower for wall-time).
     pub calib_samples: usize,
     pub calib_seed: u64,
@@ -42,9 +39,6 @@ pub struct ReportCtx {
     /// Items per zero-shot task.
     pub zs_items: usize,
     pub out_dir: PathBuf,
-
-    pub(crate) loaded: BTreeMap<String, Gpt>,
-    pub(crate) calib_cache: BTreeMap<(String, usize, u64), Calibration>,
 }
 
 impl ReportCtx {
@@ -54,21 +48,15 @@ impl ReportCtx {
         } else {
             models
         };
-        let test = ws.test_bin()?;
-        let train = ws.train_bin()?;
         Ok(Self {
-            ws,
+            session: PruneSession::new(ws),
             models,
-            test,
-            train,
             calib_samples: 128,
             calib_seed: 7,
             iters: 400,
             eval_seqs: 64,
             zs_items: 60,
             out_dir: PathBuf::from("reports"),
-            loaded: BTreeMap::new(),
-            calib_cache: BTreeMap::new(),
         })
     }
 
@@ -80,49 +68,24 @@ impl ReportCtx {
         self.zs_items = 12;
     }
 
-    pub fn model(&mut self, name: &str) -> Result<&Gpt> {
-        if !self.loaded.contains_key(name) {
-            let m = self.ws.load_model(name)?;
-            crate::info!(
-                "loaded model {name}: {} params, dense ppl (build-time) = {:?}",
-                m.n_params(),
-                self.ws.manifest.dense_test_ppl(name)
-            );
-            self.loaded.insert(name.to_string(), m);
+    /// The [`JobSpec`] for one report cell (native backend, ctx-level
+    /// calibration knobs, eval enabled).
+    pub fn spec(&self, model: &str, method: PruneMethod, pattern: SparsityPattern) -> JobSpec {
+        JobSpec {
+            model: model.to_string(),
+            method,
+            allocation: Allocation::Uniform(pattern),
+            backend: Backend::Native,
+            calib_samples: self.calib_samples,
+            calib_seed: self.calib_seed,
+            trace_every: 0,
+            eval: Some(EvalSpec { seqs: self.eval_seqs, zs_items: self.zs_items }),
         }
-        Ok(&self.loaded[name])
     }
 
-    pub fn calibration(&mut self, name: &str) -> Result<&Calibration> {
-        self.calibration_with(name, self.calib_samples, self.calib_seed)
-    }
-
-    pub fn calibration_with(
-        &mut self,
-        name: &str,
-        samples: usize,
-        seed: u64,
-    ) -> Result<&Calibration> {
-        let key = (name.to_string(), samples, seed);
-        if !self.calib_cache.contains_key(&key) {
-            self.model(name)?; // ensure loaded
-            let model = &self.loaded[name];
-            let t0 = std::time::Instant::now();
-            let calib = Calibration::collect(model, &self.train, samples, seed)?;
-            crate::info!(
-                "calibrated {name} with {samples} samples in {:.1}s",
-                t0.elapsed().as_secs_f64()
-            );
-            self.calib_cache.insert(key.clone(), calib);
-        }
-        Ok(&self.calib_cache[&key])
-    }
-
-    /// Perplexity + mean zero-shot accuracy of a (masked) model.
-    pub fn evaluate(&self, model: &Gpt) -> Result<(f64, f64)> {
-        let ppl = perplexity_native(model, &self.test, self.eval_seqs)?;
-        let zs = zero_shot(model, 0xE7A1, self.zs_items)?;
-        Ok((ppl, zs.mean()))
+    /// Execute one cell through the shared session.
+    pub fn run(&mut self, spec: &JobSpec) -> Result<JobResult> {
+        self.session.execute(spec)
     }
 
     /// Write a report JSON under `reports/`.

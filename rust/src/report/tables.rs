@@ -1,8 +1,9 @@
-//! Table 1 (method × sparsity grid) and Table 2 (α ablation).
+//! Table 1 (method × sparsity grid) and Table 2 (α ablation) — each
+//! cell is one [`JobSpec`](crate::coordinator::JobSpec) executed
+//! through the shared session (calibration collected once per model).
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::coordinator::PrunePipeline;
 use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
 use crate::util::json::Json;
 
@@ -50,21 +51,17 @@ pub fn table1(ctx: &mut ReportCtx) -> Result<Json> {
             let mut row_p = vec![method.label(), pattern.label()];
             let mut row_a = vec![method.label(), pattern.label()];
             for model_name in ctx.models.clone() {
-                ctx.calibration(&model_name)?;
-                let model = &ctx.loaded[&model_name];
-                let calib = &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
-                let t0 = std::time::Instant::now();
-                let res = PrunePipeline::new(model, calib).run(method, &pattern)?;
-                let pruned = res.apply(model)?;
-                let (ppl, acc) = ctx.evaluate(&pruned)?;
+                let spec = ctx.spec(&model_name, method.clone(), pattern.clone());
+                let res = ctx.run(&spec)?;
+                let ev = res.eval.as_ref().context("table1 cell missing eval")?;
+                let (ppl, acc) = (ev.ppl, ev.zero_shot.mean());
                 crate::info!(
                     "table1: {model_name} {} {} -> ppl {ppl:.2} acc {:.1}% ({:.1}s prune)",
                     method.label(),
                     pattern.label(),
                     acc * 100.0,
-                    res.wall_seconds,
+                    res.wall_seconds(),
                 );
-                let _ = t0;
                 row_p.push(format!("{ppl:.2}"));
                 row_a.push(format!("{:.2}", acc * 100.0));
                 out.push(Json::obj(vec![
@@ -74,7 +71,7 @@ pub fn table1(ctx: &mut ReportCtx) -> Result<Json> {
                     ("ppl", ppl.into()),
                     ("zero_shot_acc", acc.into()),
                     ("mean_rel_reduction", res.mean_rel_reduction().unwrap_or(0.0).into()),
-                    ("prune_seconds", res.wall_seconds.into()),
+                    ("prune_seconds", res.wall_seconds().into()),
                 ]));
             }
             rows_ppl.push(row_p);
@@ -114,7 +111,6 @@ pub fn table2(ctx: &mut ReportCtx) -> Result<Json> {
 
     for pattern in &patterns {
         for model_name in ctx.models.clone() {
-            ctx.calibration(&model_name)?;
             let mut row = vec![model_name.clone(), pattern.label()];
             for &alpha in &alphas {
                 let method = PruneMethod::SparseFw(SparseFwConfig {
@@ -127,12 +123,9 @@ pub fn table2(ctx: &mut ReportCtx) -> Result<Json> {
                     keep_best: false,
                     ..Default::default()
                 });
-                let model = &ctx.loaded[&model_name];
-                let calib =
-                    &ctx.calib_cache[&(model_name.clone(), ctx.calib_samples, ctx.calib_seed)];
-                let res = PrunePipeline::new(model, calib).run(&method, pattern)?;
-                let pruned = res.apply(model)?;
-                let (ppl, _) = ctx.evaluate(&pruned)?;
+                let spec = ctx.spec(&model_name, method, pattern.clone());
+                let res = ctx.run(&spec)?;
+                let ppl = res.eval.as_ref().context("table2 cell missing eval")?.ppl;
                 crate::info!(
                     "table2: {model_name} {} alpha={alpha} -> ppl {ppl:.2}",
                     pattern.label()

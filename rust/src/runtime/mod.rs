@@ -9,6 +9,10 @@
 //! `return_tuple=True`).
 
 pub mod manifest;
+/// PJRT/XLA binding surface.  The offline build ships the [`xla`] stub
+/// (see its module docs); with real bindings available this declaration
+/// is the only line that changes.
+pub mod xla;
 
 pub use manifest::Manifest;
 

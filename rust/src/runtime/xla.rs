@@ -1,0 +1,119 @@
+//! Offline shim for the PJRT/XLA bindings.
+//!
+//! The offline crate registry has no `xla` crate, so this module
+//! provides the exact API surface `runtime` consumes.  Every entry
+//! point that would touch a real PJRT client fails at
+//! [`PjRtClient::cpu`], which means `Workspace::runtime()` returns a
+//! clean error and every PJRT-gated flow (integration tests, the
+//! `selfcheck` subcommand, PJRT job specs) reports "runtime
+//! unavailable" instead of failing deep inside a kernel call.  Swap
+//! this module for the real bindings by replacing the `pub mod xla;`
+//! declaration in `runtime/mod.rs` with an external dependency; no
+//! other file changes.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT/XLA bindings unavailable in this build (offline registry has no `xla` crate); \
+     use the native backend";
+
+/// Stand-in for a rank-N device literal.  Carries no data: nothing can
+/// execute against the stub client, so the values are never read.
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+/// Shape metadata of an array literal.
+#[derive(Clone, Debug, Default)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Parsed HLO module text (never materialized by the stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Result buffer of an execution (unreachable through the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The single failure point: creating a client reports the missing
+    /// bindings, so no executable path past this can be reached.
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        "stub"
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!(UNAVAILABLE)
+    }
+}

@@ -7,6 +7,9 @@
 //!
 //! Skipped (with a note) when `artifacts/` has not been built.
 
+// The deprecated PrunePipeline shims stay covered here until removed.
+#![allow(deprecated)]
+
 use sparsefw::calib::Calibration;
 use sparsefw::config::{Backend, Workspace};
 use sparsefw::coordinator::PrunePipeline;

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + tests, plus a quickstart smoke run when
+# an artifacts workspace exists (skipped gracefully otherwise).
+#
+#   scripts/ci.sh            # from the repo root (or anywhere)
+#
+# Referenced from ROADMAP.md's tier-1 line.
+set -euo pipefail
+
+REPO="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$REPO/rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+# `make artifacts` (python/compile/aot.py) writes to <repo>/artifacts;
+# resolve it absolutely so the cwd (rust/) doesn't matter.
+ARTIFACTS="${SPARSEFW_ARTIFACTS:-$REPO/artifacts}"
+if [ -d "$ARTIFACTS" ]; then
+    echo "== quickstart example ($ARTIFACTS) =="
+    SPARSEFW_ARTIFACTS="$ARTIFACTS" cargo run --release --example quickstart
+else
+    echo "== quickstart example skipped (no artifacts workspace at $ARTIFACTS) =="
+fi
+
+echo "ci.sh OK"
