@@ -1,0 +1,96 @@
+//! Serve-and-submit: start a pruning job server on an ephemeral port,
+//! submit a Wanda and a SparseFW job through the blocking client, and
+//! print the streamed per-layer progress of each.  The two jobs share
+//! `(model, samples, seed)`, so the second hits the worker session's
+//! calibration memo — visible in the final `GET /metrics` line.
+//!
+//!   cargo run --release --example serve_and_submit
+//!
+//! Uses the artifacts workspace when one exists ($SPARSEFW_ARTIFACTS or
+//! ./artifacts); otherwise serves the in-memory `--demo` model so the
+//! example always runs.
+
+use anyhow::Result;
+use sparsefw::prelude::*;
+use sparsefw::server::{self, Server};
+
+fn main() -> Result<()> {
+    // one worker: both jobs land on the same session, so the second is
+    // guaranteed to hit its calibration memo
+    let workers = 1;
+    let (sessions, model_name) = match server::workspace_sessions(None, workers) {
+        Ok(sessions) => {
+            let name = sessions[0].model_names()[0].clone();
+            println!("serving artifacts workspace (model {name})");
+            (sessions, name)
+        }
+        Err(_) => {
+            println!("no artifacts workspace — serving the in-memory demo model");
+            (server::demo_sessions(workers), "demo".to_string())
+        }
+    };
+
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), workers, ..Default::default() };
+    let handle = Server::bind(&cfg, sessions)?;
+    println!("listening on {}", handle.addr());
+    let client = Client::new(handle.addr().to_string());
+
+    let base = JobSpec {
+        model: model_name,
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
+        calib_samples: 32,
+        ..Default::default()
+    };
+    let jobs = [
+        ("wanda", JobSpec { method: PruneMethod::Wanda, ..base.clone() }),
+        (
+            "sparsefw",
+            JobSpec {
+                method: PruneMethod::SparseFw(SparseFwConfig {
+                    iters: 120,
+                    ..Default::default()
+                }),
+                ..base
+            },
+        ),
+    ];
+
+    for (name, spec) in &jobs {
+        let id = client.submit(spec, 0)?;
+        println!("[{name}] submitted as job {id}");
+        // follow the chunked event stream until the job's terminal line
+        let fin = client.stream(id, |e| {
+            println!(
+                "[{name}]   [{}/{}] {} pruned (err {:.4e})",
+                e.at(&["index"]).as_usize().unwrap_or(0) + 1,
+                e.at(&["total"]).as_usize().unwrap_or(0),
+                e.at(&["layer"]).as_str().unwrap_or("?"),
+                e.at(&["obj"]).as_f64().unwrap_or(0.0),
+            );
+        })?;
+        let r = fin.at(&["result"]);
+        println!(
+            "[{name}] {}: Σ err {:.4e} across {} masks in {:.2}s{}",
+            fin.at(&["state"]).as_str().unwrap_or("?"),
+            r.at(&["total_err"]).as_f64().unwrap_or(0.0),
+            r.at(&["mask_layers"]).as_usize().unwrap_or(0),
+            r.at(&["wall_seconds"]).as_f64().unwrap_or(0.0),
+            r.at(&["mean_rel_reduction"])
+                .as_f64()
+                .map(|x| format!(", {:.1}% better than warmstart", x * 100.0))
+                .unwrap_or_default(),
+        );
+    }
+
+    let m = client.metrics()?;
+    println!(
+        "served {} jobs; calibration cache {} hits / {} misses",
+        m.at(&["jobs_served"]).as_usize().unwrap_or(0),
+        m.at(&["calib_cache", "hits"]).as_usize().unwrap_or(0),
+        m.at(&["calib_cache", "misses"]).as_usize().unwrap_or(0),
+    );
+    client.shutdown(false)?;
+    handle.join();
+    println!("server stopped");
+    Ok(())
+}

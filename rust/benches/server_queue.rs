@@ -1,0 +1,80 @@
+//! Queue-throughput microbench for the job server: how fast can jobs
+//! move through the `JobQueue` (submit → pop → finish), alone and under
+//! producer/consumer contention?  CI writes the JSON twin of this
+//! report to `BENCH_server.json` so the serving-path perf trajectory is
+//! tracked alongside the kernel benches.
+//!
+//!   cargo bench --bench server_queue
+//!
+//! `SPARSEFW_BENCH_JSON` overrides the JSON output path.
+
+use std::sync::Arc;
+
+use sparsefw::bench::Bencher;
+use sparsefw::coordinator::JobSpec;
+use sparsefw::server::JobQueue;
+
+const JOBS: usize = 1024;
+
+fn main() {
+    let mut b = Bencher::new("server_queue");
+
+    b.bench("submit_pop_1024_fifo", || {
+        let q = JobQueue::new(2 * JOBS);
+        for _ in 0..JOBS {
+            q.submit(JobSpec::default(), 0).unwrap();
+        }
+        for _ in 0..JOBS {
+            q.pop_blocking(0).unwrap();
+        }
+    });
+
+    b.bench("submit_pop_1024_mixed_priorities", || {
+        let q = JobQueue::new(2 * JOBS);
+        for i in 0..JOBS {
+            q.submit(JobSpec::default(), (i % 7) as i64).unwrap();
+        }
+        for _ in 0..JOBS {
+            q.pop_blocking(0).unwrap();
+        }
+    });
+
+    b.bench("full_lifecycle_1024_with_finish", || {
+        let q = JobQueue::new(2 * JOBS);
+        for _ in 0..JOBS {
+            q.submit(JobSpec::default(), 0).unwrap();
+        }
+        for _ in 0..JOBS {
+            let (id, _spec) = q.pop_blocking(0).unwrap();
+            q.finish(id, Err("bench".into()));
+        }
+    });
+
+    b.bench("mpmc_4_producers_4_consumers_1024", || {
+        let q = Arc::new(JobQueue::new(2 * JOBS));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let q = q.clone();
+                s.spawn(move || {
+                    for _ in 0..JOBS / 4 {
+                        q.submit(JobSpec::default(), 0).unwrap();
+                    }
+                });
+            }
+            for w in 0..4 {
+                let q = q.clone();
+                s.spawn(move || {
+                    for _ in 0..JOBS / 4 {
+                        q.pop_blocking(w).unwrap();
+                    }
+                });
+            }
+        });
+    });
+
+    b.report();
+    let path = std::env::var("SPARSEFW_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_server.json".to_string());
+    b.report_json(&path).expect("writing bench json");
+    println!("\nbench json written to {path}");
+}

@@ -13,7 +13,10 @@
 //! sample count.  Good enough to rank implementations and detect >5%
 //! regressions, which is all the §Perf loop needs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
 
 pub struct Sample {
     pub name: String,
@@ -100,6 +103,35 @@ impl Bencher {
     pub fn samples(&self) -> &[Sample] {
         &self.samples
     }
+
+    /// The group + samples as JSON (seconds, f64) — the machine-readable
+    /// twin of [`Bencher::report`], for tracking perf across commits.
+    pub fn to_json(&self) -> Json {
+        let samples = self
+            .samples
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", s.name.as_str().into()),
+                    ("iters", s.iters.into()),
+                    ("mean_s", s.mean.as_secs_f64().into()),
+                    ("p50_s", s.p50.as_secs_f64().into()),
+                    ("p95_s", s.p95.as_secs_f64().into()),
+                    ("min_s", s.min.as_secs_f64().into()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("group", self.group.as_str().into()),
+            ("samples", Json::Arr(samples)),
+        ])
+    }
+
+    /// Write [`Bencher::to_json`] (pretty-printed) to `path` — CI keeps
+    /// these as `BENCH_*.json` so the perf trajectory is diffable.
+    pub fn report_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))
+    }
 }
 
 pub fn fmt_dur(d: Duration) -> String {
@@ -133,6 +165,29 @@ mod tests {
         assert!(s.iters >= 3);
         assert!(s.min <= s.p50 && s.p50 <= s.p95);
         assert_eq!(b.samples().len(), 1);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut b = Bencher::new("grp");
+        b.budget = Duration::from_millis(20);
+        b.max_iters = 3;
+        b.bench("a", || {
+            std::hint::black_box(1 + 1);
+        });
+        let v = b.to_json();
+        assert_eq!(v.at(&["group"]).as_str(), Some("grp"));
+        let samples = v.at(&["samples"]).as_arr().unwrap();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].at(&["name"]).as_str(), Some("a"));
+        assert!(samples[0].at(&["mean_s"]).as_f64().unwrap() >= 0.0);
+        // and the emitted text parses back
+        let path = std::env::temp_dir()
+            .join(format!("sparsefw-bench-{}.json", std::process::id()));
+        b.report_json(&path).unwrap();
+        let back = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.at(&["group"]).as_str(), Some("grp"));
     }
 
     #[test]

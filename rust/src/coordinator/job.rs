@@ -352,6 +352,12 @@ fn run_zero_shot(model: &Gpt, spec: &EvalSpec) -> Result<ZeroShotReport> {
 
 type ProgressBox = Box<dyn Fn(&LayerEvent) + Send + Sync>;
 
+/// Default bound on the session's calibration memo (entries, not bytes).
+/// Grams are the largest per-job state a session retains, and a
+/// long-lived server sees unboundedly many `(model, samples, seed)`
+/// combinations — see [`PruneSession::set_calib_cache_capacity`].
+pub const DEFAULT_CALIB_CACHE_CAP: usize = 8;
+
 /// Executes [`JobSpec`]s with memoized state.
 ///
 /// Owns the artifacts [`Workspace`] (when opened from one), loads
@@ -364,7 +370,10 @@ pub struct PruneSession {
     train: Option<TokenBin>,
     test: Option<TokenBin>,
     models: BTreeMap<String, Gpt>,
-    calibs: BTreeMap<(String, usize, u64), Calibration>,
+    /// LRU memo of calibration grams: key → (last-use tick, grams).
+    calibs: BTreeMap<(String, usize, u64), (u64, Calibration)>,
+    calib_tick: u64,
+    calib_cap: usize,
     runtime: Option<PjrtRuntime>,
     progress: Option<ProgressBox>,
     calib_hits: usize,
@@ -379,6 +388,8 @@ impl PruneSession {
             test: None,
             models: BTreeMap::new(),
             calibs: BTreeMap::new(),
+            calib_tick: 0,
+            calib_cap: DEFAULT_CALIB_CACHE_CAP,
             runtime: None,
             progress: None,
             calib_hits: 0,
@@ -406,6 +417,8 @@ impl PruneSession {
             test: Some(test),
             models,
             calibs: BTreeMap::new(),
+            calib_tick: 0,
+            calib_cap: DEFAULT_CALIB_CACHE_CAP,
             runtime: None,
             progress: None,
             calib_hits: 0,
@@ -441,6 +454,43 @@ impl PruneSession {
     /// sweeps are not recollecting grams.
     pub fn calib_stats(&self) -> (usize, usize) {
         (self.calib_hits, self.calib_misses)
+    }
+
+    /// Bound the calibration memo to `cap` entries (LRU eviction;
+    /// minimum 1).  Long-lived sessions — the `sparsefw serve` workers
+    /// in particular — see arbitrarily many `(model, samples, seed)`
+    /// combinations, and one entry holds a full set of per-layer grams.
+    pub fn set_calib_cache_capacity(&mut self, cap: usize) {
+        self.calib_cap = cap.max(1);
+        self.evict_calibs(self.calib_cap);
+    }
+
+    pub fn calib_cache_capacity(&self) -> usize {
+        self.calib_cap
+    }
+
+    /// Entries currently memoized.
+    pub fn calib_cache_len(&self) -> usize {
+        self.calibs.len()
+    }
+
+    /// Drop least-recently-used calibrations until at most `keep` remain.
+    fn evict_calibs(&mut self, keep: usize) {
+        while self.calibs.len() > keep {
+            let lru = self
+                .calibs
+                .iter()
+                .min_by_key(|(_, (tick, _))| *tick)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty cache");
+            crate::debuglog!(
+                "evicting calibration ({}, {} samples, seed {})",
+                lru.0,
+                lru.1,
+                lru.2
+            );
+            self.calibs.remove(&lru);
+        }
     }
 
     /// Load (or return the cached) model.
@@ -509,10 +559,14 @@ impl PruneSession {
         Ok(self.runtime.as_ref().unwrap())
     }
 
-    /// Collect (or return the memoized) calibration grams.
+    /// Collect (or return the memoized) calibration grams.  The memo is
+    /// LRU-bounded by [`PruneSession::set_calib_cache_capacity`].
     pub fn calibration(&mut self, name: &str, samples: usize, seed: u64) -> Result<&Calibration> {
         let key = (name.to_string(), samples, seed);
-        if self.calibs.contains_key(&key) {
+        self.calib_tick += 1;
+        let tick = self.calib_tick;
+        if let Some(entry) = self.calibs.get_mut(&key) {
+            entry.0 = tick;
             self.calib_hits += 1;
         } else {
             self.calib_misses += 1;
@@ -526,9 +580,10 @@ impl PruneSession {
                 "calibrated {name} ({samples} samples, seed {seed}) in {:.1}s",
                 t0.elapsed().as_secs_f64()
             );
-            self.calibs.insert(key.clone(), calib);
+            self.evict_calibs(self.calib_cap.saturating_sub(1));
+            self.calibs.insert(key.clone(), (tick, calib));
         }
-        Ok(&self.calibs[&key])
+        Ok(&self.calibs[&key].1)
     }
 
     /// Native perplexity + zero-shot suite of any (masked) model.
@@ -574,7 +629,7 @@ impl PruneSession {
         let prune = {
             let model = &self.models[&spec.model];
             let calib =
-                &self.calibs[&(spec.model.clone(), spec.calib_samples, spec.calib_seed)];
+                &self.calibs[&(spec.model.clone(), spec.calib_samples, spec.calib_seed)].1;
             let patterns = spec.allocation.resolve(model, calib)?;
             let runtime = self.runtime.as_ref();
             let progress = self.progress.as_deref();
@@ -680,6 +735,43 @@ mod tests {
         let other = JobSpec { calib_seed: 9, ..spec };
         s.execute(&other).unwrap();
         assert_eq!(s.calib_stats(), (1, 2), "new seed must miss");
+    }
+
+    #[test]
+    fn calib_cache_is_lru_bounded() {
+        let mut s = session();
+        s.set_calib_cache_capacity(2);
+        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        for seed in [1u64, 2, 3] {
+            s.execute(&JobSpec { calib_seed: seed, ..spec.clone() }).unwrap();
+        }
+        assert_eq!(s.calib_cache_len(), 2, "capacity must bound the memo");
+        // seed 1 was evicted (LRU), seeds 2 and 3 survive
+        s.execute(&JobSpec { calib_seed: 3, ..spec.clone() }).unwrap();
+        s.execute(&JobSpec { calib_seed: 2, ..spec.clone() }).unwrap();
+        assert_eq!(s.calib_stats(), (2, 3), "2/3 must still be memoized");
+        s.execute(&JobSpec { calib_seed: 1, ..spec.clone() }).unwrap();
+        assert_eq!(s.calib_stats(), (2, 4), "seed 1 was evicted → miss");
+        // recency: the seed-1 miss evicted seed 3 (LRU), not seed 2
+        s.execute(&JobSpec { calib_seed: 2, ..spec.clone() }).unwrap();
+        assert_eq!(s.calib_stats(), (3, 4));
+        s.execute(&JobSpec { calib_seed: 3, ..spec }).unwrap();
+        assert_eq!(s.calib_stats(), (3, 5));
+    }
+
+    #[test]
+    fn shrinking_calib_capacity_evicts_immediately() {
+        let mut s = session();
+        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        for seed in [1u64, 2, 3] {
+            s.execute(&JobSpec { calib_seed: seed, ..spec.clone() }).unwrap();
+        }
+        assert_eq!(s.calib_cache_len(), 3);
+        s.set_calib_cache_capacity(1);
+        assert_eq!(s.calib_cache_len(), 1);
+        // the survivor is the most recently used (seed 3)
+        s.execute(&JobSpec { calib_seed: 3, ..spec }).unwrap();
+        assert_eq!(s.calib_stats(), (1, 3));
     }
 
     #[test]

@@ -117,14 +117,20 @@ pub(crate) fn run_layers(
     };
 
     let outputs: Vec<Result<(LayerInfo, LayerPruneOutput)>> = match backend {
-        Backend::Native => parallel_map(total, |i| {
-            let l = &layers[i];
-            let w = model.mat(&l.name);
-            let g = calib.gram(&l.name);
-            let out = method.prune_layer(&NativeKernels, w, g, &patterns[i])?;
-            emit(l, &out);
-            Ok((l.clone(), out))
-        }),
+        Backend::Native => {
+            // LPT dispatch: hand the pool the big mlp_down jobs first so
+            // the schedule tails off with short jobs (schedule::lpt_order)
+            let order = schedule::lpt_order(&layers);
+            parallel_map(total, |k| {
+                let i = order[k];
+                let l = &layers[i];
+                let w = model.mat(&l.name);
+                let g = calib.gram(&l.name);
+                let out = method.prune_layer(&NativeKernels, w, g, &patterns[i])?;
+                emit(l, &out);
+                Ok((l.clone(), out))
+            })
+        }
         Backend::Pjrt | Backend::PjrtChunk => {
             let rt = runtime.ok_or_else(|| {
                 anyhow::anyhow!("PJRT backend requires a runtime (open a workspace with AOT artifacts)")

@@ -21,14 +21,21 @@ pub fn lpt_order(layers: &[LayerInfo]) -> Vec<usize> {
     idx
 }
 
-/// Simple makespan estimate for `workers` under LPT (for logs/reports).
-pub fn estimated_makespan(layers: &[LayerInfo], workers: usize) -> u64 {
+/// Greedy list-scheduling makespan of dispatching `layers` in `order`
+/// across `workers` (each job goes to the least-loaded worker).  Models
+/// the work-stealing pool: dispatch order is the only scheduling choice.
+pub fn order_makespan(layers: &[LayerInfo], order: &[usize], workers: usize) -> u64 {
     let mut loads = vec![0u64; workers.max(1)];
-    for &i in &lpt_order(layers) {
+    for &i in order {
         let min = loads.iter_mut().min().unwrap();
         *min += layer_flops(&layers[i]);
     }
     loads.into_iter().max().unwrap_or(0)
+}
+
+/// Simple makespan estimate for `workers` under LPT (for logs/reports).
+pub fn estimated_makespan(layers: &[LayerInfo], workers: usize) -> u64 {
+    order_makespan(layers, &lpt_order(layers), workers)
 }
 
 #[cfg(test)]
@@ -45,6 +52,37 @@ mod tests {
         let order = lpt_order(&layers);
         assert_eq!(order[0], 1); // b: 128·512² is largest
         assert_eq!(order[2], 0);
+    }
+
+    /// LPT dispatch (what `run_layers` feeds the native pool) must beat
+    /// index-order dispatch on a transformer-shaped layer set: in model
+    /// order the big `mlp_down` jobs land *last*, so one of them tails
+    /// the schedule alone.
+    #[test]
+    fn lpt_improves_makespan_over_index_order() {
+        // 2 blocks of (wqkv, wo, wup, wdown) with d_ff >> d_model, the
+        // shape where mlp_down (d_in = d_ff) dominates
+        let (d, ff) = (8usize, 64usize);
+        let mut layers = Vec::new();
+        for i in 0..2 {
+            layers.push(layer(&format!("blocks.{i}.wqkv"), 3 * d, d));
+            layers.push(layer(&format!("blocks.{i}.wo"), d, d));
+            layers.push(layer(&format!("blocks.{i}.wup"), ff, d));
+            layers.push(layer(&format!("blocks.{i}.wdown"), d, ff));
+        }
+        let identity: Vec<usize> = (0..layers.len()).collect();
+        for workers in [2, 3, 4] {
+            let naive = order_makespan(&layers, &identity, workers);
+            let lpt = order_makespan(&layers, &lpt_order(&layers), workers);
+            assert!(lpt <= naive, "workers={workers}: lpt {lpt} > naive {naive}");
+        }
+        // with 2 workers the improvement is strict
+        let naive = order_makespan(&layers, &identity, 2);
+        let lpt = order_makespan(&layers, &lpt_order(&layers), 2);
+        assert!(lpt < naive, "lpt {lpt} !< naive {naive}");
+        // and the first dispatched job is an mlp_down
+        let first = lpt_order(&layers)[0];
+        assert!(layers[first].name.ends_with("wdown"), "{}", layers[first].name);
     }
 
     #[test]

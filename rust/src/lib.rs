@@ -32,6 +32,27 @@
 //! println!("Σ err {:.3e}", result.total_err());
 //! # anyhow::Ok(())
 //! ```
+//!
+//! For multi-client use the [`server`] subsystem turns that substrate
+//! into a long-running daemon (`sparsefw serve`): an HTTP/1.1 JSON API
+//! with a bounded priority job queue, worker threads that each own a
+//! memoizing `PruneSession`, live per-layer progress streaming, and a
+//! blocking [`server::Client`] (`sparsefw submit/status`):
+//!
+//! ```no_run
+//! use sparsefw::prelude::*;
+//! use sparsefw::server::{self, Server, ServerConfig};
+//!
+//! let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+//! let handle = Server::bind(&cfg, server::demo_sessions(cfg.workers))?;
+//! let client = Client::new(handle.addr().to_string());
+//! let spec = JobSpec { model: "demo".into(), ..Default::default() };
+//! let id = client.submit(&spec, 0)?;
+//! let status = client.wait(id, std::time::Duration::from_secs(60))?;
+//! println!("job {id}: {}", status.at(&["state"]).as_str().unwrap_or("?"));
+//! handle.shutdown();
+//! # anyhow::Ok(())
+//! ```
 
 pub mod bench;
 pub mod calib;
@@ -43,6 +64,7 @@ pub mod model;
 pub mod pruner;
 pub mod report;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod util;
 
@@ -54,5 +76,6 @@ pub mod prelude {
     };
     pub use crate::model::{Gpt, GptConfig};
     pub use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+    pub use crate::server::{Client, JobState, Server, ServerConfig};
     pub use crate::tensor::Mat;
 }

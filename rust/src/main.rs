@@ -6,10 +6,14 @@
 //!            [--spec job.json --save-spec job.json]
 //!   eval     [--model --masks file]
 //!   selfcheck                    — PJRT vs native numerical cross-check
+//!   serve    [--addr --workers --queue-cap --calib-cache --demo]
+//!   submit / status / shutdown   — client side of a running server
 //!   report-table1 / report-table2 / report-fig2 / report-fig3 / report-fig4
 //!
 //! `prune` lowers its flags into a declarative [`JobSpec`] (replayable
-//! via `--spec job.json`) and executes it through a [`PruneSession`].
+//! via `--spec job.json`) and executes it through a [`PruneSession`];
+//! `serve` runs the same jobs behind a multi-client HTTP JSON API with
+//! a priority queue and per-worker session memoization.
 //!
 //! Common flags: --artifacts DIR (default ./artifacts or
 //! $SPARSEFW_ARTIFACTS), --models a,b, --iters N, --samples N, --fast.
@@ -21,10 +25,12 @@ use anyhow::{bail, Context, Result};
 
 use sparsefw::config::cli::{parse_method, parse_pattern, Args};
 use sparsefw::config::{Backend, Workspace};
+use sparsefw::coordinator::job::DEFAULT_CALIB_CACHE_CAP;
 use sparsefw::coordinator::{Allocation, EvalSpec, EvalSummary, JobSpec, PruneSession};
 use sparsefw::model::safetensors::{self, TensorData};
 use sparsefw::prelude::*;
 use sparsefw::report::{figs, tables, ReportCtx};
+use sparsefw::server;
 use sparsefw::util::json::Json;
 use sparsefw::{info, runtime};
 
@@ -42,6 +48,13 @@ USAGE: sparsefw <subcommand> [flags]
              [--out masks.safetensors] [--eval]
   eval       --model M [--masks masks.safetensors] [--pjrt]
   selfcheck                       cross-check PJRT kernels vs native math
+  serve      [--addr HOST:PORT] [--workers N] [--queue-cap N]
+             [--calib-cache N] [--conn-threads N] [--history-cap N]
+             [--demo]
+  submit     <prune flags…> --addr HOST:PORT [--priority N]
+             [--wait] [--stream]
+  status     --addr HOST:PORT [--job ID]
+  shutdown   --addr HOST:PORT [--drain]
   report-table1 | report-table2 | report-fig2 | report-fig3 | report-fig4
              [--models a,b --iters N --samples N --fast]
 
@@ -51,6 +64,16 @@ explicitly-passed flags overriding the file), executed by a
 PruneSession that caches models and calibration grams across jobs.
 --owl switches from a uniform pattern to OWL-style non-uniform
 per-layer sparsities (works on every backend).
+
+`serve` runs a long-lived job server over the workspace: POST /jobs
+takes a JobSpec, workers execute jobs off a bounded priority queue
+with per-worker model + calibration memoization, GET /jobs/:id (and
+the chunked /jobs/:id/events stream) reports per-layer progress, and
+GET /metrics exposes queue depth / cache hits / worker utilization.
+`submit` sends the same flags `prune` takes to a server (--wait polls
+to completion, --stream follows live progress); port 0 in --addr
+picks an ephemeral port (printed as `listening on …`).  --demo serves
+a randomly-initialized tiny model without an artifacts workspace.
 
 Flags everywhere: --artifacts DIR (default $SPARSEFW_ARTIFACTS or ./artifacts)
 ";
@@ -94,6 +117,10 @@ fn run(args: &Args) -> Result<()> {
         Some("prune") => prune(args),
         Some("eval") => eval_cmd(args),
         Some("selfcheck") => selfcheck(args),
+        Some("serve") => serve(args),
+        Some("submit") => submit(args),
+        Some("status") => status_cmd(args),
+        Some("shutdown") => shutdown_cmd(args),
         Some(report) if report.starts_with("report-") => report_cmd(args, report),
         Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
     }
@@ -286,6 +313,134 @@ fn eval_cmd(args: &Args) -> Result<()> {
         session.evaluate(&model, &espec)?
     };
     print_eval(&model_name, &summary, None);
+    Ok(())
+}
+
+/// Run the pruning job server (blocks until `POST /shutdown` or
+/// `sparsefw shutdown`).
+fn serve(args: &Args) -> Result<()> {
+    let cfg = ServerConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        workers: args.get_usize("workers", 2)?.max(1),
+        queue_capacity: args.get_usize("queue-cap", 256)?,
+        calib_cache_cap: args.get_usize("calib-cache", DEFAULT_CALIB_CACHE_CAP)?,
+        conn_threads: args.get_usize("conn-threads", 8)?,
+        job_history_cap: args.get_usize("history-cap", 1024)?,
+    };
+    let sessions = if args.has("demo") {
+        info!("serving the --demo in-memory model (no artifacts workspace)");
+        server::demo_sessions(cfg.workers)
+    } else {
+        server::workspace_sessions(args.get("artifacts"), cfg.workers)?
+    };
+    let handle = Server::bind(&cfg, sessions)?;
+    // scripts parse this line to learn the ephemeral port
+    println!("listening on {}", handle.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    handle.join();
+    info!("server stopped");
+    Ok(())
+}
+
+fn client_from(args: &Args) -> server::Client {
+    server::Client::new(args.get("addr").unwrap_or("127.0.0.1:7878"))
+}
+
+/// One line per job the server reports.
+fn print_job_line(v: &Json) {
+    let id = v.at(&["id"]).as_usize().unwrap_or(0);
+    let state = v.at(&["state"]).as_str().unwrap_or("?");
+    let completed = v.at(&["progress", "completed"]).as_usize().unwrap_or(0);
+    let total = v.at(&["progress", "total"]).as_usize().unwrap_or(0);
+    let mut line = format!("job {id}: state={state} progress={completed}/{total}");
+    if let Some(r) = v.get("result") {
+        line.push_str(&format!(
+            " mask_layers={} mask_nnz={} total_err={:.4e} wall_seconds={:.2}",
+            r.at(&["mask_layers"]).as_usize().unwrap_or(0),
+            r.at(&["mask_nnz"]).as_usize().unwrap_or(0),
+            r.at(&["total_err"]).as_f64().unwrap_or(0.0),
+            r.at(&["wall_seconds"]).as_f64().unwrap_or(0.0),
+        ));
+        if let Some(red) = r.at(&["mean_rel_reduction"]).as_f64() {
+            line.push_str(&format!(" mean_rel_reduction={:.1}%", red * 100.0));
+        }
+        if let Some(ppl) = r.at(&["ppl"]).as_f64() {
+            line.push_str(&format!(" ppl={ppl:.3}"));
+        }
+    }
+    if let Some(e) = v.at(&["error"]).as_str() {
+        line.push_str(&format!(" error={e:?}"));
+    }
+    println!("{line}");
+}
+
+/// Submit a job (same flags as `prune`) to a running server.
+fn submit(args: &Args) -> Result<()> {
+    let spec = build_spec(args)?;
+    let client = client_from(args);
+    let priority = args.get_f64("priority", 0.0)? as i64;
+    let id = client.submit(&spec, priority)?;
+    info!("job {id} submitted to {} ({})", client.addr(), spec.label());
+    if args.has("stream") {
+        client.stream(id, |e| {
+            info!(
+                "  [{}/{}] {} pruned (err {:.4e})",
+                e.at(&["index"]).as_usize().unwrap_or(0) + 1,
+                e.at(&["total"]).as_usize().unwrap_or(0),
+                e.at(&["layer"]).as_str().unwrap_or("?"),
+                e.at(&["obj"]).as_f64().unwrap_or(0.0),
+            );
+        })?;
+        // the stream trailer has no progress object; re-fetch the record
+        print_job_line(&client.job(id)?);
+    } else if args.has("wait") {
+        let timeout = std::time::Duration::from_secs(args.get_u64("timeout-secs", 600)?);
+        print_job_line(&client.wait(id, timeout)?);
+    } else {
+        println!("job {id} submitted");
+    }
+    Ok(())
+}
+
+/// Show one job (`--job ID`) or the full server picture.
+fn status_cmd(args: &Args) -> Result<()> {
+    let client = client_from(args);
+    if let Some(id) = args.get("job") {
+        let id: u64 = id.parse().context("--job must be an integer id")?;
+        print_job_line(&client.job(id)?);
+        return Ok(());
+    }
+    let listing = client.jobs()?;
+    let jobs = listing.at(&["jobs"]).as_arr().unwrap_or(&[]).to_vec();
+    println!("{} job(s), queue depth {}", jobs.len(),
+        listing.at(&["queue_depth"]).as_usize().unwrap_or(0));
+    for j in &jobs {
+        println!(
+            "  job {}: {} [prio {}] {}",
+            j.at(&["id"]).as_usize().unwrap_or(0),
+            j.at(&["state"]).as_str().unwrap_or("?"),
+            j.at(&["priority"]).as_f64().unwrap_or(0.0),
+            j.at(&["label"]).as_str().unwrap_or(""),
+        );
+    }
+    let m = client.metrics()?;
+    println!(
+        "served={} queued={} calib hits/misses={}/{} workers busy={}/{}",
+        m.at(&["jobs_served"]).as_usize().unwrap_or(0),
+        m.at(&["queue_depth"]).as_usize().unwrap_or(0),
+        m.at(&["calib_cache", "hits"]).as_usize().unwrap_or(0),
+        m.at(&["calib_cache", "misses"]).as_usize().unwrap_or(0),
+        m.at(&["workers", "busy"]).as_usize().unwrap_or(0),
+        m.at(&["workers", "total"]).as_usize().unwrap_or(0),
+    );
+    Ok(())
+}
+
+fn shutdown_cmd(args: &Args) -> Result<()> {
+    let client = client_from(args);
+    client.shutdown(args.has("drain"))?;
+    println!("shutdown requested at {}", client.addr());
     Ok(())
 }
 

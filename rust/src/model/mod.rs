@@ -199,9 +199,10 @@ impl Gpt {
     }
 }
 
-#[cfg(test)]
 pub mod testutil {
-    //! Randomly-initialized models for unit tests (no artifacts needed).
+    //! Randomly-initialized models for tests, benches, and the demo
+    //! server mode (no artifacts needed).  Always compiled: integration
+    //! tests and `sparsefw serve --demo` need workspace-free models.
     use super::*;
     use crate::util::prng::Xoshiro256;
 

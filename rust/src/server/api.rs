@@ -1,0 +1,382 @@
+//! The job server's JSON API (routing + wire formats).
+//!
+//! Endpoints (all JSON over the [`super::http`] layer):
+//!
+//! | method | path              | semantics                                    |
+//! |--------|-------------------|----------------------------------------------|
+//! | POST   | `/jobs`           | submit a [`JobSpec`] (or `{spec, priority}`) |
+//! | GET    | `/jobs`           | list all jobs                                |
+//! | GET    | `/jobs/:id`       | status + per-layer progress + result summary |
+//! | GET    | `/jobs/:id/events`| chunked NDJSON live progress stream          |
+//! | DELETE | `/jobs/:id`       | cancel a queued job                          |
+//! | GET    | `/healthz`        | liveness                                     |
+//! | GET    | `/metrics`        | counters: jobs, queue depth, calib cache, …  |
+//! | POST   | `/shutdown`       | graceful shutdown (`?drain=1` runs backlog)  |
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{JobSpec, LayerEvent};
+use crate::util::json::Json;
+
+use super::http::{ChunkedWriter, Request, Response};
+use super::queue::{CancelError, JobId, JobRecord};
+use super::ServerState;
+
+/// How long a streaming connection waits per wakeup before re-checking
+/// the stop flag.
+const STREAM_TICK: Duration = Duration::from_millis(200);
+/// Idle keep-alive connections are dropped after this long.  Kept short
+/// so shutdown (whose connection pool joins handlers parked in a read)
+/// is never stalled long by an idle peer.
+const READ_TIMEOUT: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------------------
+// Connection loop
+// ---------------------------------------------------------------------------
+
+/// Serve one accepted connection: parse requests in a keep-alive loop,
+/// dispatch, and hand `/jobs/:id/events` off to the chunked streamer.
+pub(crate) fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+
+    loop {
+        let req = match Request::read(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean close between requests
+            Err(e) => {
+                // silent close on idle timeout; 400 on real parse errors
+                let is_timeout = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::UnexpectedEof
+                    )
+                });
+                if !is_timeout {
+                    let _ = Response::error(400, &format!("{e:#}")).write(&mut writer, false);
+                }
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive();
+
+        // the streaming endpoint owns the connection until the job ends,
+        // on its own thread — a stream following a long job must not pin
+        // one of the finite connection-pool threads (that would let a
+        // handful of streamers starve /healthz and /shutdown)
+        let segs: Vec<String> = req.segments().iter().map(|s| s.to_string()).collect();
+        if req.method == "GET" && segs.len() == 3 && segs[0] == "jobs" && segs[2] == "events" {
+            let state = state.clone();
+            let id = segs[1].clone();
+            let _ = std::thread::Builder::new()
+                .name("sparsefw-stream".into())
+                .spawn(move || {
+                    let mut writer = writer;
+                    stream_job_events(&mut writer, &state, &id);
+                });
+            return;
+        }
+
+        let resp = route(&req, &state);
+        if resp.write(&mut writer, keep_alive).is_err() {
+            return;
+        }
+        if !keep_alive || state.stopping() {
+            return;
+        }
+    }
+}
+
+fn route(req: &Request, state: &Arc<ServerState>) -> Response {
+    let segs = req.segments();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["metrics"]) => metrics(state),
+        ("GET", ["jobs"]) => list_jobs(state),
+        ("POST", ["jobs"]) => submit_job(req, state),
+        ("GET", ["jobs", id]) => job_status(state, id),
+        ("DELETE", ["jobs", id]) => cancel_job(state, id),
+        ("POST", ["shutdown"]) => shutdown(req, state),
+        (_, ["jobs", ..]) | (_, ["healthz"]) | (_, ["metrics"]) | (_, ["shutdown"]) => {
+            Response::error(405, &format!("{} not allowed here", req.method))
+        }
+        _ => Response::error(404, &format!("no route for {}", req.path)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Handlers
+// ---------------------------------------------------------------------------
+
+fn parse_id(s: &str) -> Option<JobId> {
+    s.parse().ok()
+}
+
+fn healthz(state: &ServerState) -> Response {
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("ok", true.into()),
+            ("uptime_secs", state.started.elapsed().as_secs_f64().into()),
+            ("workers", state.metrics.workers.into()),
+        ]),
+    )
+}
+
+fn metrics(state: &ServerState) -> Response {
+    use std::sync::atomic::Ordering::Relaxed;
+    let m = &state.metrics;
+    let (queued, running, done, failed, cancelled) = state.queue.state_counts();
+    let v = Json::obj(vec![
+        ("uptime_secs", state.started.elapsed().as_secs_f64().into()),
+        ("jobs_served", (m.jobs_done.load(Relaxed) + m.jobs_failed.load(Relaxed)).into()),
+        (
+            "jobs",
+            Json::obj(vec![
+                ("submitted", m.jobs_submitted.load(Relaxed).into()),
+                ("queued", queued.into()),
+                ("running", running.into()),
+                ("done", done.into()),
+                ("failed", failed.into()),
+                ("cancelled", cancelled.into()),
+            ]),
+        ),
+        ("queue_depth", state.queue.depth().into()),
+        ("queue_capacity", state.queue.capacity().into()),
+        (
+            "calib_cache",
+            Json::obj(vec![
+                ("hits", m.calib_hits.load(Relaxed).into()),
+                ("misses", m.calib_misses.load(Relaxed).into()),
+            ]),
+        ),
+        (
+            "workers",
+            Json::obj(vec![
+                ("total", m.workers.into()),
+                ("busy", m.busy_workers.load(Relaxed).into()),
+                ("utilization", m.utilization().into()),
+            ]),
+        ),
+    ]);
+    Response::json(200, &v)
+}
+
+fn list_jobs(state: &ServerState) -> Response {
+    let jobs: Vec<Json> = state
+        .queue
+        .briefs()
+        .iter()
+        .map(|b| {
+            Json::obj(vec![
+                ("id", (b.id as usize).into()),
+                ("state", b.state.label().into()),
+                ("priority", (b.priority as f64).into()),
+                ("label", b.label.as_str().into()),
+                (
+                    "progress",
+                    Json::obj(vec![
+                        ("completed", b.completed.into()),
+                        ("total", b.total.into()),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("jobs", Json::Arr(jobs)),
+            ("queue_depth", state.queue.depth().into()),
+        ]),
+    )
+}
+
+fn submit_job(req: &Request, state: &ServerState) -> Response {
+    let body = match req.body_json() {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    // accept either a bare JobSpec or a {"spec": …, "priority": N} wrapper
+    let (spec_json, priority) = if body.get("spec").is_some() {
+        (body.at(&["spec"]).clone(), body.at(&["priority"]).as_f64().unwrap_or(0.0) as i64)
+    } else {
+        (body.clone(), 0)
+    };
+    let spec = match JobSpec::from_json(&spec_json) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &format!("bad job spec: {e:#}")),
+    };
+    if let Err(e) = super::validate_spec(&spec) {
+        return Response::error(400, &format!("bad job spec: {e:#}"));
+    }
+    match state.queue.submit(spec, priority) {
+        Ok(id) => {
+            state
+                .metrics
+                .jobs_submitted
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Response::json(
+                202,
+                &Json::obj(vec![
+                    ("id", (id as usize).into()),
+                    ("state", "queued".into()),
+                    ("priority", (priority as f64).into()),
+                ]),
+            )
+        }
+        Err(e) => Response::error(503, &format!("{e:#}")),
+    }
+}
+
+fn job_status(state: &ServerState, id: &str) -> Response {
+    let Some(id) = parse_id(id) else {
+        return Response::error(400, "job id must be an integer");
+    };
+    match state.queue.get(id) {
+        Some(rec) => Response::json(200, &record_json(&rec)),
+        None => Response::error(404, &format!("no job {id}")),
+    }
+}
+
+fn cancel_job(state: &ServerState, id: &str) -> Response {
+    let Some(id) = parse_id(id) else {
+        return Response::error(400, "job id must be an integer");
+    };
+    match state.queue.cancel(id) {
+        Ok(()) => Response::json(
+            200,
+            &Json::obj(vec![("id", (id as usize).into()), ("state", "cancelled".into())]),
+        ),
+        Err(CancelError::Unknown) => Response::error(404, &format!("no job {id}")),
+        Err(e @ CancelError::NotCancellable(_)) => Response::error(409, &e.to_string()),
+    }
+}
+
+fn shutdown(req: &Request, state: &ServerState) -> Response {
+    let drain = req.query.get("drain").map(String::as_str) == Some("1");
+    crate::info!("shutdown requested (drain_queued={drain})");
+    state.begin_shutdown(drain);
+    Response::json(
+        200,
+        &Json::obj(vec![("ok", true.into()), ("draining", drain.into())]),
+    )
+}
+
+/// Chunked NDJSON stream: replay recorded [`LayerEvent`]s, then follow
+/// the job live; the final line carries the terminal state + summary.
+fn stream_job_events(writer: &mut TcpStream, state: &Arc<ServerState>, id: &str) {
+    let Some(id) = parse_id(id) else {
+        let _ = Response::error(400, "job id must be an integer").write(writer, false);
+        return;
+    };
+    if state.queue.get(id).is_none() {
+        let _ = Response::error(404, &format!("no job {id}")).write(writer, false);
+        return;
+    }
+    let Ok(mut cw) = ChunkedWriter::begin(writer, 200, "application/x-ndjson") else {
+        return;
+    };
+    let mut seen = 0usize;
+    let mut last_write = std::time::Instant::now();
+    loop {
+        let Some(rec) = state.queue.wait_update(id, seen, STREAM_TICK) else { break };
+        let mut failed = false;
+        for e in &rec.events[seen..] {
+            let mut line = crate::util::json::to_string(&event_json(e));
+            line.push('\n');
+            failed |= cw.chunk(line.as_bytes()).is_err();
+            last_write = std::time::Instant::now();
+        }
+        seen = rec.events.len();
+        // heartbeat through long event gaps so the client's socket read
+        // timeout doesn't kill a healthy stream (clients ignore it)
+        if !rec.state.is_terminal() && last_write.elapsed() > Duration::from_secs(5) {
+            failed |= cw.chunk(b"{\"heartbeat\": true}\n").is_err();
+            last_write = std::time::Instant::now();
+        }
+        if failed {
+            return; // client went away; skip the trailer
+        }
+        if rec.state.is_terminal() {
+            let mut fields = vec![
+                ("id", (rec.id as usize).into()),
+                ("state", rec.state.label().into()),
+            ];
+            if let Some(s) = &rec.summary {
+                fields.push(("result", s.to_json()));
+            }
+            if let Some(e) = &rec.error {
+                fields.push(("error", e.as_str().into()));
+            }
+            let mut line = crate::util::json::to_string(&Json::obj(fields));
+            line.push('\n');
+            let _ = cw.chunk(line.as_bytes());
+            let _ = cw.finish();
+            return;
+        }
+        if state.stopping() {
+            let _ = cw.finish();
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire formats
+// ---------------------------------------------------------------------------
+
+pub(crate) fn event_json(e: &LayerEvent) -> Json {
+    Json::obj(vec![
+        ("layer", e.layer.as_str().into()),
+        ("index", e.index.into()),
+        ("total", e.total.into()),
+        ("obj", e.obj.into()),
+    ])
+}
+
+fn progress_json(rec: &JobRecord) -> Json {
+    let total = rec.events.last().map(|e| e.total).unwrap_or(0);
+    Json::obj(vec![
+        ("completed", rec.events.len().into()),
+        ("total", total.into()),
+    ])
+}
+
+/// Full status payload for `GET /jobs/:id`.
+pub(crate) fn record_json(rec: &JobRecord) -> Json {
+    let mut fields = vec![
+        ("id", (rec.id as usize).into()),
+        ("state", rec.state.label().into()),
+        ("priority", (rec.priority as f64).into()),
+        ("label", rec.spec.label().into()),
+        ("spec", rec.spec.to_json()),
+        ("queued_secs", rec.queued_secs().into()),
+        ("progress", progress_json(rec)),
+        (
+            "events",
+            Json::Arr(rec.events.iter().map(event_json).collect()),
+        ),
+    ];
+    if let Some(w) = rec.worker {
+        fields.push(("worker", w.into()));
+    }
+    if let Some(r) = rec.run_secs() {
+        fields.push(("run_secs", r.into()));
+    }
+    if let Some(s) = &rec.summary {
+        fields.push(("result", s.to_json()));
+    }
+    if let Some(e) = &rec.error {
+        fields.push(("error", e.as_str().into()));
+    }
+    Json::obj(fields)
+}

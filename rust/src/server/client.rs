@@ -1,0 +1,220 @@
+//! Blocking client for the job server.
+//!
+//! One short-lived connection per call (`Connection: close`) keeps the
+//! client trivially correct; the server's keep-alive path exists for
+//! clients that want it.  Used by the CLI (`sparsefw
+//! submit/status/shutdown`), the CI smoke test, examples, and the
+//! integration tests.
+
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::JobSpec;
+use crate::util::json::{self, Json};
+
+use super::http::{read_chunked, read_response_head};
+use super::queue::JobId;
+
+pub struct Client {
+    addr: String,
+    /// Per-request socket read timeout.
+    pub timeout: Duration,
+}
+
+impl Client {
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self { addr: addr.into(), timeout: Duration::from_secs(30) }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    // -- transport ----------------------------------------------------------
+
+    fn connect(&self) -> Result<TcpStream> {
+        let stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting to sparsefw server at {}", self.addr))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    fn send_request(
+        &self,
+        stream: &mut TcpStream,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<()> {
+        let body_text = body.map(json::to_string).unwrap_or_default();
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+            self.addr,
+            body_text.len(),
+            body_text,
+        )?;
+        stream.flush()?;
+        Ok(())
+    }
+
+    /// One request → `(status, parsed JSON body)` (Null for empty bodies).
+    fn request(&self, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+        let mut stream = self.connect()?;
+        self.send_request(&mut stream, method, path, body)?;
+        let mut reader = BufReader::new(stream);
+        let (code, headers) = read_response_head(&mut reader)?;
+        let mut body = Vec::new();
+        match headers.get("content-length") {
+            Some(n) => {
+                body.resize(n.parse::<usize>().context("bad Content-Length")?, 0);
+                reader.read_exact(&mut body).context("reading response body")?;
+            }
+            None => {
+                reader.read_to_end(&mut body).context("reading response body")?;
+            }
+        }
+        let v = if body.is_empty() {
+            Json::Null
+        } else {
+            json::parse(std::str::from_utf8(&body).context("non-UTF-8 response")?)
+                .context("parsing response JSON")?
+        };
+        Ok((code, v))
+    }
+
+    /// Like [`Client::request`] but non-2xx becomes an error carrying
+    /// the server's `"error"` message.
+    fn request_ok(&self, method: &str, path: &str, body: Option<&Json>) -> Result<Json> {
+        let (code, v) = self.request(method, path, body)?;
+        if !(200..300).contains(&code) {
+            let msg = v.at(&["error"]).as_str().unwrap_or("unknown error").to_string();
+            bail!("{method} {path}: HTTP {code}: {msg}");
+        }
+        Ok(v)
+    }
+
+    // -- API ----------------------------------------------------------------
+
+    /// `POST /jobs`; returns the assigned job id.
+    pub fn submit(&self, spec: &JobSpec, priority: i64) -> Result<JobId> {
+        let body = Json::obj(vec![
+            ("spec", spec.to_json()),
+            ("priority", (priority as f64).into()),
+        ]);
+        let v = self.request_ok("POST", "/jobs", Some(&body))?;
+        let id = v
+            .at(&["id"])
+            .as_usize()
+            .context("submit response has no id")?;
+        Ok(id as JobId)
+    }
+
+    /// `GET /jobs/:id` — the full status payload.
+    pub fn job(&self, id: JobId) -> Result<Json> {
+        self.request_ok("GET", &format!("/jobs/{id}"), None)
+    }
+
+    /// `GET /jobs` — brief listings.
+    pub fn jobs(&self) -> Result<Json> {
+        self.request_ok("GET", "/jobs", None)
+    }
+
+    /// `DELETE /jobs/:id` — cancel a queued job.
+    pub fn cancel(&self, id: JobId) -> Result<Json> {
+        self.request_ok("DELETE", &format!("/jobs/{id}"), None)
+    }
+
+    pub fn healthz(&self) -> Result<Json> {
+        self.request_ok("GET", "/healthz", None)
+    }
+
+    pub fn metrics(&self) -> Result<Json> {
+        self.request_ok("GET", "/metrics", None)
+    }
+
+    /// `POST /shutdown` — graceful; `drain_queued` runs the backlog
+    /// first, otherwise queued jobs are cancelled.
+    pub fn shutdown(&self, drain_queued: bool) -> Result<Json> {
+        let path = if drain_queued { "/shutdown?drain=1" } else { "/shutdown" };
+        self.request_ok("POST", path, None)
+    }
+
+    /// Block until the job reaches a terminal state; returns the final
+    /// `GET /jobs/:id` payload.  Follows the event stream — server-side
+    /// that parks on a condvar, so a waiting client costs one idle
+    /// connection, not a poll loop — and falls back to coarse polling
+    /// (where `timeout` is enforced) if the stream drops mid-job; while
+    /// the stream is live and the job still progressing, completion
+    /// wins over the deadline.
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Result<Json> {
+        let deadline = Instant::now() + timeout;
+        if let Ok(fin) = self.stream(id, |_| {}) {
+            let state = fin.at(&["state"]).as_str().unwrap_or("");
+            if matches!(state, "done" | "failed" | "cancelled") {
+                // the stream trailer omits progress/events; re-fetch
+                return self.job(id);
+            }
+            // stream ended early (e.g. server draining) — poll below
+        }
+        let mut interval = Duration::from_millis(50);
+        loop {
+            let v = self.job(id)?;
+            let state = v.at(&["state"]).as_str().unwrap_or("");
+            if matches!(state, "done" | "failed" | "cancelled") {
+                return Ok(v);
+            }
+            ensure!(
+                Instant::now() < deadline,
+                "job {id} still {state:?} after {timeout:?}"
+            );
+            std::thread::sleep(interval);
+            interval = (interval * 2).min(Duration::from_secs(1));
+        }
+    }
+
+    /// Follow `GET /jobs/:id/events`: `on_event` fires per layer event;
+    /// the returned value is the stream's final state line (id, state,
+    /// result / error).  Falls back to [`Client::job`] if the stream
+    /// ends without a terminal line (server shutting down mid-stream).
+    pub fn stream(&self, id: JobId, mut on_event: impl FnMut(&Json)) -> Result<Json> {
+        let mut stream = self.connect()?;
+        self.send_request(&mut stream, "GET", &format!("/jobs/{id}/events"), None)?;
+        let mut reader = BufReader::new(stream);
+        let (code, headers) = read_response_head(&mut reader)?;
+        if !(200..300).contains(&code) {
+            // the error payload is a plain (non-chunked) response
+            let mut body = String::new();
+            let _ = reader.read_to_string(&mut body);
+            let msg = json::parse(&body)
+                .ok()
+                .and_then(|v| v.at(&["error"]).as_str().map(String::from))
+                .unwrap_or(body);
+            bail!("GET /jobs/{id}/events: HTTP {code}: {msg}");
+        }
+        ensure!(
+            headers.get("transfer-encoding").map(String::as_str) == Some("chunked"),
+            "expected a chunked stream"
+        );
+        let mut terminal: Option<Json> = None;
+        read_chunked(&mut reader, |line| {
+            if let Ok(v) = json::parse(line) {
+                if v.get("state").is_some() {
+                    terminal = Some(v);
+                } else if v.get("layer").is_some() {
+                    on_event(&v);
+                }
+                // other lines (heartbeats) are dropped
+            }
+        })?;
+        match terminal {
+            Some(v) => Ok(v),
+            None => self.job(id),
+        }
+    }
+}

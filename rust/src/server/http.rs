@@ -1,0 +1,391 @@
+//! Minimal HTTP/1.1 layer for the job server.
+//!
+//! The offline registry has no `hyper`/`tokio`, so this module speaks
+//! just enough HTTP/1.1 over blocking `std::net` streams for the JSON
+//! API and its blocking client: request-line + header parsing with a
+//! `Content-Length` body, plain responses, `Transfer-Encoding: chunked`
+//! responses for live progress streaming, and keep-alive (persistent
+//! connections are the default in 1.1; `Connection: close` opts out).
+//!
+//! Deliberately not implemented: TLS, compression, trailers, multipart,
+//! `%`-escapes beyond the query split — the server binds loopback by
+//! default and both ends of the protocol live in this crate.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Upper bound on a request body (a JobSpec is ~1 KB; 4 MB is generous).
+pub const MAX_BODY: usize = 4 << 20;
+/// Upper bound on a single header line.
+pub const MAX_LINE: usize = 64 << 10;
+
+// ---------------------------------------------------------------------------
+// Request
+// ---------------------------------------------------------------------------
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, e.g. `/jobs/3`.
+    pub path: String,
+    /// Decoded `?k=v&flag` pairs (missing `=` ⇒ empty value).
+    pub query: BTreeMap<String, String>,
+    /// Header names lower-cased.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Read one request off a buffered stream.  Returns `Ok(None)` on a
+    /// clean EOF before the request line (keep-alive peer went away).
+    pub fn read(r: &mut impl BufRead) -> Result<Option<Request>> {
+        let Some(line) = read_crlf_line(r)? else { return Ok(None) };
+        let mut parts = line.split_whitespace();
+        let method = parts.next().context("empty request line")?.to_string();
+        let target = parts.next().context("request line has no target")?;
+        let version = parts.next().context("request line has no version")?;
+        ensure!(
+            version == "HTTP/1.1" || version == "HTTP/1.0",
+            "unsupported HTTP version {version:?}"
+        );
+
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), parse_query(q)),
+            None => (target.to_string(), BTreeMap::new()),
+        };
+
+        let headers = read_headers(r)?;
+
+        let len: usize = match headers.get("content-length") {
+            Some(v) => v.parse().context("bad Content-Length")?,
+            None => 0,
+        };
+        ensure!(len <= MAX_BODY, "body too large ({len} bytes)");
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body).context("reading request body")?;
+
+        Ok(Some(Request { method, path, query, headers, body }))
+    }
+
+    /// The body parsed as JSON.
+    pub fn body_json(&self) -> Result<Json> {
+        let text = std::str::from_utf8(&self.body).context("body is not UTF-8")?;
+        Ok(json::parse(text).context("body is not valid JSON")?)
+    }
+
+    /// Keep the connection open after responding?  (HTTP/1.1 default.)
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+
+    /// `/jobs/3/events` → `["jobs", "3", "events"]`.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// Read a CRLF- (or bare-LF-) terminated line; `None` on immediate EOF.
+fn read_crlf_line(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-line");
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    let s = String::from_utf8(buf).context("non-UTF-8 header line")?;
+                    return Ok(Some(s));
+                }
+                buf.push(byte[0]);
+                ensure!(buf.len() <= MAX_LINE, "header line too long");
+            }
+            Err(e) => return Err(e).context("reading header line"),
+        }
+    }
+}
+
+/// Header block (both directions of the protocol): lines until the
+/// blank separator, names lower-cased.
+fn read_headers(r: &mut impl BufRead) -> Result<BTreeMap<String, String>> {
+    let mut headers = BTreeMap::new();
+    loop {
+        let Some(line) = read_crlf_line(r)? else {
+            bail!("connection closed mid-headers")
+        };
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        let (k, v) = line.split_once(':').context("malformed header line")?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+}
+
+fn parse_query(q: &str) -> BTreeMap<String, String> {
+    q.split('&')
+        .filter(|p| !p.is_empty())
+        .map(|p| match p.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (p.to_string(), String::new()),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Response
+// ---------------------------------------------------------------------------
+
+pub fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        202 => "Accepted",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// A complete (non-streaming) response.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Json) -> Self {
+        Self {
+            status,
+            content_type: "application/json",
+            body: json::to_string_pretty(v).into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        Self { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+    }
+
+    /// JSON `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: &str) -> Self {
+        Self::json(status, &Json::obj(vec![("error", msg.into())]))
+    }
+
+    pub fn write(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            status_reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Writer for a `Transfer-Encoding: chunked` response — the progress
+/// streaming endpoint emits one JSON line per chunk as layers complete.
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    /// Write the status line + headers and hand back the chunk writer.
+    /// A chunked response always closes the connection when done (the
+    /// stream end is job completion, not a byte count).
+    pub fn begin(w: &'a mut W, status: u16, content_type: &str) -> std::io::Result<Self> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            status,
+            status_reason(status),
+            content_type,
+        )?;
+        w.flush()?;
+        Ok(Self { w })
+    }
+
+    /// Send one chunk (empty input is skipped: a zero-size chunk would
+    /// terminate the stream).
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream with the zero-size chunk.
+    pub fn finish(self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Client side: read a status line + headers (names lower-cased).
+pub fn read_response_head(r: &mut impl BufRead) -> Result<(u16, BTreeMap<String, String>)> {
+    let line = read_crlf_line(r)?.context("EOF before status line")?;
+    let mut parts = line.split_whitespace();
+    let version = parts.next().context("empty status line")?;
+    ensure!(version.starts_with("HTTP/1."), "not an HTTP response: {line:?}");
+    let code: u16 = parts
+        .next()
+        .context("status line has no code")?
+        .parse()
+        .context("bad status code")?;
+    Ok((code, read_headers(r)?))
+}
+
+/// Client side of a chunked response: read chunks, invoking `on_line`
+/// per newline-terminated line of payload, until the terminal chunk.
+pub fn read_chunked(r: &mut impl BufRead, mut on_line: impl FnMut(&str)) -> Result<()> {
+    let mut pending = String::new();
+    loop {
+        let size_line = read_crlf_line(r)?.context("EOF mid chunked stream")?;
+        let size = usize::from_str_radix(size_line.trim(), 16)
+            .with_context(|| format!("bad chunk size {size_line:?}"))?;
+        let mut data = vec![0u8; size];
+        r.read_exact(&mut data).context("reading chunk")?;
+        // consume the CRLF after the chunk payload
+        let mut crlf = [0u8; 2];
+        r.read_exact(&mut crlf).context("reading chunk terminator")?;
+        if size == 0 {
+            if !pending.is_empty() {
+                on_line(&pending);
+            }
+            return Ok(());
+        }
+        pending.push_str(std::str::from_utf8(&data).context("non-UTF-8 chunk")?);
+        while let Some(nl) = pending.find('\n') {
+            let line: String = pending.drain(..=nl).collect();
+            let line = line.trim_end();
+            if !line.is_empty() {
+                on_line(line);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn req(raw: &str) -> Request {
+        Request::read(&mut BufReader::new(raw.as_bytes()))
+            .unwrap()
+            .unwrap()
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let r = req("GET /jobs/3?stream=1&x=a%20b HTTP/1.1\r\nHost: h\r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/jobs/3");
+        assert_eq!(r.segments(), vec!["jobs", "3"]);
+        assert_eq!(r.query.get("stream").map(String::as_str), Some("1"));
+        assert_eq!(r.headers.get("host").map(String::as_str), Some("h"));
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn parses_post_body_and_close() {
+        let body = r#"{"model":"tiny"}"#;
+        let raw = format!(
+            "POST /jobs HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = req(&raw);
+        assert_eq!(r.method, "POST");
+        assert!(!r.keep_alive());
+        assert_eq!(r.body_json().unwrap().at(&["model"]).as_str(), Some("tiny"));
+    }
+
+    #[test]
+    fn eof_before_request_is_none() {
+        let out = Request::read(&mut BufReader::new(&b""[..])).unwrap();
+        assert!(out.is_none());
+    }
+
+    #[test]
+    fn two_requests_on_one_connection() {
+        let raw = "GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(raw.as_bytes());
+        assert_eq!(Request::read(&mut r).unwrap().unwrap().path, "/a");
+        assert_eq!(Request::read(&mut r).unwrap().unwrap().path, "/b");
+        assert!(Request::read(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let mut r = BufReader::new(&b"NOT-HTTP\r\n\r\n"[..]);
+        assert!(Request::read(&mut r).is_err());
+        let mut r = BufReader::new(&b"GET / HTTP/9.9\r\n\r\n"[..]);
+        assert!(Request::read(&mut r).is_err());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let resp = Response::json(200, &Json::obj(vec![("ok", true.into())]));
+        let mut out = Vec::new();
+        resp.write(&mut out, true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        let body_at = text.find("\r\n\r\n").unwrap() + 4;
+        assert_eq!(
+            text[..body_at].to_lowercase().contains("content-length"),
+            true
+        );
+        assert_eq!(json::parse(&text[body_at..]).unwrap().at(&["ok"]).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn chunked_roundtrip() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::begin(&mut wire, 200, "application/json").unwrap();
+            cw.chunk(b"{\"a\":1}\n").unwrap();
+            cw.chunk(b"").unwrap(); // skipped, must not terminate
+            cw.chunk(b"{\"b\":2}\n{\"c\"").unwrap();
+            cw.chunk(b":3}\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked"));
+        // skip the headers, then decode the chunk stream
+        let body_at = text.find("\r\n\r\n").unwrap() + 4;
+        let mut r = BufReader::new(&wire[body_at..]);
+        let mut lines = Vec::new();
+        read_chunked(&mut r, |l| lines.push(l.to_string())).unwrap();
+        assert_eq!(lines, vec!["{\"a\":1}", "{\"b\":2}", "{\"c\":3}"]);
+    }
+}

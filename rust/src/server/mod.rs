@@ -1,0 +1,356 @@
+//! `sparsefw serve` — a multi-client pruning job server.
+//!
+//! PR 1 made a pruning run pure data ([`JobSpec`]) executed by a
+//! memoizing [`PruneSession`]; this subsystem puts a long-lived daemon
+//! in front of that substrate so many clients amortize workspace, model
+//! and calibration setup across jobs:
+//!
+//! * [`http`] — minimal HTTP/1.1 on blocking `std::net` (no tokio
+//!   offline): parsing, plain + chunked responses, keep-alive, with
+//!   connections fanned over a [`crate::util::pool::TaskPool`].
+//! * [`queue`] — bounded priority-FIFO [`queue::JobQueue`] + job
+//!   registry: `Queued → Running → Done/Failed`, queued-job
+//!   cancellation, graceful shutdown (in-flight jobs always complete).
+//! * [`api`] — the JSON API over [`crate::util::json`]: `POST /jobs`,
+//!   `GET /jobs[/:id[/events]]`, `DELETE /jobs/:id`, `GET /healthz`,
+//!   `GET /metrics`, `POST /shutdown`.
+//! * [`client`] — a small blocking [`client::Client`] used by the CLI
+//!   (`sparsefw submit/status/shutdown`), examples, and tests.
+//!
+//! Each worker thread owns one [`PruneSession`] over the shared
+//! workspace, so repeated jobs hit the session's model cache and
+//! LRU-bounded calibration memo; `GET /metrics` aggregates those
+//! hit/miss counters across workers.
+
+pub mod api;
+pub mod client;
+pub mod http;
+pub mod queue;
+
+pub use client::Client;
+pub use queue::{JobBrief, JobId, JobQueue, JobRecord, JobState, JobSummary};
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::job::DEFAULT_CALIB_CACHE_CAP;
+use crate::coordinator::{JobSpec, PruneSession};
+use crate::data::TokenBin;
+use crate::model::GptConfig;
+use crate::util::pool::TaskPool;
+
+// ---------------------------------------------------------------------------
+// Config / state / metrics
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`ServerHandle::addr`] for the resolved one).
+    pub addr: String,
+    /// Pruning worker threads (one [`PruneSession`] each).
+    pub workers: usize,
+    /// Bound on *pending* jobs; submissions beyond it get 503.
+    pub queue_capacity: usize,
+    /// Per-worker calibration LRU capacity
+    /// ([`PruneSession::set_calib_cache_capacity`]).
+    pub calib_cache_cap: usize,
+    /// Connection-handling threads (HTTP, not pruning; event streams
+    /// run on their own threads and do not occupy this pool).
+    pub conn_threads: usize,
+    /// Retained terminal job records ([`JobQueue::with_history_cap`]).
+    pub job_history_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            workers: 2,
+            queue_capacity: 256,
+            calib_cache_cap: DEFAULT_CALIB_CACHE_CAP,
+            conn_threads: 8,
+            job_history_cap: queue::DEFAULT_HISTORY_CAP,
+        }
+    }
+}
+
+/// Monotonic server-wide counters (lock-free; read by `GET /metrics`).
+pub struct Metrics {
+    pub jobs_submitted: AtomicUsize,
+    pub jobs_done: AtomicUsize,
+    pub jobs_failed: AtomicUsize,
+    pub calib_hits: AtomicUsize,
+    pub calib_misses: AtomicUsize,
+    pub busy_workers: AtomicUsize,
+    pub workers: usize,
+}
+
+impl Metrics {
+    fn new(workers: usize) -> Self {
+        Self {
+            jobs_submitted: AtomicUsize::new(0),
+            jobs_done: AtomicUsize::new(0),
+            jobs_failed: AtomicUsize::new(0),
+            calib_hits: AtomicUsize::new(0),
+            calib_misses: AtomicUsize::new(0),
+            busy_workers: AtomicUsize::new(0),
+            workers,
+        }
+    }
+
+    /// Fraction of pruning workers currently executing a job.
+    pub fn utilization(&self) -> f64 {
+        self.busy_workers.load(Ordering::Relaxed) as f64 / self.workers.max(1) as f64
+    }
+}
+
+/// Shared server state: the queue/registry plus metrics.
+pub struct ServerState {
+    pub queue: JobQueue,
+    pub metrics: Metrics,
+    pub started: Instant,
+    stopping: AtomicBool,
+}
+
+impl ServerState {
+    /// Shutdown initiated (accept loop and streamers should wind down).
+    pub fn stopping(&self) -> bool {
+        self.stopping.load(Ordering::Relaxed)
+    }
+
+    /// Stop intake and wake workers; see [`JobQueue::shutdown`] for the
+    /// `drain_queued` semantics.
+    pub fn begin_shutdown(&self, drain_queued: bool) {
+        self.stopping.store(true, Ordering::Relaxed);
+        self.queue.shutdown(drain_queued);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// A running server: resolved address + the threads behind it.  Dropping
+/// the handle without [`ServerHandle::shutdown`] detaches the threads.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves `:0` to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<ServerState> {
+        &self.state
+    }
+
+    /// Block until the server shuts down (via `POST /shutdown` or
+    /// [`ServerHandle::shutdown`] from another thread).
+    pub fn join(mut self) {
+        self.join_threads();
+    }
+
+    /// Initiate shutdown (cancelling queued jobs, finishing in-flight
+    /// ones) and wait for every thread to exit.
+    pub fn shutdown(mut self) {
+        self.state.begin_shutdown(false);
+        self.join_threads();
+    }
+
+    fn join_threads(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+pub struct Server;
+
+impl Server {
+    /// Bind `cfg.addr` and start one pruning worker per session plus the
+    /// HTTP accept loop.  `sessions` must all serve the same underlying
+    /// models — one per worker thread, each with its own memo.
+    pub fn bind(cfg: &ServerConfig, sessions: Vec<PruneSession>) -> Result<ServerHandle> {
+        ensure!(!sessions.is_empty(), "server needs at least one worker session");
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?; // the accept loop polls the stop flag
+
+        let state = Arc::new(ServerState {
+            queue: JobQueue::new(cfg.queue_capacity).with_history_cap(cfg.job_history_cap),
+            metrics: Metrics::new(sessions.len()),
+            started: Instant::now(),
+            stopping: AtomicBool::new(false),
+        });
+
+        let workers = sessions
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut session)| {
+                session.set_calib_cache_capacity(cfg.calib_cache_cap);
+                let state = state.clone();
+                std::thread::Builder::new()
+                    .name(format!("sparsefw-worker-{i}"))
+                    .spawn(move || worker_loop(state, session, i))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+
+        let accept = {
+            let state = state.clone();
+            let conn_threads = cfg.conn_threads;
+            std::thread::Builder::new()
+                .name("sparsefw-accept".into())
+                .spawn(move || accept_loop(listener, state, conn_threads))
+                .expect("spawning accept thread")
+        };
+
+        crate::info!("sparsefw serve: listening on {addr} ({} workers)", state.metrics.workers);
+        Ok(ServerHandle { addr, state, accept: Some(accept), workers })
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>, conn_threads: usize) {
+    let pool = TaskPool::new(conn_threads);
+    // keep serving HTTP through a shutdown until the backlog and every
+    // in-flight job are finished — clients draining `--wait`ed jobs must
+    // still be able to fetch their results — then linger briefly so the
+    // final poll after the last job lands.
+    let mut drained_at: Option<Instant> = None;
+    loop {
+        if state.stopping() {
+            let (queued, running, ..) = state.queue.state_counts();
+            if queued == 0 && running == 0 {
+                let t = *drained_at.get_or_insert_with(Instant::now);
+                if t.elapsed() > Duration::from_millis(750) {
+                    break;
+                }
+            } else {
+                drained_at = None;
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let state = state.clone();
+                pool.execute(move || api::handle_connection(stream, state));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            Err(e) => {
+                crate::warnlog!("accept error: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    // dropping the pool drains in-flight connection handlers
+}
+
+/// One pruning worker: pop → execute (streaming per-layer progress into
+/// the job record) → report, until the queue shuts down and drains.
+fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize) {
+    let (mut hits_seen, mut misses_seen) = session.calib_stats();
+    while let Some((id, spec)) = state.queue.pop_blocking(worker) {
+        state.metrics.busy_workers.fetch_add(1, Ordering::Relaxed);
+        crate::info!("worker {worker}: job {id} starting ({})", spec.label());
+        let progress_state = state.clone();
+        session.on_progress(move |e| progress_state.queue.push_event(id, e.clone()));
+        let outcome = session.execute(&spec);
+        session.clear_progress();
+
+        let (hits, misses) = session.calib_stats();
+        state
+            .metrics
+            .calib_hits
+            .fetch_add(hits - hits_seen, Ordering::Relaxed);
+        state
+            .metrics
+            .calib_misses
+            .fetch_add(misses - misses_seen, Ordering::Relaxed);
+        (hits_seen, misses_seen) = (hits, misses);
+
+        match outcome {
+            Ok(res) => {
+                let summary = JobSummary::from_result(&res);
+                crate::info!(
+                    "worker {worker}: job {id} done in {:.2}s (Σ err {:.4e})",
+                    summary.wall_seconds,
+                    summary.total_err
+                );
+                state.metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                state.queue.finish(id, Ok(summary));
+            }
+            Err(e) => {
+                crate::warnlog!("worker {worker}: job {id} failed: {e:#}");
+                state.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                state.queue.finish(id, Err(format!("{e:#}")));
+            }
+        }
+        state.metrics.busy_workers.fetch_sub(1, Ordering::Relaxed);
+    }
+    crate::debuglog!("worker {worker}: exiting");
+}
+
+// ---------------------------------------------------------------------------
+// Workspace-free demo sessions
+// ---------------------------------------------------------------------------
+
+/// In-memory sessions over one shared randomly-initialized tiny model
+/// (`"demo"`), one per worker — lets `sparsefw serve --demo`, the smoke
+/// test, and the example run with no artifacts workspace.
+pub fn demo_sessions(workers: usize) -> Vec<PruneSession> {
+    let cfg = GptConfig {
+        name: "demo".into(),
+        vocab_size: 256,
+        seq_len: 32,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 32,
+    };
+    let model = crate::model::testutil::random_model(&cfg, 1);
+    let bin = TokenBin::from_tokens(crate::data::corpus::generate(6, 8192));
+    (0..workers.max(1))
+        .map(|_| {
+            let mut models = BTreeMap::new();
+            models.insert("demo".to_string(), model.clone());
+            PruneSession::in_memory(models, bin.clone(), bin.clone())
+        })
+        .collect()
+}
+
+/// One [`PruneSession`] per worker over the same artifacts workspace.
+pub fn workspace_sessions(dir: Option<&str>, workers: usize) -> Result<Vec<PruneSession>> {
+    (0..workers.max(1))
+        .map(|_| match dir {
+            Some(d) => PruneSession::open(d),
+            None => PruneSession::open_default(),
+        })
+        .collect()
+}
+
+/// Validate that a submitted spec can run on this server's sessions —
+/// callers get a 400 instead of a deferred `Failed` job for the obvious
+/// mistakes (unknown model names are caught at execute time instead,
+/// since sessions live on the worker threads).
+pub(crate) fn validate_spec(spec: &JobSpec) -> Result<()> {
+    ensure!(spec.calib_samples > 0, "calib_samples must be positive");
+    ensure!(!spec.model.is_empty(), "model name must be non-empty");
+    Ok(())
+}

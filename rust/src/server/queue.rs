@@ -1,0 +1,652 @@
+//! Job queue + registry for the pruning server.
+//!
+//! A [`JobQueue`] owns both the bounded pending queue (priority, then
+//! FIFO) and the registry of every job the server has seen.  Worker
+//! threads block on [`JobQueue::pop_blocking`]; submitters, watchers and
+//! the API read consistent [`JobRecord`] snapshots under one mutex.
+//!
+//! State machine: `Queued → Running → Done | Failed`, with `Queued →
+//! Cancelled` via [`JobQueue::cancel`] (a running layer sweep is never
+//! interrupted — cancellation is only honoured while a job is still in
+//! the pending queue, so a cancelled job is guaranteed to never run).
+//! [`JobQueue::shutdown`] stops intake; in-flight jobs always complete,
+//! and queued jobs either drain or are cancelled en masse.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{JobResult, JobSpec, LayerEvent};
+use crate::util::json::Json;
+
+pub type JobId = u64;
+
+// ---------------------------------------------------------------------------
+// Job state + records
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+impl fmt::Display for JobState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// What the API reports for a finished job: the scalar outcome of a
+/// [`JobResult`] (masks stay server-side — they are model-sized).
+#[derive(Clone, Debug)]
+pub struct JobSummary {
+    pub layer_objs: BTreeMap<String, f64>,
+    pub mean_rel_reduction: Option<f64>,
+    pub wall_seconds: f64,
+    pub total_err: f64,
+    pub mask_layers: usize,
+    /// Σ nonzeros across all masks — "the masks are non-empty" in one number.
+    pub mask_nnz: usize,
+    pub pruned_sparsity: Option<f64>,
+    pub ppl: Option<f64>,
+}
+
+impl JobSummary {
+    pub fn from_result(res: &JobResult) -> Self {
+        Self {
+            layer_objs: res.prune.layer_objs.clone(),
+            mean_rel_reduction: res.mean_rel_reduction(),
+            wall_seconds: res.wall_seconds(),
+            total_err: res.total_err(),
+            mask_layers: res.masks().len(),
+            mask_nnz: res.masks().values().map(|m| m.count_nonzero()).sum(),
+            pruned_sparsity: res.pruned_sparsity,
+            ppl: res.eval.as_ref().map(|e| e.ppl),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let objs = self
+            .layer_objs
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v)))
+            .collect();
+        let mut fields = vec![
+            ("layer_objs", Json::Obj(objs)),
+            ("total_err", self.total_err.into()),
+            ("wall_seconds", self.wall_seconds.into()),
+            ("mask_layers", self.mask_layers.into()),
+            ("mask_nnz", self.mask_nnz.into()),
+        ];
+        if let Some(r) = self.mean_rel_reduction {
+            fields.push(("mean_rel_reduction", r.into()));
+        }
+        if let Some(s) = self.pruned_sparsity {
+            fields.push(("pruned_sparsity", s.into()));
+        }
+        if let Some(p) = self.ppl {
+            fields.push(("ppl", p.into()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Everything known about one submitted job (snapshot-cloneable).
+#[derive(Clone)]
+pub struct JobRecord {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub priority: i64,
+    pub state: JobState,
+    pub submitted: Instant,
+    pub started: Option<Instant>,
+    pub finished: Option<Instant>,
+    pub worker: Option<usize>,
+    /// Per-layer progress, in completion order.
+    pub events: Vec<LayerEvent>,
+    pub summary: Option<JobSummary>,
+    pub error: Option<String>,
+    /// Key into the pending queue while `Queued`.
+    pending_key: Option<(i64, u64)>,
+}
+
+impl JobRecord {
+    /// Seconds spent waiting in the queue (so far, if still queued).
+    pub fn queued_secs(&self) -> f64 {
+        match self.started {
+            Some(t) => (t - self.submitted).as_secs_f64(),
+            None => match self.finished {
+                // cancelled while queued
+                Some(t) => (t - self.submitted).as_secs_f64(),
+                None => self.submitted.elapsed().as_secs_f64(),
+            },
+        }
+    }
+
+    /// Seconds spent running (so far, if still running).
+    pub fn run_secs(&self) -> Option<f64> {
+        let start = self.started?;
+        Some(match self.finished {
+            Some(t) => (t - start).as_secs_f64(),
+            None => start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// One row of a job listing (see [`JobQueue::briefs`]).
+#[derive(Clone, Debug)]
+pub struct JobBrief {
+    pub id: JobId,
+    pub state: JobState,
+    pub priority: i64,
+    pub label: String,
+    /// Layers completed so far.
+    pub completed: usize,
+    /// Total layers (0 until the first event arrives).
+    pub total: usize,
+}
+
+/// Why [`JobQueue::cancel`] refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CancelError {
+    Unknown,
+    /// The job already left the queue; its current state is attached.
+    NotCancellable(JobState),
+}
+
+impl fmt::Display for CancelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CancelError::Unknown => write!(f, "unknown job"),
+            CancelError::NotCancellable(s) => write!(f, "job is {s}, not cancellable"),
+        }
+    }
+}
+
+impl std::error::Error for CancelError {}
+
+// ---------------------------------------------------------------------------
+// Queue
+// ---------------------------------------------------------------------------
+
+struct Inner {
+    next_id: JobId,
+    seq: u64,
+    /// `(-priority, submission seq) → id`: BTreeMap iteration order is
+    /// highest priority first, FIFO within a priority.
+    pending: BTreeMap<(i64, u64), JobId>,
+    jobs: BTreeMap<JobId, JobRecord>,
+    shutdown: bool,
+}
+
+/// Default bound on retained *terminal* job records (see
+/// [`JobQueue::with_history_cap`]).
+pub const DEFAULT_HISTORY_CAP: usize = 1024;
+
+/// Bounded priority-FIFO queue + job registry (see module docs).
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    /// Workers waiting for work.
+    take: Condvar,
+    /// Watchers waiting for job updates (events / state changes).
+    update: Condvar,
+    capacity: usize,
+    history_cap: usize,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                next_id: 1,
+                seq: 0,
+                pending: BTreeMap::new(),
+                jobs: BTreeMap::new(),
+                shutdown: false,
+            }),
+            take: Condvar::new(),
+            update: Condvar::new(),
+            capacity: capacity.max(1),
+            history_cap: DEFAULT_HISTORY_CAP,
+        }
+    }
+
+    /// Bound the registry: once more than `cap` *terminal* records are
+    /// retained, the oldest are dropped (their ids then 404).  Queued
+    /// and running jobs are never evicted.  A long-lived server would
+    /// otherwise grow one spec + event list + summary per job forever.
+    pub fn with_history_cap(mut self, cap: usize) -> Self {
+        self.history_cap = cap.max(1);
+        self
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Drop the oldest terminal records beyond `history_cap` (ids are
+    /// monotonic, so ascending id order is submission order).
+    fn prune_history(&self, inner: &mut Inner) {
+        let terminal: Vec<JobId> = inner
+            .jobs
+            .iter()
+            .filter(|(_, r)| r.state.is_terminal())
+            .map(|(&id, _)| id)
+            .collect();
+        if terminal.len() > self.history_cap {
+            for id in &terminal[..terminal.len() - self.history_cap] {
+                inner.jobs.remove(id);
+            }
+        }
+    }
+
+    /// Enqueue a job.  Fails when the pending queue is full or the
+    /// server is shutting down.  Higher `priority` runs first; equal
+    /// priorities are FIFO.
+    pub fn submit(&self, spec: JobSpec, priority: i64) -> Result<JobId> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.shutdown {
+            bail!("server is shutting down; not accepting jobs");
+        }
+        if inner.pending.len() >= self.capacity {
+            bail!("queue full ({} pending)", self.capacity);
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.seq += 1;
+        let key = (-priority, inner.seq);
+        inner.pending.insert(key, id);
+        inner.jobs.insert(
+            id,
+            JobRecord {
+                id,
+                spec,
+                priority,
+                state: JobState::Queued,
+                submitted: Instant::now(),
+                started: None,
+                finished: None,
+                worker: None,
+                events: Vec::new(),
+                summary: None,
+                error: None,
+                pending_key: Some(key),
+            },
+        );
+        drop(inner);
+        self.take.notify_one();
+        self.update.notify_all();
+        Ok(id)
+    }
+
+    /// Block until a job is available (returning it marked `Running` and
+    /// owned by `worker`) or the queue shuts down with nothing left to
+    /// drain (`None` — the worker should exit).
+    pub fn pop_blocking(&self, worker: usize) -> Option<(JobId, JobSpec)> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let head = inner.pending.iter().next().map(|(&k, &v)| (k, v));
+            if let Some((key, id)) = head {
+                inner.pending.remove(&key);
+                let rec = inner.jobs.get_mut(&id).expect("pending job registered");
+                rec.state = JobState::Running;
+                rec.started = Some(Instant::now());
+                rec.worker = Some(worker);
+                rec.pending_key = None;
+                let spec = rec.spec.clone();
+                drop(inner);
+                self.update.notify_all();
+                return Some((id, spec));
+            }
+            if inner.shutdown {
+                return None;
+            }
+            inner = self.take.wait(inner).unwrap();
+        }
+    }
+
+    /// Append a progress event to a running job.
+    pub fn push_event(&self, id: JobId, event: LayerEvent) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.jobs.get_mut(&id) {
+            if rec.state == JobState::Running {
+                rec.events.push(event);
+            }
+        }
+        drop(inner);
+        self.update.notify_all();
+    }
+
+    /// Mark a running job finished (`Done` with a summary, or `Failed`).
+    pub fn finish(&self, id: JobId, outcome: Result<JobSummary, String>) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.jobs.get_mut(&id) {
+            rec.finished = Some(Instant::now());
+            match outcome {
+                Ok(summary) => {
+                    rec.state = JobState::Done;
+                    rec.summary = Some(summary);
+                }
+                Err(msg) => {
+                    rec.state = JobState::Failed;
+                    rec.error = Some(msg);
+                }
+            }
+        }
+        self.prune_history(&mut inner);
+        drop(inner);
+        self.update.notify_all();
+    }
+
+    /// Cancel a *queued* job: it is removed from the pending queue under
+    /// the same lock `pop_blocking` uses, so it can never start.
+    pub fn cancel(&self, id: JobId) -> Result<(), CancelError> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(rec) = inner.jobs.get_mut(&id) else {
+            return Err(CancelError::Unknown);
+        };
+        if rec.state != JobState::Queued {
+            return Err(CancelError::NotCancellable(rec.state));
+        }
+        rec.state = JobState::Cancelled;
+        rec.finished = Some(Instant::now());
+        let key = rec.pending_key.take().expect("queued job has a pending key");
+        inner.pending.remove(&key);
+        self.prune_history(&mut inner);
+        drop(inner);
+        self.update.notify_all();
+        Ok(())
+    }
+
+    /// Stop accepting jobs and wake every worker.  In-flight jobs always
+    /// run to completion; with `drain_queued` the pending backlog is
+    /// still executed, otherwise it is cancelled wholesale.
+    pub fn shutdown(&self, drain_queued: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.shutdown = true;
+        if !drain_queued {
+            let ids: Vec<JobId> = inner.pending.values().copied().collect();
+            inner.pending.clear();
+            for id in ids {
+                if let Some(rec) = inner.jobs.get_mut(&id) {
+                    rec.state = JobState::Cancelled;
+                    rec.finished = Some(Instant::now());
+                    rec.pending_key = None;
+                }
+            }
+            self.prune_history(&mut inner);
+        }
+        drop(inner);
+        self.take.notify_all();
+        self.update.notify_all();
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.inner.lock().unwrap().shutdown
+    }
+
+    /// Snapshot of one job.
+    pub fn get(&self, id: JobId) -> Option<JobRecord> {
+        self.inner.lock().unwrap().jobs.get(&id).cloned()
+    }
+
+    /// Snapshot of every job, in submission order.  Deep-clones records
+    /// (events and summaries included) — prefer [`JobQueue::briefs`]
+    /// for listings.
+    pub fn list(&self) -> Vec<JobRecord> {
+        self.inner.lock().unwrap().jobs.values().cloned().collect()
+    }
+
+    /// Lightweight listing rows, in submission order, without cloning
+    /// event vectors or summaries under the lock.
+    pub fn briefs(&self) -> Vec<JobBrief> {
+        self.inner
+            .lock()
+            .unwrap()
+            .jobs
+            .values()
+            .map(|rec| JobBrief {
+                id: rec.id,
+                state: rec.state,
+                priority: rec.priority,
+                label: rec.spec.label(),
+                completed: rec.events.len(),
+                total: rec.events.last().map(|e| e.total).unwrap_or(0),
+            })
+            .collect()
+    }
+
+    /// Jobs waiting in the pending queue.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// `(queued, running, done, failed, cancelled)` counts.
+    pub fn state_counts(&self) -> (usize, usize, usize, usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        let mut c = (0, 0, 0, 0, 0);
+        for rec in inner.jobs.values() {
+            match rec.state {
+                JobState::Queued => c.0 += 1,
+                JobState::Running => c.1 += 1,
+                JobState::Done => c.2 += 1,
+                JobState::Failed => c.3 += 1,
+                JobState::Cancelled => c.4 += 1,
+            }
+        }
+        c
+    }
+
+    /// Block until job `id` has more than `events_seen` events, reaches
+    /// a terminal state, or `timeout` elapses; returns a fresh snapshot
+    /// either way (`None` only for an unknown id).
+    pub fn wait_update(
+        &self,
+        id: JobId,
+        events_seen: usize,
+        timeout: Duration,
+    ) -> Option<JobRecord> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let rec = inner.jobs.get(&id)?;
+            if rec.events.len() > events_seen || rec.state.is_terminal() {
+                return Some(rec.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(rec.clone());
+            }
+            let (guard, _res) = self.update.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn spec(model: &str) -> JobSpec {
+        JobSpec { model: model.into(), ..Default::default() }
+    }
+
+    #[test]
+    fn fifo_within_priority_and_priority_first() {
+        let q = JobQueue::new(16);
+        let a = q.submit(spec("a"), 0).unwrap();
+        let b = q.submit(spec("b"), 0).unwrap();
+        let hi = q.submit(spec("hi"), 5).unwrap();
+        let c = q.submit(spec("c"), 0).unwrap();
+        let order: Vec<JobId> = (0..4).map(|_| q.pop_blocking(0).unwrap().0).collect();
+        assert_eq!(order, vec![hi, a, b, c]);
+    }
+
+    #[test]
+    fn capacity_bounds_pending_only() {
+        let q = JobQueue::new(2);
+        q.submit(spec("a"), 0).unwrap();
+        q.submit(spec("b"), 0).unwrap();
+        assert!(q.submit(spec("c"), 0).is_err(), "queue must be full");
+        // popping one frees a slot (running jobs don't count)
+        let (id, _) = q.pop_blocking(0).unwrap();
+        q.submit(spec("c"), 0).unwrap();
+        assert_eq!(q.depth(), 2);
+        assert_eq!(q.get(id).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn cancel_queued_never_runs_and_running_is_refused() {
+        let q = JobQueue::new(16);
+        let a = q.submit(spec("a"), 0).unwrap();
+        let b = q.submit(spec("b"), 0).unwrap();
+        q.cancel(b).unwrap();
+        assert_eq!(q.get(b).unwrap().state, JobState::Cancelled);
+        let (popped, _) = q.pop_blocking(0).unwrap();
+        assert_eq!(popped, a);
+        assert_eq!(
+            q.cancel(a).unwrap_err(),
+            CancelError::NotCancellable(JobState::Running)
+        );
+        assert_eq!(q.cancel(999).unwrap_err(), CancelError::Unknown);
+        // b was removed from pending: queue is now empty
+        q.shutdown(true);
+        assert!(q.pop_blocking(0).is_none());
+    }
+
+    #[test]
+    fn finish_and_fail_are_recorded() {
+        let q = JobQueue::new(4);
+        let a = q.submit(spec("a"), 0).unwrap();
+        let b = q.submit(spec("b"), 0).unwrap();
+        q.pop_blocking(0).unwrap();
+        q.pop_blocking(1).unwrap();
+        q.finish(
+            a,
+            Ok(JobSummary {
+                layer_objs: BTreeMap::new(),
+                mean_rel_reduction: None,
+                wall_seconds: 0.5,
+                total_err: 1.0,
+                mask_layers: 8,
+                mask_nnz: 100,
+                pruned_sparsity: None,
+                ppl: None,
+            }),
+        );
+        q.finish(b, Err("boom".into()));
+        let ra = q.get(a).unwrap();
+        assert_eq!(ra.state, JobState::Done);
+        assert_eq!(ra.summary.as_ref().unwrap().mask_layers, 8);
+        assert!(ra.run_secs().unwrap() >= 0.0);
+        let rb = q.get(b).unwrap();
+        assert_eq!(rb.state, JobState::Failed);
+        assert_eq!(rb.error.as_deref(), Some("boom"));
+        assert_eq!(q.state_counts(), (0, 0, 1, 1, 0));
+    }
+
+    #[test]
+    fn shutdown_without_drain_cancels_pending() {
+        let q = JobQueue::new(16);
+        let a = q.submit(spec("a"), 0).unwrap();
+        let b = q.submit(spec("b"), 0).unwrap();
+        let (running, _) = q.pop_blocking(0).unwrap();
+        assert_eq!(running, a);
+        q.shutdown(false);
+        assert!(q.submit(spec("late"), 0).is_err());
+        assert_eq!(q.get(b).unwrap().state, JobState::Cancelled);
+        assert!(q.pop_blocking(1).is_none());
+        // the in-flight job still finishes normally
+        q.finish(a, Err("whatever".into()));
+        assert_eq!(q.get(a).unwrap().state, JobState::Failed);
+    }
+
+    #[test]
+    fn shutdown_with_drain_hands_out_backlog() {
+        let q = JobQueue::new(16);
+        q.submit(spec("a"), 0).unwrap();
+        q.submit(spec("b"), 0).unwrap();
+        q.shutdown(true);
+        assert!(q.pop_blocking(0).is_some());
+        assert!(q.pop_blocking(0).is_some());
+        assert!(q.pop_blocking(0).is_none());
+    }
+
+    #[test]
+    fn history_cap_evicts_oldest_terminal_records() {
+        let q = JobQueue::new(16).with_history_cap(2);
+        let ids: Vec<JobId> = (0..5).map(|_| q.submit(spec("m"), 0).unwrap()).collect();
+        for &id in &ids[..4] {
+            q.pop_blocking(0).unwrap();
+            q.finish(id, Err("x".into()));
+        }
+        // 4 terminal records, cap 2: the two oldest are gone
+        assert!(q.get(ids[0]).is_none());
+        assert!(q.get(ids[1]).is_none());
+        assert_eq!(q.get(ids[2]).unwrap().state, JobState::Failed);
+        assert_eq!(q.get(ids[3]).unwrap().state, JobState::Failed);
+        // the still-queued job is never evicted
+        assert_eq!(q.get(ids[4]).unwrap().state, JobState::Queued);
+    }
+
+    #[test]
+    fn pop_blocks_until_submit() {
+        let q = Arc::new(JobQueue::new(4));
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.pop_blocking(0).map(|(id, _)| id));
+        std::thread::sleep(Duration::from_millis(30));
+        let id = q.submit(spec("a"), 0).unwrap();
+        assert_eq!(t.join().unwrap(), Some(id));
+    }
+
+    #[test]
+    fn wait_update_sees_events_and_terminal_state() {
+        let q = Arc::new(JobQueue::new(4));
+        let id = q.submit(spec("a"), 0).unwrap();
+        q.pop_blocking(0).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push_event(
+                id,
+                LayerEvent { layer: "l".into(), index: 0, total: 1, obj: 0.0 },
+            );
+            std::thread::sleep(Duration::from_millis(20));
+            q2.finish(id, Err("x".into()));
+        });
+        let rec = q.wait_update(id, 0, Duration::from_secs(5)).unwrap();
+        assert_eq!(rec.events.len(), 1);
+        let rec = q.wait_update(id, 1, Duration::from_secs(5)).unwrap();
+        assert!(rec.state.is_terminal());
+        t.join().unwrap();
+        assert!(q.wait_update(999, 0, Duration::from_millis(1)).is_none());
+        // timeout path returns a snapshot too
+        let id2 = q.submit(spec("b"), 0).unwrap();
+        let rec = q.wait_update(id2, 0, Duration::from_millis(10)).unwrap();
+        assert_eq!(rec.state, JobState::Queued);
+    }
+}

@@ -1,12 +1,18 @@
-//! Scoped data-parallel helpers.
+//! Scoped data-parallel helpers and a persistent task pool.
 //!
 //! The offline registry has no `rayon`/`tokio`, so the coordinator's
 //! parallelism substrate is built on `std::thread::scope`: an atomic
 //! work-stealing counter over an index range.  Spawn cost (~tens of µs)
 //! is negligible against the matmul-dominated work items scheduled here.
+//!
+//! [`TaskPool`] is the long-lived counterpart for the server: a fixed
+//! set of worker threads draining a shared closure queue (connection
+//! handling must not spawn a thread per accept).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 /// Number of worker threads to use for `n` items.
 pub fn default_workers(n: usize) -> usize {
@@ -70,6 +76,56 @@ where
         .collect()
 }
 
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size persistent thread pool: submitted closures run on the
+/// first free worker, in submission order.  Dropping the pool finishes
+/// queued tasks and joins the workers.
+pub struct TaskPool {
+    tx: Option<Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl TaskPool {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx: Arc<Mutex<Receiver<Task>>> = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || loop {
+                    // hold the receiver lock only while dequeueing
+                    let task = match rx.lock().unwrap().recv() {
+                        Ok(t) => t,
+                        Err(_) => break, // all senders dropped
+                    };
+                    task();
+                })
+            })
+            .collect();
+        Self { tx: Some(tx), workers: handles }
+    }
+
+    /// Enqueue a closure for execution on the pool.
+    pub fn execute(&self, f: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(f))
+            .expect("pool workers alive");
+    }
+}
+
+impl Drop for TaskPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel so workers exit
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Split `0..n` into `chunks` contiguous ranges of near-equal size.
 pub fn chunk_ranges(n: usize, chunks: usize) -> Vec<std::ops::Range<usize>> {
     let chunks = chunks.clamp(1, n.max(1));
@@ -123,5 +179,21 @@ mod tests {
     fn zero_items_is_noop() {
         parallel_for(0, |_| panic!("must not run"));
         assert!(parallel_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn task_pool_runs_everything_and_joins() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = TaskPool::new(4);
+            for _ in 0..100 {
+                let hits = hits.clone();
+                pool.execute(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            // drop joins the workers after the queue drains
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
     }
 }

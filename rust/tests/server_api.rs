@@ -1,0 +1,279 @@
+//! Server integration: full job lifecycles over real TCP sockets
+//! against an in-memory-workspace server (no artifacts needed).
+//!
+//! Covers the acceptance criteria for the `sparsefw serve` subsystem:
+//! submit → poll with per-layer progress → fetch result with ≥4
+//! concurrent clients; streamed progress; queued-job cancellation never
+//! running the job; and `GET /metrics` reporting calibration-cache hits
+//! when jobs share `(model, samples, seed)`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession};
+use sparsefw::data::corpus;
+use sparsefw::data::TokenBin;
+use sparsefw::model::testutil::{random_model, tiny_cfg};
+use sparsefw::model::Gpt;
+use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::server::{Client, Server, ServerConfig, ServerHandle};
+
+fn shared_model() -> Gpt {
+    random_model(&tiny_cfg(), 1)
+}
+
+fn session_over(model: &Gpt) -> PruneSession {
+    let bin = TokenBin::from_tokens(corpus::generate(6, 8192));
+    let mut models = BTreeMap::new();
+    models.insert("test".to_string(), model.clone());
+    PruneSession::in_memory(models, bin.clone(), bin)
+}
+
+/// Ephemeral-port in-memory server with `workers` worker sessions over
+/// one shared random model.
+fn spawn_server(workers: usize) -> (ServerHandle, Client) {
+    let model = shared_model();
+    let sessions: Vec<PruneSession> = (0..workers).map(|_| session_over(&model)).collect();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        ..Default::default()
+    };
+    let handle = Server::bind(&cfg, sessions).expect("server binds an ephemeral port");
+    let client = Client::new(handle.addr().to_string());
+    (handle, client)
+}
+
+fn base_spec() -> JobSpec {
+    JobSpec {
+        model: "test".into(),
+        method: PruneMethod::Wanda,
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+        calib_samples: 6,
+        calib_seed: 2,
+        ..Default::default()
+    }
+}
+
+/// A SparseFW job slow enough (~thousands of FW iterations across 8
+/// layers) that jobs queued behind it on a 1-worker server are reliably
+/// still pending milliseconds after submission.
+fn slow_spec() -> JobSpec {
+    JobSpec {
+        method: PruneMethod::SparseFw(SparseFwConfig {
+            iters: 2500,
+            alpha: 0.5,
+            warmstart: Warmstart::Wanda,
+            ..Default::default()
+        }),
+        ..base_spec()
+    }
+}
+
+const WAIT: Duration = Duration::from_secs(120);
+
+#[test]
+fn full_lifecycle_with_four_concurrent_clients() {
+    let (handle, _client) = spawn_server(2);
+
+    // distinct specs: two methods × two sparsities (+ one FW config)
+    let specs: Vec<JobSpec> = vec![
+        JobSpec { method: PruneMethod::Wanda, ..base_spec() },
+        JobSpec {
+            method: PruneMethod::Magnitude,
+            allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
+            ..base_spec()
+        },
+        JobSpec {
+            method: PruneMethod::Ria,
+            allocation: Allocation::Uniform(SparsityPattern::NM { keep: 2, block: 4 }),
+            ..base_spec()
+        },
+        JobSpec {
+            method: PruneMethod::SparseFw(SparseFwConfig {
+                iters: 60,
+                alpha: 0.5,
+                warmstart: Warmstart::Ria,
+                ..Default::default()
+            }),
+            ..base_spec()
+        },
+    ];
+
+    // ≥4 concurrent clients, each submitting + polling its own job
+    let addr = handle.addr().to_string();
+    let results: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|spec| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let client = Client::new(addr);
+                    let id = client.submit(spec, 0).expect("submit");
+                    let fin = client.wait(id, WAIT).expect("job finishes");
+                    (id, fin)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // every job done, with per-layer progress and a result summary
+    // matching a direct single-threaded PruneSession::execute
+    let model = shared_model();
+    for ((id, fin), spec) in results.iter().zip(&specs) {
+        assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "job {id}: {fin:?}");
+        assert_eq!(fin.at(&["progress", "completed"]).as_usize(), Some(8));
+        assert_eq!(fin.at(&["progress", "total"]).as_usize(), Some(8));
+        let events = fin.at(&["events"]).as_arr().unwrap();
+        assert_eq!(events.len(), 8, "one event per layer");
+
+        let direct = session_over(&model).execute(spec).unwrap();
+        let got = fin.at(&["result", "layer_objs"]).as_obj().unwrap();
+        assert_eq!(got.len(), direct.prune.layer_objs.len());
+        for (layer, &want) in &direct.prune.layer_objs {
+            let have = got[layer].as_f64().unwrap();
+            assert!(
+                (have - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                "job {id} layer {layer}: {have} != {want}"
+            );
+        }
+        let nnz = fin.at(&["result", "mask_nnz"]).as_usize().unwrap();
+        let want_nnz: usize = direct.masks().values().map(|m| m.count_nonzero()).sum();
+        assert_eq!(nnz, want_nnz, "job {id}: masks must be non-empty and match");
+        assert!(nnz > 0);
+    }
+
+    handle.shutdown();
+}
+
+#[test]
+fn streamed_progress_covers_every_layer() {
+    let (handle, client) = spawn_server(1);
+    let id = client.submit(&base_spec(), 0).unwrap();
+    let mut events = Vec::new();
+    let fin = client
+        .stream(id, |e| {
+            events.push((
+                e.at(&["layer"]).as_str().unwrap().to_string(),
+                e.at(&["index"]).as_usize().unwrap(),
+                e.at(&["total"]).as_usize().unwrap(),
+            ));
+        })
+        .unwrap();
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "{fin:?}");
+    assert!(fin.at(&["result", "mask_layers"]).as_usize().unwrap() == 8);
+    assert_eq!(events.len(), 8);
+    assert!(events.iter().all(|(_, _, total)| *total == 8));
+    let mut indices: Vec<usize> = events.iter().map(|(_, i, _)| *i).collect();
+    indices.sort_unstable();
+    assert_eq!(indices, (0..8).collect::<Vec<_>>());
+    handle.shutdown();
+}
+
+#[test]
+fn cancelled_queued_job_never_runs() {
+    let (handle, client) = spawn_server(1);
+    // occupy the single worker, then queue a fast job behind it
+    let slow = client.submit(&slow_spec(), 0).unwrap();
+    let queued = client.submit(&base_spec(), 0).unwrap();
+    let v = client.cancel(queued).unwrap();
+    assert_eq!(v.at(&["state"]).as_str(), Some("cancelled"));
+
+    // the slow job completes; the cancelled one must never have run
+    let fin = client.wait(slow, WAIT).unwrap();
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "{fin:?}");
+    let rec = client.job(queued).unwrap();
+    assert_eq!(rec.at(&["state"]).as_str(), Some("cancelled"));
+    assert_eq!(rec.at(&["progress", "completed"]).as_usize(), Some(0));
+    assert!(rec.get("result").is_none(), "cancelled job must have no result");
+
+    // cancelling again (terminal) is a 409-class error, unknown id a 404
+    assert!(client.cancel(queued).is_err());
+    assert!(client.cancel(9999).is_err());
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at(&["jobs", "cancelled"]).as_usize(), Some(1));
+    assert_eq!(m.at(&["jobs_served"]).as_usize(), Some(1));
+    handle.shutdown();
+}
+
+#[test]
+fn metrics_report_calib_cache_hits_for_shared_calibration() {
+    let (handle, client) = spawn_server(1);
+
+    // same (model, samples, seed) twice → second job hits the memo
+    let a = client.submit(&base_spec(), 0).unwrap();
+    let b = client
+        .submit(
+            &JobSpec { method: PruneMethod::Magnitude, ..base_spec() },
+            0,
+        )
+        .unwrap();
+    client.wait(a, WAIT).unwrap();
+    client.wait(b, WAIT).unwrap();
+
+    let m = client.metrics().unwrap();
+    assert!(
+        m.at(&["calib_cache", "hits"]).as_usize().unwrap() > 0,
+        "second job must hit the calibration cache: {m:?}"
+    );
+    assert_eq!(m.at(&["calib_cache", "misses"]).as_usize(), Some(1));
+    assert_eq!(m.at(&["jobs_served"]).as_usize(), Some(2));
+    assert_eq!(m.at(&["jobs", "done"]).as_usize(), Some(2));
+    assert_eq!(m.at(&["workers", "total"]).as_usize(), Some(1));
+
+    let h = client.healthz().unwrap();
+    assert_eq!(h.at(&["ok"]).as_bool(), Some(true));
+    handle.shutdown();
+}
+
+#[test]
+fn priority_jumps_the_queue() {
+    let (handle, client) = spawn_server(1);
+    // worker busy on the slow job; then two queued jobs with different
+    // priorities — the high-priority one must start (and finish) first
+    let slow = client.submit(&slow_spec(), 0).unwrap();
+    let low = client.submit(&base_spec(), 0).unwrap();
+    let high = client
+        .submit(
+            &JobSpec { method: PruneMethod::Magnitude, ..base_spec() },
+            10,
+        )
+        .unwrap();
+    for id in [slow, high, low] {
+        client.wait(id, WAIT).unwrap();
+    }
+    let lo = client.job(low).unwrap();
+    let hi = client.job(high).unwrap();
+    // queued_secs measures submit→start: the later-submitted high-
+    // priority job must have started before the low-priority one ended
+    // its wait, i.e. waited less than the job submitted before it
+    let lo_wait = lo.at(&["queued_secs"]).as_f64().unwrap();
+    let hi_wait = hi.at(&["queued_secs"]).as_f64().unwrap();
+    assert!(
+        hi_wait < lo_wait,
+        "high-priority job waited {hi_wait}s, low waited {lo_wait}s"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn rejects_bad_submissions_cleanly() {
+    let (handle, client) = spawn_server(1);
+    // unknown model: accepted, then fails at execute time with a clean error
+    let id = client
+        .submit(&JobSpec { model: "no-such-model".into(), ..base_spec() }, 0)
+        .unwrap();
+    let fin = client.wait(id, WAIT).unwrap();
+    assert_eq!(fin.at(&["state"]).as_str(), Some("failed"));
+    assert!(
+        fin.at(&["error"]).as_str().unwrap().contains("no-such-model"),
+        "{fin:?}"
+    );
+    // zero calib samples: rejected at submit time
+    assert!(client
+        .submit(&JobSpec { calib_samples: 0, ..base_spec() }, 0)
+        .is_err());
+    handle.shutdown();
+}

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build + tests, plus a quickstart smoke run when
-# an artifacts workspace exists (skipped gracefully otherwise).
+# Tier-1 verification: build + tests + a server smoke test over the
+# --demo in-memory model, plus a quickstart smoke run when an artifacts
+# workspace exists (skipped gracefully otherwise).
 #
 #   scripts/ci.sh            # from the repo root (or anywhere)
 #
@@ -15,6 +16,45 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+BIN="$REPO/rust/target/release/sparsefw"
+
+echo "== server smoke test (serve --demo on an ephemeral port) =="
+SERVE_LOG="$(mktemp)"
+"$BIN" serve --demo --addr 127.0.0.1:0 --workers 2 >"$SERVE_LOG" 2>&1 &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR="$(sed -n 's/^listening on //p' "$SERVE_LOG" | head -n1)"
+    [ -n "$ADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "server did not come up:"; cat "$SERVE_LOG"; exit 1
+fi
+echo "   server at $ADDR"
+
+# submit a tiny Wanda job, poll it to Done, and assert non-empty masks
+SUBMIT_OUT="$("$BIN" submit --addr "$ADDR" --model demo --method wanda \
+    --pattern per-row:0.5 --samples 8 --wait 2>&1)"
+echo "$SUBMIT_OUT" | grep -q "state=done" \
+    || { echo "job did not finish: $SUBMIT_OUT"; cat "$SERVE_LOG"; exit 1; }
+echo "$SUBMIT_OUT" | grep -q "mask_layers=8" \
+    || { echo "expected 8 mask layers: $SUBMIT_OUT"; exit 1; }
+echo "$SUBMIT_OUT" | grep -Eq "mask_nnz=[1-9]" \
+    || { echo "masks are empty: $SUBMIT_OUT"; exit 1; }
+
+"$BIN" status --addr "$ADDR"
+"$BIN" shutdown --addr "$ADDR"
+wait "$SERVE_PID"
+trap - EXIT
+echo "   server smoke test OK"
+
+echo "== server queue micro-bench (BENCH_server.json) =="
+SPARSEFW_BENCH_JSON="$REPO/BENCH_server.json" cargo bench --bench server_queue
+echo "   wrote $REPO/BENCH_server.json"
 
 # `make artifacts` (python/compile/aot.py) writes to <repo>/artifacts;
 # resolve it absolutely so the cwd (rust/) doesn't matter.
