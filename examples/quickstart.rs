@@ -5,12 +5,18 @@
 //!
 //!   make artifacts && cargo run --release --example quickstart
 //!
-//! Flags via env: SPARSEFW_ARTIFACTS (workspace dir).
+//! Flags via env: SPARSEFW_ARTIFACTS (workspace dir),
+//! SPARSEFW_FW_ENGINE (`incremental` | `dense` — the native SparseFW
+//! hot loop; `scripts/ci.sh` runs both as smoke paths).
 
 use anyhow::Result;
 use sparsefw::prelude::*;
 
 fn main() -> Result<()> {
+    let engine = match std::env::var("SPARSEFW_FW_ENGINE") {
+        Ok(s) => FwEngine::parse(&s)?,
+        Err(_) => FwEngine::Incremental,
+    };
     let mut session = PruneSession::open_default()?;
     let model_name = session.model_names()[0].clone();
     println!(
@@ -37,7 +43,11 @@ fn main() -> Result<()> {
 
     let wanda = session.execute(&JobSpec { method: PruneMethod::Wanda, ..base.clone() })?;
     let fw = session.execute(&JobSpec {
-        method: PruneMethod::SparseFw(SparseFwConfig { iters: 300, ..Default::default() }),
+        method: PruneMethod::SparseFw(SparseFwConfig {
+            iters: 300,
+            engine,
+            ..Default::default()
+        }),
         ..base
     })?;
     let (hits, misses) = session.calib_stats();

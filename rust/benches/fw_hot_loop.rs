@@ -1,26 +1,47 @@
-//! Hot-path benchmark: one FW iteration (gradient + LMO + update) per
-//! layer shape, across the three kernel backends.  This is the §Perf
-//! primary metric — the per-iteration cost the paper's "cost of a single
-//! FW iteration is independent of the sample count" claim refers to.
+//! Hot-path benchmark: the cost of one FW iteration across engines and
+//! kernel backends.  This is the §Perf primary metric — the
+//! per-iteration cost the paper's "cost of a single FW iteration is
+//! independent of the sample count" claim refers to.
 //!
-//!   cargo bench --bench fw_hot_loop            (needs artifacts/)
+//! The headline comparison is `dense` vs `incremental`
+//! (`--fw-engine`) at the paper's operating point — 50% unstructured
+//! sparsity, α = 0.9 — on the bench's default layer shape: per-FW-
+//! iteration time (`*/iter/*` samples, derived from a K-iteration run)
+//! and end-to-end layer time (`*/layer*/*`).  `scripts/ci.sh` writes
+//! the report to `BENCH_fw.json` (via `SPARSEFW_BENCH_JSON`) next to
+//! `BENCH_server.json`, so the perf trajectory is tracked per commit.
+//!
+//!   cargo bench --bench fw_hot_loop      (PJRT section needs artifacts/)
 
 use sparsefw::bench::{gflops, Bencher};
 use sparsefw::config::Workspace;
+use sparsefw::pruner::fw_engine::{self, FwEngine};
 use sparsefw::pruner::fw_math;
 use sparsefw::pruner::lmo::lmo;
-use sparsefw::pruner::mask::BudgetSpec;
-use sparsefw::pruner::sparsefw::{FwKernels, NativeKernels};
+use sparsefw::pruner::mask::{BudgetSpec, SparsityPattern};
+use sparsefw::pruner::saliency::{saliency_mask, wanda_scores};
+use sparsefw::pruner::sparsefw::{
+    alpha_fixed_mask, run_layer, FwKernels, NativeKernels, SparseFwConfig,
+};
 use sparsefw::runtime::PjrtKernels;
 use sparsefw::tensor::{matmul_a_bt, Mat};
 use sparsefw::util::prng::Xoshiro256;
+
+/// Default layer shape for the engine A/B (the acceptance metric):
+/// tall-input like an `mlp_down`, where the dense per-iteration matmul
+/// hurts most.
+const AB_SHAPE: (usize, usize) = (128, 1024);
+/// FW iterations per timed run in the A/B section (per-iteration cost
+/// is the run mean divided by this).
+const AB_ITERS: usize = 60;
 
 fn main() {
     let shapes = [(192usize, 64usize), (256, 64), (384, 128), (512, 128), (128, 512)];
     let mut rng = Xoshiro256::new(1);
     let mut b = Bencher::new("fw_hot_loop");
 
-    // native per-iteration cost per shape
+    // native per-iteration cost per shape (historical series: random
+    // fractional mask, no α-fixing)
     for &(dout, din) in &shapes {
         let w = Mat::gaussian(dout, din, 1.0, &mut rng);
         let x = Mat::gaussian(din, 2048, 1.0, &mut rng);
@@ -42,6 +63,98 @@ fn main() {
             "  -> {dout}x{din}: {:.2} GF/s (gradient matmul share)",
             gflops(flops, s.mean)
         );
+    }
+
+    // ---------------------------------------------------------------
+    // Engine A/B: dense vs incremental at the paper's operating point
+    // (50% unstructured sparsity, α = 0.9), default shape AB_SHAPE.
+    // ---------------------------------------------------------------
+    {
+        let (dout, din) = AB_SHAPE;
+        let pattern = SparsityPattern::Unstructured { sparsity: 0.5 };
+        let alpha = 0.9;
+        let tag = format!("{dout}x{din}@u50-a0.9");
+
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let x = Mat::gaussian(din, 512, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x);
+        let h = fw_math::precompute_h(&w, &g);
+        let scores = wanda_scores(&w, &g);
+        let warm = saliency_mask(&scores, &pattern);
+        let fixed = alpha_fixed_mask(&scores, &pattern, alpha);
+        let free_budget = BudgetSpec::free_budgets(&pattern, dout, din, &fixed);
+        // warmstart iterate over the free coordinates (run_layer's M_0)
+        let m0 = Mat::from_vec(
+            dout,
+            din,
+            warm.data
+                .iter()
+                .zip(&fixed.data)
+                .map(|(&wm, &fx)| if fx != 0.0 { 0.0 } else { wm })
+                .collect(),
+        );
+
+        // dense hot loop (exactly the dense engine's per-iteration work)
+        let dense = b
+            .bench(&format!("dense/run{AB_ITERS}/{tag}"), || {
+                let mut m = m0.clone();
+                let mut mask_buf = Mat::zeros(dout, din);
+                for t in 0..AB_ITERS {
+                    for ((bv, &mv), &fv) in
+                        mask_buf.data.iter_mut().zip(&m.data).zip(&fixed.data)
+                    {
+                        *bv = mv + fv;
+                    }
+                    let mut grad = NativeKernels.fw_grad(&w, &mask_buf, &g, &h).unwrap();
+                    for (gv, fx) in grad.data.iter_mut().zip(&fixed.data) {
+                        if *fx != 0.0 {
+                            *gv = 0.0;
+                        }
+                    }
+                    let v = lmo(&grad, &free_budget);
+                    let eta = 2.0 / (t as f32 + 2.0);
+                    m.axby(1.0 - eta, eta, &v);
+                }
+                std::hint::black_box(m.data[0]);
+            })
+            .mean;
+
+        // incremental engine (maintained state, sparse vertex gather)
+        let inc = b
+            .bench(&format!("incremental/run{AB_ITERS}/{tag}"), || {
+                let mut m = m0.clone();
+                fw_engine::run_incremental(
+                    &w, &g, &h, &fixed, &free_budget, &mut m, AB_ITERS, false, 64,
+                );
+                std::hint::black_box(m.data[0]);
+            })
+            .mean;
+
+        b.record(&format!("dense/iter/{tag}"), dense / AB_ITERS as u32, AB_ITERS);
+        b.record(&format!("incremental/iter/{tag}"), inc / AB_ITERS as u32, AB_ITERS);
+        println!(
+            "  -> {tag}: dense {:.3}ms/iter, incremental {:.3}ms/iter — {:.1}x per-iteration speedup",
+            dense.as_secs_f64() * 1e3 / AB_ITERS as f64,
+            inc.as_secs_f64() * 1e3 / AB_ITERS as f64,
+            dense.as_secs_f64() / inc.as_secs_f64()
+        );
+
+        // end-to-end layer time through run_layer (warmstart, rounding
+        // and objectives included)
+        for engine in [FwEngine::Dense, FwEngine::Incremental] {
+            let cfg = SparseFwConfig {
+                iters: AB_ITERS,
+                alpha,
+                use_chunk: false,
+                keep_best: false,
+                engine,
+                ..Default::default()
+            };
+            b.bench(&format!("{}/layer{AB_ITERS}/{tag}", engine.label()), || {
+                let r = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+                std::hint::black_box(r.final_obj);
+            });
+        }
     }
 
     // PJRT (AOT Pallas) per-iteration cost, when artifacts exist
@@ -77,4 +190,8 @@ fn main() {
     }
 
     b.report();
+    let path = std::env::var("SPARSEFW_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_fw.json".to_string());
+    b.report_json(&path).expect("writing bench json");
+    println!("\nbench json written to {path}");
 }

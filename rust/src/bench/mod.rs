@@ -25,6 +25,10 @@ pub struct Sample {
     pub p50: Duration,
     pub p95: Duration,
     pub min: Duration,
+    /// True for [`Bencher::record`]ed samples: `mean` is a derived
+    /// quantity (e.g. run time ÷ iterations) and the percentile fields
+    /// are just copies of it, not measurements.
+    pub derived: bool,
 }
 
 pub struct Bencher {
@@ -75,8 +79,27 @@ impl Bencher {
             p50: times[n / 2],
             p95: times[(n * 95 / 100).min(n - 1)],
             min: times[0],
+            derived: false,
         };
         self.samples.push(sample);
+        self.samples.last().unwrap()
+    }
+
+    /// Record an externally-derived sample — e.g. a per-iteration cost
+    /// computed as `run_mean / iters_per_run` — so derived metrics land
+    /// in the same report/JSON stream as measured ones.  Marked
+    /// `derived` in the table (`*`) and JSON (`"derived": true`): the
+    /// percentile fields are copies of the mean, not measurements.
+    pub fn record(&mut self, name: &str, mean: Duration, iters: usize) -> &Sample {
+        self.samples.push(Sample {
+            name: name.to_string(),
+            iters,
+            mean,
+            p50: mean,
+            p95: mean,
+            min: mean,
+            derived: true,
+        });
         self.samples.last().unwrap()
     }
 
@@ -87,16 +110,21 @@ impl Bencher {
             "{:<42} {:>8} {:>12} {:>12} {:>12} {:>12}",
             "name", "iters", "mean", "p50", "p95", "min"
         );
+        let mut any_derived = false;
         for s in &self.samples {
+            any_derived |= s.derived;
             println!(
                 "{:<42} {:>8} {:>12} {:>12} {:>12} {:>12}",
-                s.name,
+                format!("{}{}", s.name, if s.derived { "*" } else { "" }),
                 s.iters,
                 fmt_dur(s.mean),
                 fmt_dur(s.p50),
                 fmt_dur(s.p95),
                 fmt_dur(s.min)
             );
+        }
+        if any_derived {
+            println!("(* derived sample: percentiles are copies of the mean)");
         }
     }
 
@@ -111,14 +139,18 @@ impl Bencher {
             .samples
             .iter()
             .map(|s| {
-                Json::obj(vec![
-                    ("name", s.name.as_str().into()),
+                let mut fields = vec![
+                    ("name", Json::from(s.name.as_str())),
                     ("iters", s.iters.into()),
                     ("mean_s", s.mean.as_secs_f64().into()),
                     ("p50_s", s.p50.as_secs_f64().into()),
                     ("p95_s", s.p95.as_secs_f64().into()),
                     ("min_s", s.min.as_secs_f64().into()),
-                ])
+                ];
+                if s.derived {
+                    fields.push(("derived", true.into()));
+                }
+                Json::obj(fields)
             })
             .collect();
         Json::obj(vec![
@@ -188,6 +220,26 @@ mod tests {
         let back = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(back.at(&["group"]).as_str(), Some("grp"));
+    }
+
+    #[test]
+    fn derived_samples_are_marked() {
+        let mut b = Bencher::new("grp");
+        let s = b.record("per-iter", Duration::from_micros(250), 40);
+        assert!(s.derived);
+        assert_eq!(s.mean, s.p95);
+        let v = b.to_json();
+        let samples = v.at(&["samples"]).as_arr().unwrap();
+        assert_eq!(samples[0].at(&["derived"]).as_bool(), Some(true));
+        // measured samples carry no derived flag
+        b.budget = Duration::from_millis(10);
+        b.max_iters = 3;
+        b.bench("real", || {
+            std::hint::black_box(1 + 1);
+        });
+        let v = b.to_json();
+        let samples = v.at(&["samples"]).as_arr().unwrap();
+        assert!(samples[1].at(&["derived"]).as_bool().is_none());
     }
 
     #[test]

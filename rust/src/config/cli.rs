@@ -11,7 +11,8 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
-use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::pruner::fw_engine::DEFAULT_REFRESH_EVERY;
+use crate::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -126,6 +127,8 @@ pub fn parse_method(args: &Args) -> Result<PruneMethod> {
             use_chunk: !args.has("no-chunk"),
             keep_best: !args.has("no-keep-best"),
             line_search: args.has("line-search"),
+            engine: FwEngine::parse(args.get("fw-engine").unwrap_or("incremental"))?,
+            refresh_every: args.get_usize("fw-refresh", DEFAULT_REFRESH_EVERY)?,
         })),
         other => bail!("unknown method {other:?}"),
     }
@@ -195,10 +198,27 @@ mod tests {
                 assert_eq!(c.iters, 100);
                 assert_eq!(c.alpha, 0.25);
                 assert_eq!(c.warmstart, Warmstart::Ria);
+                assert_eq!(c.engine, FwEngine::Incremental, "incremental is the default");
+                assert_eq!(c.refresh_every, DEFAULT_REFRESH_EVERY);
             }
             _ => panic!(),
         }
         let a = Args::parse(argv("p --method wanda")).unwrap();
         assert!(matches!(parse_method(&a).unwrap(), PruneMethod::Wanda));
+    }
+
+    #[test]
+    fn fw_engine_flags() {
+        let a = Args::parse(argv("p --method sparsefw --fw-engine dense --fw-refresh 16"))
+            .unwrap();
+        match parse_method(&a).unwrap() {
+            PruneMethod::SparseFw(c) => {
+                assert_eq!(c.engine, FwEngine::Dense);
+                assert_eq!(c.refresh_every, 16);
+            }
+            _ => panic!(),
+        }
+        let a = Args::parse(argv("p --method sparsefw --fw-engine warp")).unwrap();
+        assert!(parse_method(&a).is_err());
     }
 }

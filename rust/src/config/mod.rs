@@ -14,7 +14,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::TokenBin;
 use crate::model::Gpt;
-use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::pruner::fw_engine::DEFAULT_REFRESH_EVERY;
+use crate::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
 use crate::runtime::{Manifest, PjrtRuntime};
 use crate::util::json::Json;
 
@@ -111,6 +112,8 @@ pub fn method_to_json(method: &PruneMethod) -> Json {
             ("use_chunk", c.use_chunk.into()),
             ("keep_best", c.keep_best.into()),
             ("line_search", c.line_search.into()),
+            ("engine", c.engine.label().into()),
+            ("refresh_every", c.refresh_every.into()),
         ]),
         PruneMethod::SparseGpt { percdamp, blocksize } => Json::obj(vec![
             ("kind", "sparsegpt".into()),
@@ -147,6 +150,11 @@ pub fn method_from_json(mj: &Json) -> Result<PruneMethod> {
             use_chunk: mj.at(&["use_chunk"]).as_bool().unwrap_or(true),
             keep_best: mj.at(&["keep_best"]).as_bool().unwrap_or(true),
             line_search: mj.at(&["line_search"]).as_bool().unwrap_or(false),
+            engine: FwEngine::parse(mj.at(&["engine"]).as_str().unwrap_or("incremental"))?,
+            refresh_every: mj
+                .at(&["refresh_every"])
+                .as_usize()
+                .unwrap_or(DEFAULT_REFRESH_EVERY),
         }),
         other => bail!("unknown method {other:?}"),
     })
@@ -257,6 +265,8 @@ mod tests {
                 use_chunk: false,
                 keep_best: true,
                 line_search: false,
+                engine: FwEngine::Dense,
+                refresh_every: 32,
             }),
             pattern: SparsityPattern::NM { keep: 2, block: 4 },
             calib_samples: 64,
@@ -275,6 +285,8 @@ mod tests {
                 assert_eq!(c.alpha, 0.25);
                 assert_eq!(c.warmstart, Warmstart::Ria);
                 assert!(!c.use_chunk);
+                assert_eq!(c.engine, FwEngine::Dense);
+                assert_eq!(c.refresh_every, 32);
             }
             _ => panic!("wrong method"),
         }

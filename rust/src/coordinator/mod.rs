@@ -50,6 +50,9 @@ pub struct PruneResult {
     /// Optimization traces (when tracing was enabled) — Fig 4.
     pub traces: BTreeMap<String, FwTrace>,
     pub wall_seconds: f64,
+    /// Σ FW iterations executed across layers (0 for greedy methods) —
+    /// with `wall_seconds` this gives the server's iterations/sec.
+    pub fw_iters: usize,
 }
 
 impl PruneResult {
@@ -183,9 +186,11 @@ fn collect_outputs(
         warm_objs: BTreeMap::new(),
         traces: BTreeMap::new(),
         wall_seconds: 0.0,
+        fw_iters: 0,
     };
     for out in outputs {
         let (l, o) = out?;
+        result.fw_iters += o.fw_iters;
         result.layer_objs.insert(l.name.clone(), o.obj);
         if let Some(w) = o.warm_obj {
             result.warm_objs.insert(l.name.clone(), w);

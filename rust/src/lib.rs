@@ -33,6 +33,16 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! The native SparseFW hot loop has two interchangeable engines
+//! ([`pruner::FwEngine`], `--fw-engine`): the default **incremental**
+//! sparse-vertex engine ([`pruner::fw_engine`]) maintains
+//! `P_t = (W⊙M_t)·G` across FW iterations — each step mixes in a
+//! k-sparse binary vertex V, so `P_{t+1} = (1−η)P_t + η(W⊙V)G` costs an
+//! O(nnz(V)·d_in) sparse row-gather instead of the dense
+//! O(d_out·d_in²) matmul — with row-block intra-layer parallelism and a
+//! periodic exact refresh bounding f32 drift; the **dense** reference
+//! engine stays one flag away for A/B comparison (`BENCH_fw.json`).
+//!
 //! For multi-client use the [`server`] subsystem turns that substrate
 //! into a long-running daemon (`sparsefw serve`): an HTTP/1.1 JSON API
 //! with a bounded priority job queue, worker threads that each own a
@@ -75,7 +85,7 @@ pub mod prelude {
         Allocation, EvalSpec, JobResult, JobSpec, PrunePipeline, PruneSession,
     };
     pub use crate::model::{Gpt, GptConfig};
-    pub use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+    pub use crate::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
     pub use crate::server::{Client, JobState, Server, ServerConfig};
     pub use crate::tensor::Mat;
 }

@@ -43,6 +43,7 @@ USAGE: sparsefw <subcommand> [flags]
   prune      --model M --method {sparsefw|wanda|ria|magnitude|sparsegpt}
              --pattern {unstructured:S|per-row:S|K:B} | --owl TARGET
              [--iters N --alpha A --warmstart wanda|ria|magnitude]
+             [--fw-engine incremental|dense] [--fw-refresh N]
              [--samples N --seed S --backend native|pjrt|pjrt-chunk]
              [--spec job.json] [--save-spec job.json]
              [--out masks.safetensors] [--eval]
@@ -64,6 +65,15 @@ explicitly-passed flags overriding the file), executed by a
 PruneSession that caches models and calibration grams across jobs.
 --owl switches from a uniform pattern to OWL-style non-uniform
 per-layer sparsities (works on every backend).
+
+--fw-engine picks the native SparseFW hot loop: `incremental` (the
+default) maintains P_t = (W(.)M_t)G across iterations — each FW step
+only mixes in a k-sparse vertex V, so P updates as
+(1-eta)P + eta(W(.)V)G, an O(nnz) sparse gather instead of the dense
+O(d_out*d_in^2) matmul — with row-block intra-layer parallelism and a
+periodic exact refresh every --fw-refresh iterations to bound f32
+drift.  `dense` is the reference per-iteration matmul, kept one flag
+away for A/B runs (BENCH_fw.json tracks both).
 
 `serve` runs a long-lived job server over the workspace: POST /jobs
 takes a JobSpec, workers execute jobs off a bounded priority queue
@@ -186,6 +196,14 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         }
         if args.get("method").is_some() {
             spec.method = parse_method(args)?;
+        } else if let PruneMethod::SparseFw(c) = &mut spec.method {
+            // engine flags override a loaded spec even without --method
+            if let Some(e) = args.get("fw-engine") {
+                c.engine = sparsefw::pruner::FwEngine::parse(e)?;
+            }
+            if args.get("fw-refresh").is_some() {
+                c.refresh_every = args.get_usize("fw-refresh", c.refresh_every)?;
+            }
         }
         if args.get("owl").is_some() || args.get("pattern").is_some() {
             spec.allocation = parse_allocation(args)?;

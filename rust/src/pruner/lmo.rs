@@ -12,7 +12,7 @@
 //! Appendix D).
 
 use crate::pruner::mask::BudgetSpec;
-use crate::tensor::topk::bottom_k_indices;
+use crate::tensor::topk::{bottom_k_indices, bottom_k_into};
 use crate::tensor::Mat;
 use crate::util::pool::parallel_for;
 use std::sync::Mutex;
@@ -71,6 +71,63 @@ fn lmo_nm(grad: &Mat, keep: &[usize], block: usize) -> Mat {
     v
 }
 
+/// Sparse-vertex LMO: same selection as [`lmo`] but emitting the
+/// vertex's support as sorted flat indices (`i·cols + j`) instead of a
+/// dense matrix.  `idx_buf` is select scratch reused across calls, so
+/// the incremental FW hot loop (`pruner::fw_engine`) allocates nothing
+/// after warmup.  `grad` is a `rows×cols` block (possibly a row slice
+/// of a larger layer, with `budget` sliced to match).
+pub fn lmo_into(
+    grad: &[f32],
+    rows: usize,
+    cols: usize,
+    budget: &BudgetSpec,
+    idx_buf: &mut Vec<u32>,
+    out: &mut Vec<u32>,
+) {
+    debug_assert_eq!(grad.len(), rows * cols);
+    out.clear();
+    match budget {
+        BudgetSpec::Global { keep } => {
+            let k = bottom_k_into(grad, *keep, idx_buf);
+            for &ix in &idx_buf[..k] {
+                if grad[ix as usize] < 0.0 {
+                    out.push(ix);
+                }
+            }
+        }
+        BudgetSpec::PerRow { keep } => {
+            debug_assert_eq!(keep.len(), rows);
+            for i in 0..rows {
+                let row = &grad[i * cols..(i + 1) * cols];
+                let k = bottom_k_into(row, keep[i], idx_buf);
+                for &j in &idx_buf[..k] {
+                    if row[j as usize] < 0.0 {
+                        out.push((i * cols) as u32 + j);
+                    }
+                }
+            }
+        }
+        BudgetSpec::NM { keep, block } => {
+            let nb = cols / block;
+            debug_assert_eq!(keep.len(), rows * nb);
+            for i in 0..rows {
+                for b in 0..nb {
+                    let off = i * cols + b * block;
+                    let seg = &grad[off..off + block];
+                    let k = bottom_k_into(seg, keep[i * nb + b], idx_buf);
+                    for &j in &idx_buf[..k] {
+                        if seg[j as usize] < 0.0 {
+                            out.push(off as u32 + j);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+}
+
 /// Brute-force LMO value check helper: ⟨V, grad⟩.
 pub fn lmo_value(v: &Mat, grad: &Mat) -> f64 {
     v.data
@@ -115,6 +172,41 @@ mod tests {
             &BudgetSpec::NM { keep: vec![2, 2], block: 4 },
         );
         assert_eq!(v.data, vec![0.0, 1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    /// The sparse-index LMO must make the exact same selection as the
+    /// dense one on every constraint geometry.
+    #[test]
+    fn lmo_into_matches_dense_lmo() {
+        let mut rng = Xoshiro256::new(23);
+        let (rows, cols) = (6, 8);
+        let mut idx_buf = Vec::new();
+        let mut out = Vec::new();
+        for trial in 0..25 {
+            let grad = Mat::gaussian(rows, cols, 1.0, &mut rng);
+            let budgets = [
+                BudgetSpec::Global { keep: 1 + rng.next_below(20) as usize },
+                BudgetSpec::PerRow {
+                    keep: (0..rows).map(|_| rng.next_below(5) as usize).collect(),
+                },
+                BudgetSpec::NM {
+                    keep: (0..rows * 2).map(|_| rng.next_below(4) as usize).collect(),
+                    block: 4,
+                },
+            ];
+            for budget in &budgets {
+                let dense = lmo(&grad, budget);
+                lmo_into(&grad.data, rows, cols, budget, &mut idx_buf, &mut out);
+                let want: Vec<u32> = dense
+                    .data
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &x)| x != 0.0)
+                    .map(|(i, _)| i as u32)
+                    .collect();
+                assert_eq!(out, want, "trial {trial} budget {budget:?}");
+            }
+        }
     }
 
     /// The LMO must be optimal: no other feasible vertex has smaller

@@ -7,8 +7,11 @@
 //! * [`sparsegpt`] — greedy-with-reconstruction baseline (context).
 //! * [`lmo`], [`rounding`], [`mask`] — the constraint-set machinery.
 //! * [`fw_math`] — native mirror of the Pallas kernels.
+//! * [`fw_engine`] — the incremental sparse-vertex hot loop (maintained
+//!   `(W⊙M)·G` state, O(nnz) iterations, row-block parallelism).
 
 pub mod allocation;
+pub mod fw_engine;
 pub mod fw_math;
 pub mod lmo;
 pub mod mask;
@@ -17,6 +20,7 @@ pub mod saliency;
 pub mod sparsefw;
 pub mod sparsegpt;
 
+pub use fw_engine::FwEngine;
 pub use mask::{BudgetSpec, SparsityPattern};
 pub use sparsefw::{FwKernels, FwTrace, LayerResult, NativeKernels, SparseFwConfig, Warmstart};
 
@@ -75,6 +79,7 @@ impl PruneMethod {
                     trace: r.trace,
                     mask: r.mask,
                     new_weights: None,
+                    fw_iters: r.fw_iters,
                 })
             }
             PruneMethod::SparseGpt { percdamp, blocksize } => {
@@ -86,6 +91,7 @@ impl PruneMethod {
                     trace: None,
                     mask: r.mask,
                     new_weights: Some(r.weights),
+                    fw_iters: 0,
                 })
             }
         }
@@ -102,11 +108,13 @@ pub struct LayerPruneOutput {
     /// Reconstructed weights (SparseGPT only).
     pub new_weights: Option<Mat>,
     pub trace: Option<FwTrace>,
+    /// FW iterations executed (0 for the greedy/one-shot methods).
+    pub fw_iters: usize,
 }
 
 impl LayerPruneOutput {
     fn from_mask<K: FwKernels + ?Sized>(kernels: &K, w: &Mat, g: &Mat, mask: Mat) -> Result<Self> {
         let obj = kernels.objective(w, &mask, g)?;
-        Ok(Self { mask, obj, warm_obj: None, new_weights: None, trace: None })
+        Ok(Self { mask, obj, warm_obj: None, new_weights: None, trace: None, fw_iters: 0 })
     }
 }

@@ -15,9 +15,29 @@
 //! The FW gradient/objective evaluations go through the [`FwKernels`]
 //! trait so the same driver runs against the native matmuls or the
 //! AOT-compiled Pallas kernels (`runtime::PjrtKernels`).
+//!
+//! ## §Perf — the FW engines
+//!
+//! The native backend has two interchangeable hot loops, selected by
+//! [`SparseFwConfig::engine`] (`--fw-engine dense|incremental`):
+//!
+//! * **dense** — one full `(W⊙M)·G` matmul per iteration through the
+//!   [`FwKernels`] trait (reference semantics; the only path for PJRT
+//!   backends, whose kernels live behind the trait).
+//! * **incremental** (default) — [`crate::pruner::fw_engine`] maintains
+//!   `P_t = (W⊙M_t)·G` across iterations via
+//!   `P_{t+1} = (1−η)P_t + η(W⊙V)G`, paying only an O(nnz(V)·d_in)
+//!   sparse row-gather per step plus elementwise passes, with a
+//!   periodic exact refresh bounding f32 drift and row-block intra-layer
+//!   parallelism.  At the paper's operating point (50% sparsity,
+//!   α = 0.9, T = 2000) this is the difference between the matmul
+//!   dominating end-to-end pruning time and the LMO/gather being the
+//!   cost — see `benches/fw_hot_loop.rs`, tracked in `BENCH_fw.json` by
+//!   `scripts/ci.sh`.
 
 use anyhow::Result;
 
+use crate::pruner::fw_engine::{self, FwBlock, FwEngine, DEFAULT_REFRESH_EVERY};
 use crate::pruner::fw_math;
 use crate::pruner::lmo::lmo;
 use crate::pruner::mask::{BudgetSpec, SparsityPattern};
@@ -80,6 +100,15 @@ pub trait FwKernels {
     ) -> Result<Option<(Mat, usize)>> {
         Ok(None)
     }
+
+    /// True when the kernels compute on native [`Mat`]s in-process, so
+    /// [`run_layer`] may swap the trait-driven dense loop for the
+    /// maintained-state engine in [`crate::pruner::fw_engine`].  PJRT
+    /// backends keep the default `false`: their per-iteration math must
+    /// stay on the compiled kernels.
+    fn native_incremental(&self) -> bool {
+        false
+    }
 }
 
 /// Pure-rust backend (mirrors the Pallas kernels bit-for-bit in
@@ -93,6 +122,10 @@ impl FwKernels for NativeKernels {
 
     fn objective(&self, w: &Mat, m: &Mat, g: &Mat) -> Result<f64> {
         Ok(fw_math::objective(w, m, g))
+    }
+
+    fn native_incremental(&self) -> bool {
+        true
     }
 }
 
@@ -123,7 +156,20 @@ pub struct SparseFwConfig {
     /// q(D) = ‖(W⊙D)X‖² — evaluated by the existing objective kernel at
     /// mask (1 − D).  One extra kernel call per iteration, markedly
     /// faster convergence (see EXPERIMENTS.md §Extensions).
+    ///
+    /// On the incremental engine the scalars come from the maintained
+    /// state (no extra matmul), and η is optimized *per row block* on
+    /// row-separable patterns.
     pub line_search: bool,
+    /// Native hot-loop engine (`--fw-engine`): the incremental
+    /// sparse-vertex engine (default) or the dense per-iteration
+    /// matmul.  Ignored by PJRT backends.  See the §Perf note above.
+    pub engine: FwEngine,
+    /// Exact-refresh period of the incremental engine's maintained
+    /// `P = (W⊙M)·G` state (`--fw-refresh`; 0 = never refresh).  Bounds
+    /// f32 drift; the default keeps a 2000-iteration run within 1e-4
+    /// relative of the exact product.
+    pub refresh_every: usize,
 }
 
 impl Default for SparseFwConfig {
@@ -136,6 +182,8 @@ impl Default for SparseFwConfig {
             use_chunk: true,
             keep_best: true,
             line_search: false,
+            engine: FwEngine::Incremental,
+            refresh_every: DEFAULT_REFRESH_EVERY,
         }
     }
 }
@@ -162,6 +210,9 @@ pub struct LayerResult {
     pub final_obj: f64,
     /// (warm − final) / warm, the Fig 2 metric.
     pub rel_reduction: f64,
+    /// FW iterations actually executed (0 on the degenerate warmstart
+    /// returns) — feeds the server's iterations/sec metric.
+    pub fw_iters: usize,
     pub trace: Option<FwTrace>,
 }
 
@@ -205,6 +256,7 @@ pub fn run_layer<K: FwKernels + ?Sized>(
             warm_obj,
             final_obj: warm_obj,
             rel_reduction: 0.0,
+            fw_iters: 0,
             trace: None,
         });
     }
@@ -245,63 +297,111 @@ pub fn run_layer<K: FwKernels + ?Sized>(
 
     record(0, &m, &mut trace)?;
 
-    let chunkable = cfg.use_chunk
-        && trace.is_none()
-        && !cfg.line_search // the fused artifact bakes in the open-loop step
-        && matches!(pattern, SparsityPattern::Unstructured { .. });
-
-    let mut t = 0usize;
-    while t < cfg.iters {
-        // Fused PJRT path: run a whole chunk inside one executable.
-        if chunkable {
-            if let Some((m_next, done)) =
-                kernels.fw_chunk(w, &m, g, &h, &fixed, k_new, t, cfg.iters - t)?
-            {
-                debug_assert!(done > 0 && done <= cfg.iters - t);
-                m = m_next;
-                t += done;
-                continue;
-            }
-        }
-        // Algorithm 2 lines 6–9.
-        let total = add_masks(&m, &fixed);
-        let mut grad = kernels.fw_grad(w, &total, g, &h)?;
-        // LMO over free coordinates only (∇f ⊙ (1 − M̄)).
-        for (gv, fx) in grad.data.iter_mut().zip(&fixed.data) {
-            if *fx != 0.0 {
-                *gv = 0.0;
-            }
-        }
-        let v = lmo(&grad, &free_budget);
-        let eta = if cfg.line_search {
-            // η* = −⟨∇L, D⟩ / (2·q(D)) on the quadratic, D = V − M_t.
-            let mut d = v.clone();
-            d.axby(1.0, -1.0, &m);
-            let inner: f64 = grad
-                .data
-                .iter()
-                .zip(&d.data)
-                .map(|(&g_, &d_)| g_ as f64 * d_ as f64)
-                .sum();
-            // q(D) = ‖(W⊙D)X‖² = objective evaluated at mask 1 − D.
-            let one_minus_d = Mat::from_vec(
-                d.rows,
-                d.cols,
-                d.data.iter().map(|&x| 1.0 - x).collect(),
-            );
-            let q = kernels.objective(w, &one_minus_d, g)?;
-            if q <= 0.0 {
-                2.0 / (t as f32 + 2.0)
-            } else {
-                ((-inner / (2.0 * q)).clamp(0.0, 1.0)) as f32
+    if cfg.engine == FwEngine::Incremental && kernels.native_incremental() {
+        // Incremental sparse-vertex engine (see fw_engine.rs): O(nnz)
+        // iterations on maintained state, row-block parallel.  Tracing
+        // pins a single block so recorded iterates are well-defined.
+        if cfg.trace_every > 0 {
+            let mut block =
+                FwBlock::new(&w.data, g, &fixed.data, &m.data, rows, cols);
+            let mut t = 0usize;
+            while t < cfg.iters {
+                let next = (((t / cfg.trace_every) + 1) * cfg.trace_every).min(cfg.iters);
+                block.run(
+                    &w.data,
+                    g,
+                    &h.data,
+                    &fixed.data,
+                    &mut m.data,
+                    &free_budget,
+                    next - t,
+                    cfg.line_search,
+                    cfg.refresh_every,
+                );
+                t = next;
+                record(t, &m, &mut trace)?;
             }
         } else {
-            2.0 / (t as f32 + 2.0)
-        };
-        m.axby(1.0 - eta, eta, &v);
-        t += 1;
-        if cfg.trace_every > 0 && (t % cfg.trace_every == 0 || t == cfg.iters) {
-            record(t, &m, &mut trace)?;
+            fw_engine::run_incremental(
+                w,
+                g,
+                &h,
+                &fixed,
+                &free_budget,
+                &mut m,
+                cfg.iters,
+                cfg.line_search,
+                cfg.refresh_every,
+            );
+        }
+    } else {
+        // Dense engine: one (W⊙M)·G matmul per iteration through the
+        // FwKernels trait.  `mask_buf` is reused for both the total
+        // mask M+M̄ (gradient input) and the line-search mask 1−D — no
+        // per-iteration buffer allocations.
+        let chunkable = cfg.use_chunk
+            && trace.is_none()
+            && !cfg.line_search // the fused artifact bakes in the open-loop step
+            && matches!(pattern, SparsityPattern::Unstructured { .. });
+
+        let mut mask_buf = Mat::zeros(rows, cols);
+        let mut t = 0usize;
+        while t < cfg.iters {
+            // Fused PJRT path: run a whole chunk inside one executable.
+            if chunkable {
+                if let Some((m_next, done)) =
+                    kernels.fw_chunk(w, &m, g, &h, &fixed, k_new, t, cfg.iters - t)?
+                {
+                    debug_assert!(done > 0 && done <= cfg.iters - t);
+                    m = m_next;
+                    t += done;
+                    continue;
+                }
+            }
+            // Algorithm 2 lines 6–9.
+            for ((b, &mv), &fv) in
+                mask_buf.data.iter_mut().zip(&m.data).zip(&fixed.data)
+            {
+                *b = mv + fv;
+                debug_assert!(*b <= 1.0 + 1e-5, "overlapping masks");
+            }
+            let mut grad = kernels.fw_grad(w, &mask_buf, g, &h)?;
+            // LMO over free coordinates only (∇f ⊙ (1 − M̄)).
+            for (gv, fx) in grad.data.iter_mut().zip(&fixed.data) {
+                if *fx != 0.0 {
+                    *gv = 0.0;
+                }
+            }
+            let v = lmo(&grad, &free_budget);
+            let eta = if cfg.line_search {
+                // η* = −⟨∇L, D⟩ / (2·q(D)) on the quadratic, D = V − M_t.
+                let inner: f64 = grad
+                    .data
+                    .iter()
+                    .zip(&v.data)
+                    .zip(&m.data)
+                    .map(|((&g_, &vv), &mv)| g_ as f64 * (vv - mv) as f64)
+                    .sum();
+                // q(D) = ‖(W⊙D)X‖² = objective evaluated at mask 1 − D.
+                for ((b, &vv), &mv) in
+                    mask_buf.data.iter_mut().zip(&v.data).zip(&m.data)
+                {
+                    *b = 1.0 - (vv - mv);
+                }
+                let q = kernels.objective(w, &mask_buf, g)?;
+                if q <= 0.0 {
+                    2.0 / (t as f32 + 2.0)
+                } else {
+                    ((-inner / (2.0 * q)).clamp(0.0, 1.0)) as f32
+                }
+            } else {
+                2.0 / (t as f32 + 2.0)
+            };
+            m.axby(1.0 - eta, eta, &v);
+            t += 1;
+            if cfg.trace_every > 0 && (t % cfg.trace_every == 0 || t == cfg.iters) {
+                record(t, &m, &mut trace)?;
+            }
         }
     }
 
@@ -320,6 +420,7 @@ pub fn run_layer<K: FwKernels + ?Sized>(
         mask,
         warm_obj,
         final_obj,
+        fw_iters: cfg.iters,
         trace,
     })
 }

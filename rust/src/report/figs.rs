@@ -185,6 +185,7 @@ pub fn fig4(ctx: &mut ReportCtx) -> Result<Json> {
         use_chunk: false,
         keep_best: false, // raw Algorithm 1 behaviour for the trace
         line_search: false,
+        ..Default::default()
     });
     let mut spec = ctx.spec(&model_name, method, pattern.clone());
     spec.eval = None; // fig 4 reads the optimization traces only

@@ -166,6 +166,20 @@ fn metrics(state: &ServerState) -> Response {
                 ("utilization", m.utilization().into()),
             ]),
         ),
+        // per-job wall time + FW throughput: the operator-visible
+        // number the incremental FW engine moves (`--fw-engine`)
+        (
+            "timing",
+            Json::obj(vec![
+                ("job_wall_secs_total", m.job_wall_secs().into()),
+                (
+                    "mean_job_secs",
+                    (m.job_wall_secs() / m.jobs_done.load(Relaxed).max(1) as f64).into(),
+                ),
+                ("fw_iters_total", m.fw_iters.load(Relaxed).into()),
+                ("fw_iters_per_sec", m.fw_iters_per_sec().into()),
+            ]),
+        ),
     ]);
     Response::json(200, &v)
 }

@@ -32,7 +32,7 @@ pub use queue::{JobBrief, JobId, JobQueue, JobRecord, JobState, JobSummary};
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -89,6 +89,13 @@ pub struct Metrics {
     pub calib_hits: AtomicUsize,
     pub calib_misses: AtomicUsize,
     pub busy_workers: AtomicUsize,
+    /// Σ pruning wall time of completed jobs, in milliseconds (an
+    /// integer so the accumulator stays a lock-free atomic).
+    pub job_wall_ms: AtomicU64,
+    /// Σ FW iterations executed by completed jobs — together with
+    /// `job_wall_ms` this is the fleet-visible iterations/sec, the
+    /// number the incremental FW engine moves.
+    pub fw_iters: AtomicUsize,
     pub workers: usize,
 }
 
@@ -101,6 +108,8 @@ impl Metrics {
             calib_hits: AtomicUsize::new(0),
             calib_misses: AtomicUsize::new(0),
             busy_workers: AtomicUsize::new(0),
+            job_wall_ms: AtomicU64::new(0),
+            fw_iters: AtomicUsize::new(0),
             workers,
         }
     }
@@ -108,6 +117,21 @@ impl Metrics {
     /// Fraction of pruning workers currently executing a job.
     pub fn utilization(&self) -> f64 {
         self.busy_workers.load(Ordering::Relaxed) as f64 / self.workers.max(1) as f64
+    }
+
+    /// Σ wall seconds of completed jobs.
+    pub fn job_wall_secs(&self) -> f64 {
+        self.job_wall_ms.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Aggregate FW iterations per second across completed jobs.
+    pub fn fw_iters_per_sec(&self) -> f64 {
+        let secs = self.job_wall_secs();
+        if secs > 0.0 {
+            self.fw_iters.load(Ordering::Relaxed) as f64 / secs
+        } else {
+            0.0
+        }
     }
 }
 
@@ -289,11 +313,20 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
             Ok(res) => {
                 let summary = JobSummary::from_result(&res);
                 crate::info!(
-                    "worker {worker}: job {id} done in {:.2}s (Σ err {:.4e})",
+                    "worker {worker}: job {id} done in {:.2}s (Σ err {:.4e}{})",
                     summary.wall_seconds,
-                    summary.total_err
+                    summary.total_err,
+                    summary
+                        .iters_per_sec()
+                        .map(|r| format!(", {r:.0} FW iters/s"))
+                        .unwrap_or_default()
                 );
                 state.metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                state
+                    .metrics
+                    .job_wall_ms
+                    .fetch_add((summary.wall_seconds * 1e3) as u64, Ordering::Relaxed);
+                state.metrics.fw_iters.fetch_add(summary.fw_iters, Ordering::Relaxed);
                 state.queue.finish(id, Ok(summary));
             }
             Err(e) => {

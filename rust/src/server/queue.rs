@@ -70,6 +70,8 @@ pub struct JobSummary {
     pub mask_layers: usize,
     /// Σ nonzeros across all masks — "the masks are non-empty" in one number.
     pub mask_nnz: usize,
+    /// Σ FW iterations across layers (0 for greedy/one-shot methods).
+    pub fw_iters: usize,
     pub pruned_sparsity: Option<f64>,
     pub ppl: Option<f64>,
 }
@@ -83,9 +85,17 @@ impl JobSummary {
             total_err: res.total_err(),
             mask_layers: res.masks().len(),
             mask_nnz: res.masks().values().map(|m| m.count_nonzero()).sum(),
+            fw_iters: res.prune.fw_iters,
             pruned_sparsity: res.pruned_sparsity,
             ppl: res.eval.as_ref().map(|e| e.ppl),
         }
+    }
+
+    /// FW iterations per wall second of this job (None for jobs that
+    /// ran no FW iterations).
+    pub fn iters_per_sec(&self) -> Option<f64> {
+        (self.fw_iters > 0 && self.wall_seconds > 0.0)
+            .then(|| self.fw_iters as f64 / self.wall_seconds)
     }
 
     pub fn to_json(&self) -> Json {
@@ -100,7 +110,11 @@ impl JobSummary {
             ("wall_seconds", self.wall_seconds.into()),
             ("mask_layers", self.mask_layers.into()),
             ("mask_nnz", self.mask_nnz.into()),
+            ("fw_iters", self.fw_iters.into()),
         ];
+        if let Some(ips) = self.iters_per_sec() {
+            fields.push(("iters_per_sec", ips.into()));
+        }
         if let Some(r) = self.mean_rel_reduction {
             fields.push(("mean_rel_reduction", r.into()));
         }
@@ -554,6 +568,7 @@ mod tests {
                 total_err: 1.0,
                 mask_layers: 8,
                 mask_nnz: 100,
+                fw_iters: 4000,
                 pruned_sparsity: None,
                 ppl: None,
             }),

@@ -1,0 +1,139 @@
+//! Sparse row-gather matmul kernels — the flop diet behind the
+//! incremental FW engine (`pruner::fw_engine`).
+//!
+//! One FW step mixes a k-sparse binary vertex V into the mask, so the
+//! maintained product `P = (W⊙M)·G` only needs the *new* term
+//! `(W⊙V)·G`: for every nonzero (i,j) of V, gather row j of G scaled by
+//! W[i,j] into row i of the output — O(nnz(V)·d_in) instead of the
+//! dense O(d_out·d_in²).  [`masked_matmul_into`] is the exact-recompute
+//! twin used for state initialization and the periodic drift refresh;
+//! both accumulate rows in ascending column order, matching the panel
+//! order of the dense [`super::matmul`] per output row.
+
+use super::Mat;
+
+/// `out = (W⊙V)·G` for a binary vertex V given as sorted flat indices
+/// (`i·cols + j`) into the `rows×cols` block `w`.  `g` is the
+/// `cols×cols` gram; `out` must hold `rows·cols` elements and is
+/// overwritten.  O(nnz·cols).
+pub fn vertex_matmul_into(w: &[f32], rows: usize, cols: usize, idx: &[u32], g: &Mat, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!((g.rows, g.cols), (cols, cols));
+    debug_assert_eq!(out.len(), rows * cols);
+    out.fill(0.0);
+    for &flat in idx {
+        let flat = flat as usize;
+        debug_assert!(flat < rows * cols);
+        let coeff = w[flat];
+        if coeff == 0.0 {
+            continue;
+        }
+        let (i, j) = (flat / cols, flat % cols);
+        let grow = g.row(j);
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        for (o, &gv) in orow.iter_mut().zip(grow) {
+            *o += coeff * gv;
+        }
+    }
+}
+
+/// `out = (W⊙M)·G` over a `rows×cols` block, skipping M's zeros —
+/// O(nnz(M)·cols).  Used to initialize the maintained FW state and for
+/// the periodic exact refresh that bounds f32 drift.
+pub fn masked_matmul_into(w: &[f32], m: &[f32], rows: usize, cols: usize, g: &Mat, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!((g.rows, g.cols), (cols, cols));
+    debug_assert_eq!(out.len(), rows * cols);
+    out.fill(0.0);
+    for i in 0..rows {
+        let base = i * cols;
+        for j in 0..cols {
+            let mv = m[base + j];
+            if mv == 0.0 {
+                continue;
+            }
+            let coeff = w[base + j] * mv;
+            if coeff == 0.0 {
+                continue;
+            }
+            let grow = g.row(j);
+            // split the mutable row borrow out per (i,j) term
+            let orow = &mut out[base..base + cols];
+            for (o, &gv) in orow.iter_mut().zip(grow) {
+                *o += coeff * gv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_a_bt};
+    use crate::util::prng::Xoshiro256;
+
+    fn setup(rows: usize, cols: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Mat::gaussian(rows, cols, 1.0, &mut rng);
+        let x = Mat::gaussian(cols, 64, 1.0, &mut rng);
+        (w, matmul_a_bt(&x, &x))
+    }
+
+    #[test]
+    fn vertex_matmul_matches_dense() {
+        let (w, g) = setup(9, 16, 1);
+        let mut rng = Xoshiro256::new(2);
+        // random sparse binary vertex
+        let v = Mat::from_fn(9, 16, |_, _| f32::from(rng.next_f64() < 0.15));
+        let idx: Vec<u32> = v
+            .data
+            .iter()
+            .enumerate()
+            .filter(|(_, &x)| x != 0.0)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let mut out = vec![0.0f32; 9 * 16];
+        vertex_matmul_into(&w.data, 9, 16, &idx, &g, &mut out);
+        let want = matmul(&w.hadamard(&v), &g);
+        for (a, b) in out.iter().zip(&want.data) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn vertex_matmul_empty_vertex_is_zero() {
+        let (w, g) = setup(4, 8, 3);
+        let mut out = vec![1.0f32; 32]; // pre-polluted: must be overwritten
+        vertex_matmul_into(&w.data, 4, 8, &[], &g, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn masked_matmul_matches_dense() {
+        let (w, g) = setup(11, 12, 4);
+        let mut rng = Xoshiro256::new(5);
+        // fractional mask with plenty of exact zeros (the FW iterate shape)
+        let m = Mat::from_fn(11, 12, |_, _| {
+            if rng.next_f64() < 0.4 {
+                0.0
+            } else {
+                rng.next_f32()
+            }
+        });
+        let mut out = vec![0.0f32; 11 * 12];
+        masked_matmul_into(&w.data, &m.data, 11, 12, &g, &mut out);
+        let want = matmul(&w.hadamard(&m), &g);
+        for (a, b) in out.iter().zip(&want.data) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn masked_matmul_zero_mask() {
+        let (w, g) = setup(3, 4, 6);
+        let mut out = vec![7.0f32; 12];
+        masked_matmul_into(&w.data, &[0.0; 12], 3, 4, &g, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+}

@@ -10,9 +10,12 @@
 //! Strategy: parallelize over row-blocks of C (one thread owns a
 //! contiguous output stripe — no write sharing), micro-kernel is an
 //! `ikj` loop over a `MC×KC` panel of A against cache-resident rows of
-//! B, letting LLVM auto-vectorize the inner `axpy`.  The §Perf pass
-//! measured this at ~10 GF/s/core-group on the build machine (see
-//! EXPERIMENTS.md).
+//! B, letting LLVM auto-vectorize the inner `axpy`.  Current throughput
+//! on the build machine is tracked by `benches/fw_hot_loop.rs` and
+//! recorded in `BENCH_fw.json` by `scripts/ci.sh` — the FW gradient no
+//! longer leans on this kernel per-iteration at all when the
+//! incremental engine (`pruner::fw_engine`) is selected; it remains the
+//! substrate for H/gram precomputation and the dense A/B engine.
 
 use super::Mat;
 use crate::util::pool::{chunk_ranges, default_workers};

@@ -6,6 +6,7 @@
 //! multi-threaded matmul (see `matmul.rs`) and the small amount of
 //! linear algebra SparseGPT needs (`linalg.rs`).
 
+pub mod gather;
 pub mod linalg;
 pub mod matmul;
 pub mod sparse;

@@ -7,20 +7,32 @@
 
 /// Indices of the `k` smallest values (ascending ties broken by index).
 pub fn bottom_k_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let mut buf = Vec::new();
+    let n = bottom_k_into(values, k, &mut buf);
+    buf[..n].iter().map(|&i| i as usize).collect()
+}
+
+/// Allocation-free twin of [`bottom_k_indices`] (which delegates here,
+/// so the two can never disagree — the FW engines' exact-equivalence
+/// rests on one shared comparator): reuses `buf` across calls (the FW
+/// hot loop runs this every iteration) and leaves the selected
+/// indices — unordered — in `buf[..returned]`.
+pub fn bottom_k_into(values: &[f32], k: usize, buf: &mut Vec<u32>) -> usize {
     let k = k.min(values.len());
+    buf.clear();
     if k == 0 {
-        return Vec::new();
+        return 0;
     }
-    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
-    let cmp = |&a: &u32, &b: &u32| {
-        let (va, vb) = (values[a as usize], values[b as usize]);
-        va.partial_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-    };
-    if k < idx.len() {
-        idx.select_nth_unstable_by(k - 1, cmp);
-        idx.truncate(k);
+    buf.extend(0..values.len() as u32);
+    if k < buf.len() {
+        let cmp = |&a: &u32, &b: &u32| {
+            let (va, vb) = (values[a as usize], values[b as usize]);
+            va.partial_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        };
+        buf.select_nth_unstable_by(k - 1, cmp);
+        buf.truncate(k);
     }
-    idx.into_iter().map(|i| i as usize).collect()
+    k
 }
 
 /// Indices of the `k` largest values (ties broken by index).
@@ -94,5 +106,17 @@ mod tests {
     fn sorted(mut v: Vec<usize>) -> Vec<usize> {
         v.sort_unstable();
         v
+    }
+
+    #[test]
+    fn bottom_k_into_matches_allocating_variant() {
+        let v: Vec<f32> = (0..200).map(|i| (((i * 53) % 97) as f32) - 48.0).collect();
+        let mut buf = Vec::new();
+        for k in [0usize, 1, 7, 50, 200, 500] {
+            let n = bottom_k_into(&v, k, &mut buf);
+            let mut got: Vec<usize> = buf[..n].iter().map(|&i| i as usize).collect();
+            got.sort_unstable();
+            assert_eq!(got, sorted(bottom_k_indices(&v, k)), "k={k}");
+        }
     }
 }

@@ -1,0 +1,215 @@
+//! Engine equivalence: the incremental sparse-vertex FW engine
+//! (`pruner::fw_engine`) must reproduce the dense per-iteration-matmul
+//! engine across every constraint geometry, step schedule, and α —
+//! plus a drift regression proving the paper-default T = 2000 run stays
+//! within tolerance of the exact product.
+//!
+//! The two engines accumulate f32 in different orders (maintained
+//! state vs full recompute), so trajectories can tie-flip near the LMO
+//! selection boundary; equivalence is therefore asserted on the
+//! warmstart objective (bit-equal), mask feasibility/budget (exact),
+//! and the final objective (tight relative tolerance).
+
+use sparsefw::pruner::fw_engine::{FwBlock, FwEngine, DEFAULT_REFRESH_EVERY};
+use sparsefw::pruner::fw_math;
+use sparsefw::pruner::mask::{mask_satisfies, BudgetSpec, SparsityPattern};
+use sparsefw::pruner::saliency::{saliency_mask, wanda_scores};
+use sparsefw::pruner::sparsefw::{alpha_fixed_mask, run_layer, NativeKernels, SparseFwConfig};
+use sparsefw::tensor::{matmul_a_bt, Mat};
+use sparsefw::util::prng::Xoshiro256;
+
+fn setup(dout: usize, din: usize, b: usize, seed: u64) -> (Mat, Mat) {
+    let mut rng = Xoshiro256::new(seed);
+    let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+    // anisotropic activations: outlier feature columns
+    let mut x = Mat::gaussian(din, b, 1.0, &mut rng);
+    for i in 0..din {
+        if i % 7 == 0 {
+            for v in x.row_mut(i) {
+                *v *= 6.0;
+            }
+        }
+    }
+    (w, matmul_a_bt(&x, &x))
+}
+
+fn patterns() -> [SparsityPattern; 3] {
+    [
+        SparsityPattern::Unstructured { sparsity: 0.5 },
+        SparsityPattern::PerRow { sparsity: 0.5 },
+        SparsityPattern::NM { keep: 2, block: 4 },
+    ]
+}
+
+/// All three `SparsityPattern`s × {line_search on/off} × α ∈ {0, 0.5, 0.9}.
+#[test]
+fn engines_agree_on_masks_and_objectives() {
+    let (w, g) = setup(24, 32, 128, 42);
+    for pattern in patterns() {
+        for line_search in [false, true] {
+            for alpha in [0.0, 0.5, 0.9] {
+                let base = SparseFwConfig {
+                    iters: 80,
+                    alpha,
+                    line_search,
+                    use_chunk: false,
+                    keep_best: false, // compare the raw trajectories
+                    ..Default::default()
+                };
+                let dense = run_layer(
+                    &NativeKernels,
+                    &w,
+                    &g,
+                    &pattern,
+                    &SparseFwConfig { engine: FwEngine::Dense, ..base.clone() },
+                )
+                .unwrap();
+                let inc = run_layer(
+                    &NativeKernels,
+                    &w,
+                    &g,
+                    &pattern,
+                    &SparseFwConfig { engine: FwEngine::Incremental, ..base },
+                )
+                .unwrap();
+                let ctx = format!("{pattern:?} ls={line_search} alpha={alpha}");
+
+                // identical preamble → bit-equal warmstart objective
+                assert_eq!(dense.warm_obj, inc.warm_obj, "{ctx}");
+                // both rounded masks are feasible with the full budget
+                assert!(mask_satisfies(&inc.mask, &pattern), "{ctx}");
+                assert_eq!(
+                    inc.mask.count_nonzero(),
+                    dense.mask.count_nonzero(),
+                    "{ctx}"
+                );
+                assert_eq!(inc.fw_iters, 80, "{ctx}");
+                // Final objectives match to a tight relative tolerance.
+                // The rounded objective is noisier at α = 0 (the full
+                // free budget makes thresholding most volatile — the
+                // Fig 4 dip), so the bound widens there.
+                let tol = if alpha == 0.0 { 0.1 } else { 0.05 };
+                let (a, b) = (dense.final_obj, inc.final_obj);
+                assert!(
+                    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())),
+                    "{ctx}: dense {a} vs incremental {b}"
+                );
+            }
+        }
+    }
+}
+
+/// 2000 incremental iterations (the paper default) stay within
+/// tolerance of the dense path, and the maintained P state stays
+/// within 1e-4 relative of the exact product thanks to the refresh.
+#[test]
+fn long_run_drift_is_bounded() {
+    let (w, g) = setup(16, 32, 96, 7);
+    let pattern = SparsityPattern::Unstructured { sparsity: 0.5 };
+    let base = SparseFwConfig {
+        iters: 2000,
+        alpha: 0.9,
+        use_chunk: false,
+        keep_best: false,
+        ..Default::default()
+    };
+    let dense = run_layer(
+        &NativeKernels,
+        &w,
+        &g,
+        &pattern,
+        &SparseFwConfig { engine: FwEngine::Dense, ..base.clone() },
+    )
+    .unwrap();
+    let inc = run_layer(
+        &NativeKernels,
+        &w,
+        &g,
+        &pattern,
+        &SparseFwConfig { engine: FwEngine::Incremental, ..base },
+    )
+    .unwrap();
+    let (a, b) = (dense.final_obj, inc.final_obj);
+    assert!(
+        (a - b).abs() <= 1e-2 * (1.0 + a.abs().max(b.abs())),
+        "T=2000: dense {a} vs incremental {b}"
+    );
+
+    // maintained-state divergence after the full T = 2000, measured
+    // directly against an exact recompute: ≤ 1e-4 relative
+    let scores = wanda_scores(&w, &g);
+    let fixed = alpha_fixed_mask(&scores, &pattern, 0.9);
+    let budget = BudgetSpec::free_budgets(&pattern, w.rows, w.cols, &fixed);
+    let warm = saliency_mask(&scores, &pattern);
+    let mut m = Mat::from_vec(
+        w.rows,
+        w.cols,
+        warm.data
+            .iter()
+            .zip(&fixed.data)
+            .map(|(&wm, &fx)| if fx != 0.0 { 0.0 } else { wm })
+            .collect(),
+    );
+    let h = fw_math::precompute_h(&w, &g);
+    let mut blk = FwBlock::new(&w.data, &g, &fixed.data, &m.data, w.rows, w.cols);
+    blk.run(
+        &w.data,
+        &g,
+        &h.data,
+        &fixed.data,
+        &mut m.data,
+        &budget,
+        2000,
+        false,
+        DEFAULT_REFRESH_EVERY,
+    );
+    let drift = blk.p_rel_drift(&w.data, &g, &m.data);
+    assert!(drift <= 1e-4, "maintained P drifted {drift} after T=2000");
+}
+
+/// The keep-best guard holds on the incremental engine too: with the
+/// default config the final objective never loses to the warmstart.
+#[test]
+fn incremental_respects_keep_best_guard() {
+    let (w, g) = setup(16, 24, 96, 11);
+    for pattern in patterns() {
+        let cfg = SparseFwConfig {
+            iters: 120,
+            alpha: 0.5,
+            engine: FwEngine::Incremental,
+            ..Default::default()
+        };
+        let r = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+        assert!(mask_satisfies(&r.mask, &pattern), "{pattern:?}");
+        assert_eq!(r.mask.count_nonzero(), pattern.keep_total(16, 24));
+        assert!(
+            r.final_obj <= r.warm_obj * 1.0001,
+            "{pattern:?}: {} > {}",
+            r.final_obj,
+            r.warm_obj
+        );
+    }
+}
+
+/// Tracing must work on the incremental engine (single-block path) and
+/// record a descending continuous objective.
+#[test]
+fn incremental_traces_descend() {
+    let (w, g) = setup(16, 16, 64, 4);
+    let cfg = SparseFwConfig {
+        iters: 200,
+        alpha: 0.0,
+        trace_every: 20,
+        engine: FwEngine::Incremental,
+        ..Default::default()
+    };
+    let pattern = SparsityPattern::Unstructured { sparsity: 0.5 };
+    let r = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+    let tr = r.trace.unwrap();
+    assert!(tr.iters.len() >= 10);
+    assert!(
+        *tr.continuous_obj.last().unwrap() < tr.continuous_obj[0],
+        "{:?}",
+        tr.continuous_obj
+    );
+}

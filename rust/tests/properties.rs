@@ -2,6 +2,7 @@
 //! the offline registry has no proptest).  Each property runs across a
 //! seeded family of random shapes/instances; failures print the seed.
 
+use sparsefw::pruner::fw_engine::FwEngine;
 use sparsefw::pruner::fw_math;
 use sparsefw::pruner::lmo::{lmo, lmo_value};
 use sparsefw::pruner::mask::{mask_satisfies, BudgetSpec, SparsityPattern};
@@ -128,6 +129,9 @@ fn prop_fw_feasibility_and_descent() {
             use_chunk: false,
             keep_best: true,
             line_search: rng.next_f64() < 0.3, // exercise both schedules
+            // exercise both hot-loop engines
+            engine: if rng.next_f64() < 0.5 { FwEngine::Dense } else { FwEngine::Incremental },
+            refresh_every: 16,
         };
         let res = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
         assert!(mask_satisfies(&res.mask, &pattern));

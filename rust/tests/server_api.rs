@@ -15,7 +15,7 @@ use sparsefw::data::corpus;
 use sparsefw::data::TokenBin;
 use sparsefw::model::testutil::{random_model, tiny_cfg};
 use sparsefw::model::Gpt;
-use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
 use sparsefw::server::{Client, Server, ServerConfig, ServerHandle};
 
 fn shared_model() -> Gpt {
@@ -57,13 +57,16 @@ fn base_spec() -> JobSpec {
 
 /// A SparseFW job slow enough (~thousands of FW iterations across 8
 /// layers) that jobs queued behind it on a 1-worker server are reliably
-/// still pending milliseconds after submission.
+/// still pending milliseconds after submission.  Pinned to the dense
+/// engine — this fixture's job is to be slow, and the incremental
+/// engine (the default) would shrink the timing window it provides.
 fn slow_spec() -> JobSpec {
     JobSpec {
         method: PruneMethod::SparseFw(SparseFwConfig {
             iters: 2500,
             alpha: 0.5,
             warmstart: Warmstart::Wanda,
+            engine: FwEngine::Dense,
             ..Default::default()
         }),
         ..base_spec()
@@ -225,6 +228,49 @@ fn metrics_report_calib_cache_hits_for_shared_calibration() {
 
     let h = client.healthz().unwrap();
     assert_eq!(h.at(&["ok"]).as_bool(), Some(true));
+    handle.shutdown();
+}
+
+#[test]
+fn metrics_report_job_wall_time_and_fw_throughput() {
+    let (handle, client) = spawn_server(1);
+
+    let iters = 40usize;
+    let spec = JobSpec {
+        method: PruneMethod::SparseFw(SparseFwConfig {
+            iters,
+            alpha: 0.5,
+            warmstart: Warmstart::Wanda,
+            ..Default::default()
+        }),
+        ..base_spec()
+    };
+    let id = client.submit(&spec, 0).unwrap();
+    let rec = client.wait(id, WAIT).unwrap();
+
+    // per-job: the result summary carries the executed FW iterations
+    // (8 pruned linears × iters) and the derived throughput
+    let fw_iters = rec.at(&["result", "fw_iters"]).as_usize().unwrap();
+    assert_eq!(fw_iters, 8 * iters, "{rec:?}");
+    assert!(
+        rec.at(&["result", "iters_per_sec"]).as_f64().unwrap() > 0.0,
+        "{rec:?}"
+    );
+
+    // server-wide: /metrics aggregates wall time + iterations/sec
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at(&["timing", "fw_iters_total"]).as_usize(), Some(8 * iters));
+    assert!(m.at(&["timing", "job_wall_secs_total"]).as_f64().unwrap() >= 0.0);
+    assert!(m.at(&["timing", "mean_job_secs"]).as_f64().unwrap() >= 0.0);
+    assert!(m.at(&["timing", "fw_iters_per_sec"]).as_f64().is_some());
+
+    // a greedy job adds no FW iterations
+    let id = client.submit(&base_spec(), 0).unwrap();
+    let rec = client.wait(id, WAIT).unwrap();
+    assert_eq!(rec.at(&["result", "fw_iters"]).as_usize(), Some(0));
+    assert!(rec.at(&["result", "iters_per_sec"]).as_f64().is_none());
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at(&["timing", "fw_iters_total"]).as_usize(), Some(8 * iters));
     handle.shutdown();
 }
 

@@ -46,6 +46,16 @@ echo "$SUBMIT_OUT" | grep -q "mask_layers=8" \
 echo "$SUBMIT_OUT" | grep -Eq "mask_nnz=[1-9]" \
     || { echo "masks are empty: $SUBMIT_OUT"; exit 1; }
 
+# second smoke path: a SparseFW job on the incremental engine
+FW_OUT="$("$BIN" submit --addr "$ADDR" --model demo --method sparsefw \
+    --fw-engine incremental --iters 40 --alpha 0.9 --pattern per-row:0.5 \
+    --samples 8 --wait 2>&1)"
+echo "$FW_OUT" | grep -q "state=done" \
+    || { echo "incremental FW job did not finish: $FW_OUT"; cat "$SERVE_LOG"; exit 1; }
+echo "$FW_OUT" | grep -Eq "mask_nnz=[1-9]" \
+    || { echo "incremental FW masks are empty: $FW_OUT"; exit 1; }
+echo "   incremental engine smoke OK"
+
 "$BIN" status --addr "$ADDR"
 "$BIN" shutdown --addr "$ADDR"
 wait "$SERVE_PID"
@@ -56,12 +66,21 @@ echo "== server queue micro-bench (BENCH_server.json) =="
 SPARSEFW_BENCH_JSON="$REPO/BENCH_server.json" cargo bench --bench server_queue
 echo "   wrote $REPO/BENCH_server.json"
 
+echo "== FW hot-loop bench: dense vs incremental engine (BENCH_fw.json) =="
+SPARSEFW_BENCH_JSON="$REPO/BENCH_fw.json" cargo bench --bench fw_hot_loop
+echo "   wrote $REPO/BENCH_fw.json"
+
 # `make artifacts` (python/compile/aot.py) writes to <repo>/artifacts;
 # resolve it absolutely so the cwd (rust/) doesn't matter.
 ARTIFACTS="${SPARSEFW_ARTIFACTS:-$REPO/artifacts}"
 if [ -d "$ARTIFACTS" ]; then
-    echo "== quickstart example ($ARTIFACTS) =="
+    # first pass runs the default incremental engine; the second pins
+    # the dense engine so both hot loops stay smoke-tested end-to-end
+    echo "== quickstart example ($ARTIFACTS, --fw-engine incremental default) =="
     SPARSEFW_ARTIFACTS="$ARTIFACTS" cargo run --release --example quickstart
+    echo "== quickstart example, --fw-engine dense smoke path =="
+    SPARSEFW_ARTIFACTS="$ARTIFACTS" SPARSEFW_FW_ENGINE=dense \
+        cargo run --release --example quickstart
 else
     echo "== quickstart example skipped (no artifacts workspace at $ARTIFACTS) =="
 fi
