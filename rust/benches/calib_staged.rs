@@ -1,0 +1,81 @@
+//! Staged vs one-shot calibration: wall-time and peak gram memory.
+//!
+//! The one-shot path (`Calibration::from_sequences`) forwards the dense
+//! model once and holds all 4·n_layers grams simultaneously; the staged
+//! path (`CalibState`) streams one block's grams at a time from the
+//! current hiddens (paying a second forward through each block for the
+//! masked re-propagation).  This bench pins both costs — and the
+//! O(block) vs O(model) gram footprint — into `BENCH_calib.json`.
+
+use sparsefw::bench::Bencher;
+use sparsefw::calib::{CalibState, Calibration};
+use sparsefw::data::TokenBin;
+use sparsefw::model::testutil::random_model;
+use sparsefw::model::GptConfig;
+
+fn main() {
+    let cfg = GptConfig {
+        name: "bench".into(),
+        vocab_size: 256,
+        seq_len: 64,
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 128,
+    };
+    let model = random_model(&cfg, 3);
+    let bin = TokenBin::from_tokens(sparsefw::data::corpus::generate(5, 32768));
+    let seqs = bin.sample(cfg.seq_len, 8, 7);
+
+    // gram footprints are deterministic from the shapes: one-shot holds
+    // every layer's (d_in × d_in), staged peaks at one block's four
+    let layers = cfg.layers();
+    let total_bytes: usize = layers.iter().map(|l| l.d_in * l.d_in * 4).sum();
+    let block_bytes: usize = layers[..4].iter().map(|l| l.d_in * l.d_in * 4).sum();
+    println!(
+        "gram footprint: one-shot {} KB (all {} layers) vs staged peak {} KB (one block) — {:.1}x",
+        total_bytes / 1024,
+        layers.len(),
+        block_bytes / 1024,
+        total_bytes as f64 / block_bytes as f64
+    );
+
+    let mut b = Bencher::new("calib_staged");
+
+    b.bench(
+        &format!("one-shot/{}-seqs/{}KB-grams", seqs.len(), total_bytes / 1024),
+        || {
+            std::hint::black_box(Calibration::from_sequences(&model, &seqs).unwrap());
+        },
+    );
+
+    b.bench(
+        &format!("staged-block/{}-seqs/{}KB-peak", seqs.len(), block_bytes / 1024),
+        || {
+            // the full staged walk: per block, materialize grams, drop
+            // them, re-forward the hiddens (no pruning — calibration
+            // cost only, the pruning cost is method-dependent)
+            let mut state = CalibState::new(&model, &seqs).unwrap();
+            for bi in 0..cfg.n_layers {
+                let grams = state.block_grams(&model, bi).unwrap();
+                std::hint::black_box(&grams);
+                drop(grams);
+                state.advance(&model, bi).unwrap();
+            }
+            assert_eq!(state.peak_live_sets(), 1);
+            assert_eq!(state.peak_gram_bytes(), block_bytes);
+        },
+    );
+
+    b.bench(&format!("embed-prefix/{}-seqs", seqs.len()), || {
+        std::hint::black_box(
+            sparsefw::calib::EmbedPrefix::new(&model, &seqs).unwrap(),
+        );
+    });
+
+    b.report();
+    let path = std::env::var("SPARSEFW_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_calib.json".to_string());
+    b.report_json(&path).expect("writing bench json");
+    println!("\nbench json written to {path}");
+}

@@ -9,6 +9,18 @@
 //!
 //! Two accumulation backends: native (`matmul_at_b`) and the AOT Pallas
 //! `gram` kernel via PJRT (cross-checked in integration tests).
+//!
+//! [`Calibration`] is the *one-shot dense* path ([`CalibPolicy::Dense`],
+//! `--propagate off`): one forward pass over the dense model, all
+//! `4·n_layers` grams held at once.  The staged block-sequential
+//! alternative lives in [`state`]: a [`CalibState`] streams one block's
+//! grams at a time from the pruned-so-far hidden states, bounding peak
+//! calibration memory at O(block) and pricing compounding error into
+//! every layer's objective (see `coordinator::run_blocks`).
+
+pub mod state;
+
+pub use state::{BlockSlot, CalibPolicy, CalibState, EmbedPrefix, GramSet};
 
 use std::collections::BTreeMap;
 
@@ -19,6 +31,24 @@ use crate::model::{forward::forward, Gpt};
 use crate::runtime::PjrtRuntime;
 use crate::tensor::{matmul_at_b, Mat};
 use crate::util::pool::parallel_map;
+
+/// All sequences must be non-empty and equal-length: a gram sums
+/// per-position outer products, so silently mixing lengths would skew
+/// the per-layer scaling (and panics deep in the forward otherwise).
+/// Shared by the one-shot paths here and [`EmbedPrefix::new`].
+pub(crate) fn validate_seq_lens(seqs: &[Vec<u8>]) -> Result<usize> {
+    ensure!(!seqs.is_empty(), "no calibration sequences");
+    let seq_len = seqs[0].len();
+    ensure!(seq_len > 0, "empty calibration sequence");
+    for (i, s) in seqs.iter().enumerate() {
+        ensure!(
+            s.len() == seq_len,
+            "mixed-length calibration sequences: sequence {i} has {} tokens, sequence 0 has {seq_len}",
+            s.len()
+        );
+    }
+    Ok(seq_len)
+}
 
 /// Per-layer gram matrices for one model + calibration sample.
 #[derive(Clone)]
@@ -40,8 +70,9 @@ impl Calibration {
     }
 
     /// Accumulate grams from explicit sequences (native backend).
+    /// Sequences must be non-empty and equal-length.
     pub fn from_sequences(model: &Gpt, seqs: &[Vec<u8>]) -> Result<Self> {
-        ensure!(!seqs.is_empty(), "no calibration sequences");
+        let seq_len = validate_seq_lens(seqs)?;
         let layers = model.cfg.layers();
 
         // Map over sequences in parallel (each forward is itself cheap);
@@ -68,7 +99,7 @@ impl Calibration {
                 }
             }
         }
-        Ok(Self { grams, n_samples: seqs.len(), seq_len: seqs[0].len() })
+        Ok(Self { grams, n_samples: seqs.len(), seq_len })
     }
 
     /// Accumulate grams through the AOT Pallas `gram` kernel: native
@@ -78,7 +109,7 @@ impl Calibration {
         seqs: &[Vec<u8>],
         runtime: &PjrtRuntime,
     ) -> Result<Self> {
-        ensure!(!seqs.is_empty(), "no calibration sequences");
+        let seq_len = validate_seq_lens(seqs)?;
         let layers = model.cfg.layers();
         let mut grams: BTreeMap<String, Mat> = layers
             .iter()
@@ -93,13 +124,21 @@ impl Calibration {
                 *g = runtime.gram_acc(g, &x)?;
             }
         }
-        Ok(Self { grams, n_samples: seqs.len(), seq_len: seqs[0].len() })
+        Ok(Self { grams, n_samples: seqs.len(), seq_len })
     }
 
-    pub fn gram(&self, layer: &str) -> &Mat {
+    /// Gram lookup as a `Result` with a named-layer error — what the
+    /// coordinator's dispatch paths use instead of a panicking index.
+    pub fn try_gram(&self, layer: &str) -> Result<&Mat> {
         self.grams
             .get(layer)
-            .unwrap_or_else(|| panic!("no gram for layer {layer}"))
+            .ok_or_else(|| anyhow::anyhow!("no calibration gram for layer {layer}"))
+    }
+
+    /// Panicking gram lookup (callers that have already validated the
+    /// layer set; prefer [`Calibration::try_gram`] on fallible paths).
+    pub fn gram(&self, layer: &str) -> &Mat {
+        self.try_gram(layer).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -144,6 +183,27 @@ mod tests {
         let tr1: f32 = (0..16).map(|i| c1.gram(l).at(i, i)).sum();
         let tr2: f32 = (0..16).map(|i| c2.gram(l).at(i, i)).sum();
         assert!(tr2 > tr1 * 2.0, "{tr2} vs {tr1}");
+    }
+
+    #[test]
+    fn mixed_length_sequences_are_rejected() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 4);
+        let mut seqs = test_bin(4096).sample(cfg.seq_len, 3, 1);
+        seqs[2].truncate(cfg.seq_len - 5);
+        let err = Calibration::from_sequences(&model, &seqs).unwrap_err().to_string();
+        assert!(err.contains("mixed-length"), "{err}");
+        assert!(err.contains("sequence 2"), "{err}");
+    }
+
+    #[test]
+    fn try_gram_names_the_missing_layer() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 1);
+        let calib = Calibration::collect(&model, &test_bin(4096), 2, 3).unwrap();
+        assert!(calib.try_gram("blocks.0.wqkv").is_ok());
+        let err = calib.try_gram("blocks.7.wo").unwrap_err().to_string();
+        assert!(err.contains("blocks.7.wo"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,637 @@
+//! Streaming block-sequential calibration state.
+//!
+//! The one-shot [`super::Calibration`] forwards the *dense* model once
+//! and holds all `4·n_layers` gram matrices simultaneously — O(model)
+//! calibration memory, and grams that ignore the error already
+//! introduced by pruning earlier layers.  [`CalibState`] is the staged
+//! alternative: it keeps only the per-sequence hidden states (the
+//! residual stream entering the current block) and materializes **one
+//! block's grams at a time**, computed from the *pruned-so-far* model,
+//! so compounding error is priced into every layer's objective and peak
+//! gram memory is O(block) instead of O(model).
+//!
+//! Protocol, per block `b` (driven by `coordinator::run_blocks`):
+//!
+//! 1. [`CalibState::block_grams`] (or four [`CalibState::layer_gram`]
+//!    calls for the strictly-sequential granularity) — compute grams
+//!    from the current hiddens with the working model's weights.
+//! 2. Prune the block's layers; write masks into the working model.
+//! 3. [`CalibState::advance`] — re-forward the hiddens through the now-
+//!    *masked* block, yielding the inputs block `b+1` actually sees.
+//!
+//! Checked-out grams live in a [`GramSet`] guard that counts live sets
+//! and bytes; tests assert the staged driver never holds more than one
+//! block's grams at a time.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::model::forward::{
+    attention, forward_block, forward_embed, gelu, layernorm, BlockNames, Captures,
+};
+use crate::model::Gpt;
+use crate::tensor::{matmul_a_bt, matmul_at_b, Mat};
+use crate::util::pool::parallel_map;
+
+// ---------------------------------------------------------------------------
+// CalibPolicy
+// ---------------------------------------------------------------------------
+
+/// How calibration grams are computed for a pruning run
+/// (`--propagate off|block|layer`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibPolicy {
+    /// One-shot grams over the dense model (`--propagate off`) — the
+    /// original pipeline, bit-identical to the pre-staged behaviour.
+    Dense,
+    /// Staged (`--propagate block`): per block, grams come from the
+    /// pruned-so-far hiddens; the block's four layers keep their
+    /// intra-block parallelism, then hiddens re-forward through the
+    /// masked block.
+    PropagateBlock,
+    /// Strictly sequential (`--propagate layer`): like `block`, but the
+    /// `wo` / `wdown` grams are recomputed *after* `wqkv` / `wup` are
+    /// pruned, so even intra-block compounding is priced in.
+    PropagateLayer,
+}
+
+impl CalibPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "off" | "dense" => CalibPolicy::Dense,
+            "block" => CalibPolicy::PropagateBlock,
+            "layer" => CalibPolicy::PropagateLayer,
+            other => bail!("unknown propagation granularity {other:?} (off|block|layer)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CalibPolicy::Dense => "off",
+            CalibPolicy::PropagateBlock => "block",
+            CalibPolicy::PropagateLayer => "layer",
+        }
+    }
+
+    /// True for the staged (block-sequential) policies.
+    pub fn is_propagated(&self) -> bool {
+        !matches!(self, CalibPolicy::Dense)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EmbedPrefix
+// ---------------------------------------------------------------------------
+
+/// The token-sample/embed prefix of a staged calibration: per-sequence
+/// embedded hidden states, before any block has run.
+///
+/// This is the only method-independent part of a propagated calibration
+/// (everything after it depends on the masks chosen so far), hence the
+/// only part [`crate::coordinator::PruneSession`] memoizes.
+#[derive(Clone)]
+pub struct EmbedPrefix {
+    pub(crate) hiddens: Vec<Mat>,
+    pub(crate) seq_len: usize,
+}
+
+impl EmbedPrefix {
+    /// Embed `seqs` (parallel over sequences).  All sequences must have
+    /// the same length.
+    pub fn new(model: &Gpt, seqs: &[Vec<u8>]) -> Result<Self> {
+        let seq_len = super::validate_seq_lens(seqs)?;
+        ensure!(
+            seq_len <= model.cfg.seq_len,
+            "calibration sequences longer than model seq_len ({seq_len} > {})",
+            model.cfg.seq_len
+        );
+        let hiddens = parallel_map(seqs.len(), |i| forward_embed(model, &seqs[i]));
+        Ok(Self { hiddens, seq_len })
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.hiddens.len()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Live-gram accounting
+// ---------------------------------------------------------------------------
+
+/// Shared counters behind the O(block) memory claim: how many gram sets
+/// (and bytes) are checked out of a [`CalibState`] right now, and the
+/// high-water marks.
+#[derive(Default)]
+struct LiveStats {
+    live_sets: AtomicUsize,
+    peak_sets: AtomicUsize,
+    live_bytes: AtomicUsize,
+    peak_bytes: AtomicUsize,
+}
+
+/// One checked-out set of gram matrices — a whole block's four
+/// ([`CalibState::block_grams`]) or a single layer's
+/// ([`CalibState::layer_gram`]).  Holding a set counts toward the
+/// owning state's live statistics; dropping it releases the count, so
+/// `peak_live_sets() == 1` after a run proves the driver streamed one
+/// set at a time.
+pub struct GramSet {
+    /// Block the grams belong to.
+    pub block: usize,
+    grams: BTreeMap<String, Mat>,
+    bytes: usize,
+    stats: Arc<LiveStats>,
+}
+
+impl GramSet {
+    fn checkout(block: usize, grams: BTreeMap<String, Mat>, stats: Arc<LiveStats>) -> Self {
+        let bytes: usize = grams.values().map(|g| g.numel() * 4).sum();
+        let live = stats.live_sets.fetch_add(1, Ordering::Relaxed) + 1;
+        stats.peak_sets.fetch_max(live, Ordering::Relaxed);
+        let live_b = stats.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        stats.peak_bytes.fetch_max(live_b, Ordering::Relaxed);
+        Self { block, grams, bytes, stats }
+    }
+
+    /// Gram lookup with a named-layer error (no panicking `[]` on the
+    /// staged path).
+    pub fn gram(&self, layer: &str) -> Result<&Mat> {
+        self.grams.get(layer).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no gram for layer {layer} in staged block {} (have: {})",
+                self.block,
+                self.grams.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// f32 payload bytes of the checked-out grams.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.grams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grams.is_empty()
+    }
+}
+
+impl Drop for GramSet {
+    fn drop(&mut self) {
+        self.stats.live_sets.fetch_sub(1, Ordering::Relaxed);
+        self.stats.live_bytes.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CalibState
+// ---------------------------------------------------------------------------
+
+/// One of a block's four pruned linears, in model order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockSlot {
+    Wqkv,
+    Wo,
+    Wup,
+    Wdown,
+}
+
+impl BlockSlot {
+    /// Model-order slots, matching `GptConfig::layers()` within a block.
+    pub const ALL: [BlockSlot; 4] = [BlockSlot::Wqkv, BlockSlot::Wo, BlockSlot::Wup, BlockSlot::Wdown];
+}
+
+/// Intra-block activations stashed between [`CalibState::layer_gram`]
+/// calls so the strictly-sequential granularity never recomputes a
+/// stage (one activation set per stage is live at a time).
+struct Stash {
+    block: usize,
+    /// Last slot whose gram was produced.
+    slot: BlockSlot,
+    /// ln1 outputs (inputs to `wqkv`/attention), then ln2 outputs after
+    /// the `Wup` step (inputs to `wup`).
+    pre: Vec<Mat>,
+    /// Attention outputs (inputs to `wo`).
+    attn: Vec<Mat>,
+    /// GELU'd MLP activations (inputs to `wdown`).
+    up: Vec<Mat>,
+}
+
+/// Streaming calibration state: per-sequence residual streams advanced
+/// block by block, yielding one block's grams on demand (parallel over
+/// sequences).  See the module docs for the drive protocol.
+pub struct CalibState {
+    hiddens: Vec<Mat>,
+    names: Vec<BlockNames>,
+    n_heads: usize,
+    seq_len: usize,
+    stash: Option<Stash>,
+    stats: Arc<LiveStats>,
+}
+
+impl CalibState {
+    /// Validate + embed `seqs` and take them as the initial hiddens.
+    pub fn new(model: &Gpt, seqs: &[Vec<u8>]) -> Result<Self> {
+        Self::from_prefix(model, EmbedPrefix::new(model, seqs)?)
+    }
+
+    /// Resume from a (possibly memoized) embed prefix.
+    pub fn from_prefix(model: &Gpt, prefix: EmbedPrefix) -> Result<Self> {
+        ensure!(!prefix.hiddens.is_empty(), "empty embed prefix");
+        ensure!(
+            prefix.hiddens[0].cols == model.cfg.d_model,
+            "embed prefix width {} != model d_model {}",
+            prefix.hiddens[0].cols,
+            model.cfg.d_model
+        );
+        Ok(Self {
+            hiddens: prefix.hiddens,
+            names: BlockNames::for_model(&model.cfg),
+            n_heads: model.cfg.n_heads,
+            seq_len: prefix.seq_len,
+            stash: None,
+            stats: Arc::new(LiveStats::default()),
+        })
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.hiddens.len()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Max gram sets simultaneously checked out so far.
+    pub fn peak_live_sets(&self) -> usize {
+        self.stats.peak_sets.load(Ordering::Relaxed)
+    }
+
+    /// Max bytes of gram matrices simultaneously checked out so far.
+    pub fn peak_gram_bytes(&self) -> usize {
+        self.stats.peak_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Σ Xᵀ X over per-sequence activation matrices, reduced in
+    /// sequence order (bit-identical to `Calibration::from_sequences`'s
+    /// accumulation for the same activations).
+    fn gram_of(xs: &[Mat]) -> Mat {
+        let partials = parallel_map(xs.len(), |i| matmul_at_b(&xs[i], &xs[i]));
+        let mut it = partials.into_iter();
+        let mut acc = it.next().expect("at least one sequence");
+        for g in it {
+            acc.add_inplace(&g);
+        }
+        acc
+    }
+
+    fn block_name(&self, bi: usize) -> Result<&BlockNames> {
+        self.names
+            .get(bi)
+            .ok_or_else(|| anyhow::anyhow!("block {bi} out of range ({} blocks)", self.names.len()))
+    }
+
+    /// All four grams of block `bi`, computed from the current hiddens
+    /// with `model`'s current (possibly already-masked) weights.
+    /// Parallel over sequences; one forward through the block.
+    pub fn block_grams(&mut self, model: &Gpt, bi: usize) -> Result<GramSet> {
+        ensure!(
+            self.stash.is_none(),
+            "block_grams called mid layer-gram sequence (finish the block with advance first)"
+        );
+        let names = self.block_name(bi)?.clone();
+        let partials: Vec<BTreeMap<String, Mat>> = parallel_map(self.hiddens.len(), |i| {
+            let mut x = self.hiddens[i].clone();
+            let mut caps = Captures::new();
+            forward_block(model, &names, &mut x, Some(&mut caps));
+            caps.into_iter()
+                .map(|(k, v)| (k, matmul_at_b(&v, &v)))
+                .collect()
+        });
+        let mut grams: BTreeMap<String, Mat> = BTreeMap::new();
+        for p in partials {
+            for (name, g) in p {
+                match grams.get_mut(&name) {
+                    Some(acc) => acc.add_inplace(&g),
+                    None => {
+                        grams.insert(name, g);
+                    }
+                }
+            }
+        }
+        Ok(GramSet::checkout(bi, grams, self.stats.clone()))
+    }
+
+    /// One gram at a time for the strictly-sequential granularity.
+    /// Must be called in [`BlockSlot::ALL`] order within a block; each
+    /// call uses `model`'s *current* weights, so a layer pruned between
+    /// calls feeds the next gram its masked activations.
+    pub fn layer_gram(&mut self, model: &Gpt, bi: usize, slot: BlockSlot) -> Result<GramSet> {
+        let names = self.block_name(bi)?.clone();
+        let n = self.hiddens.len();
+        let expect_slot = |stash: &Option<Stash>, want: BlockSlot| -> Result<()> {
+            match stash {
+                Some(s) if s.block == bi && s.slot == want => Ok(()),
+                _ => bail!(
+                    "layer_gram({slot:?}) called out of order for block {bi} \
+                     (slots must follow BlockSlot::ALL)"
+                ),
+            }
+        };
+        let (name, xs) = match slot {
+            BlockSlot::Wqkv => {
+                ensure!(
+                    self.stash.is_none(),
+                    "layer_gram(Wqkv) with a pending stash (finish the previous block first)"
+                );
+                let pre = parallel_map(n, |i| {
+                    layernorm(&self.hiddens[i], model.mat(&names.ln1_g), model.mat(&names.ln1_b))
+                });
+                let g = Self::gram_of(&pre);
+                self.stash = Some(Stash {
+                    block: bi,
+                    slot: BlockSlot::Wqkv,
+                    pre,
+                    attn: Vec::new(),
+                    up: Vec::new(),
+                });
+                (names.wqkv.clone(), g)
+            }
+            BlockSlot::Wo => {
+                expect_slot(&self.stash, BlockSlot::Wqkv)?;
+                let stash = self.stash.as_mut().unwrap();
+                let attn = {
+                    let pre = &stash.pre;
+                    let n_heads = self.n_heads;
+                    parallel_map(n, |i| attention(&pre[i], model.mat(&names.wqkv), n_heads))
+                };
+                let g = Self::gram_of(&attn);
+                stash.pre = Vec::new(); // ln1 outputs no longer needed
+                stash.attn = attn;
+                stash.slot = BlockSlot::Wo;
+                (names.wo.clone(), g)
+            }
+            BlockSlot::Wup => {
+                expect_slot(&self.stash, BlockSlot::Wo)?;
+                let stash = self.stash.as_mut().unwrap();
+                // residual after attention: x ← x + attn · woᵀ
+                let x2 = {
+                    let hiddens = &self.hiddens;
+                    let attn = &stash.attn;
+                    parallel_map(n, |i| {
+                        let mut x = hiddens[i].clone();
+                        x.add_inplace(&matmul_a_bt(&attn[i], model.mat(&names.wo)));
+                        x
+                    })
+                };
+                self.hiddens = x2;
+                let pre = {
+                    let hiddens = &self.hiddens;
+                    parallel_map(n, |i| {
+                        layernorm(&hiddens[i], model.mat(&names.ln2_g), model.mat(&names.ln2_b))
+                    })
+                };
+                let g = Self::gram_of(&pre);
+                let stash = self.stash.as_mut().unwrap();
+                stash.attn = Vec::new();
+                stash.pre = pre;
+                stash.slot = BlockSlot::Wup;
+                (names.wup.clone(), g)
+            }
+            BlockSlot::Wdown => {
+                expect_slot(&self.stash, BlockSlot::Wup)?;
+                let stash = self.stash.as_mut().unwrap();
+                let up = {
+                    let pre = &stash.pre;
+                    parallel_map(n, |i| {
+                        let mut u = matmul_a_bt(&pre[i], model.mat(&names.wup));
+                        for v in &mut u.data {
+                            *v = gelu(*v);
+                        }
+                        u
+                    })
+                };
+                let g = Self::gram_of(&up);
+                stash.pre = Vec::new();
+                stash.up = up;
+                stash.slot = BlockSlot::Wdown;
+                (names.wdown.clone(), g)
+            }
+        };
+        let mut grams = BTreeMap::new();
+        grams.insert(name, xs);
+        Ok(GramSet::checkout(bi, grams, self.stats.clone()))
+    }
+
+    /// Re-forward the hiddens through block `bi` with `model`'s current
+    /// (masked) weights, producing the inputs block `bi+1` sees.  After
+    /// a full [`CalibState::layer_gram`] sequence only the final MLP
+    /// residual remains to apply; otherwise the block is recomputed.
+    pub fn advance(&mut self, model: &Gpt, bi: usize) -> Result<()> {
+        let names = self.block_name(bi)?.clone();
+        let n = self.hiddens.len();
+        if let Some(stash) = &self.stash {
+            // validate before consuming: a misuse error must leave the
+            // stash intact, not silently fall back to the full-block
+            // path over half-advanced hiddens
+            ensure!(
+                stash.block == bi,
+                "advance({bi}) with a stash for block {}",
+                stash.block
+            );
+            ensure!(
+                stash.slot == BlockSlot::Wdown,
+                "advance({bi}) mid layer-gram sequence (last slot {:?})",
+                stash.slot
+            );
+            let stash = self.stash.take().expect("checked above");
+            // hiddens already hold the post-attention residual; finish
+            // with x ← x + up · wdownᵀ
+            let next = {
+                let hiddens = &self.hiddens;
+                let up = &stash.up;
+                parallel_map(n, |i| {
+                    let mut x = hiddens[i].clone();
+                    x.add_inplace(&matmul_a_bt(&up[i], model.mat(&names.wdown)));
+                    x
+                })
+            };
+            self.hiddens = next;
+            return Ok(());
+        }
+        let next = {
+            let hiddens = &self.hiddens;
+            parallel_map(n, |i| {
+                let mut x = hiddens[i].clone();
+                forward_block(model, &names, &mut x, None);
+                x
+            })
+        };
+        self.hiddens = next;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::Calibration;
+    use crate::data::TokenBin;
+    use crate::model::testutil::{random_model, tiny_cfg};
+
+    fn setup() -> (Gpt, Vec<Vec<u8>>) {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 11);
+        let bin = TokenBin::from_tokens(crate::data::corpus::generate(5, 4096));
+        let seqs = bin.sample(cfg.seq_len, 5, 3);
+        (model, seqs)
+    }
+
+    #[test]
+    fn streaming_matches_one_shot_on_dense_model() {
+        // with no masks applied between blocks, the streamed grams must
+        // equal the one-shot dense calibration bit-for-bit
+        let (model, seqs) = setup();
+        let oneshot = Calibration::from_sequences(&model, &seqs).unwrap();
+        let mut state = CalibState::new(&model, &seqs).unwrap();
+        for bi in 0..model.cfg.n_layers {
+            let gs = state.block_grams(&model, bi).unwrap();
+            for l in &model.cfg.layers()[4 * bi..4 * bi + 4] {
+                assert_eq!(
+                    gs.gram(&l.name).unwrap().data,
+                    oneshot.gram(&l.name).data,
+                    "{}",
+                    l.name
+                );
+            }
+            drop(gs);
+            state.advance(&model, bi).unwrap();
+        }
+        assert_eq!(state.peak_live_sets(), 1);
+    }
+
+    #[test]
+    fn layer_grams_match_block_grams_on_dense_model() {
+        // without intervening pruning, the strictly-sequential path must
+        // produce the same grams as the whole-block path
+        let (model, seqs) = setup();
+        let mut a = CalibState::new(&model, &seqs).unwrap();
+        let mut b = CalibState::new(&model, &seqs).unwrap();
+        for bi in 0..model.cfg.n_layers {
+            let block = a.block_grams(&model, bi).unwrap();
+            for (slot, l) in BlockSlot::ALL.iter().zip(&model.cfg.layers()[4 * bi..]) {
+                let single = b.layer_gram(&model, bi, *slot).unwrap();
+                assert_eq!(
+                    single.gram(&l.name).unwrap().data,
+                    block.gram(&l.name).unwrap().data,
+                    "{}",
+                    l.name
+                );
+            }
+            drop(block);
+            a.advance(&model, bi).unwrap();
+            b.advance(&model, bi).unwrap();
+            for (x, y) in a.hiddens.iter().zip(&b.hiddens) {
+                assert_eq!(x.data, y.data);
+            }
+        }
+    }
+
+    #[test]
+    fn layer_gram_enforces_slot_order() {
+        let (model, seqs) = setup();
+        let mut state = CalibState::new(&model, &seqs).unwrap();
+        assert!(state.layer_gram(&model, 0, BlockSlot::Wo).is_err());
+        let _g = state.layer_gram(&model, 0, BlockSlot::Wqkv).unwrap();
+        drop(_g);
+        assert!(state.layer_gram(&model, 0, BlockSlot::Wdown).is_err());
+        // and block_grams refuses to run mid-sequence
+        assert!(state.block_grams(&model, 0).is_err());
+    }
+
+    #[test]
+    fn gram_set_tracks_live_bytes_and_sets() {
+        let (model, seqs) = setup();
+        let mut state = CalibState::new(&model, &seqs).unwrap();
+        let d = model.cfg.d_model;
+        let ff = model.cfg.d_ff;
+        let gs = state.block_grams(&model, 0).unwrap();
+        assert_eq!(gs.len(), 4);
+        // qkv/wo/wup grams are d×d, the wdown gram is d_ff×d_ff
+        assert_eq!(gs.bytes(), (d * d * 3 + ff * ff) * 4);
+        assert_eq!(state.peak_live_sets(), 1);
+        assert_eq!(state.peak_gram_bytes(), gs.bytes());
+        drop(gs);
+        state.advance(&model, 0).unwrap();
+        // a second checkout does not raise the peak beyond one set
+        let gs = state.block_grams(&model, 1).unwrap();
+        assert_eq!(state.peak_live_sets(), 1);
+        drop(gs);
+    }
+
+    #[test]
+    fn missing_layer_gram_is_a_named_error() {
+        let (model, seqs) = setup();
+        let mut state = CalibState::new(&model, &seqs).unwrap();
+        let gs = state.block_grams(&model, 0).unwrap();
+        let err = gs.gram("blocks.9.wqkv").unwrap_err().to_string();
+        assert!(err.contains("blocks.9.wqkv"), "{err}");
+        assert!(err.contains("block 0"), "{err}");
+    }
+
+    #[test]
+    fn embed_prefix_rejects_mixed_lengths() {
+        let (model, mut seqs) = setup();
+        seqs[1].pop();
+        let err = EmbedPrefix::new(&model, &seqs).unwrap_err().to_string();
+        assert!(err.contains("mixed-length"), "{err}");
+    }
+
+    #[test]
+    fn policy_parse_and_labels() {
+        assert_eq!(CalibPolicy::parse("off").unwrap(), CalibPolicy::Dense);
+        assert_eq!(CalibPolicy::parse("block").unwrap(), CalibPolicy::PropagateBlock);
+        assert_eq!(CalibPolicy::parse("layer").unwrap(), CalibPolicy::PropagateLayer);
+        assert!(CalibPolicy::parse("sideways").is_err());
+        assert_eq!(CalibPolicy::PropagateLayer.label(), "layer");
+        assert!(!CalibPolicy::Dense.is_propagated());
+        assert!(CalibPolicy::PropagateBlock.is_propagated());
+    }
+
+    #[test]
+    fn advance_with_masked_block_changes_downstream_grams() {
+        let (model, seqs) = setup();
+        // dense reference
+        let mut dense = CalibState::new(&model, &seqs).unwrap();
+        let _ = dense.block_grams(&model, 0).unwrap();
+        dense.advance(&model, 0).unwrap();
+        let dense_g1 = dense.block_grams(&model, 1).unwrap();
+
+        // mask block 0's wup entirely and propagate through it
+        let mut masks = BTreeMap::new();
+        masks.insert(
+            "blocks.0.wup".to_string(),
+            Mat::zeros(model.cfg.d_ff, model.cfg.d_model),
+        );
+        let masked = model.apply_masks(&masks).unwrap();
+        let mut staged = CalibState::new(&model, &seqs).unwrap();
+        let _ = staged.block_grams(&masked, 0).unwrap();
+        staged.advance(&masked, 0).unwrap();
+        let staged_g1 = staged.block_grams(&masked, 1).unwrap();
+
+        let name = "blocks.1.wqkv";
+        let a = dense_g1.gram(name).unwrap();
+        let b = staged_g1.gram(name).unwrap();
+        assert!(a.max_abs_diff(b) > 1e-6, "propagation must shift the gram");
+    }
+}

@@ -25,7 +25,7 @@ use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::calib::Calibration;
+use crate::calib::{CalibPolicy, CalibState, Calibration, EmbedPrefix};
 use crate::config::{self, Backend, Workspace};
 use crate::data::TokenBin;
 use crate::eval::{perplexity_native, perplexity_pjrt, zero_shot, ZeroShotReport};
@@ -36,7 +36,7 @@ use crate::runtime::PjrtRuntime;
 use crate::tensor::Mat;
 use crate::util::json::{self, Json};
 
-use super::{per_layer_patterns, run_layers, PruneResult};
+use super::{per_layer_patterns, run_blocks, run_layers, PruneResult};
 
 // ---------------------------------------------------------------------------
 // Allocation
@@ -74,11 +74,21 @@ impl Allocation {
     /// Resolve to one pattern per pruned linear, in layer order.  This
     /// is what makes non-uniform allocation backend-agnostic: every
     /// backend consumes the same resolved pattern list.
-    pub fn resolve(&self, model: &Gpt, calib: &Calibration) -> Result<Vec<SparsityPattern>> {
+    ///
+    /// `calib` is only consulted by the OWL allocation; staged
+    /// (propagated) runs pass `None` — their grams materialize block by
+    /// block, so model-wide OWL statistics are unavailable.
+    pub fn resolve(&self, model: &Gpt, calib: Option<&Calibration>) -> Result<Vec<SparsityPattern>> {
         match self {
             Allocation::Uniform(p) => Ok(vec![p.clone(); model.cfg.layers().len()]),
             Allocation::PerLayer(map) => per_layer_patterns(model, map),
             Allocation::Owl { target, lambda, max_shift } => {
+                let calib = calib.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "OWL allocation needs model-wide dense calibration grams; \
+                         use --propagate off (or a per-layer allocation) with staged calibration"
+                    )
+                })?;
                 let cfg = OwlConfig { lambda: *lambda, max_shift: *max_shift };
                 let map = owl_sparsities(model, calib, *target, &cfg)?;
                 per_layer_patterns(model, &map)
@@ -171,6 +181,12 @@ pub struct JobSpec {
     pub backend: Backend,
     pub calib_samples: usize,
     pub calib_seed: u64,
+    /// How calibration grams are computed: one-shot over the dense
+    /// model ([`CalibPolicy::Dense`], the paper's protocol and the
+    /// default) or staged block-sequential propagation
+    /// (`--propagate block|layer`).  Absent in older saved specs, which
+    /// therefore replay bit-identically on the dense path.
+    pub calib_policy: CalibPolicy,
     /// Record an optimization trace point every N iterations (SparseFW
     /// only; 0 = leave the method's own `trace_every` untouched).
     pub trace_every: usize,
@@ -187,6 +203,7 @@ impl Default for JobSpec {
             backend: Backend::Native,
             calib_samples: 128,
             calib_seed: 7,
+            calib_policy: CalibPolicy::Dense,
             trace_every: 0,
             eval: None,
         }
@@ -197,13 +214,18 @@ impl JobSpec {
     /// One-line summary for logs.
     pub fn label(&self) -> String {
         format!(
-            "{} · {} · {} · {} backend · {} samples (seed {})",
+            "{} · {} · {} · {} backend · {} samples (seed {}){}",
             self.model,
             self.method.label(),
             self.allocation.label(),
             self.backend.label(),
             self.calib_samples,
             self.calib_seed,
+            if self.calib_policy.is_propagated() {
+                format!(" · propagate {}", self.calib_policy.label())
+            } else {
+                String::new()
+            },
         )
     }
 
@@ -228,6 +250,7 @@ impl JobSpec {
             ("backend", self.backend.label().into()),
             ("calib_samples", self.calib_samples.into()),
             ("calib_seed", (self.calib_seed as usize).into()),
+            ("calib_policy", self.calib_policy.label().into()),
             ("trace_every", self.trace_every.into()),
         ];
         if let Some(e) = &self.eval {
@@ -260,6 +283,11 @@ impl JobSpec {
             backend: Backend::parse(v.at(&["backend"]).as_str().unwrap_or("native"))?,
             calib_samples: v.at(&["calib_samples"]).as_usize().unwrap_or(128),
             calib_seed: v.at(&["calib_seed"]).as_f64().unwrap_or(7.0) as u64,
+            // absent in pre-staged specs → Dense, so they replay
+            // bit-identically through the original pipeline
+            calib_policy: CalibPolicy::parse(
+                v.at(&["calib_policy"]).as_str().unwrap_or("off"),
+            )?,
             trace_every: v.at(&["trace_every"]).as_usize().unwrap_or(0),
             eval,
         })
@@ -352,6 +380,34 @@ fn run_zero_shot(model: &Gpt, spec: &EvalSpec) -> Result<ZeroShotReport> {
 
 type ProgressBox = Box<dyn Fn(&LayerEvent) + Send + Sync>;
 
+/// `(model, calib_samples, calib_seed)` — the identity of a calibration
+/// input, keying both session memos.
+type CalibKey = (String, usize, u64);
+
+/// Bump `key`'s last-use tick in an LRU memo; true on hit.
+fn lru_touch<V>(map: &mut BTreeMap<CalibKey, (u64, V)>, key: &CalibKey, tick: u64) -> bool {
+    match map.get_mut(key) {
+        Some(entry) => {
+            entry.0 = tick;
+            true
+        }
+        None => false,
+    }
+}
+
+/// Drop least-recently-used entries until at most `keep` remain.
+fn lru_evict<V>(map: &mut BTreeMap<CalibKey, (u64, V)>, keep: usize, what: &str) {
+    while map.len() > keep {
+        let lru = map
+            .iter()
+            .min_by_key(|(_, (tick, _))| *tick)
+            .map(|(k, _)| k.clone())
+            .expect("non-empty cache");
+        crate::debuglog!("evicting {what} ({}, {} samples, seed {})", lru.0, lru.1, lru.2);
+        map.remove(&lru);
+    }
+}
+
 /// Default bound on the session's calibration memo (entries, not bytes).
 /// Grams are the largest per-job state a session retains, and a
 /// long-lived server sees unboundedly many `(model, samples, seed)`
@@ -371,7 +427,11 @@ pub struct PruneSession {
     test: Option<TokenBin>,
     models: BTreeMap<String, Gpt>,
     /// LRU memo of calibration grams: key → (last-use tick, grams).
-    calibs: BTreeMap<(String, usize, u64), (u64, Calibration)>,
+    calibs: BTreeMap<CalibKey, (u64, Calibration)>,
+    /// LRU memo of staged-calibration embed prefixes.  Propagated grams
+    /// are method-dependent (they see the masks chosen so far), so only
+    /// the token-sample/embed prefix is memoizable.
+    embeds: BTreeMap<CalibKey, (u64, EmbedPrefix)>,
     calib_tick: u64,
     calib_cap: usize,
     runtime: Option<PjrtRuntime>,
@@ -388,6 +448,7 @@ impl PruneSession {
             test: None,
             models: BTreeMap::new(),
             calibs: BTreeMap::new(),
+            embeds: BTreeMap::new(),
             calib_tick: 0,
             calib_cap: DEFAULT_CALIB_CACHE_CAP,
             runtime: None,
@@ -417,6 +478,7 @@ impl PruneSession {
             test: Some(test),
             models,
             calibs: BTreeMap::new(),
+            embeds: BTreeMap::new(),
             calib_tick: 0,
             calib_cap: DEFAULT_CALIB_CACHE_CAP,
             runtime: None,
@@ -463,6 +525,7 @@ impl PruneSession {
     pub fn set_calib_cache_capacity(&mut self, cap: usize) {
         self.calib_cap = cap.max(1);
         self.evict_calibs(self.calib_cap);
+        self.evict_embeds(self.calib_cap);
     }
 
     pub fn calib_cache_capacity(&self) -> usize {
@@ -476,21 +539,13 @@ impl PruneSession {
 
     /// Drop least-recently-used calibrations until at most `keep` remain.
     fn evict_calibs(&mut self, keep: usize) {
-        while self.calibs.len() > keep {
-            let lru = self
-                .calibs
-                .iter()
-                .min_by_key(|(_, (tick, _))| *tick)
-                .map(|(k, _)| k.clone())
-                .expect("non-empty cache");
-            crate::debuglog!(
-                "evicting calibration ({}, {} samples, seed {})",
-                lru.0,
-                lru.1,
-                lru.2
-            );
-            self.calibs.remove(&lru);
-        }
+        lru_evict(&mut self.calibs, keep, "calibration");
+    }
+
+    /// Drop least-recently-used embed prefixes until at most `keep`
+    /// remain (the staged twin of [`PruneSession::evict_calibs`]).
+    fn evict_embeds(&mut self, keep: usize) {
+        lru_evict(&mut self.embeds, keep, "embed prefix");
     }
 
     /// Load (or return the cached) model.
@@ -562,11 +617,10 @@ impl PruneSession {
     /// Collect (or return the memoized) calibration grams.  The memo is
     /// LRU-bounded by [`PruneSession::set_calib_cache_capacity`].
     pub fn calibration(&mut self, name: &str, samples: usize, seed: u64) -> Result<&Calibration> {
-        let key = (name.to_string(), samples, seed);
+        let key: CalibKey = (name.to_string(), samples, seed);
         self.calib_tick += 1;
         let tick = self.calib_tick;
-        if let Some(entry) = self.calibs.get_mut(&key) {
-            entry.0 = tick;
+        if lru_touch(&mut self.calibs, &key, tick) {
             self.calib_hits += 1;
         } else {
             self.calib_misses += 1;
@@ -584,6 +638,30 @@ impl PruneSession {
             self.calibs.insert(key.clone(), (tick, calib));
         }
         Ok(&self.calibs[&key].1)
+    }
+
+    /// Sample + embed the staged-calibration prefix (or return the
+    /// memoized copy).  Shares the LRU bound and hit/miss counters with
+    /// the gram memo; the returned prefix is cloned out because a
+    /// staged run consumes its hiddens.
+    pub fn embed_prefix(&mut self, name: &str, samples: usize, seed: u64) -> Result<EmbedPrefix> {
+        let key: CalibKey = (name.to_string(), samples, seed);
+        self.calib_tick += 1;
+        let tick = self.calib_tick;
+        if lru_touch(&mut self.embeds, &key, tick) {
+            self.calib_hits += 1;
+        } else {
+            self.calib_misses += 1;
+            self.model(name)?;
+            self.ensure_train()?;
+            let model = &self.models[name];
+            let train = self.train.as_ref().unwrap();
+            let seqs = train.sample(model.cfg.seq_len, samples, seed);
+            let prefix = EmbedPrefix::new(model, &seqs)?;
+            self.evict_embeds(self.calib_cap.saturating_sub(1));
+            self.embeds.insert(key.clone(), (tick, prefix));
+        }
+        Ok(self.embeds[&key].1.clone())
     }
 
     /// Native perplexity + zero-shot suite of any (masked) model.
@@ -614,6 +692,11 @@ impl PruneSession {
     /// layer on the requested backend, and (optionally) evaluate the
     /// masked model.  Repeated calls reuse cached models, calibrations,
     /// and compiled PJRT executables.
+    ///
+    /// Dispatch follows the spec's [`CalibPolicy`]: the dense policy
+    /// runs the one-shot layer-parallel pipeline ([`run_layers`],
+    /// bit-identical to the pre-staged behaviour); the propagated
+    /// policies run the staged block-sequential driver ([`run_blocks`]).
     pub fn execute(&mut self, spec: &JobSpec) -> Result<JobResult> {
         ensure!(spec.calib_samples > 0, "calib_samples must be positive");
         self.model(&spec.model)?;
@@ -622,15 +705,34 @@ impl PruneSession {
         if spec.backend != Backend::Native {
             self.ensure_runtime()?;
         }
-        self.calibration(&spec.model, spec.calib_samples, spec.calib_seed)?;
-
         let method = spec.effective_method();
         crate::debuglog!("executing job: {}", spec.label());
-        let prune = {
+        let prune = if spec.calib_policy.is_propagated() {
+            // resolve the allocation first: an unresolvable one (OWL)
+            // must fail before any calibration work is paid for or a
+            // prefix is inserted into the embed memo
+            let patterns = spec.allocation.resolve(&self.models[&spec.model], None)?;
+            let prefix = self.embed_prefix(&spec.model, spec.calib_samples, spec.calib_seed)?;
+            let model = &self.models[&spec.model];
+            let state = CalibState::from_prefix(model, prefix)?;
+            let runtime = self.runtime.as_ref();
+            let progress = self.progress.as_deref();
+            run_blocks(
+                model,
+                state,
+                &method,
+                &patterns,
+                spec.calib_policy,
+                spec.backend,
+                runtime,
+                progress,
+            )?
+        } else {
+            self.calibration(&spec.model, spec.calib_samples, spec.calib_seed)?;
             let model = &self.models[&spec.model];
             let calib =
                 &self.calibs[&(spec.model.clone(), spec.calib_samples, spec.calib_seed)].1;
-            let patterns = spec.allocation.resolve(model, calib)?;
+            let patterns = spec.allocation.resolve(model, Some(calib))?;
             let runtime = self.runtime.as_ref();
             let progress = self.progress.as_deref();
             run_layers(model, calib, &method, &patterns, spec.backend, runtime, progress)?
@@ -681,6 +783,7 @@ mod tests {
             backend: Backend::Native,
             calib_samples: 6,
             calib_seed: 2,
+            calib_policy: CalibPolicy::Dense,
             trace_every: 0,
             eval: None,
         }
@@ -705,6 +808,103 @@ mod tests {
         for (k, m) in &a.prune.masks {
             assert_eq!(m.data, b.prune.masks[k].data, "{k}");
         }
+    }
+
+    #[test]
+    fn calib_policy_json_roundtrip_and_missing_field_default() {
+        let spec = JobSpec { calib_policy: CalibPolicy::PropagateBlock, ..base_spec() };
+        let back = JobSpec::from_json(&json::parse(&json::to_string(&spec.to_json())).unwrap())
+            .unwrap();
+        assert_eq!(back.calib_policy, CalibPolicy::PropagateBlock);
+        assert!(back.label().contains("propagate block"), "{}", back.label());
+        // pre-staged specs carry no calib_policy field → Dense replay
+        let legacy = json::parse(r#"{"model": "test", "method": {"kind": "wanda"}}"#).unwrap();
+        let spec = JobSpec::from_json(&legacy).unwrap();
+        assert_eq!(spec.calib_policy, CalibPolicy::Dense);
+        assert!(JobSpec::from_json(
+            &json::parse(r#"{"calib_policy": "diagonal"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn staged_execute_memoizes_embed_prefix_and_streams_grams() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let mut s = session();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        s.on_progress(move |e| {
+            assert_eq!(e.total, 8);
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        for policy in [CalibPolicy::PropagateBlock, CalibPolicy::PropagateLayer] {
+            let spec = JobSpec {
+                method: PruneMethod::Wanda,
+                calib_policy: policy,
+                ..base_spec()
+            };
+            let res = s.execute(&spec).unwrap();
+            assert_eq!(res.prune.masks.len(), 8);
+            let pat = SparsityPattern::PerRow { sparsity: 0.5 };
+            for m in res.prune.masks.values() {
+                assert!(mask_satisfies(m, &pat));
+            }
+            let staged = res.prune.staged.expect("staged stats for propagated runs");
+            assert_eq!(staged.policy, policy);
+            assert_eq!(staged.blocks, 2);
+            // the O(block) claim: never more than one gram set alive,
+            // and peak bytes strictly below the one-shot footprint
+            assert_eq!(staged.peak_live_gram_sets, 1);
+            assert!(
+                staged.peak_gram_bytes < staged.total_gram_bytes,
+                "{} !< {}",
+                staged.peak_gram_bytes,
+                staged.total_gram_bytes
+            );
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 16, "8 events per staged run");
+        // both runs share one (model, samples, seed) embed prefix
+        assert_eq!(s.calib_stats(), (1, 1));
+        // dense grams were never collected for these jobs
+        assert_eq!(s.calib_cache_len(), 0);
+    }
+
+    #[test]
+    fn staged_block_zero_matches_dense_calibration() {
+        // block 0's inputs don't depend on pruning, so block-granular
+        // propagation must pick exactly the dense masks there
+        let mut s = session();
+        let dense = s
+            .execute(&JobSpec { method: PruneMethod::Wanda, ..base_spec() })
+            .unwrap();
+        let staged = s
+            .execute(&JobSpec {
+                method: PruneMethod::Wanda,
+                calib_policy: CalibPolicy::PropagateBlock,
+                ..base_spec()
+            })
+            .unwrap();
+        for suffix in ["wqkv", "wo", "wup", "wdown"] {
+            let name = format!("blocks.0.{suffix}");
+            assert_eq!(dense.prune.masks[&name].data, staged.prune.masks[&name].data, "{name}");
+            let (a, b) = (dense.prune.layer_objs[&name], staged.prune.layer_objs[&name]);
+            assert!((a - b).abs() <= 1e-9 * (1.0 + a.abs()), "{name}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn owl_allocation_requires_dense_policy() {
+        let mut s = session();
+        let spec = JobSpec {
+            method: PruneMethod::Wanda,
+            allocation: Allocation::owl(0.6),
+            calib_policy: CalibPolicy::PropagateBlock,
+            ..base_spec()
+        };
+        let err = format!("{:#}", s.execute(&spec).unwrap_err());
+        assert!(err.contains("OWL"), "{err}");
+        assert!(err.contains("propagate"), "{err}");
     }
 
     #[test]

@@ -8,12 +8,21 @@
 //! legacy [`PrunePipeline`] entry points are thin deprecated shims over
 //! the same unified dispatch.
 //!
-//! Scheduling: layers are independent given the calibration grams (the
-//! paper prunes them "sequentially and independently"), so the native
-//! backend fans layers out across a work-stealing thread pool.  PJRT
-//! backends run layers sequentially (the PJRT client is `Rc`-based) but
-//! amortize cost through compiled-executable caching and the fused
-//! chunk artifact.
+//! Scheduling: under the one-shot dense calibration ([`run_layers`]),
+//! layers are independent given the grams (the paper prunes them
+//! "sequentially and independently"), so the native backend fans layers
+//! out across a work-stealing thread pool.  PJRT backends run layers
+//! sequentially (the PJRT client is `Rc`-based) but amortize cost
+//! through compiled-executable caching and the fused chunk artifact.
+//!
+//! The staged block-sequential driver ([`run_blocks`],
+//! `--propagate block|layer`) walks blocks in model order instead:
+//! per block it streams grams from the *pruned-so-far* hidden states
+//! ([`crate::calib::CalibState`]), prunes the block's four layers
+//! (still 4-way parallel at `block` granularity), writes the masks into
+//! a working model, and re-forwards the hiddens through the masked
+//! block — so every downstream layer is calibrated against the inputs
+//! it will actually see, at O(block) peak gram memory.
 
 pub mod job;
 pub mod schedule;
@@ -26,9 +35,9 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
 
-use crate::calib::Calibration;
+use crate::calib::{BlockSlot, CalibPolicy, CalibState, Calibration};
 use crate::config::Backend;
 use crate::model::{Gpt, LayerInfo};
 use crate::pruner::{
@@ -37,6 +46,21 @@ use crate::pruner::{
 use crate::runtime::{PjrtKernels, PjrtRuntime};
 use crate::tensor::Mat;
 use crate::util::pool::parallel_map;
+
+/// Calibration-memory accounting of one staged ([`run_blocks`]) run.
+#[derive(Clone, Copy, Debug)]
+pub struct StagedStats {
+    pub policy: CalibPolicy,
+    /// Transformer blocks walked.
+    pub blocks: usize,
+    /// Peak bytes of gram matrices simultaneously materialized.
+    pub peak_gram_bytes: usize,
+    /// Bytes the one-shot dense path would hold at once (all layers).
+    pub total_gram_bytes: usize,
+    /// Max gram sets simultaneously checked out of the [`CalibState`]
+    /// (1 ⇔ grams were streamed strictly one set at a time).
+    pub peak_live_gram_sets: usize,
+}
 
 /// Result of pruning every target layer of a model.
 pub struct PruneResult {
@@ -53,6 +77,9 @@ pub struct PruneResult {
     /// Σ FW iterations executed across layers (0 for greedy methods) —
     /// with `wall_seconds` this gives the server's iterations/sec.
     pub fw_iters: usize,
+    /// Calibration-memory stats when the run used staged propagation
+    /// ([`run_blocks`]); `None` for one-shot dense calibration.
+    pub staged: Option<StagedStats>,
 }
 
 impl PruneResult {
@@ -128,7 +155,7 @@ pub(crate) fn run_layers(
                 let i = order[k];
                 let l = &layers[i];
                 let w = model.mat(&l.name);
-                let g = calib.gram(&l.name);
+                let g = calib.try_gram(&l.name)?;
                 let out = method.prune_layer(&NativeKernels, w, g, &patterns[i])?;
                 emit(l, &out);
                 Ok((l.clone(), out))
@@ -143,7 +170,7 @@ pub(crate) fn run_layers(
             let mut outputs = Vec::with_capacity(total);
             for (i, l) in layers.iter().enumerate() {
                 let w = model.mat(&l.name);
-                let g = calib.gram(&l.name);
+                let g = calib.try_gram(&l.name)?;
                 crate::debuglog!("pjrt-pruning layer {} ({}x{})", l.name, l.d_out, l.d_in);
                 // abort at the first failure: the remaining sequential
                 // PJRT work would be discarded anyway
@@ -155,6 +182,163 @@ pub(crate) fn run_layers(
         }
     };
     collect_outputs(outputs, t0)
+}
+
+/// Write one pruned layer's effect into the staged working model: the
+/// mask multiplied into the weights, or (for reconstruction methods)
+/// the replacement weights verbatim — what downstream blocks' grams
+/// must see.
+fn apply_output(work: &mut Gpt, l: &LayerInfo, out: &LayerPruneOutput) -> Result<()> {
+    let w = work
+        .params
+        .get_mut(&l.name)
+        .with_context(|| format!("staged working model missing layer {}", l.name))?;
+    match &out.new_weights {
+        Some(nw) => {
+            ensure!(
+                nw.rows == w.rows && nw.cols == w.cols,
+                "reconstructed weights shape mismatch for {}",
+                l.name
+            );
+            *w = nw.clone();
+        }
+        None => {
+            ensure!(
+                out.mask.rows == w.rows && out.mask.cols == w.cols,
+                "mask shape mismatch for {}",
+                l.name
+            );
+            w.hadamard_inplace(&out.mask);
+        }
+    }
+    Ok(())
+}
+
+/// Staged block-sequential dispatch (`--propagate block|layer`): walk
+/// blocks in model order, per block computing grams from the current
+/// (pruned-so-far) hiddens via `state`, pruning the block's four layers
+/// against the *original* weights, writing masks into a working model,
+/// and re-forwarding the hiddens through the masked block.
+///
+/// `block` granularity prunes the four layers in parallel on the native
+/// backend; `layer` granularity is strictly sequential and recomputes
+/// the `wo`/`wdown` grams after `wqkv`/`wup` are pruned.  Grams are
+/// streamed one set at a time ([`StagedStats::peak_live_gram_sets`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_blocks(
+    model: &Gpt,
+    mut state: CalibState,
+    method: &PruneMethod,
+    patterns: &[SparsityPattern],
+    policy: CalibPolicy,
+    backend: Backend,
+    runtime: Option<&PjrtRuntime>,
+    progress: Option<&(dyn Fn(&LayerEvent) + Send + Sync)>,
+) -> Result<PruneResult> {
+    let t0 = Instant::now();
+    let layers = model.cfg.layers();
+    ensure!(
+        layers.len() == patterns.len(),
+        "pattern count {} != layer count {}",
+        patterns.len(),
+        layers.len()
+    );
+    ensure!(policy.is_propagated(), "run_blocks requires a propagated CalibPolicy");
+    let total = layers.len();
+    let completed = AtomicUsize::new(0);
+    let emit = |l: &LayerInfo, out: &LayerPruneOutput| {
+        if let Some(cb) = progress {
+            let index = completed.fetch_add(1, Ordering::Relaxed);
+            cb(&LayerEvent { layer: l.name.clone(), index, total, obj: out.obj });
+        }
+    };
+
+    // PJRT backends prune sequentially through the compiled kernels;
+    // grams still come from the native staged forward.
+    let pjrt_kernels = match backend {
+        Backend::Native => None,
+        Backend::Pjrt | Backend::PjrtChunk => {
+            let rt = runtime.ok_or_else(|| {
+                anyhow::anyhow!("PJRT backend requires a runtime (open a workspace with AOT artifacts)")
+            })?;
+            let mut kernels = PjrtKernels::new(rt);
+            kernels.use_chunk = backend == Backend::PjrtChunk;
+            Some(kernels)
+        }
+    };
+
+    // pruned-so-far weights: grams and propagation read from here,
+    // while each layer is pruned against its original dense weights
+    let mut work = model.clone();
+    let mut outputs: Vec<(LayerInfo, LayerPruneOutput)> = Vec::with_capacity(total);
+
+    for bi in 0..model.cfg.n_layers {
+        let block_layers = &layers[4 * bi..4 * bi + 4];
+        match policy {
+            CalibPolicy::Dense => unreachable!("checked above"),
+            CalibPolicy::PropagateBlock => {
+                let grams = state.block_grams(&work, bi)?;
+                let outs: Vec<Result<LayerPruneOutput>> = match &pjrt_kernels {
+                    // intra-block parallelism: the four layers share the
+                    // same inputs, so they stay independent given grams
+                    None => parallel_map(4, |j| {
+                        let l = &block_layers[j];
+                        let g = grams.gram(&l.name)?;
+                        method.prune_layer(&NativeKernels, model.mat(&l.name), g, &patterns[4 * bi + j])
+                    }),
+                    Some(kernels) => block_layers
+                        .iter()
+                        .enumerate()
+                        .map(|(j, l)| {
+                            let g = grams.gram(&l.name)?;
+                            method.prune_layer(kernels, model.mat(&l.name), g, &patterns[4 * bi + j])
+                        })
+                        .collect(),
+                };
+                drop(grams);
+                for (j, out) in outs.into_iter().enumerate() {
+                    let l = &block_layers[j];
+                    let out = out?;
+                    emit(l, &out);
+                    apply_output(&mut work, l, &out)?;
+                    outputs.push((l.clone(), out));
+                }
+            }
+            CalibPolicy::PropagateLayer => {
+                for (j, slot) in BlockSlot::ALL.iter().enumerate() {
+                    let l = &block_layers[j];
+                    let grams = state.layer_gram(&work, bi, *slot)?;
+                    let g = grams.gram(&l.name)?;
+                    let out = match &pjrt_kernels {
+                        None => method.prune_layer(&NativeKernels, model.mat(&l.name), g, &patterns[4 * bi + j])?,
+                        Some(kernels) => {
+                            method.prune_layer(kernels, model.mat(&l.name), g, &patterns[4 * bi + j])?
+                        }
+                    };
+                    drop(grams);
+                    emit(l, &out);
+                    apply_output(&mut work, l, &out)?;
+                    outputs.push((l.clone(), out));
+                }
+            }
+        }
+        // the masked block produces the inputs block bi+1 actually
+        // sees; after the last block there is no consumer, so skip the
+        // (full re-forward) advance
+        if bi + 1 < model.cfg.n_layers {
+            state.advance(&work, bi)?;
+        }
+    }
+
+    let mut result = collect_outputs(outputs.into_iter().map(Ok).collect(), t0)?;
+    result.staged = Some(StagedStats {
+        policy,
+        blocks: model.cfg.n_layers,
+        peak_gram_bytes: state.peak_gram_bytes(),
+        total_gram_bytes: layers.iter().map(|l| l.d_in * l.d_in * 4).sum(),
+        peak_live_gram_sets: state.peak_live_sets(),
+    });
+    Ok(result)
 }
 
 /// Expand a per-layer sparsity map into per-row patterns in layer order.
@@ -187,6 +371,7 @@ fn collect_outputs(
         traces: BTreeMap::new(),
         wall_seconds: 0.0,
         fw_iters: 0,
+        staged: None,
     };
     for out in outputs {
         let (l, o) = out?;

@@ -33,6 +33,35 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! ## Calibration pipelines
+//!
+//! Two interchangeable calibration pipelines feed the per-layer
+//! objective `‖WX − (W⊙M)X‖²` ([`calib::CalibPolicy`], `--propagate`):
+//!
+//! * **One-shot dense** (`--propagate off`, the default and the paper's
+//!   protocol): one forward pass over the dense model collects all
+//!   `4·n_layers` grams at once ([`calib::Calibration`]); layers then
+//!   prune independently and layer-parallel ([`coordinator`]'s
+//!   `run_layers`).  O(model) calibration memory.
+//! * **Staged block-sequential** (`--propagate block|layer`): the
+//!   forward pass is a resumable stepper ([`model::forward::forward_embed`]
+//!   → [`model::forward::forward_block`] → [`model::forward::forward_head`])
+//!   driven by a streaming [`calib::CalibState`]:
+//!
+//!   ```text
+//!   embed ─▶ │ grams(b) ─▶ prune block b ─▶ re-forward masked block b │ ─▶ b+1 … ─▶ head
+//!            └─────────────── one block's grams live at a time ───────────────┘
+//!   ```
+//!
+//!   Each block's grams are computed from the *pruned-so-far* hidden
+//!   states (SparseGPT-style pruned-activation propagation, so
+//!   compounding error is priced into every layer's objective), and
+//!   peak calibration memory drops from O(model) to O(block) —
+//!   `block` keeps the 4-way intra-block layer parallelism, `layer`
+//!   additionally recomputes the `wo`/`wdown` grams after `wqkv`/`wup`
+//!   are pruned.  Sessions memoize only the method-independent
+//!   token-sample/embed prefix ([`calib::EmbedPrefix`]).
+//!
 //! The native SparseFW hot loop has two interchangeable engines
 //! ([`pruner::FwEngine`], `--fw-engine`): the default **incremental**
 //! sparse-vertex engine ([`pruner::fw_engine`]) maintains
@@ -79,7 +108,7 @@ pub mod tensor;
 pub mod util;
 
 pub mod prelude {
-    pub use crate::calib::Calibration;
+    pub use crate::calib::{CalibPolicy, CalibState, Calibration};
     pub use crate::config::{Backend, Workspace};
     pub use crate::coordinator::{
         Allocation, EvalSpec, JobResult, JobSpec, PrunePipeline, PruneSession,

@@ -23,6 +23,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use sparsefw::calib::CalibPolicy;
 use sparsefw::config::cli::{parse_method, parse_pattern, Args};
 use sparsefw::config::{Backend, Workspace};
 use sparsefw::coordinator::job::DEFAULT_CALIB_CACHE_CAP;
@@ -45,6 +46,7 @@ USAGE: sparsefw <subcommand> [flags]
              [--iters N --alpha A --warmstart wanda|ria|magnitude]
              [--fw-engine incremental|dense] [--fw-refresh N]
              [--samples N --seed S --backend native|pjrt|pjrt-chunk]
+             [--propagate off|block|layer]
              [--spec job.json] [--save-spec job.json]
              [--out masks.safetensors] [--eval]
   eval       --model M [--masks masks.safetensors] [--pjrt]
@@ -74,6 +76,23 @@ O(d_out*d_in^2) matmul — with row-block intra-layer parallelism and a
 periodic exact refresh every --fw-refresh iterations to bound f32
 drift.  `dense` is the reference per-iteration matmul, kept one flag
 away for A/B runs (BENCH_fw.json tracks both).
+
+--propagate selects the calibration pipeline.  `off` (default) is the
+paper's protocol: one forward over the dense model, all 4*n_layers
+grams held at once — O(model) calibration memory.  `block` and `layer`
+run the staged block-sequential pipeline instead: grams stream one
+block at a time from the hiddens of the pruned-so-far model, so
+compounding error is priced into every layer's objective and peak
+calibration memory is O(block):
+
+    embed --> [ grams(b) -> prune block b -> re-forward masked b ] --> b+1
+              `block`: the 4 layers prune in parallel off shared grams
+              `layer`: strictly sequential; wo/wdown grams recomputed
+                       after wqkv/wup are pruned
+
+--propagate off is bit-identical to the pre-staged pipeline
+(regression-tested), and saved specs without a calib_policy field
+replay on it unchanged.
 
 `serve` runs a long-lived job server over the workspace: POST /jobs
 takes a JobSpec, workers execute jobs off a bounded priority queue
@@ -217,6 +236,9 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         if args.get("seed").is_some() {
             spec.calib_seed = args.get_u64("seed", spec.calib_seed)?;
         }
+        if let Some(p) = args.get("propagate") {
+            spec.calib_policy = CalibPolicy::parse(p)?;
+        }
         if args.has("eval") && spec.eval.is_none() {
             spec.eval = Some(EvalSpec::default());
         }
@@ -237,6 +259,7 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         backend: Backend::parse(args.get("backend").unwrap_or("native"))?,
         calib_samples: args.get_usize("samples", 128)?,
         calib_seed: args.get_u64("seed", 7)?,
+        calib_policy: CalibPolicy::parse(args.get("propagate").unwrap_or("off"))?,
         trace_every: 0,
         eval: if args.has("eval") { Some(eval_spec(args)?) } else { None },
     })

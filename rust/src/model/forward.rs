@@ -1,6 +1,15 @@
 //! Native transformer forward pass (f32), numerically matching
 //! `python/compile/model.py`.
 //!
+//! The pass is a *resumable stepper*: [`forward_embed`] produces the
+//! initial hidden states, [`forward_block`] advances them through one
+//! transformer block (optionally capturing the four pruned-linear
+//! inputs), and [`forward_head`] applies the final layernorm + weight-
+//! tied head.  [`forward`] is the historical one-shot wrapper over the
+//! three stages; the staged block-sequential calibration pipeline
+//! ([`crate::calib::CalibState`]) drives the stages directly so hidden
+//! states can be re-forwarded through already-masked blocks.
+//!
 //! Used for (a) calibration-activation capture — the X matrices behind
 //! `G = XXᵀ` — and (b) evaluation when the PJRT path is not selected.
 //! An integration test checks logits against the AOT `model_fwd`
@@ -10,7 +19,7 @@ use std::collections::BTreeMap;
 
 use crate::tensor::{matmul_a_bt, Mat};
 
-use super::Gpt;
+use super::{Gpt, GptConfig};
 
 /// Per-layer linear inputs captured during a forward pass, keyed by the
 /// pruned-layer param name; each is (L, d_in) for one sequence.
@@ -23,7 +32,48 @@ pub struct ForwardOutput {
     pub captures: Option<Captures>,
 }
 
-fn layernorm(x: &Mat, g: &Mat, b: &Mat) -> Mat {
+/// Precomputed parameter names of one transformer block.
+///
+/// The block loop used to re-`format!` all eight param names on every
+/// call (per block, per sequence); callers build these once and reuse
+/// them across forwards.
+#[derive(Clone, Debug)]
+pub struct BlockNames {
+    /// 0-based block index.
+    pub block: usize,
+    pub ln1_g: String,
+    pub ln1_b: String,
+    pub wqkv: String,
+    pub wo: String,
+    pub ln2_g: String,
+    pub ln2_b: String,
+    pub wup: String,
+    pub wdown: String,
+}
+
+impl BlockNames {
+    pub fn new(block: usize) -> Self {
+        let p = format!("blocks.{block}.");
+        Self {
+            block,
+            ln1_g: format!("{p}ln1_g"),
+            ln1_b: format!("{p}ln1_b"),
+            wqkv: format!("{p}wqkv"),
+            wo: format!("{p}wo"),
+            ln2_g: format!("{p}ln2_g"),
+            ln2_b: format!("{p}ln2_b"),
+            wup: format!("{p}wup"),
+            wdown: format!("{p}wdown"),
+        }
+    }
+
+    /// Names for every block of `cfg`, in block order.
+    pub fn for_model(cfg: &GptConfig) -> Vec<BlockNames> {
+        (0..cfg.n_layers).map(Self::new).collect()
+    }
+}
+
+pub(crate) fn layernorm(x: &Mat, g: &Mat, b: &Mat) -> Mat {
     let eps = 1e-5f32;
     let mut out = Mat::zeros(x.rows, x.cols);
     for i in 0..x.rows {
@@ -60,17 +110,19 @@ fn softmax_row(row: &mut [f32]) {
 }
 
 /// Causal multi-head self-attention for one sequence; `h` is (L, d).
-fn attention(h: &Mat, wqkv: &Mat, n_heads: usize) -> Mat {
+/// One (L×L) scores buffer is reused across heads — every entry of a
+/// row is overwritten before the softmax, so reuse is exact.
+pub(crate) fn attention(h: &Mat, wqkv: &Mat, n_heads: usize) -> Mat {
     let (l, d) = (h.rows, h.cols);
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let qkv = matmul_a_bt(h, wqkv); // (L, 3d)
 
     let mut out = Mat::zeros(l, d);
+    let mut scores = Mat::zeros(l, l);
     for head in 0..n_heads {
         let (qoff, koff, voff) = (head * hd, d + head * hd, 2 * d + head * hd);
         // scores (L, L) lower-triangular
-        let mut scores = Mat::zeros(l, l);
         for i in 0..l {
             let qrow = &qkv.row(i)[qoff..qoff + hd];
             let srow = scores.row_mut(i);
@@ -99,9 +151,9 @@ fn attention(h: &Mat, wqkv: &Mat, n_heads: usize) -> Mat {
     out
 }
 
-/// Forward one sequence of token ids; optionally capture pruned-linear
-/// inputs.  Mirrors `model.forward` in python.
-pub fn forward(model: &Gpt, tokens: &[u8], capture: bool) -> ForwardOutput {
+/// Stage 1 of the stepper: token + position embeddings for one
+/// sequence — the (L, d_model) initial residual stream.
+pub fn forward_embed(model: &Gpt, tokens: &[u8]) -> Mat {
     let cfg = &model.cfg;
     let l = tokens.len();
     assert!(l <= cfg.seq_len, "sequence longer than model seq_len");
@@ -118,42 +170,62 @@ pub fn forward(model: &Gpt, tokens: &[u8], capture: bool) -> ForwardOutput {
             row[j] = te[j] + pe[j];
         }
     }
+    x
+}
 
-    let mut captures: Captures = BTreeMap::new();
-    for bi in 0..cfg.n_layers {
-        let p = format!("blocks.{bi}.");
-        let h = layernorm(&x, model.mat(&(p.clone() + "ln1_g")), model.mat(&(p.clone() + "ln1_b")));
-        if capture {
-            captures.insert(p.clone() + "wqkv", h.clone());
-        }
-        let attn_h = attention(&h, model.mat(&(p.clone() + "wqkv")), cfg.n_heads);
-        if capture {
-            captures.insert(p.clone() + "wo", attn_h.clone());
-        }
-        let proj = matmul_a_bt(&attn_h, model.mat(&(p.clone() + "wo")));
-        x.add_inplace(&proj);
-
-        let h2 = layernorm(&x, model.mat(&(p.clone() + "ln2_g")), model.mat(&(p.clone() + "ln2_b")));
-        if capture {
-            captures.insert(p.clone() + "wup", h2.clone());
-        }
-        let mut up = matmul_a_bt(&h2, model.mat(&(p.clone() + "wup")));
-        for v in &mut up.data {
-            *v = gelu(*v);
-        }
-        if capture {
-            captures.insert(p.clone() + "wdown", up.clone());
-        }
-        let down = matmul_a_bt(&up, model.mat(&(p.clone() + "wdown")));
-        x.add_inplace(&down);
+/// Stage 2 of the stepper: advance the residual stream `x` through
+/// block `names.block`, using `model`'s *current* weights (which may
+/// already carry pruning masks).  When `captures` is provided, the four
+/// pruned-linear inputs are recorded under their full param names.
+pub fn forward_block(
+    model: &Gpt,
+    names: &BlockNames,
+    x: &mut Mat,
+    mut captures: Option<&mut Captures>,
+) {
+    let h = layernorm(x, model.mat(&names.ln1_g), model.mat(&names.ln1_b));
+    if let Some(c) = captures.as_deref_mut() {
+        c.insert(names.wqkv.clone(), h.clone());
     }
-
-    let xf = layernorm(&x, model.mat("lnf_g"), model.mat("lnf_b"));
-    let logits = matmul_a_bt(&xf, tok_emb);
-    ForwardOutput {
-        logits,
-        captures: capture.then_some(captures),
+    let attn_h = attention(&h, model.mat(&names.wqkv), model.cfg.n_heads);
+    if let Some(c) = captures.as_deref_mut() {
+        c.insert(names.wo.clone(), attn_h.clone());
     }
+    let proj = matmul_a_bt(&attn_h, model.mat(&names.wo));
+    x.add_inplace(&proj);
+
+    let h2 = layernorm(x, model.mat(&names.ln2_g), model.mat(&names.ln2_b));
+    if let Some(c) = captures.as_deref_mut() {
+        c.insert(names.wup.clone(), h2.clone());
+    }
+    let mut up = matmul_a_bt(&h2, model.mat(&names.wup));
+    for v in &mut up.data {
+        *v = gelu(*v);
+    }
+    if let Some(c) = captures.as_deref_mut() {
+        c.insert(names.wdown.clone(), up.clone());
+    }
+    let down = matmul_a_bt(&up, model.mat(&names.wdown));
+    x.add_inplace(&down);
+}
+
+/// Stage 3 of the stepper: final layernorm + weight-tied head.
+pub fn forward_head(model: &Gpt, x: &Mat) -> Mat {
+    let xf = layernorm(x, model.mat("lnf_g"), model.mat("lnf_b"));
+    matmul_a_bt(&xf, model.mat("tok_emb"))
+}
+
+/// Forward one sequence of token ids; optionally capture pruned-linear
+/// inputs.  Mirrors `model.forward` in python.  Thin wrapper over the
+/// resumable stepper: embed → blocks → head.
+pub fn forward(model: &Gpt, tokens: &[u8], capture: bool) -> ForwardOutput {
+    let mut x = forward_embed(model, tokens);
+    let mut captures: Option<Captures> = capture.then(BTreeMap::new);
+    for names in model.block_names() {
+        forward_block(model, names, &mut x, captures.as_mut());
+    }
+    let logits = forward_head(model, &x);
+    ForwardOutput { logits, captures }
 }
 
 /// Mean next-token negative log-likelihood of one sequence (positions
@@ -194,6 +266,39 @@ mod tests {
         assert_eq!(caps.len(), 4 * cfg.n_layers);
         assert_eq!(caps["blocks.0.wqkv"].cols, cfg.d_model);
         assert_eq!(caps["blocks.0.wdown"].cols, cfg.d_ff);
+    }
+
+    #[test]
+    fn stepper_matches_one_shot_wrapper() {
+        // driving embed → block → head by hand must reproduce forward()
+        // exactly (the staged calibration pipeline relies on this)
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 7);
+        let tokens: Vec<u8> = (0..24).map(|i| (i * 5) % 250).collect();
+        let whole = forward(&model, &tokens, true);
+
+        let mut x = forward_embed(&model, &tokens);
+        let mut caps = Captures::new();
+        for bi in 0..cfg.n_layers {
+            forward_block(&model, &BlockNames::new(bi), &mut x, Some(&mut caps));
+        }
+        let logits = forward_head(&model, &x);
+        assert_eq!(logits.data, whole.logits.data);
+        let wcaps = whole.captures.unwrap();
+        assert_eq!(caps.len(), wcaps.len());
+        for (k, v) in &caps {
+            assert_eq!(v.data, wcaps[k].data, "{k}");
+        }
+    }
+
+    #[test]
+    fn block_names_match_param_names() {
+        let cfg = tiny_cfg();
+        let names = BlockNames::for_model(&cfg);
+        assert_eq!(names.len(), cfg.n_layers);
+        assert_eq!(names[1].wqkv, "blocks.1.wqkv");
+        assert_eq!(names[1].ln2_b, "blocks.1.ln2_b");
+        assert_eq!(names[0].wdown, "blocks.0.wdown");
     }
 
     #[test]

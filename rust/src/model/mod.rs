@@ -11,11 +11,14 @@ pub mod safetensors;
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::OnceLock;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::tensor::Mat;
 use crate::util::json::Json;
+
+use self::forward::BlockNames;
 
 /// Architecture hyper-parameters (mirrors `configs.ModelConfig`).
 #[derive(Clone, Debug, PartialEq)]
@@ -109,10 +112,24 @@ impl GptConfig {
 }
 
 /// A loaded model: config + parameter matrices.
-#[derive(Clone)]
 pub struct Gpt {
     pub cfg: GptConfig,
     pub params: BTreeMap<String, Mat>,
+    /// Per-block param names, built lazily once per model instance —
+    /// the forward hot path used to re-`format!` them per block call.
+    block_names: OnceLock<Vec<BlockNames>>,
+}
+
+impl Clone for Gpt {
+    fn clone(&self) -> Self {
+        // the name cache rebuilds lazily; cloning it would be wasted
+        // work for clones that only get masked and evaluated
+        Self {
+            cfg: self.cfg.clone(),
+            params: self.params.clone(),
+            block_names: OnceLock::new(),
+        }
+    }
 }
 
 impl Gpt {
@@ -125,15 +142,19 @@ impl Gpt {
                 .with_context(|| format!("checkpoint missing param {name}"))?;
             params.insert(name.clone(), t.to_mat()?);
         }
-        let model = Self { cfg, params };
+        Self::from_params(cfg, params)
+    }
+
+    pub fn from_params(cfg: GptConfig, params: BTreeMap<String, Mat>) -> Result<Self> {
+        let model = Self { cfg, params, block_names: OnceLock::new() };
         model.validate()?;
         Ok(model)
     }
 
-    pub fn from_params(cfg: GptConfig, params: BTreeMap<String, Mat>) -> Result<Self> {
-        let model = Self { cfg, params };
-        model.validate()?;
-        Ok(model)
+    /// Cached per-block parameter names (computed on first use).
+    pub fn block_names(&self) -> &[BlockNames] {
+        self.block_names
+            .get_or_init(|| BlockNames::for_model(&self.cfg))
     }
 
     fn validate(&self) -> Result<()> {

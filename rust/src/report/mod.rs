@@ -78,6 +78,9 @@ impl ReportCtx {
             backend: Backend::Native,
             calib_samples: self.calib_samples,
             calib_seed: self.calib_seed,
+            // report tables reproduce the paper's protocol: one-shot
+            // dense calibration
+            calib_policy: crate::calib::CalibPolicy::Dense,
             trace_every: 0,
             eval: Some(EvalSpec { seqs: self.eval_seqs, zs_items: self.zs_items }),
         }

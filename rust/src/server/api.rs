@@ -158,6 +158,16 @@ fn metrics(state: &ServerState) -> Response {
                 ("misses", m.calib_misses.load(Relaxed).into()),
             ]),
         ),
+        // staged block-sequential calibration (`--propagate block|layer`):
+        // how many completed jobs propagated, and the worst per-job peak
+        // of simultaneously-live gram bytes (O(block), not O(model))
+        (
+            "calib_staged",
+            Json::obj(vec![
+                ("jobs_propagated", m.jobs_propagated.load(Relaxed).into()),
+                ("peak_gram_bytes", m.peak_gram_bytes.load(Relaxed).into()),
+            ]),
+        ),
         (
             "workers",
             Json::obj(vec![

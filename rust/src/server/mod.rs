@@ -96,6 +96,12 @@ pub struct Metrics {
     /// `job_wall_ms` this is the fleet-visible iterations/sec, the
     /// number the incremental FW engine moves.
     pub fw_iters: AtomicUsize,
+    /// Completed jobs that ran staged (propagated) calibration
+    /// (`--propagate block|layer`).
+    pub jobs_propagated: AtomicUsize,
+    /// High-water mark of per-job peak calibration-gram bytes across
+    /// completed staged jobs.
+    pub peak_gram_bytes: AtomicUsize,
     pub workers: usize,
 }
 
@@ -110,6 +116,8 @@ impl Metrics {
             busy_workers: AtomicUsize::new(0),
             job_wall_ms: AtomicU64::new(0),
             fw_iters: AtomicUsize::new(0),
+            jobs_propagated: AtomicUsize::new(0),
+            peak_gram_bytes: AtomicUsize::new(0),
             workers,
         }
     }
@@ -327,6 +335,12 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
                     .job_wall_ms
                     .fetch_add((summary.wall_seconds * 1e3) as u64, Ordering::Relaxed);
                 state.metrics.fw_iters.fetch_add(summary.fw_iters, Ordering::Relaxed);
+                if summary.calib_policy.is_some() {
+                    state.metrics.jobs_propagated.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(b) = summary.peak_gram_bytes {
+                    state.metrics.peak_gram_bytes.fetch_max(b, Ordering::Relaxed);
+                }
                 state.queue.finish(id, Ok(summary));
             }
             Err(e) => {
@@ -385,5 +399,12 @@ pub fn workspace_sessions(dir: Option<&str>, workers: usize) -> Result<Vec<Prune
 pub(crate) fn validate_spec(spec: &JobSpec) -> Result<()> {
     ensure!(spec.calib_samples > 0, "calib_samples must be positive");
     ensure!(!spec.model.is_empty(), "model name must be non-empty");
+    // reject the combination eagerly (400) instead of a deferred Failed
+    // job: OWL needs model-wide dense grams, staged runs stream O(block)
+    ensure!(
+        !(spec.calib_policy.is_propagated()
+            && matches!(spec.allocation, crate::coordinator::Allocation::Owl { .. })),
+        "OWL allocation requires dense calibration (--propagate off)"
+    );
     Ok(())
 }

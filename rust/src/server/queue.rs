@@ -74,6 +74,12 @@ pub struct JobSummary {
     pub fw_iters: usize,
     pub pruned_sparsity: Option<f64>,
     pub ppl: Option<f64>,
+    /// Propagation granularity label (`"block"`/`"layer"`) when the
+    /// job ran staged calibration; `None` for one-shot dense.
+    pub calib_policy: Option<String>,
+    /// Peak bytes of simultaneously-live calibration grams (staged
+    /// jobs; the one-shot path holds every gram at once instead).
+    pub peak_gram_bytes: Option<usize>,
 }
 
 impl JobSummary {
@@ -88,6 +94,8 @@ impl JobSummary {
             fw_iters: res.prune.fw_iters,
             pruned_sparsity: res.pruned_sparsity,
             ppl: res.eval.as_ref().map(|e| e.ppl),
+            calib_policy: res.prune.staged.map(|s| s.policy.label().to_string()),
+            peak_gram_bytes: res.prune.staged.map(|s| s.peak_gram_bytes),
         }
     }
 
@@ -123,6 +131,12 @@ impl JobSummary {
         }
         if let Some(p) = self.ppl {
             fields.push(("ppl", p.into()));
+        }
+        if let Some(cp) = &self.calib_policy {
+            fields.push(("calib_policy", cp.as_str().into()));
+        }
+        if let Some(b) = self.peak_gram_bytes {
+            fields.push(("peak_gram_bytes", b.into()));
         }
         Json::obj(fields)
     }
@@ -571,6 +585,8 @@ mod tests {
                 fw_iters: 4000,
                 pruned_sparsity: None,
                 ppl: None,
+                calib_policy: None,
+                peak_gram_bytes: None,
             }),
         );
         q.finish(b, Err("boom".into()));

@@ -232,6 +232,48 @@ fn metrics_report_calib_cache_hits_for_shared_calibration() {
 }
 
 #[test]
+fn propagated_job_runs_through_the_api_with_staged_metrics() {
+    use sparsefw::calib::CalibPolicy;
+    let (handle, client) = spawn_server(1);
+
+    let id = client
+        .submit(
+            &JobSpec { calib_policy: CalibPolicy::PropagateBlock, ..base_spec() },
+            0,
+        )
+        .unwrap();
+    let rec = client.wait(id, WAIT).unwrap();
+    assert_eq!(rec.at(&["state"]).as_str(), Some("done"), "{rec:?}");
+    // the summary carries the staged-calibration fields
+    assert_eq!(rec.at(&["result", "calib_policy"]).as_str(), Some("block"));
+    let peak = rec.at(&["result", "peak_gram_bytes"]).as_usize().unwrap();
+    assert!(peak > 0, "{rec:?}");
+    assert!(rec.at(&["result", "mask_nnz"]).as_usize().unwrap() > 0);
+    // spec round-trips through the job record with the policy intact
+    assert_eq!(rec.at(&["spec", "calib_policy"]).as_str(), Some("block"));
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at(&["calib_staged", "jobs_propagated"]).as_usize(), Some(1));
+    assert_eq!(m.at(&["calib_staged", "peak_gram_bytes"]).as_usize(), Some(peak));
+
+    // OWL + propagation is rejected at submit time (400), not deferred
+    let err = client
+        .submit(
+            &JobSpec {
+                allocation: Allocation::Owl { target: 0.6, lambda: 5.0, max_shift: 0.08 },
+                calib_policy: CalibPolicy::PropagateBlock,
+                ..base_spec()
+            },
+            0,
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("OWL") || err.contains("400"), "{err}");
+
+    handle.shutdown();
+}
+
+#[test]
 fn metrics_report_job_wall_time_and_fw_throughput() {
     let (handle, client) = spawn_server(1);
 

@@ -1,0 +1,268 @@
+//! Integration tests for the staged block-sequential pruning pipeline
+//! (`--propagate off|block|layer`).
+//!
+//! * `--propagate off` must be **bit-identical** to the pre-refactor
+//!   pipeline (the deprecated `PrunePipeline` shims drive the same
+//!   `run_layers` dispatch the old code did) across all three sparsity
+//!   patterns.
+//! * Staged calibration must stream at most one block's grams at a time
+//!   (the O(block) vs O(model) memory claim).
+//! * End-to-end quality: against a model whose layers genuinely
+//!   transform the stream, propagated calibration must not worsen
+//!   perplexity (within noise — on a tiny *untrained* model ppl
+//!   differences between calibration pipelines are statistical noise,
+//!   verified empirically across seeds), and at 60% unstructured
+//!   sparsity it must strictly reduce the **realized reconstruction
+//!   error** Σ_l ‖W_l X_l − Ŵ_l X_l‖² measured on the pruned model's
+//!   own activations — the quantity propagation optimizes, and the
+//!   mechanism behind its perplexity gains at real scale.
+
+#![allow(deprecated)] // PrunePipeline is the pre-refactor reference
+
+use std::collections::BTreeMap;
+
+use sparsefw::calib::{CalibPolicy, Calibration};
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession, PrunePipeline};
+use sparsefw::data::TokenBin;
+use sparsefw::eval::perplexity_native;
+use sparsefw::model::forward::forward;
+use sparsefw::model::testutil::{random_model, tiny_cfg};
+use sparsefw::model::{Gpt, GptConfig};
+use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::tensor::{matmul_a_bt, Mat};
+use sparsefw::util::prng::Xoshiro256;
+
+fn corpus_bin() -> TokenBin {
+    TokenBin::from_tokens(sparsefw::data::corpus::generate(6, 8192))
+}
+
+fn session_with(model: Gpt, name: &str) -> PruneSession {
+    let bin = corpus_bin();
+    let mut models = BTreeMap::new();
+    models.insert(name.to_string(), model);
+    PruneSession::in_memory(models, bin.clone(), bin)
+}
+
+// ---------------------------------------------------------------------------
+// --propagate off ≡ pre-refactor pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn propagate_off_is_bit_identical_to_prerefactor_pipeline() {
+    let cfg = tiny_cfg();
+    let model = random_model(&cfg, 1);
+    let bin = corpus_bin();
+    let calib = Calibration::collect(&model, &bin, 6, 2).unwrap();
+
+    let methods = [
+        PruneMethod::Wanda,
+        PruneMethod::SparseFw(SparseFwConfig {
+            iters: 40,
+            alpha: 0.5,
+            warmstart: Warmstart::Wanda,
+            ..Default::default()
+        }),
+    ];
+    let patterns = [
+        SparsityPattern::Unstructured { sparsity: 0.6 },
+        SparsityPattern::PerRow { sparsity: 0.5 },
+        SparsityPattern::NM { keep: 2, block: 4 },
+    ];
+    for method in &methods {
+        for pattern in &patterns {
+            let reference = PrunePipeline::new(&model, &calib).run(method, pattern).unwrap();
+
+            let mut session = session_with(model.clone(), "test");
+            let spec = JobSpec {
+                model: "test".into(),
+                method: method.clone(),
+                allocation: Allocation::Uniform(pattern.clone()),
+                calib_samples: 6,
+                calib_seed: 2,
+                calib_policy: CalibPolicy::Dense,
+                ..Default::default()
+            };
+            let staged_off = session.execute(&spec).unwrap();
+
+            assert!(staged_off.prune.staged.is_none(), "dense policy carries no staged stats");
+            assert_eq!(reference.masks.len(), staged_off.prune.masks.len());
+            for (name, mask) in &reference.masks {
+                assert_eq!(
+                    mask.data, staged_off.prune.masks[name].data,
+                    "{name} mask must be bit-identical under {} / {}",
+                    method.label(),
+                    pattern.label()
+                );
+            }
+            for (name, obj) in &reference.layer_objs {
+                let got = staged_off.prune.layer_objs[name];
+                assert_eq!(*obj, got, "{name} objective must be bit-identical");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end quality of propagated calibration
+// ---------------------------------------------------------------------------
+
+/// A tiny model whose random weights are large enough (4× the test
+/// default) that each block genuinely transforms the residual stream —
+/// pruning one block then measurably shifts the activation statistics
+/// every later layer calibrates against, which is the effect the
+/// staged pipeline exists to capture.
+fn loud_model(seed: u64) -> Gpt {
+    let cfg = GptConfig {
+        name: "loud".into(),
+        vocab_size: 256,
+        seq_len: 32,
+        d_model: 16,
+        n_layers: 4,
+        n_heads: 2,
+        d_ff: 32,
+    };
+    let mut rng = Xoshiro256::new(seed);
+    let d = cfg.d_model;
+    let mut params = BTreeMap::new();
+    params.insert("tok_emb".into(), Mat::gaussian(cfg.vocab_size, d, 0.2, &mut rng));
+    params.insert("pos_emb".into(), Mat::gaussian(cfg.seq_len, d, 0.2, &mut rng));
+    for i in 0..cfg.n_layers {
+        let p = format!("blocks.{i}.");
+        params.insert(format!("{p}ln1_g"), Mat::ones(1, d));
+        params.insert(format!("{p}ln1_b"), Mat::zeros(1, d));
+        params.insert(format!("{p}wqkv"), Mat::gaussian(3 * d, d, 0.4, &mut rng));
+        params.insert(format!("{p}wo"), Mat::gaussian(d, d, 0.2, &mut rng));
+        params.insert(format!("{p}ln2_g"), Mat::ones(1, d));
+        params.insert(format!("{p}ln2_b"), Mat::zeros(1, d));
+        params.insert(format!("{p}wup"), Mat::gaussian(cfg.d_ff, d, 0.4, &mut rng));
+        params.insert(format!("{p}wdown"), Mat::gaussian(d, cfg.d_ff, 0.2, &mut rng));
+    }
+    params.insert("lnf_g".into(), Mat::ones(1, d));
+    params.insert("lnf_b".into(), Mat::zeros(1, d));
+    Gpt::from_params(cfg, params).unwrap()
+}
+
+/// Σ over layers of ‖W_l X_l − Ŵ_l X_l‖² where X_l are the *pruned*
+/// model's own activations over `seqs` — the calibration objective
+/// evaluated where it actually applies.
+fn realized_reconstruction_err(dense: &Gpt, pruned: &Gpt, seqs: &[Vec<u8>]) -> f64 {
+    let mut total = 0.0;
+    for seq in seqs {
+        let caps = forward(pruned, seq, true).captures.unwrap();
+        for l in dense.cfg.layers() {
+            // diff = W_dense − Ŵ  (Ŵ is masked or reconstructed)
+            let mut diff = dense.mat(&l.name).clone();
+            diff.axby(1.0, -1.0, pruned.mat(&l.name));
+            total += matmul_a_bt(&caps[&l.name], &diff).frob_sq();
+        }
+    }
+    total
+}
+
+#[test]
+fn propagated_calibration_quality_end_to_end() {
+    let model = loud_model(1);
+    let bin = corpus_bin();
+    // the same sequences the session's staged/dense calibration samples
+    let calib_seqs = bin.sample(model.cfg.seq_len, 16, 2);
+
+    let mut session = session_with(model.clone(), "loud");
+    let spec_for = |policy: CalibPolicy| JobSpec {
+        model: "loud".into(),
+        // SparseGPT: reconstruction makes gram fidelity matter most —
+        // propagated grams let each layer compensate the true upstream
+        // error instead of a dense-model estimate of it
+        method: PruneMethod::SparseGpt { percdamp: 0.01, blocksize: 8 },
+        allocation: Allocation::Uniform(SparsityPattern::Unstructured { sparsity: 0.6 }),
+        calib_samples: 16,
+        calib_seed: 2,
+        calib_policy: policy,
+        ..Default::default()
+    };
+
+    let dense = session.execute(&spec_for(CalibPolicy::Dense)).unwrap();
+    let block = session.execute(&spec_for(CalibPolicy::PropagateBlock)).unwrap();
+    let layer = session.execute(&spec_for(CalibPolicy::PropagateLayer)).unwrap();
+
+    // staged runs stream one gram set at a time (O(block) memory)
+    for res in [&block, &layer] {
+        let staged = res.prune.staged.expect("staged stats");
+        assert_eq!(staged.peak_live_gram_sets, 1);
+        assert!(staged.peak_gram_bytes < staged.total_gram_bytes);
+    }
+    // layer granularity holds one gram at a time, block holds four
+    assert!(
+        layer.prune.staged.unwrap().peak_gram_bytes
+            <= block.prune.staged.unwrap().peak_gram_bytes
+    );
+
+    let m_dense = dense.apply(&model).unwrap();
+    let m_block = block.apply(&model).unwrap();
+    let m_layer = layer.apply(&model).unwrap();
+
+    // the propagation mechanism: realized reconstruction error on the
+    // pruned models' own activations strictly improves (empirical
+    // margin ~13% for this seed; threshold leaves room for f32 noise)
+    let err_dense = realized_reconstruction_err(&model, &m_dense, &calib_seqs);
+    let err_block = realized_reconstruction_err(&model, &m_block, &calib_seqs);
+    let err_layer = realized_reconstruction_err(&model, &m_layer, &calib_seqs);
+    assert!(
+        err_block < err_dense * 0.98,
+        "block propagation must cut realized error: {err_block} !< 0.98·{err_dense}"
+    );
+    assert!(
+        err_layer < err_dense * 0.98,
+        "layer propagation must cut realized error: {err_layer} !< 0.98·{err_dense}"
+    );
+
+    // and perplexity does not worsen beyond noise (on an untrained toy
+    // model the sign of small ppl deltas is seed noise; at real scale
+    // the realized-error gap above is what buys ppl)
+    let ppl_dense = perplexity_native(&m_dense, &bin, 16).unwrap();
+    let ppl_block = perplexity_native(&m_block, &bin, 16).unwrap();
+    let ppl_layer = perplexity_native(&m_layer, &bin, 16).unwrap();
+    assert!(ppl_dense.is_finite() && ppl_dense > 1.0);
+    assert!(
+        ppl_block <= ppl_dense * 1.10,
+        "block propagation worsened ppl: {ppl_block} vs {ppl_dense}"
+    );
+    assert!(
+        ppl_layer <= ppl_dense * 1.10,
+        "layer propagation worsened ppl: {ppl_layer} vs {ppl_dense}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI-facing spec plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn propagate_policy_survives_spec_save_load_and_reexecutes() {
+    let cfg = tiny_cfg();
+    let model = random_model(&cfg, 3);
+    let mut session = session_with(model, "test");
+    let spec = JobSpec {
+        model: "test".into(),
+        method: PruneMethod::Wanda,
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+        calib_samples: 6,
+        calib_seed: 2,
+        calib_policy: CalibPolicy::PropagateLayer,
+        ..Default::default()
+    };
+    let path = std::env::temp_dir()
+        .join(format!("sparsefw-staged-spec-{}.json", std::process::id()));
+    spec.save(&path).unwrap();
+    let loaded = JobSpec::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.calib_policy, CalibPolicy::PropagateLayer);
+
+    let a = session.execute(&spec).unwrap();
+    let b = session.execute(&loaded).unwrap();
+    for (name, mask) in &a.prune.masks {
+        assert_eq!(mask.data, b.prune.masks[name].data, "{name}");
+    }
+    // the method-independent embed prefix memoized across the two runs
+    let (hits, misses) = session.calib_stats();
+    assert_eq!((hits, misses), (1, 1));
+}

@@ -56,6 +56,15 @@ echo "$FW_OUT" | grep -Eq "mask_nnz=[1-9]" \
     || { echo "incremental FW masks are empty: $FW_OUT"; exit 1; }
 echo "   incremental engine smoke OK"
 
+# third smoke path: staged block-propagated calibration end-to-end
+PROP_OUT="$("$BIN" submit --addr "$ADDR" --model demo --method wanda \
+    --pattern per-row:0.5 --samples 8 --propagate block --wait 2>&1)"
+echo "$PROP_OUT" | grep -q "state=done" \
+    || { echo "propagated job did not finish: $PROP_OUT"; cat "$SERVE_LOG"; exit 1; }
+echo "$PROP_OUT" | grep -Eq "mask_nnz=[1-9]" \
+    || { echo "propagated masks are empty: $PROP_OUT"; exit 1; }
+echo "   staged --propagate block smoke OK"
+
 "$BIN" status --addr "$ADDR"
 "$BIN" shutdown --addr "$ADDR"
 wait "$SERVE_PID"
@@ -69,6 +78,10 @@ echo "   wrote $REPO/BENCH_server.json"
 echo "== FW hot-loop bench: dense vs incremental engine (BENCH_fw.json) =="
 SPARSEFW_BENCH_JSON="$REPO/BENCH_fw.json" cargo bench --bench fw_hot_loop
 echo "   wrote $REPO/BENCH_fw.json"
+
+echo "== staged vs one-shot calibration bench (BENCH_calib.json) =="
+SPARSEFW_BENCH_JSON="$REPO/BENCH_calib.json" cargo bench --bench calib_staged
+echo "   wrote $REPO/BENCH_calib.json"
 
 # `make artifacts` (python/compile/aot.py) writes to <repo>/artifacts;
 # resolve it absolutely so the cwd (rust/) doesn't matter.
