@@ -23,7 +23,7 @@ fn main() -> Result<()> {
     for alpha in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 1.0] {
         let spec = JobSpec {
             model: model_name.clone(),
-            method: PruneMethod::SparseFw(SparseFwConfig {
+            method: Method::sparsefw(SparseFwConfig {
                 iters: 300,
                 alpha,
                 ..Default::default()

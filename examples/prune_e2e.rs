@@ -3,8 +3,9 @@
 //!
 //! 1. opens one [`PruneSession`] over the build-time-pretrained
 //!    checkpoints (models load once, calibrations are memoized),
-//! 2. prunes with all four Table-1 methods at 60% per-row + 2:4 via
-//!    declarative [`JobSpec`]s on the native backend,
+//! 2. prunes with all four Table-1 methods (as registry-backed
+//!    [`Method`]s) at 60% per-row + 2:4 via declarative [`JobSpec`]s
+//!    on the native backend,
 //! 3. re-runs one SparseFW configuration with the **PJRT backend**
 //!    (AOT Pallas kernels, fused chunk) — same spec, different
 //!    `backend` field — proving L1→L2→L3 compose,
@@ -37,16 +38,17 @@ fn main() -> Result<()> {
             SparsityPattern::NM { keep: 2, block: 4 },
         ] {
             println!("--- sparsity {} ---", pattern.label());
-            let methods: Vec<(&str, PruneMethod)> = vec![
-                ("wanda", PruneMethod::Wanda),
-                ("ria", PruneMethod::Ria),
+            // the four Table-1 methods, straight off the open Method API
+            let methods: Vec<(&str, Method)> = vec![
+                ("wanda", Method::wanda()),
+                ("ria", Method::ria()),
                 (
                     "sparsefw(wanda)",
-                    PruneMethod::SparseFw(SparseFwConfig { iters, ..Default::default() }),
+                    Method::sparsefw(SparseFwConfig { iters, ..Default::default() }),
                 ),
                 (
                     "sparsefw(ria)",
-                    PruneMethod::SparseFw(SparseFwConfig {
+                    Method::sparsefw(SparseFwConfig {
                         iters,
                         warmstart: Warmstart::Ria,
                         ..Default::default()
@@ -86,7 +88,7 @@ fn main() -> Result<()> {
         println!("--- PJRT path (AOT Pallas kernels + model_fwd executable) ---");
         let pjrt_spec = JobSpec {
             model: model_name.clone(),
-            method: PruneMethod::SparseFw(SparseFwConfig {
+            method: Method::sparsefw(SparseFwConfig {
                 iters: if fast { 20 } else { 100 },
                 ..Default::default()
             }),

@@ -1,6 +1,6 @@
 //! Quickstart: open a [`PruneSession`], execute two declarative
-//! [`JobSpec`]s (the Wanda baseline and SparseFW), and compare
-//! perplexity.  The second job reuses the session's memoized
+//! [`JobSpec`]s (the Wanda baseline and SparseFW, both as
+//! registry-backed [`Method`]s), and compare perplexity.  The second job reuses the session's memoized
 //! calibration — grams are collected once.
 //!
 //!   make artifacts && cargo run --release --example quickstart
@@ -41,9 +41,9 @@ fn main() -> Result<()> {
         ..Default::default()
     };
 
-    let wanda = session.execute(&JobSpec { method: PruneMethod::Wanda, ..base.clone() })?;
+    let wanda = session.execute(&JobSpec { method: Method::wanda(), ..base.clone() })?;
     let fw = session.execute(&JobSpec {
-        method: PruneMethod::SparseFw(SparseFwConfig {
+        method: Method::sparsefw(SparseFwConfig {
             iters: 300,
             engine,
             ..Default::default()

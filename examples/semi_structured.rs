@@ -1,5 +1,6 @@
 //! Semi-structured (n:m) pruning walkthrough — the Appendix-D LMO in
-//! action: prune to 2:4 and 1:4 via declarative [`JobSpec`]s, verify
+//! action: prune to 2:4 and 1:4 via declarative [`JobSpec`]s (methods
+//! from the open registry-backed [`Method`] API), verify
 //! hardware-friendly block structure, and compare methods.
 //!
 //!   cargo run --release --example semi_structured
@@ -12,7 +13,7 @@ fn main() -> Result<()> {
     let mut session = PruneSession::open_default()?;
     let model_name = session.model_names()[0].clone();
 
-    let spec_for = |method: PruneMethod, pattern: &SparsityPattern| JobSpec {
+    let spec_for = |method: Method, pattern: &SparsityPattern| JobSpec {
         model: model_name.clone(),
         method,
         allocation: Allocation::Uniform(pattern.clone()),
@@ -31,11 +32,11 @@ fn main() -> Result<()> {
             pattern.sparsity(1, block) * 100.0
         );
         for (label, method) in [
-            ("magnitude", PruneMethod::Magnitude),
-            ("wanda", PruneMethod::Wanda),
+            ("magnitude", Method::magnitude()),
+            ("wanda", Method::wanda()),
             (
                 "sparsefw",
-                PruneMethod::SparseFw(SparseFwConfig { iters: 300, ..Default::default() }),
+                Method::sparsefw(SparseFwConfig { iters: 300, ..Default::default() }),
             ),
         ] {
             let res = session.execute(&spec_for(method, &pattern))?;
@@ -54,7 +55,7 @@ fn main() -> Result<()> {
     // Show the block structure of one pruned row.
     let pattern = SparsityPattern::NM { keep: 2, block: 4 };
     let mut spec = spec_for(
-        PruneMethod::SparseFw(SparseFwConfig { iters: 100, ..Default::default() }),
+        Method::sparsefw(SparseFwConfig { iters: 100, ..Default::default() }),
         &pattern,
     );
     spec.eval = None; // only the mask matters here

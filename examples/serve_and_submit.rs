@@ -1,6 +1,8 @@
 //! Serve-and-submit: start a pruning job server on an ephemeral port,
-//! submit a Wanda and a SparseFW job through the blocking client, and
-//! print the streamed per-layer progress of each.  The two jobs share
+//! list its method registry (`GET /methods`), submit a Wanda job with
+//! a `--refine swaps` post-pass and a SparseFW job through the
+//! blocking client, and print the streamed per-layer progress of
+//! each.  The two jobs share
 //! `(model, samples, seed)`, so the second hits the worker session's
 //! calibration memo — visible in the final `GET /metrics` line.
 //!
@@ -35,6 +37,17 @@ fn main() -> Result<()> {
     println!("listening on {}", handle.addr());
     let client = Client::new(handle.addr().to_string());
 
+    // discover what the server can run (GET /methods — the registry)
+    let methods = client.methods()?;
+    let names: Vec<&str> = methods
+        .at(&["methods"])
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|m| m.at(&["name"]).as_str())
+        .collect();
+    println!("server methods: {}", names.join(", "));
+
     let base = JobSpec {
         model: model_name,
         allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
@@ -42,11 +55,20 @@ fn main() -> Result<()> {
         ..Default::default()
     };
     let jobs = [
-        ("wanda", JobSpec { method: PruneMethod::Wanda, ..base.clone() }),
+        // the wanda job carries a SparseSwaps-style refine post-pass —
+        // its summary then reports the objective it clawed back
+        (
+            "wanda+swaps",
+            JobSpec {
+                method: Method::wanda(),
+                refine: vec![RefinePass::swaps()],
+                ..base.clone()
+            },
+        ),
         (
             "sparsefw",
             JobSpec {
-                method: PruneMethod::SparseFw(SparseFwConfig {
+                method: Method::sparsefw(SparseFwConfig {
                     iters: 120,
                     ..Default::default()
                 }),
@@ -70,7 +92,7 @@ fn main() -> Result<()> {
         })?;
         let r = fin.at(&["result"]);
         println!(
-            "[{name}] {}: Σ err {:.4e} across {} masks in {:.2}s{}",
+            "[{name}] {}: Σ err {:.4e} across {} masks in {:.2}s{}{}",
             fin.at(&["state"]).as_str().unwrap_or("?"),
             r.at(&["total_err"]).as_f64().unwrap_or(0.0),
             r.at(&["mask_layers"]).as_usize().unwrap_or(0),
@@ -78,6 +100,10 @@ fn main() -> Result<()> {
             r.at(&["mean_rel_reduction"])
                 .as_f64()
                 .map(|x| format!(", {:.1}% better than warmstart", x * 100.0))
+                .unwrap_or_default(),
+            r.at(&["refine_obj_delta"])
+                .as_f64()
+                .map(|d| format!(", refine clawed back {d:.3e}"))
                 .unwrap_or_default(),
         );
     }

@@ -4,6 +4,11 @@
 //! compute-intensive than Wanda and RIA" is quantified here as the
 //! method-time ratio.
 //!
+//! The method list comes from the global [`MethodRegistry`] (default
+//! config per registered method), so newly registered methods are
+//! benched automatically; fixed-budget SparseFW cells and a
+//! refined-Wanda cell (the `--refine` post-pass cost) ride along.
+//!
 //! Each method runs as one declarative [`JobSpec`] through a shared
 //! [`PruneSession`] — the calibration is collected once and memoized,
 //! so the timings isolate the pruning work itself.
@@ -28,31 +33,39 @@ fn main() {
     b.budget = std::time::Duration::from_secs(5);
     b.max_iters = 10;
 
-    for (label, method) in [
-        ("magnitude", PruneMethod::Magnitude),
-        ("wanda", PruneMethod::Wanda),
-        ("ria", PruneMethod::Ria),
-        ("sparsegpt", PruneMethod::SparseGpt { percdamp: 0.01, blocksize: 128 }),
-        (
-            "sparsefw-t100",
-            PruneMethod::SparseFw(SparseFwConfig { iters: 100, ..Default::default() }),
-        ),
-        (
-            "sparsefw-t400",
-            PruneMethod::SparseFw(SparseFwConfig { iters: 400, ..Default::default() }),
-        ),
-    ] {
-        let spec = JobSpec {
-            model: model_name.clone(),
-            method,
-            allocation: Allocation::Uniform(pattern.clone()),
-            calib_samples: 64,
-            ..Default::default()
-        };
+    let base_spec = |method: Method| JobSpec {
+        model: model_name.clone(),
+        method,
+        allocation: Allocation::Uniform(pattern.clone()),
+        calib_samples: 64,
+        ..Default::default()
+    };
+
+    // every registered method at its default configuration
+    for name in MethodRegistry::global().names() {
+        let method = Method::named(&name).expect("registered method builds");
+        let spec = base_spec(method);
+        b.bench(&format!("prune/{name}"), || {
+            std::hint::black_box(session.execute(&spec).unwrap());
+        });
+    }
+
+    // fixed-iteration SparseFW cells (the paper's T sweep anchors)
+    for (label, iters) in [("sparsefw-t100", 100usize), ("sparsefw-t400", 400)] {
+        let spec = base_spec(Method::sparsefw(SparseFwConfig { iters, ..Default::default() }));
         b.bench(&format!("prune/{label}"), || {
             std::hint::black_box(session.execute(&spec).unwrap());
         });
     }
+
+    // the refine post-pass cost on a cheap base method
+    let refined = JobSpec {
+        refine: vec![RefinePass::swaps(), RefinePass::update()],
+        ..base_spec(Method::wanda())
+    };
+    b.bench("prune/wanda+refine", || {
+        std::hint::black_box(session.execute(&refined).unwrap());
+    });
 
     b.bench("calibrate/64-seqs", || {
         std::hint::black_box(Calibration::collect(&model, &train, 64, 7).unwrap());
@@ -62,4 +75,7 @@ fn main() {
     });
 
     b.report();
+    let path = std::env::var("SPARSEFW_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_methods.json".into());
+    b.report_json(&path).expect("writing bench json");
 }

@@ -11,8 +11,8 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Result};
 
-use crate::pruner::fw_engine::DEFAULT_REFRESH_EVERY;
-use crate::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::pruner::{Method, MethodRegistry, RefinePass, SparsityPattern, Warmstart};
+use crate::util::json;
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -109,28 +109,31 @@ pub fn parse_warmstart(s: &str) -> Result<Warmstart> {
     })
 }
 
-/// Build a [`PruneMethod`] from CLI flags.
-pub fn parse_method(args: &Args) -> Result<PruneMethod> {
-    match args.get("method").unwrap_or("sparsefw") {
-        "magnitude" => Ok(PruneMethod::Magnitude),
-        "wanda" => Ok(PruneMethod::Wanda),
-        "ria" => Ok(PruneMethod::Ria),
-        "sparsegpt" => Ok(PruneMethod::SparseGpt {
-            percdamp: args.get_f64("percdamp", 0.01)?,
-            blocksize: args.get_usize("blocksize", 128)?,
-        }),
-        "sparsefw" => Ok(PruneMethod::SparseFw(SparseFwConfig {
-            iters: args.get_usize("iters", 500)?,
-            alpha: args.get_f64("alpha", 0.9)?,
-            warmstart: parse_warmstart(args.get("warmstart").unwrap_or("wanda"))?,
-            trace_every: args.get_usize("trace-every", 0)?,
-            use_chunk: !args.has("no-chunk"),
-            keep_best: !args.has("no-keep-best"),
-            line_search: args.has("line-search"),
-            engine: FwEngine::parse(args.get("fw-engine").unwrap_or("incremental"))?,
-            refresh_every: args.get_usize("fw-refresh", DEFAULT_REFRESH_EVERY)?,
-        })),
-        other => bail!("unknown method {other:?}"),
+/// Build a [`Method`] from CLI flags, through the global
+/// [`MethodRegistry`]: `--method NAME` routes to the method's
+/// registered CLI lowering (default config for methods registered
+/// without one), and `--method-json '{"kind": …}'` passes an arbitrary
+/// JSON config — so a newly registered method is immediately reachable
+/// from the CLI with zero parser changes.
+pub fn parse_method(args: &Args) -> Result<Method> {
+    if let Some(src) = args.get("method-json") {
+        if args.get("method").is_some() {
+            bail!("--method and --method-json conflict; pass one or the other");
+        }
+        let v = json::parse(src)
+            .map_err(|e| anyhow::anyhow!("--method-json is not valid JSON: {e}"))?;
+        return crate::config::method_from_json(&v);
+    }
+    let name = args.get("method").unwrap_or("sparsefw");
+    MethodRegistry::global().method_from_cli(name, args)
+}
+
+/// Parse the `--refine` flag (`swaps`, `update`, `swaps,update`, or
+/// `none`) into refinement post-passes.
+pub fn parse_refine(args: &Args) -> Result<Vec<RefinePass>> {
+    match args.get("refine") {
+        Some(s) => RefinePass::parse_list(s),
+        None => Ok(Vec::new()),
     }
 }
 
@@ -191,34 +194,72 @@ mod tests {
 
     #[test]
     fn methods() {
+        use crate::config::method_to_json;
+        use crate::pruner::fw_engine::DEFAULT_REFRESH_EVERY;
         let a = Args::parse(argv("p --method sparsefw --iters 100 --alpha 0.25 --warmstart ria"))
             .unwrap();
-        match parse_method(&a).unwrap() {
-            PruneMethod::SparseFw(c) => {
-                assert_eq!(c.iters, 100);
-                assert_eq!(c.alpha, 0.25);
-                assert_eq!(c.warmstart, Warmstart::Ria);
-                assert_eq!(c.engine, FwEngine::Incremental, "incremental is the default");
-                assert_eq!(c.refresh_every, DEFAULT_REFRESH_EVERY);
-            }
-            _ => panic!(),
-        }
+        let m = parse_method(&a).unwrap();
+        assert_eq!(m.name(), "sparsefw");
+        let mj = method_to_json(&m);
+        assert_eq!(mj.at(&["iters"]).as_usize(), Some(100));
+        assert_eq!(mj.at(&["alpha"]).as_f64(), Some(0.25));
+        assert_eq!(mj.at(&["warmstart"]).as_str(), Some("ria"));
+        assert_eq!(
+            mj.at(&["engine"]).as_str(),
+            Some("incremental"),
+            "incremental is the default"
+        );
+        assert_eq!(mj.at(&["refresh_every"]).as_usize(), Some(DEFAULT_REFRESH_EVERY));
         let a = Args::parse(argv("p --method wanda")).unwrap();
-        assert!(matches!(parse_method(&a).unwrap(), PruneMethod::Wanda));
+        assert_eq!(parse_method(&a).unwrap().name(), "wanda");
+        // unknown methods error naming the registered set
+        let a = Args::parse(argv("p --method prune-o-matic")).unwrap();
+        let err = parse_method(&a).unwrap_err().to_string();
+        assert!(err.contains("prune-o-matic") && err.contains("wanda"), "{err}");
+    }
+
+    #[test]
+    fn method_json_flag_bypasses_per_method_flags() {
+        let a = Args::parse(vec![
+            "p".to_string(),
+            "--method-json".to_string(),
+            r#"{"kind": "sparsegpt", "percdamp": 0.05}"#.to_string(),
+        ])
+        .unwrap();
+        let m = parse_method(&a).unwrap();
+        assert_eq!(m.name(), "sparsegpt");
+        let mj = crate::config::method_to_json(&m);
+        assert_eq!(mj.at(&["percdamp"]).as_f64(), Some(0.05));
+        assert_eq!(mj.at(&["blocksize"]).as_usize(), Some(128));
+        // passing both selection flags is a refused conflict
+        let a = Args::parse(argv("p --method wanda --method-json {}")).unwrap();
+        let err = parse_method(&a).unwrap_err().to_string();
+        assert!(err.contains("conflict"), "{err}");
     }
 
     #[test]
     fn fw_engine_flags() {
         let a = Args::parse(argv("p --method sparsefw --fw-engine dense --fw-refresh 16"))
             .unwrap();
-        match parse_method(&a).unwrap() {
-            PruneMethod::SparseFw(c) => {
-                assert_eq!(c.engine, FwEngine::Dense);
-                assert_eq!(c.refresh_every, 16);
-            }
-            _ => panic!(),
-        }
+        let mj = crate::config::method_to_json(&parse_method(&a).unwrap());
+        assert_eq!(mj.at(&["engine"]).as_str(), Some("dense"));
+        assert_eq!(mj.at(&["refresh_every"]).as_usize(), Some(16));
         let a = Args::parse(argv("p --method sparsefw --fw-engine warp")).unwrap();
         assert!(parse_method(&a).is_err());
+    }
+
+    #[test]
+    fn refine_flag_parses_pass_lists() {
+        let a = Args::parse(argv("p --refine swaps,update")).unwrap();
+        assert_eq!(
+            parse_refine(&a).unwrap(),
+            vec![RefinePass::swaps(), RefinePass::update()]
+        );
+        let a = Args::parse(argv("p --refine none")).unwrap();
+        assert!(parse_refine(&a).unwrap().is_empty());
+        let a = Args::parse(argv("p")).unwrap();
+        assert!(parse_refine(&a).unwrap().is_empty());
+        let a = Args::parse(argv("p --refine polish")).unwrap();
+        assert!(parse_refine(&a).is_err());
     }
 }

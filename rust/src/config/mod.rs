@@ -14,8 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::TokenBin;
 use crate::model::Gpt;
-use crate::pruner::fw_engine::DEFAULT_REFRESH_EVERY;
-use crate::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::pruner::{Method, MethodRegistry, SparseFwConfig, SparsityPattern};
 use crate::runtime::{Manifest, PjrtRuntime};
 use crate::util::json::Json;
 
@@ -97,67 +96,25 @@ impl Backend {
 // [`crate::coordinator::JobSpec`].
 // ---------------------------------------------------------------------------
 
-/// Serialize a [`PruneMethod`] to its JSON object form.
-pub fn method_to_json(method: &PruneMethod) -> Json {
-    match method {
-        PruneMethod::Magnitude => Json::obj(vec![("kind", "magnitude".into())]),
-        PruneMethod::Wanda => Json::obj(vec![("kind", "wanda".into())]),
-        PruneMethod::Ria => Json::obj(vec![("kind", "ria".into())]),
-        PruneMethod::SparseFw(c) => Json::obj(vec![
-            ("kind", "sparsefw".into()),
-            ("iters", c.iters.into()),
-            ("alpha", c.alpha.into()),
-            ("warmstart", c.warmstart.label().into()),
-            ("trace_every", c.trace_every.into()),
-            ("use_chunk", c.use_chunk.into()),
-            ("keep_best", c.keep_best.into()),
-            ("line_search", c.line_search.into()),
-            ("engine", c.engine.label().into()),
-            ("refresh_every", c.refresh_every.into()),
-        ]),
-        PruneMethod::SparseGpt { percdamp, blocksize } => Json::obj(vec![
-            ("kind", "sparsegpt".into()),
-            ("percdamp", (*percdamp).into()),
-            ("blocksize", (*blocksize).into()),
-        ]),
-    }
+/// Serialize a [`Method`] to its JSON object form: the method's own
+/// config fields plus the `"kind"` discriminator (the registry name).
+pub fn method_to_json(method: &Method) -> Json {
+    let mut obj = match method.config_to_json() {
+        Json::Obj(m) => m,
+        _ => Default::default(),
+    };
+    obj.insert("kind".to_string(), Json::Str(method.name().to_string()));
+    Json::Obj(obj)
 }
 
-/// Parse a [`PruneMethod`] from its JSON object form (missing fields
-/// fall back to the CLI defaults).
-pub fn method_from_json(mj: &Json) -> Result<PruneMethod> {
-    let warmstart = |s: Option<&str>| -> Result<Warmstart> {
-        Ok(match s.unwrap_or("wanda") {
-            "wanda" => Warmstart::Wanda,
-            "ria" => Warmstart::Ria,
-            "magnitude" => Warmstart::Magnitude,
-            other => bail!("unknown warmstart {other:?}"),
-        })
-    };
-    Ok(match mj.at(&["kind"]).as_str().unwrap_or("sparsefw") {
-        "magnitude" => PruneMethod::Magnitude,
-        "wanda" => PruneMethod::Wanda,
-        "ria" => PruneMethod::Ria,
-        "sparsegpt" => PruneMethod::SparseGpt {
-            percdamp: mj.at(&["percdamp"]).as_f64().unwrap_or(0.01),
-            blocksize: mj.at(&["blocksize"]).as_usize().unwrap_or(128),
-        },
-        "sparsefw" => PruneMethod::SparseFw(SparseFwConfig {
-            iters: mj.at(&["iters"]).as_usize().unwrap_or(500),
-            alpha: mj.at(&["alpha"]).as_f64().unwrap_or(0.9),
-            warmstart: warmstart(mj.at(&["warmstart"]).as_str())?,
-            trace_every: mj.at(&["trace_every"]).as_usize().unwrap_or(0),
-            use_chunk: mj.at(&["use_chunk"]).as_bool().unwrap_or(true),
-            keep_best: mj.at(&["keep_best"]).as_bool().unwrap_or(true),
-            line_search: mj.at(&["line_search"]).as_bool().unwrap_or(false),
-            engine: FwEngine::parse(mj.at(&["engine"]).as_str().unwrap_or("incremental"))?,
-            refresh_every: mj
-                .at(&["refresh_every"])
-                .as_usize()
-                .unwrap_or(DEFAULT_REFRESH_EVERY),
-        }),
-        other => bail!("unknown method {other:?}"),
-    })
+/// Parse a [`Method`] from its JSON object form through the global
+/// [`MethodRegistry`].  A missing `"kind"` defaults to `"sparsefw"`
+/// (the enum-era behaviour); missing config fields fall back to the
+/// method's defaults, but *unknown* fields are a named hard error
+/// (a typo'd `"alhpa"` must not silently mean "default α").
+pub fn method_from_json(mj: &Json) -> Result<Method> {
+    let kind = mj.at(&["kind"]).as_str().unwrap_or("sparsefw");
+    MethodRegistry::global().method_from_json(kind, mj)
 }
 
 /// Serialize a [`SparsityPattern`] to its JSON object form.
@@ -204,7 +161,7 @@ pub fn pattern_from_json(pj: &Json) -> Result<SparsityPattern> {
 #[derive(Clone, Debug)]
 pub struct PruneRunConfig {
     pub model: String,
-    pub method: PruneMethod,
+    pub method: Method,
     pub pattern: SparsityPattern,
     pub calib_samples: usize,
     pub calib_seed: u64,
@@ -215,7 +172,7 @@ impl Default for PruneRunConfig {
     fn default() -> Self {
         Self {
             model: "tiny".into(),
-            method: PruneMethod::SparseFw(SparseFwConfig::default()),
+            method: Method::sparsefw(SparseFwConfig::default()),
             pattern: SparsityPattern::Unstructured { sparsity: 0.6 },
             calib_samples: 128,
             calib_seed: 7,
@@ -251,13 +208,14 @@ impl PruneRunConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pruner::{FwEngine, Warmstart};
     use crate::util::json;
 
     #[test]
     fn run_config_roundtrip() {
         let cfg = PruneRunConfig {
             model: "small".into(),
-            method: PruneMethod::SparseFw(SparseFwConfig {
+            method: Method::sparsefw(SparseFwConfig {
                 iters: 123,
                 alpha: 0.25,
                 warmstart: Warmstart::Ria,
@@ -279,18 +237,36 @@ mod tests {
         assert_eq!(back.calib_samples, 64);
         assert_eq!(back.calib_seed, 99);
         assert_eq!(back.backend, Backend::PjrtChunk);
-        match back.method {
-            PruneMethod::SparseFw(c) => {
-                assert_eq!(c.iters, 123);
-                assert_eq!(c.alpha, 0.25);
-                assert_eq!(c.warmstart, Warmstart::Ria);
-                assert!(!c.use_chunk);
-                assert_eq!(c.engine, FwEngine::Dense);
-                assert_eq!(c.refresh_every, 32);
-            }
-            _ => panic!("wrong method"),
-        }
+        // the parsed method is the same registry method with the same
+        // config — compare the canonical JSON forms
+        assert_eq!(back.method.name(), "sparsefw");
+        assert_eq!(
+            json::to_string(&method_to_json(&cfg.method)),
+            json::to_string(&method_to_json(&back.method))
+        );
+        let mj = method_to_json(&back.method);
+        assert_eq!(mj.at(&["iters"]).as_usize(), Some(123));
+        assert_eq!(mj.at(&["warmstart"]).as_str(), Some("ria"));
+        assert_eq!(mj.at(&["engine"]).as_str(), Some("dense"));
+        assert_eq!(mj.at(&["refresh_every"]).as_usize(), Some(32));
         assert_eq!(back.pattern, SparsityPattern::NM { keep: 2, block: 4 });
+    }
+
+    #[test]
+    fn method_json_unknown_kind_and_field_are_errors() {
+        let err = method_from_json(&json::parse(r#"{"kind": "prune-o-matic"}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("prune-o-matic"), "{err}");
+        assert!(err.contains("wanda"), "error must name the known set: {err}");
+        // missing kind defaults to sparsefw (enum-era behaviour)...
+        let m = method_from_json(&json::parse("{}").unwrap()).unwrap();
+        assert_eq!(m.name(), "sparsefw");
+        // ...but unknown fields inside a known method are hard errors
+        let err = method_from_json(&json::parse(r#"{"kind": "sparsefw", "alhpa": 0.1}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("alhpa"), "{err}");
     }
 
     #[test]

@@ -5,20 +5,21 @@
 //! so *what* to run ([`JobSpec`]) separates cleanly from *how* to run
 //! it ([`PruneSession`]).
 //!
-//! * [`JobSpec`] — model, method, [`Allocation`] (uniform pattern or
-//!   OWL-style per-layer sparsities), backend, calibration sample/seed,
-//!   tracing and eval options.  Round-trips through [`crate::util::json`]
-//!   so jobs can be saved, replayed, and submitted as files
-//!   (`sparsefw prune --spec job.json`).
+//! * [`JobSpec`] — model, [`crate::pruner::Method`] (any registered
+//!   [`crate::pruner::LayerPruner`]), [`Allocation`] (uniform pattern
+//!   or OWL-style per-layer sparsities), backend, calibration
+//!   sample/seed, refinement post-passes, tracing and eval options.
+//!   Round-trips through [`crate::util::json`] so jobs can be saved,
+//!   replayed, and submitted as files (`sparsefw prune --spec
+//!   job.json`); the method JSON is parsed through the global
+//!   [`crate::pruner::MethodRegistry`], so enum-era saved specs replay
+//!   bit-identically and newly registered methods deserialize with no
+//!   coordinator changes.
 //! * [`PruneSession`] — owns the [`Workspace`], lazily loads models and
 //!   token bins, memoizes [`Calibration`] by `(model, samples, seed)`
 //!   (report sweeps and repeated jobs stop recollecting grams), creates
 //!   the PJRT runtime on first use, and emits per-layer [`LayerEvent`]
 //!   progress callbacks.
-//!
-//! [`PruneSession::execute`] replaces the four legacy
-//! `PrunePipeline::run*` entry points with one unified dispatch; in
-//! particular non-uniform allocation now works on every backend.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -31,12 +32,12 @@ use crate::data::TokenBin;
 use crate::eval::{perplexity_native, perplexity_pjrt, zero_shot, ZeroShotReport};
 use crate::model::Gpt;
 use crate::pruner::allocation::{owl_sparsities, OwlConfig};
-use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern};
+use crate::pruner::{Method, RefinePass, SparsityPattern};
 use crate::runtime::PjrtRuntime;
 use crate::tensor::Mat;
 use crate::util::json::{self, Json};
 
-use super::{per_layer_patterns, run_blocks, run_layers, PruneResult};
+use super::{per_layer_patterns, run_blocks, run_layers, LayerRun, PruneResult};
 
 // ---------------------------------------------------------------------------
 // Allocation
@@ -176,7 +177,10 @@ impl Default for EvalSpec {
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub model: String,
-    pub method: PruneMethod,
+    /// Any registered pruning method ([`crate::pruner::LayerPruner`]
+    /// behind a cloneable handle; enum-era `PruneMethod` values convert
+    /// via `.into()`).
+    pub method: Method,
     pub allocation: Allocation,
     pub backend: Backend,
     pub calib_samples: usize,
@@ -190,6 +194,11 @@ pub struct JobSpec {
     /// Record an optimization trace point every N iterations (SparseFW
     /// only; 0 = leave the method's own `trace_every` untouched).
     pub trace_every: usize,
+    /// Refinement post-passes applied to every layer after the method
+    /// returns (`--refine swaps,update`).  Empty — and absent from the
+    /// JSON form — by default, so enum-era saved specs replay
+    /// bit-identically.
+    pub refine: Vec<RefinePass>,
     /// Evaluate the masked model after pruning.
     pub eval: Option<EvalSpec>,
 }
@@ -198,13 +207,14 @@ impl Default for JobSpec {
     fn default() -> Self {
         Self {
             model: "tiny".into(),
-            method: PruneMethod::SparseFw(SparseFwConfig::default()),
+            method: Method::default(),
             allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
             backend: Backend::Native,
             calib_samples: 128,
             calib_seed: 7,
             calib_policy: CalibPolicy::Dense,
             trace_every: 0,
+            refine: Vec::new(),
             eval: None,
         }
     }
@@ -214,7 +224,7 @@ impl JobSpec {
     /// One-line summary for logs.
     pub fn label(&self) -> String {
         format!(
-            "{} · {} · {} · {} backend · {} samples (seed {}){}",
+            "{} · {} · {} · {} backend · {} samples (seed {}){}{}",
             self.model,
             self.method.label(),
             self.allocation.label(),
@@ -226,20 +236,12 @@ impl JobSpec {
             } else {
                 String::new()
             },
+            if self.refine.is_empty() {
+                String::new()
+            } else {
+                format!(" · refine {}", RefinePass::list_label(&self.refine))
+            },
         )
-    }
-
-    /// The method with the spec-level tracing override applied.
-    pub fn effective_method(&self) -> PruneMethod {
-        if self.trace_every > 0 {
-            if let PruneMethod::SparseFw(c) = &self.method {
-                return PruneMethod::SparseFw(SparseFwConfig {
-                    trace_every: self.trace_every,
-                    ..c.clone()
-                });
-            }
-        }
-        self.method.clone()
     }
 
     pub fn to_json(&self) -> Json {
@@ -253,6 +255,9 @@ impl JobSpec {
             ("calib_policy", self.calib_policy.label().into()),
             ("trace_every", self.trace_every.into()),
         ];
+        if !self.refine.is_empty() {
+            fields.push(("refine", RefinePass::list_to_json(&self.refine)));
+        }
         if let Some(e) = &self.eval {
             fields.push((
                 "eval",
@@ -289,6 +294,8 @@ impl JobSpec {
                 v.at(&["calib_policy"]).as_str().unwrap_or("off"),
             )?,
             trace_every: v.at(&["trace_every"]).as_usize().unwrap_or(0),
+            // absent in enum-era specs → no refinement, bit-identical
+            refine: RefinePass::list_from_json(v.at(&["refine"]))?,
             eval,
         })
     }
@@ -705,7 +712,6 @@ impl PruneSession {
         if spec.backend != Backend::Native {
             self.ensure_runtime()?;
         }
-        let method = spec.effective_method();
         crate::debuglog!("executing job: {}", spec.label());
         let prune = if spec.calib_policy.is_propagated() {
             // resolve the allocation first: an unresolvable one (OWL)
@@ -717,16 +723,14 @@ impl PruneSession {
             let state = CalibState::from_prefix(model, prefix)?;
             let runtime = self.runtime.as_ref();
             let progress = self.progress.as_deref();
-            run_blocks(
-                model,
-                state,
-                &method,
-                &patterns,
-                spec.calib_policy,
-                spec.backend,
-                runtime,
+            let run = LayerRun {
+                method: &spec.method,
+                patterns: &patterns,
+                refine: &spec.refine,
+                trace_every: spec.trace_every,
                 progress,
-            )?
+            };
+            run_blocks(model, state, &run, spec.calib_policy, spec.backend, runtime)?
         } else {
             self.calibration(&spec.model, spec.calib_samples, spec.calib_seed)?;
             let model = &self.models[&spec.model];
@@ -735,7 +739,14 @@ impl PruneSession {
             let patterns = spec.allocation.resolve(model, Some(calib))?;
             let runtime = self.runtime.as_ref();
             let progress = self.progress.as_deref();
-            run_layers(model, calib, &method, &patterns, spec.backend, runtime, progress)?
+            let run = LayerRun {
+                method: &spec.method,
+                patterns: &patterns,
+                refine: &spec.refine,
+                trace_every: spec.trace_every,
+                progress,
+            };
+            run_layers(model, calib, &run, spec.backend, runtime)?
         };
 
         let mut pruned_sparsity = None;
@@ -759,7 +770,7 @@ mod tests {
     use crate::data::TokenBin;
     use crate::model::testutil::{random_model, tiny_cfg};
     use crate::pruner::mask::mask_satisfies;
-    use crate::pruner::Warmstart;
+    use crate::pruner::{SparseFwConfig, Warmstart};
 
     fn session() -> PruneSession {
         let cfg = tiny_cfg();
@@ -773,7 +784,7 @@ mod tests {
     fn base_spec() -> JobSpec {
         JobSpec {
             model: "test".into(),
-            method: PruneMethod::SparseFw(SparseFwConfig {
+            method: Method::sparsefw(SparseFwConfig {
                 iters: 60,
                 alpha: 0.5,
                 warmstart: Warmstart::Ria,
@@ -785,6 +796,7 @@ mod tests {
             calib_seed: 2,
             calib_policy: CalibPolicy::Dense,
             trace_every: 0,
+            refine: Vec::new(),
             eval: None,
         }
     }
@@ -828,6 +840,59 @@ mod tests {
     }
 
     #[test]
+    fn refine_json_roundtrip_and_execute_plumbing() {
+        // refine survives the JSON round trip…
+        let spec = JobSpec {
+            method: Method::wanda(),
+            refine: vec![RefinePass::swaps(), RefinePass::update()],
+            ..base_spec()
+        };
+        assert!(spec.label().contains("refine swaps+update"), "{}", spec.label());
+        let back = JobSpec::from_json(&json::parse(&json::to_string(&spec.to_json())).unwrap())
+            .unwrap();
+        assert_eq!(back.refine, spec.refine);
+        // …an unrefined spec serializes with no "refine" field at all
+        // (bit-identical to the enum-era layout)…
+        let plain = JobSpec { method: Method::wanda(), ..base_spec() };
+        assert!(plain.to_json().get("refine").is_none());
+        // …and execution reports the aggregate objective improvement
+        let mut s = session();
+        let plain_res = s.execute(&plain).unwrap();
+        assert!(plain_res.prune.refine_obj_delta.is_none());
+        let refined = s.execute(&spec).unwrap();
+        let delta = refined.prune.refine_obj_delta.expect("refine ran");
+        assert!(delta >= 0.0);
+        for (k, &obj) in &plain_res.prune.layer_objs {
+            assert!(
+                refined.prune.layer_objs[k] <= obj * (1.0 + 1e-9),
+                "{k}: refine must never raise the layer objective"
+            );
+        }
+    }
+
+    #[test]
+    fn refine_composes_with_staged_propagation() {
+        // the refined layer is what downstream grams must see: run the
+        // staged pipeline with refinement and check feasibility + the
+        // recorded delta
+        let mut s = session();
+        let spec = JobSpec {
+            method: Method::wanda(),
+            calib_policy: CalibPolicy::PropagateBlock,
+            refine: vec![RefinePass::swaps()],
+            ..base_spec()
+        };
+        let res = s.execute(&spec).unwrap();
+        assert_eq!(res.prune.masks.len(), 8);
+        let pat = SparsityPattern::PerRow { sparsity: 0.5 };
+        for m in res.prune.masks.values() {
+            assert!(mask_satisfies(m, &pat));
+        }
+        assert!(res.prune.refine_obj_delta.is_some());
+        assert!(res.prune.staged.is_some());
+    }
+
+    #[test]
     fn staged_execute_memoizes_embed_prefix_and_streams_grams() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         use std::sync::Arc;
@@ -840,7 +905,7 @@ mod tests {
         });
         for policy in [CalibPolicy::PropagateBlock, CalibPolicy::PropagateLayer] {
             let spec = JobSpec {
-                method: PruneMethod::Wanda,
+                method: Method::wanda(),
                 calib_policy: policy,
                 ..base_spec()
             };
@@ -876,11 +941,11 @@ mod tests {
         // propagation must pick exactly the dense masks there
         let mut s = session();
         let dense = s
-            .execute(&JobSpec { method: PruneMethod::Wanda, ..base_spec() })
+            .execute(&JobSpec { method: Method::wanda(), ..base_spec() })
             .unwrap();
         let staged = s
             .execute(&JobSpec {
-                method: PruneMethod::Wanda,
+                method: Method::wanda(),
                 calib_policy: CalibPolicy::PropagateBlock,
                 ..base_spec()
             })
@@ -897,7 +962,7 @@ mod tests {
     fn owl_allocation_requires_dense_policy() {
         let mut s = session();
         let spec = JobSpec {
-            method: PruneMethod::Wanda,
+            method: Method::wanda(),
             allocation: Allocation::owl(0.6),
             calib_policy: CalibPolicy::PropagateBlock,
             ..base_spec()
@@ -928,7 +993,7 @@ mod tests {
     #[test]
     fn session_memoizes_calibration() {
         let mut s = session();
-        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        let spec = JobSpec { method: Method::wanda(), ..base_spec() };
         s.execute(&spec).unwrap();
         s.execute(&spec).unwrap();
         assert_eq!(s.calib_stats(), (1, 1), "second run must hit the memo");
@@ -941,7 +1006,7 @@ mod tests {
     fn calib_cache_is_lru_bounded() {
         let mut s = session();
         s.set_calib_cache_capacity(2);
-        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        let spec = JobSpec { method: Method::wanda(), ..base_spec() };
         for seed in [1u64, 2, 3] {
             s.execute(&JobSpec { calib_seed: seed, ..spec.clone() }).unwrap();
         }
@@ -962,7 +1027,7 @@ mod tests {
     #[test]
     fn shrinking_calib_capacity_evicts_immediately() {
         let mut s = session();
-        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        let spec = JobSpec { method: Method::wanda(), ..base_spec() };
         for seed in [1u64, 2, 3] {
             s.execute(&JobSpec { calib_seed: seed, ..spec.clone() }).unwrap();
         }
@@ -979,7 +1044,7 @@ mod tests {
         let mut s = session();
         let spec = JobSpec {
             backend: Backend::Pjrt,
-            method: PruneMethod::Wanda,
+            method: Method::wanda(),
             ..base_spec()
         };
         let err = format!("{:#}", s.execute(&spec).unwrap_err());
@@ -995,7 +1060,7 @@ mod tests {
             map.insert(l.name.clone(), if i % 2 == 0 { 0.5 } else { 0.7 });
         }
         let spec = JobSpec {
-            method: PruneMethod::Wanda,
+            method: Method::wanda(),
             allocation: Allocation::PerLayer(map.clone()),
             ..base_spec()
         };
@@ -1010,7 +1075,7 @@ mod tests {
     fn per_layer_allocation_rejects_missing_layer() {
         let mut s = session();
         let spec = JobSpec {
-            method: PruneMethod::Wanda,
+            method: Method::wanda(),
             allocation: Allocation::PerLayer(BTreeMap::new()),
             ..base_spec()
         };
@@ -1022,7 +1087,7 @@ mod tests {
     fn owl_allocation_resolves_and_executes() {
         let mut s = session();
         let spec = JobSpec {
-            method: PruneMethod::Wanda,
+            method: Method::wanda(),
             allocation: Allocation::owl(0.6),
             eval: Some(EvalSpec { seqs: 4, zs_items: 6 }),
             ..base_spec()
@@ -1072,7 +1137,7 @@ mod tests {
             assert_eq!(e.total, 8);
             c.fetch_add(1, Ordering::Relaxed);
         });
-        let spec = JobSpec { method: PruneMethod::Wanda, ..base_spec() };
+        let spec = JobSpec { method: Method::wanda(), ..base_spec() };
         s.execute(&spec).unwrap();
         assert_eq!(count.load(Ordering::Relaxed), 8);
         s.clear_progress();

@@ -3,10 +3,11 @@
 //! selected kernel backend, and assembles the masked model + metrics.
 //!
 //! Public API: a declarative [`JobSpec`] describes one pruning run as
-//! data, and a [`PruneSession`] executes specs against an artifacts
-//! workspace with memoized models and calibrations (see [`job`]).  The
-//! legacy [`PrunePipeline`] entry points are thin deprecated shims over
-//! the same unified dispatch.
+//! data — including its [`crate::pruner::Method`] (any registered
+//! [`crate::pruner::LayerPruner`]) and optional
+//! [`crate::pruner::RefinePass`] post-passes — and a [`PruneSession`]
+//! executes specs against an artifacts workspace with memoized models
+//! and calibrations (see [`job`]).
 //!
 //! Scheduling: under the one-shot dense calibration ([`run_layers`]),
 //! layers are independent given the grams (the paper prunes them
@@ -23,6 +24,11 @@
 //! a working model, and re-forwards the hiddens through the masked
 //! block — so every downstream layer is calibrated against the inputs
 //! it will actually see, at O(block) peak gram memory.
+//!
+//! Refinement post-passes run per layer, right after the method
+//! returns and before masks propagate (so staged grams see the
+//! *refined* layer) — the composition point the open method API
+//! exists for.
 
 pub mod job;
 pub mod schedule;
@@ -40,8 +46,10 @@ use anyhow::{ensure, Context, Result};
 use crate::calib::{BlockSlot, CalibPolicy, CalibState, Calibration};
 use crate::config::Backend;
 use crate::model::{Gpt, LayerInfo};
+use crate::pruner::sparsefw::FwKernels;
 use crate::pruner::{
-    FwTrace, LayerPruneOutput, NativeKernels, PruneMethod, SparsityPattern,
+    refine, FwTrace, LayerCtx, LayerPruneOutput, Method, NativeKernels, RefinePass,
+    SparsityPattern,
 };
 use crate::runtime::{PjrtKernels, PjrtRuntime};
 use crate::tensor::Mat;
@@ -65,7 +73,8 @@ pub struct StagedStats {
 /// Result of pruning every target layer of a model.
 pub struct PruneResult {
     pub masks: BTreeMap<String, Mat>,
-    /// SparseGPT-style reconstructed weights (when the method has them).
+    /// Reconstructed weights (SparseGPT-style methods, or the
+    /// weight-update refine pass).
     pub new_weights: BTreeMap<String, Mat>,
     /// Final per-layer pruning error L(M).
     pub layer_objs: BTreeMap<String, f64>,
@@ -77,6 +86,9 @@ pub struct PruneResult {
     /// Σ FW iterations executed across layers (0 for greedy methods) —
     /// with `wall_seconds` this gives the server's iterations/sec.
     pub fw_iters: usize,
+    /// Σ objective improvement contributed by refine post-passes across
+    /// layers (`None` when the job ran no refine passes).
+    pub refine_obj_delta: Option<f64>,
     /// Calibration-memory stats when the run used staged propagation
     /// ([`run_blocks`]); `None` for one-shot dense calibration.
     pub staged: Option<StagedStats>,
@@ -112,35 +124,74 @@ impl PruneResult {
     }
 }
 
+/// The per-layer work one job dispatches: method, resolved patterns,
+/// refine passes, tracing override, progress sink.  Backend/runtime
+/// stay separate arguments so the layer-parallel native path never
+/// captures the (non-`Sync`) PJRT runtime.
+pub(crate) struct LayerRun<'a> {
+    pub method: &'a Method,
+    pub patterns: &'a [SparsityPattern],
+    pub refine: &'a [RefinePass],
+    /// Spec-level tracing override (0 = method's own setting).
+    pub trace_every: usize,
+    pub progress: Option<&'a (dyn Fn(&LayerEvent) + Send + Sync)>,
+}
+
+impl<'a> LayerRun<'a> {
+    /// Prune one layer: method via [`LayerCtx`], then refine passes.
+    fn prune_one(
+        &self,
+        kernels: &(dyn FwKernels + '_),
+        layer: &str,
+        w: &Mat,
+        g: &Mat,
+        pattern: &SparsityPattern,
+    ) -> Result<LayerPruneOutput> {
+        let ctx = LayerCtx {
+            kernels,
+            w,
+            g,
+            pattern,
+            layer,
+            trace_every: self.trace_every,
+        };
+        let mut out = self
+            .method
+            .prune_layer(&ctx)
+            .with_context(|| format!("method {} on layer {layer}", self.method.label()))?;
+        refine::apply_refine(self.refine, kernels, w, g, pattern, &mut out)
+            .with_context(|| format!("refining layer {layer}"))?;
+        Ok(out)
+    }
+}
+
 /// Unified per-layer dispatch: prune `model`'s layers against `calib`
 /// with one resolved [`SparsityPattern`] per layer, on any backend.
 ///
 /// This is the single execution path behind [`PruneSession::execute`]
-/// and the deprecated [`PrunePipeline`] shims.  The native backend is
-/// layer-parallel; PJRT backends run sequentially.  `progress` (when
-/// set) receives one [`LayerEvent`] per completed layer, in completion
-/// order — from worker threads on the native backend.
+/// for dense calibration.  The native backend is layer-parallel; PJRT
+/// backends run sequentially.  `run.progress` (when set) receives one
+/// [`LayerEvent`] per completed layer, in completion order — from
+/// worker threads on the native backend.
 pub(crate) fn run_layers(
     model: &Gpt,
     calib: &Calibration,
-    method: &PruneMethod,
-    patterns: &[SparsityPattern],
+    run: &LayerRun,
     backend: Backend,
     runtime: Option<&PjrtRuntime>,
-    progress: Option<&(dyn Fn(&LayerEvent) + Send + Sync)>,
 ) -> Result<PruneResult> {
     let t0 = Instant::now();
     let layers = model.cfg.layers();
     anyhow::ensure!(
-        layers.len() == patterns.len(),
+        layers.len() == run.patterns.len(),
         "pattern count {} != layer count {}",
-        patterns.len(),
+        run.patterns.len(),
         layers.len()
     );
     let total = layers.len();
     let completed = AtomicUsize::new(0);
     let emit = |l: &LayerInfo, out: &LayerPruneOutput| {
-        if let Some(cb) = progress {
+        if let Some(cb) = run.progress {
             let index = completed.fetch_add(1, Ordering::Relaxed);
             cb(&LayerEvent { layer: l.name.clone(), index, total, obj: out.obj });
         }
@@ -156,7 +207,7 @@ pub(crate) fn run_layers(
                 let l = &layers[i];
                 let w = model.mat(&l.name);
                 let g = calib.try_gram(&l.name)?;
-                let out = method.prune_layer(&NativeKernels, w, g, &patterns[i])?;
+                let out = run.prune_one(&NativeKernels, &l.name, w, g, &run.patterns[i])?;
                 emit(l, &out);
                 Ok((l.clone(), out))
             })
@@ -174,7 +225,7 @@ pub(crate) fn run_layers(
                 crate::debuglog!("pjrt-pruning layer {} ({}x{})", l.name, l.d_out, l.d_in);
                 // abort at the first failure: the remaining sequential
                 // PJRT work would be discarded anyway
-                let out = method.prune_layer(&kernels, w, g, &patterns[i])?;
+                let out = run.prune_one(&kernels, &l.name, w, g, &run.patterns[i])?;
                 emit(l, &out);
                 outputs.push(Ok((l.clone(), out)));
             }
@@ -185,9 +236,9 @@ pub(crate) fn run_layers(
 }
 
 /// Write one pruned layer's effect into the staged working model: the
-/// mask multiplied into the weights, or (for reconstruction methods)
-/// the replacement weights verbatim — what downstream blocks' grams
-/// must see.
+/// mask multiplied into the weights, or (for reconstruction methods
+/// and the weight-update refine pass) the replacement weights verbatim
+/// — what downstream blocks' grams must see.
 fn apply_output(work: &mut Gpt, l: &LayerInfo, out: &LayerPruneOutput) -> Result<()> {
     let w = work
         .params
@@ -224,30 +275,27 @@ fn apply_output(work: &mut Gpt, l: &LayerInfo, out: &LayerPruneOutput) -> Result
 /// backend; `layer` granularity is strictly sequential and recomputes
 /// the `wo`/`wdown` grams after `wqkv`/`wup` are pruned.  Grams are
 /// streamed one set at a time ([`StagedStats::peak_live_gram_sets`]).
-#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_blocks(
     model: &Gpt,
     mut state: CalibState,
-    method: &PruneMethod,
-    patterns: &[SparsityPattern],
+    run: &LayerRun,
     policy: CalibPolicy,
     backend: Backend,
     runtime: Option<&PjrtRuntime>,
-    progress: Option<&(dyn Fn(&LayerEvent) + Send + Sync)>,
 ) -> Result<PruneResult> {
     let t0 = Instant::now();
     let layers = model.cfg.layers();
     ensure!(
-        layers.len() == patterns.len(),
+        layers.len() == run.patterns.len(),
         "pattern count {} != layer count {}",
-        patterns.len(),
+        run.patterns.len(),
         layers.len()
     );
     ensure!(policy.is_propagated(), "run_blocks requires a propagated CalibPolicy");
     let total = layers.len();
     let completed = AtomicUsize::new(0);
     let emit = |l: &LayerInfo, out: &LayerPruneOutput| {
-        if let Some(cb) = progress {
+        if let Some(cb) = run.progress {
             let index = completed.fetch_add(1, Ordering::Relaxed);
             cb(&LayerEvent { layer: l.name.clone(), index, total, obj: out.obj });
         }
@@ -284,14 +332,26 @@ pub(crate) fn run_blocks(
                     None => parallel_map(4, |j| {
                         let l = &block_layers[j];
                         let g = grams.gram(&l.name)?;
-                        method.prune_layer(&NativeKernels, model.mat(&l.name), g, &patterns[4 * bi + j])
+                        run.prune_one(
+                            &NativeKernels,
+                            &l.name,
+                            model.mat(&l.name),
+                            g,
+                            &run.patterns[4 * bi + j],
+                        )
                     }),
                     Some(kernels) => block_layers
                         .iter()
                         .enumerate()
                         .map(|(j, l)| {
                             let g = grams.gram(&l.name)?;
-                            method.prune_layer(kernels, model.mat(&l.name), g, &patterns[4 * bi + j])
+                            run.prune_one(
+                                kernels,
+                                &l.name,
+                                model.mat(&l.name),
+                                g,
+                                &run.patterns[4 * bi + j],
+                            )
                         })
                         .collect(),
                 };
@@ -310,10 +370,20 @@ pub(crate) fn run_blocks(
                     let grams = state.layer_gram(&work, bi, *slot)?;
                     let g = grams.gram(&l.name)?;
                     let out = match &pjrt_kernels {
-                        None => method.prune_layer(&NativeKernels, model.mat(&l.name), g, &patterns[4 * bi + j])?,
-                        Some(kernels) => {
-                            method.prune_layer(kernels, model.mat(&l.name), g, &patterns[4 * bi + j])?
-                        }
+                        None => run.prune_one(
+                            &NativeKernels,
+                            &l.name,
+                            model.mat(&l.name),
+                            g,
+                            &run.patterns[4 * bi + j],
+                        )?,
+                        Some(kernels) => run.prune_one(
+                            kernels,
+                            &l.name,
+                            model.mat(&l.name),
+                            g,
+                            &run.patterns[4 * bi + j],
+                        )?,
                     };
                     drop(grams);
                     emit(l, &out);
@@ -371,6 +441,7 @@ fn collect_outputs(
         traces: BTreeMap::new(),
         wall_seconds: 0.0,
         fw_iters: 0,
+        refine_obj_delta: None,
         staged: None,
     };
     for out in outputs {
@@ -379,6 +450,9 @@ fn collect_outputs(
         result.layer_objs.insert(l.name.clone(), o.obj);
         if let Some(w) = o.warm_obj {
             result.warm_objs.insert(l.name.clone(), w);
+        }
+        if let Some(d) = o.refine_obj_delta {
+            *result.refine_obj_delta.get_or_insert(0.0) += d;
         }
         if let Some(nw) = o.new_weights {
             result.new_weights.insert(l.name.clone(), nw);
@@ -392,76 +466,7 @@ fn collect_outputs(
     Ok(result)
 }
 
-/// Coordinates pruning of one model against one calibration result.
-///
-/// Deprecated: build a [`JobSpec`] and run it through
-/// [`PruneSession::execute`] instead — the session adds unified backend
-/// dispatch (non-uniform allocation on PJRT too), calibration
-/// memoization, and progress events.  These shims remain for borrowed
-/// model/calib call sites and delegate to the same dispatch.
-pub struct PrunePipeline<'a> {
-    pub model: &'a Gpt,
-    pub calib: &'a Calibration,
-}
-
-impl<'a> PrunePipeline<'a> {
-    pub fn new(model: &'a Gpt, calib: &'a Calibration) -> Self {
-        Self { model, calib }
-    }
-
-    /// Non-uniform (OWL-style) run: per-layer sparsities applied as
-    /// per-row budgets.  Native backend, layer-parallel.
-    #[deprecated(note = "use PruneSession::execute with Allocation::PerLayer")]
-    pub fn run_nonuniform(
-        &self,
-        method: &PruneMethod,
-        sparsities: &BTreeMap<String, f64>,
-    ) -> Result<PruneResult> {
-        let patterns = per_layer_patterns(self.model, sparsities)?;
-        run_layers(self.model, self.calib, method, &patterns, Backend::Native, None, None)
-    }
-
-    /// Prune every layer with the native backend, layer-parallel.
-    #[deprecated(note = "use PruneSession::execute(&JobSpec)")]
-    pub fn run(&self, method: &PruneMethod, pattern: &SparsityPattern) -> Result<PruneResult> {
-        let patterns = vec![pattern.clone(); self.model.cfg.layers().len()];
-        run_layers(self.model, self.calib, method, &patterns, Backend::Native, None, None)
-    }
-
-    /// Prune sequentially through the PJRT backend (AOT Pallas kernels).
-    #[deprecated(note = "use PruneSession::execute(&JobSpec) with a PJRT backend")]
-    pub fn run_pjrt(
-        &self,
-        runtime: &PjrtRuntime,
-        method: &PruneMethod,
-        pattern: &SparsityPattern,
-        backend: Backend,
-    ) -> Result<PruneResult> {
-        let backend = match backend {
-            // historical behaviour: run_pjrt always went through PJRT
-            Backend::Native | Backend::Pjrt => Backend::Pjrt,
-            Backend::PjrtChunk => Backend::PjrtChunk,
-        };
-        let patterns = vec![pattern.clone(); self.model.cfg.layers().len()];
-        run_layers(self.model, self.calib, method, &patterns, backend, Some(runtime), None)
-    }
-
-    /// Backend dispatch helper.
-    #[deprecated(note = "use PruneSession::execute(&JobSpec)")]
-    pub fn run_with_backend(
-        &self,
-        backend: Backend,
-        runtime: Option<&PjrtRuntime>,
-        method: &PruneMethod,
-        pattern: &SparsityPattern,
-    ) -> Result<PruneResult> {
-        let patterns = vec![pattern.clone(); self.model.cfg.layers().len()];
-        run_layers(self.model, self.calib, method, &patterns, backend, runtime, None)
-    }
-}
-
 #[cfg(test)]
-#[allow(deprecated)] // the shims stay covered until they are removed
 mod tests {
     use super::*;
     use crate::data::TokenBin;
@@ -477,17 +482,35 @@ mod tests {
         (model, calib)
     }
 
+    /// Uniform-pattern dispatch on the native backend.
+    fn run_uniform(
+        model: &Gpt,
+        calib: &Calibration,
+        method: &Method,
+        pattern: &SparsityPattern,
+        refine: &[RefinePass],
+    ) -> Result<PruneResult> {
+        let patterns = vec![pattern.clone(); model.cfg.layers().len()];
+        let run = LayerRun {
+            method,
+            patterns: &patterns,
+            refine,
+            trace_every: 0,
+            progress: None,
+        };
+        run_layers(model, calib, &run, Backend::Native, None)
+    }
+
     #[test]
     fn wanda_pipeline_end_to_end() {
         let (model, calib) = setup();
         let pat = SparsityPattern::PerRow { sparsity: 0.5 };
-        let res = PrunePipeline::new(&model, &calib)
-            .run(&PruneMethod::Wanda, &pat)
-            .unwrap();
+        let res = run_uniform(&model, &calib, &Method::wanda(), &pat, &[]).unwrap();
         assert_eq!(res.masks.len(), 8);
         for m in res.masks.values() {
             assert!(mask_satisfies(m, &pat));
         }
+        assert!(res.refine_obj_delta.is_none(), "no refine passes ran");
         let pruned = res.apply(&model).unwrap();
         assert!((pruned.pruned_sparsity() - 0.5).abs() < 0.02);
     }
@@ -496,19 +519,20 @@ mod tests {
     fn sparsefw_beats_wanda_locally() {
         let (model, calib) = setup();
         let pat = SparsityPattern::PerRow { sparsity: 0.6 };
-        let pipe = PrunePipeline::new(&model, &calib);
-        let wanda = pipe.run(&PruneMethod::Wanda, &pat).unwrap();
-        let fw = pipe
-            .run(
-                &PruneMethod::SparseFw(SparseFwConfig {
-                    iters: 120,
-                    alpha: 0.5,
-                    warmstart: Warmstart::Wanda,
-                    ..Default::default()
-                }),
-                &pat,
-            )
-            .unwrap();
+        let wanda = run_uniform(&model, &calib, &Method::wanda(), &pat, &[]).unwrap();
+        let fw = run_uniform(
+            &model,
+            &calib,
+            &Method::sparsefw(SparseFwConfig {
+                iters: 120,
+                alpha: 0.5,
+                warmstart: Warmstart::Wanda,
+                ..Default::default()
+            }),
+            &pat,
+            &[],
+        )
+        .unwrap();
         // every layer objective must be <= the wanda objective
         for (k, &wobj) in &wanda.layer_objs {
             let fobj = fw.layer_objs[k];
@@ -523,9 +547,16 @@ mod tests {
         let (model, calib) = setup();
         let alloc = owl_sparsities(&model, &calib, 0.6, &OwlConfig::default()).unwrap();
         assert!((mean_sparsity(&model, &alloc) - 0.6).abs() < 1e-9);
-        let res = PrunePipeline::new(&model, &calib)
-            .run_nonuniform(&PruneMethod::Wanda, &alloc)
-            .unwrap();
+        let patterns = per_layer_patterns(&model, &alloc).unwrap();
+        let method = Method::wanda();
+        let run = LayerRun {
+            method: &method,
+            patterns: &patterns,
+            refine: &[],
+            trace_every: 0,
+            progress: None,
+        };
+        let res = run_layers(&model, &calib, &run, Backend::Native, None).unwrap();
         let pruned = res.apply(&model).unwrap();
         // aggregate sparsity near the target despite per-layer variation
         assert!((pruned.pruned_sparsity() - 0.6).abs() < 0.03);
@@ -541,13 +572,39 @@ mod tests {
     fn sparsegpt_reconstruction_applies() {
         let (model, calib) = setup();
         let pat = SparsityPattern::PerRow { sparsity: 0.5 };
-        let res = PrunePipeline::new(&model, &calib)
-            .run(&PruneMethod::SparseGpt { percdamp: 0.01, blocksize: 8 }, &pat)
-            .unwrap();
+        let res = run_uniform(&model, &calib, &Method::sparsegpt(0.01, 8), &pat, &[]).unwrap();
         assert_eq!(res.new_weights.len(), 8);
         let pruned = res.apply(&model).unwrap();
         // reconstructed weights respect the masks (zeros off-mask)
         assert!((pruned.pruned_sparsity() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn refine_passes_lower_objectives_through_dispatch() {
+        let (model, calib) = setup();
+        let pat = SparsityPattern::PerRow { sparsity: 0.6 };
+        let plain = run_uniform(&model, &calib, &Method::wanda(), &pat, &[]).unwrap();
+        let refined = run_uniform(
+            &model,
+            &calib,
+            &Method::wanda(),
+            &pat,
+            &[RefinePass::swaps(), RefinePass::update()],
+        )
+        .unwrap();
+        for (k, &obj) in &plain.layer_objs {
+            assert!(
+                refined.layer_objs[k] <= obj * (1.0 + 1e-9),
+                "{k}: refined {} !<= plain {obj}",
+                refined.layer_objs[k]
+            );
+        }
+        let delta = refined.refine_obj_delta.expect("refine delta recorded");
+        assert!(delta > 0.0, "refine must improve some layer, delta {delta}");
+        // the update pass reconstructs weights for every layer
+        assert_eq!(refined.new_weights.len(), 8);
+        let pruned = refined.apply(&model).unwrap();
+        assert!((pruned.pruned_sparsity() - 0.6).abs() < 0.02);
     }
 
     #[test]
@@ -560,16 +617,15 @@ mod tests {
         let cb = |e: &LayerEvent| {
             seen.lock().unwrap().push((e.layer.clone(), e.index, e.total));
         };
-        run_layers(
-            &model,
-            &calib,
-            &PruneMethod::Wanda,
-            &patterns,
-            Backend::Native,
-            None,
-            Some(&cb),
-        )
-        .unwrap();
+        let method = Method::wanda();
+        let run = LayerRun {
+            method: &method,
+            patterns: &patterns,
+            refine: &[],
+            trace_every: 0,
+            progress: Some(&cb),
+        };
+        run_layers(&model, &calib, &run, Backend::Native, None).unwrap();
         let mut events = seen.into_inner().unwrap();
         assert_eq!(events.len(), 8);
         assert!(events.iter().all(|(_, _, total)| *total == 8));

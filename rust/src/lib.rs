@@ -11,11 +11,11 @@
 //!
 //! The coordinator's public API is declarative: a
 //! [`coordinator::JobSpec`] describes one pruning run as data (model,
-//! method, [`coordinator::Allocation`], backend, calibration, tracing
-//! and eval options; JSON round-trippable), and a
-//! [`coordinator::PruneSession`] executes specs against an artifacts
-//! workspace with memoized models, calibrations, and compiled PJRT
-//! executables:
+//! [`pruner::Method`], [`coordinator::Allocation`], backend,
+//! calibration, refinement, tracing and eval options; JSON
+//! round-trippable), and a [`coordinator::PruneSession`] executes specs
+//! against an artifacts workspace with memoized models, calibrations,
+//! and compiled PJRT executables:
 //!
 //! ```no_run
 //! use sparsefw::prelude::*;
@@ -23,14 +23,65 @@
 //! let mut session = PruneSession::open_default()?;
 //! let spec = JobSpec {
 //!     model: "tiny".into(),
-//!     method: PruneMethod::Wanda,
+//!     method: Method::wanda(),
 //!     allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
+//!     refine: vec![RefinePass::swaps()],
 //!     eval: Some(EvalSpec::default()),
 //!     ..Default::default()
 //! };
 //! let result = session.execute(&spec)?;
 //! println!("Σ err {:.3e}", result.total_err());
 //! # anyhow::Ok(())
+//! ```
+//!
+//! ## The open method layer
+//!
+//! Methods live behind the object-safe [`pruner::LayerPruner`] trait
+//! ([`pruner::LayerCtx`] in, [`pruner::LayerPruneOutput`] out) and the
+//! [`pruner::MethodRegistry`] — the *single source of truth* that CLI
+//! parsing, JobSpec JSON, server-side submit validation, the
+//! `GET /methods` / `sparsefw methods` listings, and the
+//! `table1_methods` bench all iterate.  Composable
+//! [`pruner::RefinePass`]es (SparseSwaps-style 1-swaps, least-squares
+//! weight update) bolt onto *any* method's output.
+//!
+//! ### Adding a pruning method
+//!
+//! 1. Implement [`pruner::LayerPruner`] — one struct, one
+//!    `prune_layer(&LayerCtx) -> Result<LayerPruneOutput>`:
+//!
+//! ```no_run
+//! use sparsefw::prelude::*;
+//! use sparsefw::pruner::{FwKernels, LayerCtx, LayerPruneOutput, LayerPruner};
+//! use sparsefw::pruner::registry::MethodRegistration;
+//! use sparsefw::pruner::saliency::saliency_mask;
+//!
+//! struct RandomSaliency;
+//!
+//! impl LayerPruner for RandomSaliency {
+//!     fn name(&self) -> &str { "random" }
+//!     fn prune_layer(&self, ctx: &LayerCtx) -> anyhow::Result<LayerPruneOutput> {
+//!         // any scores → greedy top-k under the requested pattern
+//!         let scores = Mat::from_fn(ctx.w.rows, ctx.w.cols, |i, j| {
+//!             (((i * 31 + j * 17) % 97) as f32) / 97.0
+//!         });
+//!         let mask = saliency_mask(&scores, ctx.pattern);
+//!         let obj = ctx.kernels.objective(ctx.w, &mask, ctx.g)?;
+//!         Ok(LayerPruneOutput {
+//!             mask, obj, warm_obj: None, new_weights: None,
+//!             trace: None, fw_iters: 0, refine_obj_delta: None,
+//!         })
+//!     }
+//! }
+//!
+//! // 2. Register it — CLI (`--method random`), JobSpec JSON
+//! //    ({"kind": "random"}), server submits, `sparsefw methods`,
+//! //    and `--refine` post-passes now all work, with no further code.
+//! MethodRegistry::global().register(MethodRegistration::new(
+//!     "random",
+//!     || Method::from_pruner(RandomSaliency),
+//!     |_json| Ok(Method::from_pruner(RandomSaliency)),
+//! ));
 //! ```
 //!
 //! ## Calibration pipelines
@@ -111,10 +162,13 @@ pub mod prelude {
     pub use crate::calib::{CalibPolicy, CalibState, Calibration};
     pub use crate::config::{Backend, Workspace};
     pub use crate::coordinator::{
-        Allocation, EvalSpec, JobResult, JobSpec, PrunePipeline, PruneSession,
+        Allocation, EvalSpec, JobResult, JobSpec, PruneSession,
     };
     pub use crate::model::{Gpt, GptConfig};
-    pub use crate::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+    pub use crate::pruner::{
+        FwEngine, LayerPruner, Method, MethodCaps, MethodRegistry, PruneMethod, RefinePass,
+        SparseFwConfig, SparsityPattern, Warmstart,
+    };
     pub use crate::server::{Client, JobState, Server, ServerConfig};
     pub use crate::tensor::Mat;
 }

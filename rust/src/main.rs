@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   inspect                      — summarize the artifacts workspace
-//!   prune    [--model --method --pattern|--owl --backend …]
+//!   methods                      — list the open method registry
+//!   prune    [--model --method --pattern|--owl --backend --refine …]
 //!            [--spec job.json --save-spec job.json]
 //!   eval     [--model --masks file]
 //!   selfcheck                    — PJRT vs native numerical cross-check
@@ -12,8 +13,10 @@
 //!
 //! `prune` lowers its flags into a declarative [`JobSpec`] (replayable
 //! via `--spec job.json`) and executes it through a [`PruneSession`];
-//! `serve` runs the same jobs behind a multi-client HTTP JSON API with
-//! a priority queue and per-worker session memoization.
+//! method flags parse through the global method registry (`--method
+//! NAME` for any registered method, `--refine` for composable
+//! post-passes); `serve` runs the same jobs behind a multi-client HTTP
+//! JSON API with a priority queue and per-worker session memoization.
 //!
 //! Common flags: --artifacts DIR (default ./artifacts or
 //! $SPARSEFW_ARTIFACTS), --models a,b, --iters N, --samples N, --fast.
@@ -24,8 +27,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use sparsefw::calib::CalibPolicy;
-use sparsefw::config::cli::{parse_method, parse_pattern, Args};
-use sparsefw::config::{Backend, Workspace};
+use sparsefw::config::cli::{parse_method, parse_pattern, parse_refine, Args};
+use sparsefw::config::{self, Backend, Workspace};
 use sparsefw::coordinator::job::DEFAULT_CALIB_CACHE_CAP;
 use sparsefw::coordinator::{Allocation, EvalSpec, EvalSummary, JobSpec, PruneSession};
 use sparsefw::model::safetensors::{self, TensorData};
@@ -41,12 +44,17 @@ sparsefw — pruning LLMs via Frank-Wolfe (paper reproduction)
 USAGE: sparsefw <subcommand> [flags]
 
   inspect                         summarize artifacts + models
-  prune      --model M --method {sparsefw|wanda|ria|magnitude|sparsegpt}
+  methods    [--addr HOST:PORT]   list the method registry (local, or a
+                                  running server's via GET /methods)
+  prune      --model M --method NAME  (any registered method; built-ins:
+             sparsefw|wanda|ria|magnitude|sparsegpt)
+             [--method-json '{\"kind\": …}'  arbitrary method config]
              --pattern {unstructured:S|per-row:S|K:B} | --owl TARGET
              [--iters N --alpha A --warmstart wanda|ria|magnitude]
              [--fw-engine incremental|dense] [--fw-refresh N]
              [--samples N --seed S --backend native|pjrt|pjrt-chunk]
              [--propagate off|block|layer]
+             [--refine swaps|update|swaps,update]
              [--spec job.json] [--save-spec job.json]
              [--out masks.safetensors] [--eval]
   eval       --model M [--masks masks.safetensors] [--pjrt]
@@ -93,6 +101,18 @@ calibration memory is O(block):
 --propagate off is bit-identical to the pre-staged pipeline
 (regression-tested), and saved specs without a calib_policy field
 replay on it unchanged.
+
+Methods are open: every method is a LayerPruner trait impl registered
+in the MethodRegistry, which drives --method parsing, JobSpec JSON,
+server-side validation (unknown methods are a 400 naming the known
+set), and the `methods` listing — implement the trait, register it,
+and the whole CLI/JSON/server surface picks it up with zero parser
+changes (the crate docs carry an end-to-end "adding a pruning method"
+walkthrough).  --refine appends composable
+post-passes to any method: `swaps` (SparseSwaps-style greedy 1-swap
+mask refinement, never raising the layer objective) and `update`
+(least-squares masked weight update); job summaries then report the
+aggregate improvement as refine_obj_delta.
 
 `serve` runs a long-lived job server over the workspace: POST /jobs
 takes a JobSpec, workers execute jobs off a bounded priority queue
@@ -143,6 +163,7 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("inspect") => inspect(args),
+        Some("methods") => methods_cmd(args),
         Some("prune") => prune(args),
         Some("eval") => eval_cmd(args),
         Some("selfcheck") => selfcheck(args),
@@ -213,16 +234,31 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         if let Some(model) = args.get("model") {
             spec.model = model.to_string();
         }
-        if args.get("method").is_some() {
+        if args.get("method").is_some() || args.get("method-json").is_some() {
             spec.method = parse_method(args)?;
-        } else if let PruneMethod::SparseFw(c) = &mut spec.method {
-            // engine flags override a loaded spec even without --method
-            if let Some(e) = args.get("fw-engine") {
-                c.engine = sparsefw::pruner::FwEngine::parse(e)?;
+        } else if (args.get("fw-engine").is_some() || args.get("fw-refresh").is_some())
+            && spec.method.name() == "sparsefw"
+        {
+            // engine flags override a loaded spec even without --method:
+            // round-trip the method through its JSON form with the
+            // overridden fields (the registry re-validates)
+            let mut mj = config::method_to_json(&spec.method);
+            let refresh = args.get_usize(
+                "fw-refresh",
+                mj.at(&["refresh_every"]).as_usize().unwrap_or(0),
+            )?;
+            if let Json::Obj(obj) = &mut mj {
+                if let Some(e) = args.get("fw-engine") {
+                    obj.insert("engine".to_string(), Json::Str(e.to_string()));
+                }
+                if args.get("fw-refresh").is_some() {
+                    obj.insert("refresh_every".to_string(), Json::Num(refresh as f64));
+                }
             }
-            if args.get("fw-refresh").is_some() {
-                c.refresh_every = args.get_usize("fw-refresh", c.refresh_every)?;
-            }
+            spec.method = config::method_from_json(&mj)?;
+        }
+        if args.get("refine").is_some() {
+            spec.refine = parse_refine(args)?;
         }
         if args.get("owl").is_some() || args.get("pattern").is_some() {
             spec.allocation = parse_allocation(args)?;
@@ -261,8 +297,38 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         calib_seed: args.get_u64("seed", 7)?,
         calib_policy: CalibPolicy::parse(args.get("propagate").unwrap_or("off"))?,
         trace_every: 0,
+        refine: parse_refine(args)?,
         eval: if args.has("eval") { Some(eval_spec(args)?) } else { None },
     })
+}
+
+/// `sparsefw methods [--addr HOST:PORT]` — list the method registry:
+/// locally (the registry compiled into this binary), or a running
+/// server's via `GET /methods`.
+fn methods_cmd(args: &Args) -> Result<()> {
+    let listing = if args.get("addr").is_some() {
+        let client = client_from(args);
+        println!("methods registered at {}:", client.addr());
+        client.methods()?
+    } else {
+        println!("methods registered in this binary:");
+        sparsefw::server::api::methods_json()
+    };
+    for m in listing.at(&["methods"]).as_arr().unwrap_or(&[]) {
+        let caps = m.at(&["caps"]);
+        println!(
+            "  {:<10} reconstructs_weights={} supports_pjrt={} iterative={}",
+            m.at(&["name"]).as_str().unwrap_or("?"),
+            caps.at(&["reconstructs_weights"]).as_bool().unwrap_or(false),
+            caps.at(&["supports_pjrt"]).as_bool().unwrap_or(false),
+            caps.at(&["iterative"]).as_bool().unwrap_or(false),
+        );
+        println!(
+            "             default: {}",
+            sparsefw::util::json::to_string(m.at(&["default_config"]))
+        );
+    }
+    Ok(())
 }
 
 /// Shared result printing for `prune --eval` and the `eval` subcommand.
@@ -296,13 +362,18 @@ fn prune(args: &Args) -> Result<()> {
     let result = session.execute(&spec)?;
 
     info!(
-        "pruned {} layers in {:.1}s; Σ layer error = {:.4e}{}",
+        "pruned {} layers in {:.1}s; Σ layer error = {:.4e}{}{}",
         result.masks().len(),
         result.wall_seconds(),
         result.total_err(),
         result
             .mean_rel_reduction()
             .map(|r| format!(", mean reduction vs warmstart = {:.1}%", r * 100.0))
+            .unwrap_or_default(),
+        result
+            .prune
+            .refine_obj_delta
+            .map(|d| format!(", refine Δobj = {d:.4e}"))
             .unwrap_or_default()
     );
 
@@ -405,6 +476,9 @@ fn print_job_line(v: &Json) {
         ));
         if let Some(red) = r.at(&["mean_rel_reduction"]).as_f64() {
             line.push_str(&format!(" mean_rel_reduction={:.1}%", red * 100.0));
+        }
+        if let Some(d) = r.at(&["refine_obj_delta"]).as_f64() {
+            line.push_str(&format!(" refine_obj_delta={d:.4e}"));
         }
         if let Some(ppl) = r.at(&["ppl"]).as_f64() {
             line.push_str(&format!(" ppl={ppl:.3}"));

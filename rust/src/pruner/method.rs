@@ -1,0 +1,446 @@
+//! The open method API: [`LayerPruner`] is the object-safe trait every
+//! pruning method implements, [`LayerCtx`] the one-stop context it
+//! receives, and [`Method`] the cloneable handle the rest of the stack
+//! (JobSpec, CLI, server, reports) carries around.
+//!
+//! The paper frames SparseFW as one point in a family of layer-wise
+//! mask optimizers (§2.1); this module makes that family *open*: a new
+//! method is one trait impl plus one
+//! [`MethodRegistration`](crate::pruner::registry::MethodRegistration)
+//! — CLI parsing, JobSpec JSON round-trip, server-side validation and
+//! the `GET /methods` / `sparsefw methods` listings all route through
+//! the [`MethodRegistry`](crate::pruner::registry::MethodRegistry) and
+//! pick the new method up for free.  The legacy [`PruneMethod`]
+//! (see [`crate::pruner`]) enum survives as a thin construction shim.
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::pruner::mask::SparsityPattern;
+use crate::pruner::saliency;
+use crate::pruner::sparsefw::{self, FwKernels, FwTrace, SparseFwConfig};
+use crate::pruner::sparsegpt;
+use crate::tensor::Mat;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Context + output
+// ---------------------------------------------------------------------------
+
+/// Everything a method needs to prune one layer, bundled so the trait
+/// stays object-safe (no `<K: FwKernels>` generic threading).
+pub struct LayerCtx<'a> {
+    /// Gradient/objective backend (native matmuls or AOT Pallas kernels
+    /// via PJRT).  Deliberately a trait object: methods must not care.
+    pub kernels: &'a (dyn FwKernels + 'a),
+    /// The layer's dense weights (d_out × d_in).
+    pub w: &'a Mat,
+    /// Calibration gram matrix G = XXᵀ (d_in × d_in).
+    pub g: &'a Mat,
+    /// The resolved sparsity pattern for this layer.
+    pub pattern: &'a SparsityPattern,
+    /// Layer name, for logs/errors ("" when pruning outside a model).
+    pub layer: &'a str,
+    /// Spec-level tracing override: record a trace point every N
+    /// iterations (0 = leave the method's own setting untouched).
+    pub trace_every: usize,
+}
+
+impl<'a> LayerCtx<'a> {
+    /// Context with no layer name and no tracing override.
+    pub fn new(
+        kernels: &'a (dyn FwKernels + 'a),
+        w: &'a Mat,
+        g: &'a Mat,
+        pattern: &'a SparsityPattern,
+    ) -> Self {
+        Self { kernels, w, g, pattern, layer: "", trace_every: 0 }
+    }
+
+    pub fn with_trace_every(mut self, every: usize) -> Self {
+        self.trace_every = every;
+        self
+    }
+}
+
+/// Result of pruning one layer with any method.
+pub struct LayerPruneOutput {
+    pub mask: Mat,
+    /// L(mask) under the layer objective (after a weight-update refine
+    /// pass this is the realized reconstruction error ‖WX − ŴX‖²).
+    pub obj: f64,
+    /// L(warmstart) when the method has one (SparseFW).
+    pub warm_obj: Option<f64>,
+    /// Reconstructed weights (SparseGPT, or the weight-update refine
+    /// pass); zero exactly off-mask.
+    pub new_weights: Option<Mat>,
+    pub trace: Option<FwTrace>,
+    /// FW iterations executed (0 for the greedy/one-shot methods).
+    pub fw_iters: usize,
+    /// Objective improvement contributed by refine post-passes
+    /// (obj_before_refine − obj_after_refine ≥ 0); `None` when no
+    /// refine pass ran.
+    pub refine_obj_delta: Option<f64>,
+}
+
+impl LayerPruneOutput {
+    pub(crate) fn from_mask(
+        kernels: &(dyn FwKernels + '_),
+        w: &Mat,
+        g: &Mat,
+        mask: Mat,
+    ) -> Result<Self> {
+        let obj = kernels.objective(w, &mask, g)?;
+        Ok(Self {
+            mask,
+            obj,
+            warm_obj: None,
+            new_weights: None,
+            trace: None,
+            fw_iters: 0,
+            refine_obj_delta: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// Capability flags a method advertises (listed by `GET /methods` and
+/// `sparsefw methods`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MethodCaps {
+    /// May return [`LayerPruneOutput::new_weights`] (SparseGPT-style
+    /// reconstruction).
+    pub reconstructs_weights: bool,
+    /// The per-iteration hot loop can execute through the compiled PJRT
+    /// [`FwKernels`] (methods that only *score* through the kernels run
+    /// their inner loop natively regardless of backend).
+    pub supports_pjrt: bool,
+    /// Runs an iterative optimization (reports nonzero `fw_iters`).
+    pub iterative: bool,
+}
+
+impl MethodCaps {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("reconstructs_weights", self.reconstructs_weights.into()),
+            ("supports_pjrt", self.supports_pjrt.into()),
+            ("iterative", self.iterative.into()),
+        ])
+    }
+}
+
+/// An object-safe, layer-wise pruning method.
+///
+/// Implement this plus register a
+/// [`MethodRegistration`](crate::pruner::registry::MethodRegistration)
+/// and the whole stack — `--method NAME`, JobSpec JSON, `sparsefw
+/// serve` submissions, `GET /methods`, the `table1_methods` bench —
+/// picks the method up with no further changes (see the lib.rs
+/// "adding a pruning method" walkthrough).
+pub trait LayerPruner: Send + Sync {
+    /// Registry name (`"wanda"`, `"sparsefw"`, …) — the `"kind"` field
+    /// of the method's JSON form and the `--method` CLI value.
+    fn name(&self) -> &str;
+
+    /// Human label for reports (defaults to [`LayerPruner::name`]).
+    fn label(&self) -> String {
+        self.name().to_string()
+    }
+
+    fn caps(&self) -> MethodCaps {
+        MethodCaps::default()
+    }
+
+    /// Prune one layer.
+    fn prune_layer(&self, ctx: &LayerCtx) -> Result<LayerPruneOutput>;
+
+    /// This instance's configuration as a JSON object (config fields
+    /// only — the registry adds the `"kind"` discriminator).  Must
+    /// round-trip through the registration's `from_json`.
+    fn config_to_json(&self) -> Json {
+        Json::obj(vec![])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Method: the cloneable handle
+// ---------------------------------------------------------------------------
+
+/// A pruning method as carried by [`crate::coordinator::JobSpec`],
+/// reports, and the server: a shared handle to a [`LayerPruner`].
+#[derive(Clone)]
+pub struct Method(Arc<dyn LayerPruner>);
+
+impl Method {
+    /// Wrap any [`LayerPruner`] implementation.
+    pub fn from_pruner(p: impl LayerPruner + 'static) -> Self {
+        Method(Arc::new(p))
+    }
+
+    /// Look a method up in the global registry and build it with its
+    /// default configuration.
+    pub fn named(name: &str) -> Result<Self> {
+        crate::pruner::registry::MethodRegistry::global().default(name)
+    }
+
+    pub fn name(&self) -> &str {
+        self.0.name()
+    }
+
+    pub fn label(&self) -> String {
+        self.0.label()
+    }
+
+    pub fn caps(&self) -> MethodCaps {
+        self.0.caps()
+    }
+
+    pub fn config_to_json(&self) -> Json {
+        self.0.config_to_json()
+    }
+
+    pub fn prune_layer(&self, ctx: &LayerCtx) -> Result<LayerPruneOutput> {
+        self.0.prune_layer(ctx)
+    }
+
+    // -- builtin constructors ----------------------------------------------
+
+    pub fn magnitude() -> Self {
+        Method::from_pruner(MagnitudePruner)
+    }
+
+    pub fn wanda() -> Self {
+        Method::from_pruner(WandaPruner)
+    }
+
+    pub fn ria() -> Self {
+        Method::from_pruner(RiaPruner)
+    }
+
+    pub fn sparsefw(cfg: SparseFwConfig) -> Self {
+        Method::from_pruner(SparseFwPruner(cfg))
+    }
+
+    pub fn sparsegpt(percdamp: f64, blocksize: usize) -> Self {
+        Method::from_pruner(SparseGptPruner { percdamp, blocksize })
+    }
+}
+
+impl fmt::Debug for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Method({})", self.label())
+    }
+}
+
+impl Default for Method {
+    fn default() -> Self {
+        Method::sparsefw(SparseFwConfig::default())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in methods
+// ---------------------------------------------------------------------------
+
+fn saliency_output(ctx: &LayerCtx, scores: Mat) -> Result<LayerPruneOutput> {
+    let mask = saliency::saliency_mask(&scores, ctx.pattern);
+    LayerPruneOutput::from_mask(ctx.kernels, ctx.w, ctx.g, mask)
+}
+
+/// `S_ij = |W_ij|` — the classical greedy criterion.
+pub struct MagnitudePruner;
+
+impl LayerPruner for MagnitudePruner {
+    fn name(&self) -> &str {
+        "magnitude"
+    }
+
+    fn prune_layer(&self, ctx: &LayerCtx) -> Result<LayerPruneOutput> {
+        saliency_output(ctx, saliency::magnitude_scores(ctx.w))
+    }
+}
+
+/// Wanda (Sun et al., 2023): `S_ij = |W_ij|·‖X_j,:‖₂`.
+pub struct WandaPruner;
+
+impl LayerPruner for WandaPruner {
+    fn name(&self) -> &str {
+        "wanda"
+    }
+
+    fn prune_layer(&self, ctx: &LayerCtx) -> Result<LayerPruneOutput> {
+        saliency_output(ctx, saliency::wanda_scores(ctx.w, ctx.g))
+    }
+}
+
+/// RIA (Zhang et al., 2024): Wanda on relative-importance rescaled W.
+pub struct RiaPruner;
+
+impl LayerPruner for RiaPruner {
+    fn name(&self) -> &str {
+        "ria"
+    }
+
+    fn prune_layer(&self, ctx: &LayerCtx) -> Result<LayerPruneOutput> {
+        saliency_output(ctx, saliency::ria_scores(ctx.w, ctx.g))
+    }
+}
+
+/// The paper's SparseFW (Algorithms 1–2) over a [`SparseFwConfig`].
+pub struct SparseFwPruner(pub SparseFwConfig);
+
+impl LayerPruner for SparseFwPruner {
+    fn name(&self) -> &str {
+        "sparsefw"
+    }
+
+    fn label(&self) -> String {
+        format!("sparsefw({})", self.0.warmstart.label())
+    }
+
+    fn caps(&self) -> MethodCaps {
+        MethodCaps { reconstructs_weights: false, supports_pjrt: true, iterative: true }
+    }
+
+    fn prune_layer(&self, ctx: &LayerCtx) -> Result<LayerPruneOutput> {
+        // spec-level tracing override (JobSpec::trace_every)
+        let traced;
+        let cfg = if ctx.trace_every > 0 {
+            traced = SparseFwConfig { trace_every: ctx.trace_every, ..self.0.clone() };
+            &traced
+        } else {
+            &self.0
+        };
+        let r = sparsefw::run_layer(ctx.kernels, ctx.w, ctx.g, ctx.pattern, cfg)?;
+        Ok(LayerPruneOutput {
+            obj: r.final_obj,
+            warm_obj: Some(r.warm_obj),
+            trace: r.trace,
+            mask: r.mask,
+            new_weights: None,
+            fw_iters: r.fw_iters,
+            refine_obj_delta: None,
+        })
+    }
+
+    fn config_to_json(&self) -> Json {
+        let c = &self.0;
+        Json::obj(vec![
+            ("iters", c.iters.into()),
+            ("alpha", c.alpha.into()),
+            ("warmstart", c.warmstart.label().into()),
+            ("trace_every", c.trace_every.into()),
+            ("use_chunk", c.use_chunk.into()),
+            ("keep_best", c.keep_best.into()),
+            ("line_search", c.line_search.into()),
+            ("engine", c.engine.label().into()),
+            ("refresh_every", c.refresh_every.into()),
+        ])
+    }
+}
+
+/// SparseGPT (Frantar & Alistarh, 2023): greedy + OBS reconstruction.
+pub struct SparseGptPruner {
+    pub percdamp: f64,
+    pub blocksize: usize,
+}
+
+impl LayerPruner for SparseGptPruner {
+    fn name(&self) -> &str {
+        "sparsegpt"
+    }
+
+    fn caps(&self) -> MethodCaps {
+        MethodCaps { reconstructs_weights: true, supports_pjrt: false, iterative: false }
+    }
+
+    fn prune_layer(&self, ctx: &LayerCtx) -> Result<LayerPruneOutput> {
+        let r = sparsegpt::sparsegpt(ctx.w, ctx.g, ctx.pattern, self.percdamp, self.blocksize)?;
+        let obj = ctx.kernels.objective(ctx.w, &r.mask, ctx.g)?;
+        Ok(LayerPruneOutput {
+            obj,
+            warm_obj: None,
+            trace: None,
+            mask: r.mask,
+            new_weights: Some(r.weights),
+            fw_iters: 0,
+            refine_obj_delta: None,
+        })
+    }
+
+    fn config_to_json(&self) -> Json {
+        Json::obj(vec![
+            ("percdamp", self.percdamp.into()),
+            ("blocksize", self.blocksize.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::mask::mask_satisfies;
+    use crate::pruner::sparsefw::NativeKernels;
+    use crate::tensor::matmul_a_bt;
+    use crate::util::prng::Xoshiro256;
+
+    fn setup(seed: u64) -> (Mat, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Mat::gaussian(8, 16, 1.0, &mut rng);
+        let x = Mat::gaussian(16, 64, 1.0, &mut rng);
+        (w, matmul_a_bt(&x, &x))
+    }
+
+    #[test]
+    fn builtin_methods_produce_feasible_masks() {
+        let (w, g) = setup(1);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        for method in [
+            Method::magnitude(),
+            Method::wanda(),
+            Method::ria(),
+            Method::sparsefw(SparseFwConfig { iters: 30, alpha: 0.5, ..Default::default() }),
+            Method::sparsegpt(0.01, 8),
+        ] {
+            let ctx = LayerCtx::new(&NativeKernels, &w, &g, &pattern);
+            let out = method.prune_layer(&ctx).unwrap();
+            assert!(mask_satisfies(&out.mask, &pattern), "{}", method.name());
+            assert!(out.obj.is_finite());
+            assert_eq!(
+                out.new_weights.is_some(),
+                method.caps().reconstructs_weights,
+                "{}",
+                method.name()
+            );
+        }
+    }
+
+    #[test]
+    fn trace_override_through_ctx() {
+        let (w, g) = setup(2);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        let method = Method::sparsefw(SparseFwConfig { iters: 40, alpha: 0.5, ..Default::default() });
+        let ctx = LayerCtx::new(&NativeKernels, &w, &g, &pattern).with_trace_every(10);
+        let out = method.prune_layer(&ctx).unwrap();
+        assert!(out.trace.is_some(), "ctx trace_every must enable tracing");
+        let ctx = LayerCtx::new(&NativeKernels, &w, &g, &pattern);
+        assert!(method.prune_layer(&ctx).unwrap().trace.is_none());
+    }
+
+    #[test]
+    fn labels_and_caps() {
+        assert_eq!(Method::wanda().label(), "wanda");
+        assert_eq!(
+            Method::sparsefw(SparseFwConfig::default()).label(),
+            "sparsefw(wanda)"
+        );
+        assert!(Method::sparsegpt(0.01, 128).caps().reconstructs_weights);
+        assert!(Method::sparsefw(SparseFwConfig::default()).caps().iterative);
+        assert!(!Method::wanda().caps().reconstructs_weights);
+    }
+}

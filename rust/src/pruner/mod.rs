@@ -1,6 +1,14 @@
 //! Pruning methods: the paper's SparseFW plus every baseline it
-//! compares against or discusses (§2.1).
+//! compares against or discusses (§2.1), behind an *open* method API.
 //!
+//! * [`method`] — the [`LayerPruner`] trait ([`LayerCtx`] in,
+//!   [`LayerPruneOutput`] out), the cloneable [`Method`] handle, and
+//!   the built-in implementations.
+//! * [`registry`] — name → factory [`MethodRegistry`]: the single
+//!   source of truth behind CLI parsing, JobSpec JSON, server
+//!   validation, and the method listings.
+//! * [`refine`] — composable post-passes for any method's mask
+//!   (SparseSwaps-style 1-swaps, least-squares weight update).
 //! * [`sparsefw`] — Frank-Wolfe on the convex relaxation (the paper's
 //!   contribution; Algorithms 1–2).
 //! * [`saliency`] — Wanda / RIA / magnitude greedy mask selection.
@@ -15,6 +23,9 @@ pub mod fw_engine;
 pub mod fw_math;
 pub mod lmo;
 pub mod mask;
+pub mod method;
+pub mod refine;
+pub mod registry;
 pub mod rounding;
 pub mod saliency;
 pub mod sparsefw;
@@ -22,12 +33,19 @@ pub mod sparsegpt;
 
 pub use fw_engine::FwEngine;
 pub use mask::{BudgetSpec, SparsityPattern};
+pub use method::{LayerCtx, LayerPruneOutput, LayerPruner, Method, MethodCaps};
+pub use refine::RefinePass;
+pub use registry::{MethodRegistration, MethodRegistry};
 pub use sparsefw::{FwKernels, FwTrace, LayerResult, NativeKernels, SparseFwConfig, Warmstart};
 
 use crate::tensor::Mat;
 use anyhow::Result;
 
-/// A pruning method as selected in configs / CLI / reports.
+/// Enum-era method selector, kept as a thin construction shim over the
+/// open [`Method`] API: enum values convert via [`PruneMethod::to_method`]
+/// (or `Into<Method>`), and every enum-era saved spec replays
+/// bit-identically through the registry.  New code — and new methods —
+/// should use [`Method`] / [`LayerPruner`] directly.
 #[derive(Clone, Debug)]
 pub enum PruneMethod {
     Magnitude,
@@ -39,82 +57,83 @@ pub enum PruneMethod {
 }
 
 impl PruneMethod {
-    pub fn label(&self) -> String {
+    /// The registry-backed [`Method`] this enum value names.
+    pub fn to_method(&self) -> Method {
         match self {
-            PruneMethod::Magnitude => "magnitude".into(),
-            PruneMethod::Wanda => "wanda".into(),
-            PruneMethod::Ria => "ria".into(),
-            PruneMethod::SparseFw(c) => format!("sparsefw({})", c.warmstart.label()),
-            PruneMethod::SparseGpt { .. } => "sparsegpt".into(),
+            PruneMethod::Magnitude => Method::magnitude(),
+            PruneMethod::Wanda => Method::wanda(),
+            PruneMethod::Ria => Method::ria(),
+            PruneMethod::SparseFw(c) => Method::sparsefw(c.clone()),
+            PruneMethod::SparseGpt { percdamp, blocksize } => {
+                Method::sparsegpt(*percdamp, *blocksize)
+            }
         }
     }
 
-    /// Prune one layer. Returns the binary mask plus (for reconstruction
-    /// methods) replacement weights.
-    pub fn prune_layer<K: FwKernels + ?Sized>(
+    pub fn label(&self) -> String {
+        self.to_method().label()
+    }
+
+    /// Prune one layer (compatibility wrapper over
+    /// [`Method::prune_layer`] with a bare [`LayerCtx`]).
+    pub fn prune_layer<K: FwKernels>(
         &self,
         kernels: &K,
         w: &Mat,
         g: &Mat,
         pattern: &SparsityPattern,
     ) -> Result<LayerPruneOutput> {
-        match self {
-            PruneMethod::Magnitude => {
-                let m = saliency::saliency_mask(&saliency::magnitude_scores(w), pattern);
-                LayerPruneOutput::from_mask(kernels, w, g, m)
-            }
-            PruneMethod::Wanda => {
-                let m = saliency::saliency_mask(&saliency::wanda_scores(w, g), pattern);
-                LayerPruneOutput::from_mask(kernels, w, g, m)
-            }
-            PruneMethod::Ria => {
-                let m = saliency::saliency_mask(&saliency::ria_scores(w, g), pattern);
-                LayerPruneOutput::from_mask(kernels, w, g, m)
-            }
-            PruneMethod::SparseFw(cfg) => {
-                let r = sparsefw::run_layer(kernels, w, g, pattern, cfg)?;
-                Ok(LayerPruneOutput {
-                    obj: r.final_obj,
-                    warm_obj: Some(r.warm_obj),
-                    trace: r.trace,
-                    mask: r.mask,
-                    new_weights: None,
-                    fw_iters: r.fw_iters,
-                })
-            }
-            PruneMethod::SparseGpt { percdamp, blocksize } => {
-                let r = sparsegpt::sparsegpt(w, g, pattern, *percdamp, *blocksize)?;
-                let obj = kernels.objective(w, &r.mask, g)?;
-                Ok(LayerPruneOutput {
-                    obj,
-                    warm_obj: None,
-                    trace: None,
-                    mask: r.mask,
-                    new_weights: Some(r.weights),
-                    fw_iters: 0,
-                })
-            }
-        }
+        self.to_method()
+            .prune_layer(&LayerCtx::new(kernels, w, g, pattern))
     }
 }
 
-/// Result of pruning one layer with any method.
-pub struct LayerPruneOutput {
-    pub mask: Mat,
-    /// L(mask) under the layer objective.
-    pub obj: f64,
-    /// L(warmstart) when the method has one (SparseFW).
-    pub warm_obj: Option<f64>,
-    /// Reconstructed weights (SparseGPT only).
-    pub new_weights: Option<Mat>,
-    pub trace: Option<FwTrace>,
-    /// FW iterations executed (0 for the greedy/one-shot methods).
-    pub fw_iters: usize,
+impl From<PruneMethod> for Method {
+    fn from(m: PruneMethod) -> Method {
+        m.to_method()
+    }
 }
 
-impl LayerPruneOutput {
-    fn from_mask<K: FwKernels + ?Sized>(kernels: &K, w: &Mat, g: &Mat, mask: Mat) -> Result<Self> {
-        let obj = kernels.objective(w, &mask, g)?;
-        Ok(Self { mask, obj, warm_obj: None, new_weights: None, trace: None, fw_iters: 0 })
+impl From<&PruneMethod> for Method {
+    fn from(m: &PruneMethod) -> Method {
+        m.to_method()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_a_bt;
+    use crate::util::prng::Xoshiro256;
+
+    /// The enum shim and the Method API must produce identical masks.
+    #[test]
+    fn enum_shim_matches_method_api() {
+        let mut rng = Xoshiro256::new(9);
+        let w = Mat::gaussian(8, 16, 1.0, &mut rng);
+        let x = Mat::gaussian(16, 64, 1.0, &mut rng);
+        let g = matmul_a_bt(&x, &x);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        for (legacy, modern) in [
+            (PruneMethod::Magnitude, Method::magnitude()),
+            (PruneMethod::Wanda, Method::wanda()),
+            (PruneMethod::Ria, Method::ria()),
+            (
+                PruneMethod::SparseFw(SparseFwConfig { iters: 40, alpha: 0.5, ..Default::default() }),
+                Method::sparsefw(SparseFwConfig { iters: 40, alpha: 0.5, ..Default::default() }),
+            ),
+            (
+                PruneMethod::SparseGpt { percdamp: 0.01, blocksize: 8 },
+                Method::sparsegpt(0.01, 8),
+            ),
+        ] {
+            let a = legacy.prune_layer(&NativeKernels, &w, &g, &pattern).unwrap();
+            let b = modern
+                .prune_layer(&LayerCtx::new(&NativeKernels, &w, &g, &pattern))
+                .unwrap();
+            assert_eq!(a.mask.data, b.mask.data, "{}", legacy.label());
+            assert_eq!(a.obj, b.obj, "{}", legacy.label());
+            assert_eq!(legacy.label(), modern.label());
+        }
     }
 }

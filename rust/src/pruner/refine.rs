@@ -1,0 +1,651 @@
+//! Composable mask-refinement post-passes, applicable to *any* method
+//! through the open [`LayerPruner`](crate::pruner::LayerPruner) API —
+//! the proof that the method layer is genuinely open:
+//!
+//! * [`RefinePass::Swaps`] — SparseSwaps-style greedy 1-swap mask
+//!   refinement (Zimmer et al., 2025): after rounding, repeatedly swap
+//!   one kept weight for one pruned weight when that strictly lowers
+//!   the layer objective.  The objective is row-separable
+//!   (`L = Σ_r z_r G z_rᵀ`, `z_r = w_r ⊙ (1 − m_r)`), so with the
+//!   maintained state `S = Z·G` every candidate swap scores in O(1):
+//!
+//!   `Δ(prune a, keep b) = 2(w_a S_ra − w_b S_rb) + w_a²G_aa + w_b²G_bb
+//!                          − 2 w_a w_b G_ab` (same row; the cross term
+//!   vanishes across rows).  Accepting a swap costs one O(d_in) update
+//!   of `S`.  Swaps stay inside the pattern's constraint unit (row /
+//!   n:m block / whole matrix), so feasibility and the keep count are
+//!   invariant.
+//!
+//! * [`RefinePass::WeightUpdate`] — least-squares masked weight update
+//!   (Boža, 2024): per row, re-solve the kept weights against the gram,
+//!   `(G_SS + λI) ŵ_S = G_S,: w_rᵀ` — the cheap post-hoc reconstruction
+//!   that recovers most of SparseGPT's gains for any mask.
+//!
+//! Passes compose in order (`--refine swaps,update`); a swaps pass that
+//! changes the mask after weights were reconstructed re-runs the
+//! update on the final mask.  A final keep-best guard re-evaluates the
+//! realized objective and reverts the whole refinement if float noise
+//! ever made it worse, so refine **never raises the layer objective**
+//! (regression-tested across all three sparsity patterns).
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::pruner::mask::SparsityPattern;
+use crate::pruner::method::LayerPruneOutput;
+use crate::pruner::sparsefw::FwKernels;
+use crate::tensor::linalg::{chol_solve, cholesky, MatF64};
+use crate::tensor::{matmul, Mat};
+use crate::util::json::Json;
+use crate::util::pool::parallel_for;
+
+/// Default cap on accepted swaps per constraint unit.
+pub const DEFAULT_MAX_SWAPS: usize = 32;
+/// Default relative dampening of the least-squares update.
+pub const DEFAULT_UPDATE_PERCDAMP: f64 = 0.01;
+
+/// One refinement stage.  Parsed from `--refine swaps,update` and the
+/// JobSpec JSON `"refine"` array (strings for defaults, objects for
+/// tuned parameters).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RefinePass {
+    /// Greedy 1-swap mask refinement; `max_swaps` bounds accepted swaps
+    /// per constraint unit (row / n:m block; the unstructured pattern
+    /// gets per-row passes plus `max_swaps` cross-row budget moves).
+    Swaps { max_swaps: usize },
+    /// Least-squares masked weight update with relative damping.
+    WeightUpdate { percdamp: f64 },
+}
+
+impl RefinePass {
+    pub fn swaps() -> Self {
+        RefinePass::Swaps { max_swaps: DEFAULT_MAX_SWAPS }
+    }
+
+    pub fn update() -> Self {
+        RefinePass::WeightUpdate { percdamp: DEFAULT_UPDATE_PERCDAMP }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RefinePass::Swaps { .. } => "swaps",
+            RefinePass::WeightUpdate { .. } => "update",
+        }
+    }
+
+    /// Parse one pass name (`swaps` | `update`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim() {
+            "swaps" => RefinePass::swaps(),
+            "update" => RefinePass::update(),
+            other => bail!("unknown refine pass {other:?} (swaps|update)"),
+        })
+    }
+
+    /// Parse a `--refine` flag value: comma- or plus-separated pass
+    /// names, or `none`/`off` for the empty list.
+    pub fn parse_list(s: &str) -> Result<Vec<Self>> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" || s == "off" {
+            return Ok(Vec::new());
+        }
+        s.split(|c| c == ',' || c == '+').map(Self::parse).collect()
+    }
+
+    /// `"swaps+update"` (empty string for no passes).
+    pub fn list_label(passes: &[Self]) -> String {
+        passes.iter().map(|p| p.label()).collect::<Vec<_>>().join("+")
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            RefinePass::Swaps { max_swaps } if *max_swaps == DEFAULT_MAX_SWAPS => {
+                Json::Str("swaps".into())
+            }
+            RefinePass::Swaps { max_swaps } => Json::obj(vec![
+                ("kind", "swaps".into()),
+                ("max_swaps", (*max_swaps).into()),
+            ]),
+            RefinePass::WeightUpdate { percdamp } if *percdamp == DEFAULT_UPDATE_PERCDAMP => {
+                Json::Str("update".into())
+            }
+            RefinePass::WeightUpdate { percdamp } => Json::obj(vec![
+                ("kind", "update".into()),
+                ("percdamp", (*percdamp).into()),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        if let Some(s) = v.as_str() {
+            return Self::parse(s);
+        }
+        let Some(obj) = v.as_obj() else {
+            bail!("refine pass must be a string or an object, got {v:?}");
+        };
+        match v.at(&["kind"]).as_str() {
+            Some("swaps") => {
+                for k in obj.keys() {
+                    if k != "kind" && k != "max_swaps" {
+                        bail!("unknown field {k:?} in \"swaps\" refine pass");
+                    }
+                }
+                Ok(RefinePass::Swaps {
+                    max_swaps: v.at(&["max_swaps"]).as_usize().unwrap_or(DEFAULT_MAX_SWAPS),
+                })
+            }
+            Some("update") => {
+                for k in obj.keys() {
+                    if k != "kind" && k != "percdamp" {
+                        bail!("unknown field {k:?} in \"update\" refine pass");
+                    }
+                }
+                Ok(RefinePass::WeightUpdate {
+                    percdamp: v.at(&["percdamp"]).as_f64().unwrap_or(DEFAULT_UPDATE_PERCDAMP),
+                })
+            }
+            other => bail!("unknown refine pass kind {other:?} (swaps|update)"),
+        }
+    }
+
+    pub fn list_to_json(passes: &[Self]) -> Json {
+        Json::Arr(passes.iter().map(|p| p.to_json()).collect())
+    }
+
+    pub fn list_from_json(v: &Json) -> Result<Vec<Self>> {
+        match v {
+            Json::Null => Ok(Vec::new()),
+            Json::Arr(items) => items.iter().map(Self::from_json).collect(),
+            other => bail!("\"refine\" must be an array of passes, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Application
+// ---------------------------------------------------------------------------
+
+/// Realized reconstruction error ‖WX − ŴX‖² in the gram form:
+/// Σ (D·G) ⊙ D with D = W − Ŵ.
+pub fn recon_error(w: &Mat, new_w: &Mat, g: &Mat) -> f64 {
+    let mut d = w.clone();
+    d.axby(1.0, -1.0, new_w);
+    let dg = matmul(&d, g);
+    dg.data
+        .iter()
+        .zip(&d.data)
+        .map(|(&a, &b)| a as f64 * b as f64)
+        .sum()
+}
+
+/// Run `passes` in order over a method's output, updating the mask /
+/// reconstructed weights, the realized objective `out.obj`, and
+/// `out.refine_obj_delta`.  Reverts everything (delta 0) if the
+/// re-evaluated objective ever came out worse — refine never raises
+/// the layer objective.
+pub fn apply_refine(
+    passes: &[RefinePass],
+    kernels: &(dyn FwKernels + '_),
+    w: &Mat,
+    g: &Mat,
+    pattern: &SparsityPattern,
+    out: &mut LayerPruneOutput,
+) -> Result<()> {
+    if passes.is_empty() {
+        return Ok(());
+    }
+    // the realized objective going in: reconstruction error when the
+    // method already rebuilt weights (SparseGPT), plain L(M) otherwise
+    let obj_before = match &out.new_weights {
+        Some(nw) => recon_error(w, nw, g),
+        None => out.obj,
+    };
+    let mask_before = out.mask.clone();
+    let weights_before = out.new_weights.clone();
+    let obj_field_before = out.obj;
+
+    let mut weights_stale = false;
+    // damping for a stale-weights rebuild: the user's configured update
+    // pass wins over the default
+    let mut rebuild_percdamp = DEFAULT_UPDATE_PERCDAMP;
+    for pass in passes {
+        match pass {
+            RefinePass::Swaps { max_swaps } => {
+                let accepted = swaps_refine(w, g, pattern, &mut out.mask, *max_swaps);
+                if accepted > 0 && out.new_weights.is_some() {
+                    weights_stale = true;
+                }
+            }
+            RefinePass::WeightUpdate { percdamp } => {
+                out.new_weights = Some(lsq_update(w, g, &out.mask, *percdamp));
+                weights_stale = false;
+                rebuild_percdamp = *percdamp;
+            }
+        }
+    }
+    // a swap after reconstruction invalidates the weights: rebuild them
+    // on the final mask so downstream application stays consistent
+    if weights_stale {
+        out.new_weights = Some(lsq_update(w, g, &out.mask, rebuild_percdamp));
+    }
+
+    let obj_after = match &out.new_weights {
+        Some(nw) => recon_error(w, nw, g),
+        None => kernels.objective(w, &out.mask, g)?,
+    };
+    if obj_after > obj_before {
+        // float noise (or a pathological damped solve) made it worse:
+        // keep-best, like SparseFW's own guard
+        out.mask = mask_before;
+        out.new_weights = weights_before;
+        out.obj = obj_field_before;
+        out.refine_obj_delta = Some(0.0);
+    } else {
+        out.obj = obj_after;
+        out.refine_obj_delta = Some(obj_before - obj_after);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Greedy 1-swaps
+// ---------------------------------------------------------------------------
+
+/// Δ of pruning the kept coordinate `(r, a)` (z_a: 0 → w_a).
+#[inline]
+fn prune_delta(w: &Mat, g: &Mat, s: &Mat, r: usize, a: usize) -> f64 {
+    let wv = w.at(r, a) as f64;
+    2.0 * wv * s.at(r, a) as f64 + wv * wv * g.at(a, a) as f64
+}
+
+/// Δ of keeping the pruned coordinate `(r, b)` (z_b: w_b → 0).
+#[inline]
+fn keep_delta(w: &Mat, g: &Mat, s: &Mat, r: usize, b: usize) -> f64 {
+    let wv = w.at(r, b) as f64;
+    -2.0 * wv * s.at(r, b) as f64 + wv * wv * g.at(b, b) as f64
+}
+
+/// Apply an accepted swap to the mask and the maintained `S = Z·G`
+/// state: prune `(r_a, a)`, keep `(r_b, b)`.
+fn commit_swap(w: &Mat, g: &Mat, s: &mut Mat, mask: &mut Mat, ra: usize, a: usize, rb: usize, b: usize) {
+    *mask.at_mut(ra, a) = 0.0;
+    *mask.at_mut(rb, b) = 1.0;
+    let wa = w.at(ra, a);
+    let wb = w.at(rb, b);
+    for j in 0..s.cols {
+        *s.at_mut(ra, j) += wa * g.at(a, j);
+    }
+    for j in 0..s.cols {
+        *s.at_mut(rb, j) -= wb * g.at(b, j);
+    }
+}
+
+/// Greedy best-improving 1-swaps inside one row segment
+/// `[lo, hi)` (a whole row, or one n:m block).
+fn swap_unit(
+    w: &Mat,
+    g: &Mat,
+    s: &mut Mat,
+    mask: &mut Mat,
+    r: usize,
+    lo: usize,
+    hi: usize,
+    max_swaps: usize,
+) -> usize {
+    let mut accepted = 0;
+    while accepted < max_swaps {
+        let kept: Vec<usize> = (lo..hi).filter(|&j| mask.at(r, j) != 0.0).collect();
+        let pruned: Vec<usize> = (lo..hi).filter(|&j| mask.at(r, j) == 0.0).collect();
+        if kept.is_empty() || pruned.is_empty() {
+            break;
+        }
+        let keep_deltas: Vec<f64> = pruned.iter().map(|&b| keep_delta(w, g, s, r, b)).collect();
+        let mut best: Option<(f64, usize, usize)> = None;
+        for &a in &kept {
+            let pd = prune_delta(w, g, s, r, a);
+            let wa = w.at(r, a) as f64;
+            for (bi, &b) in pruned.iter().enumerate() {
+                let cross = -2.0 * wa * w.at(r, b) as f64 * g.at(a, b) as f64;
+                let delta = pd + keep_deltas[bi] + cross;
+                if best.map(|(d, _, _)| delta < d).unwrap_or(true) {
+                    best = Some((delta, a, b));
+                }
+            }
+        }
+        match best {
+            Some((delta, a, b)) if delta < 0.0 => {
+                commit_swap(w, g, s, mask, r, a, r, b);
+                accepted += 1;
+            }
+            _ => break,
+        }
+    }
+    accepted
+}
+
+/// Greedy 1-swaps under the global (unstructured) budget: the best
+/// prune candidate and the best keep candidate may live in different
+/// rows (their deltas then just add — L is row-separable).  Top-2
+/// candidate lists sidestep the same-row cross-term coupling.
+fn swap_global(w: &Mat, g: &Mat, s: &mut Mat, mask: &mut Mat, max_swaps: usize) -> usize {
+    let (rows, cols) = (mask.rows, mask.cols);
+    let mut accepted = 0;
+    while accepted < max_swaps {
+        // top-2 (smallest-delta) prune and keep candidates
+        let mut prunes: Vec<(f64, usize, usize)> = Vec::new(); // (delta, r, j)
+        let mut keeps: Vec<(f64, usize, usize)> = Vec::new();
+        for r in 0..rows {
+            for j in 0..cols {
+                if mask.at(r, j) != 0.0 {
+                    push_top2(&mut prunes, (prune_delta(w, g, s, r, j), r, j));
+                } else {
+                    push_top2(&mut keeps, (keep_delta(w, g, s, r, j), r, j));
+                }
+            }
+        }
+        let mut best: Option<(f64, (usize, usize), (usize, usize))> = None;
+        for &(pd, ra, a) in &prunes {
+            for &(kd, rb, b) in &keeps {
+                let cross = if ra == rb {
+                    -2.0 * w.at(ra, a) as f64 * w.at(rb, b) as f64 * g.at(a, b) as f64
+                } else {
+                    0.0
+                };
+                let delta = pd + kd + cross;
+                if best.map(|(d, _, _)| delta < d).unwrap_or(true) {
+                    best = Some((delta, (ra, a), (rb, b)));
+                }
+            }
+        }
+        match best {
+            Some((delta, (ra, a), (rb, b))) if delta < 0.0 => {
+                commit_swap(w, g, s, mask, ra, a, rb, b);
+                accepted += 1;
+            }
+            _ => break,
+        }
+    }
+    accepted
+}
+
+/// Keep the two smallest-delta entries.
+fn push_top2(top: &mut Vec<(f64, usize, usize)>, cand: (f64, usize, usize)) {
+    top.push(cand);
+    top.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    top.truncate(2);
+}
+
+/// Greedy 1-swap refinement of `mask` under `pattern`; returns the
+/// number of accepted swaps.  Feasibility and the keep count are
+/// invariant (swaps stay inside the pattern's constraint unit).
+pub fn swaps_refine(
+    w: &Mat,
+    g: &Mat,
+    pattern: &SparsityPattern,
+    mask: &mut Mat,
+    max_swaps: usize,
+) -> usize {
+    let (rows, cols) = (w.rows, w.cols);
+    assert_eq!((mask.rows, mask.cols), (rows, cols));
+    // maintained S = (W ⊙ (1−M)) · G
+    let z = Mat::from_vec(
+        rows,
+        cols,
+        w.data
+            .iter()
+            .zip(&mask.data)
+            .map(|(&wv, &mv)| wv * (1.0 - mv))
+            .collect(),
+    );
+    let mut s = matmul(&z, g);
+    let mut accepted = 0;
+    match pattern {
+        SparsityPattern::PerRow { .. } => {
+            for r in 0..rows {
+                accepted += swap_unit(w, g, &mut s, mask, r, 0, cols, max_swaps);
+            }
+        }
+        SparsityPattern::NM { block, .. } => {
+            for r in 0..rows {
+                let mut c = 0;
+                while c + block <= cols {
+                    accepted += swap_unit(w, g, &mut s, mask, r, c, c + block, max_swaps);
+                    c += block;
+                }
+            }
+        }
+        SparsityPattern::Unstructured { .. } => {
+            // row-local swaps preserve the global count too, and give
+            // the same per-row refinement depth as the row-separable
+            // patterns at the same cost; cross-row swaps then
+            // reallocate budget between rows (capped at `max_swaps`
+            // moves — each costs a full candidate scan)
+            for r in 0..rows {
+                accepted += swap_unit(w, g, &mut s, mask, r, 0, cols, max_swaps);
+            }
+            accepted += swap_global(w, g, &mut s, mask, max_swaps);
+        }
+    }
+    accepted
+}
+
+// ---------------------------------------------------------------------------
+// Least-squares masked weight update
+// ---------------------------------------------------------------------------
+
+/// Per-row least-squares re-solve of the kept weights against the gram
+/// (Boža, 2024): `ŵ_S = (G_SS + λI)⁻¹ G_S,: w_rᵀ`, λ relative to
+/// `mean(diag G)`.  Rows solve independently (parallel); a row whose
+/// damped gram is not PD falls back to its plainly-masked weights, so
+/// the result is never worse than masking.
+pub fn lsq_update(w: &Mat, g: &Mat, mask: &Mat, percdamp: f64) -> Mat {
+    let din = w.cols;
+    let gf = MatF64::from_mat(g);
+    let damp = percdamp * gf.mean_diag() + 1e-10;
+    // fallback: plainly-masked weights
+    let out = Mutex::new(w.hadamard(mask));
+    parallel_for(w.rows, |i| {
+        let support: Vec<usize> = (0..din).filter(|&j| mask.at(i, j) != 0.0).collect();
+        if support.is_empty() {
+            return;
+        }
+        let k = support.len();
+        let mut a = MatF64::zeros(k);
+        for (p, &jp) in support.iter().enumerate() {
+            for (q, &jq) in support.iter().enumerate() {
+                *a.at_mut(p, q) = gf.at(jp, jq);
+            }
+            *a.at_mut(p, p) += damp;
+        }
+        let b: Vec<f64> = support
+            .iter()
+            .map(|&jp| {
+                (0..din)
+                    .map(|j| gf.at(jp, j) * w.at(i, j) as f64)
+                    .sum()
+            })
+            .collect();
+        let Some(l) = cholesky(&a) else { return };
+        let x = chol_solve(&l, &b);
+        let mut guard = out.lock().unwrap();
+        for j in 0..din {
+            *guard.at_mut(i, j) = 0.0;
+        }
+        for (p, &jp) in support.iter().enumerate() {
+            *guard.at_mut(i, jp) = x[p] as f32;
+        }
+    });
+    out.into_inner().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::mask::mask_satisfies;
+    use crate::pruner::saliency::{saliency_mask, wanda_scores};
+    use crate::pruner::sparsefw::NativeKernels;
+    use crate::tensor::matmul_a_bt;
+    use crate::util::json;
+    use crate::util::prng::Xoshiro256;
+
+    fn setup(dout: usize, din: usize, b: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Xoshiro256::new(seed);
+        let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+        let mut x = Mat::gaussian(din, b, 1.0, &mut rng);
+        for i in 0..din {
+            if i % 5 == 0 {
+                for v in x.row_mut(i) {
+                    *v *= 4.0;
+                }
+            }
+        }
+        (w, matmul_a_bt(&x, &x))
+    }
+
+    fn patterns() -> [SparsityPattern; 3] {
+        [
+            SparsityPattern::Unstructured { sparsity: 0.6 },
+            SparsityPattern::PerRow { sparsity: 0.6 },
+            SparsityPattern::NM { keep: 2, block: 4 },
+        ]
+    }
+
+    #[test]
+    fn swaps_lower_objective_and_preserve_feasibility() {
+        let (w, g) = setup(12, 24, 96, 1);
+        for pattern in patterns() {
+            let mask0 = saliency_mask(&wanda_scores(&w, &g), &pattern);
+            let obj0 = crate::pruner::fw_math::objective(&w, &mask0, &g);
+            let mut mask = mask0.clone();
+            let accepted = swaps_refine(&w, &g, &pattern, &mut mask, DEFAULT_MAX_SWAPS);
+            let obj1 = crate::pruner::fw_math::objective(&w, &mask, &g);
+            assert!(
+                obj1 <= obj0 * (1.0 + 1e-6),
+                "{pattern:?}: {obj1} !<= {obj0}"
+            );
+            assert!(mask_satisfies(&mask, &pattern), "{pattern:?}");
+            assert_eq!(mask.count_nonzero(), mask0.count_nonzero(), "{pattern:?}");
+            // greedy masks on anisotropic activations leave improving
+            // swaps on the table — the pass must find them in the
+            // large-unit patterns (tiny 2-of-4 blocks may already be
+            // optimal, so only non-regression is asserted there)
+            if !matches!(pattern, SparsityPattern::NM { .. }) {
+                assert!(accepted > 0, "{pattern:?}: no swaps accepted");
+            }
+        }
+    }
+
+    #[test]
+    fn lsq_update_beats_plain_masking() {
+        let (w, g) = setup(8, 16, 64, 2);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        let mask = saliency_mask(&wanda_scores(&w, &g), &pattern);
+        let masked_obj = crate::pruner::fw_math::objective(&w, &mask, &g);
+        let updated = lsq_update(&w, &g, &mask, DEFAULT_UPDATE_PERCDAMP);
+        // zero exactly off-mask
+        for (m, v) in mask.data.iter().zip(&updated.data) {
+            if *m == 0.0 {
+                assert_eq!(*v, 0.0);
+            }
+        }
+        let err = recon_error(&w, &updated, &g);
+        assert!(err < masked_obj, "update {err} !< masked {masked_obj}");
+    }
+
+    #[test]
+    fn apply_refine_reports_nonnegative_delta() {
+        let (w, g) = setup(10, 20, 80, 3);
+        for pattern in patterns() {
+            for passes in [
+                vec![RefinePass::swaps()],
+                vec![RefinePass::update()],
+                vec![RefinePass::swaps(), RefinePass::update()],
+            ] {
+                let mask = saliency_mask(&wanda_scores(&w, &g), &pattern);
+                let mut out =
+                    LayerPruneOutput::from_mask(&NativeKernels, &w, &g, mask).unwrap();
+                let obj_before = out.obj;
+                apply_refine(&passes, &NativeKernels, &w, &g, &pattern, &mut out).unwrap();
+                let delta = out.refine_obj_delta.expect("refine ran");
+                assert!(delta >= 0.0, "{pattern:?} {passes:?}: delta {delta}");
+                assert!(
+                    out.obj <= obj_before * (1.0 + 1e-9),
+                    "{pattern:?} {passes:?}: {} !<= {obj_before}",
+                    out.obj
+                );
+                assert!(mask_satisfies(&out.mask, &pattern));
+            }
+        }
+    }
+
+    #[test]
+    fn swaps_after_reconstruction_rebuild_weights() {
+        let (w, g) = setup(8, 16, 64, 4);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        let r = crate::pruner::sparsegpt::sparsegpt(&w, &g, &pattern, 0.01, 8).unwrap();
+        let obj = crate::pruner::fw_math::objective(&w, &r.mask, &g);
+        let mut out = LayerPruneOutput {
+            mask: r.mask,
+            obj,
+            warm_obj: None,
+            new_weights: Some(r.weights),
+            trace: None,
+            fw_iters: 0,
+            refine_obj_delta: None,
+        };
+        let before = recon_error(&w, out.new_weights.as_ref().unwrap(), &g);
+        apply_refine(
+            &[RefinePass::swaps()],
+            &NativeKernels,
+            &w,
+            &g,
+            &pattern,
+            &mut out,
+        )
+        .unwrap();
+        let nw = out.new_weights.as_ref().expect("weights rebuilt");
+        // reconstructed weights stay consistent with the (possibly
+        // swapped) mask, and the realized error never regresses
+        for (m, v) in out.mask.data.iter().zip(&nw.data) {
+            if *m == 0.0 {
+                assert_eq!(*v, 0.0);
+            }
+        }
+        assert!(recon_error(&w, nw, &g) <= before * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn parse_and_json_roundtrip() {
+        assert_eq!(RefinePass::parse_list("").unwrap(), vec![]);
+        assert_eq!(RefinePass::parse_list("none").unwrap(), vec![]);
+        assert_eq!(
+            RefinePass::parse_list("swaps,update").unwrap(),
+            vec![RefinePass::swaps(), RefinePass::update()]
+        );
+        assert_eq!(
+            RefinePass::parse_list("swaps+update").unwrap(),
+            vec![RefinePass::swaps(), RefinePass::update()]
+        );
+        assert!(RefinePass::parse_list("polish").is_err());
+        assert_eq!(
+            RefinePass::list_label(&[RefinePass::swaps(), RefinePass::update()]),
+            "swaps+update"
+        );
+
+        for passes in [
+            vec![RefinePass::swaps()],
+            vec![RefinePass::Swaps { max_swaps: 7 }],
+            vec![RefinePass::WeightUpdate { percdamp: 0.1 }, RefinePass::swaps()],
+        ] {
+            let j = RefinePass::list_to_json(&passes);
+            let text = json::to_string(&j);
+            let back = RefinePass::list_from_json(&json::parse(&text).unwrap()).unwrap();
+            assert_eq!(passes, back);
+        }
+        // strict fields inside object-form passes
+        let bad = json::parse(r#"[{"kind": "swaps", "max_swap": 3}]"#).unwrap();
+        let err = RefinePass::list_from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("max_swap"), "{err}");
+    }
+}

@@ -1,0 +1,325 @@
+//! The method registry — the single source of truth for which pruning
+//! methods exist.
+//!
+//! A [`MethodRegistration`] bundles everything the stack needs to know
+//! about one method: its name, a default-config constructor, the JSON
+//! codec (`{"kind": name, …config}` ↔ [`Method`]), and an optional CLI
+//! lowering (`--method name` + method-specific flags).  CLI parsing
+//! ([`crate::config::cli::parse_method`]), JobSpec round-trips
+//! ([`crate::config::method_from_json`]), server-side submit validation,
+//! `GET /methods` / `sparsefw methods` listings and the
+//! `table1_methods` bench all iterate this registry — registering a
+//! method is the *only* step after implementing
+//! [`LayerPruner`](crate::pruner::LayerPruner).
+//!
+//! JSON parsing is strict about field names: an unknown top-level key in
+//! a method config object is a hard error naming the field (a typo'd
+//! `"alhpa"` must not silently fall back to the default α).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::config::cli::{parse_warmstart, Args};
+use crate::pruner::fw_engine::FwEngine;
+use crate::pruner::method::Method;
+use crate::pruner::sparsefw::SparseFwConfig;
+use crate::util::json::Json;
+
+type JsonFactory = Box<dyn Fn(&Json) -> Result<Method> + Send + Sync>;
+type CliFactory = Box<dyn Fn(&Args) -> Result<Method> + Send + Sync>;
+type DefaultFactory = Box<dyn Fn() -> Method + Send + Sync>;
+
+/// Everything the registry knows about one method.
+pub struct MethodRegistration {
+    name: String,
+    make_default: DefaultFactory,
+    from_json: JsonFactory,
+    from_cli: Option<CliFactory>,
+}
+
+impl MethodRegistration {
+    /// Register `name` with a default constructor and a JSON config
+    /// parser.  The parser receives the full method object (including
+    /// `"kind"`) and must reject unknown fields — use
+    /// [`check_config_fields`] for that.
+    pub fn new(
+        name: impl Into<String>,
+        make_default: impl Fn() -> Method + Send + Sync + 'static,
+        from_json: impl Fn(&Json) -> Result<Method> + Send + Sync + 'static,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            make_default: Box::new(make_default),
+            from_json: Box::new(from_json),
+            from_cli: None,
+        }
+    }
+
+    /// Add a CLI lowering (method-specific flags → configured method).
+    /// Without one, `--method name` builds the default configuration
+    /// (and `--method-json` can still pass arbitrary config).
+    pub fn with_cli(
+        mut self,
+        from_cli: impl Fn(&Args) -> Result<Method> + Send + Sync + 'static,
+    ) -> Self {
+        self.from_cli = Some(Box::new(from_cli));
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Reject unknown top-level fields in a method config object.  `"kind"`
+/// is always allowed; everything else must appear in `allowed`.
+pub fn check_config_fields(kind: &str, mj: &Json, allowed: &[&str]) -> Result<()> {
+    if let Some(obj) = mj.as_obj() {
+        for key in obj.keys() {
+            if key != "kind" && !allowed.iter().any(|a| a == key) {
+                bail!(
+                    "unknown field {key:?} in {kind:?} method config (allowed: {})",
+                    if allowed.is_empty() { "none".to_string() } else { allowed.join(", ") }
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Like [`check_config_fields`], with the allowed set derived from the
+/// method's own default `config_to_json` keys — one source of truth, so
+/// a config field added to the serializer is automatically accepted by
+/// the parser (and the registry can never reject its own output).
+pub fn check_config_fields_against(kind: &str, mj: &Json, default: &Method) -> Result<()> {
+    let allowed: Vec<String> = match default.config_to_json() {
+        Json::Obj(m) => m.keys().cloned().collect(),
+        _ => Vec::new(),
+    };
+    let allowed: Vec<&str> = allowed.iter().map(|s| s.as_str()).collect();
+    check_config_fields(kind, mj, &allowed)
+}
+
+/// Name → [`MethodRegistration`] map behind the whole stack.
+pub struct MethodRegistry {
+    inner: RwLock<BTreeMap<String, Arc<MethodRegistration>>>,
+}
+
+impl MethodRegistry {
+    /// An empty registry (tests; prefer [`MethodRegistry::global`]).
+    pub fn new() -> Self {
+        Self { inner: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// The process-wide registry, pre-populated with the built-ins
+    /// (magnitude, wanda, ria, sparsefw, sparsegpt).
+    pub fn global() -> &'static MethodRegistry {
+        static GLOBAL: OnceLock<MethodRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let reg = MethodRegistry::new();
+            for r in builtin_registrations() {
+                reg.register(r);
+            }
+            reg
+        })
+    }
+
+    /// Register (or replace — latest wins) a method.
+    pub fn register(&self, registration: MethodRegistration) {
+        self.inner
+            .write()
+            .unwrap()
+            .insert(registration.name.clone(), Arc::new(registration));
+    }
+
+    /// Registered method names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.inner.read().unwrap().contains_key(name)
+    }
+
+    fn lookup(&self, name: &str) -> Result<Arc<MethodRegistration>> {
+        // clone out of the guard before formatting an error: names()
+        // re-locks, and a same-thread reentrant read is UB-adjacent
+        let found = self.inner.read().unwrap().get(name).cloned();
+        match found {
+            Some(r) => Ok(r),
+            None => bail!(
+                "unknown method {name:?} (registered: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    /// Build `name` with its default configuration.
+    pub fn default(&self, name: &str) -> Result<Method> {
+        Ok((self.lookup(name)?.make_default)())
+    }
+
+    /// Build `name` from its JSON config object (strict field names).
+    pub fn method_from_json(&self, name: &str, mj: &Json) -> Result<Method> {
+        (self.lookup(name)?.from_json)(mj)
+    }
+
+    /// Build `name` from CLI flags (falls back to the default config
+    /// for methods registered without a CLI lowering).
+    pub fn method_from_cli(&self, name: &str, args: &Args) -> Result<Method> {
+        let reg = self.lookup(name)?;
+        match &reg.from_cli {
+            Some(f) => f(args),
+            None => Ok((reg.make_default)()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in registrations
+// ---------------------------------------------------------------------------
+
+// missing fields fall back to the one canonical default set —
+// [`SparseFwConfig::default`] — so a saved spec with a field omitted
+// always parses to the same config `--method sparsefw` builds
+fn sparsefw_from_json(mj: &Json) -> Result<Method> {
+    let d = SparseFwConfig::default();
+    check_config_fields_against("sparsefw", mj, &Method::sparsefw(d.clone()))?;
+    Ok(Method::sparsefw(SparseFwConfig {
+        iters: mj.at(&["iters"]).as_usize().unwrap_or(d.iters),
+        alpha: mj.at(&["alpha"]).as_f64().unwrap_or(d.alpha),
+        warmstart: match mj.at(&["warmstart"]).as_str() {
+            Some(s) => parse_warmstart(s)?,
+            None => d.warmstart,
+        },
+        trace_every: mj.at(&["trace_every"]).as_usize().unwrap_or(d.trace_every),
+        use_chunk: mj.at(&["use_chunk"]).as_bool().unwrap_or(d.use_chunk),
+        keep_best: mj.at(&["keep_best"]).as_bool().unwrap_or(d.keep_best),
+        line_search: mj.at(&["line_search"]).as_bool().unwrap_or(d.line_search),
+        engine: match mj.at(&["engine"]).as_str() {
+            Some(s) => FwEngine::parse(s)?,
+            None => d.engine,
+        },
+        refresh_every: mj.at(&["refresh_every"]).as_usize().unwrap_or(d.refresh_every),
+    }))
+}
+
+fn sparsefw_from_cli(args: &Args) -> Result<Method> {
+    let d = SparseFwConfig::default();
+    Ok(Method::sparsefw(SparseFwConfig {
+        iters: args.get_usize("iters", d.iters)?,
+        alpha: args.get_f64("alpha", d.alpha)?,
+        warmstart: match args.get("warmstart") {
+            Some(s) => parse_warmstart(s)?,
+            None => d.warmstart,
+        },
+        trace_every: args.get_usize("trace-every", d.trace_every)?,
+        use_chunk: !args.has("no-chunk"),
+        keep_best: !args.has("no-keep-best"),
+        line_search: args.has("line-search"),
+        engine: match args.get("fw-engine") {
+            Some(s) => FwEngine::parse(s)?,
+            None => d.engine,
+        },
+        refresh_every: args.get_usize("fw-refresh", d.refresh_every)?,
+    }))
+}
+
+/// SparseGPT's reference-implementation defaults, shared by the
+/// default constructor and both parsers.
+const SPARSEGPT_PERCDAMP: f64 = 0.01;
+const SPARSEGPT_BLOCKSIZE: usize = 128;
+
+fn sparsegpt_default() -> Method {
+    Method::sparsegpt(SPARSEGPT_PERCDAMP, SPARSEGPT_BLOCKSIZE)
+}
+
+fn sparsegpt_from_json(mj: &Json) -> Result<Method> {
+    check_config_fields_against("sparsegpt", mj, &sparsegpt_default())?;
+    Ok(Method::sparsegpt(
+        mj.at(&["percdamp"]).as_f64().unwrap_or(SPARSEGPT_PERCDAMP),
+        mj.at(&["blocksize"]).as_usize().unwrap_or(SPARSEGPT_BLOCKSIZE),
+    ))
+}
+
+fn builtin_registrations() -> Vec<MethodRegistration> {
+    let configless = |name: &'static str, make: fn() -> Method| {
+        MethodRegistration::new(name, make, move |mj| {
+            check_config_fields(name, mj, &[])?;
+            Ok(make())
+        })
+    };
+    vec![
+        configless("magnitude", Method::magnitude),
+        configless("wanda", Method::wanda),
+        configless("ria", Method::ria),
+        MethodRegistration::new(
+            "sparsefw",
+            || Method::sparsefw(SparseFwConfig::default()),
+            sparsefw_from_json,
+        )
+        .with_cli(sparsefw_from_cli),
+        MethodRegistration::new("sparsegpt", sparsegpt_default, sparsegpt_from_json)
+            .with_cli(|args| {
+                Ok(Method::sparsegpt(
+                    args.get_f64("percdamp", SPARSEGPT_PERCDAMP)?,
+                    args.get_usize("blocksize", SPARSEGPT_BLOCKSIZE)?,
+                ))
+            }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn global_registry_lists_builtins_sorted() {
+        let names = MethodRegistry::global().names();
+        for want in ["magnitude", "ria", "sparsefw", "sparsegpt", "wanda"] {
+            assert!(names.iter().any(|n| n == want), "{want} missing: {names:?}");
+        }
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn unknown_method_error_names_known_set() {
+        let err = MethodRegistry::global().default("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        assert!(err.contains("sparsefw") && err.contains("wanda"), "{err}");
+    }
+
+    #[test]
+    fn unknown_config_field_is_a_named_hard_error() {
+        // the regression the strict parser exists for: a typo'd "alhpa"
+        let mj = json::parse(r#"{"kind": "sparsefw", "alhpa": 0.5}"#).unwrap();
+        let err = MethodRegistry::global()
+            .method_from_json("sparsefw", &mj)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("alhpa"), "{err}");
+        assert!(err.contains("sparsefw"), "{err}");
+        // config-less methods reject any field at all
+        let mj = json::parse(r#"{"kind": "wanda", "iters": 3}"#).unwrap();
+        let err = MethodRegistry::global()
+            .method_from_json("wanda", &mj)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("iters"), "{err}");
+    }
+
+    #[test]
+    fn registration_replaces_latest_wins() {
+        let reg = MethodRegistry::new();
+        reg.register(MethodRegistration::new("m", Method::wanda, |_| Ok(Method::wanda())));
+        assert_eq!(reg.default("m").unwrap().name(), "wanda");
+        reg.register(MethodRegistration::new("m", Method::ria, |_| Ok(Method::ria())));
+        assert_eq!(reg.default("m").unwrap().name(), "ria");
+        assert_eq!(reg.names(), vec!["m".to_string()]);
+    }
+}

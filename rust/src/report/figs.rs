@@ -6,7 +6,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::pruner::{Method, SparseFwConfig, SparsityPattern, Warmstart};
 use crate::util::json::Json;
 
 use super::{print_table, ReportCtx};
@@ -17,7 +17,7 @@ pub fn fig2(ctx: &mut ReportCtx) -> Result<Json> {
     let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
     let model_name = ctx.models[0].clone();
 
-    let method = PruneMethod::SparseFw(SparseFwConfig {
+    let method = Method::sparsefw(SparseFwConfig {
         iters: ctx.iters,
         warmstart: Warmstart::Wanda,
         ..Default::default()
@@ -87,7 +87,7 @@ pub fn fig3_iters(ctx: &mut ReportCtx, iter_grid: &[usize]) -> Result<Json> {
     let mut rows = Vec::new();
     let mut out = Vec::new();
     for &iters in iter_grid {
-        let method = PruneMethod::SparseFw(SparseFwConfig {
+        let method = Method::sparsefw(SparseFwConfig {
             iters,
             warmstart: Warmstart::Wanda,
             ..Default::default()
@@ -127,14 +127,14 @@ pub fn fig3_samples(ctx: &mut ReportCtx, sample_grid: &[usize]) -> Result<Json> 
     let mut rows = Vec::new();
     let mut out = Vec::new();
     for &samples in sample_grid {
-        let fw_method = PruneMethod::SparseFw(SparseFwConfig {
+        let fw_method = Method::sparsefw(SparseFwConfig {
             iters: ctx.iters,
             warmstart: Warmstart::Wanda,
             ..Default::default()
         });
         let mut fw_spec = ctx.spec(&model_name, fw_method, pattern.clone());
         fw_spec.calib_samples = samples;
-        let mut wanda_spec = ctx.spec(&model_name, PruneMethod::Wanda, pattern.clone());
+        let mut wanda_spec = ctx.spec(&model_name, Method::wanda(), pattern.clone());
         wanda_spec.calib_samples = samples;
 
         let fw_ppl = ctx.run(&fw_spec)?.eval.context("fig3 fw missing eval")?.ppl;
@@ -177,7 +177,7 @@ pub fn fig4(ctx: &mut ReportCtx) -> Result<Json> {
     let model_name = ctx.models[0].clone();
 
     let trace_every = (ctx.iters / 25).max(1);
-    let method = PruneMethod::SparseFw(SparseFwConfig {
+    let method = Method::sparsefw(SparseFwConfig {
         iters: ctx.iters,
         alpha: 0.0,
         warmstart: Warmstart::Wanda,

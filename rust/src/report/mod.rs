@@ -22,7 +22,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{Backend, Workspace};
 use crate::coordinator::{Allocation, EvalSpec, JobResult, JobSpec, PruneSession};
-use crate::pruner::{PruneMethod, SparsityPattern};
+use crate::pruner::{Method, SparsityPattern};
 use crate::util::json::{self, Json};
 
 /// Shared context: the executing session plus report-size knobs.
@@ -70,7 +70,7 @@ impl ReportCtx {
 
     /// The [`JobSpec`] for one report cell (native backend, ctx-level
     /// calibration knobs, eval enabled).
-    pub fn spec(&self, model: &str, method: PruneMethod, pattern: SparsityPattern) -> JobSpec {
+    pub fn spec(&self, model: &str, method: Method, pattern: SparsityPattern) -> JobSpec {
         JobSpec {
             model: model.to_string(),
             method,
@@ -82,6 +82,7 @@ impl ReportCtx {
             // dense calibration
             calib_policy: crate::calib::CalibPolicy::Dense,
             trace_every: 0,
+            refine: Vec::new(),
             eval: Some(EvalSpec { seqs: self.eval_seqs, zs_items: self.zs_items }),
         }
     }

@@ -4,7 +4,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use crate::pruner::{Method, SparseFwConfig, SparsityPattern, Warmstart};
 use crate::util::json::Json;
 
 use super::{print_table, ReportCtx};
@@ -21,16 +21,16 @@ pub fn sparsity_grid() -> Vec<SparsityPattern> {
     ]
 }
 
-fn table1_methods(iters: usize) -> Vec<PruneMethod> {
+fn table1_methods(iters: usize) -> Vec<Method> {
     vec![
-        PruneMethod::Wanda,
-        PruneMethod::Ria,
-        PruneMethod::SparseFw(SparseFwConfig {
+        Method::wanda(),
+        Method::ria(),
+        Method::sparsefw(SparseFwConfig {
             iters,
             warmstart: Warmstart::Wanda,
             ..Default::default()
         }),
-        PruneMethod::SparseFw(SparseFwConfig {
+        Method::sparsefw(SparseFwConfig {
             iters,
             warmstart: Warmstart::Ria,
             ..Default::default()
@@ -113,7 +113,7 @@ pub fn table2(ctx: &mut ReportCtx) -> Result<Json> {
         for model_name in ctx.models.clone() {
             let mut row = vec![model_name.clone(), pattern.label()];
             for &alpha in &alphas {
-                let method = PruneMethod::SparseFw(SparseFwConfig {
+                let method = Method::sparsefw(SparseFwConfig {
                     iters: ctx.iters,
                     alpha,
                     warmstart: Warmstart::Wanda,

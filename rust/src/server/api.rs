@@ -9,9 +9,14 @@
 //! | GET    | `/jobs/:id`       | status + per-layer progress + result summary |
 //! | GET    | `/jobs/:id/events`| chunked NDJSON live progress stream          |
 //! | DELETE | `/jobs/:id`       | cancel a queued job                          |
+//! | GET    | `/methods`        | the method registry: name, caps, defaults    |
 //! | GET    | `/healthz`        | liveness                                     |
 //! | GET    | `/metrics`        | counters: jobs, queue depth, calib cache, …  |
 //! | POST   | `/shutdown`       | graceful shutdown (`?drain=1` runs backlog)  |
+//!
+//! Submitted specs parse through the global
+//! [`crate::pruner::MethodRegistry`], so a job naming an unregistered
+//! method is rejected with a 400 whose message names the known set.
 
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -100,16 +105,43 @@ fn route(req: &Request, state: &Arc<ServerState>) -> Response {
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
         ("GET", ["metrics"]) => metrics(state),
+        ("GET", ["methods"]) => list_methods(),
         ("GET", ["jobs"]) => list_jobs(state),
         ("POST", ["jobs"]) => submit_job(req, state),
         ("GET", ["jobs", id]) => job_status(state, id),
         ("DELETE", ["jobs", id]) => cancel_job(state, id),
         ("POST", ["shutdown"]) => shutdown(req, state),
-        (_, ["jobs", ..]) | (_, ["healthz"]) | (_, ["metrics"]) | (_, ["shutdown"]) => {
+        (_, ["jobs", ..]) | (_, ["healthz"]) | (_, ["metrics"]) | (_, ["methods"])
+        | (_, ["shutdown"]) => {
             Response::error(405, &format!("{} not allowed here", req.method))
         }
         _ => Response::error(404, &format!("no route for {}", req.path)),
     }
+}
+
+/// `GET /methods` — the registry listing: every registered method's
+/// name, capability flags, and default configuration JSON.  Clients use
+/// this to discover what a server can run before submitting.
+pub fn methods_json() -> Json {
+    let registry = crate::pruner::MethodRegistry::global();
+    let methods: Vec<Json> = registry
+        .names()
+        .iter()
+        .filter_map(|name| {
+            let m = registry.default(name).ok()?;
+            Some(Json::obj(vec![
+                ("name", name.as_str().into()),
+                ("label", m.label().into()),
+                ("caps", m.caps().to_json()),
+                ("default_config", crate::config::method_to_json(&m)),
+            ]))
+        })
+        .collect();
+    Json::obj(vec![("methods", Json::Arr(methods))])
+}
+
+fn list_methods() -> Response {
+    Response::json(200, &methods_json())
 }
 
 // ---------------------------------------------------------------------------

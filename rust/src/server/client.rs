@@ -103,8 +103,15 @@ impl Client {
 
     /// `POST /jobs`; returns the assigned job id.
     pub fn submit(&self, spec: &JobSpec, priority: i64) -> Result<JobId> {
+        self.submit_json(&spec.to_json(), priority)
+    }
+
+    /// `POST /jobs` with a raw spec JSON value — for clients that build
+    /// specs as data (and for probing a server's validation: unknown
+    /// methods come back as a 400 naming the registered set).
+    pub fn submit_json(&self, spec: &Json, priority: i64) -> Result<JobId> {
         let body = Json::obj(vec![
-            ("spec", spec.to_json()),
+            ("spec", spec.clone()),
             ("priority", (priority as f64).into()),
         ]);
         let v = self.request_ok("POST", "/jobs", Some(&body))?;
@@ -113,6 +120,11 @@ impl Client {
             .as_usize()
             .context("submit response has no id")?;
         Ok(id as JobId)
+    }
+
+    /// `GET /methods` — the server's method registry listing.
+    pub fn methods(&self) -> Result<Json> {
+        self.request_ok("GET", "/methods", None)
     }
 
     /// `GET /jobs/:id` — the full status payload.

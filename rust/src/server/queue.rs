@@ -72,6 +72,9 @@ pub struct JobSummary {
     pub mask_nnz: usize,
     /// Σ FW iterations across layers (0 for greedy/one-shot methods).
     pub fw_iters: usize,
+    /// Σ objective improvement from refine post-passes (`--refine`);
+    /// `None` when the job ran no refinement.
+    pub refine_obj_delta: Option<f64>,
     pub pruned_sparsity: Option<f64>,
     pub ppl: Option<f64>,
     /// Propagation granularity label (`"block"`/`"layer"`) when the
@@ -92,6 +95,7 @@ impl JobSummary {
             mask_layers: res.masks().len(),
             mask_nnz: res.masks().values().map(|m| m.count_nonzero()).sum(),
             fw_iters: res.prune.fw_iters,
+            refine_obj_delta: res.prune.refine_obj_delta,
             pruned_sparsity: res.pruned_sparsity,
             ppl: res.eval.as_ref().map(|e| e.ppl),
             calib_policy: res.prune.staged.map(|s| s.policy.label().to_string()),
@@ -122,6 +126,9 @@ impl JobSummary {
         ];
         if let Some(ips) = self.iters_per_sec() {
             fields.push(("iters_per_sec", ips.into()));
+        }
+        if let Some(d) = self.refine_obj_delta {
+            fields.push(("refine_obj_delta", d.into()));
         }
         if let Some(r) = self.mean_rel_reduction {
             fields.push(("mean_rel_reduction", r.into()));
@@ -583,6 +590,7 @@ mod tests {
                 mask_layers: 8,
                 mask_nnz: 100,
                 fw_iters: 4000,
+                refine_obj_delta: None,
                 pruned_sparsity: None,
                 ppl: None,
                 calib_policy: None,

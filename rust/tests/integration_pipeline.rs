@@ -1,15 +1,13 @@
 //! Artifact-backed pipeline integration: corpus parity with python,
-//! checkpoint loading, and full prune→eval flows on the trained models.
+//! checkpoint loading, and full prune→eval flows on the trained models
+//! — all through the declarative JobSpec / PruneSession API (the
+//! legacy `PrunePipeline` shims are gone).
 
-// The deprecated PrunePipeline shims stay covered here until removed.
-#![allow(deprecated)]
-
-use sparsefw::calib::Calibration;
 use sparsefw::config::Workspace;
-use sparsefw::coordinator::PrunePipeline;
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession};
 use sparsefw::data::corpus;
 use sparsefw::eval::{layer_errors, perplexity_native, relative_reductions, zero_shot};
-use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::pruner::{Method, SparseFwConfig, SparsityPattern, Warmstart};
 
 fn workspace() -> Option<Workspace> {
     let dir = std::env::var("SPARSEFW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -19,6 +17,28 @@ fn workspace() -> Option<Workspace> {
             eprintln!("NOTE: artifacts/ not built — pipeline integration tests skipped");
             None
         }
+    }
+}
+
+/// First manifest model + a session over the workspace, plus a second
+/// copy of the model for masking/eval outside the session.
+fn session_setup() -> Option<(PruneSession, String, sparsefw::model::Gpt)> {
+    let ws = workspace()?;
+    let name = ws.manifest.model_names()[0].clone();
+    let model = ws.load_model(&name).unwrap();
+    Some((PruneSession::new(ws), name, model))
+}
+
+/// A JobSpec matching the historical test calibration (16 samples,
+/// seed 5) over a uniform pattern.
+fn spec_for(name: &str, method: Method, pattern: &SparsityPattern) -> JobSpec {
+    JobSpec {
+        model: name.to_string(),
+        method,
+        allocation: Allocation::Uniform(pattern.clone()),
+        calib_samples: 16,
+        calib_seed: 5,
+        ..Default::default()
     }
 }
 
@@ -72,30 +92,24 @@ fn trained_model_learned_structure() {
 
 /// The paper's core empirical claim at layer level: SparseFW strictly
 /// reduces the local pruning error vs both warmstarts, on the real
-/// trained model, for every pattern.
+/// trained model, for every pattern.  The session memoizes the
+/// calibration, so the sweep collects grams once.
 #[test]
 fn sparsefw_reduces_error_on_trained_model() {
-    let Some(ws) = workspace() else { return };
-    let model = ws.load_model(&ws.manifest.model_names()[0]).unwrap();
-    let calib = Calibration::collect(&model, &ws.train_bin().unwrap(), 16, 5).unwrap();
-    let pipe = PrunePipeline::new(&model, &calib);
+    let Some((mut session, name, _model)) = session_setup() else { return };
 
     for pattern in [
         SparsityPattern::PerRow { sparsity: 0.6 },
         SparsityPattern::NM { keep: 2, block: 4 },
     ] {
         for warmstart in [Warmstart::Wanda, Warmstart::Ria] {
-            let res = pipe
-                .run(
-                    &PruneMethod::SparseFw(SparseFwConfig {
-                        iters: 60,
-                        alpha: 0.5,
-                        warmstart,
-                        ..Default::default()
-                    }),
-                    &pattern,
-                )
-                .unwrap();
+            let method = Method::sparsefw(SparseFwConfig {
+                iters: 60,
+                alpha: 0.5,
+                warmstart,
+                ..Default::default()
+            });
+            let res = session.execute(&spec_for(&name, method, &pattern)).unwrap();
             let red = res.mean_rel_reduction().unwrap();
             assert!(
                 red > 0.02,
@@ -103,28 +117,32 @@ fn sparsefw_reduces_error_on_trained_model() {
                 pattern.label()
             );
             // warm vs final objective per layer: never worse
-            for (k, &w) in &res.warm_objs {
-                assert!(res.layer_objs[k] <= w * 1.0001, "{k}");
+            for (k, &w) in &res.prune.warm_objs {
+                assert!(res.prune.layer_objs[k] <= w * 1.0001, "{k}");
             }
         }
     }
+    let (hits, misses) = session.calib_stats();
+    assert_eq!(misses, 1, "one calibration for the whole sweep");
+    assert!(hits >= 3);
 }
 
 /// Pruning at 50% must cost < pruning at 80% in perplexity (sanity of
 /// the whole prune→mask→eval chain on the trained model).
 #[test]
 fn perplexity_monotone_in_sparsity() {
-    let Some(ws) = workspace() else { return };
-    let model = ws.load_model(&ws.manifest.model_names()[0]).unwrap();
-    let calib = Calibration::collect(&model, &ws.train_bin().unwrap(), 16, 5).unwrap();
-    let test = ws.test_bin().unwrap();
-    let pipe = PrunePipeline::new(&model, &calib);
+    let Some((mut session, name, model)) = session_setup() else { return };
+    let test = session.test_bin().unwrap().clone();
 
     let dense_ppl = perplexity_native(&model, &test, 24).unwrap();
     let mut last = dense_ppl;
     for s in [0.5, 0.8] {
-        let res = pipe
-            .run(&PruneMethod::Wanda, &SparsityPattern::PerRow { sparsity: s })
+        let res = session
+            .execute(&spec_for(
+                &name,
+                Method::wanda(),
+                &SparsityPattern::PerRow { sparsity: s },
+            ))
             .unwrap();
         let ppl = perplexity_native(&res.apply(&model).unwrap(), &test, 24).unwrap();
         assert!(ppl > last * 0.95, "s={s}: ppl {ppl} vs previous {last}");
@@ -137,32 +155,34 @@ fn perplexity_monotone_in_sparsity() {
 /// story the corpus was designed to elicit) at a damaging sparsity.
 #[test]
 fn wanda_beats_magnitude_locally() {
-    let Some(ws) = workspace() else { return };
-    let model = ws.load_model(&ws.manifest.model_names()[0]).unwrap();
-    let calib = Calibration::collect(&model, &ws.train_bin().unwrap(), 16, 5).unwrap();
-    let pipe = PrunePipeline::new(&model, &calib);
+    let Some((mut session, name, _model)) = session_setup() else { return };
     let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
 
-    let wanda = pipe.run(&PruneMethod::Wanda, &pattern).unwrap();
-    let magnitude = pipe.run(&PruneMethod::Magnitude, &pattern).unwrap();
-    let werr: f64 = wanda.layer_objs.values().sum();
-    let merr: f64 = magnitude.layer_objs.values().sum();
+    let wanda = session.execute(&spec_for(&name, Method::wanda(), &pattern)).unwrap();
+    let magnitude = session
+        .execute(&spec_for(&name, Method::magnitude(), &pattern))
+        .unwrap();
+    let werr = wanda.total_err();
+    let merr = magnitude.total_err();
     assert!(werr < merr, "wanda Σerr {werr} !< magnitude Σerr {merr}");
 }
 
-/// layer_errors/relative_reductions agree with the pipeline's own
+/// layer_errors/relative_reductions agree with the session's own
 /// bookkeeping.
 #[test]
 fn eval_helpers_consistent_with_pipeline() {
-    let Some(ws) = workspace() else { return };
-    let model = ws.load_model(&ws.manifest.model_names()[0]).unwrap();
-    let calib = Calibration::collect(&model, &ws.train_bin().unwrap(), 8, 5).unwrap();
-    let pipe = PrunePipeline::new(&model, &calib);
+    let Some((mut session, name, model)) = session_setup() else { return };
     let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
-    let wanda = pipe.run(&PruneMethod::Wanda, &pattern).unwrap();
+    let wanda = session
+        .execute(&JobSpec {
+            calib_samples: 8,
+            ..spec_for(&name, Method::wanda(), &pattern)
+        })
+        .unwrap();
 
-    let errs = layer_errors(&model, &calib, &wanda.masks);
-    for (k, &v) in &wanda.layer_objs {
+    let calib = session.calibration(&name, 8, 5).unwrap();
+    let errs = layer_errors(&model, calib, &wanda.prune.masks);
+    for (k, &v) in &wanda.prune.layer_objs {
         assert!((errs[k] - v).abs() < 1e-3 * (1.0 + v.abs()), "{k}");
     }
     let red = relative_reductions(&errs, &errs);
@@ -173,16 +193,13 @@ fn eval_helpers_consistent_with_pipeline() {
 /// (it optimizes the remaining weights, not just the mask).
 #[test]
 fn sparsegpt_reconstruction_reduces_error() {
-    let Some(ws) = workspace() else { return };
-    let model = ws.load_model(&ws.manifest.model_names()[0]).unwrap();
-    let calib = Calibration::collect(&model, &ws.train_bin().unwrap(), 16, 5).unwrap();
-    let test = ws.test_bin().unwrap();
-    let pipe = PrunePipeline::new(&model, &calib);
+    let Some((mut session, name, model)) = session_setup() else { return };
+    let test = session.test_bin().unwrap().clone();
     let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
 
-    let wanda = pipe.run(&PruneMethod::Wanda, &pattern).unwrap();
-    let sgpt = pipe
-        .run(&PruneMethod::SparseGpt { percdamp: 0.01, blocksize: 64 }, &pattern)
+    let wanda = session.execute(&spec_for(&name, Method::wanda(), &pattern)).unwrap();
+    let sgpt = session
+        .execute(&spec_for(&name, Method::sparsegpt(0.01, 64), &pattern))
         .unwrap();
     let wanda_ppl = perplexity_native(&wanda.apply(&model).unwrap(), &test, 24).unwrap();
     let sgpt_ppl = perplexity_native(&sgpt.apply(&model).unwrap(), &test, 24).unwrap();
@@ -191,4 +208,31 @@ fn sparsegpt_reconstruction_reduces_error() {
         sgpt_ppl < wanda_ppl * 1.10,
         "sparsegpt ppl {sgpt_ppl} much worse than wanda {wanda_ppl}"
     );
+}
+
+/// The `--refine update` post-pass (least-squares masked weight update)
+/// must close most of the gap between plain Wanda masking and full
+/// SparseGPT reconstruction on the trained model's local errors.
+#[test]
+fn refine_update_recovers_reconstruction_gains() {
+    use sparsefw::pruner::RefinePass;
+    let Some((mut session, name, _model)) = session_setup() else { return };
+    let pattern = SparsityPattern::PerRow { sparsity: 0.6 };
+
+    let plain = session.execute(&spec_for(&name, Method::wanda(), &pattern)).unwrap();
+    let refined = session
+        .execute(&JobSpec {
+            refine: vec![RefinePass::swaps(), RefinePass::update()],
+            ..spec_for(&name, Method::wanda(), &pattern)
+        })
+        .unwrap();
+    let delta = refined.prune.refine_obj_delta.expect("refine ran");
+    assert!(delta > 0.0, "refine must improve the trained model's layers");
+    for (k, &obj) in &plain.prune.layer_objs {
+        assert!(
+            refined.prune.layer_objs[k] <= obj * 1.0001,
+            "{k}: refined {} !<= plain {obj}",
+            refined.prune.layer_objs[k]
+        );
+    }
 }

@@ -7,16 +7,13 @@
 //!
 //! Skipped (with a note) when `artifacts/` has not been built.
 
-// The deprecated PrunePipeline shims stay covered here until removed.
-#![allow(deprecated)]
-
 use sparsefw::calib::Calibration;
 use sparsefw::config::{Backend, Workspace};
-use sparsefw::coordinator::PrunePipeline;
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession};
 use sparsefw::eval::{perplexity_native, perplexity_pjrt};
 use sparsefw::model::forward::forward;
 use sparsefw::pruner::fw_math;
-use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern};
+use sparsefw::pruner::{Method, SparseFwConfig, SparsityPattern};
 use sparsefw::runtime::PjrtRuntime;
 use sparsefw::tensor::Mat;
 use sparsefw::util::prng::Xoshiro256;
@@ -169,20 +166,29 @@ fn pjrt_perplexity_matches_native() {
 
 #[test]
 fn pjrt_backend_pipeline_agrees_with_native() {
-    let Some((_ws, rt, model, calib)) = setup() else { return };
+    let Some((ws, _rt, _model, _calib)) = setup() else { return };
+    let name = ws.manifest.model_names()[0].clone();
+    let mut session = PruneSession::new(ws);
     let pattern = SparsityPattern::Unstructured { sparsity: 0.5 };
-    let method = PruneMethod::SparseFw(SparseFwConfig {
-        iters: 20,
-        alpha: 0.5,
-        use_chunk: false, // per-iteration kernels: exact same path lengths
-        keep_best: false, // compare raw trajectories
+    let spec = JobSpec {
+        model: name,
+        method: Method::sparsefw(SparseFwConfig {
+            iters: 20,
+            alpha: 0.5,
+            use_chunk: false, // per-iteration kernels: exact same path lengths
+            keep_best: false, // compare raw trajectories
+            ..Default::default()
+        }),
+        allocation: Allocation::Uniform(pattern),
+        calib_samples: 8,
+        calib_seed: 3,
         ..Default::default()
-    });
-    let pipe = PrunePipeline::new(&model, &calib);
-    let native = pipe.run(&method, &pattern).unwrap();
-    let pjrt = pipe
-        .run_with_backend(Backend::Pjrt, Some(&rt), &method, &pattern)
-        .unwrap();
+    };
+    let native = session.execute(&spec).unwrap().prune;
+    let pjrt = session
+        .execute(&JobSpec { backend: Backend::Pjrt, ..spec })
+        .unwrap()
+        .prune;
     // The two backends accumulate f32 in different orders, so gradient
     // entries near the LMO selection boundary can tie-flip and the FW
     // trajectories diverge slightly.  The runs must still agree closely

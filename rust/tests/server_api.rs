@@ -15,7 +15,7 @@ use sparsefw::data::corpus;
 use sparsefw::data::TokenBin;
 use sparsefw::model::testutil::{random_model, tiny_cfg};
 use sparsefw::model::Gpt;
-use sparsefw::pruner::{FwEngine, PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::pruner::{FwEngine, Method, RefinePass, SparseFwConfig, SparsityPattern, Warmstart};
 use sparsefw::server::{Client, Server, ServerConfig, ServerHandle};
 
 fn shared_model() -> Gpt {
@@ -47,7 +47,7 @@ fn spawn_server(workers: usize) -> (ServerHandle, Client) {
 fn base_spec() -> JobSpec {
     JobSpec {
         model: "test".into(),
-        method: PruneMethod::Wanda,
+        method: Method::wanda(),
         allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
         calib_samples: 6,
         calib_seed: 2,
@@ -62,7 +62,7 @@ fn base_spec() -> JobSpec {
 /// engine (the default) would shrink the timing window it provides.
 fn slow_spec() -> JobSpec {
     JobSpec {
-        method: PruneMethod::SparseFw(SparseFwConfig {
+        method: Method::sparsefw(SparseFwConfig {
             iters: 2500,
             alpha: 0.5,
             warmstart: Warmstart::Wanda,
@@ -81,19 +81,19 @@ fn full_lifecycle_with_four_concurrent_clients() {
 
     // distinct specs: two methods × two sparsities (+ one FW config)
     let specs: Vec<JobSpec> = vec![
-        JobSpec { method: PruneMethod::Wanda, ..base_spec() },
+        JobSpec { method: Method::wanda(), ..base_spec() },
         JobSpec {
-            method: PruneMethod::Magnitude,
+            method: Method::magnitude(),
             allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
             ..base_spec()
         },
         JobSpec {
-            method: PruneMethod::Ria,
+            method: Method::ria(),
             allocation: Allocation::Uniform(SparsityPattern::NM { keep: 2, block: 4 }),
             ..base_spec()
         },
         JobSpec {
-            method: PruneMethod::SparseFw(SparseFwConfig {
+            method: Method::sparsefw(SparseFwConfig {
                 iters: 60,
                 alpha: 0.5,
                 warmstart: Warmstart::Ria,
@@ -209,7 +209,7 @@ fn metrics_report_calib_cache_hits_for_shared_calibration() {
     let a = client.submit(&base_spec(), 0).unwrap();
     let b = client
         .submit(
-            &JobSpec { method: PruneMethod::Magnitude, ..base_spec() },
+            &JobSpec { method: Method::magnitude(), ..base_spec() },
             0,
         )
         .unwrap();
@@ -279,7 +279,7 @@ fn metrics_report_job_wall_time_and_fw_throughput() {
 
     let iters = 40usize;
     let spec = JobSpec {
-        method: PruneMethod::SparseFw(SparseFwConfig {
+        method: Method::sparsefw(SparseFwConfig {
             iters,
             alpha: 0.5,
             warmstart: Warmstart::Wanda,
@@ -325,7 +325,7 @@ fn priority_jumps_the_queue() {
     let low = client.submit(&base_spec(), 0).unwrap();
     let high = client
         .submit(
-            &JobSpec { method: PruneMethod::Magnitude, ..base_spec() },
+            &JobSpec { method: Method::magnitude(), ..base_spec() },
             10,
         )
         .unwrap();
@@ -363,5 +363,70 @@ fn rejects_bad_submissions_cleanly() {
     assert!(client
         .submit(&JobSpec { calib_samples: 0, ..base_spec() }, 0)
         .is_err());
+    // unregistered method: a 400 at submit time naming the known set
+    let mut spec_json = base_spec().to_json();
+    if let sparsefw::util::json::Json::Obj(obj) = &mut spec_json {
+        obj.insert(
+            "method".to_string(),
+            sparsefw::util::json::Json::obj(vec![("kind", "prune-o-matic".into())]),
+        );
+    }
+    let err = client.submit_json(&spec_json, 0).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("prune-o-matic"), "{err}");
+    assert!(err.contains("wanda"), "the 400 must name the known set: {err}");
+    handle.shutdown();
+}
+
+#[test]
+fn methods_endpoint_lists_the_registry() {
+    let (handle, client) = spawn_server(1);
+    let v = client.methods().unwrap();
+    let methods = v.at(&["methods"]).as_arr().unwrap();
+    let names: Vec<&str> = methods
+        .iter()
+        .map(|m| m.at(&["name"]).as_str().unwrap())
+        .collect();
+    for want in ["magnitude", "ria", "sparsefw", "sparsegpt", "wanda"] {
+        assert!(names.contains(&want), "{want} missing from {names:?}");
+    }
+    for m in methods {
+        // capability flags + a parseable default config per method
+        assert!(m.at(&["caps", "reconstructs_weights"]).as_bool().is_some(), "{m:?}");
+        assert!(m.at(&["caps", "supports_pjrt"]).as_bool().is_some(), "{m:?}");
+        assert_eq!(
+            m.at(&["default_config", "kind"]).as_str(),
+            m.at(&["name"]).as_str(),
+            "{m:?}"
+        );
+    }
+    let sgpt = methods
+        .iter()
+        .find(|m| m.at(&["name"]).as_str() == Some("sparsegpt"))
+        .unwrap();
+    assert_eq!(sgpt.at(&["caps", "reconstructs_weights"]).as_bool(), Some(true));
+    handle.shutdown();
+}
+
+#[test]
+fn refined_job_reports_obj_delta_through_the_api() {
+    let (handle, client) = spawn_server(1);
+    let spec = JobSpec {
+        method: Method::wanda(),
+        refine: vec![RefinePass::swaps(), RefinePass::update()],
+        ..base_spec()
+    };
+    let id = client.submit(&spec, 0).unwrap();
+    let rec = client.wait(id, WAIT).unwrap();
+    assert_eq!(rec.at(&["state"]).as_str(), Some("done"), "{rec:?}");
+    let delta = rec.at(&["result", "refine_obj_delta"]).as_f64().unwrap();
+    assert!(delta >= 0.0, "{rec:?}");
+    // the refine passes round-trip through the job record's spec
+    let refine = rec.at(&["spec", "refine"]).as_arr().unwrap();
+    assert_eq!(refine.len(), 2, "{rec:?}");
+    // an unrefined job carries no delta
+    let id = client.submit(&base_spec(), 0).unwrap();
+    let rec = client.wait(id, WAIT).unwrap();
+    assert!(rec.at(&["result", "refine_obj_delta"]).as_f64().is_none());
     handle.shutdown();
 }

@@ -2,8 +2,9 @@
 //! (`--propagate off|block|layer`).
 //!
 //! * `--propagate off` must be **bit-identical** to the pre-refactor
-//!   pipeline (the deprecated `PrunePipeline` shims drive the same
-//!   `run_layers` dispatch the old code did) across all three sparsity
+//!   per-layer reference (each layer pruned independently against the
+//!   dense grams through the open `Method`/`LayerCtx` API — exactly
+//!   what the old `PrunePipeline` did) across all three sparsity
 //!   patterns.
 //! * Staged calibration must stream at most one block's grams at a time
 //!   (the O(block) vs O(model) memory claim).
@@ -17,18 +18,18 @@
 //!   own activations — the quantity propagation optimizes, and the
 //!   mechanism behind its perplexity gains at real scale.
 
-#![allow(deprecated)] // PrunePipeline is the pre-refactor reference
-
 use std::collections::BTreeMap;
 
 use sparsefw::calib::{CalibPolicy, Calibration};
-use sparsefw::coordinator::{Allocation, JobSpec, PruneSession, PrunePipeline};
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession};
 use sparsefw::data::TokenBin;
 use sparsefw::eval::perplexity_native;
 use sparsefw::model::forward::forward;
 use sparsefw::model::testutil::{random_model, tiny_cfg};
 use sparsefw::model::{Gpt, GptConfig};
-use sparsefw::pruner::{PruneMethod, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::pruner::{
+    LayerCtx, Method, NativeKernels, RefinePass, SparseFwConfig, SparsityPattern, Warmstart,
+};
 use sparsefw::tensor::{matmul_a_bt, Mat};
 use sparsefw::util::prng::Xoshiro256;
 
@@ -55,8 +56,8 @@ fn propagate_off_is_bit_identical_to_prerefactor_pipeline() {
     let calib = Calibration::collect(&model, &bin, 6, 2).unwrap();
 
     let methods = [
-        PruneMethod::Wanda,
-        PruneMethod::SparseFw(SparseFwConfig {
+        Method::wanda(),
+        Method::sparsefw(SparseFwConfig {
             iters: 40,
             alpha: 0.5,
             warmstart: Warmstart::Wanda,
@@ -70,7 +71,22 @@ fn propagate_off_is_bit_identical_to_prerefactor_pipeline() {
     ];
     for method in &methods {
         for pattern in &patterns {
-            let reference = PrunePipeline::new(&model, &calib).run(method, pattern).unwrap();
+            // the pre-refactor reference: every layer pruned
+            // independently against the dense grams, straight through
+            // the per-layer Method API
+            let mut ref_masks: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+            let mut ref_objs: BTreeMap<String, f64> = BTreeMap::new();
+            for l in model.cfg.layers() {
+                let ctx = LayerCtx::new(
+                    &NativeKernels,
+                    model.mat(&l.name),
+                    calib.gram(&l.name),
+                    pattern,
+                );
+                let out = method.prune_layer(&ctx).unwrap();
+                ref_masks.insert(l.name.clone(), out.mask.data);
+                ref_objs.insert(l.name.clone(), out.obj);
+            }
 
             let mut session = session_with(model.clone(), "test");
             let spec = JobSpec {
@@ -85,21 +101,57 @@ fn propagate_off_is_bit_identical_to_prerefactor_pipeline() {
             let staged_off = session.execute(&spec).unwrap();
 
             assert!(staged_off.prune.staged.is_none(), "dense policy carries no staged stats");
-            assert_eq!(reference.masks.len(), staged_off.prune.masks.len());
-            for (name, mask) in &reference.masks {
+            assert_eq!(ref_masks.len(), staged_off.prune.masks.len());
+            for (name, mask) in &ref_masks {
                 assert_eq!(
-                    mask.data, staged_off.prune.masks[name].data,
+                    mask, &staged_off.prune.masks[name].data,
                     "{name} mask must be bit-identical under {} / {}",
                     method.label(),
                     pattern.label()
                 );
             }
-            for (name, obj) in &reference.layer_objs {
+            for (name, obj) in &ref_objs {
                 let got = staged_off.prune.layer_objs[name];
                 assert_eq!(*obj, got, "{name} objective must be bit-identical");
             }
         }
     }
+}
+
+/// Acceptance: `--refine swaps` strictly lowers the realized layer
+/// objective vs. plain rounding on the staged-pipeline test model.
+#[test]
+fn refine_swaps_strictly_lower_objective_on_loud_model() {
+    let model = loud_model(1);
+    let mut session = session_with(model, "loud");
+    let spec_for = |refine: Vec<RefinePass>| JobSpec {
+        model: "loud".into(),
+        method: Method::wanda(),
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.6 }),
+        calib_samples: 16,
+        calib_seed: 2,
+        refine,
+        ..Default::default()
+    };
+    let plain = session.execute(&spec_for(Vec::new())).unwrap();
+    let refined = session.execute(&spec_for(vec![RefinePass::swaps()])).unwrap();
+    // per layer: never worse …
+    for (k, &obj) in &plain.prune.layer_objs {
+        assert!(
+            refined.prune.layer_objs[k] <= obj * (1.0 + 1e-9),
+            "{k}: refined {} !<= plain {obj}",
+            refined.prune.layer_objs[k]
+        );
+    }
+    // … and strictly better in aggregate
+    let plain_total = plain.total_err();
+    let refined_total = refined.total_err();
+    assert!(
+        refined_total < plain_total,
+        "swaps must strictly lower the realized objective: {refined_total} !< {plain_total}"
+    );
+    let delta = refined.prune.refine_obj_delta.expect("refine ran");
+    assert!(delta > 0.0, "{delta}");
 }
 
 // ---------------------------------------------------------------------------
@@ -172,7 +224,7 @@ fn propagated_calibration_quality_end_to_end() {
         // SparseGPT: reconstruction makes gram fidelity matter most —
         // propagated grams let each layer compensate the true upstream
         // error instead of a dense-model estimate of it
-        method: PruneMethod::SparseGpt { percdamp: 0.01, blocksize: 8 },
+        method: Method::sparsegpt(0.01, 8),
         allocation: Allocation::Uniform(SparsityPattern::Unstructured { sparsity: 0.6 }),
         calib_samples: 16,
         calib_seed: 2,
@@ -243,7 +295,7 @@ fn propagate_policy_survives_spec_save_load_and_reexecutes() {
     let mut session = session_with(model, "test");
     let spec = JobSpec {
         model: "test".into(),
-        method: PruneMethod::Wanda,
+        method: Method::wanda(),
         allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
         calib_samples: 6,
         calib_seed: 2,

@@ -65,6 +65,27 @@ echo "$PROP_OUT" | grep -Eq "mask_nnz=[1-9]" \
     || { echo "propagated masks are empty: $PROP_OUT"; exit 1; }
 echo "   staged --propagate block smoke OK"
 
+# fourth smoke path: the method registry listing, local and via the
+# server's GET /methods, must name every built-in
+for METHODS_FLAGS in "" "--addr $ADDR"; do
+    # shellcheck disable=SC2086
+    METHODS_OUT="$("$BIN" methods $METHODS_FLAGS 2>&1)"
+    for M in magnitude wanda ria sparsefw sparsegpt; do
+        echo "$METHODS_OUT" | grep -q "$M" \
+            || { echo "methods listing ($METHODS_FLAGS) missing $M: $METHODS_OUT"; exit 1; }
+    done
+done
+echo "   sparsefw methods smoke OK"
+
+# fifth smoke path: a refined job reports its objective claw-back
+REFINE_OUT="$("$BIN" submit --addr "$ADDR" --model demo --method wanda \
+    --pattern per-row:0.5 --samples 8 --refine swaps,update --wait 2>&1)"
+echo "$REFINE_OUT" | grep -q "state=done" \
+    || { echo "refined job did not finish: $REFINE_OUT"; cat "$SERVE_LOG"; exit 1; }
+echo "$REFINE_OUT" | grep -q "refine_obj_delta=" \
+    || { echo "refined job summary missing refine_obj_delta: $REFINE_OUT"; exit 1; }
+echo "   --refine swaps,update smoke OK"
+
 "$BIN" status --addr "$ADDR"
 "$BIN" shutdown --addr "$ADDR"
 wait "$SERVE_PID"
@@ -82,6 +103,12 @@ echo "   wrote $REPO/BENCH_fw.json"
 echo "== staged vs one-shot calibration bench (BENCH_calib.json) =="
 SPARSEFW_BENCH_JSON="$REPO/BENCH_calib.json" cargo bench --bench calib_staged
 echo "   wrote $REPO/BENCH_calib.json"
+
+# method-registry-driven end-to-end timings: iterates the registry, so
+# newly registered methods are benched automatically (prints a note and
+# exits cleanly without an artifacts workspace)
+echo "== table1 methods bench over the registry (BENCH_methods.json) =="
+SPARSEFW_BENCH_JSON="$REPO/BENCH_methods.json" cargo bench --bench table1_methods
 
 # `make artifacts` (python/compile/aot.py) writes to <repo>/artifacts;
 # resolve it absolutely so the cwd (rust/) doesn't matter.
