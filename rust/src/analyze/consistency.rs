@@ -1,0 +1,220 @@
+//! Cross-surface consistency lints.
+//!
+//! `codec-fields`: a `to_json`/`from_json` pair (same `impl` block, or
+//! same-file `<prefix>_to_json`/`<prefix>_from_json` free functions)
+//! must cover the same key set — a field written but never read back
+//! (or vice versa) silently corrupts round-trips.  Keys are extracted
+//! token-wise: `("key", value)` tuples on the writer side, `get("key")`
+//! / `at(&["key", ..])` on the reader side; only snake_case literals
+//! count (format strings and labels don't look like keys).
+//!
+//! `registry-coverage`: every method in
+//! [`crate::pruner::MethodRegistry::global`] must appear in
+//! `tests/method_registry.rs` (as a quoted literal), in the
+//! `table1_methods` bench (quoted literal, or the bench iterates
+//! `MethodRegistry::global()` and covers everything by construction),
+//! and in the USAGE text in `src/main.rs`.  These findings point at
+//! the surface that's missing the method and cannot be `allow`ed —
+//! coverage gaps get fixed, not excused.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::lexer::{fn_spans, Tok, Token};
+use super::{Finding, SourceFile};
+
+/// A key literal with the line it appears on.
+type Keys = Vec<(String, u32)>;
+
+pub fn check_codecs(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.lexed.tokens;
+    // pair id -> (to_json keys, from_json keys)
+    let mut pairs: BTreeMap<String, (Option<Keys>, Option<Keys>)> = BTreeMap::new();
+    for span in fn_spans(toks) {
+        if sf.in_test(span.body_open) {
+            continue;
+        }
+        let (is_to, pair_id) = match codec_role(&span.name) {
+            Some(x) => x,
+            None => continue,
+        };
+        // scope free-fn prefixes by file, impl methods by type
+        let scope = span
+            .impl_type
+            .clone()
+            .unwrap_or_else(|| format!("{}::", sf.rel));
+        let id = format!("{scope}{pair_id}");
+        let entry = pairs.entry(id).or_default();
+        let body = &toks[span.body_open..=span.body_close.min(toks.len() - 1)];
+        if is_to {
+            entry.0 = Some(writer_keys(body));
+        } else {
+            entry.1 = Some(reader_keys(body));
+        }
+    }
+    for (_, (w, r)) in pairs {
+        let (Some(w), Some(r)) = (w, r) else { continue };
+        // compare only when both sides actually extract keys (a codec
+        // that delegates wholesale has nothing token-visible to check)
+        if w.is_empty() || r.is_empty() {
+            continue;
+        }
+        for (k, line) in &w {
+            if !r.iter().any(|(rk, _)| rk == k) {
+                out.push(Finding {
+                    file: sf.rel.clone(),
+                    line: *line,
+                    lint: "codec-fields".into(),
+                    message: format!(
+                        "to_json writes key `{k}` but the paired from_json never \
+                         reads it"
+                    ),
+                });
+            }
+        }
+        for (k, line) in &r {
+            if !w.iter().any(|(wk, _)| wk == k) {
+                out.push(Finding {
+                    file: sf.rel.clone(),
+                    line: *line,
+                    lint: "codec-fields".into(),
+                    message: format!(
+                        "from_json reads key `{k}` but the paired to_json never \
+                         writes it"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Classify a fn name as a codec half: returns (is_to_json, pair id).
+fn codec_role(name: &str) -> Option<(bool, String)> {
+    if name == "to_json" {
+        return Some((true, "json".into()));
+    }
+    if name == "from_json" {
+        return Some((false, "json".into()));
+    }
+    if let Some(p) = name.strip_suffix("_to_json") {
+        return Some((true, format!("{p}_json")));
+    }
+    if let Some(p) = name.strip_suffix("_from_json") {
+        return Some((false, format!("{p}_json")));
+    }
+    None
+}
+
+fn is_keyish(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// `("key", value)` tuples: a snake_case string literal preceded by
+/// `(` and followed by `,`.
+fn writer_keys(body: &[Token]) -> Keys {
+    let mut out = Keys::new();
+    for (i, t) in body.iter().enumerate() {
+        let Some(s) = t.tok.str_lit() else { continue };
+        let tupled = i > 0
+            && body[i - 1].tok.is_p('(')
+            && body.get(i + 1).is_some_and(|t| t.tok.is_p(','));
+        if tupled && is_keyish(s) && !out.iter().any(|(k, _)| k == s) {
+            out.push((s.to_string(), t.line));
+        }
+    }
+    out
+}
+
+/// Literals inside `get("…")` and `at(&["…", …])` calls.
+fn reader_keys(body: &[Token]) -> Keys {
+    let mut out = Keys::new();
+    let mut push = |s: &str, line: u32| {
+        if is_keyish(s) && !out.iter().any(|(k, _)| k == s) {
+            out.push((s.to_string(), line));
+        }
+    };
+    let mut i = 0;
+    while i < body.len() {
+        match body[i].tok.ident() {
+            Some("get") if body.get(i + 1).is_some_and(|t| t.tok.is_p('(')) => {
+                if let Some(t) = body.get(i + 2) {
+                    if let Some(s) = t.tok.str_lit() {
+                        push(s, t.line);
+                    }
+                }
+                i += 3;
+            }
+            Some("at") if body.get(i + 1).is_some_and(|t| t.tok.is_p('(')) => {
+                // collect every literal up to the matching `)`
+                let mut depth = 0usize;
+                let mut j = i + 1;
+                while j < body.len() {
+                    match &body[j].tok {
+                        Tok::P('(') => depth += 1,
+                        Tok::P(')') => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        Tok::Str(s) => push(s, body[j].line),
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                i = j;
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+/// Surfaces every registered method must appear on.
+pub fn check_registry(src_root: &Path, out: &mut Vec<Finding>) {
+    let names = crate::pruner::MethodRegistry::global().names();
+    let root = src_root.parent().unwrap_or(src_root);
+    let surfaces: &[(&str, &Path, bool)] = &[
+        // (label, path, iteration-marker satisfies)
+        ("tests/method_registry.rs", Path::new("tests/method_registry.rs"), false),
+        ("benches/table1_methods.rs", Path::new("benches/table1_methods.rs"), true),
+        ("src/main.rs (USAGE)", Path::new("src/main.rs"), false),
+    ];
+    for (label, rel, marker_ok) in surfaces {
+        let path = root.join(rel);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            out.push(Finding {
+                file: label.to_string(),
+                line: 0,
+                lint: "registry-coverage".into(),
+                message: format!("surface file missing or unreadable: {}", path.display()),
+            });
+            continue;
+        };
+        if *marker_ok && text.contains("MethodRegistry::global()") {
+            // the bench iterates the registry: every method is covered
+            // by construction
+            continue;
+        }
+        for name in &names {
+            let quoted = format!("\"{name}\"");
+            let covered = if label.ends_with("(USAGE)") {
+                text.contains(name.as_str())
+            } else {
+                text.contains(&quoted)
+            };
+            if !covered {
+                out.push(Finding {
+                    file: label.to_string(),
+                    line: 0,
+                    lint: "registry-coverage".into(),
+                    message: format!(
+                        "registered method `{name}` does not appear in {label}"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,571 @@
+//! Minimal Rust tokenizer for the static-analysis pass.
+//!
+//! Same discipline as [`crate::util::json`]: the offline registry has
+//! no `syn`/`proc-macro2`, so this module lexes just enough of the Rust
+//! grammar for token-level lints — identifiers, punctuation, string /
+//! char / numeric literals, lifetimes — with line numbers, and collects
+//! comments separately (the `// analyze: allow(..)` escape hatch lives
+//! in comment text).  It is a *lexer*, not a parser: lints that need
+//! structure (function bodies, impl blocks, `#[cfg(test)]` regions)
+//! recover it from brace matching over the token stream.
+//!
+//! Deliberately not handled: macro expansion (tokens inside macro
+//! invocations are lexed like any other code), shebangs, and the
+//! `c"…"` literal family newer than this crate's edition.
+
+/// One lexed token (comments and whitespace are stripped; see
+/// [`Lexed::comments`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    /// String literal (cooked content, escapes left as written).
+    Str(String),
+    /// Char literal (content irrelevant to every lint).
+    Char,
+    /// Numeric literal (value irrelevant to every lint).
+    Num,
+    /// Lifetime (`'a`), distinguished from char literals.
+    Life,
+    /// One punctuation byte (`.`, `(`, `{`, `!`, …).  Multi-byte
+    /// operators arrive as consecutive tokens (`:` `:` for `::`).
+    P(char),
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, Tok::Ident(i) if i == s)
+    }
+
+    pub fn is_p(&self, c: char) -> bool {
+        matches!(self, Tok::P(p) if *p == c)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn str_lit(&self) -> Option<&str> {
+        match self {
+            Tok::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    /// 1-based source line.
+    pub line: u32,
+}
+
+/// Lexer output: the token stream plus every comment with its line
+/// (attribute annotations like `// analyze: allow(..)` are comments).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<(u32, String)>,
+}
+
+/// Tokenize `src`.  Never fails: unrecognized bytes are skipped (the
+/// analyzer lints real source that already compiled, so error recovery
+/// beats error reporting here).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    macro_rules! push {
+        ($tok:expr) => {
+            out.tokens.push(Token { tok: $tok, line })
+        };
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            // line comment (also doc comments ///, //!)
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                let text = String::from_utf8_lossy(&b[start..i]).into_owned();
+                out.comments.push((line, text));
+            }
+            // block comment, nested per the Rust grammar
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let start = i;
+                let start_line = line;
+                let mut depth = 1;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                let text = String::from_utf8_lossy(&b[start..i.min(b.len())]).into_owned();
+                out.comments.push((start_line, text));
+            }
+            // raw strings r"…", r#"…"#, and byte-raw br#"…"#
+            b'r' | b'b' if raw_str_start(b, i).is_some() => {
+                let (content_at, hashes) = match raw_str_start(b, i) {
+                    Some(x) => x,
+                    None => unreachable!(),
+                };
+                i = content_at;
+                let start = i;
+                let close: Vec<u8> = std::iter::once(b'"')
+                    .chain(std::iter::repeat(b'#').take(hashes))
+                    .collect();
+                while i < b.len() && !b[i..].starts_with(&close) {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                let text = String::from_utf8_lossy(&b[start..i.min(b.len())]).into_owned();
+                push!(Tok::Str(text));
+                i = (i + close.len()).min(b.len());
+            }
+            // byte string b"…"
+            b'b' if b.get(i + 1) == Some(&b'"') => {
+                i += 1; // fall into the cooked-string scanner below
+                let (s, ni, nl) = cooked_string(b, i, line);
+                push!(Tok::Str(s));
+                i = ni;
+                line = nl;
+            }
+            b'"' => {
+                let (s, ni, nl) = cooked_string(b, i, line);
+                push!(Tok::Str(s));
+                i = ni;
+                line = nl;
+            }
+            // lifetime vs char literal: 'a followed by non-' is a
+            // lifetime; anything else quote-delimited is a char
+            b'\'' => {
+                let is_life = matches!(b.get(i + 1), Some(c) if is_ident_byte(*c))
+                    && b.get(i + 2) != Some(&b'\'');
+                if is_life {
+                    i += 1;
+                    while i < b.len() && is_ident_byte(b[i]) {
+                        i += 1;
+                    }
+                    push!(Tok::Life);
+                } else {
+                    // char literal: skip escapes, find the closing quote
+                    i += 1;
+                    if b.get(i) == Some(&b'\\') {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                    while i < b.len() && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                    push!(Tok::Char);
+                }
+            }
+            c if c.is_ascii_digit() => {
+                while i < b.len() && (is_ident_byte(b[i]) || b[i] == b'.') {
+                    // `0..n` range: the dots are punctuation, not a float
+                    if b[i] == b'.' && b.get(i + 1) == Some(&b'.') {
+                        break;
+                    }
+                    i += 1;
+                }
+                push!(Tok::Num);
+            }
+            c if is_ident_start(c) => {
+                let start = i;
+                while i < b.len() && is_ident_byte(b[i]) {
+                    i += 1;
+                }
+                let s = String::from_utf8_lossy(&b[start..i]).into_owned();
+                push!(Tok::Ident(s));
+            }
+            c if c.is_ascii() => {
+                push!(Tok::P(c as char));
+                i += 1;
+            }
+            // multi-byte UTF-8 outside strings/comments (e.g. in an
+            // ident we don't support): skip the sequence
+            _ => {
+                i += 1;
+                while i < b.len() && (b[i] & 0xC0) == 0x80 {
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphabetic()
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// If `b[i..]` starts a raw (or byte-raw) string, return
+/// `(content_start, hash_count)`.
+fn raw_str_start(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Scan a cooked string starting at the opening quote; returns
+/// `(content, next_index, next_line)`.
+fn cooked_string(b: &[u8], open: usize, mut line: u32) -> (String, usize, u32) {
+    let mut i = open + 1;
+    let start = i;
+    while i < b.len() {
+        match b[i] {
+            b'"' => break,
+            b'\\' => i = (i + 2).min(b.len()),
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    let s = String::from_utf8_lossy(&b[start..i.min(b.len())]).into_owned();
+    ((s), (i + 1).min(b.len()), line)
+}
+
+// ---------------------------------------------------------------------------
+// Structure recovery over the token stream
+// ---------------------------------------------------------------------------
+
+/// Index of the `}` matching the `{` at `open` (or the last token if
+/// the stream is truncated).
+pub fn matching_brace(tokens: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in tokens.iter().enumerate().skip(open) {
+        match t.tok {
+            Tok::P('{') => depth += 1,
+            Tok::P('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    tokens.len().saturating_sub(1)
+}
+
+/// Token-index ranges (inclusive) of test-only code: `#[cfg(test)]`
+/// mod bodies and `#[test]` functions.  Lints skip findings inside.
+pub fn test_ranges(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].tok.is_p('#') && tokens.get(i + 1).is_some_and(|t| t.tok.is_p('[')) {
+            // collect the attribute tokens up to the matching ']'
+            let mut j = i + 2;
+            let mut depth = 1;
+            let mut attr = Vec::new();
+            while j < tokens.len() && depth > 0 {
+                match &tokens[j].tok {
+                    Tok::P('[') => depth += 1,
+                    Tok::P(']') => depth -= 1,
+                    t => attr.push(t.clone()),
+                }
+                j += 1;
+            }
+            let is_cfg_test = attr.first().is_some_and(|t| t.is_ident("cfg"))
+                && attr.iter().any(|t| t.is_ident("test"));
+            let is_test_attr = attr.len() == 1 && attr[0].is_ident("test");
+            if is_cfg_test || is_test_attr {
+                // find the next `{` (the mod/fn body) and span it
+                let mut k = j;
+                while k < tokens.len() && !tokens[k].tok.is_p('{') {
+                    // a cfg(test) on a non-block item (e.g. `use`) ends
+                    // at `;` — nothing to span
+                    if tokens[k].tok.is_p(';') {
+                        break;
+                    }
+                    k += 1;
+                }
+                if k < tokens.len() && tokens[k].tok.is_p('{') {
+                    let end = matching_brace(tokens, k);
+                    out.push((i, end));
+                    i = end + 1;
+                    continue;
+                }
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// One `fn` body found in the stream, with its enclosing impl type (the
+/// last path segment of `impl … [for] Type`), if any.
+#[derive(Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub impl_type: Option<String>,
+    /// Token index of the body's `{`.
+    pub body_open: usize,
+    /// Token index of the body's `}`.
+    pub body_close: usize,
+}
+
+/// Locate every function body and its enclosing `impl` type.
+pub fn fn_spans(tokens: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    // (impl_type, close_index) stack entries
+    let mut impls: Vec<(String, usize)> = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        impls.retain(|&(_, close)| i <= close);
+        match &tokens[i].tok {
+            Tok::Ident(kw) if kw == "impl" => {
+                if let Some((ty, open)) = impl_header(tokens, i) {
+                    let close = matching_brace(tokens, open);
+                    impls.push((ty, close));
+                    i = open + 1;
+                    continue;
+                }
+            }
+            Tok::Ident(kw) if kw == "fn" => {
+                let name = tokens
+                    .get(i + 1)
+                    .and_then(|t| t.tok.ident().map(String::from))
+                    .unwrap_or_default();
+                // body starts at the first `{` before any `;` (a trait
+                // method declaration has no body)
+                let mut j = i + 2;
+                while j < tokens.len()
+                    && !tokens[j].tok.is_p('{')
+                    && !tokens[j].tok.is_p(';')
+                {
+                    j += 1;
+                }
+                if j < tokens.len() && tokens[j].tok.is_p('{') {
+                    let close = matching_brace(tokens, j);
+                    out.push(FnSpan {
+                        name,
+                        impl_type: impls.last().map(|(t, _)| t.clone()),
+                        body_open: j,
+                        body_close: close,
+                    });
+                    // walk *into* the body: nested fns are rare and
+                    // their sites then attribute to the outer fn, which
+                    // is fine for diagnostics
+                    i = j + 1;
+                    continue;
+                }
+                i = j + 1;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse an `impl` header starting at token `at`; returns the impl'd
+/// type's last path segment and the index of the body's `{`.
+fn impl_header(tokens: &[Token], at: usize) -> Option<(String, usize)> {
+    let mut i = at + 1;
+    // skip generic params `<…>`
+    i = skip_generics(tokens, i);
+    let first = read_path_segment(tokens, &mut i)?;
+    // `impl Trait for Type` — the type is what we scope by
+    let mut ty = first;
+    loop {
+        match tokens.get(i).map(|t| &t.tok) {
+            Some(Tok::Ident(kw)) if kw == "for" => {
+                i += 1;
+                i = skip_generics(tokens, i);
+                ty = read_path_segment(tokens, &mut i)?;
+            }
+            Some(Tok::P('{')) => return Some((ty, i)),
+            Some(Tok::P(';')) | None => return None,
+            _ => i += 1,
+        }
+    }
+}
+
+/// Read `a::b::C<…>` at `*i`, returning the last segment (`C`).
+fn read_path_segment(tokens: &[Token], i: &mut usize) -> Option<String> {
+    let mut last = None;
+    loop {
+        match tokens.get(*i).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => {
+                last = Some(s.clone());
+                *i += 1;
+            }
+            Some(Tok::P(':')) => *i += 1,
+            Some(Tok::P('<')) => {
+                *i = skip_generics(tokens, *i);
+                break;
+            }
+            Some(Tok::P('&')) | Some(Tok::Life) => *i += 1,
+            _ => break,
+        }
+    }
+    last
+}
+
+/// If `tokens[i]` is `<`, skip the balanced `<…>` group.
+fn skip_generics(tokens: &[Token], i: usize) -> usize {
+    if !tokens.get(i).is_some_and(|t| t.tok.is_p('<')) {
+        return i;
+    }
+    let mut depth = 0i32;
+    let mut j = i;
+    while j < tokens.len() {
+        match tokens[j].tok {
+            Tok::P('<') => depth += 1,
+            Tok::P('>') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.tok.ident().map(String::from))
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let l = lex("let x = a.lock();\nlet y = 2; // hi\n/* multi\nline */ z");
+        assert_eq!(
+            idents("let x = a.lock();"),
+            vec!["let", "x", "a", "lock"]
+        );
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0], (2, "// hi".to_string()));
+        assert_eq!(l.comments[1].0, 3);
+        // `z` sits on line 4 (the block comment spans 3–4)
+        let z = l.tokens.iter().find(|t| t.tok.is_ident("z")).unwrap();
+        assert_eq!(z.line, 4);
+    }
+
+    #[test]
+    fn strings_chars_lifetimes() {
+        let l = lex(r##"f("a \" b", 'x', '\n', r#"raw " here"# , b"bytes"); <'a, T>"##);
+        let strs: Vec<&str> = l.tokens.iter().filter_map(|t| t.tok.str_lit()).collect();
+        assert_eq!(strs, vec![r#"a \" b"#, r#"raw " here"#, "bytes"]);
+        assert_eq!(
+            l.tokens.iter().filter(|t| t.tok == Tok::Char).count(),
+            2
+        );
+        assert_eq!(l.tokens.iter().filter(|t| t.tok == Tok::Life).count(), 1);
+    }
+
+    #[test]
+    fn range_is_not_a_float() {
+        let l = lex("for i in 0..n {}");
+        assert!(l.tokens.iter().any(|t| t.tok == Tok::Num));
+        assert_eq!(
+            l.tokens.iter().filter(|t| t.tok.is_p('.')).count(),
+            2,
+            "range dots survive as punctuation"
+        );
+    }
+
+    #[test]
+    fn test_ranges_cover_cfg_test_mod_and_test_fn() {
+        let src = "fn live() { a.unwrap(); }\n\
+                   #[cfg(test)]\nmod tests { fn t() { b.unwrap(); } }\n\
+                   #[test]\nfn unit() { c.unwrap(); }";
+        let l = lex(src);
+        let ranges = test_ranges(&l.tokens);
+        assert_eq!(ranges.len(), 2);
+        let in_test = |name: &str| {
+            let idx = l
+                .tokens
+                .iter()
+                .position(|t| t.tok.is_ident(name))
+                .unwrap();
+            ranges.iter().any(|&(s, e)| idx >= s && idx <= e)
+        };
+        assert!(!in_test("a"));
+        assert!(in_test("b"));
+        assert!(in_test("c"));
+    }
+
+    #[test]
+    fn fn_spans_see_impl_types() {
+        let src = "impl Foo { fn a(&self) {} }\n\
+                   impl<T: Clone> Bar<T> for Baz<'_, T> { fn b() { { } } }\n\
+                   fn free() {}";
+        let l = lex(src);
+        let spans = fn_spans(&l.tokens);
+        let by_name: Vec<(String, Option<String>)> = spans
+            .iter()
+            .map(|s| (s.name.clone(), s.impl_type.clone()))
+            .collect();
+        assert_eq!(
+            by_name,
+            vec![
+                ("a".into(), Some("Foo".into())),
+                ("b".into(), Some("Baz".into())),
+                ("free".into(), None),
+            ]
+        );
+    }
+}

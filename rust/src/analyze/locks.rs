@@ -1,0 +1,570 @@
+//! Concurrency lints: the lock-acquisition graph and
+//! guard-held-across-blocking detection.
+//!
+//! Lock identity is the final field/variable identifier of the
+//! receiver chain, prefixed with the `impl` type for direct `self.x`
+//! accesses (`JobQueue.inner`, `rx`, `metrics`).  No type inference is
+//! attempted: two unrelated locks that share a field name merge, which
+//! errs on the side of reporting — exactly what the
+//! `// analyze: allow(..)` escape hatch is for.
+//!
+//! Tracked acquisitions: `.lock()`, no-arg `.read()`/`.write()`
+//! (RwLock), and the crate's poison-recovering
+//! [`crate::util::sync::lock_recover`].  Guard lifetimes follow the
+//! two shapes that actually occur in straight-line Rust:
+//! let-bound guards (die at `drop(g)`, scope exit, or a Condvar wait
+//! that consumes them) and statement temporaries (die at the `;`
+//! closing their statement).
+
+use super::lexer::{fn_spans, Tok, Token};
+use super::{Finding, SourceFile};
+
+/// Methods that block the calling thread.  `read`/`write` only count
+/// when called with arguments (no-arg forms are RwLock acquisitions).
+const BLOCKING: &[&str] = &[
+    "read",
+    "read_exact",
+    "read_to_end",
+    "read_to_string",
+    "write",
+    "write_all",
+    "write_fmt",
+    "flush",
+    "accept",
+    "connect",
+    "recv",
+    "recv_timeout",
+    "sleep",
+    "join",
+];
+
+/// Identifiers treated as progress callbacks when invoked.
+const CALLBACKS: &[&str] = &["progress", "on_progress", "callback", "cb"];
+
+#[derive(Debug, Clone)]
+struct Guard {
+    lock: String,
+    /// Binding name for let-bound guards; `None` for temporaries.
+    var: Option<String>,
+    /// Brace depth at acquisition.
+    depth: usize,
+    line: u32,
+}
+
+#[derive(Debug)]
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: u32,
+}
+
+/// Run the concurrency lints over the whole tree (the lock graph is
+/// cross-file).
+pub fn check(sources: &[SourceFile], out: &mut Vec<Finding>) {
+    let mut edges: Vec<Edge> = Vec::new();
+    for sf in sources {
+        scan_file(sf, &mut edges, out);
+    }
+    report_cycles(&edges, out);
+}
+
+fn scan_file(sf: &SourceFile, edges: &mut Vec<Edge>, out: &mut Vec<Finding>) {
+    let toks = &sf.lexed.tokens;
+    for span in fn_spans(toks) {
+        if sf.in_test(span.body_open) {
+            continue;
+        }
+        scan_body(sf, toks, &span, edges, out);
+    }
+}
+
+fn scan_body(
+    sf: &SourceFile,
+    toks: &[Token],
+    span: &super::lexer::FnSpan,
+    edges: &mut Vec<Edge>,
+    out: &mut Vec<Finding>,
+) {
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0usize;
+    // active `let` binding: (first bound ident, token index after `=`)
+    let mut let_bind: Option<(String, usize)> = None;
+    let mut i = span.body_open;
+    while i <= span.body_close && i < toks.len() {
+        let t = &toks[i];
+        match &t.tok {
+            Tok::P('{') => depth += 1,
+            Tok::P('}') => {
+                depth = depth.saturating_sub(1);
+                guards.retain(|g| g.depth <= depth);
+            }
+            Tok::P(';') => {
+                guards.retain(|g| g.var.is_some() || g.depth < depth);
+                let_bind = None;
+            }
+            Tok::Ident(kw) if kw == "let" => {
+                // capture the first bound ident (handles `mut` and the
+                // first element of tuple patterns) and where `=` is
+                let mut j = i + 1;
+                let mut var = None;
+                while j < toks.len() && !toks[j].tok.is_p('=') && !toks[j].tok.is_p(';') {
+                    if var.is_none() {
+                        if let Tok::Ident(name) = &toks[j].tok {
+                            if name != "mut" {
+                                var = Some(name.clone());
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+                if let (Some(v), true) = (var, toks.get(j).is_some_and(|t| t.tok.is_p('='))) {
+                    let_bind = Some((v, j + 1));
+                }
+            }
+            // drop(g) releases a let-bound guard early
+            Tok::Ident(kw) if kw == "drop" && toks.get(i + 1).is_some_and(|t| t.tok.is_p('(')) => {
+                if let Some(Tok::Ident(arg)) = toks.get(i + 2).map(|t| &t.tok) {
+                    let arg = arg.clone();
+                    guards.retain(|g| g.var.as_deref() != Some(arg.as_str()));
+                }
+            }
+            // Condvar wait: `.wait(g)` / `.wait_timeout(g, ..)` or the
+            // poison-recovering `wait_recover(&cv, g)` /
+            // `wait_timeout_recover(&cv, g, ..)` free functions.  The
+            // guard passed survives (it is returned re-locked); any
+            // *other* held lock is a deadlock-shaped finding.
+            Tok::Ident(kw)
+                if (kw == "wait"
+                    || kw == "wait_timeout"
+                    || kw == "wait_recover"
+                    || kw == "wait_timeout_recover")
+                    && toks.get(i + 1).is_some_and(|t| t.tok.is_p('(')) =>
+            {
+                let arg_idents = call_arg_idents(toks, i + 1);
+                let consumed: Vec<String> = guards
+                    .iter()
+                    .filter(|g| {
+                        g.var
+                            .as_ref()
+                            .is_some_and(|v| arg_idents.iter().any(|a| a == v))
+                    })
+                    .map(|g| g.lock.clone())
+                    .collect();
+                if !consumed.is_empty() {
+                    for g in guards.iter().filter(|g| !consumed.contains(&g.lock)) {
+                        out.push(Finding {
+                            file: sf.rel.clone(),
+                            line: t.line,
+                            lint: "lock-across-blocking".into(),
+                            message: format!(
+                                "Condvar wait consumes lock `{}` while also holding `{}` \
+                                 (acquired line {})",
+                                consumed.join(", "),
+                                g.lock,
+                                g.line
+                            ),
+                        });
+                    }
+                }
+            }
+            // lock_recover(&self.x): acquisition via the helper
+            Tok::Ident(kw)
+                if kw == "lock_recover" && toks.get(i + 1).is_some_and(|t| t.tok.is_p('(')) =>
+            {
+                let name = arg_chain_name(sf, span, toks, i + 1);
+                let after = matching_paren(toks, i + 1) + 1;
+                acquire(
+                    sf, span, toks, &mut guards, edges, name, i, after, t.line, depth,
+                    &let_bind,
+                );
+            }
+            // `.lock()` and no-arg `.read()`/`.write()` acquisitions
+            Tok::P('.') => {
+                if let Some(Tok::Ident(m)) = toks.get(i + 1).map(|t| &t.tok) {
+                    let called = toks.get(i + 2).is_some_and(|t| t.tok.is_p('('));
+                    let no_args =
+                        called && toks.get(i + 3).is_some_and(|t| t.tok.is_p(')'));
+                    if (m == "lock" || m == "read" || m == "write") && no_args {
+                        let name = receiver_chain_name(sf, span, toks, i);
+                        acquire(
+                            sf, span, toks, &mut guards, edges, name, i, i + 4, t.line,
+                            depth, &let_bind,
+                        );
+                        i += 2; // skip past `name (` so `(` isn't rescanned
+                        continue;
+                    }
+                    // `read`/`write` only block when called with a
+                    // buffer; everything else in BLOCKING blocks at any
+                    // arity (`.recv()`, `.flush()`, `.join()`, …)
+                    let blocks = called
+                        && BLOCKING.contains(&m.as_str())
+                        && !((m == "read" || m == "write") && no_args);
+                    if blocks {
+                        blocking_hit(sf, out, &guards, toks[i + 1].line, &format!(".{m}()"));
+                    }
+                    if called && CALLBACKS.contains(&m.as_str()) {
+                        blocking_hit(
+                            sf,
+                            out,
+                            &guards,
+                            toks[i + 1].line,
+                            &format!("progress callback `{m}`"),
+                        );
+                    }
+                }
+            }
+            // path calls (`thread::sleep(..)`) and `write!`/`writeln!`
+            Tok::Ident(name) => {
+                let called = toks.get(i + 1).is_some_and(|t| t.tok.is_p('('));
+                let is_macro = toks.get(i + 1).is_some_and(|t| t.tok.is_p('!'));
+                let path_call = i > 0 && toks[i - 1].tok.is_p(':');
+                if called && path_call && BLOCKING.contains(&name.as_str()) {
+                    blocking_hit(sf, out, &guards, t.line, &format!("{name}()"));
+                } else if is_macro && (name == "write" || name == "writeln") {
+                    blocking_hit(sf, out, &guards, t.line, &format!("{name}! "));
+                } else if called && !path_call && CALLBACKS.contains(&name.as_str()) {
+                    blocking_hit(
+                        sf,
+                        out,
+                        &guards,
+                        t.line,
+                        &format!("progress callback `{name}`"),
+                    );
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+/// Record an acquisition: edges from every held lock, then push the
+/// new guard.  The guard is let-bound only when the `let` initializer
+/// *is* the lock expression — the receiver chain starts right after
+/// `let … =` and nothing but `.unwrap()`/`.expect(..)`/
+/// `.unwrap_or_else(..)` stands between the call and the closing `;`.
+/// `let n = m.lock().unwrap().len();` therefore stays a statement
+/// temporary (the guard dies at the `;`), matching real Rust drops.
+#[allow(clippy::too_many_arguments)]
+fn acquire(
+    sf: &SourceFile,
+    span: &super::lexer::FnSpan,
+    toks: &[Token],
+    guards: &mut Vec<Guard>,
+    edges: &mut Vec<Edge>,
+    name: String,
+    at: usize,
+    after: usize,
+    line: u32,
+    depth: usize,
+    let_bind: &Option<(String, usize)>,
+) {
+    let _ = span;
+    for g in guards.iter() {
+        edges.push(Edge {
+            from: g.lock.clone(),
+            to: name.clone(),
+            file: sf.rel.clone(),
+            line,
+        });
+    }
+    let chain_start = chain_start_index(toks, at);
+    let var = match let_bind {
+        Some((v, eq_next)) if chain_start == *eq_next && tail_is_binding(toks, after) => {
+            Some(v.clone())
+        }
+        _ => None,
+    };
+    guards.push(Guard { lock: name, var, depth, line });
+}
+
+/// True when the tokens from `j` to the statement's `;` only re-wrap
+/// the guard (`.unwrap()`, `.expect(..)`, `.unwrap_or_else(..)`), so
+/// the `let` binding really holds the guard itself.
+fn tail_is_binding(toks: &[Token], mut j: usize) -> bool {
+    const WRAPPERS: &[&str] = &["unwrap", "expect", "unwrap_or_else"];
+    loop {
+        match toks.get(j).map(|t| &t.tok) {
+            Some(Tok::P(';')) => return true,
+            Some(Tok::P('.')) => {
+                let wraps = toks
+                    .get(j + 1)
+                    .and_then(|t| t.tok.ident())
+                    .is_some_and(|m| WRAPPERS.contains(&m));
+                if !(wraps && toks.get(j + 2).is_some_and(|t| t.tok.is_p('('))) {
+                    return false;
+                }
+                j = matching_paren(toks, j + 2) + 1;
+            }
+            _ => return false,
+        }
+    }
+}
+
+/// Index of the `)` matching the `(` at `open` (or the last token if
+/// unbalanced — malformed input must not panic the analyzer).
+fn matching_paren(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        if t.tok.is_p('(') {
+            depth += 1;
+        } else if t.tok.is_p(')') {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn blocking_hit(
+    sf: &SourceFile,
+    out: &mut Vec<Finding>,
+    guards: &[Guard],
+    line: u32,
+    what: &str,
+) {
+    for g in guards {
+        out.push(Finding {
+            file: sf.rel.clone(),
+            line,
+            lint: "lock-across-blocking".into(),
+            message: format!(
+                "{} while holding lock `{}` (acquired line {})",
+                what.trim_end(),
+                g.lock,
+                g.line
+            ),
+        });
+    }
+}
+
+/// Walk the receiver chain backwards from the `.` of `.lock()` and
+/// name the lock.  `self.x` → `Type.x` (when the impl type is known);
+/// otherwise the last identifier alone.
+fn receiver_chain_name(
+    sf: &SourceFile,
+    span: &super::lexer::FnSpan,
+    toks: &[Token],
+    dot: usize,
+) -> String {
+    let start = chain_start_index(toks, dot);
+    let idents: Vec<&str> = toks[start..dot]
+        .iter()
+        .filter_map(|t| t.tok.ident())
+        .collect();
+    name_from_chain(sf, span, &idents)
+}
+
+/// Name the lock from the argument of `lock_recover(&self.x)`.
+fn arg_chain_name(
+    sf: &SourceFile,
+    span: &super::lexer::FnSpan,
+    toks: &[Token],
+    open: usize,
+) -> String {
+    let mut idents = Vec::new();
+    let mut depth = 0usize;
+    for t in toks.iter().skip(open) {
+        match &t.tok {
+            Tok::P('(') => depth += 1,
+            Tok::P(')') => {
+                if depth <= 1 {
+                    break;
+                }
+                depth -= 1;
+            }
+            Tok::P(',') if depth == 1 => break,
+            Tok::Ident(s) => idents.push(s.as_str()),
+            _ => {}
+        }
+    }
+    name_from_chain(sf, span, &idents)
+}
+
+fn name_from_chain(
+    _sf: &SourceFile,
+    span: &super::lexer::FnSpan,
+    idents: &[&str],
+) -> String {
+    let last = idents.last().copied().unwrap_or("<unknown>");
+    if idents.first() == Some(&"self") && idents.len() == 2 {
+        if let Some(ty) = &span.impl_type {
+            return format!("{ty}.{last}");
+        }
+    }
+    last.to_string()
+}
+
+/// Top-level identifiers appearing in a call's argument list (for
+/// matching Condvar-wait arguments against held guard variables).
+fn call_arg_idents(toks: &[Token], open: usize) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    for t in toks.iter().skip(open) {
+        match &t.tok {
+            Tok::P('(') => depth += 1,
+            Tok::P(')') => {
+                if depth <= 1 {
+                    break;
+                }
+                depth -= 1;
+            }
+            Tok::Ident(s) if depth == 1 => out.push(s.clone()),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Token index where the receiver chain feeding `toks[dot]` begins
+/// (walks back over `ident`, `.`, `::`, `self`, balanced `[..]` and
+/// `(..)` groups, and `&`).
+fn chain_start_index(toks: &[Token], dot: usize) -> usize {
+    let mut i = dot;
+    while i > 0 {
+        let prev = &toks[i - 1].tok;
+        match prev {
+            Tok::Ident(_) | Tok::P('.') | Tok::P(':') => i -= 1,
+            Tok::P(']') | Tok::P(')') => {
+                let (open, close) = if prev.is_p(']') { ('[', ']') } else { ('(', ')') };
+                let mut depth = 0usize;
+                let mut j = i - 1;
+                loop {
+                    if toks[j].tok.is_p(close) {
+                        depth += 1;
+                    } else if toks[j].tok.is_p(open) {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    if j == 0 {
+                        break;
+                    }
+                    j -= 1;
+                }
+                i = j;
+            }
+            Tok::P('&') => i -= 1,
+            _ => break,
+        }
+    }
+    i
+}
+
+/// Find strongly connected components of the lock graph and report
+/// every edge inside a cyclic SCC (incl. self-loops: re-acquiring a
+/// non-reentrant `std::Mutex` deadlocks).
+fn report_cycles(edges: &[Edge], out: &mut Vec<Finding>) {
+    use std::collections::{BTreeMap, BTreeSet};
+    let mut nodes: BTreeSet<&str> = BTreeSet::new();
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for e in edges {
+        nodes.insert(&e.from);
+        nodes.insert(&e.to);
+        adj.entry(&e.from).or_default().insert(&e.to);
+    }
+
+    // iterative Tarjan
+    let idx_of: BTreeMap<&str, usize> =
+        nodes.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+    let names: Vec<&str> = nodes.iter().copied().collect();
+    let n = names.len();
+    let succ: Vec<Vec<usize>> = names
+        .iter()
+        .map(|&u| {
+            adj.get(u)
+                .map(|s| s.iter().map(|v| idx_of[v]).collect())
+                .unwrap_or_default()
+        })
+        .collect();
+    let mut index = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack = Vec::new();
+    let mut comp = vec![usize::MAX; n];
+    let mut next_index = 0usize;
+    let mut next_comp = 0usize;
+    for root in 0..n {
+        if index[root] != usize::MAX {
+            continue;
+        }
+        // (node, next-successor-position)
+        let mut work = vec![(root, 0usize)];
+        while let Some(&mut (v, ref mut pi)) = work.last_mut() {
+            if *pi == 0 {
+                index[v] = next_index;
+                low[v] = next_index;
+                next_index += 1;
+                stack.push(v);
+                on_stack[v] = true;
+            }
+            if let Some(&w) = succ[v].get(*pi) {
+                *pi += 1;
+                if index[w] == usize::MAX {
+                    work.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            } else {
+                if low[v] == index[v] {
+                    loop {
+                        let Some(w) = stack.pop() else { break };
+                        on_stack[w] = false;
+                        comp[w] = next_comp;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    next_comp += 1;
+                }
+                work.pop();
+                if let Some(&(u, _)) = work.last() {
+                    low[u] = low[u].min(low[v]);
+                }
+            }
+        }
+    }
+
+    // SCC sizes (to tell cyclic multi-node SCCs from singletons)
+    let mut size = vec![0usize; next_comp];
+    for &c in &comp {
+        size[c] += 1;
+    }
+    for e in edges {
+        let (fi, ti) = (idx_of[e.from.as_str()], idx_of[e.to.as_str()]);
+        if e.from == e.to {
+            out.push(Finding {
+                file: e.file.clone(),
+                line: e.line,
+                lint: "lock-order".into(),
+                message: format!(
+                    "lock `{}` acquired while already held (std::Mutex is not \
+                     reentrant; this deadlocks)",
+                    e.to
+                ),
+            });
+        } else if comp[fi] == comp[ti] && size[comp[fi]] > 1 {
+            out.push(Finding {
+                file: e.file.clone(),
+                line: e.line,
+                lint: "lock-order".into(),
+                message: format!(
+                    "lock-order inversion: `{}` acquired while holding `{}`, but \
+                     another site orders them the other way (cycle in the \
+                     lock-acquisition graph)",
+                    e.to, e.from
+                ),
+            });
+        }
+    }
+    // dedupe identical (file, line, message) repeats from loops
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint.as_str(), a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.lint.as_str(), b.message.as_str()))
+    });
+    out.dedup();
+}

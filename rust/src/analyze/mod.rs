@@ -1,0 +1,270 @@
+//! `sparsefw analyze` — a project-invariant static-analysis pass.
+//!
+//! The server/coordinator stack is built entirely on std
+//! `Mutex`/`Condvar`/`thread::spawn`; the invariants that keep it safe
+//! (lock ordering, panic-free request paths, registry/codec
+//! consistency) were convention until this module.  `analyze` tokenizes
+//! the crate's own sources with the hand-rolled lexer in
+//! [`lexer`] (same no-dependency discipline as [`crate::util::json`])
+//! and enforces three lint families, each reporting `file:line`
+//! diagnostics:
+//!
+//! | lint | family | what it flags |
+//! |------|--------|---------------|
+//! | `lock-order` | concurrency | two locks acquired in inconsistent order across the codebase (incl. re-entrant self-cycles) |
+//! | `lock-across-blocking` | concurrency | a lock guard held across blocking I/O, `Condvar::wait` on a different lock, or a progress-callback invocation |
+//! | `panic-path` | panic paths | `unwrap()` / `expect()` / `panic!`-family macros in request-serving code |
+//! | `unchecked-index` | panic paths | `x[i]` indexing in request-serving code |
+//! | `registry-coverage` | consistency | a registered method missing from the registry test, the `table1_methods` bench, or USAGE |
+//! | `codec-fields` | consistency | a `to_json`/`from_json` pair whose key sets differ |
+//! | `stale-allow` | meta | an `// analyze: allow(..)` annotation that no longer suppresses anything |
+//!
+//! False positives are silenced in place:
+//!
+//! ```text
+//! // analyze: allow(lock-across-blocking, "stderr lock makes the write atomic")
+//! ```
+//!
+//! on the offending line or the line directly above it.  Every allow
+//! must keep earning its place — one that stops matching a finding is
+//! itself reported as `stale-allow`, so suppressions can't outlive the
+//! code they excused.
+//!
+//! Adding a lint: implement `fn check(file: &SourceFile, out: &mut
+//! Vec<Finding>)` in a submodule, give the lint a kebab-case name, call
+//! it from [`analyze_tree`], and add a violating + allow-annotated
+//! fixture pair under `rust/tests/analyze_fixtures/`.
+
+pub mod consistency;
+pub mod lexer;
+pub mod locks;
+pub mod panics;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use lexer::{lex, Lexed};
+
+/// One diagnostic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Path relative to the analysis root (slash-separated).
+    pub file: String,
+    pub line: u32,
+    /// Kebab-case lint name (`lock-order`, `panic-path`, …).
+    pub lint: String,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: warning[{}]: {}",
+            self.file, self.line, self.lint, self.message
+        )
+    }
+}
+
+/// A parsed `// analyze: allow(<lint>, "<reason>")` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    pub lint: String,
+    #[allow(dead_code)]
+    pub reason: String,
+}
+
+/// One lexed source file, ready for the lint passes.
+pub struct SourceFile {
+    /// Path relative to the analysis root (slash-separated).
+    pub rel: String,
+    pub lexed: Lexed,
+    pub allows: Vec<Allow>,
+    /// Token-index ranges (inclusive) of `#[cfg(test)]` / `#[test]`
+    /// code, which every lint skips.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, src: &str) -> Self {
+        let lexed = lex(src);
+        let allows = parse_allows(&lexed);
+        let test_ranges = lexer::test_ranges(&lexed.tokens);
+        SourceFile { rel: rel.to_string(), lexed, allows, test_ranges }
+    }
+
+    /// True when token index `i` falls inside test-only code.
+    pub fn in_test(&self, i: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| i >= s && i <= e)
+    }
+
+    /// True when a marker comment `// analyze: request-path` appears in
+    /// the file (fixtures use it to opt into the panic-path lints
+    /// without living under `server/`).  The marker must start the
+    /// comment — doc comments merely *mentioning* it (like this one)
+    /// begin with `//!`/`///` and don't count.
+    pub fn has_request_path_marker(&self) -> bool {
+        self.lexed.comments.iter().any(|(_, c)| {
+            c.trim_start_matches('/')
+                .trim()
+                .starts_with("analyze: request-path")
+        })
+    }
+}
+
+fn parse_allows(lexed: &Lexed) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (line, text) in &lexed.comments {
+        let Some(rest) = text
+            .trim_start_matches('/')
+            .trim()
+            .strip_prefix("analyze: allow(")
+        else {
+            continue;
+        };
+        let Some(body) = rest.split(')').next() else { continue };
+        let mut parts = body.splitn(2, ',');
+        let lint = parts.next().unwrap_or("").trim().to_string();
+        let reason = parts
+            .next()
+            .unwrap_or("")
+            .trim()
+            .trim_matches('"')
+            .to_string();
+        if !lint.is_empty() {
+            out.push(Allow { line: *line, lint, reason });
+        }
+    }
+    out
+}
+
+/// What to analyze and how.
+pub struct AnalyzeConfig {
+    /// Root of the source tree (`rust/src` in the repo).
+    pub src_root: PathBuf,
+    /// Relative path prefixes (slash-separated) whose files are
+    /// request-serving: the panic-path lints apply there.
+    pub panic_paths: Vec<String>,
+    /// Run the registry-coverage lint (needs the process's registry and
+    /// the sibling `tests/` + `benches/` dirs; fixture runs disable it).
+    pub check_registry: bool,
+}
+
+impl AnalyzeConfig {
+    pub fn new(src_root: impl Into<PathBuf>) -> Self {
+        AnalyzeConfig {
+            src_root: src_root.into(),
+            panic_paths: vec!["server/".to_string()],
+            check_registry: true,
+        }
+    }
+}
+
+/// Run every lint over the tree at `cfg.src_root`; returns findings
+/// sorted by file, line, lint.  Allow annotations are applied here, and
+/// stale allows are converted into `stale-allow` findings.
+pub fn analyze_tree(cfg: &AnalyzeConfig) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(&cfg.src_root, &cfg.src_root, &mut files)?;
+    files.sort();
+
+    let mut sources = Vec::new();
+    for rel in &files {
+        let path = cfg.src_root.join(rel);
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        sources.push(SourceFile::parse(rel, &src));
+    }
+
+    let mut findings = Vec::new();
+
+    // concurrency lints see the whole tree at once (the lock graph is
+    // cross-file); panic lints are per-file
+    locks::check(&sources, &mut findings);
+    for sf in &sources {
+        let applies = cfg
+            .panic_paths
+            .iter()
+            .any(|p| sf.rel.starts_with(p.as_str()))
+            || sf.has_request_path_marker();
+        if applies {
+            panics::check(sf, &mut findings);
+        }
+        consistency::check_codecs(sf, &mut findings);
+    }
+    if cfg.check_registry {
+        consistency::check_registry(&cfg.src_root, &mut findings);
+    }
+
+    let findings = apply_allows(&sources, findings);
+    Ok(findings)
+}
+
+/// Suppress findings covered by an allow on the same or preceding
+/// line; report allows that suppressed nothing.
+fn apply_allows(sources: &[SourceFile], findings: Vec<Finding>) -> Vec<Finding> {
+    let mut used: Vec<Vec<bool>> = sources
+        .iter()
+        .map(|sf| vec![false; sf.allows.len()])
+        .collect();
+    let mut out = Vec::new();
+    'finding: for f in findings {
+        for (si, sf) in sources.iter().enumerate() {
+            if sf.rel != f.file {
+                continue;
+            }
+            for (ai, a) in sf.allows.iter().enumerate() {
+                if a.lint == f.lint && (a.line == f.line || a.line + 1 == f.line) {
+                    used[si][ai] = true;
+                    continue 'finding;
+                }
+            }
+        }
+        out.push(f);
+    }
+    for (si, sf) in sources.iter().enumerate() {
+        for (ai, a) in sf.allows.iter().enumerate() {
+            if !used[si][ai] {
+                out.push(Finding {
+                    file: sf.rel.clone(),
+                    line: a.line,
+                    lint: "stale-allow".to_string(),
+                    message: format!(
+                        "allow({}) no longer matches any finding; remove it",
+                        a.lint
+                    ),
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.lint.as_str()))
+    });
+    out
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+    {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}

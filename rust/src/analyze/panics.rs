@@ -1,0 +1,91 @@
+//! Panic-path lints: request-serving code must degrade, not abort.
+//!
+//! Applies to files under a configured prefix (`server/` by default)
+//! or carrying a `// analyze: request-path` marker comment (how the
+//! fixtures opt in).  A panic on a connection thread unwinds into
+//! `catch_unwind`-free scaffolding, poisons every `Mutex` the frame
+//! holds, and turns one bad request into a wedged server — so the
+//! request path bans the whole `unwrap`/`expect`/`panic!` family plus
+//! unchecked `x[i]` indexing, each individually justifiable with
+//! `// analyze: allow(panic-path, "...")` /
+//! `// analyze: allow(unchecked-index, "...")`.
+
+use super::lexer::{Tok, Token};
+use super::{Finding, SourceFile};
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that can directly precede an array *literal* (`for x in
+/// [..]`) — a `[` after one of these is not an indexing expression.
+const KEYWORDS_BEFORE_LITERAL: &[&str] = &[
+    "in", "return", "break", "mut", "ref", "move", "as", "else", "match", "if",
+];
+
+pub fn check(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if sf.in_test(i) {
+            continue;
+        }
+        match &t.tok {
+            Tok::P('.') => {
+                if let Some(Tok::Ident(m)) = toks.get(i + 1).map(|t| &t.tok) {
+                    let called = toks.get(i + 2).is_some_and(|t| t.tok.is_p('('));
+                    if called && (m == "unwrap" || m == "expect") {
+                        out.push(Finding {
+                            file: sf.rel.clone(),
+                            line: toks[i + 1].line,
+                            lint: "panic-path".into(),
+                            message: format!(
+                                ".{m}() in request-serving code (return an error or \
+                                 recover instead)"
+                            ),
+                        });
+                    }
+                }
+            }
+            Tok::Ident(m)
+                if PANIC_MACROS.contains(&m.as_str())
+                    && toks.get(i + 1).is_some_and(|t| t.tok.is_p('!')) =>
+            {
+                out.push(Finding {
+                    file: sf.rel.clone(),
+                    line: t.line,
+                    lint: "panic-path".into(),
+                    message: format!("{m}! in request-serving code"),
+                });
+            }
+            // `x[i]`: `[` whose previous token ends an expression.
+            // `&[u8]` (type), `[0u8; n]` (literal), and `#[attr]` all
+            // have non-expression predecessors and don't match.
+            Tok::P('[') if i > 0 => {
+                let kw_before = toks[i - 1]
+                    .tok
+                    .ident()
+                    .is_some_and(|s| KEYWORDS_BEFORE_LITERAL.contains(&s));
+                let indexes_expr = matches!(
+                    toks[i - 1].tok,
+                    Tok::Ident(_) | Tok::P(']') | Tok::P(')')
+                ) && !kw_before
+                    && !is_type_position(toks, i - 1);
+                if indexes_expr {
+                    out.push(Finding {
+                        file: sf.rel.clone(),
+                        line: t.line,
+                        lint: "unchecked-index".into(),
+                        message: "unchecked indexing in request-serving code (use \
+                                  .get()/.get_mut() or slice patterns)"
+                            .into(),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Heuristic: the identifier before `[` sits in type position when the
+/// token before *it* is `:` or `<` (e.g. `Vec<[f32; 4]>`, `x: [u8; 2]`).
+fn is_type_position(toks: &[Token], ident_at: usize) -> bool {
+    ident_at > 0 && matches!(toks[ident_at - 1].tok, Tok::P(':') | Tok::P('<'))
+}

@@ -272,6 +272,7 @@ impl JobSpec {
     pub fn from_json(v: &Json) -> Result<Self> {
         let allocation = if v.get("allocation").is_some() {
             Allocation::from_json(v.at(&["allocation"]))?
+        // analyze: allow(codec-fields, "legacy PruneRunConfig layout accepted on read only")
         } else if v.get("pattern").is_some() {
             Allocation::Uniform(config::pattern_from_json(v.at(&["pattern"]))?)
         } else {

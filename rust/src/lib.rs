@@ -143,7 +143,23 @@
 //! handle.shutdown();
 //! # anyhow::Ok(())
 //! ```
+//!
+//! ## Project invariants are linted, not assumed
+//!
+//! That server stack is plain `std` threads and locks, so the crate
+//! carries its own static-analysis pass ([`analyze`], `sparsefw
+//! analyze`): token-level lints for lock-ordering cycles, guards held
+//! across blocking calls, panics on request-serving paths, and
+//! registry/codec cross-surface drift, with an
+//! `// analyze: allow(<lint>, "<reason>")` escape hatch whose unused
+//! entries are themselves flagged.  CI runs `sparsefw analyze
+//! --deny-warnings` (scripts/ci.sh), and `scripts/analyze.sh` adds
+//! ThreadSanitizer / Miri lanes where the toolchain supports them.
+//! Expensive runtime checks (FW maintained-state drift, queue
+//! state-machine transitions) sit behind the `debug-invariants` cargo
+//! feature, which the CI test lane enables.
 
+pub mod analyze;
 pub mod bench;
 pub mod calib;
 pub mod config;

@@ -7,6 +7,7 @@
 //!            [--spec job.json --save-spec job.json]
 //!   eval     [--model --masks file]
 //!   selfcheck                    — PJRT vs native numerical cross-check
+//!   analyze                      — project-invariant static analysis (lints)
 //!   serve    [--addr --workers --queue-cap --calib-cache --demo]
 //!   submit / status / shutdown   — client side of a running server
 //!   report-table1 / report-table2 / report-fig2 / report-fig3 / report-fig4
@@ -59,6 +60,9 @@ USAGE: sparsefw <subcommand> [flags]
              [--out masks.safetensors] [--eval]
   eval       --model M [--masks masks.safetensors] [--pjrt]
   selfcheck                       cross-check PJRT kernels vs native math
+  analyze    [--src DIR] [--deny-warnings]
+                                  run the project lints over the source
+                                  tree (default DIR: src)
   serve      [--addr HOST:PORT] [--workers N] [--queue-cap N]
              [--calib-cache N] [--conn-threads N] [--history-cap N]
              [--demo]
@@ -114,6 +118,38 @@ mask refinement, never raising the layer objective) and `update`
 (least-squares masked weight update); job summaries then report the
 aggregate improvement as refine_obj_delta.
 
+`analyze` is the project's own static-analysis pass (CI runs it with
+--deny-warnings).  It tokenizes the source tree with the in-crate
+lexer and enforces the invariants the std-only server stack depends
+on.  Lint catalog:
+
+    lock-order            two locks acquired in inconsistent order
+                          anywhere in the tree (incl. re-entrant
+                          self-cycles on std::Mutex)
+    lock-across-blocking  a guard held across blocking I/O, a Condvar
+                          wait on a different lock, or a progress
+                          callback
+    panic-path            unwrap()/expect()/panic!-family macros in
+                          request-serving code (server/)
+    unchecked-index       x[i] indexing in request-serving code
+    registry-coverage     a registered method missing from the registry
+                          test, the table1_methods bench, or this USAGE
+    codec-fields          a to_json/from_json pair whose key sets differ
+    stale-allow           an allow annotation that suppresses nothing
+
+False positives are silenced in place, on the offending line or the
+line directly above it, and every suppression must name its reason:
+
+    // analyze: allow(<lint>, \"<reason>\")
+
+A marker comment `// analyze: request-path` opts any file into the
+panic-path lints (fixtures use this).  Allows that stop matching are
+themselves reported (stale-allow), so suppressions can't outlive the
+code they excused.  To add a lint: implement a check in
+src/analyze/, name it in kebab-case, and add a violating +
+allow-annotated fixture pair under tests/analyze_fixtures/ (see the
+module docs in src/analyze/mod.rs).
+
 `serve` runs a long-lived job server over the workspace: POST /jobs
 takes a JobSpec, workers execute jobs off a bounded priority queue
 with per-worker model + calibration memoization, GET /jobs/:id (and
@@ -167,6 +203,7 @@ fn run(args: &Args) -> Result<()> {
         Some("prune") => prune(args),
         Some("eval") => eval_cmd(args),
         Some("selfcheck") => selfcheck(args),
+        Some("analyze") => analyze_cmd(args),
         Some("serve") => serve(args),
         Some("submit") => submit(args),
         Some("status") => status_cmd(args),
@@ -599,6 +636,27 @@ fn selfcheck(args: &Args) -> Result<()> {
     }
     anyhow::ensure!(worst < 1e-3, "PJRT/native mismatch: {worst}");
     println!("selfcheck OK (worst rel-diff {worst:.2e})");
+    Ok(())
+}
+
+fn analyze_cmd(args: &Args) -> Result<()> {
+    use sparsefw::analyze::{analyze_tree, AnalyzeConfig};
+    let src = args.get("src").unwrap_or("src");
+    anyhow::ensure!(
+        Path::new(src).is_dir(),
+        "--src {src:?} is not a directory (run from rust/, or pass --src path/to/src)"
+    );
+    let findings = analyze_tree(&AnalyzeConfig::new(src))?;
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("analyze: clean");
+    } else if args.has("deny-warnings") {
+        bail!("analyze: {} warning(s) (--deny-warnings)", findings.len());
+    } else {
+        println!("analyze: {} warning(s)", findings.len());
+    }
     Ok(())
 }
 

@@ -266,6 +266,17 @@ impl FwBlock {
     fn maybe_refresh(&mut self, w: &[f32], g: &Mat, m: &[f32], refresh_every: usize) {
         self.since_refresh += 1;
         if refresh_every > 0 && self.since_refresh >= refresh_every {
+            // a large drift right before the refresh means the
+            // incremental update is wrong, not that fp noise piled up
+            #[cfg(feature = "debug-invariants")]
+            {
+                let drift = self.p_rel_drift(w, g, m);
+                assert!(
+                    drift <= 1e-2,
+                    "fw invariant: maintained P drifted {drift:.3e} from the exact \
+                     recompute at refresh"
+                );
+            }
             masked_matmul_into(w, m, self.rows, self.cols, g, &mut self.p);
             self.since_refresh = 0;
         }

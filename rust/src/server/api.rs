@@ -78,9 +78,12 @@ pub(crate) fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
         // one of the finite connection-pool threads (that would let a
         // handful of streamers starve /healthz and /shutdown)
         let segs: Vec<String> = req.segments().iter().map(|s| s.to_string()).collect();
-        if req.method == "GET" && segs.len() == 3 && segs[0] == "jobs" && segs[2] == "events" {
+        let stream_id = match (req.method.as_str(), segs.as_slice()) {
+            ("GET", [a, id, c]) if a == "jobs" && c == "events" => Some(id.clone()),
+            _ => None,
+        };
+        if let Some(id) = stream_id {
             let state = state.clone();
-            let id = segs[1].clone();
             let _ = std::thread::Builder::new()
                 .name("sparsefw-stream".into())
                 .spawn(move || {
@@ -346,7 +349,7 @@ fn stream_job_events(writer: &mut TcpStream, state: &Arc<ServerState>, id: &str)
     loop {
         let Some(rec) = state.queue.wait_update(id, seen, STREAM_TICK) else { break };
         let mut failed = false;
-        for e in &rec.events[seen..] {
+        for e in rec.events.get(seen..).unwrap_or(&[]) {
             let mut line = crate::util::json::to_string(&event_json(e));
             line.push('\n');
             failed |= cw.chunk(line.as_bytes()).is_err();

@@ -22,6 +22,11 @@ use crate::util::json::{self, Json};
 pub const MAX_BODY: usize = 4 << 20;
 /// Upper bound on a single header line.
 pub const MAX_LINE: usize = 64 << 10;
+/// Upper bound on header count (the API uses ~4; 128 is generous).
+pub const MAX_HEADERS: usize = 128;
+/// Upper bound on one chunk in a chunked stream.  Also bounds the
+/// carry-over buffer for a payload line split across chunks.
+pub const MAX_CHUNK: usize = MAX_BODY;
 
 // ---------------------------------------------------------------------------
 // Request
@@ -106,14 +111,15 @@ fn read_crlf_line(r: &mut impl BufRead) -> Result<Option<String>> {
                 bail!("connection closed mid-line");
             }
             Ok(_) => {
-                if byte[0] == b'\n' {
+                let [b] = byte;
+                if b == b'\n' {
                     if buf.last() == Some(&b'\r') {
                         buf.pop();
                     }
                     let s = String::from_utf8(buf).context("non-UTF-8 header line")?;
                     return Ok(Some(s));
                 }
-                buf.push(byte[0]);
+                buf.push(b);
                 ensure!(buf.len() <= MAX_LINE, "header line too long");
             }
             Err(e) => return Err(e).context("reading header line"),
@@ -132,6 +138,7 @@ fn read_headers(r: &mut impl BufRead) -> Result<BTreeMap<String, String>> {
         if line.is_empty() {
             return Ok(headers);
         }
+        ensure!(headers.len() < MAX_HEADERS, "too many headers");
         let (k, v) = line.split_once(':').context("malformed header line")?;
         headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
     }
@@ -270,6 +277,9 @@ pub fn read_chunked(r: &mut impl BufRead, mut on_line: impl FnMut(&str)) -> Resu
         let size_line = read_crlf_line(r)?.context("EOF mid chunked stream")?;
         let size = usize::from_str_radix(size_line.trim(), 16)
             .with_context(|| format!("bad chunk size {size_line:?}"))?;
+        // bound BEFORE allocating: a hostile "ffffffffffffffff" size
+        // line would otherwise panic (or OOM) in `vec![0u8; size]`
+        ensure!(size <= MAX_CHUNK, "chunk too large ({size} bytes)");
         let mut data = vec![0u8; size];
         r.read_exact(&mut data).context("reading chunk")?;
         // consume the CRLF after the chunk payload
@@ -289,6 +299,14 @@ pub fn read_chunked(r: &mut impl BufRead, mut on_line: impl FnMut(&str)) -> Resu
                 on_line(line);
             }
         }
+        // whatever is left is one payload line still missing its
+        // newline — bound it so a newline-free stream can't grow the
+        // carry-over buffer forever
+        ensure!(
+            pending.len() <= MAX_CHUNK,
+            "chunked payload line too long ({} bytes)",
+            pending.len()
+        );
     }
 }
 

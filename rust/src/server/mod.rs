@@ -32,6 +32,7 @@ pub use queue::{JobBrief, JobId, JobQueue, JobRecord, JobState, JobSummary};
 
 use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -240,9 +241,9 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("sparsefw-worker-{i}"))
                     .spawn(move || worker_loop(state, session, i))
-                    .expect("spawning worker thread")
+                    .with_context(|| format!("spawning worker thread {i}"))
             })
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
 
         let accept = {
             let state = state.clone();
@@ -250,7 +251,7 @@ impl Server {
             std::thread::Builder::new()
                 .name("sparsefw-accept".into())
                 .spawn(move || accept_loop(listener, state, conn_threads))
-                .expect("spawning accept thread")
+                .context("spawning accept thread")?
         };
 
         crate::info!("sparsefw serve: listening on {addr} ({} workers)", state.metrics.workers);
@@ -303,7 +304,17 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
         crate::info!("worker {worker}: job {id} starting ({})", spec.label());
         let progress_state = state.clone();
         session.on_progress(move |e| progress_state.queue.push_event(id, e.clone()));
-        let outcome = session.execute(&spec);
+        // a panicking method (registered pruners are open code) must
+        // fail THIS job, not unwind the worker thread: an unwound
+        // worker would leave the job wedged in Running forever and
+        // poison every registry lock it held
+        let outcome = match catch_unwind(AssertUnwindSafe(|| session.execute(&spec))) {
+            Ok(res) => res,
+            Err(payload) => Err(anyhow::anyhow!(
+                "worker panicked: {}",
+                panic_message(payload.as_ref())
+            )),
+        };
         session.clear_progress();
 
         let (hits, misses) = session.calib_stats();
@@ -352,6 +363,18 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
         state.metrics.busy_workers.fetch_sub(1, Ordering::Relaxed);
     }
     crate::debuglog!("worker {worker}: exiting");
+}
+
+/// Best-effort human-readable panic payload (`panic!("..")` produces a
+/// `&str` or `String`; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 // ---------------------------------------------------------------------------

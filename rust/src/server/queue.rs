@@ -11,6 +11,13 @@
 //! the pending queue, so a cancelled job is guaranteed to never run).
 //! [`JobQueue::shutdown`] stops intake; in-flight jobs always complete,
 //! and queued jobs either drain or are cancelled en masse.
+//!
+//! Every lock acquisition goes through
+//! [`crate::util::sync::lock_recover`]: a worker panic (contained by
+//! the server's `catch_unwind`, reported as a `Failed` job) must never
+//! poison this registry into 500-ing all subsequent requests.  Under
+//! the `debug-invariants` feature the state machine above is asserted
+//! at runtime on every transition.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -21,6 +28,7 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::{JobResult, JobSpec, LayerEvent};
 use crate::util::json::Json;
+use crate::util::sync::{lock_recover, wait_recover, wait_timeout_recover};
 
 pub type JobId = u64;
 
@@ -291,10 +299,9 @@ impl JobQueue {
             .filter(|(_, r)| r.state.is_terminal())
             .map(|(&id, _)| id)
             .collect();
-        if terminal.len() > self.history_cap {
-            for id in &terminal[..terminal.len() - self.history_cap] {
-                inner.jobs.remove(id);
-            }
+        let excess = terminal.len().saturating_sub(self.history_cap);
+        for id in terminal.iter().take(excess) {
+            inner.jobs.remove(id);
         }
     }
 
@@ -302,7 +309,7 @@ impl JobQueue {
     /// server is shutting down.  Higher `priority` runs first; equal
     /// priorities are FIFO.
     pub fn submit(&self, spec: JobSpec, priority: i64) -> Result<JobId> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if inner.shutdown {
             bail!("server is shutting down; not accepting jobs");
         }
@@ -341,12 +348,22 @@ impl JobQueue {
     /// owned by `worker`) or the queue shuts down with nothing left to
     /// drain (`None` — the worker should exit).
     pub fn pop_blocking(&self, worker: usize) -> Option<(JobId, JobSpec)> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         loop {
             let head = inner.pending.iter().next().map(|(&k, &v)| (k, v));
             if let Some((key, id)) = head {
                 inner.pending.remove(&key);
-                let rec = inner.jobs.get_mut(&id).expect("pending job registered");
+                // a pending entry always has a registered record; if
+                // that invariant ever breaks, skip the orphan entry
+                // rather than panicking under the queue lock
+                let Some(rec) = inner.jobs.get_mut(&id) else { continue };
+                #[cfg(feature = "debug-invariants")]
+                assert_eq!(
+                    rec.state,
+                    JobState::Queued,
+                    "queue invariant: popped job {id} must be Queued, was {}",
+                    rec.state
+                );
                 rec.state = JobState::Running;
                 rec.started = Some(Instant::now());
                 rec.worker = Some(worker);
@@ -359,13 +376,13 @@ impl JobQueue {
             if inner.shutdown {
                 return None;
             }
-            inner = self.take.wait(inner).unwrap();
+            inner = wait_recover(&self.take, inner);
         }
     }
 
     /// Append a progress event to a running job.
     pub fn push_event(&self, id: JobId, event: LayerEvent) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if let Some(rec) = inner.jobs.get_mut(&id) {
             if rec.state == JobState::Running {
                 rec.events.push(event);
@@ -377,8 +394,15 @@ impl JobQueue {
 
     /// Mark a running job finished (`Done` with a summary, or `Failed`).
     pub fn finish(&self, id: JobId, outcome: Result<JobSummary, String>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         if let Some(rec) = inner.jobs.get_mut(&id) {
+            #[cfg(feature = "debug-invariants")]
+            assert_eq!(
+                rec.state,
+                JobState::Running,
+                "queue invariant: finish() on job {id} requires Running, was {}",
+                rec.state
+            );
             rec.finished = Some(Instant::now());
             match outcome {
                 Ok(summary) => {
@@ -399,7 +423,7 @@ impl JobQueue {
     /// Cancel a *queued* job: it is removed from the pending queue under
     /// the same lock `pop_blocking` uses, so it can never start.
     pub fn cancel(&self, id: JobId) -> Result<(), CancelError> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         let Some(rec) = inner.jobs.get_mut(&id) else {
             return Err(CancelError::Unknown);
         };
@@ -408,8 +432,9 @@ impl JobQueue {
         }
         rec.state = JobState::Cancelled;
         rec.finished = Some(Instant::now());
-        let key = rec.pending_key.take().expect("queued job has a pending key");
-        inner.pending.remove(&key);
+        if let Some(key) = rec.pending_key.take() {
+            inner.pending.remove(&key);
+        }
         self.prune_history(&mut inner);
         drop(inner);
         self.update.notify_all();
@@ -420,7 +445,7 @@ impl JobQueue {
     /// run to completion; with `drain_queued` the pending backlog is
     /// still executed, otherwise it is cancelled wholesale.
     pub fn shutdown(&self, drain_queued: bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         inner.shutdown = true;
         if !drain_queued {
             let ids: Vec<JobId> = inner.pending.values().copied().collect();
@@ -440,27 +465,25 @@ impl JobQueue {
     }
 
     pub fn is_shutdown(&self) -> bool {
-        self.inner.lock().unwrap().shutdown
+        lock_recover(&self.inner).shutdown
     }
 
     /// Snapshot of one job.
     pub fn get(&self, id: JobId) -> Option<JobRecord> {
-        self.inner.lock().unwrap().jobs.get(&id).cloned()
+        lock_recover(&self.inner).jobs.get(&id).cloned()
     }
 
     /// Snapshot of every job, in submission order.  Deep-clones records
     /// (events and summaries included) — prefer [`JobQueue::briefs`]
     /// for listings.
     pub fn list(&self) -> Vec<JobRecord> {
-        self.inner.lock().unwrap().jobs.values().cloned().collect()
+        lock_recover(&self.inner).jobs.values().cloned().collect()
     }
 
     /// Lightweight listing rows, in submission order, without cloning
     /// event vectors or summaries under the lock.
     pub fn briefs(&self) -> Vec<JobBrief> {
-        self.inner
-            .lock()
-            .unwrap()
+        lock_recover(&self.inner)
             .jobs
             .values()
             .map(|rec| JobBrief {
@@ -476,12 +499,12 @@ impl JobQueue {
 
     /// Jobs waiting in the pending queue.
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().pending.len()
+        lock_recover(&self.inner).pending.len()
     }
 
     /// `(queued, running, done, failed, cancelled)` counts.
     pub fn state_counts(&self) -> (usize, usize, usize, usize, usize) {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         let mut c = (0, 0, 0, 0, 0);
         for rec in inner.jobs.values() {
             match rec.state {
@@ -505,7 +528,7 @@ impl JobQueue {
         timeout: Duration,
     ) -> Option<JobRecord> {
         let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         loop {
             let rec = inner.jobs.get(&id)?;
             if rec.events.len() > events_seen || rec.state.is_terminal() {
@@ -515,7 +538,8 @@ impl JobQueue {
             if now >= deadline {
                 return Some(rec.clone());
             }
-            let (guard, _res) = self.update.wait_timeout(inner, deadline - now).unwrap();
+            let (guard, _timed_out) =
+                wait_timeout_recover(&self.update, inner, deadline - now);
             inner = guard;
         }
     }

@@ -50,6 +50,7 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
         Level::Debug => "DEBUG",
     };
     let mut err = std::io::stderr().lock();
+    // analyze: allow(lock-across-blocking, "the stderr lock exists to make this one write atomic")
     let _ = writeln!(err, "[{t:8.2}s {tag}] {args}");
 }
 

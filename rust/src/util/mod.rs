@@ -6,3 +6,4 @@ pub mod json;
 pub mod log;
 pub mod pool;
 pub mod prng;
+pub mod sync;

@@ -9,10 +9,13 @@
 //! set of worker threads draining a shared closure queue (connection
 //! handling must not spawn a thread per accept).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+use crate::util::sync::lock_recover;
 
 /// Number of worker threads to use for `n` items.
 pub fn default_workers(n: usize) -> usize {
@@ -96,11 +99,17 @@ impl TaskPool {
                 let rx = rx.clone();
                 std::thread::spawn(move || loop {
                     // hold the receiver lock only while dequeueing
-                    let task = match rx.lock().unwrap().recv() {
+                    // analyze: allow(lock-across-blocking, "the receiver lock IS the dequeue point; blocking recv under it is the pool design")
+                    let task = match lock_recover(&rx).recv() {
                         Ok(t) => t,
                         Err(_) => break, // all senders dropped
                     };
-                    task();
+                    // a panicking task must not kill its worker: the
+                    // pool would silently lose a thread per bad task
+                    // (and the receiver lock would poison for the rest)
+                    if catch_unwind(AssertUnwindSafe(task)).is_err() {
+                        crate::warnlog!("task pool: task panicked (worker recovered)");
+                    }
                 })
             })
             .collect();
@@ -108,12 +117,19 @@ impl TaskPool {
     }
 
     /// Enqueue a closure for execution on the pool.
+    ///
+    /// Workers survive panicking tasks (see `new`), so the channel can
+    /// only close through [`Drop`]; rather than panicking the caller on
+    /// that unreachable edge, a failed send logs and drops the task.
     pub fn execute(&self, f: impl FnOnce() + Send + 'static) {
-        self.tx
+        let sent = self
+            .tx
             .as_ref()
-            .expect("pool not shut down")
-            .send(Box::new(f))
-            .expect("pool workers alive");
+            .map(|tx| tx.send(Box::new(f)).is_ok())
+            .unwrap_or(false);
+        if !sent {
+            crate::warnlog!("task pool: execute() after shutdown; task dropped");
+        }
     }
 }
 
@@ -179,6 +195,23 @@ mod tests {
     fn zero_items_is_noop() {
         parallel_for(0, |_| panic!("must not run"));
         assert!(parallel_map(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn task_pool_survives_panicking_tasks() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            // 1 worker: if the panic killed it, nothing after could run
+            let pool = TaskPool::new(1);
+            pool.execute(|| panic!("bad task"));
+            for _ in 0..10 {
+                let hits = hits.clone();
+                pool.execute(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
     }
 
     #[test]

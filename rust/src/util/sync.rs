@@ -1,0 +1,63 @@
+//! Poison-recovering lock helpers.
+//!
+//! `std::Mutex` poisons itself when a thread panics while holding the
+//! guard, and every later `.lock().unwrap()` then panics too — one bad
+//! job wedges the whole server.  Poisoning is only a *tripwire*: the
+//! data is still there and, for every lock in this crate, still
+//! consistent (guard scopes are short and state transitions are
+//! single-assignment), so the right response is to take the guard and
+//! keep serving.  These helpers are the crate-wide idiom; the
+//! `sparsefw analyze` lock lints treat them as acquisitions.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait` that recovers a poisoned guard on wake.
+pub fn wait_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout` that recovers a poisoned guard on wake;
+/// returns the guard and whether the wait timed out.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(e) => {
+            let (g, t) = e.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

@@ -1,0 +1,20 @@
+//! The same asymmetric codec pair, silenced with a reasoned allow on
+//! the write-only key.  Must produce no findings.
+
+pub struct Gadget {
+    pub id: u64,
+}
+
+impl Gadget {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", self.id.into()),
+            // analyze: allow(codec-fields, "fixture: revision is write-only provenance metadata")
+            ("revision", 3.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self { id: v.at(&["id"]).as_usize().unwrap_or(0) as u64 })
+    }
+}

@@ -1,0 +1,24 @@
+//! Seeded violation: an asymmetric `to_json`/`from_json` pair — the
+//! writer emits a `revision` key the reader never looks at.
+
+pub struct Widget {
+    pub id: u64,
+    pub label: String,
+}
+
+impl Widget {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", self.id.into()),
+            ("label", self.label.as_str().into()),
+            ("revision", 3.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            id: v.at(&["id"]).as_usize().unwrap_or(0) as u64,
+            label: v.at(&["label"]).as_str().unwrap_or("").to_string(),
+        })
+    }
+}

@@ -1,0 +1,19 @@
+//! A guard deliberately held across a write, silenced with a reasoned
+//! allow (the real tree does this in `util/log.rs`, where the lock
+//! exists to make the write atomic).  Must produce no findings.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+pub struct Atomic {
+    sink: Mutex<u64>,
+}
+
+impl Atomic {
+    pub fn send(&self, stream: &mut TcpStream) {
+        let n = self.sink.lock().unwrap();
+        // analyze: allow(lock-across-blocking, "the sink lock exists to make this write atomic")
+        stream.write_all(&n.to_le_bytes()).ok();
+    }
+}

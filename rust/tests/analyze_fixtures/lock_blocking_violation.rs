@@ -1,0 +1,26 @@
+//! Seeded violations: a guard held across socket I/O, and a Condvar
+//! wait that consumes one lock while a second stays held.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+
+pub struct Reporter {
+    metrics: Mutex<u64>,
+    stats: Mutex<u64>,
+    slot: Mutex<u64>,
+}
+
+impl Reporter {
+    pub fn report(&self, stream: &mut TcpStream) {
+        let n = self.metrics.lock().unwrap();
+        stream.write_all(&n.to_le_bytes()).ok();
+    }
+
+    pub fn wait_wrong(&self, cv: &Condvar) {
+        let stats = self.stats.lock().unwrap();
+        let slot = self.slot.lock().unwrap();
+        let _g = cv.wait(stats).unwrap();
+        drop(slot);
+    }
+}

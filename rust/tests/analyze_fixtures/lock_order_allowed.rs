@@ -1,0 +1,26 @@
+//! The same inversion shape as `lock_order_violation.rs`, silenced
+//! with reasoned allows on both nested acquisitions.  Must produce no
+//! findings (and no stale-allow: both annotations match).
+
+use std::sync::Mutex;
+
+pub struct Pair {
+    left: Mutex<u32>,
+    right: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn forward(&self) {
+        let l = self.left.lock().unwrap();
+        // analyze: allow(lock-order, "forward and backward are serialized by the caller")
+        let r = self.right.lock().unwrap();
+        let _ = (*l, *r);
+    }
+
+    pub fn backward(&self) {
+        let r = self.right.lock().unwrap();
+        // analyze: allow(lock-order, "forward and backward are serialized by the caller")
+        let l = self.left.lock().unwrap();
+        let _ = (*l, *r);
+    }
+}

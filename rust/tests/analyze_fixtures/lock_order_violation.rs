@@ -1,0 +1,36 @@
+//! Seeded violation: the two-lock inversion shape from the real
+//! JobQueue (`inner` + `take` condvar lock) — one path locks `inner`
+//! then `take`, the other locks `take` then `inner` — plus a
+//! re-entrant self-acquisition.  Not compiled; lexed by the analyzer
+//! tests.
+
+use std::sync::Mutex;
+
+pub struct Queue {
+    inner: Mutex<Vec<u32>>,
+    take: Mutex<u32>,
+    gate: Mutex<()>,
+}
+
+impl Queue {
+    pub fn push(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut take = self.take.lock().unwrap();
+        *take += 1;
+        inner.push(*take);
+    }
+
+    pub fn pop(&self) {
+        let mut take = self.take.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap();
+        inner.pop();
+        *take -= 1;
+    }
+
+    pub fn reenter(&self) {
+        let first = self.gate.lock().unwrap();
+        let second = self.gate.lock().unwrap();
+        drop(second);
+        drop(first);
+    }
+}

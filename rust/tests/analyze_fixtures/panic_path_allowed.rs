@@ -1,0 +1,15 @@
+//! The same panic-path shapes, each silenced with a reasoned allow.
+//! Must produce no findings.
+// analyze: request-path
+
+pub fn parse_len(header: &str) -> usize {
+    // analyze: allow(panic-path, "fixture: the caller pre-validates the header shape")
+    let len = header.split(':').nth(1).unwrap();
+    // analyze: allow(panic-path, "fixture: the caller pre-validates the header shape")
+    len.trim().parse().expect("length")
+}
+
+pub fn first_byte(buf: &[u8]) -> u8 {
+    // analyze: allow(unchecked-index, "fixture: the caller guarantees a non-empty buffer")
+    buf[0]
+}

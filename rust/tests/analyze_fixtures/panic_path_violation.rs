@@ -1,0 +1,16 @@
+//! Seeded violations: panics on the request path (opted in via the
+//! marker below rather than living under `server/`).
+// analyze: request-path
+
+pub fn parse_len(header: &str) -> usize {
+    let len = header.split(':').nth(1).unwrap();
+    len.trim().parse().expect("length")
+}
+
+pub fn first_byte(buf: &[u8]) -> u8 {
+    buf[0]
+}
+
+pub fn fail(reason: &str) -> u8 {
+    panic!("bad request: {reason}");
+}

@@ -1,0 +1,7 @@
+//! Seeded violation: an allow annotation that no longer suppresses
+//! anything (the unwrap it excused was rewritten away).
+
+// analyze: allow(panic-path, "this unwrap was removed; the allow outlived it")
+pub fn safe(x: Option<u32>) -> u32 {
+    x.unwrap_or(0)
+}

@@ -1,0 +1,90 @@
+//! The analyzer is itself under test: every seeded fixture violation
+//! under `tests/analyze_fixtures/` must produce its exact diagnostic,
+//! every allow-annotated twin must be silent, and the real source tree
+//! must come out clean (this is the same invariant CI enforces with
+//! `sparsefw analyze --deny-warnings`).
+
+use std::path::Path;
+
+use sparsefw::analyze::{analyze_tree, AnalyzeConfig};
+
+fn fixtures_cfg() -> AnalyzeConfig {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/analyze_fixtures");
+    let mut cfg = AnalyzeConfig::new(root);
+    // fixtures have no sibling tests/ + benches/ and no registry of
+    // their own
+    cfg.check_registry = false;
+    cfg
+}
+
+#[test]
+fn seeded_fixtures_produce_exact_diagnostics() {
+    let findings = analyze_tree(&fixtures_cfg()).unwrap();
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    let expected = [
+        "codec_mismatch.rs:14: warning[codec-fields]: to_json writes key `revision` \
+         but the paired from_json never reads it",
+        "lock_blocking_violation.rs:17: warning[lock-across-blocking]: .write_all() \
+         while holding lock `Reporter.metrics` (acquired line 16)",
+        "lock_blocking_violation.rs:23: warning[lock-across-blocking]: Condvar wait \
+         consumes lock `Reporter.stats` while also holding `Reporter.slot` \
+         (acquired line 22)",
+        "lock_order_violation.rs:18: warning[lock-order]: lock-order inversion: \
+         `Queue.take` acquired while holding `Queue.inner`, but another site orders \
+         them the other way (cycle in the lock-acquisition graph)",
+        "lock_order_violation.rs:25: warning[lock-order]: lock-order inversion: \
+         `Queue.inner` acquired while holding `Queue.take`, but another site orders \
+         them the other way (cycle in the lock-acquisition graph)",
+        "lock_order_violation.rs:32: warning[lock-order]: lock `Queue.gate` acquired \
+         while already held (std::Mutex is not reentrant; this deadlocks)",
+        "panic_path_violation.rs:6: warning[panic-path]: .unwrap() in request-serving \
+         code (return an error or recover instead)",
+        "panic_path_violation.rs:7: warning[panic-path]: .expect() in request-serving \
+         code (return an error or recover instead)",
+        "panic_path_violation.rs:11: warning[unchecked-index]: unchecked indexing in \
+         request-serving code (use .get()/.get_mut() or slice patterns)",
+        "panic_path_violation.rs:15: warning[panic-path]: panic! in request-serving \
+         code",
+        "stale_allow.rs:4: warning[stale-allow]: allow(panic-path) no longer matches \
+         any finding; remove it",
+    ];
+    for e in expected {
+        assert!(
+            rendered.iter().any(|r| r == e),
+            "missing diagnostic {e:?}\ngot:\n{}",
+            rendered.join("\n")
+        );
+    }
+    assert_eq!(
+        rendered.len(),
+        expected.len(),
+        "unexpected extra findings:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn allow_annotated_twins_are_silent() {
+    let findings = analyze_tree(&fixtures_cfg()).unwrap();
+    for f in &findings {
+        assert!(
+            !f.file.contains("_allowed"),
+            "allow-annotated fixture still fires: {f}"
+        );
+    }
+}
+
+#[test]
+fn the_source_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = analyze_tree(&AnalyzeConfig::new(root)).unwrap();
+    assert!(
+        findings.is_empty(),
+        "sparsefw analyze found:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

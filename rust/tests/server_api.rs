@@ -15,7 +15,10 @@ use sparsefw::data::corpus;
 use sparsefw::data::TokenBin;
 use sparsefw::model::testutil::{random_model, tiny_cfg};
 use sparsefw::model::Gpt;
-use sparsefw::pruner::{FwEngine, Method, RefinePass, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::pruner::{
+    FwEngine, LayerCtx, LayerPruneOutput, LayerPruner, Method, MethodRegistration,
+    MethodRegistry, RefinePass, SparseFwConfig, SparsityPattern, Warmstart,
+};
 use sparsefw::server::{Client, Server, ServerConfig, ServerHandle};
 
 fn shared_model() -> Gpt {
@@ -405,6 +408,57 @@ fn methods_endpoint_lists_the_registry() {
         .find(|m| m.at(&["name"]).as_str() == Some("sparsegpt"))
         .unwrap();
     assert_eq!(sgpt.at(&["caps", "reconstructs_weights"]).as_bool(), Some(true));
+    handle.shutdown();
+}
+
+/// A registered method that always panics mid-layer — the open method
+/// API means registered pruners are open code, and a panic in one must
+/// fail *that job*, not unwind the worker or poison the job registry.
+struct PanickingPruner;
+
+impl LayerPruner for PanickingPruner {
+    fn name(&self) -> &str {
+        "panic-bomb"
+    }
+
+    fn prune_layer(&self, _ctx: &LayerCtx) -> anyhow::Result<LayerPruneOutput> {
+        panic!("injected test panic from panic-bomb")
+    }
+}
+
+#[test]
+fn panicking_job_fails_cleanly_and_server_keeps_serving() {
+    MethodRegistry::global().register(MethodRegistration::new(
+        "panic-bomb",
+        || Method::from_pruner(PanickingPruner),
+        |_| Ok(Method::from_pruner(PanickingPruner)),
+    ));
+    let (handle, client) = spawn_server(1);
+
+    let id = client
+        .submit(
+            &JobSpec { method: Method::from_pruner(PanickingPruner), ..base_spec() },
+            0,
+        )
+        .unwrap();
+    let fin = client.wait(id, WAIT).unwrap();
+    assert_eq!(fin.at(&["state"]).as_str(), Some("failed"), "{fin:?}");
+    let err = fin.at(&["error"]).as_str().unwrap();
+    assert!(err.contains("worker panicked"), "{err}");
+    assert!(err.contains("injected test panic"), "{err}");
+
+    // the same (sole) worker must survive the panic and run the next
+    // job to completion — a wedged worker would time this wait out
+    let id2 = client.submit(&base_spec(), 0).unwrap();
+    let fin2 = client.wait(id2, WAIT).unwrap();
+    assert_eq!(fin2.at(&["state"]).as_str(), Some("done"), "{fin2:?}");
+
+    // and the registry mutexes stayed usable (no poisoning): listings
+    // and metrics still answer, with both outcomes recorded
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at(&["jobs", "failed"]).as_usize(), Some(1), "{m:?}");
+    assert_eq!(m.at(&["jobs", "done"]).as_usize(), Some(1), "{m:?}");
+    assert_eq!(m.at(&["jobs_served"]).as_usize(), Some(2), "{m:?}");
     handle.shutdown();
 }
 

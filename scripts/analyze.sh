@@ -1,0 +1,67 @@
+#!/usr/bin/env bash
+# Static analysis + sanitizer lanes, one entry point:
+#
+#   scripts/analyze.sh       # from the repo root (or anywhere)
+#
+#   1. `sparsefw analyze --deny-warnings` — the project-invariant lints
+#      (lock ordering, panic paths, registry/codec consistency) over
+#      rust/src.  Always runs; any finding fails the script.
+#   2. ThreadSanitizer lane — the threaded server/pool/queue tests with
+#      `-Z sanitizer=thread`.  Needs a nightly toolchain with the
+#      rust-src component (TSan rebuilds std); skipped with a named
+#      reason otherwise.
+#   3. Miri lane — the util/tensor unit tests under Miri's UB checker.
+#      Needs the nightly miri component; skipped with a named reason
+#      otherwise.
+#
+# The skips are deliberate: the lanes are best-effort hardening wherever
+# the toolchain allows, while `scripts/ci.sh` (tier 1, which runs lane 1
+# too) stays runnable on a stock stable toolchain.
+set -euo pipefail
+
+REPO="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$REPO/rust"
+
+echo "== sparsefw analyze --deny-warnings (project lints) =="
+cargo build --release --quiet
+"$REPO/rust/target/release/sparsefw" analyze --deny-warnings
+
+have_nightly() {
+    command -v rustup >/dev/null 2>&1 \
+        && rustup toolchain list 2>/dev/null | grep -q '^nightly'
+}
+
+nightly_component() {
+    rustup component list --toolchain nightly 2>/dev/null \
+        | grep -q "^$1.*(installed)"
+}
+
+echo "== ThreadSanitizer lane (server / pool / queue tests) =="
+if ! have_nightly; then
+    echo "   SKIPPED: no nightly toolchain (TSan needs -Z sanitizer=thread)"
+elif ! nightly_component "rust-src"; then
+    echo "   SKIPPED: nightly rust-src component missing (TSan rebuilds std via -Z build-std)"
+else
+    HOST="$(rustc -vV | sed -n 's/^host: //p')"
+    RUSTFLAGS="-Z sanitizer=thread" RUSTDOCFLAGS="-Z sanitizer=thread" \
+        cargo +nightly test -Z build-std --target "$HOST" \
+        --lib -- server:: util::pool:: util::sync::
+    RUSTFLAGS="-Z sanitizer=thread" RUSTDOCFLAGS="-Z sanitizer=thread" \
+        cargo +nightly test -Z build-std --target "$HOST" \
+        --test server_api
+    echo "   TSan lane OK"
+fi
+
+echo "== Miri lane (util / tensor unit tests) =="
+if ! have_nightly; then
+    echo "   SKIPPED: no nightly toolchain (Miri is nightly-only)"
+elif ! nightly_component "miri"; then
+    echo "   SKIPPED: nightly miri component missing (rustup +nightly component add miri)"
+else
+    # the server tests do real socket I/O, which Miri does not model;
+    # scope Miri to the pure-compute core
+    cargo +nightly miri test --lib -- util::json:: util::prng:: tensor::
+    echo "   Miri lane OK"
+fi
+
+echo "analyze.sh OK"

@@ -14,10 +14,13 @@ cd "$REPO/rust"
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+echo "== cargo test -q (with debug-invariants asserts) =="
+cargo test -q --features debug-invariants
 
 BIN="$REPO/rust/target/release/sparsefw"
+
+echo "== sparsefw analyze --deny-warnings (project lints) =="
+"$BIN" analyze --deny-warnings
 
 echo "== server smoke test (serve --demo on an ephemeral port) =="
 SERVE_LOG="$(mktemp)"
