@@ -1,0 +1,147 @@
+//! Telemetry overhead microbench: proves the span tracer honours its
+//! "free when off" contract on the FW hot path.
+//!
+//! Three layer-level lanes over an identical `run_layer` workload:
+//!
+//!   * `layer/untraced`       — no sinks, `trace_every = 0` (the
+//!                              production default): the baseline.
+//!   * `layer/disabled-spans` — same workload wrapped in the spans the
+//!                              coordinator emits per layer, with NO
+//!                              sink installed.  The `span!` macro must
+//!                              reduce to one relaxed atomic load; the
+//!                              budget is ≤ 2% over baseline.
+//!   * `layer/traced`         — a ring sink installed, a correlation ID
+//!                              set, and `trace_every = 10` convergence
+//!                              probing: the cost a user opts into with
+//!                              `--trace-out` / `GET /jobs/:id/trace`.
+//!
+//! Plus per-span open/close micro lanes (sink off vs ring sink on).
+//! The disabled-path overhead is written to `BENCH_trace.json`
+//! (`overhead/disabled-spans-pct` sample, mean = fractional overhead
+//! encoded as nanoseconds-per-percent for the JSON schema, see the
+//! printed summary for the human-readable verdict).  The budget is
+//! reported, not hard-asserted — wall-clock noise on shared CI runners
+//! makes a 2% assertion flaky; `scripts/ci.sh` archives the JSON so
+//! the trajectory is reviewable per commit.
+//!
+//!   cargo bench --bench trace_overhead
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparsefw::pruner::mask::SparsityPattern;
+use sparsefw::pruner::sparsefw::{run_layer, NativeKernels, SparseFwConfig};
+use sparsefw::tensor::{matmul_a_bt, Mat};
+use sparsefw::util::prng::Xoshiro256;
+use sparsefw::util::telemetry::{self, RingSink, TraceSink};
+
+const SHAPE: (usize, usize) = (128, 256);
+const ITERS: usize = 60;
+const SPANS_PER_RUN: usize = 1024;
+
+fn main() {
+    let (dout, din) = SHAPE;
+    let mut rng = Xoshiro256::new(7);
+    let w = Mat::gaussian(dout, din, 1.0, &mut rng);
+    let x = Mat::gaussian(din, 512, 1.0, &mut rng);
+    let g = matmul_a_bt(&x, &x);
+    let pattern = SparsityPattern::Unstructured { sparsity: 0.5 };
+    let cfg = SparseFwConfig { iters: ITERS, alpha: 0.9, ..Default::default() };
+    let traced_cfg = SparseFwConfig { trace_every: 10, ..cfg.clone() };
+    let tag = format!("{dout}x{din}@i{ITERS}");
+
+    let mut b = sparsefw::bench::Bencher::new("trace_overhead");
+
+    // -- per-span open/close micro-cost ------------------------------
+    // sink off: the guard is a single relaxed load + an early return
+    let off = b
+        .bench(&format!("span/off/x{SPANS_PER_RUN}"), || {
+            for i in 0..SPANS_PER_RUN {
+                let _sp = sparsefw::span!("fw", layer = i);
+                std::hint::black_box(i);
+            }
+        })
+        .mean;
+    b.record("span/off/each", off / SPANS_PER_RUN as u32, SPANS_PER_RUN);
+
+    // ring sink on, under a correlation (the server's steady state)
+    let ring: Arc<RingSink> = Arc::new(RingSink::new(4096, 8));
+    let sink: Arc<dyn TraceSink> = ring.clone();
+    telemetry::add_sink(sink.clone());
+    let corr = telemetry::gen_corr_id();
+    let on = {
+        let _corr = telemetry::with_correlation(&corr);
+        b.bench(&format!("span/ring/x{SPANS_PER_RUN}"), || {
+            for i in 0..SPANS_PER_RUN {
+                let _sp = sparsefw::span!("fw", layer = i);
+                std::hint::black_box(i);
+            }
+        })
+        .mean
+    };
+    b.record("span/ring/each", on / SPANS_PER_RUN as u32, SPANS_PER_RUN);
+    telemetry::remove_sink(&sink);
+
+    // -- layer-level lanes -------------------------------------------
+    let untraced = b
+        .bench(&format!("layer/untraced/{tag}"), || {
+            let r = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+            std::hint::black_box(r.final_obj);
+        })
+        .mean;
+
+    // the spans the coordinator wraps a layer in, with tracing off
+    let disabled = b
+        .bench(&format!("layer/disabled-spans/{tag}"), || {
+            let _sp = sparsefw::span!("fw", layer = 0);
+            let r = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+            std::hint::black_box(r.final_obj);
+        })
+        .mean;
+
+    // full fidelity: sink + correlation + convergence certificate
+    telemetry::add_sink(sink.clone());
+    let traced = {
+        let _corr = telemetry::with_correlation(&corr);
+        b.bench(&format!("layer/traced/{tag}"), || {
+            let _sp = sparsefw::span!("fw", layer = 0);
+            let r = run_layer(&NativeKernels, &w, &g, &pattern, &traced_cfg).unwrap();
+            std::hint::black_box(r.final_obj);
+        })
+        .mean
+    };
+    telemetry::remove_sink(&sink);
+
+    let pct = |base: Duration, probe: Duration| -> f64 {
+        if base.as_secs_f64() <= 0.0 {
+            return 0.0;
+        }
+        (probe.as_secs_f64() - base.as_secs_f64()) / base.as_secs_f64() * 100.0
+    };
+    let disabled_pct = pct(untraced, disabled);
+    let traced_pct = pct(untraced, traced);
+
+    // encode the percentages as pseudo-durations so they travel in the
+    // same JSON schema as every other sample (1 ns == 0.001%)
+    let as_dur = |p: f64| Duration::from_nanos((p.max(0.0) * 1000.0) as u64);
+    b.record("overhead/disabled-spans-pct", as_dur(disabled_pct), 1);
+    b.record("overhead/traced-pct", as_dur(traced_pct), 1);
+
+    b.report();
+    println!(
+        "\n  span open/close: {:.0} ns off, {:.0} ns with ring sink",
+        off.as_secs_f64() * 1e9 / SPANS_PER_RUN as f64,
+        on.as_secs_f64() * 1e9 / SPANS_PER_RUN as f64,
+    );
+    println!(
+        "  disabled-tracing overhead on the FW layer: {disabled_pct:+.2}% \
+         (budget ≤ 2%) — {}",
+        if disabled_pct <= 2.0 { "within budget" } else { "OVER BUDGET" }
+    );
+    println!("  enabled-tracing (ring sink + trace_every=10): {traced_pct:+.2}%");
+
+    let path = std::env::var("SPARSEFW_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_trace.json".to_string());
+    b.report_json(&path).expect("writing bench json");
+    println!("\nbench json written to {path}");
+}

@@ -16,6 +16,14 @@
 //! and in the USAGE text in `src/main.rs`.  These findings point at
 //! the surface that's missing the method and cannot be `allow`ed —
 //! coverage gaps get fixed, not excused.
+//!
+//! `metrics-coverage`: every metric in
+//! [`crate::server::METRIC_CATALOG`] (the list `GET
+//! /metrics?format=prometheus` renders) must be documented in the
+//! USAGE metric catalog in `src/main.rs` — operators discover metrics
+//! from the USAGE table, so an undocumented metric is invisible and a
+//! renamed one leaves the docs lying.  Like `registry-coverage`, these
+//! findings cannot be `allow`ed.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -215,6 +223,37 @@ pub fn check_registry(src_root: &Path, out: &mut Vec<Finding>) {
                     ),
                 });
             }
+        }
+    }
+}
+
+/// Every metric in [`crate::server::METRIC_CATALOG`] must appear in
+/// `src/main.rs` (the USAGE metric catalog) — the Prometheus surface
+/// and the user-facing docs must not drift.
+pub fn check_metrics_usage(src_root: &Path, out: &mut Vec<Finding>) {
+    let label = "src/main.rs (USAGE)";
+    let root = src_root.parent().unwrap_or(src_root);
+    let path = root.join("src/main.rs");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        out.push(Finding {
+            file: label.to_string(),
+            line: 0,
+            lint: "metrics-coverage".into(),
+            message: format!("surface file missing or unreadable: {}", path.display()),
+        });
+        return;
+    };
+    for &(name, kind, _) in crate::server::METRIC_CATALOG {
+        if !text.contains(name) {
+            out.push(Finding {
+                file: label.to_string(),
+                line: 0,
+                lint: "metrics-coverage".into(),
+                message: format!(
+                    "{kind} metric `{name}` (server METRIC_CATALOG) is not \
+                     documented in the USAGE metric catalog"
+                ),
+            });
         }
     }
 }

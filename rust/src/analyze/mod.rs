@@ -16,6 +16,7 @@
 //! | `panic-path` | panic paths | `unwrap()` / `expect()` / `panic!`-family macros in request-serving code |
 //! | `unchecked-index` | panic paths | `x[i]` indexing in request-serving code |
 //! | `registry-coverage` | consistency | a registered method missing from the registry test, the `table1_methods` bench, or USAGE |
+//! | `metrics-coverage` | consistency | a metric in [`crate::server::METRIC_CATALOG`] missing from the USAGE metric catalog |
 //! | `codec-fields` | consistency | a `to_json`/`from_json` pair whose key sets differ |
 //! | `stale-allow` | meta | an `// analyze: allow(..)` annotation that no longer suppresses anything |
 //!
@@ -197,6 +198,7 @@ pub fn analyze_tree(cfg: &AnalyzeConfig) -> Result<Vec<Finding>> {
     }
     if cfg.check_registry {
         consistency::check_registry(&cfg.src_root, &mut findings);
+        consistency::check_metrics_usage(&cfg.src_root, &mut findings);
     }
 
     let findings = apply_allows(&sources, findings);

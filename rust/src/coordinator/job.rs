@@ -637,6 +637,7 @@ impl PruneSession {
             let model = &self.models[name];
             let train = self.train.as_ref().unwrap();
             let t0 = std::time::Instant::now();
+            let _sp = crate::span!("calib", model = name, samples = samples, seed = seed);
             let calib = Calibration::collect(model, train, samples, seed)?;
             crate::info!(
                 "calibrated {name} ({samples} samples, seed {seed}) in {:.1}s",
@@ -664,6 +665,7 @@ impl PruneSession {
             self.ensure_train()?;
             let model = &self.models[name];
             let train = self.train.as_ref().unwrap();
+            let _sp = crate::span!("calib", model = name, samples = samples, seed = seed);
             let seqs = train.sample(model.cfg.seq_len, samples, seed);
             let prefix = EmbedPrefix::new(model, &seqs)?;
             self.evict_embeds(self.calib_cap.saturating_sub(1));
@@ -753,6 +755,9 @@ impl PruneSession {
         let mut pruned_sparsity = None;
         let mut eval = None;
         if let Some(espec) = spec.eval {
+            // materializing the masked model + eval is the job's I/O
+            // tail: count it in the io phase
+            let _sp = crate::span!("io", model = &spec.model);
             let pruned = {
                 let model = &self.models[&spec.model];
                 prune.apply(model)?
@@ -1105,9 +1110,15 @@ mod tests {
         let spec = JobSpec { trace_every: 10, ..base_spec() };
         let res = s.execute(&spec).unwrap();
         assert!(!res.prune.traces.is_empty());
+        // tracing also records per-layer convergence certificates
+        assert_eq!(res.prune.convergence.len(), res.prune.masks.len());
+        for cv in res.prune.convergence.values() {
+            assert!(!cv.is_empty());
+        }
         // without the override, no traces
         let res = s.execute(&base_spec()).unwrap();
         assert!(res.prune.traces.is_empty());
+        assert!(res.prune.convergence.is_empty());
     }
 
     #[test]

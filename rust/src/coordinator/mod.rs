@@ -48,12 +48,13 @@ use crate::config::Backend;
 use crate::model::{Gpt, LayerInfo};
 use crate::pruner::sparsefw::FwKernels;
 use crate::pruner::{
-    refine, FwTrace, LayerCtx, LayerPruneOutput, Method, NativeKernels, RefinePass,
-    SparsityPattern,
+    refine, ConvergenceTrace, FwTrace, LayerCtx, LayerPruneOutput, Method, NativeKernels,
+    RefinePass, SparsityPattern,
 };
 use crate::runtime::{PjrtKernels, PjrtRuntime};
 use crate::tensor::Mat;
 use crate::util::pool::parallel_map;
+use crate::util::telemetry::{SpanGuard, TraceContext};
 
 /// Calibration-memory accounting of one staged ([`run_blocks`]) run.
 #[derive(Clone, Copy, Debug)]
@@ -82,6 +83,9 @@ pub struct PruneResult {
     pub warm_objs: BTreeMap<String, f64>,
     /// Optimization traces (when tracing was enabled) — Fig 4.
     pub traces: BTreeMap<String, FwTrace>,
+    /// Per-layer convergence certificates (objective / duality gap /
+    /// step size / refresh drift), recorded when tracing was enabled.
+    pub convergence: BTreeMap<String, ConvergenceTrace>,
     pub wall_seconds: f64,
     /// Σ FW iterations executed across layers (0 for greedy methods) —
     /// with `wall_seconds` this gives the server's iterations/sec.
@@ -155,10 +159,19 @@ impl<'a> LayerRun<'a> {
             layer,
             trace_every: self.trace_every,
         };
-        let mut out = self
-            .method
-            .prune_layer(&ctx)
-            .with_context(|| format!("method {} on layer {layer}", self.method.label()))?;
+        let mut out = {
+            let _sp = crate::span!("fw", layer = layer, method = self.method.name());
+            self.method
+                .prune_layer(&ctx)
+                .with_context(|| format!("method {} on layer {layer}", self.method.label()))?
+        };
+        // no span for a no-op refine stack: empty "refine" phases would
+        // pollute the per-phase latency histograms
+        let _sp = if self.refine.is_empty() {
+            SpanGuard::disabled()
+        } else {
+            crate::span!("refine", layer = layer)
+        };
         refine::apply_refine(self.refine, kernels, w, g, pattern, &mut out)
             .with_context(|| format!("refining layer {layer}"))?;
         Ok(out)
@@ -202,7 +215,11 @@ pub(crate) fn run_layers(
             // LPT dispatch: hand the pool the big mlp_down jobs first so
             // the schedule tails off with short jobs (schedule::lpt_order)
             let order = schedule::lpt_order(&layers);
+            // thread-locals don't cross into pool workers: re-enter the
+            // dispatching thread's trace context (corr ID + parent span)
+            let tctx = TraceContext::capture();
             parallel_map(total, |k| {
+                let _tg = tctx.enter();
                 let i = order[k];
                 let l = &layers[i];
                 let w = model.mat(&l.name);
@@ -222,9 +239,9 @@ pub(crate) fn run_layers(
             for (i, l) in layers.iter().enumerate() {
                 let w = model.mat(&l.name);
                 let g = calib.try_gram(&l.name)?;
-                crate::debuglog!("pjrt-pruning layer {} ({}x{})", l.name, l.d_out, l.d_in);
                 // abort at the first failure: the remaining sequential
-                // PJRT work would be discarded anyway
+                // PJRT work would be discarded anyway (progress is
+                // visible through the per-layer "fw" spans)
                 let out = run.prune_one(&kernels, &l.name, w, g, &run.patterns[i])?;
                 emit(l, &out);
                 outputs.push(Ok((l.clone(), out)));
@@ -325,11 +342,16 @@ pub(crate) fn run_blocks(
         match policy {
             CalibPolicy::Dense => unreachable!("checked above"),
             CalibPolicy::PropagateBlock => {
-                let grams = state.block_grams(&work, bi)?;
+                let grams = {
+                    let _sp = crate::span!("gram", block = bi);
+                    state.block_grams(&work, bi)?
+                };
+                let tctx = TraceContext::capture();
                 let outs: Vec<Result<LayerPruneOutput>> = match &pjrt_kernels {
                     // intra-block parallelism: the four layers share the
                     // same inputs, so they stay independent given grams
                     None => parallel_map(4, |j| {
+                        let _tg = tctx.enter();
                         let l = &block_layers[j];
                         let g = grams.gram(&l.name)?;
                         run.prune_one(
@@ -367,7 +389,10 @@ pub(crate) fn run_blocks(
             CalibPolicy::PropagateLayer => {
                 for (j, slot) in BlockSlot::ALL.iter().enumerate() {
                     let l = &block_layers[j];
-                    let grams = state.layer_gram(&work, bi, *slot)?;
+                    let grams = {
+                        let _sp = crate::span!("gram", layer = &l.name);
+                        state.layer_gram(&work, bi, *slot)?
+                    };
                     let g = grams.gram(&l.name)?;
                     let out = match &pjrt_kernels {
                         None => run.prune_one(
@@ -396,6 +421,9 @@ pub(crate) fn run_blocks(
         // sees; after the last block there is no consumer, so skip the
         // (full re-forward) advance
         if bi + 1 < model.cfg.n_layers {
+            // re-forwarding hiddens through the masked block is
+            // calibration work: count it in the calib phase
+            let _sp = crate::span!("calib", advance_block = bi);
             state.advance(&work, bi)?;
         }
     }
@@ -439,6 +467,7 @@ fn collect_outputs(
         layer_objs: BTreeMap::new(),
         warm_objs: BTreeMap::new(),
         traces: BTreeMap::new(),
+        convergence: BTreeMap::new(),
         wall_seconds: 0.0,
         fw_iters: 0,
         refine_obj_delta: None,
@@ -459,6 +488,9 @@ fn collect_outputs(
         }
         if let Some(tr) = o.trace {
             result.traces.insert(l.name.clone(), tr);
+        }
+        if let Some(cv) = o.convergence {
+            result.convergence.insert(l.name.clone(), cv);
         }
         result.masks.insert(l.name, o.mask);
     }

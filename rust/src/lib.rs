@@ -69,7 +69,8 @@
 //!         let obj = ctx.kernels.objective(ctx.w, &mask, ctx.g)?;
 //!         Ok(LayerPruneOutput {
 //!             mask, obj, warm_obj: None, new_weights: None,
-//!             trace: None, fw_iters: 0, refine_obj_delta: None,
+//!             trace: None, convergence: None, fw_iters: 0,
+//!             refine_obj_delta: None,
 //!         })
 //!     }
 //! }
@@ -144,20 +145,55 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! ## Observability: spans, certificates, metrics
+//!
+//! Every layer of that stack reports through one telemetry spine
+//! ([`util::telemetry`]), threaded end-to-end by a per-job
+//! **correlation ID** (client flag → `X-Sparsefw-Corr-Id` header →
+//! queue record → worker thread-local → every span and log line):
+//!
+//! ```text
+//! span!("job")                                 server::worker_loop
+//!   ├─ span!("calib") / span!("gram")          coordinator (calibration, grams)
+//!   ├─ span!("fw", layer = …)  ×N              run_layers / run_blocks, parallel
+//!   ├─ span!("refine")                         refinement post-passes
+//!   └─ span!("io")                             eval / artifact I/O
+//!        │ TraceEvent{span, parent, corr, dur_us, …}
+//!        ▼ fan-out to installed TraceSinks
+//!   RingSink    → GET /jobs/:id/trace, `sparsefw trace --job ID`
+//!   NdjsonSink  → --trace-out trace.ndjson (one JSON object per span)
+//!   StderrSink  → SPARSEFW_TRACE=stderr pretty-printer
+//!   PhaseSink   → per-phase latency histograms in /metrics
+//! ```
+//!
+//! Span guards are ~one relaxed atomic load when no sink is installed
+//! (`benches/trace_overhead.rs` holds the FW hot loop's disabled-path
+//! overhead to a ≤2% budget).  The FW solver additionally records
+//! per-iteration **convergence certificates** — objective, duality gap
+//! (gap(Mₜ) ≥ f(Mₜ) − f(M*)), step size, refresh drift — as a
+//! [`pruner::ConvergenceTrace`] per layer (`--trace-every N`), carried
+//! through `PruneResult` into job summaries and rendered by `sparsefw
+//! trace` as per-layer gap-decay tables.  The server exports counters,
+//! gauges, and latency histograms (queue wait, job wall, per-phase)
+//! from [`server::METRIC_CATALOG`] as JSON (`GET /metrics`) and
+//! Prometheus text (`GET /metrics?format=prometheus`).
+//!
 //! ## Project invariants are linted, not assumed
 //!
 //! That server stack is plain `std` threads and locks, so the crate
 //! carries its own static-analysis pass ([`analyze`], `sparsefw
 //! analyze`): token-level lints for lock-ordering cycles, guards held
 //! across blocking calls, panics on request-serving paths, and
-//! registry/codec cross-surface drift, with an
-//! `// analyze: allow(<lint>, "<reason>")` escape hatch whose unused
-//! entries are themselves flagged.  CI runs `sparsefw analyze
-//! --deny-warnings` (scripts/ci.sh), and `scripts/analyze.sh` adds
-//! ThreadSanitizer / Miri lanes where the toolchain supports them.
-//! Expensive runtime checks (FW maintained-state drift, queue
-//! state-machine transitions) sit behind the `debug-invariants` cargo
-//! feature, which the CI test lane enables.
+//! registry/codec/metrics cross-surface drift (every
+//! [`server::METRIC_CATALOG`] entry must appear in the USAGE metric
+//! catalog), with an `// analyze: allow(<lint>, "<reason>")` escape
+//! hatch whose unused entries are themselves flagged.  CI runs
+//! `sparsefw analyze --deny-warnings` (scripts/ci.sh), and
+//! `scripts/analyze.sh` adds ThreadSanitizer / Miri lanes where the
+//! toolchain supports them.  Expensive runtime checks (FW
+//! maintained-state drift, queue state-machine transitions) sit behind
+//! the `debug-invariants` cargo feature, which the CI test lane
+//! enables.
 
 pub mod analyze;
 pub mod bench;

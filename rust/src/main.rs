@@ -8,7 +8,8 @@
 //!   eval     [--model --masks file]
 //!   selfcheck                    — PJRT vs native numerical cross-check
 //!   analyze                      — project-invariant static analysis (lints)
-//!   serve    [--addr --workers --queue-cap --calib-cache --demo]
+//!   trace                        — render FW convergence certificates
+//!   serve    [--addr --workers --queue-cap --calib-cache --demo --trace-out]
 //!   submit / status / shutdown   — client side of a running server
 //!   report-table1 / report-table2 / report-fig2 / report-fig3 / report-fig4
 //!
@@ -58,16 +59,23 @@ USAGE: sparsefw <subcommand> [flags]
              [--refine swaps|update|swaps,update]
              [--spec job.json] [--save-spec job.json]
              [--out masks.safetensors] [--eval]
+             [--trace-every N] [--trace-out trace.ndjson]
+             [--result-out result.json]
   eval       --model M [--masks masks.safetensors] [--pjrt]
   selfcheck                       cross-check PJRT kernels vs native math
   analyze    [--src DIR] [--deny-warnings]
                                   run the project lints over the source
                                   tree (default DIR: src)
+  trace      --from result.json [--gap-threshold G]
+             --job ID --addr HOST:PORT
+                                  per-layer FW convergence certificate
+                                  tables (gap decay; layers whose final
+                                  duality gap exceeds G are flagged)
   serve      [--addr HOST:PORT] [--workers N] [--queue-cap N]
              [--calib-cache N] [--conn-threads N] [--history-cap N]
-             [--demo]
+             [--demo] [--trace-out trace.ndjson]
   submit     <prune flags…> --addr HOST:PORT [--priority N]
-             [--wait] [--stream]
+             [--wait] [--stream] [--corr-id ID]
   status     --addr HOST:PORT [--job ID]
   shutdown   --addr HOST:PORT [--drain]
   report-table1 | report-table2 | report-fig2 | report-fig3 | report-fig4
@@ -134,6 +142,8 @@ on.  Lint catalog:
     unchecked-index       x[i] indexing in request-serving code
     registry-coverage     a registered method missing from the registry
                           test, the table1_methods bench, or this USAGE
+    metrics-coverage      a metric in the server's METRIC_CATALOG
+                          missing from this USAGE's metric catalog
     codec-fields          a to_json/from_json pair whose key sets differ
     stale-allow           an allow annotation that suppresses nothing
 
@@ -159,6 +169,71 @@ GET /metrics exposes queue depth / cache hits / worker utilization.
 to completion, --stream follows live progress); port 0 in --addr
 picks an ephemeral port (printed as `listening on …`).  --demo serves
 a randomly-initialized tiny model without an artifacts workspace.
+
+OBSERVABILITY
+
+Tracing.  The whole pipeline emits nested spans (calib, gram, fw,
+refine, io, plus a per-job `job` span) through util::telemetry.  Sinks
+are pluggable and cheap to leave off — with no sink installed a span
+is one atomic load:
+
+    SPARSEFW_TRACE=stderr          pretty-print spans as they close
+    --trace-out trace.ndjson       mirror spans to NDJSON, one event
+                                   per line (prune and serve)
+    GET /jobs/:id/trace            the server's bounded in-memory ring,
+                                   sliced per job correlation ID
+
+Correlation IDs join the client, queue, worker, and engine: `submit`
+mints one (or takes --corr-id), sends it as the X-Sparsefw-Corr-Id
+header, the server stores it on the job record, and the worker
+executes under it — so every span and log line for one job carries the
+same ID end to end.  SPARSEFW_LOG=debug|info|warn|error sets log
+verbosity; lines are stamped with the current correlation ID.
+
+Convergence certificates.  --trace-every N records every Nth FW
+iteration's objective, duality gap, step size, and refresh drift into
+a per-layer ConvergenceTrace, attached to job summaries (and to
+--result-out result.json).  The FW duality gap certifies convergence:
+gap(M_t) >= f(M_t) - f(M*), so a small final gap is a proof of
+near-optimality, not a heuristic.  `sparsefw trace` renders the
+per-layer gap-decay table and flags layers whose final gap exceeds
+--gap-threshold (certificate failed: raise --iters for those layers).
+
+Metrics.  GET /metrics serves JSON; GET /metrics?format=prometheus
+serves the standard text exposition.  Histograms are fixed log-scale
+buckets (1ms..2min) with p50/p95/p99 in the JSON form.  Catalog:
+
+    sparsefw_jobs_submitted_total      counter    jobs accepted
+    sparsefw_jobs_done_total           counter    jobs succeeded
+    sparsefw_jobs_failed_total         counter    jobs errored/panicked
+    sparsefw_jobs_propagated_total     counter    staged-calibration jobs
+    sparsefw_calib_cache_hits_total    counter    calibration memo hits
+    sparsefw_calib_cache_misses_total  counter    calibration memo misses
+    sparsefw_fw_iters_total            counter    FW iterations executed
+    sparsefw_workers                   gauge      pruning worker threads
+    sparsefw_busy_workers              gauge      workers mid-job
+    sparsefw_queue_depth               gauge      queued jobs
+    sparsefw_uptime_seconds            gauge      seconds since bind
+    sparsefw_peak_gram_bytes           gauge      staged-gram high-water
+    sparsefw_queue_wait_seconds        histogram  submit -> start
+    sparsefw_job_wall_seconds          histogram  per-job wall time
+    sparsefw_phase_calib_seconds       histogram  calibration spans
+    sparsefw_phase_gram_seconds        histogram  gram assembly spans
+    sparsefw_phase_fw_seconds          histogram  per-layer FW spans
+    sparsefw_phase_refine_seconds      histogram  refine spans
+    sparsefw_phase_io_seconds          histogram  result/eval spans
+
+The catalog lives in server::METRIC_CATALOG; the metrics-coverage lint
+keeps this table and that list in sync.
+
+Examples:
+
+    sparsefw prune --model tiny --method sparsefw --trace-every 10 \\
+        --result-out r.json && sparsefw trace --from r.json
+    sparsefw serve --demo --trace-out /tmp/sfw.ndjson
+    sparsefw submit --model demo --addr HOST:PORT --wait \\
+        --trace-every 10 && sparsefw trace --job 1 --addr HOST:PORT
+    curl HOST:PORT/metrics?format=prometheus
 
 Flags everywhere: --artifacts DIR (default $SPARSEFW_ARTIFACTS or ./artifacts)
 ";
@@ -193,6 +268,8 @@ fn open_session(args: &Args) -> Result<PruneSession> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // SPARSEFW_TRACE=stderr installs the pretty-printing span sink
+    sparsefw::util::telemetry::install_from_env();
     match args.subcommand.as_deref() {
         None | Some("help") => {
             println!("{USAGE}");
@@ -204,6 +281,7 @@ fn run(args: &Args) -> Result<()> {
         Some("eval") => eval_cmd(args),
         Some("selfcheck") => selfcheck(args),
         Some("analyze") => analyze_cmd(args),
+        Some("trace") => trace_cmd(args),
         Some("serve") => serve(args),
         Some("submit") => submit(args),
         Some("status") => status_cmd(args),
@@ -312,6 +390,9 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         if let Some(p) = args.get("propagate") {
             spec.calib_policy = CalibPolicy::parse(p)?;
         }
+        if args.get("trace-every").is_some() {
+            spec.trace_every = args.get_usize("trace-every", spec.trace_every)?;
+        }
         if args.has("eval") && spec.eval.is_none() {
             spec.eval = Some(EvalSpec::default());
         }
@@ -333,7 +414,7 @@ fn build_spec(args: &Args) -> Result<JobSpec> {
         calib_samples: args.get_usize("samples", 128)?,
         calib_seed: args.get_u64("seed", 7)?,
         calib_policy: CalibPolicy::parse(args.get("propagate").unwrap_or("off"))?,
-        trace_every: 0,
+        trace_every: args.get_usize("trace-every", 0)?,
         refine: parse_refine(args)?,
         eval: if args.has("eval") { Some(eval_spec(args)?) } else { None },
     })
@@ -385,12 +466,27 @@ fn print_eval(model_name: &str, ev: &EvalSummary, sparsity: Option<f64>) {
 }
 
 fn prune(args: &Args) -> Result<()> {
+    use sparsefw::util::telemetry::{self, NdjsonSink, TraceSink};
     let mut session = open_session(args)?;
     let spec = build_spec(args)?;
     if let Some(path) = args.get("save-spec") {
         spec.save(Path::new(path))?;
         info!("job spec written to {path}");
     }
+
+    // one corr ID per CLI run, so --trace-out / SPARSEFW_TRACE output
+    // from this process joins with any server-side lines
+    let _corr = telemetry::with_correlation(&telemetry::gen_corr_id());
+    let trace_sink: Option<std::sync::Arc<dyn TraceSink>> = match args.get("trace-out") {
+        Some(path) => {
+            let s = NdjsonSink::create(Path::new(path))
+                .with_context(|| format!("opening --trace-out {path}"))?;
+            let s: std::sync::Arc<dyn TraceSink> = std::sync::Arc::new(s);
+            telemetry::add_sink(s.clone());
+            Some(s)
+        }
+        None => None,
+    };
 
     info!("executing job: {}", spec.label());
     session.on_progress(|e| {
@@ -429,8 +525,20 @@ fn prune(args: &Args) -> Result<()> {
         info!("masks written to {out}");
     }
 
+    if let Some(path) = args.get("result-out") {
+        // the same summary JSON a server job record carries — so
+        // `sparsefw trace --from FILE` reads both interchangeably
+        let summary = server::JobSummary::from_result(&result);
+        std::fs::write(path, sparsefw::util::json::to_string(&summary.to_json()))
+            .with_context(|| format!("writing --result-out {path}"))?;
+        info!("job summary written to {path}");
+    }
+
     if let Some(ev) = &result.eval {
         print_eval(&spec.model, ev, result.pruned_sparsity);
+    }
+    if let Some(s) = trace_sink {
+        telemetry::remove_sink(&s);
     }
     Ok(())
 }
@@ -475,6 +583,7 @@ fn serve(args: &Args) -> Result<()> {
         calib_cache_cap: args.get_usize("calib-cache", DEFAULT_CALIB_CACHE_CAP)?,
         conn_threads: args.get_usize("conn-threads", 8)?,
         job_history_cap: args.get_usize("history-cap", 1024)?,
+        trace_out: args.get("trace-out").map(String::from),
     };
     let sessions = if args.has("demo") {
         info!("serving the --demo in-memory model (no artifacts workspace)");
@@ -530,10 +639,17 @@ fn print_job_line(v: &Json) {
 /// Submit a job (same flags as `prune`) to a running server.
 fn submit(args: &Args) -> Result<()> {
     let spec = build_spec(args)?;
-    let client = client_from(args);
+    // tag the job with a correlation ID so client and server telemetry
+    // join; the server mints one anyway, but a client-supplied ID is
+    // the one the operator already has in their own logs
+    let corr = args
+        .get("corr-id")
+        .map(String::from)
+        .unwrap_or_else(sparsefw::util::telemetry::gen_corr_id);
+    let client = client_from(args).with_corr_id(corr.clone());
     let priority = args.get_f64("priority", 0.0)? as i64;
     let id = client.submit(&spec, priority)?;
-    info!("job {id} submitted to {} ({})", client.addr(), spec.label());
+    info!("job {id} submitted to {} ({}) [corr {corr}]", client.addr(), spec.label());
     if args.has("stream") {
         client.stream(id, |e| {
             info!(
@@ -656,6 +772,98 @@ fn analyze_cmd(args: &Args) -> Result<()> {
         bail!("analyze: {} warning(s) (--deny-warnings)", findings.len());
     } else {
         println!("analyze: {} warning(s)", findings.len());
+    }
+    Ok(())
+}
+
+/// `sparsefw trace` — render per-layer FW convergence certificates
+/// from a `--result-out` summary file (`--from result.json`) or a
+/// server job (`--job ID --addr HOST:PORT`).
+///
+/// The duality gap is a certificate: gap(M_t) ≥ f(M_t) − f(M*), so the
+/// final recorded gap upper-bounds how far each layer's relaxed mask is
+/// from the constrained optimum.  Layers whose final gap exceeds
+/// `--gap-threshold` are flagged.
+fn trace_cmd(args: &Args) -> Result<()> {
+    use sparsefw::pruner::ConvergenceTrace;
+    let threshold = args.get_f64("gap-threshold", 1e-3)?;
+    let payload: Json = if let Some(path) = args.get("from") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading --from {path}"))?;
+        sparsefw::util::json::parse(&text).with_context(|| format!("parsing {path}"))?
+    } else if let Some(id) = args.get("job") {
+        let id: u64 = id.parse().context("--job must be an integer id")?;
+        let client = client_from(args);
+        // span roll-up first: where did the job's wall time go?
+        if let Ok(tr) = client.trace(id) {
+            let events = tr.at(&["events"]).as_arr().unwrap_or(&[]).to_vec();
+            let mut phases: BTreeMap<String, (usize, f64)> = BTreeMap::new();
+            for e in &events {
+                let name = e.at(&["name"]).as_str().unwrap_or("?").to_string();
+                let secs = e.at(&["dur_us"]).as_f64().unwrap_or(0.0) / 1e6;
+                let entry = phases.entry(name).or_insert((0, 0.0));
+                entry.0 += 1;
+                entry.1 += secs;
+            }
+            println!(
+                "job {id}: {} trace span(s) [corr {}]",
+                events.len(),
+                tr.at(&["corr_id"]).as_str().unwrap_or("?"),
+            );
+            for (name, (n, secs)) in &phases {
+                println!("  {name:<8} x{n:<4} {secs:8.3}s total");
+            }
+        }
+        client.job(id)?
+    } else {
+        bail!("trace needs --from result.json or --job ID --addr HOST:PORT");
+    };
+
+    // "convergence" sits at the top level in a --result-out summary and
+    // under "result" in a GET /jobs/:id record
+    let conv = if payload.get("convergence").is_some() {
+        payload.at(&["convergence"])
+    } else {
+        payload.at(&["result", "convergence"])
+    };
+    let Json::Obj(layers) = conv else {
+        bail!(
+            "no convergence traces in the input — rerun the job with \
+             --trace-every N (N > 0) to record certificates"
+        );
+    };
+
+    println!(
+        "{:<20} {:>5} {:>12} {:>12} {:>12} {:>8}  cert",
+        "layer", "pts", "gap[first]", "gap[last]", "objective", "decay"
+    );
+    let mut flagged = Vec::new();
+    for (name, cj) in layers {
+        let cv = ConvergenceTrace::from_json(cj);
+        let first = cv.gap.first().copied().unwrap_or(0.0);
+        let last = cv.final_gap().unwrap_or(0.0);
+        let obj = cv.objective.last().copied().unwrap_or(0.0);
+        let decay = if first.abs() > 0.0 { last / first } else { 0.0 };
+        let ok = last <= threshold;
+        if !ok {
+            flagged.push(name.clone());
+        }
+        println!(
+            "{name:<20} {:>5} {first:>12.4e} {last:>12.4e} {obj:>12.4e} {decay:>8.1e}  {}",
+            cv.len(),
+            if ok { "ok" } else { "FLAG" },
+        );
+    }
+    if flagged.is_empty() {
+        println!("all {} layer(s) certified (final gap <= {threshold:e})", layers.len());
+    } else {
+        println!(
+            "{}/{} layer(s) exceed --gap-threshold {threshold:e}: {} — raise --iters \
+             or loosen the pattern for these layers",
+            flagged.len(),
+            layers.len(),
+            flagged.join(", ")
+        );
     }
     Ok(())
 }

@@ -329,6 +329,40 @@ impl FwBlock {
         }
     }
 
+    /// Iterations taken so far (resumable runs accumulate).
+    pub fn iters(&self) -> usize {
+        self.t
+    }
+
+    /// Measure convergence at the *current* iterate without advancing
+    /// it: the FW duality gap `⟨∇L, M−V⟩` (≥ 0 up to fp noise; an upper
+    /// bound on suboptimality of the relaxation), the step size the
+    /// next iteration would take, and the maintained-state relative
+    /// drift.  Only scratch buffers are written — `m`, `P`, and the
+    /// iteration counter are untouched, and `step()` recomputes every
+    /// scratch quantity it uses, so probing between `run()` segments
+    /// leaves the iterate sequence bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn convergence_probe(
+        &mut self,
+        w: &[f32],
+        g: &Mat,
+        h: &[f32],
+        fixed: &[f32],
+        m: &[f32],
+        budget: &BudgetSpec,
+        line_search: bool,
+    ) -> (f64, f64, f64) {
+        self.compute_grad(w, h, fixed);
+        self.local_lmo(budget);
+        self.compute_sv(w, g);
+        self.ls_partials(w, m);
+        let (inner, q) = self.partials;
+        let eta =
+            if line_search { eta_from(inner, q, self.t) } else { open_loop_eta(self.t) } as f64;
+        (-inner, eta, self.p_rel_drift(w, g, m))
+    }
+
     /// Relative Frobenius divergence of the maintained `P` from an
     /// exact recompute at the current iterate (drift regression tests).
     pub fn p_rel_drift(&self, w: &[f32], g: &Mat, m: &[f32]) -> f64 {

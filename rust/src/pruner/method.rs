@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use crate::pruner::mask::SparsityPattern;
 use crate::pruner::saliency;
-use crate::pruner::sparsefw::{self, FwKernels, FwTrace, SparseFwConfig};
+use crate::pruner::sparsefw::{self, ConvergenceTrace, FwKernels, FwTrace, SparseFwConfig};
 use crate::pruner::sparsegpt;
 use crate::tensor::Mat;
 use crate::util::json::Json;
@@ -77,6 +77,10 @@ pub struct LayerPruneOutput {
     /// pass); zero exactly off-mask.
     pub new_weights: Option<Mat>,
     pub trace: Option<FwTrace>,
+    /// Per-iteration convergence certificate (objective / duality gap /
+    /// step size / refresh drift), recorded by iterative methods when
+    /// tracing is on; `None` for greedy methods or untraced runs.
+    pub convergence: Option<ConvergenceTrace>,
     /// FW iterations executed (0 for the greedy/one-shot methods).
     pub fw_iters: usize,
     /// Objective improvement contributed by refine post-passes
@@ -99,6 +103,7 @@ impl LayerPruneOutput {
             warm_obj: None,
             new_weights: None,
             trace: None,
+            convergence: None,
             fw_iters: 0,
             refine_obj_delta: None,
         })
@@ -321,6 +326,7 @@ impl LayerPruner for SparseFwPruner {
             obj: r.final_obj,
             warm_obj: Some(r.warm_obj),
             trace: r.trace,
+            convergence: r.convergence,
             mask: r.mask,
             new_weights: None,
             fw_iters: r.fw_iters,
@@ -366,6 +372,7 @@ impl LayerPruner for SparseGptPruner {
             obj,
             warm_obj: None,
             trace: None,
+            convergence: None,
             mask: r.mask,
             new_weights: Some(r.weights),
             fw_iters: 0,

@@ -36,7 +36,9 @@ pub use mask::{BudgetSpec, SparsityPattern};
 pub use method::{LayerCtx, LayerPruneOutput, LayerPruner, Method, MethodCaps};
 pub use refine::RefinePass;
 pub use registry::{MethodRegistration, MethodRegistry};
-pub use sparsefw::{FwKernels, FwTrace, LayerResult, NativeKernels, SparseFwConfig, Warmstart};
+pub use sparsefw::{
+    ConvergenceTrace, FwKernels, FwTrace, LayerResult, NativeKernels, SparseFwConfig, Warmstart,
+};
 
 use crate::tensor::Mat;
 use anyhow::Result;

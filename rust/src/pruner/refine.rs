@@ -591,6 +591,7 @@ mod tests {
             warm_obj: None,
             new_weights: Some(r.weights),
             trace: None,
+            convergence: None,
             fw_iters: 0,
             refine_obj_delta: None,
         };

@@ -44,6 +44,7 @@ use crate::pruner::mask::{BudgetSpec, SparsityPattern};
 use crate::pruner::rounding::{threshold, threshold_residual};
 use crate::pruner::saliency::{magnitude_scores, ria_scores, saliency_mask, wanda_scores};
 use crate::tensor::Mat;
+use crate::util::json::Json;
 
 /// Warmstart / α-fixing saliency source (paper Table 1 uses Wanda & RIA).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -200,6 +201,82 @@ pub struct FwTrace {
     pub residual: Vec<f64>,
 }
 
+/// Per-layer FW convergence certificate, recorded at the same
+/// `trace_every` subsample points as [`FwTrace`]: the paper's rounding
+/// bound rides on the FW convergence bound, and the duality gap
+/// `⟨∇L, M−V⟩ ≥ L(M) − L*` is its checkable witness — a layer whose
+/// final gap stays large converged badly and its rounded mask carries
+/// no guarantee (`sparsefw trace` flags exactly that).  Columns are
+/// parallel arrays indexed by `iters`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConvergenceTrace {
+    /// Iteration numbers of the sample points (0 = at the warmstart).
+    pub iters: Vec<usize>,
+    /// L(M̄ + M_t) of the continuous iterate.
+    pub objective: Vec<f64>,
+    /// FW duality gap `⟨∇L, M_t − V_t⟩` (≥ 0 up to fp noise).
+    pub gap: Vec<f64>,
+    /// Step size the next iteration takes (open-loop schedule or exact
+    /// line search, whichever the run uses).
+    pub eta: Vec<f64>,
+    /// Relative drift of the incremental engine's maintained `P` from
+    /// an exact recompute (0 on the dense engine — no maintained state).
+    pub refresh_drift: Vec<f64>,
+}
+
+impl ConvergenceTrace {
+    pub fn push(&mut self, t: usize, obj: f64, gap: f64, eta: f64, drift: f64) {
+        self.iters.push(t);
+        self.objective.push(obj);
+        self.gap.push(gap);
+        self.eta.push(eta);
+        self.refresh_drift.push(drift);
+    }
+
+    pub fn len(&self) -> usize {
+        self.iters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.iters.is_empty()
+    }
+
+    /// Last recorded duality gap — the certificate `sparsefw trace`
+    /// compares against its threshold.
+    pub fn final_gap(&self) -> Option<f64> {
+        self.gap.last().copied()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iters", Json::Arr(self.iters.iter().map(|&t| Json::Num(t as f64)).collect())),
+            ("objective", Json::arr_f64(&self.objective)),
+            ("gap", Json::arr_f64(&self.gap)),
+            ("eta", Json::arr_f64(&self.eta)),
+            ("refresh_drift", Json::arr_f64(&self.refresh_drift)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> ConvergenceTrace {
+        fn nums(v: &Json) -> Vec<f64> {
+            v.as_arr().unwrap_or(&[]).iter().filter_map(Json::as_f64).collect()
+        }
+        ConvergenceTrace {
+            iters: v
+                .at(&["iters"])
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            objective: nums(v.at(&["objective"])),
+            gap: nums(v.at(&["gap"])),
+            eta: nums(v.at(&["eta"])),
+            refresh_drift: nums(v.at(&["refresh_drift"])),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct LayerResult {
     /// Final binary mask (M* + M̄), satisfying the pattern exactly.
@@ -214,6 +291,8 @@ pub struct LayerResult {
     /// returns) — feeds the server's iterations/sec metric.
     pub fw_iters: usize,
     pub trace: Option<FwTrace>,
+    /// Convergence certificate (`trace_every > 0` runs only).
+    pub convergence: Option<ConvergenceTrace>,
 }
 
 /// α-fixed mask M̄: top ⌊budget·α⌋ saliency entries per constraint unit.
@@ -258,6 +337,7 @@ pub fn run_layer<K: FwKernels + ?Sized>(
             rel_reduction: 0.0,
             fw_iters: 0,
             trace: None,
+            convergence: None,
         });
     }
 
@@ -281,6 +361,7 @@ pub fn run_layer<K: FwKernels + ?Sized>(
     let k_new = free_budget.total();
 
     let mut trace = (cfg.trace_every > 0).then(FwTrace::default);
+    let mut conv = (cfg.trace_every > 0).then(ConvergenceTrace::default);
     let record = |t: usize, m: &Mat, trace: &mut Option<FwTrace>| -> Result<()> {
         if let Some(tr) = trace.as_mut() {
             let total = add_masks(m, &fixed);
@@ -304,6 +385,31 @@ pub fn run_layer<K: FwKernels + ?Sized>(
         if cfg.trace_every > 0 {
             let mut block =
                 FwBlock::new(&w.data, g, &fixed.data, &m.data, rows, cols);
+            // convergence probe at each sample point: gap/η/drift come
+            // from the block's own scratch (no iterate perturbation —
+            // see `FwBlock::convergence_probe`), the objective through
+            // the kernels like every other recorded value
+            let probe = |block: &mut FwBlock,
+                             t: usize,
+                             m: &Mat,
+                             conv: &mut Option<ConvergenceTrace>|
+             -> Result<()> {
+                if let Some(cv) = conv.as_mut() {
+                    let obj = kernels.objective(w, &add_masks(m, &fixed), g)?;
+                    let (gap, eta, drift) = block.convergence_probe(
+                        &w.data,
+                        g,
+                        &h.data,
+                        &fixed.data,
+                        &m.data,
+                        &free_budget,
+                        cfg.line_search,
+                    );
+                    cv.push(t, obj, gap, eta, drift);
+                }
+                Ok(())
+            };
+            probe(&mut block, 0, &m, &mut conv)?;
             let mut t = 0usize;
             while t < cfg.iters {
                 let next = (((t / cfg.trace_every) + 1) * cfg.trace_every).min(cfg.iters);
@@ -320,6 +426,7 @@ pub fn run_layer<K: FwKernels + ?Sized>(
                 );
                 t = next;
                 record(t, &m, &mut trace)?;
+                probe(&mut block, t, &m, &mut conv)?;
             }
         } else {
             fw_engine::run_incremental(
@@ -343,6 +450,47 @@ pub fn run_layer<K: FwKernels + ?Sized>(
             && trace.is_none()
             && !cfg.line_search // the fused artifact bakes in the open-loop step
             && matches!(pattern, SparsityPattern::Unstructured { .. });
+
+        // Convergence probe for the dense engine: one extra gradient
+        // (and, under line search, objective) evaluation per sample
+        // point, all through the kernels — no maintained state, so
+        // drift records as 0.
+        let record_conv = |t: usize, m: &Mat, conv: &mut Option<ConvergenceTrace>| -> Result<()> {
+            let Some(cv) = conv.as_mut() else { return Ok(()) };
+            let total = add_masks(m, &fixed);
+            let obj = kernels.objective(w, &total, g)?;
+            let mut grad = kernels.fw_grad(w, &total, g, &h)?;
+            for (gv, fx) in grad.data.iter_mut().zip(&fixed.data) {
+                if *fx != 0.0 {
+                    *gv = 0.0;
+                }
+            }
+            let v = lmo(&grad, &free_budget);
+            let inner: f64 = grad
+                .data
+                .iter()
+                .zip(&v.data)
+                .zip(&m.data)
+                .map(|((&gv, &vv), &mv)| gv as f64 * (vv - mv) as f64)
+                .sum();
+            let eta = if cfg.line_search {
+                let mut ls_buf = Mat::zeros(rows, cols);
+                for ((b, &vv), &mv) in ls_buf.data.iter_mut().zip(&v.data).zip(&m.data) {
+                    *b = 1.0 - (vv - mv);
+                }
+                let q = kernels.objective(w, &ls_buf, g)?;
+                if q <= 0.0 {
+                    2.0 / (t as f64 + 2.0)
+                } else {
+                    (-inner / (2.0 * q)).clamp(0.0, 1.0)
+                }
+            } else {
+                2.0 / (t as f64 + 2.0)
+            };
+            cv.push(t, obj, -inner, eta, 0.0);
+            Ok(())
+        };
+        record_conv(0, &m, &mut conv)?;
 
         let mut mask_buf = Mat::zeros(rows, cols);
         let mut t = 0usize;
@@ -401,6 +549,7 @@ pub fn run_layer<K: FwKernels + ?Sized>(
             t += 1;
             if cfg.trace_every > 0 && (t % cfg.trace_every == 0 || t == cfg.iters) {
                 record(t, &m, &mut trace)?;
+                record_conv(t, &m, &mut conv)?;
             }
         }
     }
@@ -422,6 +571,7 @@ pub fn run_layer<K: FwKernels + ?Sized>(
         final_obj,
         fw_iters: cfg.iters,
         trace,
+        convergence: conv,
     })
 }
 
@@ -578,6 +728,107 @@ mod tests {
         for win in tr.continuous_obj.windows(2) {
             assert!(win[1] <= win[0] * 1.0001, "{:?}", tr.continuous_obj);
         }
+    }
+
+    #[test]
+    fn convergence_gap_decays_and_respects_refresh() {
+        // seeded layer, sample points aligned to the exact refresh
+        // (trace_every == refresh_every): every recorded gap is taken
+        // right after P is recomputed exactly
+        let (w, g) = setup(16, 24, 96, 12);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        let cfg = SparseFwConfig {
+            iters: 200,
+            alpha: 0.5,
+            trace_every: 25,
+            refresh_every: 25,
+            ..Default::default()
+        };
+        let r = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+        let cv = r.convergence.unwrap();
+        assert_eq!(cv.len(), 9, "t = 0, 25, …, 200");
+        assert_eq!(cv.iters[0], 0);
+        assert_eq!(*cv.iters.last().unwrap(), 200);
+        let scale = 1.0 + cv.objective[0].abs();
+        for (&gap, &eta) in cv.gap.iter().zip(&cv.eta) {
+            assert!(gap >= -1e-6 * scale, "duality gap must be ≥ 0 up to fp noise: {gap}");
+            assert!((0.0..=1.0).contains(&eta), "step size out of [0,1]: {eta}");
+        }
+        // monotone-ish decay: past the large-η burn-in (the t = 0 → 25
+        // window steps with η up to 1), the gap never increases across
+        // a refresh beyond local FW zig-zag noise, and decays overall
+        let peak = cv.gap.iter().cloned().fold(0.0f64, f64::max);
+        for win in cv.gap[1..].windows(2) {
+            assert!(
+                win[1] <= win[0] * 2.0 + 1e-9 * scale,
+                "gap jumped after a refresh: {:?}",
+                cv.gap
+            );
+        }
+        assert!(
+            cv.final_gap().unwrap() <= peak * 0.5 + 1e-9 * scale,
+            "gap failed to decay: {:?}",
+            cv.gap
+        );
+        // objective decays with it, and the maintained state stays tight
+        assert!(*cv.objective.last().unwrap() <= cv.objective[0]);
+        for &d in &cv.refresh_drift {
+            assert!(d <= 1e-3, "maintained-state drift too large: {d}");
+        }
+    }
+
+    #[test]
+    fn convergence_probe_does_not_perturb_the_iterates() {
+        // open-loop incremental runs are bit-identical with tracing on
+        // or off: the probe only writes scratch
+        let (w, g) = setup(16, 24, 96, 13);
+        let pattern = SparsityPattern::Unstructured { sparsity: 0.5 };
+        let base = SparseFwConfig { iters: 60, alpha: 0.5, ..Default::default() };
+        let plain = run_layer(&NativeKernels, &w, &g, &pattern, &base).unwrap();
+        let traced = run_layer(
+            &NativeKernels,
+            &w,
+            &g,
+            &pattern,
+            &SparseFwConfig { trace_every: 10, ..base },
+        )
+        .unwrap();
+        assert_eq!(plain.mask.data, traced.mask.data);
+        assert_eq!(plain.final_obj, traced.final_obj);
+        assert!(traced.convergence.is_some());
+        assert!(plain.convergence.is_none());
+    }
+
+    #[test]
+    fn convergence_trace_json_roundtrip() {
+        let mut cv = ConvergenceTrace::default();
+        cv.push(0, 10.0, 2.5, 1.0, 0.0);
+        cv.push(25, 4.0, 0.5, 0.074, 1.2e-6);
+        let back = ConvergenceTrace::from_json(&cv.to_json());
+        assert_eq!(back, cv);
+        assert_eq!(back.final_gap(), Some(0.5));
+        // missing/garbage input degrades to empty, not a panic
+        assert!(ConvergenceTrace::from_json(&Json::Null).is_empty());
+    }
+
+    #[test]
+    fn dense_engine_records_convergence_too() {
+        let (w, g) = setup(8, 16, 64, 14);
+        let pattern = SparsityPattern::PerRow { sparsity: 0.5 };
+        let cfg = SparseFwConfig {
+            iters: 40,
+            alpha: 0.5,
+            trace_every: 10,
+            engine: FwEngine::Dense,
+            use_chunk: false,
+            ..Default::default()
+        };
+        let r = run_layer(&NativeKernels, &w, &g, &pattern, &cfg).unwrap();
+        let cv = r.convergence.unwrap();
+        assert_eq!(cv.iters, vec![0, 10, 20, 30, 40]);
+        // dense engine has no maintained state: drift records as 0
+        assert!(cv.refresh_drift.iter().all(|&d| d == 0.0));
+        assert!(cv.gap.iter().all(|&gp| gp >= -1e-6));
     }
 
     #[test]

@@ -8,15 +8,23 @@
 //! | GET    | `/jobs`           | list all jobs                                |
 //! | GET    | `/jobs/:id`       | status + per-layer progress + result summary |
 //! | GET    | `/jobs/:id/events`| chunked NDJSON live progress stream          |
+//! | GET    | `/jobs/:id/trace` | recent trace spans for the job's corr ID     |
 //! | DELETE | `/jobs/:id`       | cancel a queued job                          |
 //! | GET    | `/methods`        | the method registry: name, caps, defaults    |
-//! | GET    | `/healthz`        | liveness                                     |
-//! | GET    | `/metrics`        | counters: jobs, queue depth, calib cache, …  |
+//! | GET    | `/healthz`        | liveness + uptime + build info               |
+//! | GET    | `/metrics`        | counters/gauges/histograms (JSON; append     |
+//! |        |                   | `?format=prometheus` for text exposition)    |
 //! | POST   | `/shutdown`       | graceful shutdown (`?drain=1` runs backlog)  |
 //!
 //! Submitted specs parse through the global
 //! [`crate::pruner::MethodRegistry`], so a job naming an unregistered
 //! method is rejected with a 400 whose message names the known set.
+//!
+//! Correlation: `POST /jobs` honours an `X-Sparsefw-Corr-Id` request
+//! header (minting an ID when absent); the worker executes the job
+//! under that ID, so `GET /jobs/:id/trace` can slice the server's trace
+//! ring per job and external log aggregation can join client and
+//! server lines.
 
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -107,11 +115,12 @@ fn route(req: &Request, state: &Arc<ServerState>) -> Response {
     let segs = req.segments();
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
-        ("GET", ["metrics"]) => metrics(state),
+        ("GET", ["metrics"]) => metrics(req, state),
         ("GET", ["methods"]) => list_methods(),
         ("GET", ["jobs"]) => list_jobs(state),
         ("POST", ["jobs"]) => submit_job(req, state),
         ("GET", ["jobs", id]) => job_status(state, id),
+        ("GET", ["jobs", id, "trace"]) => job_trace(state, id),
         ("DELETE", ["jobs", id]) => cancel_job(state, id),
         ("POST", ["shutdown"]) => shutdown(req, state),
         (_, ["jobs", ..]) | (_, ["healthz"]) | (_, ["metrics"]) | (_, ["methods"])
@@ -156,18 +165,55 @@ fn parse_id(s: &str) -> Option<JobId> {
 }
 
 fn healthz(state: &ServerState) -> Response {
+    let mut build = vec![("version", env!("CARGO_PKG_VERSION").into())];
+    if let Some(sha) = option_env!("SPARSEFW_GIT_SHA") {
+        build.push(("git_sha", sha.into()));
+    }
     Response::json(
         200,
         &Json::obj(vec![
             ("ok", true.into()),
+            ("status", "ok".into()),
             ("uptime_secs", state.started.elapsed().as_secs_f64().into()),
             ("workers", state.metrics.workers.into()),
+            ("build", Json::obj(build)),
         ]),
     )
 }
 
-fn metrics(state: &ServerState) -> Response {
+/// `GET /jobs/:id/trace` — the trace-ring slice for the job's
+/// correlation ID: every recent span recorded while the job executed
+/// (empty until a worker picks the job up, and for jobs old enough to
+/// have been evicted from the bounded ring).
+fn job_trace(state: &ServerState, id: &str) -> Response {
+    let Some(id) = parse_id(id) else {
+        return Response::error(400, "job id must be an integer");
+    };
+    let Some(rec) = state.queue.get(id) else {
+        return Response::error(404, &format!("no job {id}"));
+    };
+    let events: Vec<Json> = state
+        .trace_ring
+        .events_for(&rec.corr_id)
+        .iter()
+        .map(|e| e.to_json())
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("id", (rec.id as usize).into()),
+            ("corr_id", rec.corr_id.as_str().into()),
+            ("count", events.len().into()),
+            ("events", Json::Arr(events)),
+        ]),
+    )
+}
+
+fn metrics(req: &Request, state: &ServerState) -> Response {
     use std::sync::atomic::Ordering::Relaxed;
+    if req.query.get("format").map(String::as_str) == Some("prometheus") {
+        return Response::text(200, &super::render_prometheus(state));
+    }
     let m = &state.metrics;
     let (queued, running, done, failed, cancelled) = state.queue.state_counts();
     let v = Json::obj(vec![
@@ -225,6 +271,25 @@ fn metrics(state: &ServerState) -> Response {
                 ("fw_iters_per_sec", m.fw_iters_per_sec().into()),
             ]),
         ),
+        // latency distributions (same data as the Prometheus
+        // histograms, summarized as count/sum/p50/p95/p99)
+        (
+            "latency",
+            Json::obj(vec![
+                ("queue_wait_seconds", m.queue_wait.to_json()),
+                ("job_wall_seconds", m.job_wall.to_json()),
+                (
+                    "phases",
+                    Json::obj(vec![
+                        ("calib", m.phase_calib.to_json()),
+                        ("gram", m.phase_gram.to_json()),
+                        ("fw", m.phase_fw.to_json()),
+                        ("refine", m.phase_refine.to_json()),
+                        ("io", m.phase_io.to_json()),
+                    ]),
+                ),
+            ]),
+        ),
     ]);
     Response::json(200, &v)
 }
@@ -277,7 +342,15 @@ fn submit_job(req: &Request, state: &ServerState) -> Response {
     if let Err(e) = super::validate_spec(&spec) {
         return Response::error(400, &format!("bad job spec: {e:#}"));
     }
-    match state.queue.submit(spec, priority) {
+    // propagate the client's correlation ID (or mint one) so worker-side
+    // trace spans and log lines can be joined with the submitting client
+    let corr_id = req
+        .headers
+        .get("x-sparsefw-corr-id")
+        .filter(|c| !c.is_empty())
+        .cloned()
+        .unwrap_or_else(crate::util::telemetry::gen_corr_id);
+    match state.queue.submit_with_corr(spec, priority, corr_id.clone()) {
         Ok(id) => {
             state
                 .metrics
@@ -289,6 +362,7 @@ fn submit_job(req: &Request, state: &ServerState) -> Response {
                     ("id", (id as usize).into()),
                     ("state", "queued".into()),
                     ("priority", (priority as f64).into()),
+                    ("corr_id", corr_id.as_str().into()),
                 ]),
             )
         }
@@ -418,6 +492,7 @@ pub(crate) fn record_json(rec: &JobRecord) -> Json {
         ("priority", (rec.priority as f64).into()),
         ("label", rec.spec.label().into()),
         ("spec", rec.spec.to_json()),
+        ("corr_id", rec.corr_id.as_str().into()),
         ("queued_secs", rec.queued_secs().into()),
         ("progress", progress_json(rec)),
         (

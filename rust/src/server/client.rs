@@ -22,11 +22,22 @@ pub struct Client {
     addr: String,
     /// Per-request socket read timeout.
     pub timeout: Duration,
+    /// Correlation ID sent as `X-Sparsefw-Corr-Id` on every request;
+    /// the server tags submitted jobs (and their worker-side trace
+    /// spans + log lines) with it.  `None` lets the server mint one
+    /// per job.
+    pub corr_id: Option<String>,
 }
 
 impl Client {
     pub fn new(addr: impl Into<String>) -> Self {
-        Self { addr: addr.into(), timeout: Duration::from_secs(30) }
+        Self { addr: addr.into(), timeout: Duration::from_secs(30), corr_id: None }
+    }
+
+    /// Builder: tag every request from this client with `corr_id`.
+    pub fn with_corr_id(mut self, corr_id: impl Into<String>) -> Self {
+        self.corr_id = Some(corr_id.into());
+        self
     }
 
     pub fn addr(&self) -> &str {
@@ -51,11 +62,17 @@ impl Client {
         body: Option<&Json>,
     ) -> Result<()> {
         let body_text = body.map(json::to_string).unwrap_or_default();
+        let corr = self
+            .corr_id
+            .as_deref()
+            .map(|c| format!("X-Sparsefw-Corr-Id: {c}\r\n"))
+            .unwrap_or_default();
         write!(
             stream,
             "{method} {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\
-             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+             Content-Type: application/json\r\n{}Content-Length: {}\r\n\r\n{}",
             self.addr,
+            corr,
             body_text.len(),
             body_text,
         )?;
@@ -148,6 +165,35 @@ impl Client {
 
     pub fn metrics(&self) -> Result<Json> {
         self.request_ok("GET", "/metrics", None)
+    }
+
+    /// `GET /jobs/:id/trace` — recent trace spans recorded under the
+    /// job's correlation ID.
+    pub fn trace(&self, id: JobId) -> Result<Json> {
+        self.request_ok("GET", &format!("/jobs/{id}/trace"), None)
+    }
+
+    /// `GET /metrics?format=prometheus` — the raw text exposition.
+    pub fn metrics_prometheus(&self) -> Result<String> {
+        let mut stream = self.connect()?;
+        self.send_request(&mut stream, "GET", "/metrics?format=prometheus", None)?;
+        let mut reader = BufReader::new(stream);
+        let (code, headers) = read_response_head(&mut reader)?;
+        let mut body = Vec::new();
+        match headers.get("content-length") {
+            Some(n) => {
+                body.resize(n.parse::<usize>().context("bad Content-Length")?, 0);
+                reader.read_exact(&mut body).context("reading response body")?;
+            }
+            None => {
+                reader.read_to_end(&mut body).context("reading response body")?;
+            }
+        }
+        ensure!(
+            (200..300).contains(&code),
+            "GET /metrics?format=prometheus: HTTP {code}"
+        );
+        String::from_utf8(body).context("non-UTF-8 metrics exposition")
     }
 
     /// `POST /shutdown` — graceful; `drain_queued` runs the backlog

@@ -12,8 +12,9 @@
 //!   registry: `Queued → Running → Done/Failed`, queued-job
 //!   cancellation, graceful shutdown (in-flight jobs always complete).
 //! * [`api`] — the JSON API over [`crate::util::json`]: `POST /jobs`,
-//!   `GET /jobs[/:id[/events]]`, `DELETE /jobs/:id`, `GET /healthz`,
-//!   `GET /metrics`, `POST /shutdown`.
+//!   `GET /jobs[/:id[/events|/trace]]`, `DELETE /jobs/:id`,
+//!   `GET /healthz`, `GET /metrics[?format=prometheus]`,
+//!   `POST /shutdown`.
 //! * [`client`] — a small blocking [`client::Client`] used by the CLI
 //!   (`sparsefw submit/status/shutdown`), examples, and tests.
 //!
@@ -21,6 +22,16 @@
 //! workspace, so repeated jobs hit the session's model cache and
 //! LRU-bounded calibration memo; `GET /metrics` aggregates those
 //! hit/miss counters across workers.
+//!
+//! Observability: every submitted job carries a correlation ID
+//! (client-supplied `X-Sparsefw-Corr-Id` or minted at submit), workers
+//! execute under it, and [`Server::bind`] installs three
+//! [`crate::util::telemetry`] sinks — a per-correlation ring buffer
+//! behind `GET /jobs/:id/trace`, a [`PhaseSink`] feeding the per-phase
+//! latency [`Histogram`]s, and (with [`ServerConfig::trace_out`]) an
+//! NDJSON file sink.  The [`METRIC_CATALOG`] is the single list behind
+//! the Prometheus text exposition and the `sparsefw analyze`
+//! metrics-coverage lint.
 
 pub mod api;
 pub mod client;
@@ -44,7 +55,9 @@ use crate::coordinator::job::DEFAULT_CALIB_CACHE_CAP;
 use crate::coordinator::{JobSpec, PruneSession};
 use crate::data::TokenBin;
 use crate::model::GptConfig;
+use crate::util::json::Json;
 use crate::util::pool::TaskPool;
+use crate::util::telemetry::{self, NdjsonSink, RingSink, TraceEvent, TraceSink};
 
 // ---------------------------------------------------------------------------
 // Config / state / metrics
@@ -67,6 +80,9 @@ pub struct ServerConfig {
     pub conn_threads: usize,
     /// Retained terminal job records ([`JobQueue::with_history_cap`]).
     pub job_history_cap: usize,
+    /// Mirror every trace span to an NDJSON file (`serve --trace-out`);
+    /// `None` = ring buffer (+ any globally installed sinks) only.
+    pub trace_out: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -78,7 +94,225 @@ impl Default for ServerConfig {
             calib_cache_cap: DEFAULT_CALIB_CACHE_CAP,
             conn_threads: 8,
             job_history_cap: queue::DEFAULT_HISTORY_CAP,
+            trace_out: None,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histograms + the metric catalog
+// ---------------------------------------------------------------------------
+
+/// Prometheus-style upper bucket bounds (seconds) shared by every
+/// latency histogram: log-scale from 1ms to 2min.
+pub const HISTOGRAM_BOUNDS: &[f64] = &[
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+    120.0,
+];
+
+/// Lock-free fixed-bucket latency histogram (seconds).
+///
+/// One atomic counter per [`HISTOGRAM_BOUNDS`] bound plus an overflow
+/// bucket; [`Histogram::observe`] costs two relaxed `fetch_add`s, so it
+/// is safe on worker hot paths and inside trace sinks.  Quantiles are
+/// bucket upper bounds — the usual Prometheus-grade approximation.
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    sum_micros: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Self {
+            counts: (0..=HISTOGRAM_BOUNDS.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, secs: f64) {
+        let s = if secs.is_finite() { secs.max(0.0) } else { 0.0 };
+        let idx = HISTOGRAM_BOUNDS
+            .iter()
+            .position(|&b| s <= b)
+            .unwrap_or(HISTOGRAM_BOUNDS.len());
+        if let Some(c) = self.counts.get(idx) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum_micros.fetch_add((s * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Approximate `q`-quantile: the upper bound of the bucket holding
+    /// the q-th observation (the overflow bucket reports the largest
+    /// finite bound).  `None` when nothing was observed.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= target {
+                let bound = HISTOGRAM_BOUNDS
+                    .get(i)
+                    .or_else(|| HISTOGRAM_BOUNDS.last())
+                    .copied()
+                    .unwrap_or(0.0);
+                return Some(bound);
+            }
+        }
+        None
+    }
+
+    /// `{count, sum_secs, p50, p95, p99}` for the JSON `/metrics` form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", (self.count() as usize).into()),
+            ("sum_secs", self.sum_secs().into()),
+            ("p50", self.quantile(0.50).unwrap_or(0.0).into()),
+            ("p95", self.quantile(0.95).unwrap_or(0.0).into()),
+            ("p99", self.quantile(0.99).unwrap_or(0.0).into()),
+        ])
+    }
+
+    /// Text exposition: `HELP`/`TYPE` header, cumulative `_bucket`
+    /// lines (closing with `le="+Inf"`), `_sum` and `_count`.
+    fn render_prometheus(&self, name: &str, help: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            match HISTOGRAM_BOUNDS.get(i) {
+                Some(b) => {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"{b}\"}} {cum}");
+                }
+                None => {
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+                }
+            }
+        }
+        let _ = writeln!(out, "{name}_sum {}", self.sum_secs());
+        let _ = writeln!(out, "{name}_count {cum}");
+    }
+}
+
+/// Every metric exposed by `GET /metrics?format=prometheus`:
+/// `(name, type, help)`.
+///
+/// This list is load-bearing twice over: [`render_prometheus`] renders
+/// exactly these metrics, and the `sparsefw analyze` metrics-coverage
+/// lint checks that every name here is documented in the USAGE metric
+/// catalog in `main.rs`.
+pub const METRIC_CATALOG: &[(&str, &str, &str)] = &[
+    ("sparsefw_jobs_submitted_total", "counter", "Jobs accepted by POST /jobs"),
+    ("sparsefw_jobs_done_total", "counter", "Jobs finished successfully"),
+    ("sparsefw_jobs_failed_total", "counter", "Jobs that errored or panicked"),
+    (
+        "sparsefw_jobs_propagated_total",
+        "counter",
+        "Completed jobs that ran staged (propagated) calibration",
+    ),
+    ("sparsefw_calib_cache_hits_total", "counter", "Calibration memo hits across workers"),
+    ("sparsefw_calib_cache_misses_total", "counter", "Calibration memo misses across workers"),
+    ("sparsefw_fw_iters_total", "counter", "Frank-Wolfe iterations executed by completed jobs"),
+    ("sparsefw_workers", "gauge", "Pruning worker threads"),
+    ("sparsefw_busy_workers", "gauge", "Workers currently executing a job"),
+    ("sparsefw_queue_depth", "gauge", "Jobs waiting in the pending queue"),
+    ("sparsefw_uptime_seconds", "gauge", "Seconds since the server started"),
+    (
+        "sparsefw_peak_gram_bytes",
+        "gauge",
+        "High-water mark of per-job peak calibration-gram bytes (staged jobs)",
+    ),
+    ("sparsefw_queue_wait_seconds", "histogram", "Submit-to-start latency"),
+    ("sparsefw_job_wall_seconds", "histogram", "Per-job pruning wall time"),
+    (
+        "sparsefw_phase_calib_seconds",
+        "histogram",
+        "Calibration phase duration, from trace spans",
+    ),
+    (
+        "sparsefw_phase_gram_seconds",
+        "histogram",
+        "Gram assembly phase duration, from trace spans",
+    ),
+    (
+        "sparsefw_phase_fw_seconds",
+        "histogram",
+        "Per-layer mask optimization duration, from trace spans",
+    ),
+    (
+        "sparsefw_phase_refine_seconds",
+        "histogram",
+        "Refine post-pass duration, from trace spans",
+    ),
+    (
+        "sparsefw_phase_io_seconds",
+        "histogram",
+        "Result materialization and eval duration, from trace spans",
+    ),
+];
+
+/// Render the full [`METRIC_CATALOG`] in the Prometheus text
+/// exposition format (one `HELP`/`TYPE` header per metric).
+pub fn render_prometheus(state: &ServerState) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for &(name, kind, help) in METRIC_CATALOG {
+        if kind == "histogram" {
+            if let Some(h) = histogram_for(state, name) {
+                h.render_prometheus(name, help, &mut out);
+            }
+            continue;
+        }
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        let _ = writeln!(out, "{name} {}", scalar_for(state, name));
+    }
+    out
+}
+
+fn histogram_for<'a>(state: &'a ServerState, name: &str) -> Option<&'a Histogram> {
+    let m = &state.metrics;
+    match name {
+        "sparsefw_queue_wait_seconds" => Some(&m.queue_wait),
+        "sparsefw_job_wall_seconds" => Some(&m.job_wall),
+        "sparsefw_phase_calib_seconds" => Some(&m.phase_calib),
+        "sparsefw_phase_gram_seconds" => Some(&m.phase_gram),
+        "sparsefw_phase_fw_seconds" => Some(&m.phase_fw),
+        "sparsefw_phase_refine_seconds" => Some(&m.phase_refine),
+        "sparsefw_phase_io_seconds" => Some(&m.phase_io),
+        _ => None,
+    }
+}
+
+fn scalar_for(state: &ServerState, name: &str) -> f64 {
+    let m = &state.metrics;
+    match name {
+        "sparsefw_jobs_submitted_total" => m.jobs_submitted.load(Ordering::Relaxed) as f64,
+        "sparsefw_jobs_done_total" => m.jobs_done.load(Ordering::Relaxed) as f64,
+        "sparsefw_jobs_failed_total" => m.jobs_failed.load(Ordering::Relaxed) as f64,
+        "sparsefw_jobs_propagated_total" => m.jobs_propagated.load(Ordering::Relaxed) as f64,
+        "sparsefw_calib_cache_hits_total" => m.calib_hits.load(Ordering::Relaxed) as f64,
+        "sparsefw_calib_cache_misses_total" => m.calib_misses.load(Ordering::Relaxed) as f64,
+        "sparsefw_fw_iters_total" => m.fw_iters.load(Ordering::Relaxed) as f64,
+        "sparsefw_workers" => m.workers as f64,
+        "sparsefw_busy_workers" => m.busy_workers.load(Ordering::Relaxed) as f64,
+        "sparsefw_queue_depth" => state.queue.depth() as f64,
+        "sparsefw_uptime_seconds" => state.started.elapsed().as_secs_f64(),
+        "sparsefw_peak_gram_bytes" => m.peak_gram_bytes.load(Ordering::Relaxed) as f64,
+        _ => 0.0,
     }
 }
 
@@ -104,6 +338,21 @@ pub struct Metrics {
     /// completed staged jobs.
     pub peak_gram_bytes: AtomicUsize,
     pub workers: usize,
+    /// Submit→start latency distribution (seconds).
+    pub queue_wait: Histogram,
+    /// Per-job pruning wall-time distribution (seconds).
+    pub job_wall: Histogram,
+    /// Per-phase durations derived from trace spans via [`PhaseSink`]:
+    /// calibration collection.
+    pub phase_calib: Histogram,
+    /// Gram assembly (staged pipeline).
+    pub phase_gram: Histogram,
+    /// Per-layer mask optimization (any method; one span per layer).
+    pub phase_fw: Histogram,
+    /// Refine post-pass stack (omitted when the stack is empty).
+    pub phase_refine: Histogram,
+    /// Result materialization + eval.
+    pub phase_io: Histogram,
 }
 
 impl Metrics {
@@ -120,6 +369,26 @@ impl Metrics {
             jobs_propagated: AtomicUsize::new(0),
             peak_gram_bytes: AtomicUsize::new(0),
             workers,
+            queue_wait: Histogram::new(),
+            job_wall: Histogram::new(),
+            phase_calib: Histogram::new(),
+            phase_gram: Histogram::new(),
+            phase_fw: Histogram::new(),
+            phase_refine: Histogram::new(),
+            phase_io: Histogram::new(),
+        }
+    }
+
+    /// The per-phase histogram a trace span named `name` feeds — the
+    /// span names the pipeline emits (`calib`/`gram`/`fw`/`refine`/`io`).
+    pub fn phase(&self, name: &str) -> Option<&Histogram> {
+        match name {
+            "calib" => Some(&self.phase_calib),
+            "gram" => Some(&self.phase_gram),
+            "fw" => Some(&self.phase_fw),
+            "refine" => Some(&self.phase_refine),
+            "io" => Some(&self.phase_io),
+            _ => None,
         }
     }
 
@@ -149,6 +418,9 @@ pub struct ServerState {
     pub queue: JobQueue,
     pub metrics: Metrics,
     pub started: Instant,
+    /// Recent trace events keyed by correlation ID, for
+    /// `GET /jobs/:id/trace` (bounded per correlation and overall).
+    pub trace_ring: Arc<RingSink>,
     stopping: AtomicBool,
 }
 
@@ -166,17 +438,36 @@ impl ServerState {
     }
 }
 
+/// Trace sink feeding the per-phase latency histograms: every closed
+/// span named after a pipeline phase (`calib`/`gram`/`fw`/`refine`/`io`)
+/// lands in the matching [`Histogram`].  Note the global tracer fans
+/// out to every installed sink, so in a process hosting several servers
+/// (tests) each `PhaseSink` sees spans from all of them.
+struct PhaseSink {
+    state: Arc<ServerState>,
+}
+
+impl TraceSink for PhaseSink {
+    fn record(&self, ev: &TraceEvent) {
+        if let Some(h) = self.state.metrics.phase(ev.name) {
+            h.observe(ev.dur_us as f64 / 1e6);
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Server
 // ---------------------------------------------------------------------------
 
 /// A running server: resolved address + the threads behind it.  Dropping
-/// the handle without [`ServerHandle::shutdown`] detaches the threads.
+/// the handle without [`ServerHandle::shutdown`] detaches the threads
+/// (and leaves the trace sinks installed until process exit).
 pub struct ServerHandle {
     addr: SocketAddr,
     state: Arc<ServerState>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    sinks: Vec<Arc<dyn TraceSink>>,
 }
 
 impl ServerHandle {
@@ -209,6 +500,11 @@ impl ServerHandle {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // uninstall this server's trace sinks so later servers in the
+        // same process (tests) don't keep feeding a dead ring/file
+        for s in self.sinks.drain(..) {
+            telemetry::remove_sink(&s);
+        }
     }
 }
 
@@ -225,12 +521,28 @@ impl Server {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?; // the accept loop polls the stop flag
 
+        let trace_ring = Arc::new(RingSink::new(2048, 64));
         let state = Arc::new(ServerState {
             queue: JobQueue::new(cfg.queue_capacity).with_history_cap(cfg.job_history_cap),
             metrics: Metrics::new(sessions.len()),
             started: Instant::now(),
+            trace_ring: trace_ring.clone(),
             stopping: AtomicBool::new(false),
         });
+
+        // install this server's trace sinks (removed in join_threads):
+        // the ring behind GET /jobs/:id/trace, the phase-histogram
+        // feeder, and optionally an NDJSON file (--trace-out)
+        let mut sinks: Vec<Arc<dyn TraceSink>> = vec![trace_ring];
+        sinks.push(Arc::new(PhaseSink { state: state.clone() }));
+        if let Some(path) = &cfg.trace_out {
+            let nd = NdjsonSink::create(std::path::Path::new(path))
+                .with_context(|| format!("opening --trace-out {path}"))?;
+            sinks.push(Arc::new(nd));
+        }
+        for s in &sinks {
+            telemetry::add_sink(s.clone());
+        }
 
         let workers = sessions
             .into_iter()
@@ -255,7 +567,7 @@ impl Server {
         };
 
         crate::info!("sparsefw serve: listening on {addr} ({} workers)", state.metrics.workers);
-        Ok(ServerHandle { addr, state, accept: Some(accept), workers })
+        Ok(ServerHandle { addr, state, accept: Some(accept), workers, sinks })
     }
 }
 
@@ -301,6 +613,14 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
     let (mut hits_seen, mut misses_seen) = session.calib_stats();
     while let Some((id, spec)) = state.queue.pop_blocking(worker) {
         state.metrics.busy_workers.fetch_add(1, Ordering::Relaxed);
+        // the freshly-popped record carries the correlation ID and the
+        // submit timestamp (queue-wait latency)
+        let rec = state.queue.get(id);
+        let corr = rec.as_ref().map(|r| r.corr_id.clone()).unwrap_or_default();
+        if let Some(r) = &rec {
+            state.metrics.queue_wait.observe(r.queued_secs());
+        }
+        let _corr_guard = telemetry::with_correlation(&corr);
         crate::info!("worker {worker}: job {id} starting ({})", spec.label());
         let progress_state = state.clone();
         session.on_progress(move |e| progress_state.queue.push_event(id, e.clone()));
@@ -308,12 +628,15 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
         // fail THIS job, not unwind the worker thread: an unwound
         // worker would leave the job wedged in Running forever and
         // poison every registry lock it held
-        let outcome = match catch_unwind(AssertUnwindSafe(|| session.execute(&spec))) {
-            Ok(res) => res,
-            Err(payload) => Err(anyhow::anyhow!(
-                "worker panicked: {}",
-                panic_message(payload.as_ref())
-            )),
+        let outcome = {
+            let _sp = crate::span!("job", id = id, worker = worker);
+            match catch_unwind(AssertUnwindSafe(|| session.execute(&spec))) {
+                Ok(res) => res,
+                Err(payload) => Err(anyhow::anyhow!(
+                    "worker panicked: {}",
+                    panic_message(payload.as_ref())
+                )),
+            }
         };
         session.clear_progress();
 
@@ -341,6 +664,7 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
                         .unwrap_or_default()
                 );
                 state.metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                state.metrics.job_wall.observe(summary.wall_seconds);
                 state
                     .metrics
                     .job_wall_ms

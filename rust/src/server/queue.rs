@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::coordinator::{JobResult, JobSpec, LayerEvent};
+use crate::pruner::ConvergenceTrace;
 use crate::util::json::Json;
 use crate::util::sync::{lock_recover, wait_recover, wait_timeout_recover};
 
@@ -91,6 +92,10 @@ pub struct JobSummary {
     /// Peak bytes of simultaneously-live calibration grams (staged
     /// jobs; the one-shot path holds every gram at once instead).
     pub peak_gram_bytes: Option<usize>,
+    /// Per-layer FW convergence certificates, recorded when the job
+    /// traced (`trace_every > 0`); empty — and absent from the JSON
+    /// form — otherwise.
+    pub convergence: BTreeMap<String, ConvergenceTrace>,
 }
 
 impl JobSummary {
@@ -108,6 +113,7 @@ impl JobSummary {
             ppl: res.eval.as_ref().map(|e| e.ppl),
             calib_policy: res.prune.staged.map(|s| s.policy.label().to_string()),
             peak_gram_bytes: res.prune.staged.map(|s| s.peak_gram_bytes),
+            convergence: res.prune.convergence.clone(),
         }
     }
 
@@ -153,6 +159,14 @@ impl JobSummary {
         if let Some(b) = self.peak_gram_bytes {
             fields.push(("peak_gram_bytes", b.into()));
         }
+        if !self.convergence.is_empty() {
+            let conv = self
+                .convergence
+                .iter()
+                .map(|(k, cv)| (k.clone(), cv.to_json()))
+                .collect();
+            fields.push(("convergence", Json::Obj(conv)));
+        }
         Json::obj(fields)
     }
 }
@@ -162,6 +176,10 @@ impl JobSummary {
 pub struct JobRecord {
     pub id: JobId,
     pub spec: JobSpec,
+    /// Correlation ID linking this job's trace spans, log lines and
+    /// NDJSON records (client-supplied `X-Sparsefw-Corr-Id`, or minted
+    /// at submit time).
+    pub corr_id: String,
     pub priority: i64,
     pub state: JobState,
     pub submitted: Instant,
@@ -305,10 +323,16 @@ impl JobQueue {
         }
     }
 
-    /// Enqueue a job.  Fails when the pending queue is full or the
-    /// server is shutting down.  Higher `priority` runs first; equal
-    /// priorities are FIFO.
+    /// Enqueue a job with a freshly minted correlation ID.  Fails when
+    /// the pending queue is full or the server is shutting down.
+    /// Higher `priority` runs first; equal priorities are FIFO.
     pub fn submit(&self, spec: JobSpec, priority: i64) -> Result<JobId> {
+        self.submit_with_corr(spec, priority, crate::util::telemetry::gen_corr_id())
+    }
+
+    /// [`JobQueue::submit`] with a caller-supplied correlation ID (the
+    /// API propagates the client's `X-Sparsefw-Corr-Id` header here).
+    pub fn submit_with_corr(&self, spec: JobSpec, priority: i64, corr_id: String) -> Result<JobId> {
         let mut inner = lock_recover(&self.inner);
         if inner.shutdown {
             bail!("server is shutting down; not accepting jobs");
@@ -326,6 +350,7 @@ impl JobQueue {
             JobRecord {
                 id,
                 spec,
+                corr_id,
                 priority,
                 state: JobState::Queued,
                 submitted: Instant::now(),
@@ -619,6 +644,7 @@ mod tests {
                 ppl: None,
                 calib_policy: None,
                 peak_gram_bytes: None,
+                convergence: BTreeMap::new(),
             }),
         );
         q.finish(b, Err("boom".into()));
@@ -630,6 +656,17 @@ mod tests {
         assert_eq!(rb.state, JobState::Failed);
         assert_eq!(rb.error.as_deref(), Some("boom"));
         assert_eq!(q.state_counts(), (0, 0, 1, 1, 0));
+    }
+
+    #[test]
+    fn correlation_ids_are_minted_and_preserved() {
+        let q = JobQueue::new(4);
+        let a = q.submit(spec("a"), 0).unwrap();
+        let b = q.submit_with_corr(spec("b"), 0, "corr-fixed".into()).unwrap();
+        let ra = q.get(a).unwrap();
+        assert!(!ra.corr_id.is_empty(), "submit must mint a corr id");
+        assert_eq!(q.get(b).unwrap().corr_id, "corr-fixed");
+        assert_ne!(ra.corr_id, "corr-fixed");
     }
 
     #[test]

@@ -7,3 +7,4 @@ pub mod log;
 pub mod pool;
 pub mod prng;
 pub mod sync;
+pub mod telemetry;

@@ -1,0 +1,649 @@
+//! End-to-end tracing: spans, correlation IDs, pluggable sinks.
+//!
+//! The observability layer the rest of the crate reports through.  A
+//! [`crate::span!`] guard times one region of work (gram build, FW
+//! solve, refinement, …) and, on drop, emits a [`TraceEvent`] carrying
+//! wall + monotonic timestamps, its parent span, and the current
+//! correlation ID to every installed [`TraceSink`]:
+//!
+//! ```text
+//! client ──X-Sparsefw-Corr-Id──▶ server ──▶ queue ──▶ worker
+//!                                                      │ with_correlation(corr)
+//!                                                      ▼
+//!                                        span!("job") ⊃ span!("calib")
+//!                                                     ⊃ span!("gram", block=b)
+//!                                                     ⊃ span!("fw", layer=l) …
+//! ```
+//!
+//! Sinks are registered process-wide ([`add_sink`]) and the hot-path
+//! cost when *no* sink is installed is a single relaxed atomic load —
+//! the `span!` macro never formats its fields unless tracing is on
+//! (budgeted ≤2% on the FW hot loop; `benches/trace_overhead.rs`).
+//!
+//! Spans are thread-local; crossing a thread boundary (the pool in
+//! [`crate::util::pool`], scoped threads) requires capturing a
+//! [`TraceContext`] on the dispatching thread and `enter()`ing it
+//! inside the worker closure — thread-locals do not propagate on their
+//! own, and a span opened without a context would otherwise parent to
+//! the root.
+//!
+//! Shipped sinks: [`RingSink`] (bounded per-correlation ring buffer
+//! behind `GET /jobs/:id/trace`), [`NdjsonSink`] (`--trace-out FILE`,
+//! one JSON object per line), [`StderrSink`] (pretty-printer,
+//! `SPARSEFW_TRACE=stderr`).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// One completed span, emitted to every sink on guard drop.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Unique (process-wide) span ID; never 0.
+    pub span_id: u64,
+    /// Enclosing span's ID; 0 for a root span.
+    pub parent_id: u64,
+    /// Correlation ID active when the span opened (job-scoped).
+    pub corr_id: Option<Arc<str>>,
+    /// Span name (`"gram"`, `"fw"`, …) — a static literal by
+    /// construction of the `span!` macro.
+    pub name: &'static str,
+    /// Formatted `key = value` fields from the `span!` call site.
+    pub fields: Vec<(&'static str, String)>,
+    /// Wall-clock at span start, milliseconds since the Unix epoch.
+    pub wall_ms: u64,
+    /// Monotonic offset from process start at span start, microseconds.
+    pub mono_us: u64,
+    /// Span duration, microseconds.
+    pub dur_us: u64,
+}
+
+impl TraceEvent {
+    /// NDJSON / API form.  One-way: traces are emitted, not replayed.
+    pub fn to_json(&self) -> Json {
+        let mut o = vec![
+            ("span", Json::Num(self.span_id as f64)),
+            ("parent", Json::Num(self.parent_id as f64)),
+            ("name", Json::Str(self.name.to_string())),
+            ("wall_ms", Json::Num(self.wall_ms as f64)),
+            ("mono_us", Json::Num(self.mono_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+        ];
+        if let Some(c) = &self.corr_id {
+            o.push(("corr", Json::Str(c.to_string())));
+        }
+        if !self.fields.is_empty() {
+            o.push((
+                "fields",
+                Json::Obj(
+                    self.fields
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global state: enabled flag, span counter, sink registry
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static MONO_START: OnceLock<Instant> = OnceLock::new();
+static SINKS: OnceLock<Mutex<Vec<Arc<dyn TraceSink>>>> = OnceLock::new();
+
+fn sinks() -> &'static Mutex<Vec<Arc<dyn TraceSink>>> {
+    SINKS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Is any sink installed?  The only check on the disabled fast path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install a sink; tracing turns on for the whole process.
+pub fn add_sink(s: Arc<dyn TraceSink>) {
+    let mut g = lock_recover(sinks());
+    g.push(s);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Remove a previously installed sink (by identity); tracing turns
+/// back off when the last sink goes.
+pub fn remove_sink(s: &Arc<dyn TraceSink>) {
+    let mut g = lock_recover(sinks());
+    g.retain(|x| !Arc::ptr_eq(x, s));
+    ENABLED.store(!g.is_empty(), Ordering::Relaxed);
+}
+
+/// Install sinks requested by the environment: `SPARSEFW_TRACE=stderr`
+/// turns the pretty-printer on (the CLI calls this once at startup).
+pub fn install_from_env() {
+    if std::env::var("SPARSEFW_TRACE").as_deref() == Ok("stderr") {
+        add_sink(Arc::new(StderrSink));
+    }
+}
+
+fn dispatch(ev: &TraceEvent) {
+    // snapshot the registry, then record OUTSIDE the lock: sinks may
+    // block (file writes) and take their own locks
+    let snapshot: Vec<Arc<dyn TraceSink>> = lock_recover(sinks()).clone();
+    for s in &snapshot {
+        s.record(ev);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local span context
+// ---------------------------------------------------------------------------
+
+struct Ctx {
+    corr: Option<Arc<str>>,
+    stack: Vec<u64>,
+}
+
+thread_local! {
+    static CTX: RefCell<Ctx> = const { RefCell::new(Ctx { corr: None, stack: Vec::new() }) };
+}
+
+/// The correlation ID active on this thread, if any (log lines carry
+/// it; see [`crate::util::log`]).
+pub fn current_corr() -> Option<Arc<str>> {
+    CTX.with(|c| c.borrow().corr.clone())
+}
+
+/// Set the thread's correlation ID for the guard's lifetime (workers
+/// wrap each job execution in one).  Nests: dropping restores the
+/// previous ID.
+pub fn with_correlation(corr: &str) -> CorrGuard {
+    CTX.with(|c| {
+        let prev = std::mem::replace(&mut c.borrow_mut().corr, Some(Arc::from(corr)));
+        CorrGuard { prev }
+    })
+}
+
+pub struct CorrGuard {
+    prev: Option<Arc<str>>,
+}
+
+impl Drop for CorrGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CTX.with(|c| c.borrow_mut().corr = prev);
+    }
+}
+
+/// A snapshot of the calling thread's span context (correlation ID +
+/// innermost span), for re-entry on another thread.
+#[derive(Clone)]
+pub struct TraceContext {
+    corr: Option<Arc<str>>,
+    parent: u64,
+}
+
+impl TraceContext {
+    /// Capture on the dispatching thread, before handing closures to a
+    /// pool or scoped spawn.
+    pub fn capture() -> TraceContext {
+        CTX.with(|c| {
+            let c = c.borrow();
+            TraceContext { corr: c.corr.clone(), parent: c.stack.last().copied().unwrap_or(0) }
+        })
+    }
+
+    /// Enter the captured context on the current (worker) thread:
+    /// spans opened under the guard parent to the captured span and
+    /// carry its correlation ID.
+    pub fn enter(&self) -> ContextGuard {
+        CTX.with(|c| {
+            let mut c = c.borrow_mut();
+            let prev_corr = std::mem::replace(&mut c.corr, self.corr.clone());
+            let pushed = self.parent != 0;
+            if pushed {
+                c.stack.push(self.parent);
+            }
+            ContextGuard { prev_corr, pushed }
+        })
+    }
+}
+
+pub struct ContextGuard {
+    prev_corr: Option<Arc<str>>,
+    pushed: bool,
+}
+
+impl Drop for ContextGuard {
+    fn drop(&mut self) {
+        let prev = self.prev_corr.take();
+        let pushed = self.pushed;
+        CTX.with(|c| {
+            let mut c = c.borrow_mut();
+            if pushed {
+                c.stack.pop();
+            }
+            c.corr = prev;
+        });
+    }
+}
+
+/// A process-unique correlation ID (time + pid + counter) — the client
+/// mints one per submitted job when the caller didn't supply one.
+pub fn gen_corr_id() -> String {
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let c = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    format!("{:08x}-{:04x}-{:04x}", t & 0xffff_ffff, std::process::id() & 0xffff, c & 0xffff)
+}
+
+// ---------------------------------------------------------------------------
+// Span guards
+// ---------------------------------------------------------------------------
+
+/// RAII span: opened by [`crate::span!`], emits its [`TraceEvent`] on
+/// drop.  A disabled guard (tracing off at open) is inert.
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+struct SpanInner {
+    span_id: u64,
+    parent_id: u64,
+    corr: Option<Arc<str>>,
+    name: &'static str,
+    fields: Vec<(&'static str, String)>,
+    wall_ms: u64,
+    mono_us: u64,
+    started: Instant,
+}
+
+impl SpanGuard {
+    /// Open a span iff tracing is enabled; `fields` is only invoked
+    /// (and its formatting only paid) when it is.
+    #[inline]
+    pub fn enter_if_enabled(
+        name: &'static str,
+        fields: impl FnOnce() -> Vec<(&'static str, String)>,
+    ) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { inner: None };
+        }
+        SpanGuard::enter(name, fields())
+    }
+
+    /// Open a span unconditionally (tests and sinks-off benchmarks).
+    pub fn enter(name: &'static str, fields: Vec<(&'static str, String)>) -> SpanGuard {
+        let span_id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let (parent_id, corr) = CTX.with(|c| {
+            let mut c = c.borrow_mut();
+            let parent = c.stack.last().copied().unwrap_or(0);
+            c.stack.push(span_id);
+            (parent, c.corr.clone())
+        });
+        let started = Instant::now();
+        let mono_us =
+            started.saturating_duration_since(*MONO_START.get_or_init(Instant::now)).as_micros()
+                as u64;
+        let wall_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        SpanGuard {
+            inner: Some(SpanInner {
+                span_id,
+                parent_id,
+                corr,
+                name,
+                fields,
+                wall_ms,
+                mono_us,
+                started,
+            }),
+        }
+    }
+
+    /// The inert guard the `span!` macro returns when tracing is off.
+    pub fn disabled() -> SpanGuard {
+        SpanGuard { inner: None }
+    }
+
+    /// This span's ID (None when the guard is inert).
+    pub fn id(&self) -> Option<u64> {
+        self.inner.as_ref().map(|i| i.span_id)
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else { return };
+        CTX.with(|c| {
+            let mut b = c.borrow_mut();
+            // normally a strict LIFO pop; under guard-drop-out-of-order
+            // misuse remove wherever the ID sits so the stack can't grow
+            if b.stack.last() == Some(&inner.span_id) {
+                b.stack.pop();
+            } else if let Some(pos) = b.stack.iter().rposition(|&x| x == inner.span_id) {
+                b.stack.remove(pos);
+            }
+        });
+        let ev = TraceEvent {
+            span_id: inner.span_id,
+            parent_id: inner.parent_id,
+            corr_id: inner.corr,
+            name: inner.name,
+            fields: inner.fields,
+            wall_ms: inner.wall_ms,
+            mono_us: inner.mono_us,
+            dur_us: inner.started.elapsed().as_micros() as u64,
+        };
+        dispatch(&ev);
+    }
+}
+
+/// Open a timed span: `span!("fw", layer = name, rows = w.rows)`.
+/// Returns a [`SpanGuard`]; bind it (`let _span = span!(…)`) so the
+/// span covers the intended scope.  Fields format lazily — when no
+/// sink is installed the whole call is one atomic load.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        $crate::util::telemetry::SpanGuard::enter_if_enabled($name, ::std::vec::Vec::new)
+    };
+    ($name:literal, $($k:ident = $v:expr),+ $(,)?) => {
+        $crate::util::telemetry::SpanGuard::enter_if_enabled($name, || {
+            vec![$((stringify!($k), format!("{}", $v))),+]
+        })
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// A destination for completed spans.  `record` runs on the thread
+/// that closed the span and outside the sink-registry lock; sinks do
+/// their own synchronization.
+pub trait TraceSink: Send + Sync {
+    fn record(&self, ev: &TraceEvent);
+}
+
+/// Bounded in-memory ring, keyed by correlation ID — the store behind
+/// `GET /jobs/:id/trace`.  Uncorrelated events are dropped (they could
+/// never be fetched); the oldest correlation is evicted wholesale when
+/// `max_corrs` is hit.
+pub struct RingSink {
+    inner: Mutex<RingInner>,
+    per_corr_cap: usize,
+    max_corrs: usize,
+}
+
+struct RingInner {
+    by_corr: BTreeMap<String, VecDeque<TraceEvent>>,
+    order: VecDeque<String>,
+}
+
+impl RingSink {
+    pub fn new(per_corr_cap: usize, max_corrs: usize) -> RingSink {
+        RingSink {
+            inner: Mutex::new(RingInner { by_corr: BTreeMap::new(), order: VecDeque::new() }),
+            per_corr_cap: per_corr_cap.max(1),
+            max_corrs: max_corrs.max(1),
+        }
+    }
+
+    /// Every retained event for one correlation ID, oldest first.
+    pub fn events_for(&self, corr: &str) -> Vec<TraceEvent> {
+        let g = lock_recover(&self.inner);
+        g.by_corr.get(corr).map(|q| q.iter().cloned().collect()).unwrap_or_default()
+    }
+}
+
+impl TraceSink for RingSink {
+    fn record(&self, ev: &TraceEvent) {
+        let Some(corr) = ev.corr_id.as_deref() else { return };
+        let mut g = lock_recover(&self.inner);
+        if !g.by_corr.contains_key(corr) {
+            if g.order.len() >= self.max_corrs {
+                if let Some(old) = g.order.pop_front() {
+                    g.by_corr.remove(&old);
+                }
+            }
+            g.order.push_back(corr.to_string());
+            g.by_corr.insert(corr.to_string(), VecDeque::new());
+        }
+        if let Some(q) = g.by_corr.get_mut(corr) {
+            if q.len() >= self.per_corr_cap {
+                q.pop_front();
+            }
+            q.push_back(ev.clone());
+        }
+    }
+}
+
+/// One JSON object per line, flushed per event (`--trace-out FILE`).
+pub struct NdjsonSink {
+    w: Mutex<BufWriter<File>>,
+}
+
+impl NdjsonSink {
+    pub fn create(path: &Path) -> std::io::Result<NdjsonSink> {
+        Ok(NdjsonSink { w: Mutex::new(BufWriter::new(File::create(path)?)) })
+    }
+}
+
+impl TraceSink for NdjsonSink {
+    fn record(&self, ev: &TraceEvent) {
+        let line = crate::util::json::to_string(&ev.to_json());
+        let mut w = lock_recover(&self.w);
+        // analyze: allow(lock-across-blocking, "the writer lock exists to keep NDJSON lines atomic")
+        let _ = writeln!(w, "{line}");
+        let _ = w.flush();
+    }
+}
+
+/// Human-readable stderr lines (`SPARSEFW_TRACE=stderr`) — the traced
+/// replacement for ad-hoc `debuglog!` calls in the pipeline.
+pub struct StderrSink;
+
+impl TraceSink for StderrSink {
+    fn record(&self, ev: &TraceEvent) {
+        let mut line = format!(
+            "[trace {:>10.3}ms] {}#{}",
+            ev.dur_us as f64 / 1000.0,
+            ev.name,
+            ev.span_id
+        );
+        if ev.parent_id != 0 {
+            line.push_str(&format!(" <#{}", ev.parent_id));
+        }
+        for (k, v) in &ev.fields {
+            line.push_str(&format!(" {k}={v}"));
+        }
+        if let Some(c) = &ev.corr_id {
+            line.push_str(&format!(" [{c}]"));
+        }
+        let mut err = std::io::stderr().lock();
+        // analyze: allow(lock-across-blocking, "the stderr lock exists to make this one write atomic")
+        let _ = writeln!(err, "{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A sink that appends into a shared Vec (tests only).
+    struct VecSink(Mutex<Vec<TraceEvent>>);
+
+    impl TraceSink for VecSink {
+        fn record(&self, ev: &TraceEvent) {
+            lock_recover(&self.0).push(ev.clone());
+        }
+    }
+
+    fn with_vec_sink<R>(f: impl FnOnce() -> R) -> (R, Vec<TraceEvent>) {
+        let sink = Arc::new(VecSink(Mutex::new(Vec::new())));
+        let dyn_sink: Arc<dyn TraceSink> = sink.clone();
+        add_sink(dyn_sink.clone());
+        let r = f();
+        remove_sink(&dyn_sink);
+        let evs = lock_recover(&sink.0).clone();
+        (r, evs)
+    }
+
+    #[test]
+    fn spans_nest_and_parent() {
+        // unique corr so concurrently running tests can't interleave
+        let corr = gen_corr_id();
+        let ((), evs) = with_vec_sink(|| {
+            let _c = with_correlation(&corr);
+            let outer = span!("outer", layer = "wqkv");
+            let outer_id = outer.id().unwrap();
+            {
+                let inner = span!("inner");
+                assert_eq!(inner.inner.as_ref().unwrap().parent_id, outer_id);
+            }
+            drop(outer);
+        });
+        let evs: Vec<_> =
+            evs.into_iter().filter(|e| e.corr_id.as_deref() == Some(corr.as_str())).collect();
+        assert_eq!(evs.len(), 2);
+        // inner closes first
+        assert_eq!(evs[0].name, "inner");
+        assert_eq!(evs[1].name, "outer");
+        assert_eq!(evs[0].parent_id, evs[1].span_id);
+        assert_eq!(evs[1].parent_id, 0);
+        assert_eq!(evs[1].fields, vec![("layer", "wqkv".to_string())]);
+        assert!(evs[0].mono_us >= evs[1].mono_us);
+    }
+
+    #[test]
+    fn disabled_span_emits_nothing() {
+        // no sink installed by *this* test: guard must be inert even
+        // if another test concurrently enables tracing (checked via a
+        // corr id no other test uses)
+        let corr = gen_corr_id();
+        let _c = with_correlation(&corr);
+        let g = SpanGuard::disabled();
+        assert!(g.id().is_none());
+        drop(g);
+        let ((), evs) = with_vec_sink(|| {
+            let _g = span!("now-on");
+        });
+        assert!(evs.iter().any(|e| e.name == "now-on"));
+    }
+
+    #[test]
+    fn context_propagates_across_threads() {
+        let corr = gen_corr_id();
+        let ((), evs) = with_vec_sink(|| {
+            let _c = with_correlation(&corr);
+            let outer = span!("dispatch");
+            let ctx = TraceContext::capture();
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let _g = ctx.enter();
+                    let _child = span!("worker");
+                });
+            });
+            drop(outer);
+        });
+        let evs: Vec<_> =
+            evs.into_iter().filter(|e| e.corr_id.as_deref() == Some(corr.as_str())).collect();
+        assert_eq!(evs.len(), 2);
+        let worker = evs.iter().find(|e| e.name == "worker").unwrap();
+        let dispatch = evs.iter().find(|e| e.name == "dispatch").unwrap();
+        assert_eq!(worker.parent_id, dispatch.span_id, "cross-thread span parents to captured");
+        assert_eq!(worker.corr_id.as_deref(), Some(corr.as_str()));
+    }
+
+    #[test]
+    fn corr_guard_restores_previous() {
+        let a = gen_corr_id();
+        let b = gen_corr_id();
+        let _ga = with_correlation(&a);
+        {
+            let _gb = with_correlation(&b);
+            assert_eq!(current_corr().as_deref(), Some(b.as_str()));
+        }
+        assert_eq!(current_corr().as_deref(), Some(a.as_str()));
+    }
+
+    #[test]
+    fn ring_sink_caps_and_evicts() {
+        let ring = RingSink::new(2, 2);
+        let ev = |corr: &str, id: u64| TraceEvent {
+            span_id: id,
+            parent_id: 0,
+            corr_id: Some(Arc::from(corr)),
+            name: "x",
+            fields: vec![],
+            wall_ms: 0,
+            mono_us: 0,
+            dur_us: 1,
+        };
+        for i in 0..5 {
+            ring.record(&ev("a", i));
+        }
+        let a = ring.events_for("a");
+        assert_eq!(a.len(), 2, "per-corr cap");
+        assert_eq!(a[1].span_id, 4, "newest retained");
+        ring.record(&ev("b", 10));
+        ring.record(&ev("c", 11)); // evicts "a" (max 2 corrs)
+        assert!(ring.events_for("a").is_empty());
+        assert_eq!(ring.events_for("b").len(), 1);
+        // uncorrelated events are dropped
+        ring.record(&TraceEvent { corr_id: None, ..ev("x", 12) });
+        assert!(ring.events_for("x").is_empty());
+    }
+
+    #[test]
+    fn ndjson_sink_writes_parseable_lines() {
+        let path = std::env::temp_dir().join(format!("sfw-trace-test-{}.ndjson", std::process::id()));
+        let sink = NdjsonSink::create(&path).unwrap();
+        sink.record(&TraceEvent {
+            span_id: 3,
+            parent_id: 1,
+            corr_id: Some(Arc::from("c1")),
+            name: "fw",
+            fields: vec![("layer", "wo".into())],
+            wall_ms: 1000,
+            mono_us: 2000,
+            dur_us: 42,
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let v = crate::util::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.at(&["span"]).as_usize(), Some(3));
+        assert_eq!(v.at(&["parent"]).as_usize(), Some(1));
+        assert_eq!(v.at(&["name"]).as_str(), Some("fw"));
+        assert_eq!(v.at(&["corr"]).as_str(), Some("c1"));
+        assert_eq!(v.at(&["fields", "layer"]).as_str(), Some("wo"));
+        assert_eq!(v.at(&["dur_us"]).as_usize(), Some(42));
+    }
+
+    #[test]
+    fn gen_corr_ids_are_unique() {
+        let a = gen_corr_id();
+        let b = gen_corr_id();
+        assert_ne!(a, b);
+    }
+}

@@ -75,6 +75,35 @@ fn allow_annotated_twins_are_silent() {
 }
 
 #[test]
+fn metrics_coverage_flags_undocumented_metrics() {
+    use sparsefw::analyze::consistency::check_metrics_usage;
+    use sparsefw::server::METRIC_CATALOG;
+    let dir = std::env::temp_dir().join(format!("sfw-metrics-lint-{}", std::process::id()));
+    let src = dir.join("src");
+    std::fs::create_dir_all(&src).unwrap();
+
+    // a main.rs documenting nothing: every catalog entry must fire
+    std::fs::write(src.join("main.rs"), "const USAGE: &str = \"no metrics here\";").unwrap();
+    let mut findings = Vec::new();
+    check_metrics_usage(&src, &mut findings);
+    assert_eq!(findings.len(), METRIC_CATALOG.len());
+    assert!(findings.iter().all(|f| f.lint == "metrics-coverage"));
+
+    // documenting every catalog name silences the lint
+    let all: String = METRIC_CATALOG
+        .iter()
+        .map(|&(n, _, _)| n)
+        .collect::<Vec<_>>()
+        .join("\n");
+    std::fs::write(src.join("main.rs"), all).unwrap();
+    let mut findings = Vec::new();
+    check_metrics_usage(&src, &mut findings);
+    assert!(findings.is_empty(), "{findings:?}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn the_source_tree_is_clean() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
     let findings = analyze_tree(&AnalyzeConfig::new(root)).unwrap();

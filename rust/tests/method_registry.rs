@@ -158,6 +158,7 @@ impl LayerPruner for FixedScores {
             warm_obj: None,
             new_weights: None,
             trace: None,
+            convergence: None,
             fw_iters: 0,
             refine_obj_delta: None,
         })

@@ -484,3 +484,156 @@ fn refined_job_reports_obj_delta_through_the_api() {
     assert!(rec.at(&["result", "refine_obj_delta"]).as_f64().is_none());
     handle.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// Observability: healthz build info, corr IDs, traces, Prometheus
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthz_reports_status_uptime_and_build() {
+    let (handle, client) = spawn_server(1);
+    let h = client.healthz().unwrap();
+    assert_eq!(h.at(&["status"]).as_str(), Some("ok"), "{h:?}");
+    assert!(h.at(&["uptime_secs"]).as_f64().unwrap() >= 0.0);
+    assert_eq!(
+        h.at(&["build", "version"]).as_str(),
+        Some(env!("CARGO_PKG_VERSION")),
+        "{h:?}"
+    );
+    handle.shutdown();
+}
+
+#[test]
+fn corr_id_round_trips_and_trace_endpoint_serves_spans() {
+    let (handle, client) = spawn_server(1);
+    let client = client.with_corr_id("corr-test-roundtrip");
+
+    let id = client.submit(&base_spec(), 0).unwrap();
+    let fin = client.wait(id, WAIT).unwrap();
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "{fin:?}");
+
+    // the client-supplied X-Sparsefw-Corr-Id header sticks to the record
+    assert_eq!(fin.at(&["corr_id"]).as_str(), Some("corr-test-roundtrip"));
+
+    // the trace ring serves the job's spans, sliced by that corr ID
+    let tr = client.trace(id).unwrap();
+    assert_eq!(tr.at(&["corr_id"]).as_str(), Some("corr-test-roundtrip"));
+    let events = tr.at(&["events"]).as_arr().unwrap().to_vec();
+    assert!(!events.is_empty(), "ring must hold spans for the executed job");
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.at(&["name"]).as_str())
+        .collect();
+    assert!(names.contains(&"job"), "whole-job span missing: {names:?}");
+    assert!(names.contains(&"fw"), "per-layer fw span missing: {names:?}");
+    for e in &events {
+        assert_eq!(e.at(&["corr"]).as_str(), Some("corr-test-roundtrip"), "{e:?}");
+        assert!(e.at(&["span"]).as_f64().unwrap() > 0.0);
+        assert!(e.at(&["dur_us"]).as_f64().is_some());
+    }
+
+    // a server-minted corr ID when the client sends none
+    let bare = Client::new(handle.addr().to_string());
+    let id2 = bare.submit(&base_spec(), 0).unwrap();
+    bare.wait(id2, WAIT).unwrap();
+    let corr2 = bare.job(id2).unwrap();
+    let minted = corr2.at(&["corr_id"]).as_str().unwrap().to_string();
+    assert!(!minted.is_empty() && minted != "corr-test-roundtrip");
+
+    // unknown job → error, not an empty 200
+    assert!(client.trace(999_999).is_err());
+    handle.shutdown();
+}
+
+/// Line-by-line grammar check of the Prometheus text exposition: every
+/// line is a well-formed `# HELP`, `# TYPE`, or `name[{labels}] value`
+/// sample; the full METRIC_CATALOG is present with matching types; and
+/// histogram buckets are cumulative, closing with an `+Inf` bucket that
+/// equals `_count`.  (Assertions on observation counts are lower bounds
+/// — trace sinks are process-global, so servers in concurrently running
+/// tests can add phase observations.)
+#[test]
+fn prometheus_exposition_parses_and_covers_the_catalog() {
+    use sparsefw::server::METRIC_CATALOG;
+    let (handle, client) = spawn_server(1);
+    let id = client.submit(&base_spec(), 0).unwrap();
+    let fin = client.wait(id, WAIT).unwrap();
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "{fin:?}");
+
+    let text = client.metrics_prometheus().unwrap();
+    let mut typed: BTreeMap<String, String> = BTreeMap::new();
+    let mut samples: Vec<(String, f64)> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let mut it = rest.splitn(2, ' ');
+            assert!(
+                it.next().unwrap_or("").starts_with("sparsefw_"),
+                "HELP names a foreign metric: {line:?}"
+            );
+            assert!(!it.next().unwrap_or("").is_empty(), "HELP without text: {line:?}");
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("").to_string();
+            let kind = it.next().unwrap_or("").to_string();
+            assert!(
+                matches!(kind.as_str(), "counter" | "gauge" | "histogram"),
+                "bad TYPE: {line:?}"
+            );
+            typed.insert(name, kind);
+        } else {
+            assert!(!line.starts_with('#'), "unknown comment form: {line:?}");
+            let (name_part, value) = line
+                .rsplit_once(' ')
+                .unwrap_or_else(|| panic!("sample line without value: {line:?}"));
+            let v: f64 = value
+                .parse()
+                .unwrap_or_else(|_| panic!("unparseable sample value: {line:?}"));
+            assert!(v.is_finite() && v >= 0.0, "{line:?}");
+            assert!(name_part.starts_with("sparsefw_"), "{line:?}");
+            if let Some((_, labels)) = name_part.split_once('{') {
+                // the only labels we emit are histogram bucket bounds
+                assert!(labels.ends_with('}'), "{line:?}");
+                assert!(labels.starts_with("le=\""), "{line:?}");
+            }
+            samples.push((name_part.to_string(), v));
+        }
+    }
+
+    let get = |n: &str| samples.iter().find(|(s, _)| s == n).map(|(_, v)| *v);
+    for &(name, kind, _) in METRIC_CATALOG {
+        assert_eq!(
+            typed.get(name).map(String::as_str),
+            Some(kind),
+            "catalog metric {name} missing or mistyped"
+        );
+        if kind == "histogram" {
+            let prefix = format!("{name}_bucket");
+            let buckets: Vec<f64> = samples
+                .iter()
+                .filter(|(n, _)| n.starts_with(&prefix))
+                .map(|(_, v)| *v)
+                .collect();
+            assert!(!buckets.is_empty(), "{name} has no buckets");
+            for w in buckets.windows(2) {
+                assert!(w[1] >= w[0], "{name} buckets must be cumulative");
+            }
+            let inf = get(&format!("{name}_bucket{{le=\"+Inf\"}}"));
+            let count = get(&format!("{name}_count"));
+            assert!(inf.is_some(), "{name} missing the +Inf bucket");
+            assert_eq!(inf, count, "{name}: +Inf bucket must equal _count");
+            assert!(get(&format!("{name}_sum")).is_some(), "{name} missing _sum");
+        } else {
+            assert!(get(name).is_some(), "no sample for {name}");
+        }
+    }
+
+    // the finished job left its marks (lower bounds; see doc comment)
+    assert!(get("sparsefw_jobs_done_total").unwrap() >= 1.0);
+    assert!(get("sparsefw_job_wall_seconds_count").unwrap() >= 1.0);
+    assert!(get("sparsefw_queue_wait_seconds_count").unwrap() >= 1.0);
+    assert!(get("sparsefw_phase_fw_seconds_count").unwrap() >= 1.0);
+    handle.shutdown();
+}

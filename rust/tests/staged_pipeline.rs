@@ -318,3 +318,99 @@ fn propagate_policy_survives_spec_save_load_and_reexecutes() {
     let (hits, misses) = session.calib_stats();
     assert_eq!((hits, misses), (1, 1));
 }
+
+// ---------------------------------------------------------------------------
+// Telemetry: span nesting under the 4-way parallel block path
+// ---------------------------------------------------------------------------
+
+/// The staged `--propagate block` pipeline prunes each block's four
+/// layers on a `parallel_map(4)` pool; the tracer propagates the
+/// dispatching thread's context into those workers, so the span tree
+/// must come out well-formed: every parent ID resolves to a recorded
+/// span, no span parents to itself, and the parallel per-layer `fw`
+/// spans all nest under the enclosing root span.
+#[test]
+fn trace_spans_nest_under_parallel_staged_pipeline() {
+    use sparsefw::util::telemetry::{self, TraceEvent, TraceSink};
+    use std::sync::{Arc, Mutex};
+
+    struct CollectSink(Mutex<Vec<TraceEvent>>);
+    impl TraceSink for CollectSink {
+        fn record(&self, ev: &TraceEvent) {
+            if let Ok(mut v) = self.0.lock() {
+                v.push(ev.clone());
+            }
+        }
+    }
+
+    let sink = Arc::new(CollectSink(Mutex::new(Vec::new())));
+    let dyn_sink: Arc<dyn TraceSink> = sink.clone();
+    telemetry::add_sink(dyn_sink.clone());
+
+    let cfg = tiny_cfg();
+    let model = random_model(&cfg, 3);
+    let mut session = session_with(model, "test");
+    let spec = JobSpec {
+        model: "test".into(),
+        method: Method::wanda(),
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+        calib_samples: 6,
+        calib_seed: 2,
+        calib_policy: CalibPolicy::PropagateBlock,
+        ..Default::default()
+    };
+    // a unique correlation ID isolates this test's spans from anything
+    // else tracing in the same process (tests run in parallel)
+    let corr = telemetry::gen_corr_id();
+    let result = {
+        let _cg = telemetry::with_correlation(&corr);
+        let _root = sparsefw::span!("job", test = "nesting");
+        session.execute(&spec).unwrap()
+    };
+    telemetry::remove_sink(&dyn_sink);
+
+    let events: Vec<TraceEvent> = sink
+        .0
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|e| e.corr_id.as_deref() == Some(corr.as_str()))
+        .cloned()
+        .collect();
+
+    for want in ["job", "calib", "gram", "fw"] {
+        assert!(
+            events.iter().any(|e| e.name == want),
+            "missing a {want:?} span; got {:?}",
+            events.iter().map(|e| e.name).collect::<Vec<_>>()
+        );
+    }
+    // one fw span per pruned layer, even though they ran 4-way parallel
+    let fw: Vec<&TraceEvent> = events.iter().filter(|e| e.name == "fw").collect();
+    assert_eq!(fw.len(), result.prune.masks.len());
+
+    // well-formed tree: IDs unique, parents resolve, nobody self-parents
+    let ids: std::collections::BTreeSet<u64> = events.iter().map(|e| e.span_id).collect();
+    assert_eq!(ids.len(), events.len(), "span IDs must be unique");
+    for e in &events {
+        assert_ne!(e.span_id, 0, "span IDs are never 0");
+        assert_ne!(e.parent_id, e.span_id, "{} parents to itself", e.name);
+        assert!(
+            e.parent_id == 0 || ids.contains(&e.parent_id),
+            "{} span {} has unresolved parent {}",
+            e.name,
+            e.span_id,
+            e.parent_id
+        );
+    }
+    // the context captured at dispatch re-enters on the pool workers:
+    // every parallel fw span nests under the enclosing root span
+    let root = events.iter().find(|e| e.name == "job").unwrap().span_id;
+    for e in &fw {
+        assert_eq!(
+            e.parent_id, root,
+            "parallel fw span {} must parent to the root span",
+            e.span_id
+        );
+    }
+}

@@ -24,7 +24,9 @@ echo "== sparsefw analyze --deny-warnings (project lints) =="
 
 echo "== server smoke test (serve --demo on an ephemeral port) =="
 SERVE_LOG="$(mktemp)"
-"$BIN" serve --demo --addr 127.0.0.1:0 --workers 2 >"$SERVE_LOG" 2>&1 &
+TRACE_NDJSON="$(mktemp)"
+"$BIN" serve --demo --addr 127.0.0.1:0 --workers 2 \
+    --trace-out "$TRACE_NDJSON" >"$SERVE_LOG" 2>&1 &
 SERVE_PID=$!
 trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
 
@@ -89,6 +91,36 @@ echo "$REFINE_OUT" | grep -q "refine_obj_delta=" \
     || { echo "refined job summary missing refine_obj_delta: $REFINE_OUT"; exit 1; }
 echo "   --refine swaps,update smoke OK"
 
+# sixth smoke path: observability — client-supplied corr ID, FW
+# convergence certificates via `sparsefw trace`, the server's NDJSON
+# span log (--trace-out), and the Prometheus exposition (scraped over
+# a raw /dev/tcp socket; the image carries no curl)
+OBS_OUT="$("$BIN" submit --addr "$ADDR" --model demo --method sparsefw \
+    --fw-engine incremental --iters 40 --alpha 0.9 --pattern per-row:0.5 \
+    --samples 8 --trace-every 5 --corr-id ci-obs-smoke --wait 2>&1)"
+echo "$OBS_OUT" | grep -q "state=done" \
+    || { echo "observability job did not finish: $OBS_OUT"; cat "$SERVE_LOG"; exit 1; }
+echo "$OBS_OUT" | grep -q "ci-obs-smoke" \
+    || { echo "client corr ID missing from submit output: $OBS_OUT"; exit 1; }
+OBS_ID="$(echo "$OBS_OUT" | sed -n 's/^job \([0-9]*\):.*/\1/p' | head -n1)"
+TRACE_CMD_OUT="$("$BIN" trace --job "$OBS_ID" --addr "$ADDR" 2>&1)"
+echo "$TRACE_CMD_OUT" | grep -qF "[corr ci-obs-smoke]" \
+    || { echo "trace endpoint lost the corr ID: $TRACE_CMD_OUT"; exit 1; }
+echo "$TRACE_CMD_OUT" | grep -qF "gap[last]" \
+    || { echo "no convergence table from sparsefw trace: $TRACE_CMD_OUT"; exit 1; }
+[ -s "$TRACE_NDJSON" ] \
+    || { echo "--trace-out NDJSON span log is empty"; exit 1; }
+head -n1 "$TRACE_NDJSON" | grep -q '"span"' \
+    || { echo "--trace-out first line is not a span event: $(head -n1 "$TRACE_NDJSON")"; exit 1; }
+PROM="$(exec 3<>"/dev/tcp/${ADDR%:*}/${ADDR##*:}"; \
+    printf 'GET /metrics?format=prometheus HTTP/1.1\r\nHost: sparsefw\r\nConnection: close\r\n\r\n' >&3; \
+    cat <&3)"
+echo "$PROM" | grep -q "^# TYPE sparsefw_jobs_done_total counter" \
+    || { echo "prometheus exposition missing jobs_done_total: $PROM"; exit 1; }
+echo "$PROM" | grep -q "^sparsefw_phase_fw_seconds_bucket" \
+    || { echo "prometheus exposition missing the fw phase histogram: $PROM"; exit 1; }
+echo "   observability smoke OK (corr ID + certificates + NDJSON + prometheus)"
+
 "$BIN" status --addr "$ADDR"
 "$BIN" shutdown --addr "$ADDR"
 wait "$SERVE_PID"
@@ -106,6 +138,10 @@ echo "   wrote $REPO/BENCH_fw.json"
 echo "== staged vs one-shot calibration bench (BENCH_calib.json) =="
 SPARSEFW_BENCH_JSON="$REPO/BENCH_calib.json" cargo bench --bench calib_staged
 echo "   wrote $REPO/BENCH_calib.json"
+
+echo "== telemetry overhead bench: spans off/on the FW layer (BENCH_trace.json) =="
+SPARSEFW_BENCH_JSON="$REPO/BENCH_trace.json" cargo bench --bench trace_overhead
+echo "   wrote $REPO/BENCH_trace.json"
 
 # method-registry-driven end-to-end timings: iterates the registry, so
 # newly registered methods are benched automatically (prints a note and
