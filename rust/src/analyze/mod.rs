@@ -18,6 +18,7 @@
 //! | `registry-coverage` | consistency | a registered method missing from the registry test, the `table1_methods` bench, or USAGE |
 //! | `metrics-coverage` | consistency | a metric in [`crate::server::METRIC_CATALOG`] missing from the USAGE metric catalog |
 //! | `codec-fields` | consistency | a `to_json`/`from_json` pair whose key sets differ |
+//! | `unbounded-retry` | robustness | a `loop`/`while` retry loop with neither an attempt cap nor a deadline |
 //! | `stale-allow` | meta | an `// analyze: allow(..)` annotation that no longer suppresses anything |
 //!
 //! False positives are silenced in place:
@@ -40,6 +41,7 @@ pub mod consistency;
 pub mod lexer;
 pub mod locks;
 pub mod panics;
+pub mod retries;
 
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -195,6 +197,7 @@ pub fn analyze_tree(cfg: &AnalyzeConfig) -> Result<Vec<Finding>> {
             panics::check(sf, &mut findings);
         }
         consistency::check_codecs(sf, &mut findings);
+        retries::check(sf, &mut findings);
     }
     if cfg.check_registry {
         consistency::check_registry(&cfg.src_root, &mut findings);

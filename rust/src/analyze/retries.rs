@@ -1,0 +1,195 @@
+//! `unbounded-retry` lint: retry loops must carry an explicit bound.
+//!
+//! A retry loop that can spin forever turns a persistent fault into a
+//! hung worker — exactly the failure mode the fault-injection harness
+//! ([`crate::util::fault`]) exists to surface.  The fix is always the
+//! same: cap the attempts or check a deadline (or both, as
+//! [`crate::util::retry::RetryPolicy::run`] does), so a fault that
+//! never clears becomes a reported error instead of a silent hang.
+//!
+//! Heuristic: a `loop` or `while` whose header/body mentions retry
+//! vocabulary (`retry`, `reconnect`, `backoff`, …) but no bound
+//! vocabulary (`deadline`, `timeout`, `max_attempts`, `remaining`, …)
+//! is flagged.  `for` loops are inherently bounded and exempt, as is
+//! test code.  False positives are silenced with
+//! `// analyze: allow(unbounded-retry, "why this loop terminates")`.
+
+use super::lexer::Token;
+use super::{Finding, SourceFile};
+
+/// Identifier substrings (lowercased) that mark a loop as retry-shaped.
+const RETRY_WORDS: &[&str] = &["retry", "retries", "retrying", "reconnect", "backoff"];
+
+/// Identifier substrings (lowercased) that count as a termination
+/// bound: an attempt cap, a deadline/timeout check, or a shrinking
+/// budget.  Matching any one of these classifies the loop as bounded —
+/// the lint checks that a bound is *consulted*, not that the arithmetic
+/// is right (that is what `util::retry`'s unit tests are for).
+const BOUND_WORDS: &[&str] = &[
+    "deadline",
+    "timeout",
+    "expired",
+    "remaining",
+    "max_attempt",
+    "max_retries",
+    "budget",
+    "give_up",
+];
+
+pub fn check(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let toks = &sf.lexed.tokens;
+    for i in 0..toks.len() {
+        let kw = match toks[i].tok.ident() {
+            Some(k @ ("loop" | "while")) => k,
+            _ => continue,
+        };
+        // `loop`/`while` are keywords, so every hit is a real loop
+        // header (they can't be variable or field names).
+        if sf.in_test(i) {
+            continue;
+        }
+        let Some(end) = body_end(toks, i) else {
+            continue;
+        };
+        let mut retryish = false;
+        let mut bounded = false;
+        // scan header + body: for `while`, the condition sits between
+        // the keyword and the `{`, so starting at the keyword covers it
+        for t in &toks[i..=end] {
+            if let Some(id) = t.tok.ident() {
+                let low = id.to_ascii_lowercase();
+                if !retryish && RETRY_WORDS.iter().any(|w| low.contains(w)) {
+                    retryish = true;
+                }
+                if !bounded && BOUND_WORDS.iter().any(|w| low.contains(w)) {
+                    bounded = true;
+                }
+                if retryish && bounded {
+                    break;
+                }
+            }
+        }
+        if retryish && !bounded {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: toks[i].line,
+                lint: "unbounded-retry".to_string(),
+                message: format!(
+                    "`{kw}` retry loop with neither an attempt cap nor a deadline; \
+                     a fault that never clears spins it forever (use \
+                     util::retry::RetryPolicy::run, or check a Deadline in the loop)"
+                ),
+            });
+        }
+    }
+}
+
+/// Index of the `}` closing the loop body whose `loop`/`while` keyword
+/// is at `kw`.  Finds the first `{` after the keyword and matches
+/// braces from there; `None` when the source is truncated mid-block
+/// (the lexer recovers from anything, so be permissive here too).
+fn body_end(toks: &[Token], kw: usize) -> Option<usize> {
+    let open = (kw + 1..toks.len()).find(|&j| toks[j].tok.is_p('{'))?;
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.tok.is_p('{') {
+            depth += 1;
+        } else if t.tok.is_p('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(src: &str) -> Vec<Finding> {
+        let sf = SourceFile::parse("x.rs", src);
+        let mut out = Vec::new();
+        check(&sf, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_a_retry_loop_without_a_bound() {
+        let src = r#"
+            fn f() {
+                loop {
+                    match connect() {
+                        Ok(c) => return c,
+                        Err(_) => retry_backoff(),
+                    }
+                }
+            }
+        "#;
+        let out = findings(src);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].lint, "unbounded-retry");
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn deadline_or_attempt_cap_classifies_as_bounded() {
+        let src = r#"
+            fn f() {
+                loop {
+                    deadline.check("connect")?;
+                    if connect_with_retry().is_ok() { return; }
+                }
+                while attempt < max_attempts {
+                    reconnect();
+                }
+            }
+        "#;
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn loops_without_retry_vocabulary_are_ignored() {
+        let src = r#"
+            fn f() {
+                loop {
+                    let job = queue.pop();
+                    process(job);
+                }
+            }
+        "#;
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn for_loops_and_test_code_are_exempt() {
+        let src = r#"
+            fn f() {
+                for _ in 0.. {
+                    retry();
+                }
+            }
+            #[cfg(test)]
+            mod tests {
+                fn t() {
+                    loop { reconnect(); }
+                }
+            }
+        "#;
+        assert!(findings(src).is_empty());
+    }
+
+    #[test]
+    fn retry_word_in_while_condition_counts() {
+        let src = r#"
+            fn f() {
+                while should_retry() {
+                    poke();
+                }
+            }
+        "#;
+        let out = findings(src);
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+}

@@ -272,6 +272,25 @@ impl CalibState {
         self.seq_len
     }
 
+    /// Bit-exact digest of the current residual streams (dims + every
+    /// f32 bit pattern, [`crate::util::prng::mix64`]-folded).  Stored
+    /// in per-block checkpoints as the propagated-activation identity:
+    /// on resume the rebuilt state must reproduce the digest recorded
+    /// when a block's grams were computed before the block's
+    /// checkpointed outputs are trusted.
+    pub fn digest(&self) -> u64 {
+        use crate::util::prng::mix64;
+        let mut h = mix64(0x63616c6962 ^ self.hiddens.len() as u64);
+        for m in &self.hiddens {
+            h = mix64(h ^ m.rows as u64);
+            h = mix64(h ^ m.cols as u64);
+            for x in &m.data {
+                h = mix64(h ^ u64::from(x.to_bits()));
+            }
+        }
+        h
+    }
+
     /// Max gram sets simultaneously checked out so far.
     pub fn peak_live_sets(&self) -> usize {
         self.stats.peak_sets.load(Ordering::Relaxed)

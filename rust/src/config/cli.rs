@@ -66,6 +66,18 @@ impl Args {
         Ok(self.get_usize(key, default as usize)? as u64)
     }
 
+    /// Optional numeric flag: `None` when absent (no default value
+    /// makes sense — e.g. `--job-timeout SECS`, unbounded if unset).
+    pub fn get_f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} must be a number")),
+        }
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.bools.contains(key)
     }
@@ -154,6 +166,15 @@ mod tests {
         assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 0.5);
         assert!(a.has("fast"));
         assert_eq!(a.get_usize("missing", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn optional_numeric_flags() {
+        let a = Args::parse(argv("serve --job-timeout 2.5")).unwrap();
+        assert_eq!(a.get_f64_opt("job-timeout").unwrap(), Some(2.5));
+        assert_eq!(a.get_f64_opt("absent").unwrap(), None);
+        let a = Args::parse(argv("serve --job-timeout soon")).unwrap();
+        assert!(a.get_f64_opt("job-timeout").is_err());
     }
 
     #[test]

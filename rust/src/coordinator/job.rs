@@ -22,7 +22,7 @@
 //!   progress callbacks.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -34,8 +34,10 @@ use crate::model::Gpt;
 use crate::pruner::allocation::{owl_sparsities, OwlConfig};
 use crate::pruner::{Method, RefinePass, SparsityPattern};
 use crate::runtime::PjrtRuntime;
+use crate::server::journal::CheckpointStore;
 use crate::tensor::Mat;
 use crate::util::json::{self, Json};
+use crate::util::retry::{Deadline, RetryPolicy};
 
 use super::{per_layer_patterns, run_blocks, run_layers, LayerRun, PruneResult};
 
@@ -446,6 +448,14 @@ pub struct PruneSession {
     progress: Option<ProgressBox>,
     calib_hits: usize,
     calib_misses: usize,
+    /// When set, each `execute` writes per-unit checkpoints under this
+    /// directory (one subdirectory per spec hash) and resumes from any
+    /// verified checkpoints a crashed run left behind.
+    checkpoint_root: Option<PathBuf>,
+    /// Wall-clock budget per `execute` call (`None` = unbounded).
+    job_timeout_secs: Option<f64>,
+    /// Per-layer retry policy for transient failures.
+    retry: RetryPolicy,
 }
 
 impl PruneSession {
@@ -463,6 +473,9 @@ impl PruneSession {
             progress: None,
             calib_hits: 0,
             calib_misses: 0,
+            checkpoint_root: None,
+            job_timeout_secs: None,
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -493,6 +506,9 @@ impl PruneSession {
             progress: None,
             calib_hits: 0,
             calib_misses: 0,
+            checkpoint_root: None,
+            job_timeout_secs: None,
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -518,6 +534,32 @@ impl PruneSession {
 
     pub fn clear_progress(&mut self) {
         self.progress = None;
+    }
+
+    /// Enable durable per-unit checkpoints under `root` (block units on
+    /// the staged path, layer units on the dense path).  A later
+    /// `execute` of the same spec resumes from the verified checkpoint
+    /// prefix; a successful run clears its checkpoint directory.
+    pub fn set_checkpoint_root(&mut self, root: impl Into<PathBuf>) {
+        self.checkpoint_root = Some(root.into());
+    }
+
+    pub fn checkpoint_root(&self) -> Option<&Path> {
+        self.checkpoint_root.as_deref()
+    }
+
+    /// Bound each `execute` call to `secs` wall-clock seconds (`None`
+    /// disables).  The budget is checked between units, so crossing it
+    /// fails the job cleanly — completed units stay checkpointed and a
+    /// resume picks up where the deadline struck.
+    pub fn set_job_timeout(&mut self, secs: Option<f64>) {
+        self.job_timeout_secs = secs;
+    }
+
+    /// Override the per-layer retry policy (transient failures are
+    /// retried with jittered exponential backoff).
+    pub fn set_retry_policy(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
     }
 
     /// `(hits, misses)` of the calibration memo — a cheap way to verify
@@ -716,6 +758,22 @@ impl PruneSession {
             self.ensure_runtime()?;
         }
         crate::debuglog!("executing job: {}", spec.label());
+        // durability scaffolding: a per-spec checkpoint store (when a
+        // root is configured) plus the job-level deadline — both are
+        // carried into the dispatch layer through the LayerRun
+        let store = match &self.checkpoint_root {
+            Some(root) => {
+                let cs = CheckpointStore::for_spec(root, spec)
+                    .with_context(|| format!("opening checkpoint store under {root:?}"))?;
+                // persist the spec beside its units so `sparsefw resume`
+                // can rediscover interrupted runs after a crash
+                cs.save_spec(spec)?;
+                Some(cs)
+            }
+            None => None,
+        };
+        let deadline = Deadline::after_secs(self.job_timeout_secs);
+        let retry = self.retry.clone();
         let prune = if spec.calib_policy.is_propagated() {
             // resolve the allocation first: an unresolvable one (OWL)
             // must fail before any calibration work is paid for or a
@@ -732,6 +790,10 @@ impl PruneSession {
                 refine: &spec.refine,
                 trace_every: spec.trace_every,
                 progress,
+                checkpoint: store.as_ref(),
+                retry,
+                deadline,
+                calib_id: Some((&spec.model, spec.calib_samples, spec.calib_seed)),
             };
             run_blocks(model, state, &run, spec.calib_policy, spec.backend, runtime)?
         } else {
@@ -748,6 +810,10 @@ impl PruneSession {
                 refine: &spec.refine,
                 trace_every: spec.trace_every,
                 progress,
+                checkpoint: store.as_ref(),
+                retry,
+                deadline,
+                calib_id: Some((&spec.model, spec.calib_samples, spec.calib_seed)),
             };
             run_layers(model, calib, &run, spec.backend, runtime)?
         };
@@ -764,6 +830,14 @@ impl PruneSession {
             };
             pruned_sparsity = Some(pruned.pruned_sparsity());
             eval = Some(self.evaluate(&pruned, &espec)?);
+        }
+
+        // the job is fully done: its checkpoints have served their
+        // purpose (clearing is best-effort — leftovers only cost disk)
+        if let Some(cs) = &store {
+            if let Err(e) = cs.clear() {
+                crate::warnlog!("clearing checkpoints {}: {e:#}", cs.dir().display());
+            }
         }
 
         Ok(JobResult { spec: spec.clone(), prune, pruned_sparsity, eval })
@@ -805,6 +879,43 @@ mod tests {
             refine: Vec::new(),
             eval: None,
         }
+    }
+
+    #[test]
+    fn checkpoint_root_resumes_and_clears_on_success() {
+        use crate::server::journal::CheckpointStore;
+        let root = std::env::temp_dir().join(format!("sfw-session-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let spec = JobSpec { calib_policy: CalibPolicy::PropagateBlock, ..base_spec() };
+
+        let mut plain = session();
+        let reference = plain.execute(&spec).unwrap();
+
+        let mut s = session();
+        s.set_checkpoint_root(&root);
+        let res = s.execute(&spec).unwrap();
+        assert_eq!(res.prune.resumed_units, 0);
+        for (k, m) in &reference.prune.masks {
+            assert_eq!(m.data, res.prune.masks[k].data, "{k}");
+        }
+        // a successful run clears its checkpoint directory: nothing to
+        // resume, and a re-execute starts from scratch
+        let store = CheckpointStore::for_spec(&root, &spec).unwrap();
+        assert!(store.load_present(8).is_empty());
+        let again = s.execute(&spec).unwrap();
+        assert_eq!(again.prune.resumed_units, 0);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn job_timeout_is_a_named_clean_failure() {
+        let mut s = session();
+        s.set_job_timeout(Some(1e-9));
+        let err = s.execute(&base_spec()).unwrap_err().to_string();
+        assert!(err.contains("deadline exceeded"), "{err}");
+        // the session stays usable: lifting the timeout succeeds
+        s.set_job_timeout(None);
+        s.execute(&base_spec()).unwrap();
     }
 
     #[test]

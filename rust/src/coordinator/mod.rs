@@ -52,8 +52,10 @@ use crate::pruner::{
     RefinePass, SparsityPattern,
 };
 use crate::runtime::{PjrtKernels, PjrtRuntime};
+use crate::server::journal::{BlockCheckpoint, CheckpointStore, LayerCheckpoint};
 use crate::tensor::Mat;
 use crate::util::pool::parallel_map;
+use crate::util::retry::{Deadline, RetryPolicy};
 use crate::util::telemetry::{SpanGuard, TraceContext};
 
 /// Calibration-memory accounting of one staged ([`run_blocks`]) run.
@@ -96,6 +98,9 @@ pub struct PruneResult {
     /// Calibration-memory stats when the run used staged propagation
     /// ([`run_blocks`]); `None` for one-shot dense calibration.
     pub staged: Option<StagedStats>,
+    /// Units (blocks on the staged path, layers on the dense path)
+    /// restored from verified checkpoints instead of recomputed.
+    pub resumed_units: usize,
 }
 
 impl PruneResult {
@@ -139,6 +144,17 @@ pub(crate) struct LayerRun<'a> {
     /// Spec-level tracing override (0 = method's own setting).
     pub trace_every: usize,
     pub progress: Option<&'a (dyn Fn(&LayerEvent) + Send + Sync)>,
+    /// Durable per-unit checkpoints: completed units are written here
+    /// and verified checkpoints short-circuit recomputation on resume.
+    pub checkpoint: Option<&'a CheckpointStore>,
+    /// Per-layer retry policy for transient failures.
+    pub retry: RetryPolicy,
+    /// Job-level deadline; crossing it fails the run cleanly between
+    /// units (completed units stay checkpointed).
+    pub deadline: Deadline,
+    /// Staged calibration identity (model name, samples, seed) stamped
+    /// into checkpoints so a resume can audit what produced them.
+    pub calib_id: Option<(&'a str, usize, u64)>,
 }
 
 impl<'a> LayerRun<'a> {
@@ -176,6 +192,72 @@ impl<'a> LayerRun<'a> {
             .with_context(|| format!("refining layer {layer}"))?;
         Ok(out)
     }
+
+    /// [`Self::prune_one`] under the run's retry policy and deadline.
+    /// The `fw.iter` fault site fires inside the retried region, so an
+    /// injected transient error exercises the same recovery path a real
+    /// one would.
+    fn prune_one_retrying(
+        &self,
+        kernels: &(dyn FwKernels + '_),
+        layer: &str,
+        w: &Mat,
+        g: &Mat,
+        pattern: &SparsityPattern,
+    ) -> Result<LayerPruneOutput> {
+        self.retry
+            .run(self.deadline, &format!("pruning layer {layer}"), |_attempt| {
+                crate::util::fault::hit("fw.iter")?;
+                self.prune_one(kernels, layer, w, g, pattern)
+            })
+    }
+
+    /// The staged calibration identity to stamp into checkpoints.
+    fn calib_identity(&self) -> (String, usize, u64) {
+        match self.calib_id {
+            Some((m, n, s)) => (m.to_string(), n, s),
+            None => (String::new(), 0, 0),
+        }
+    }
+
+    /// Persist one completed unit, retrying the write itself (the
+    /// `io.write.checkpoint` fault site lives inside
+    /// [`CheckpointStore::save_unit`]).  Checkpointing is durability,
+    /// not correctness: a final failure degrades to a warning so the
+    /// run's result is never lost to a full disk.
+    fn save_unit(&self, ck: &BlockCheckpoint) {
+        let Some(store) = self.checkpoint else { return };
+        let what = format!("checkpointing unit {}", ck.unit);
+        if let Err(e) = self.retry.run(Deadline::none(), &what, |_attempt| store.save_unit(ck)) {
+            crate::warnlog!("checkpoint write for unit {} failed: {e:#}", ck.unit);
+        }
+    }
+
+    /// Build the single-layer checkpoint unit the dense path persists
+    /// (`None` when checkpointing is off).  Dense calibration carries
+    /// no propagated state, so `entry_digest` is 0 and any verified
+    /// subset of units restores on resume.
+    fn layer_unit(
+        &self,
+        n_units: usize,
+        index: usize,
+        name: &str,
+        out: &LayerPruneOutput,
+    ) -> Option<BlockCheckpoint> {
+        let store = self.checkpoint?;
+        let (calib_model, calib_samples, calib_seed) = self.calib_identity();
+        Some(BlockCheckpoint {
+            unit: index,
+            n_units,
+            policy: "off".to_string(),
+            spec_hash: store.hash(),
+            entry_digest: 0,
+            calib_model,
+            calib_samples,
+            calib_seed,
+            layers: vec![LayerCheckpoint::from_output(index, name, out)],
+        })
+    }
 }
 
 /// Unified per-layer dispatch: prune `model`'s layers against `calib`
@@ -210,6 +292,32 @@ pub(crate) fn run_layers(
         }
     };
 
+    // verified single-layer checkpoints from an interrupted run: dense
+    // calibration has no propagated state, so any subset restores —
+    // layers are independent given the grams
+    let resumed: BTreeMap<usize, LayerCheckpoint> = match run.checkpoint {
+        Some(store) => store
+            .load_present(total)
+            .into_iter()
+            .filter_map(|(u, mut ck)| ck.layers.pop().map(|lc| (u, lc)))
+            .filter(|(u, lc)| {
+                lc.index == *u && layers.get(*u).map_or(false, |l| l.name == lc.name)
+            })
+            .collect(),
+        None => BTreeMap::new(),
+    };
+    let resumed_units = resumed.len();
+    if resumed_units > 0 {
+        crate::info!("resuming dense run: {resumed_units}/{total} layer(s) restored from checkpoints");
+    }
+    let restore = |i: usize, l: &LayerInfo| -> Option<Result<(LayerInfo, LayerPruneOutput)>> {
+        let lc = resumed.get(&i)?;
+        Some(lc.to_output().map(|out| {
+            emit(l, &out);
+            (l.clone(), out)
+        }))
+    };
+
     let outputs: Vec<Result<(LayerInfo, LayerPruneOutput)>> = match backend {
         Backend::Native => {
             // LPT dispatch: hand the pool the big mlp_down jobs first so
@@ -222,9 +330,16 @@ pub(crate) fn run_layers(
                 let _tg = tctx.enter();
                 let i = order[k];
                 let l = &layers[i];
+                if let Some(cached) = restore(i, l) {
+                    return cached;
+                }
+                run.deadline.check(&format!("pruning layer {}", l.name))?;
                 let w = model.mat(&l.name);
                 let g = calib.try_gram(&l.name)?;
-                let out = run.prune_one(&NativeKernels, &l.name, w, g, &run.patterns[i])?;
+                let out = run.prune_one_retrying(&NativeKernels, &l.name, w, g, &run.patterns[i])?;
+                if let Some(ck) = run.layer_unit(total, i, &l.name, &out) {
+                    run.save_unit(&ck);
+                }
                 emit(l, &out);
                 Ok((l.clone(), out))
             })
@@ -237,19 +352,29 @@ pub(crate) fn run_layers(
             kernels.use_chunk = backend == Backend::PjrtChunk;
             let mut outputs = Vec::with_capacity(total);
             for (i, l) in layers.iter().enumerate() {
+                if let Some(cached) = restore(i, l) {
+                    outputs.push(cached);
+                    continue;
+                }
+                run.deadline.check(&format!("pruning layer {}", l.name))?;
                 let w = model.mat(&l.name);
                 let g = calib.try_gram(&l.name)?;
                 // abort at the first failure: the remaining sequential
                 // PJRT work would be discarded anyway (progress is
                 // visible through the per-layer "fw" spans)
-                let out = run.prune_one(&kernels, &l.name, w, g, &run.patterns[i])?;
+                let out = run.prune_one_retrying(&kernels, &l.name, w, g, &run.patterns[i])?;
+                if let Some(ck) = run.layer_unit(total, i, &l.name, &out) {
+                    run.save_unit(&ck);
+                }
                 emit(l, &out);
                 outputs.push(Ok((l.clone(), out)));
             }
             outputs
         }
     };
-    collect_outputs(outputs, t0)
+    let mut result = collect_outputs(outputs, t0)?;
+    result.resumed_units = resumed_units;
+    Ok(result)
 }
 
 /// Write one pruned layer's effect into the staged working model: the
@@ -336,14 +461,96 @@ pub(crate) fn run_blocks(
     // while each layer is pruned against its original dense weights
     let mut work = model.clone();
     let mut outputs: Vec<(LayerInfo, LayerPruneOutput)> = Vec::with_capacity(total);
+    let n_blocks = model.cfg.n_layers;
 
-    for bi in 0..model.cfg.n_layers {
+    // Resume: replay the verified checkpoint prefix.  Staged blocks are
+    // order-dependent (each block's grams come from the hiddens the
+    // previous masked blocks produced), so only a contiguous prefix
+    // restores, and each unit's recorded entry digest must match the
+    // digest of the activations we rebuilt up to that point — a
+    // checkpoint from different calibration never silently resumes.
+    let mut start_block = 0usize;
+    let mut resumed_units = 0usize;
+    if let Some(store) = run.checkpoint {
+        for ck in store.load_prefix(n_blocks) {
+            let bi = ck.unit;
+            if ck.policy != policy.label() {
+                crate::warnlog!(
+                    "checkpoint unit {bi}: policy `{}` != run policy `{}`; recomputing from here",
+                    ck.policy,
+                    policy.label()
+                );
+                break;
+            }
+            if ck.entry_digest != state.digest() {
+                crate::warnlog!(
+                    "checkpoint unit {bi}: calibration state digest mismatch; recomputing from here"
+                );
+                break;
+            }
+            let block_layers = &layers[4 * bi..4 * bi + 4];
+            let restored: Result<Vec<LayerPruneOutput>> = block_layers
+                .iter()
+                .enumerate()
+                .map(|(j, l)| {
+                    let lc = ck
+                        .layers
+                        .get(j)
+                        .filter(|lc| lc.name == l.name)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("layer {j} ({}) missing from checkpoint", l.name)
+                        })?;
+                    lc.to_output()
+                })
+                .collect();
+            let restored = match restored {
+                Ok(r) => r,
+                Err(e) => {
+                    crate::warnlog!("checkpoint unit {bi} unusable ({e:#}); recomputing from here");
+                    break;
+                }
+            };
+            for (l, out) in block_layers.iter().zip(restored) {
+                emit(l, &out);
+                apply_output(&mut work, l, &out)?;
+                outputs.push((l.clone(), out));
+            }
+            if bi + 1 < n_blocks {
+                let _sp = crate::span!("calib", advance_block = bi);
+                state.advance(&work, bi)?;
+            }
+            start_block = bi + 1;
+            resumed_units += 1;
+        }
+        if resumed_units > 0 {
+            crate::info!(
+                "resuming staged run: {resumed_units}/{n_blocks} block(s) restored from {}",
+                store.dir().display()
+            );
+        }
+    }
+
+    for bi in start_block..n_blocks {
+        // completed blocks stay checkpointed, so a deadline failure
+        // here loses at most the block in flight
+        run.deadline.check(&format!("pruning block {}/{n_blocks}", bi + 1))?;
+        // digest of the propagated activations *entering* this block,
+        // recorded in its checkpoint for verification on resume
+        let entry_digest = if run.checkpoint.is_some() { state.digest() } else { 0 };
+        let block_start = outputs.len();
         let block_layers = &layers[4 * bi..4 * bi + 4];
         match policy {
             CalibPolicy::Dense => unreachable!("checked above"),
             CalibPolicy::PropagateBlock => {
                 let grams = {
                     let _sp = crate::span!("gram", block = bi);
+                    // the fault site is retried so an injected transient
+                    // gram failure exercises the recovery path; a real
+                    // block_grams error (slot-order misuse) is
+                    // deterministic and fails straight through
+                    run.retry.run(run.deadline, "computing calibration grams", |_attempt| {
+                        crate::util::fault::hit("gram.compute")
+                    })?;
                     state.block_grams(&work, bi)?
                 };
                 let tctx = TraceContext::capture();
@@ -354,7 +561,7 @@ pub(crate) fn run_blocks(
                         let _tg = tctx.enter();
                         let l = &block_layers[j];
                         let g = grams.gram(&l.name)?;
-                        run.prune_one(
+                        run.prune_one_retrying(
                             &NativeKernels,
                             &l.name,
                             model.mat(&l.name),
@@ -367,7 +574,7 @@ pub(crate) fn run_blocks(
                         .enumerate()
                         .map(|(j, l)| {
                             let g = grams.gram(&l.name)?;
-                            run.prune_one(
+                            run.prune_one_retrying(
                                 kernels,
                                 &l.name,
                                 model.mat(&l.name),
@@ -391,18 +598,21 @@ pub(crate) fn run_blocks(
                     let l = &block_layers[j];
                     let grams = {
                         let _sp = crate::span!("gram", layer = &l.name);
+                        run.retry.run(run.deadline, "computing calibration grams", |_attempt| {
+                            crate::util::fault::hit("gram.compute")
+                        })?;
                         state.layer_gram(&work, bi, *slot)?
                     };
                     let g = grams.gram(&l.name)?;
                     let out = match &pjrt_kernels {
-                        None => run.prune_one(
+                        None => run.prune_one_retrying(
                             &NativeKernels,
                             &l.name,
                             model.mat(&l.name),
                             g,
                             &run.patterns[4 * bi + j],
                         )?,
-                        Some(kernels) => run.prune_one(
+                        Some(kernels) => run.prune_one_retrying(
                             kernels,
                             &l.name,
                             model.mat(&l.name),
@@ -417,10 +627,33 @@ pub(crate) fn run_blocks(
                 }
             }
         }
+        // checkpoint the completed block before the state advances past
+        // it: a crash during (or after) the advance replays this unit
+        // and rebuilds the hiddens from it
+        if let Some(store) = run.checkpoint {
+            let (calib_model, calib_samples, calib_seed) = run.calib_identity();
+            let ck = BlockCheckpoint {
+                unit: bi,
+                n_units: n_blocks,
+                policy: policy.label().to_string(),
+                spec_hash: store.hash(),
+                entry_digest,
+                calib_model,
+                calib_samples,
+                calib_seed,
+                layers: outputs
+                    .iter()
+                    .skip(block_start)
+                    .enumerate()
+                    .map(|(j, (l, out))| LayerCheckpoint::from_output(4 * bi + j, &l.name, out))
+                    .collect(),
+            };
+            run.save_unit(&ck);
+        }
         // the masked block produces the inputs block bi+1 actually
         // sees; after the last block there is no consumer, so skip the
         // (full re-forward) advance
-        if bi + 1 < model.cfg.n_layers {
+        if bi + 1 < n_blocks {
             // re-forwarding hiddens through the masked block is
             // calibration work: count it in the calib phase
             let _sp = crate::span!("calib", advance_block = bi);
@@ -429,9 +662,10 @@ pub(crate) fn run_blocks(
     }
 
     let mut result = collect_outputs(outputs.into_iter().map(Ok).collect(), t0)?;
+    result.resumed_units = resumed_units;
     result.staged = Some(StagedStats {
         policy,
-        blocks: model.cfg.n_layers,
+        blocks: n_blocks,
         peak_gram_bytes: state.peak_gram_bytes(),
         total_gram_bytes: layers.iter().map(|l| l.d_in * l.d_in * 4).sum(),
         peak_live_gram_sets: state.peak_live_sets(),
@@ -472,6 +706,7 @@ fn collect_outputs(
         fw_iters: 0,
         refine_obj_delta: None,
         staged: None,
+        resumed_units: 0,
     };
     for out in outputs {
         let (l, o) = out?;
@@ -529,6 +764,10 @@ mod tests {
             refine,
             trace_every: 0,
             progress: None,
+            checkpoint: None,
+            retry: RetryPolicy::default(),
+            deadline: Deadline::none(),
+            calib_id: None,
         };
         run_layers(model, calib, &run, Backend::Native, None)
     }
@@ -587,6 +826,10 @@ mod tests {
             refine: &[],
             trace_every: 0,
             progress: None,
+            checkpoint: None,
+            retry: RetryPolicy::default(),
+            deadline: Deadline::none(),
+            calib_id: None,
         };
         let res = run_layers(&model, &calib, &run, Backend::Native, None).unwrap();
         let pruned = res.apply(&model).unwrap();
@@ -656,6 +899,10 @@ mod tests {
             refine: &[],
             trace_every: 0,
             progress: Some(&cb),
+            checkpoint: None,
+            retry: RetryPolicy::default(),
+            deadline: Deadline::none(),
+            calib_id: None,
         };
         run_layers(&model, &calib, &run, Backend::Native, None).unwrap();
         let mut events = seen.into_inner().unwrap();
@@ -666,5 +913,117 @@ mod tests {
         for (want, (_, got, _)) in events.iter().enumerate() {
             assert_eq!(want, *got);
         }
+    }
+
+    fn checkpoint_run<'a>(
+        method: &'a Method,
+        patterns: &'a [SparsityPattern],
+        store: Option<&'a crate::server::journal::CheckpointStore>,
+    ) -> LayerRun<'a> {
+        LayerRun {
+            method,
+            patterns,
+            refine: &[],
+            trace_every: 0,
+            progress: None,
+            checkpoint: store,
+            retry: RetryPolicy::default(),
+            deadline: Deadline::none(),
+            calib_id: Some(("test", 5, 3)),
+        }
+    }
+
+    #[test]
+    fn staged_checkpoints_resume_bit_identically() {
+        use crate::server::journal::{self, CheckpointStore};
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 3);
+        let bin = TokenBin::from_tokens(crate::data::corpus::generate(5, 4096));
+        let seqs = bin.sample(cfg.seq_len, 5, 3);
+        let patterns =
+            vec![SparsityPattern::PerRow { sparsity: 0.5 }; model.cfg.layers().len()];
+        let method = Method::wanda();
+        let n_blocks = model.cfg.n_layers;
+        let root = std::env::temp_dir().join(format!("sfw-coord-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+
+        for policy in [CalibPolicy::PropagateBlock, CalibPolicy::PropagateLayer] {
+            // reference: uninterrupted run, no checkpoints
+            let run = checkpoint_run(&method, &patterns, None);
+            let state = CalibState::new(&model, &seqs).unwrap();
+            let reference = run_blocks(&model, state, &run, policy, Backend::Native, None).unwrap();
+            assert_eq!(reference.resumed_units, 0);
+            let want = journal::mask_digest(&reference.masks);
+
+            // checkpointed run, then a simulated crash that lost the
+            // final unit: the rerun must restore the surviving prefix
+            // and recompute only the tail, bit-identically
+            let store = CheckpointStore::for_spec(&root, &JobSpec::default()).unwrap();
+            let run = checkpoint_run(&method, &patterns, Some(&store));
+            let state = CalibState::new(&model, &seqs).unwrap();
+            let first = run_blocks(&model, state, &run, policy, Backend::Native, None).unwrap();
+            assert_eq!(first.resumed_units, 0);
+            assert_eq!(journal::mask_digest(&first.masks), want);
+
+            std::fs::remove_file(store.dir().join(format!("unit-{:04}.json", n_blocks - 1)))
+                .unwrap();
+            let state = CalibState::new(&model, &seqs).unwrap();
+            let partial = run_blocks(&model, state, &run, policy, Backend::Native, None).unwrap();
+            assert_eq!(partial.resumed_units, n_blocks - 1, "policy {policy:?}");
+            assert_eq!(journal::mask_digest(&partial.masks), want, "policy {policy:?}");
+            assert_eq!(partial.new_weights.len(), reference.new_weights.len());
+
+            // the rerun re-wrote the lost unit: a third run restores all
+            let state = CalibState::new(&model, &seqs).unwrap();
+            let full = run_blocks(&model, state, &run, policy, Backend::Native, None).unwrap();
+            assert_eq!(full.resumed_units, n_blocks, "policy {policy:?}");
+            assert_eq!(journal::mask_digest(&full.masks), want, "policy {policy:?}");
+            store.clear().unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn dense_checkpoints_resume_any_subset() {
+        use crate::server::journal::{self, CheckpointStore};
+        let (model, calib) = setup();
+        let patterns =
+            vec![SparsityPattern::PerRow { sparsity: 0.5 }; model.cfg.layers().len()];
+        let method = Method::wanda();
+        let total = model.cfg.layers().len();
+        let root = std::env::temp_dir().join(format!("sfw-dense-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+
+        let run = checkpoint_run(&method, &patterns, None);
+        let reference = run_layers(&model, &calib, &run, Backend::Native, None).unwrap();
+        let want = journal::mask_digest(&reference.masks);
+
+        let store = CheckpointStore::for_spec(&root, &JobSpec::default()).unwrap();
+        let run = checkpoint_run(&method, &patterns, Some(&store));
+        let first = run_layers(&model, &calib, &run, Backend::Native, None).unwrap();
+        assert_eq!(first.resumed_units, 0);
+        assert_eq!(journal::mask_digest(&first.masks), want);
+
+        // dense layers are independent: losing an *interior* unit still
+        // restores every other one
+        std::fs::remove_file(store.dir().join("unit-0003.json")).unwrap();
+        let partial = run_layers(&model, &calib, &run, Backend::Native, None).unwrap();
+        assert_eq!(partial.resumed_units, total - 1);
+        assert_eq!(journal::mask_digest(&partial.masks), want);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn expired_deadline_fails_cleanly_between_units() {
+        let (model, calib) = setup();
+        let patterns =
+            vec![SparsityPattern::PerRow { sparsity: 0.5 }; model.cfg.layers().len()];
+        let method = Method::wanda();
+        let mut run = checkpoint_run(&method, &patterns, None);
+        run.deadline = Deadline::after(std::time::Duration::ZERO);
+        let err = run_layers(&model, &calib, &run, Backend::Native, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadline exceeded"), "{err}");
     }
 }

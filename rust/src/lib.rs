@@ -145,6 +145,40 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! ## Crash safety: journal, checkpoints, fault injection
+//!
+//! With `--journal DIR` the server (and `sparsefw prune`) becomes
+//! durable: submissions and state transitions append to an NDJSON job
+//! journal ([`server::journal::Journal`]), and every completed pruning
+//! unit (block when staged, layer when dense) lands as a checksummed
+//! [`server::journal::BlockCheckpoint`] keyed by the spec's hash, so a
+//! `kill -9` at any instant loses at most the unit in flight:
+//!
+//! ```text
+//! POST /jobs ─▶ journal (jobs.ndjson, append-only) ─▶ queue ─▶ worker
+//!                   │                                            │ per-unit checkpoint
+//!                   │ replay on restart                          ▼ (checksum · spec-hash
+//!                   ▼                                             · calib entry-digest)
+//!            re-queue Queued/Running ──▶ resume: verified units restore,
+//!                                        only the remainder recomputes
+//! ```
+//!
+//! Resumed masks are **bit-identical** to an uninterrupted run
+//! (certified by the order-independent `mask_digest` in every job
+//! summary); `sparsefw resume --journal DIR` does the same for killed
+//! CLI runs.  Around that sit bounded retries with jittered exponential
+//! backoff ([`util::retry::RetryPolicy`]), per-job deadlines
+//! (`--job-timeout`), a reconnecting [`server::Client`] that resumes a
+//! dropped `/events` stream after the last event it saw, and load
+//! shedding (queue saturation and abusive submit rates answer `429` +
+//! `Retry-After`).  All of it is testable deterministically: the
+//! [`util::fault`] registry arms seeded fault plans (`SPARSEFW_FAULTS`)
+//! at seven sites — I/O, gram computation, FW iterations, worker
+//! panics, accept/stream paths — and the CI chaos lane sweeps every
+//! site × {error, panic, delay}, asserting no hangs and no lost jobs.
+//! The `unbounded-retry` lint ([`analyze`]) keeps every retry loop on a
+//! deadline or an attempt cap.
+//!
 //! ## Observability: spans, certificates, metrics
 //!
 //! Every layer of that stack reports through one telemetry spine

@@ -61,6 +61,7 @@ USAGE: sparsefw <subcommand> [flags]
              [--out masks.safetensors] [--eval]
              [--trace-every N] [--trace-out trace.ndjson]
              [--result-out result.json]
+             [--journal DIR] [--job-timeout SECS]
   eval       --model M [--masks masks.safetensors] [--pjrt]
   selfcheck                       cross-check PJRT kernels vs native math
   analyze    [--src DIR] [--deny-warnings]
@@ -74,6 +75,10 @@ USAGE: sparsefw <subcommand> [flags]
   serve      [--addr HOST:PORT] [--workers N] [--queue-cap N]
              [--calib-cache N] [--conn-threads N] [--history-cap N]
              [--demo] [--trace-out trace.ndjson]
+             [--journal DIR] [--job-timeout SECS]
+  resume     --journal DIR [--demo] [--job-timeout SECS]
+                                  finish interrupted prune runs from
+                                  their on-disk checkpoints
   submit     <prune flags…> --addr HOST:PORT [--priority N]
              [--wait] [--stream] [--corr-id ID]
   status     --addr HOST:PORT [--job ID]
@@ -146,6 +151,9 @@ on.  Lint catalog:
                           missing from this USAGE's metric catalog
     codec-fields          a to_json/from_json pair whose key sets differ
     stale-allow           an allow annotation that suppresses nothing
+    unbounded-retry       a retry loop with neither an attempt cap nor
+                          a deadline (can spin forever on a fault that
+                          never clears)
 
 False positives are silenced in place, on the offending line or the
 line directly above it, and every suppression must name its reason:
@@ -169,6 +177,59 @@ GET /metrics exposes queue depth / cache hits / worker utilization.
 to completion, --stream follows live progress); port 0 in --addr
 picks an ephemeral port (printed as `listening on …`).  --demo serves
 a randomly-initialized tiny model without an artifacts workspace.
+
+DURABILITY & FAILURE HANDLING
+
+Journal + checkpoints.  `--journal DIR` (on `serve` and `prune`) makes
+runs crash-safe.  The server appends every accepted submission and
+every terminal transition to DIR/jobs.ndjson before acknowledging it;
+on restart the journal replays and every job that was Queued or
+Running when the process died (kill -9 included) is re-queued with its
+original id, priority, and correlation ID.  Separately, workers write
+one checkpoint artifact per completed unit — per block under
+--propagate block|layer, per layer for one-shot dense runs — into a
+per-spec subdirectory (DIR/ckpt-<spec-hash>/).  A resumed job verifies
+each checkpoint (content checksum, spec hash, calibration-state entry
+digest for staged runs) and restarts from the first incomplete or
+unverifiable unit; anything that fails verification is recomputed, so
+resume never trades correctness for speed.  Resumed masks are
+bit-identical to an uninterrupted run, and job summaries report
+resumed_units plus a mask_digest certificate to prove it.  Checkpoints
+clear on success; `sparsefw resume --journal DIR` finishes interrupted
+CLI runs.
+
+Retries + timeouts.  Transient per-layer failures retry with
+exponential backoff and full jitter (3 attempts); `--job-timeout SECS`
+bounds a whole job, failing it cleanly between units with a "deadline
+exceeded" error.  The client side carries connect/read/write socket
+timeouts, and `submit --wait` auto-reconnects a dropped /events stream
+with backoff, resuming after the last event it saw.  Queue saturation
+and abusive submit rates are shed with 429 + Retry-After (the
+sparsefw_jobs_shed_total counter); GET /jobs pages with
+?after=ID&limit=N for large registries.
+
+Fault injection.  SPARSEFW_FAULTS arms deterministic faults at named
+sites for chaos testing (CI sweeps the full matrix).  Plans are
+comma-separated site:kind[:at[:ms]] entries (kind: error|panic|delay;
+`at` = fire on the at-th hit, once; `ms` = delay length) or a JSON
+plan ({"seed": …, "rules": [{"site", "kind", "at", "times"}…]}, where
+times=0 means every hit from `at` on).  Sites:
+
+    io.read              checkpoint / artifact reads
+    io.write.checkpoint  checkpoint writes
+    gram.compute         calibration gram assembly
+    fw.iter              per-layer pruning (inside the retry scope)
+    worker.panic         worker thread before job execution
+    net.accept           connection accept on the server
+    net.mid-response     /events stream, between chunks
+
+    SPARSEFW_FAULTS='fw.iter:error:2' sparsefw prune --model tiny …
+    SPARSEFW_FAULTS='net.mid-response:error' sparsefw serve --demo
+
+Injected faults flow through the same retry/journal machinery as real
+ones: an `error` retries (then fails the job cleanly), a `panic` is
+contained to the worker/connection that hit it, a `delay` exercises
+timeouts.  sparsefw_faults_injected_total counts fired faults.
 
 OBSERVABILITY
 
@@ -207,6 +268,13 @@ buckets (1ms..2min) with p50/p95/p99 in the JSON form.  Catalog:
     sparsefw_jobs_done_total           counter    jobs succeeded
     sparsefw_jobs_failed_total         counter    jobs errored/panicked
     sparsefw_jobs_propagated_total     counter    staged-calibration jobs
+    sparsefw_jobs_replayed_total       counter    jobs re-queued from the
+                                                  journal at startup
+    sparsefw_jobs_shed_total           counter    submissions shed with
+                                                  429 (rate limit / full
+                                                  queue)
+    sparsefw_faults_injected_total     counter    injected faults fired
+                                                  (SPARSEFW_FAULTS)
     sparsefw_calib_cache_hits_total    counter    calibration memo hits
     sparsefw_calib_cache_misses_total  counter    calibration memo misses
     sparsefw_fw_iters_total            counter    FW iterations executed
@@ -270,6 +338,8 @@ fn open_session(args: &Args) -> Result<PruneSession> {
 fn run(args: &Args) -> Result<()> {
     // SPARSEFW_TRACE=stderr installs the pretty-printing span sink
     sparsefw::util::telemetry::install_from_env();
+    // SPARSEFW_FAULTS arms the deterministic fault-injection plan
+    sparsefw::util::fault::install_from_env()?;
     match args.subcommand.as_deref() {
         None | Some("help") => {
             println!("{USAGE}");
@@ -283,6 +353,7 @@ fn run(args: &Args) -> Result<()> {
         Some("analyze") => analyze_cmd(args),
         Some("trace") => trace_cmd(args),
         Some("serve") => serve(args),
+        Some("resume") => resume(args),
         Some("submit") => submit(args),
         Some("status") => status_cmd(args),
         Some("shutdown") => shutdown_cmd(args),
@@ -488,6 +559,14 @@ fn prune(args: &Args) -> Result<()> {
         None => None,
     };
 
+    // durability: with --journal DIR every completed unit (block, or
+    // layer for one-shot runs) checkpoints under DIR; an interrupted
+    // run finishes via `sparsefw resume --journal DIR`
+    if let Some(dir) = args.get("journal") {
+        session.set_checkpoint_root(Path::new(dir));
+    }
+    session.set_job_timeout(args.get_f64_opt("job-timeout")?);
+
     info!("executing job: {}", spec.label());
     session.on_progress(|e| {
         info!("  [{}/{}] {} pruned (err {:.4e})", e.index + 1, e.total, e.layer, e.obj);
@@ -584,6 +663,8 @@ fn serve(args: &Args) -> Result<()> {
         conn_threads: args.get_usize("conn-threads", 8)?,
         job_history_cap: args.get_usize("history-cap", 1024)?,
         trace_out: args.get("trace-out").map(String::from),
+        journal: args.get("journal").map(String::from),
+        job_timeout_secs: args.get_f64_opt("job-timeout")?,
     };
     let sessions = if args.has("demo") {
         info!("serving the --demo in-memory model (no artifacts workspace)");
@@ -598,6 +679,53 @@ fn serve(args: &Args) -> Result<()> {
     std::io::stdout().flush().ok();
     handle.join();
     info!("server stopped");
+    Ok(())
+}
+
+/// `sparsefw resume --journal DIR` — finish interrupted CLI prune runs.
+/// Every spec checkpointed under DIR re-executes with its checkpoint
+/// store attached: verified completed units restore instead of
+/// recomputing, and only the remaining units run.  Masks are
+/// bit-identical to an uninterrupted run.  `--demo` resumes runs made
+/// against the in-memory demo model (e.g. from a killed `serve --demo
+/// --journal DIR`).
+fn resume(args: &Args) -> Result<()> {
+    let root = args
+        .get("journal")
+        .context("resume needs --journal DIR (the directory the interrupted run used)")?
+        .to_string();
+    let root_path = Path::new(&root);
+    let saved = server::journal::saved_specs(root_path)?;
+    if saved.is_empty() {
+        println!("no checkpointed runs under {root}");
+        return Ok(());
+    }
+    let mut session = if args.has("demo") {
+        server::demo_sessions(1)
+            .into_iter()
+            .next()
+            .context("building the demo session")?
+    } else {
+        open_session(args)?
+    };
+    session.set_checkpoint_root(root_path);
+    session.set_job_timeout(args.get_f64_opt("job-timeout")?);
+    session.on_progress(|e| {
+        info!("  [{}/{}] {} pruned (err {:.4e})", e.index + 1, e.total, e.layer, e.obj);
+    });
+    for (dir, spec) in saved {
+        info!("resuming {} (checkpoints in {})", spec.label(), dir.display());
+        let result = session.execute(&spec)?;
+        let summary = server::JobSummary::from_result(&result);
+        println!(
+            "resumed {}: {} unit(s) restored from checkpoints, mask_digest={}, \
+             Σ layer error = {:.4e}",
+            spec.label(),
+            result.prune.resumed_units,
+            summary.mask_digest,
+            summary.total_err,
+        );
+    }
     Ok(())
 }
 

@@ -5,7 +5,7 @@
 //! | method | path              | semantics                                    |
 //! |--------|-------------------|----------------------------------------------|
 //! | POST   | `/jobs`           | submit a [`JobSpec`] (or `{spec, priority}`) |
-//! | GET    | `/jobs`           | list all jobs                                |
+//! | GET    | `/jobs`           | list jobs (page with `?after=ID&limit=N`)    |
 //! | GET    | `/jobs/:id`       | status + per-layer progress + result summary |
 //! | GET    | `/jobs/:id/events`| chunked NDJSON live progress stream          |
 //! | GET    | `/jobs/:id/trace` | recent trace spans for the job's corr ID     |
@@ -20,6 +20,12 @@
 //! [`crate::pruner::MethodRegistry`], so a job naming an unregistered
 //! method is rejected with a 400 whose message names the known set.
 //!
+//! Robustness: `POST /jobs` is token-bucket rate limited per peer IP
+//! and sheds queue saturation with `429 Too Many Requests` +
+//! `Retry-After` (shutdown refusal stays 503); when the server runs
+//! with `--journal`, accepted submissions and terminal transitions are
+//! appended to the durable journal before the response goes out.
+//!
 //! Correlation: `POST /jobs` honours an `X-Sparsefw-Corr-Id` request
 //! header (minting an ID when absent); the worker executes the job
 //! under that ID, so `GET /jobs/:id/trace` can slice the server's trace
@@ -27,7 +33,7 @@
 //! server lines.
 
 use std::io::BufReader;
-use std::net::TcpStream;
+use std::net::{IpAddr, TcpStream};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -55,6 +61,7 @@ const READ_TIMEOUT: Duration = Duration::from_secs(5);
 pub(crate) fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let peer = stream.peer_addr().ok().map(|a| a.ip());
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
@@ -101,7 +108,7 @@ pub(crate) fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
             return;
         }
 
-        let resp = route(&req, &state);
+        let resp = route(&req, &state, peer);
         if resp.write(&mut writer, keep_alive).is_err() {
             return;
         }
@@ -111,14 +118,14 @@ pub(crate) fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
     }
 }
 
-fn route(req: &Request, state: &Arc<ServerState>) -> Response {
+fn route(req: &Request, state: &Arc<ServerState>, peer: Option<IpAddr>) -> Response {
     let segs = req.segments();
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
         ("GET", ["metrics"]) => metrics(req, state),
         ("GET", ["methods"]) => list_methods(),
-        ("GET", ["jobs"]) => list_jobs(state),
-        ("POST", ["jobs"]) => submit_job(req, state),
+        ("GET", ["jobs"]) => list_jobs(req, state),
+        ("POST", ["jobs"]) => submit_job(req, state, peer),
         ("GET", ["jobs", id]) => job_status(state, id),
         ("GET", ["jobs", id, "trace"]) => job_trace(state, id),
         ("DELETE", ["jobs", id]) => cancel_job(state, id),
@@ -294,37 +301,69 @@ fn metrics(req: &Request, state: &ServerState) -> Response {
     Response::json(200, &v)
 }
 
-fn list_jobs(state: &ServerState) -> Response {
-    let jobs: Vec<Json> = state
-        .queue
-        .briefs()
-        .iter()
-        .map(|b| {
+fn brief_json(b: &super::queue::JobBrief) -> Json {
+    Json::obj(vec![
+        ("id", (b.id as usize).into()),
+        ("state", b.state.label().into()),
+        ("priority", (b.priority as f64).into()),
+        ("label", b.label.as_str().into()),
+        (
+            "progress",
             Json::obj(vec![
-                ("id", (b.id as usize).into()),
-                ("state", b.state.label().into()),
-                ("priority", (b.priority as f64).into()),
-                ("label", b.label.as_str().into()),
-                (
-                    "progress",
-                    Json::obj(vec![
-                        ("completed", b.completed.into()),
-                        ("total", b.total.into()),
-                    ]),
-                ),
-            ])
-        })
-        .collect();
-    Response::json(
-        200,
-        &Json::obj(vec![
-            ("jobs", Json::Arr(jobs)),
-            ("queue_depth", state.queue.depth().into()),
-        ]),
-    )
+                ("completed", b.completed.into()),
+                ("total", b.total.into()),
+            ]),
+        ),
+    ])
 }
 
-fn submit_job(req: &Request, state: &ServerState) -> Response {
+/// `GET /jobs[?after=ID&limit=N]` — the registry listing.  Without
+/// query parameters every job is returned (the original shape); with
+/// `after`/`limit` the listing pages by cursor: `next_cursor` appears
+/// iff more rows remain, and is passed back verbatim as `after`.
+fn list_jobs(req: &Request, state: &ServerState) -> Response {
+    let paged = req.query.contains_key("after") || req.query.contains_key("limit");
+    let mut fields = Vec::new();
+    if paged {
+        let after = match req.query.get("after") {
+            Some(v) => match v.parse::<JobId>() {
+                Ok(id) => Some(id),
+                Err(_) => return Response::error(400, "after must be a job id"),
+            },
+            None => None,
+        };
+        let limit = match req.query.get("limit") {
+            Some(v) => match v.parse::<usize>() {
+                Ok(n) => n,
+                Err(_) => return Response::error(400, "limit must be a positive integer"),
+            },
+            None => 50,
+        };
+        let (briefs, next) = state.queue.briefs_page(after, limit);
+        fields.push(("jobs", Json::Arr(briefs.iter().map(brief_json).collect())));
+        if let Some(cursor) = next {
+            fields.push(("next_cursor", (cursor as usize).into()));
+        }
+    } else {
+        let jobs: Vec<Json> = state.queue.briefs().iter().map(brief_json).collect();
+        fields.push(("jobs", Json::Arr(jobs)));
+    }
+    fields.push(("queue_depth", state.queue.depth().into()));
+    Response::json(200, &Json::obj(fields))
+}
+
+fn submit_job(req: &Request, state: &ServerState, peer: Option<IpAddr>) -> Response {
+    // shed abusive submit rates before parsing the body: the token
+    // bucket is per peer IP, so one tight submit loop cannot starve
+    // other clients (or the queue) of service
+    if !state.limiter.allow(peer) {
+        state
+            .metrics
+            .jobs_shed
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        return Response::error(429, "submit rate limit exceeded; retry shortly")
+            .with_header("Retry-After", "1");
+    }
     let body = match req.body_json() {
         Ok(v) => v,
         Err(e) => return Response::error(400, &format!("{e:#}")),
@@ -350,12 +389,17 @@ fn submit_job(req: &Request, state: &ServerState) -> Response {
         .filter(|c| !c.is_empty())
         .cloned()
         .unwrap_or_else(crate::util::telemetry::gen_corr_id);
-    match state.queue.submit_with_corr(spec, priority, corr_id.clone()) {
+    match state.queue.submit_with_corr(spec.clone(), priority, corr_id.clone()) {
         Ok(id) => {
             state
                 .metrics
                 .jobs_submitted
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            // durability: record the accepted job before acknowledging
+            // it, so a crash after the 202 still replays the job
+            if let Some(j) = &state.journal {
+                j.record_submit(id, &corr_id, priority, &spec);
+            }
             Response::json(
                 202,
                 &Json::obj(vec![
@@ -366,7 +410,21 @@ fn submit_job(req: &Request, state: &ServerState) -> Response {
                 ]),
             )
         }
-        Err(e) => Response::error(503, &format!("{e:#}")),
+        // queue saturation is load shedding, not an error the client
+        // can fix: 429 + Retry-After, counted separately from submits
+        // (shutdown refusal stays a 503 — retrying won't help there)
+        Err(e) => {
+            let msg = format!("{e:#}");
+            if msg.contains("queue full") {
+                state
+                    .metrics
+                    .jobs_shed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Response::error(429, &msg).with_header("Retry-After", "1")
+            } else {
+                Response::error(503, &msg)
+            }
+        }
     }
 }
 
@@ -385,10 +443,15 @@ fn cancel_job(state: &ServerState, id: &str) -> Response {
         return Response::error(400, "job id must be an integer");
     };
     match state.queue.cancel(id) {
-        Ok(()) => Response::json(
-            200,
-            &Json::obj(vec![("id", (id as usize).into()), ("state", "cancelled".into())]),
-        ),
+        Ok(()) => {
+            if let Some(j) = &state.journal {
+                j.record_state(id, "cancelled");
+            }
+            Response::json(
+                200,
+                &Json::obj(vec![("id", (id as usize).into()), ("state", "cancelled".into())]),
+            )
+        }
         Err(CancelError::Unknown) => Response::error(404, &format!("no job {id}")),
         Err(e @ CancelError::NotCancellable(_)) => Response::error(409, &e.to_string()),
     }
@@ -422,6 +485,12 @@ fn stream_job_events(writer: &mut TcpStream, state: &Arc<ServerState>, id: &str)
     let mut last_write = std::time::Instant::now();
     loop {
         let Some(rec) = state.queue.wait_update(id, seen, STREAM_TICK) else { break };
+        // fault site: sever the stream between chunks with no trailer,
+        // exactly what a mid-response network partition looks like to
+        // the client (exercised by the reconnect regression test)
+        if crate::util::fault::hit("net.mid-response").is_err() {
+            return;
+        }
         let mut failed = false;
         for e in rec.events.get(seen..).unwrap_or(&[]) {
             let mut line = crate::util::json::to_string(&event_json(e));

@@ -5,12 +5,21 @@
 //! clients that want it.  Used by the CLI (`sparsefw
 //! submit/status/shutdown`), the CI smoke test, examples, and the
 //! integration tests.
+//!
+//! Failure handling: every socket carries connect/read/write timeouts,
+//! so no call blocks forever on a dead peer.  [`Client::wait`] follows
+//! the `/events` stream and *reconnects* when the stream drops
+//! mid-response (a network partition, a restarted server), resuming
+//! from the last event it saw — the server replays recorded events on
+//! a fresh stream, and the client skips the prefix it already
+//! processed.  HTTP-level rejections (404, 400) are permanent and
+//! surface immediately; only transport drops are retried.
 
 use std::io::{BufReader, Read, Write};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::coordinator::JobSpec;
 use crate::util::json::{self, Json};
@@ -18,10 +27,31 @@ use crate::util::json::{self, Json};
 use super::http::{read_chunked, read_response_head};
 use super::queue::JobId;
 
+/// A classified `/events` stream failure: retrying cannot fix a
+/// [`StreamFailure::Permanent`] rejection (the server answered and said
+/// no), while a [`StreamFailure::Dropped`] transport error is exactly
+/// what reconnect-with-backoff exists for.
+#[derive(Debug)]
+enum StreamFailure {
+    Permanent(anyhow::Error),
+    Dropped(anyhow::Error),
+}
+
+impl StreamFailure {
+    fn into_error(self) -> anyhow::Error {
+        match self {
+            StreamFailure::Permanent(e) | StreamFailure::Dropped(e) => e,
+        }
+    }
+}
+
 pub struct Client {
     addr: String,
     /// Per-request socket read timeout.
     pub timeout: Duration,
+    /// TCP connect timeout (a black-holed address otherwise blocks for
+    /// the OS default, minutes on some platforms).
+    pub connect_timeout: Duration,
     /// Correlation ID sent as `X-Sparsefw-Corr-Id` on every request;
     /// the server tags submitted jobs (and their worker-side trace
     /// spans + log lines) with it.  `None` lets the server mint one
@@ -31,7 +61,12 @@ pub struct Client {
 
 impl Client {
     pub fn new(addr: impl Into<String>) -> Self {
-        Self { addr: addr.into(), timeout: Duration::from_secs(30), corr_id: None }
+        Self {
+            addr: addr.into(),
+            timeout: Duration::from_secs(30),
+            connect_timeout: Duration::from_secs(5),
+            corr_id: None,
+        }
     }
 
     /// Builder: tag every request from this client with `corr_id`.
@@ -47,11 +82,28 @@ impl Client {
     // -- transport ----------------------------------------------------------
 
     fn connect(&self) -> Result<TcpStream> {
-        let stream = TcpStream::connect(&self.addr)
-            .with_context(|| format!("connecting to sparsefw server at {}", self.addr))?;
-        stream.set_read_timeout(Some(self.timeout))?;
-        let _ = stream.set_nodelay(true);
-        Ok(stream)
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving sparsefw server address {}", self.addr))?;
+        let mut last: Option<std::io::Error> = None;
+        for addr in addrs {
+            match TcpStream::connect_timeout(&addr, self.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_read_timeout(Some(self.timeout))?;
+                    stream.set_write_timeout(Some(self.timeout))?;
+                    let _ = stream.set_nodelay(true);
+                    return Ok(stream);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => {
+                Err(e).with_context(|| format!("connecting to sparsefw server at {}", self.addr))
+            }
+            None => bail!("address {} resolved to nothing", self.addr),
+        }
     }
 
     fn send_request(
@@ -204,22 +256,67 @@ impl Client {
     }
 
     /// Block until the job reaches a terminal state; returns the final
-    /// `GET /jobs/:id` payload.  Follows the event stream — server-side
-    /// that parks on a condvar, so a waiting client costs one idle
-    /// connection, not a poll loop — and falls back to coarse polling
-    /// (where `timeout` is enforced) if the stream drops mid-job; while
-    /// the stream is live and the job still progressing, completion
-    /// wins over the deadline.
+    /// `GET /jobs/:id` payload.  Equivalent to [`Client::follow`] with
+    /// no event callback.
     pub fn wait(&self, id: JobId, timeout: Duration) -> Result<Json> {
+        self.follow(id, timeout, |_| {})
+    }
+
+    /// Block until the job reaches a terminal state, firing `on_event`
+    /// for each layer event; returns the final `GET /jobs/:id` payload.
+    ///
+    /// Follows the event stream — server-side that parks on a condvar,
+    /// so a waiting client costs one idle connection, not a poll loop.
+    /// A stream severed mid-response reconnects with exponential
+    /// backoff, resuming after the last event already delivered (the
+    /// server replays recorded events; the client skips the seen
+    /// prefix).  HTTP-level rejections fail immediately; `timeout`
+    /// bounds the total wait including all reconnect attempts, and the
+    /// eventual error says how many drops were survived.
+    pub fn follow(
+        &self,
+        id: JobId,
+        timeout: Duration,
+        mut on_event: impl FnMut(&Json),
+    ) -> Result<Json> {
         let deadline = Instant::now() + timeout;
-        if let Ok(fin) = self.stream(id, |_| {}) {
-            let state = fin.at(&["state"]).as_str().unwrap_or("");
-            if matches!(state, "done" | "failed" | "cancelled") {
-                // the stream trailer omits progress/events; re-fetch
-                return self.job(id);
+        let mut seen = 0usize;
+        let mut drops = 0usize;
+        let mut backoff = Duration::from_millis(50);
+        loop {
+            match self.stream_events_from(id, &mut seen, &mut on_event) {
+                Ok(Some(fin)) => {
+                    let state = fin.at(&["state"]).as_str().unwrap_or("");
+                    if matches!(state, "done" | "failed" | "cancelled") {
+                        // the stream trailer omits progress/events; re-fetch
+                        return self.job(id);
+                    }
+                    break; // non-terminal trailer — poll below
+                }
+                Ok(None) => break, // clean end, server draining — poll below
+                Err(StreamFailure::Permanent(e)) => return Err(e),
+                Err(StreamFailure::Dropped(e)) => {
+                    drops += 1;
+                    // the job may have finished while we were cut off
+                    if let Ok(v) = self.job(id) {
+                        let state = v.at(&["state"]).as_str().unwrap_or("");
+                        if matches!(state, "done" | "failed" | "cancelled") {
+                            return Ok(v);
+                        }
+                    }
+                    if Instant::now() >= deadline {
+                        return Err(e.context(format!(
+                            "job {id} not finished after {timeout:?} \
+                             ({drops} dropped event stream(s))"
+                        )));
+                    }
+                    std::thread::sleep(backoff.min(remaining(deadline)));
+                    backoff = (backoff * 2).min(Duration::from_secs(1));
+                }
             }
-            // stream ended early (e.g. server draining) — poll below
         }
+        // coarse polling fallback: the stream ended without a terminal
+        // line (e.g. server draining) but the job record persists
         let mut interval = Duration::from_millis(50);
         loop {
             let v = self.job(id)?;
@@ -240,11 +337,43 @@ impl Client {
     /// the returned value is the stream's final state line (id, state,
     /// result / error).  Falls back to [`Client::job`] if the stream
     /// ends without a terminal line (server shutting down mid-stream).
+    /// Single-shot: a severed stream is an error here — use
+    /// [`Client::follow`] for the reconnecting variant.
     pub fn stream(&self, id: JobId, mut on_event: impl FnMut(&Json)) -> Result<Json> {
-        let mut stream = self.connect()?;
-        self.send_request(&mut stream, "GET", &format!("/jobs/{id}/events"), None)?;
-        let mut reader = BufReader::new(stream);
-        let (code, headers) = read_response_head(&mut reader)?;
+        let mut seen = 0usize;
+        match self.stream_events_from(id, &mut seen, &mut on_event) {
+            Ok(Some(v)) => Ok(v),
+            Ok(None) => self.job(id),
+            Err(f) => Err(f.into_error()),
+        }
+    }
+
+    /// One `/events` connection, skipping the first `*seen` layer
+    /// events (already delivered on a previous connection) and counting
+    /// the rest into `*seen` as they are handed to `on_event`.  Returns
+    /// the terminal state line if the stream reached one, `Ok(None)` on
+    /// a clean end without it.
+    fn stream_events_from(
+        &self,
+        id: JobId,
+        seen: &mut usize,
+        on_event: &mut impl FnMut(&Json),
+    ) -> Result<Option<Json>, StreamFailure> {
+        let attempt = || -> Result<(BufReader<TcpStream>, u16, bool)> {
+            let mut stream = self.connect()?;
+            self.send_request(&mut stream, "GET", &format!("/jobs/{id}/events"), None)?;
+            let mut reader = BufReader::new(stream);
+            let (code, headers) = read_response_head(&mut reader)?;
+            let chunked =
+                headers.get("transfer-encoding").map(String::as_str) == Some("chunked");
+            Ok((reader, code, chunked))
+        };
+        let (mut reader, code, chunked) = attempt().map_err(StreamFailure::Dropped)?;
+        if (200..300).contains(&code) && !chunked {
+            return Err(StreamFailure::Permanent(anyhow!(
+                "GET /jobs/{id}/events: expected a chunked stream"
+            )));
+        }
         if !(200..300).contains(&code) {
             // the error payload is a plain (non-chunked) response
             let mut body = String::new();
@@ -253,26 +382,33 @@ impl Client {
                 .ok()
                 .and_then(|v| v.at(&["error"]).as_str().map(String::from))
                 .unwrap_or(body);
-            bail!("GET /jobs/{id}/events: HTTP {code}: {msg}");
+            return Err(StreamFailure::Permanent(anyhow!(
+                "GET /jobs/{id}/events: HTTP {code}: {msg}"
+            )));
         }
-        ensure!(
-            headers.get("transfer-encoding").map(String::as_str) == Some("chunked"),
-            "expected a chunked stream"
-        );
+        let mut skip = *seen;
         let mut terminal: Option<Json> = None;
         read_chunked(&mut reader, |line| {
             if let Ok(v) = json::parse(line) {
                 if v.get("state").is_some() {
                     terminal = Some(v);
                 } else if v.get("layer").is_some() {
-                    on_event(&v);
+                    if skip > 0 {
+                        skip -= 1;
+                    } else {
+                        *seen += 1;
+                        on_event(&v);
+                    }
                 }
                 // other lines (heartbeats) are dropped
             }
-        })?;
-        match terminal {
-            Some(v) => Ok(v),
-            None => self.job(id),
-        }
+        })
+        .map_err(StreamFailure::Dropped)?;
+        Ok(terminal)
     }
+}
+
+/// Time left until `deadline` (zero once past it).
+fn remaining(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now())
 }

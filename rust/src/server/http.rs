@@ -167,6 +167,8 @@ pub fn status_reason(code: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -179,6 +181,8 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `Retry-After` on a 429).
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -187,11 +191,17 @@ impl Response {
             status,
             content_type: "application/json",
             body: json::to_string_pretty(v).into_bytes(),
+            headers: Vec::new(),
         }
     }
 
     pub fn text(status: u16, body: &str) -> Self {
-        Self { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+        Self {
+            status,
+            content_type: "text/plain",
+            body: body.as_bytes().to_vec(),
+            headers: Vec::new(),
+        }
     }
 
     /// JSON `{"error": msg}` with the given status.
@@ -199,16 +209,26 @@ impl Response {
         Self::json(status, &Json::obj(vec![("error", msg.into())]))
     }
 
+    /// Attach an extra response header (builder style).
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
+        self.headers.push((name, value.into()));
+        self
+    }
+
     pub fn write(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
             status_reason(self.status),
             self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
         )?;
+        for (name, value) in &self.headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
         w.write_all(&self.body)?;
         w.flush()
     }
@@ -384,6 +404,18 @@ mod tests {
             true
         );
         assert_eq!(json::parse(&text[body_at..]).unwrap().at(&["ok"]).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn extra_headers_are_emitted_before_the_body() {
+        let resp = Response::error(429, "slow down").with_header("Retry-After", "1");
+        let mut out = Vec::new();
+        resp.write(&mut out, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        let body_at = text.find("\r\n\r\n").unwrap() + 4;
+        assert!(text[..body_at].contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text[body_at..].contains("slow down"));
     }
 
     #[test]

@@ -1,0 +1,886 @@
+//! Durable job journal + per-unit checkpoints (crash-safe pruning).
+//!
+//! Two artifacts live under the journal directory (`--journal DIR`,
+//! or `<workspace>/journal` for workspace servers):
+//!
+//! ```text
+//! <dir>/jobs.ndjson            append-only journal: one JSON line per
+//!                              submit / state transition, with corr-id
+//! <dir>/ckpt-<spec_hash>/      one checkpoint dir per distinct spec
+//!     spec.json                the spec itself (what `sparsefw resume` re-runs)
+//!     unit-0000.json           per-unit artifact: masks (1 bit/elem, hex),
+//!     unit-0001.json           objectives, refine deltas, optional
+//!     ...                      reconstructed weights (f32 LE, hex), and the
+//!                              propagated-activation digest entering the unit
+//! ```
+//!
+//! A *unit* is one block of four layers on the staged path
+//! (`--propagate block|layer`) or one layer on the dense path.  Every
+//! checkpoint file wraps its body in `{"body": …, "checksum": …}` where
+//! the checksum is a [`mix64`] fold of the canonical serialized body —
+//! [`CheckpointStore::load_prefix`] / [`CheckpointStore::load_present`]
+//! verify checksum, spec hash, and mask/weight lengths, and silently
+//! drop anything that fails verification (it simply recomputes), so a
+//! torn write from a `kill -9` can never corrupt a resumed run.
+//!
+//! Replay folds `jobs.ndjson`: a job whose last recorded state is
+//! `queued` or `running` did not finish before the crash and re-enters
+//! the queue (same id, corr-id, priority) on the next `sparsefw serve`
+//! startup.  Masks restored from checkpoints are bit-identical to the
+//! originals — 1 bit per element, exact f32 round-trip for weights —
+//! which is what makes resumed runs indistinguishable from
+//! uninterrupted ones (asserted by `tests/crash_recovery.rs`).
+
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::job::JobSpec;
+use crate::pruner::LayerPruneOutput;
+use crate::tensor::Mat;
+use crate::util::json::{self, Json};
+use crate::util::prng::mix64;
+use crate::util::sync::lock_recover;
+
+/// Journal file name inside the journal directory.
+pub const JOURNAL_FILE: &str = "jobs.ndjson";
+
+// ---------------------------------------------------------------------------
+// Hex + checksum primitives
+// ---------------------------------------------------------------------------
+
+fn bytes_to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        for nib in [b >> 4, b & 0xf] {
+            s.push(char::from_digit(u32::from(nib), 16).unwrap_or('0'));
+        }
+    }
+    s
+}
+
+fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
+    ensure!(s.len() % 2 == 0, "odd-length hex string");
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let mut hi: Option<u8> = None;
+    for c in s.chars() {
+        let d = c.to_digit(16).context("non-hex digit")? as u8;
+        match hi.take() {
+            None => hi = Some(d),
+            Some(h) => out.push(h << 4 | d),
+        }
+    }
+    Ok(out)
+}
+
+fn u64_hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 `{s}`"))
+}
+
+/// mix64 fold over a byte string (checksums, digests, spec hashes).
+/// u64 values never pass through JSON numbers — the in-tree parser
+/// stores them as f64 (53-bit mantissa), so they travel as hex strings.
+pub fn fold_bytes(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = mix64(seed ^ bytes.len() as u64);
+    for chunk in bytes.chunks(8) {
+        let mut v = [0u8; 8];
+        for (dst, src) in v.iter_mut().zip(chunk) {
+            *dst = *src;
+        }
+        h = mix64(h ^ u64::from_le_bytes(v));
+    }
+    h
+}
+
+/// Canonical hash of a job spec (its serialized JSON form — key order
+/// is deterministic, the writer is canonical).  Checkpoints belong to
+/// exactly one spec hash; resume refuses artifacts from any other.
+pub fn spec_hash(spec: &JobSpec) -> u64 {
+    fold_bytes(0x73706563, json::to_string(&spec.to_json()).as_bytes())
+}
+
+/// Order-independent digest of a full mask set (BTreeMap iteration is
+/// name-sorted): the bit-identity certificate `tests/crash_recovery.rs`
+/// compares between resumed and uninterrupted runs.
+pub fn mask_digest(masks: &BTreeMap<String, Mat>) -> u64 {
+    let mut h = mix64(0x6d61736b);
+    for (name, m) in masks {
+        h = fold_bytes(h, name.as_bytes());
+        h = mix64(h ^ m.rows as u64);
+        h = mix64(h ^ m.cols as u64);
+        h = fold_bytes(h, &pack_mask(m));
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Mask / weight packing
+// ---------------------------------------------------------------------------
+
+/// 1 bit per element, row-major, LSB-first within each byte.
+fn pack_mask(m: &Mat) -> Vec<u8> {
+    let mut out = vec![0u8; (m.data.len() + 7) / 8];
+    for (i, &x) in m.data.iter().enumerate() {
+        if x != 0.0 {
+            if let Some(b) = out.get_mut(i / 8) {
+                *b |= 1 << (i % 8);
+            }
+        }
+    }
+    out
+}
+
+fn unpack_mask(bits: &[u8], rows: usize, cols: usize) -> Result<Mat> {
+    ensure!(
+        bits.len() == (rows * cols + 7) / 8,
+        "mask bit string has {} bytes, want {} for {rows}×{cols}",
+        bits.len(),
+        (rows * cols + 7) / 8
+    );
+    let mut m = Mat::zeros(rows, cols);
+    for (i, x) in m.data.iter_mut().enumerate() {
+        if bits.get(i / 8).copied().unwrap_or(0) >> (i % 8) & 1 == 1 {
+            *x = 1.0;
+        }
+    }
+    Ok(m)
+}
+
+fn f32s_to_hex(xs: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    bytes_to_hex(&bytes)
+}
+
+fn hex_to_f32s(s: &str) -> Result<Vec<f32>> {
+    let bytes = hex_to_bytes(s)?;
+    ensure!(bytes.len() % 4 == 0, "f32 hex string not a multiple of 4 bytes");
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    let mut acc = [0u8; 4];
+    for (i, b) in bytes.iter().enumerate() {
+        if let Some(slot) = acc.get_mut(i % 4) {
+            *slot = *b;
+        }
+        if i % 4 == 3 {
+            out.push(f32::from_le_bytes(acc));
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint artifacts
+// ---------------------------------------------------------------------------
+
+/// One pruned layer inside a checkpoint unit.  Masks are stored at 1
+/// bit per element and reconstructed weights as exact f32 bit patterns,
+/// so [`LayerCheckpoint::to_output`] is bit-identical to the original
+/// [`LayerPruneOutput`] (traces and convergence certificates are not
+/// persisted — they are observability, not state).
+#[derive(Clone, Debug)]
+pub struct LayerCheckpoint {
+    /// Index into `model.cfg.layers()`.
+    pub index: usize,
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    mask_bits: Vec<u8>,
+    pub obj: f64,
+    pub warm_obj: Option<f64>,
+    pub fw_iters: usize,
+    pub refine_obj_delta: Option<f64>,
+    pub new_weights: Option<Vec<f32>>,
+}
+
+impl LayerCheckpoint {
+    pub fn from_output(index: usize, name: &str, out: &LayerPruneOutput) -> LayerCheckpoint {
+        LayerCheckpoint {
+            index,
+            name: name.to_string(),
+            rows: out.mask.rows,
+            cols: out.mask.cols,
+            mask_bits: pack_mask(&out.mask),
+            obj: out.obj,
+            warm_obj: out.warm_obj,
+            fw_iters: out.fw_iters,
+            refine_obj_delta: out.refine_obj_delta,
+            new_weights: out.new_weights.as_ref().map(|m| m.data.clone()),
+        }
+    }
+
+    /// Reconstruct the layer output this checkpoint was taken from.
+    pub fn to_output(&self) -> Result<LayerPruneOutput> {
+        let mask = unpack_mask(&self.mask_bits, self.rows, self.cols)
+            .with_context(|| format!("checkpointed layer {}", self.name))?;
+        let new_weights = match &self.new_weights {
+            Some(data) => {
+                ensure!(
+                    data.len() == self.rows * self.cols,
+                    "checkpointed layer {}: {} weights, want {}×{}",
+                    self.name,
+                    data.len(),
+                    self.rows,
+                    self.cols
+                );
+                let mut m = Mat::zeros(self.rows, self.cols);
+                m.data.copy_from_slice(data);
+                Some(m)
+            }
+            None => None,
+        };
+        Ok(LayerPruneOutput {
+            mask,
+            obj: self.obj,
+            warm_obj: self.warm_obj,
+            new_weights,
+            trace: None,
+            convergence: None,
+            fw_iters: self.fw_iters,
+            refine_obj_delta: self.refine_obj_delta,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("index", Json::from(self.index)),
+            ("name", Json::from(self.name.as_str())),
+            ("rows", Json::from(self.rows)),
+            ("cols", Json::from(self.cols)),
+            ("mask_hex", Json::from(bytes_to_hex(&self.mask_bits))),
+            ("obj", Json::from(self.obj)),
+            ("fw_iters", Json::from(self.fw_iters)),
+        ];
+        if let Some(w) = self.warm_obj {
+            fields.push(("warm_obj", Json::from(w)));
+        }
+        if let Some(d) = self.refine_obj_delta {
+            fields.push(("refine_obj_delta", Json::from(d)));
+        }
+        if let Some(nw) = &self.new_weights {
+            fields.push(("new_weights_hex", Json::from(f32s_to_hex(nw))));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<LayerCheckpoint> {
+        let name = j
+            .at(&["name"])
+            .as_str()
+            .context("layer checkpoint missing `name`")?
+            .to_string();
+        let rows = j.at(&["rows"]).as_usize().context("layer checkpoint missing `rows`")?;
+        let cols = j.at(&["cols"]).as_usize().context("layer checkpoint missing `cols`")?;
+        let mask_bits = hex_to_bytes(
+            j.at(&["mask_hex"]).as_str().context("layer checkpoint missing `mask_hex`")?,
+        )?;
+        let new_weights = match j.at(&["new_weights_hex"]).as_str() {
+            Some(h) => Some(hex_to_f32s(h)?),
+            None => None,
+        };
+        Ok(LayerCheckpoint {
+            index: j.at(&["index"]).as_usize().context("layer checkpoint missing `index`")?,
+            name,
+            rows,
+            cols,
+            mask_bits,
+            obj: j.at(&["obj"]).as_f64().context("layer checkpoint missing `obj`")?,
+            warm_obj: j.at(&["warm_obj"]).as_f64(),
+            fw_iters: j.at(&["fw_iters"]).as_usize().unwrap_or(0),
+            refine_obj_delta: j.at(&["refine_obj_delta"]).as_f64(),
+            new_weights,
+        })
+    }
+}
+
+/// One completed unit of work: a block of four layers on the staged
+/// path, a single layer on the dense path.
+#[derive(Clone, Debug)]
+pub struct BlockCheckpoint {
+    /// Unit index (block index when staged, layer index when dense).
+    pub unit: usize,
+    /// Total units in the run (a checkpoint from a differently shaped
+    /// run never resumes).
+    pub n_units: usize,
+    /// Calibration policy label (`off` / `block` / `layer`).
+    pub policy: String,
+    /// [`spec_hash`] of the owning spec.
+    pub spec_hash: u64,
+    /// [`crate::calib::CalibState::digest`] of the propagated
+    /// activations *entering* this unit (0 when not applicable — dense
+    /// path, or the first block).  On resume the rebuilt state must
+    /// reproduce this digest before the unit's outputs are trusted.
+    pub entry_digest: u64,
+    /// Staged [`crate::calib::EmbedPrefix`] identity: model name,
+    /// calibration samples and seed.
+    pub calib_model: String,
+    pub calib_samples: usize,
+    pub calib_seed: u64,
+    pub layers: Vec<LayerCheckpoint>,
+}
+
+impl BlockCheckpoint {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::from(1usize)),
+            ("unit", Json::from(self.unit)),
+            ("n_units", Json::from(self.n_units)),
+            ("policy", Json::from(self.policy.as_str())),
+            ("spec_hash", Json::from(u64_hex(self.spec_hash))),
+            ("entry_digest", Json::from(u64_hex(self.entry_digest))),
+            ("calib_model", Json::from(self.calib_model.as_str())),
+            ("calib_samples", Json::from(self.calib_samples)),
+            ("calib_seed", Json::from(u64_hex(self.calib_seed))),
+            ("layers", Json::Arr(self.layers.iter().map(|l| l.to_json()).collect())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<BlockCheckpoint> {
+        let version = j.at(&["version"]).as_usize().unwrap_or(0);
+        ensure!(version == 1, "unsupported checkpoint version {version}");
+        let mut layers = Vec::new();
+        for l in j.at(&["layers"]).as_arr().context("checkpoint missing `layers`")? {
+            layers.push(LayerCheckpoint::from_json(l)?);
+        }
+        Ok(BlockCheckpoint {
+            unit: j.at(&["unit"]).as_usize().context("checkpoint missing `unit`")?,
+            n_units: j.at(&["n_units"]).as_usize().context("checkpoint missing `n_units`")?,
+            policy: j.at(&["policy"]).as_str().unwrap_or("off").to_string(),
+            spec_hash: parse_hex_u64(
+                j.at(&["spec_hash"]).as_str().context("checkpoint missing `spec_hash`")?,
+            )?,
+            entry_digest: parse_hex_u64(j.at(&["entry_digest"]).as_str().unwrap_or("0"))?,
+            calib_model: j.at(&["calib_model"]).as_str().unwrap_or("").to_string(),
+            calib_samples: j.at(&["calib_samples"]).as_usize().unwrap_or(0),
+            calib_seed: parse_hex_u64(j.at(&["calib_seed"]).as_str().unwrap_or("0"))?,
+            layers,
+        })
+    }
+}
+
+/// Per-spec checkpoint directory under the journal root.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    hash: u64,
+}
+
+const CKPT_SEED: u64 = 0x636b7074; // "ckpt"
+
+impl CheckpointStore {
+    /// Open (creating if needed) the checkpoint dir for `spec` under
+    /// `root` — `<root>/ckpt-<spec_hash>/`.
+    pub fn for_spec(root: &Path, spec: &JobSpec) -> Result<CheckpointStore> {
+        let hash = spec_hash(spec);
+        let dir = root.join(format!("ckpt-{}", u64_hex(hash)));
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointStore { dir, hash })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// Persist the spec itself so `sparsefw resume` can re-execute an
+    /// interrupted CLI run without the original command line.
+    pub fn save_spec(&self, spec: &JobSpec) -> Result<()> {
+        write_atomic(
+            &self.dir.join("spec.json"),
+            &json::to_string_pretty(&spec.to_json()),
+        )
+    }
+
+    fn unit_path(&self, unit: usize) -> PathBuf {
+        self.dir.join(format!("unit-{unit:04}.json"))
+    }
+
+    /// Write one completed unit (tmp + rename, checksummed).  Fault
+    /// site: `io.write.checkpoint`.
+    pub fn save_unit(&self, ck: &BlockCheckpoint) -> Result<()> {
+        crate::util::fault::hit("io.write.checkpoint")?;
+        ensure!(
+            ck.spec_hash == self.hash,
+            "checkpoint unit carries spec hash {:016x}, store is {:016x}",
+            ck.spec_hash,
+            self.hash
+        );
+        let body = ck.to_json();
+        let body_s = json::to_string(&body);
+        let sum = fold_bytes(CKPT_SEED, body_s.as_bytes());
+        let wrapped = Json::obj(vec![
+            ("body", body),
+            ("checksum", Json::from(u64_hex(sum))),
+        ]);
+        write_atomic(&self.unit_path(ck.unit), &json::to_string(&wrapped))
+    }
+
+    /// Load and verify one unit: checksum over the canonical body,
+    /// spec-hash match, unit-index match.  `Ok(None)` when the file
+    /// doesn't exist.  Fault site: `io.read`.
+    fn load_unit(&self, unit: usize) -> Result<Option<BlockCheckpoint>> {
+        crate::util::fault::hit("io.read")?;
+        let path = self.unit_path(unit);
+        let src = match fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading checkpoint {}", path.display()))
+            }
+        };
+        let v = json::parse(&src)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))?;
+        let body = v.at(&["body"]);
+        ensure!(!body.is_null(), "checkpoint {}: missing body", path.display());
+        let stored = parse_hex_u64(
+            v.at(&["checksum"])
+                .as_str()
+                .with_context(|| format!("checkpoint {}: missing checksum", path.display()))?,
+        )?;
+        let sum = fold_bytes(CKPT_SEED, json::to_string(body).as_bytes());
+        ensure!(
+            sum == stored,
+            "checkpoint {}: checksum mismatch (stored {:016x}, computed {:016x})",
+            path.display(),
+            stored,
+            sum
+        );
+        let ck = BlockCheckpoint::from_json(body)?;
+        ensure!(
+            ck.spec_hash == self.hash,
+            "checkpoint {}: spec hash mismatch",
+            path.display()
+        );
+        ensure!(ck.unit == unit, "checkpoint {}: unit index mismatch", path.display());
+        Ok(Some(ck))
+    }
+
+    /// Verified contiguous prefix `0..k` — what the sequential staged
+    /// path resumes from.  Stops at the first missing unit; a unit that
+    /// fails verification truncates the prefix there (it and everything
+    /// after simply recompute), so corruption degrades to recomputation
+    /// rather than failure.
+    pub fn load_prefix(&self, n_units: usize) -> Vec<BlockCheckpoint> {
+        let mut out = Vec::new();
+        for unit in 0..n_units {
+            match self.load_unit(unit) {
+                Ok(Some(ck)) if ck.n_units == n_units => out.push(ck),
+                Ok(Some(ck)) => {
+                    crate::warnlog!(
+                        "checkpoint unit {unit} is from a {}-unit run (this run has {n_units}); ignoring it and the rest",
+                        ck.n_units
+                    );
+                    break;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    crate::warnlog!(
+                        "checkpoint unit {unit} unusable ({e:#}); recomputing from it onward"
+                    );
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Every verified unit present, keyed by unit index — what the
+    /// dense path resumes from (layers complete in LPT order, so the
+    /// completed set need not be contiguous).
+    pub fn load_present(&self, n_units: usize) -> BTreeMap<usize, BlockCheckpoint> {
+        let mut out = BTreeMap::new();
+        for unit in 0..n_units {
+            match self.load_unit(unit) {
+                Ok(Some(ck)) if ck.n_units == n_units => {
+                    out.insert(unit, ck);
+                }
+                Ok(Some(_)) | Ok(None) => {}
+                Err(e) => {
+                    crate::warnlog!("checkpoint unit {unit} unusable ({e:#}); recomputing it");
+                }
+            }
+        }
+        out
+    }
+
+    /// Drop the whole checkpoint dir — the run completed, its
+    /// artifacts are dead weight.
+    pub fn clear(&self) -> Result<()> {
+        fs::remove_dir_all(&self.dir)
+            .with_context(|| format!("clearing checkpoint dir {}", self.dir.display()))
+    }
+}
+
+/// Specs of interrupted CLI runs: every `ckpt-*/spec.json` under
+/// `root`.  `sparsefw resume --journal DIR` re-executes these.
+pub fn saved_specs(root: &Path) -> Result<Vec<(PathBuf, JobSpec)>> {
+    let rd = match fs::read_dir(root) {
+        Ok(r) => r,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", root.display())),
+    };
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.context("reading journal dir entry")?;
+        if !entry.file_name().to_string_lossy().starts_with("ckpt-") {
+            continue;
+        }
+        let spec_path = entry.path().join("spec.json");
+        let src = match fs::read_to_string(&spec_path) {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let parsed = json::parse(&src)
+            .map_err(anyhow::Error::from)
+            .and_then(|v| JobSpec::from_json(&v));
+        match parsed {
+            Ok(spec) => out.push((entry.path(), spec)),
+            Err(e) => crate::warnlog!(
+                "unreadable saved spec {} ({e:#}); skipping",
+                spec_path.display()
+            ),
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(contents.as_bytes())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))
+}
+
+// ---------------------------------------------------------------------------
+// The job journal
+// ---------------------------------------------------------------------------
+
+/// A job recovered from the journal whose last recorded state was not
+/// terminal — it re-enters the queue on restart.
+#[derive(Clone, Debug)]
+pub struct ReplayJob {
+    pub id: u64,
+    pub corr_id: String,
+    pub priority: i64,
+    pub spec: JobSpec,
+}
+
+/// Append-only NDJSON journal of job lifecycle events.  Appends are
+/// serialized by an internal lock and synced per record; a torn final
+/// line (the crash window) is skipped on replay.
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl Journal {
+    /// Open (creating dir + file if needed) `<dir>/jobs.ndjson`.
+    pub fn open(dir: &Path) -> Result<Journal> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        let path = dir.join(JOURNAL_FILE);
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Journal { path, file: Mutex::new(file) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&self, line: &Json) {
+        let s = json::to_string(line);
+        let mut f = lock_recover(&self.file);
+        // analyze: allow(lock-across-blocking, "the file lock IS the journal's append serializer")
+        let r = writeln!(&mut *f, "{s}").and_then(|()| f.sync_data());
+        drop(f);
+        if let Err(e) = r {
+            crate::warnlog!("journal append failed ({e}); durability degraded");
+        }
+    }
+
+    /// Record a submission (spec + identity).  Job ids fit f64 exactly
+    /// (they are small sequence numbers, far below 2^53).
+    pub fn record_submit(&self, id: u64, corr_id: &str, priority: i64, spec: &JobSpec) {
+        self.append(&Json::obj(vec![
+            ("ev", Json::from("submit")),
+            ("id", Json::from(id as usize)),
+            ("corr", Json::from(corr_id)),
+            ("priority", Json::Num(priority as f64)),
+            ("ts_ms", Json::Num(now_ms() as f64)),
+            ("spec", spec.to_json()),
+        ]));
+    }
+
+    /// Record a state transition (`running`, `done`, `failed`,
+    /// `cancelled`).
+    pub fn record_state(&self, id: u64, state: &str) {
+        self.append(&Json::obj(vec![
+            ("ev", Json::from("state")),
+            ("id", Json::from(id as usize)),
+            ("state", Json::from(state)),
+            ("ts_ms", Json::Num(now_ms() as f64)),
+        ]));
+    }
+
+    /// Fold the journal at `dir`: jobs whose last recorded state is
+    /// non-terminal (queued or running at crash time) come back, in id
+    /// order.  Unparseable lines — including a torn final line — are
+    /// skipped with a warning.  Fault site: `io.read`.
+    pub fn replay(dir: &Path) -> Result<Vec<ReplayJob>> {
+        crate::util::fault::hit("io.read")?;
+        let path = dir.join(JOURNAL_FILE);
+        let file = match File::open(&path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+            Err(e) => {
+                return Err(e).with_context(|| format!("opening journal {}", path.display()))
+            }
+        };
+        let mut jobs: BTreeMap<u64, ReplayJob> = BTreeMap::new();
+        for (ln, line) in BufReader::new(file).lines().enumerate() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    crate::warnlog!("journal read stopped at line {} ({e})", ln + 1);
+                    break;
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = match json::parse(&line) {
+                Ok(v) => v,
+                Err(e) => {
+                    crate::warnlog!("journal line {} unparseable ({e}); skipping", ln + 1);
+                    continue;
+                }
+            };
+            let Some(id) = v.at(&["id"]).as_usize() else { continue };
+            let id = id as u64;
+            match v.at(&["ev"]).as_str() {
+                Some("submit") => match JobSpec::from_json(v.at(&["spec"])) {
+                    Ok(spec) => {
+                        jobs.insert(
+                            id,
+                            ReplayJob {
+                                id,
+                                corr_id: v.at(&["corr"]).as_str().unwrap_or("").to_string(),
+                                priority: v.at(&["priority"]).as_f64().unwrap_or(0.0) as i64,
+                                spec,
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        crate::warnlog!("journal line {}: bad spec ({e:#}); skipping", ln + 1);
+                    }
+                },
+                Some("state") => {
+                    if matches!(
+                        v.at(&["state"]).as_str(),
+                        Some("done") | Some("failed") | Some("cancelled")
+                    ) {
+                        jobs.remove(&id);
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(jobs.into_values().collect())
+    }
+}
+
+fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sfw-journal-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn demo_output(rows: usize, cols: usize, with_weights: bool) -> LayerPruneOutput {
+        let mask = Mat::from_fn(rows, cols, |i, j| if (i + j) % 2 == 0 { 1.0 } else { 0.0 });
+        let new_weights = with_weights
+            .then(|| Mat::from_fn(rows, cols, |i, j| (i as f32 * 0.37 - j as f32 * 1.61).sin()));
+        LayerPruneOutput {
+            mask,
+            obj: 1.25,
+            warm_obj: Some(2.5),
+            new_weights,
+            trace: None,
+            convergence: None,
+            fw_iters: 17,
+            refine_obj_delta: Some(0.125),
+        }
+    }
+
+    #[test]
+    fn hex_and_mask_round_trip() {
+        let bytes = vec![0u8, 1, 0xab, 0xff, 0x10];
+        assert_eq!(hex_to_bytes(&bytes_to_hex(&bytes)).unwrap(), bytes);
+        let xs = vec![0.0f32, -1.5, f32::MIN_POSITIVE, 1234.5678];
+        assert_eq!(hex_to_f32s(&f32s_to_hex(&xs)).unwrap(), xs);
+
+        let m = Mat::from_fn(5, 7, |i, j| if (i * 7 + j) % 3 == 0 { 1.0 } else { 0.0 });
+        let back = unpack_mask(&pack_mask(&m), 5, 7).unwrap();
+        assert_eq!(m.data, back.data);
+        assert!(unpack_mask(&pack_mask(&m), 6, 7).is_err(), "length checked");
+    }
+
+    #[test]
+    fn layer_checkpoint_is_bit_identical() {
+        let out = demo_output(6, 9, true);
+        let ck = LayerCheckpoint::from_output(3, "blocks.0.wo", &out);
+        let j = ck.to_json();
+        let back = LayerCheckpoint::from_json(&json::parse(&json::to_string(&j)).unwrap()).unwrap();
+        let rt = back.to_output().unwrap();
+        assert_eq!(rt.mask.data, out.mask.data);
+        assert_eq!(
+            rt.new_weights.as_ref().map(|m| m.data.clone()),
+            out.new_weights.as_ref().map(|m| m.data.clone())
+        );
+        assert_eq!(rt.obj, out.obj);
+        assert_eq!(rt.warm_obj, out.warm_obj);
+        assert_eq!(rt.fw_iters, out.fw_iters);
+        assert_eq!(rt.refine_obj_delta, out.refine_obj_delta);
+    }
+
+    #[test]
+    fn checkpoint_store_verifies_and_truncates_on_corruption() {
+        let dir = tmp("store");
+        let spec = JobSpec { model: "demo".to_string(), ..Default::default() };
+        let cs = CheckpointStore::for_spec(&dir, &spec).unwrap();
+
+        for unit in 0..3usize {
+            let out = demo_output(4, 8, unit == 1);
+            let ck = BlockCheckpoint {
+                unit,
+                n_units: 4,
+                policy: "block".to_string(),
+                spec_hash: cs.hash(),
+                entry_digest: 0xdead_beef + unit as u64,
+                calib_model: "demo".to_string(),
+                calib_samples: 6,
+                calib_seed: 1,
+                layers: vec![LayerCheckpoint::from_output(unit, "blocks.0.wqkv", &out)],
+            };
+            cs.save_unit(&ck).unwrap();
+        }
+        let prefix = cs.load_prefix(4);
+        assert_eq!(prefix.len(), 3);
+        assert_eq!(prefix[1].entry_digest, 0xdead_beef + 1);
+
+        // corrupt unit 1: the prefix truncates there
+        let p = cs.dir().join("unit-0001.json");
+        let mut s = fs::read_to_string(&p).unwrap();
+        s = s.replace("\"obj\":", "\"obj_x\":");
+        fs::write(&p, s).unwrap();
+        assert_eq!(cs.load_prefix(4).len(), 1);
+        // the non-contiguous loader drops only the corrupt unit
+        let present = cs.load_present(4);
+        assert_eq!(present.keys().copied().collect::<Vec<_>>(), vec![0, 2]);
+
+        // a store for a different spec sees nothing
+        let other = JobSpec { model: "other".to_string(), ..Default::default() };
+        assert_ne!(spec_hash(&spec), spec_hash(&other));
+        let cs2 = CheckpointStore::for_spec(&dir, &other).unwrap();
+        assert!(cs2.load_prefix(4).is_empty());
+
+        cs.clear().unwrap();
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_replay_returns_unfinished_jobs() {
+        let dir = tmp("replay");
+        let spec = JobSpec { model: "demo".to_string(), ..Default::default() };
+        {
+            let j = Journal::open(&dir).unwrap();
+            j.record_submit(1, "corr-a", 0, &spec);
+            j.record_submit(2, "corr-b", 5, &spec);
+            j.record_submit(3, "corr-c", 0, &spec);
+            j.record_state(1, "running");
+            j.record_state(1, "done");
+            j.record_state(2, "running"); // crashed mid-run
+        }
+        // a torn final line must not break replay
+        {
+            use std::io::Write as _;
+            let mut f = OpenOptions::new()
+                .append(true)
+                .open(dir.join(JOURNAL_FILE))
+                .unwrap();
+            write!(f, "{{\"ev\": \"state\", \"id\": 3, \"sta").unwrap();
+        }
+        let jobs = Journal::replay(&dir).unwrap();
+        let ids: Vec<u64> = jobs.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3], "done job dropped, queued+running survive");
+        assert_eq!(jobs[0].corr_id, "corr-b");
+        assert_eq!(jobs[0].priority, 5);
+        assert_eq!(jobs[0].spec.model, "demo");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn saved_specs_lists_interrupted_runs() {
+        let dir = tmp("specs");
+        let spec = JobSpec { model: "demo".to_string(), ..Default::default() };
+        let cs = CheckpointStore::for_spec(&dir, &spec).unwrap();
+        assert!(saved_specs(&dir).unwrap().is_empty(), "no spec.json yet");
+        cs.save_spec(&spec).unwrap();
+        let found = saved_specs(&dir).unwrap();
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].1.model, "demo");
+        assert_eq!(spec_hash(&found[0].1), cs.hash(), "round-trip preserves the hash");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mask_digest_is_order_independent_and_bit_sensitive() {
+        let mut a = BTreeMap::new();
+        a.insert("x".to_string(), Mat::from_fn(2, 2, |i, _| i as f32));
+        a.insert("y".to_string(), Mat::from_fn(2, 2, |_, j| j as f32));
+        let d1 = mask_digest(&a);
+        let mut b = BTreeMap::new();
+        b.insert("y".to_string(), Mat::from_fn(2, 2, |_, j| j as f32));
+        b.insert("x".to_string(), Mat::from_fn(2, 2, |i, _| i as f32));
+        assert_eq!(d1, mask_digest(&b));
+        if let Some(m) = b.get_mut("x") {
+            m.data[0] = 1.0 - m.data[0];
+        }
+        assert_ne!(d1, mask_digest(&b));
+    }
+}

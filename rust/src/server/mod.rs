@@ -36,7 +36,9 @@
 pub mod api;
 pub mod client;
 pub mod http;
+pub mod journal;
 pub mod queue;
+pub mod ratelimit;
 
 pub use client::Client;
 pub use queue::{JobBrief, JobId, JobQueue, JobRecord, JobState, JobSummary};
@@ -70,7 +72,8 @@ pub struct ServerConfig {
     pub addr: String,
     /// Pruning worker threads (one [`PruneSession`] each).
     pub workers: usize,
-    /// Bound on *pending* jobs; submissions beyond it get 503.
+    /// Bound on *pending* jobs; submissions beyond it are shed with
+    /// `429 Too Many Requests` + `Retry-After`.
     pub queue_capacity: usize,
     /// Per-worker calibration LRU capacity
     /// ([`PruneSession::set_calib_cache_capacity`]).
@@ -83,6 +86,15 @@ pub struct ServerConfig {
     /// Mirror every trace span to an NDJSON file (`serve --trace-out`);
     /// `None` = ring buffer (+ any globally installed sinks) only.
     pub trace_out: Option<String>,
+    /// Durability directory (`serve --journal DIR`): an append-only job
+    /// journal (`jobs.ndjson`) plus per-spec checkpoint subdirectories.
+    /// On startup the journal is replayed, re-queueing every job that
+    /// was Queued or Running when the previous process died — workers
+    /// then resume those jobs from their verified checkpoints.
+    pub journal: Option<String>,
+    /// Wall-clock budget per job (`serve --job-timeout SECS`); crossing
+    /// it fails the job cleanly between units (`None` = unbounded).
+    pub job_timeout_secs: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +107,8 @@ impl Default for ServerConfig {
             conn_threads: 8,
             job_history_cap: queue::DEFAULT_HISTORY_CAP,
             trace_out: None,
+            journal: None,
+            job_timeout_secs: None,
         }
     }
 }
@@ -262,6 +276,21 @@ pub const METRIC_CATALOG: &[(&str, &str, &str)] = &[
         "histogram",
         "Result materialization and eval duration, from trace spans",
     ),
+    (
+        "sparsefw_jobs_replayed_total",
+        "counter",
+        "Jobs re-queued from the durable journal at startup",
+    ),
+    (
+        "sparsefw_jobs_shed_total",
+        "counter",
+        "Submissions shed with 429 (queue saturation)",
+    ),
+    (
+        "sparsefw_faults_injected_total",
+        "counter",
+        "Faults fired by the deterministic injection harness",
+    ),
 ];
 
 /// Render the full [`METRIC_CATALOG`] in the Prometheus text
@@ -312,6 +341,9 @@ fn scalar_for(state: &ServerState, name: &str) -> f64 {
         "sparsefw_queue_depth" => state.queue.depth() as f64,
         "sparsefw_uptime_seconds" => state.started.elapsed().as_secs_f64(),
         "sparsefw_peak_gram_bytes" => m.peak_gram_bytes.load(Ordering::Relaxed) as f64,
+        "sparsefw_jobs_replayed_total" => m.jobs_replayed.load(Ordering::Relaxed) as f64,
+        "sparsefw_jobs_shed_total" => m.jobs_shed.load(Ordering::Relaxed) as f64,
+        "sparsefw_faults_injected_total" => crate::util::fault::injected_total() as f64,
         _ => 0.0,
     }
 }
@@ -337,6 +369,10 @@ pub struct Metrics {
     /// High-water mark of per-job peak calibration-gram bytes across
     /// completed staged jobs.
     pub peak_gram_bytes: AtomicUsize,
+    /// Jobs re-queued from the durable journal at startup.
+    pub jobs_replayed: AtomicUsize,
+    /// Submissions shed with 429 because the pending queue was full.
+    pub jobs_shed: AtomicUsize,
     pub workers: usize,
     /// Submit→start latency distribution (seconds).
     pub queue_wait: Histogram,
@@ -368,6 +404,8 @@ impl Metrics {
             fw_iters: AtomicUsize::new(0),
             jobs_propagated: AtomicUsize::new(0),
             peak_gram_bytes: AtomicUsize::new(0),
+            jobs_replayed: AtomicUsize::new(0),
+            jobs_shed: AtomicUsize::new(0),
             workers,
             queue_wait: Histogram::new(),
             job_wall: Histogram::new(),
@@ -421,6 +459,13 @@ pub struct ServerState {
     /// Recent trace events keyed by correlation ID, for
     /// `GET /jobs/:id/trace` (bounded per correlation and overall).
     pub trace_ring: Arc<RingSink>,
+    /// Durable job journal (`serve --journal DIR`); submissions and
+    /// state transitions are appended here so a killed server replays
+    /// its queue on restart.  `None` = in-memory only.
+    pub journal: Option<Arc<journal::Journal>>,
+    /// Token-bucket limiter shedding abusive `POST /jobs` rates with
+    /// 429 before they reach the queue.
+    pub limiter: ratelimit::RateLimiter,
     stopping: AtomicBool,
 }
 
@@ -522,13 +567,37 @@ impl Server {
         listener.set_nonblocking(true)?; // the accept loop polls the stop flag
 
         let trace_ring = Arc::new(RingSink::new(2048, 64));
+
+        // durability: open the journal (creating the directory), then
+        // replay it — every job that was Queued or Running when the
+        // previous process died is re-queued before workers start, so
+        // `kill -9` loses no accepted work
+        let mut journal_arc = None;
+        let mut replayed: Vec<journal::ReplayJob> = Vec::new();
+        if let Some(dir) = &cfg.journal {
+            let dir = std::path::Path::new(dir);
+            replayed = journal::Journal::replay(dir)
+                .with_context(|| format!("replaying job journal in {dir:?}"))?;
+            journal_arc = Some(Arc::new(journal::Journal::open(dir)?));
+        }
+
         let state = Arc::new(ServerState {
             queue: JobQueue::new(cfg.queue_capacity).with_history_cap(cfg.job_history_cap),
             metrics: Metrics::new(sessions.len()),
             started: Instant::now(),
             trace_ring: trace_ring.clone(),
+            journal: journal_arc,
+            limiter: ratelimit::RateLimiter::for_submit(),
             stopping: AtomicBool::new(false),
         });
+        for job in replayed {
+            state.queue.restore(job.id, job.spec, job.priority, &job.corr_id);
+            state.metrics.jobs_replayed.fetch_add(1, Ordering::Relaxed);
+        }
+        let n_replayed = state.metrics.jobs_replayed.load(Ordering::Relaxed);
+        if n_replayed > 0 {
+            crate::info!("journal replay: re-queued {n_replayed} unfinished job(s)");
+        }
 
         // install this server's trace sinks (removed in join_threads):
         // the ring behind GET /jobs/:id/trace, the phase-histogram
@@ -549,6 +618,12 @@ impl Server {
             .enumerate()
             .map(|(i, mut session)| {
                 session.set_calib_cache_capacity(cfg.calib_cache_cap);
+                // the journal directory doubles as the checkpoint root:
+                // replayed jobs resume from their verified units
+                if let Some(dir) = &cfg.journal {
+                    session.set_checkpoint_root(dir);
+                }
+                session.set_job_timeout(cfg.job_timeout_secs);
                 let state = state.clone();
                 std::thread::Builder::new()
                     .name(format!("sparsefw-worker-{i}"))
@@ -592,6 +667,20 @@ fn accept_loop(listener: TcpListener, state: Arc<ServerState>, conn_threads: usi
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
+                // fault site: a faulty accept path must shed the one
+                // connection, never the accept thread (contained so an
+                // injected panic can't make the server unreachable)
+                match catch_unwind(|| crate::util::fault::hit("net.accept")) {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        crate::warnlog!("dropping connection: {e:#}");
+                        continue;
+                    }
+                    Err(_) => {
+                        crate::warnlog!("injected panic at net.accept contained");
+                        continue;
+                    }
+                }
                 let state = state.clone();
                 pool.execute(move || api::handle_connection(stream, state));
             }
@@ -622,15 +711,23 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
         }
         let _corr_guard = telemetry::with_correlation(&corr);
         crate::info!("worker {worker}: job {id} starting ({})", spec.label());
+        if let Some(j) = &state.journal {
+            j.record_state(id, "running");
+        }
         let progress_state = state.clone();
         session.on_progress(move |e| progress_state.queue.push_event(id, e.clone()));
         // a panicking method (registered pruners are open code) must
         // fail THIS job, not unwind the worker thread: an unwound
         // worker would leave the job wedged in Running forever and
-        // poison every registry lock it held
+        // poison every registry lock it held.  The `worker.panic` fault
+        // site fires inside the contained region for exactly that
+        // reason — injected panics prove the containment.
         let outcome = {
             let _sp = crate::span!("job", id = id, worker = worker);
-            match catch_unwind(AssertUnwindSafe(|| session.execute(&spec))) {
+            match catch_unwind(AssertUnwindSafe(|| {
+                crate::util::fault::hit("worker.panic")?;
+                session.execute(&spec)
+            })) {
                 Ok(res) => res,
                 Err(payload) => Err(anyhow::anyhow!(
                     "worker panicked: {}",
@@ -677,11 +774,17 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
                     state.metrics.peak_gram_bytes.fetch_max(b, Ordering::Relaxed);
                 }
                 state.queue.finish(id, Ok(summary));
+                if let Some(j) = &state.journal {
+                    j.record_state(id, "done");
+                }
             }
             Err(e) => {
                 crate::warnlog!("worker {worker}: job {id} failed: {e:#}");
                 state.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                 state.queue.finish(id, Err(format!("{e:#}")));
+                if let Some(j) = &state.journal {
+                    j.record_state(id, "failed");
+                }
             }
         }
         state.metrics.busy_workers.fetch_sub(1, Ordering::Relaxed);

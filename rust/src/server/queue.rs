@@ -96,6 +96,13 @@ pub struct JobSummary {
     /// traced (`trace_every > 0`); empty — and absent from the JSON
     /// form — otherwise.
     pub convergence: BTreeMap<String, ConvergenceTrace>,
+    /// Order-independent digest over every pruned mask (hex) — the
+    /// bit-identity certificate the crash-recovery tests compare
+    /// between an uninterrupted run and a kill-and-resume run.
+    pub mask_digest: String,
+    /// Units restored from verified checkpoints rather than recomputed
+    /// (0 for a fresh, uninterrupted run; absent from the JSON then).
+    pub resumed_units: usize,
 }
 
 impl JobSummary {
@@ -114,6 +121,8 @@ impl JobSummary {
             calib_policy: res.prune.staged.map(|s| s.policy.label().to_string()),
             peak_gram_bytes: res.prune.staged.map(|s| s.peak_gram_bytes),
             convergence: res.prune.convergence.clone(),
+            mask_digest: format!("{:016x}", super::journal::mask_digest(res.masks())),
+            resumed_units: res.prune.resumed_units,
         }
     }
 
@@ -166,6 +175,10 @@ impl JobSummary {
                 .map(|(k, cv)| (k.clone(), cv.to_json()))
                 .collect();
             fields.push(("convergence", Json::Obj(conv)));
+        }
+        fields.push(("mask_digest", self.mask_digest.as_str().into()));
+        if self.resumed_units > 0 {
+            fields.push(("resumed_units", self.resumed_units.into()));
         }
         Json::obj(fields)
     }
@@ -248,6 +261,19 @@ impl fmt::Display for CancelError {
 }
 
 impl std::error::Error for CancelError {}
+
+/// The listing row of one record (shared by [`JobQueue::briefs`] and
+/// [`JobQueue::briefs_page`]).
+fn brief_of(rec: &JobRecord) -> JobBrief {
+    JobBrief {
+        id: rec.id,
+        state: rec.state,
+        priority: rec.priority,
+        label: rec.spec.label(),
+        completed: rec.events.len(),
+        total: rec.events.last().map(|e| e.total).unwrap_or(0),
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Queue
@@ -367,6 +393,44 @@ impl JobQueue {
         self.take.notify_one();
         self.update.notify_all();
         Ok(id)
+    }
+
+    /// Re-register a job replayed from the durable journal, `Queued`
+    /// under its original id, priority and correlation ID — clients
+    /// polling a job handle across a server restart keep it.  `next_id`
+    /// advances past replayed ids so fresh submissions never collide;
+    /// an id already present (double replay) is ignored.  Restores
+    /// bypass the capacity bound: the jobs were already accepted.
+    pub fn restore(&self, id: JobId, spec: JobSpec, priority: i64, corr_id: &str) {
+        let mut inner = lock_recover(&self.inner);
+        if inner.shutdown || inner.jobs.contains_key(&id) {
+            return;
+        }
+        inner.seq += 1;
+        inner.next_id = inner.next_id.max(id + 1);
+        let key = (-priority, inner.seq);
+        inner.pending.insert(key, id);
+        inner.jobs.insert(
+            id,
+            JobRecord {
+                id,
+                spec,
+                corr_id: corr_id.to_string(),
+                priority,
+                state: JobState::Queued,
+                submitted: Instant::now(),
+                started: None,
+                finished: None,
+                worker: None,
+                events: Vec::new(),
+                summary: None,
+                error: None,
+                pending_key: Some(key),
+            },
+        );
+        drop(inner);
+        self.take.notify_one();
+        self.update.notify_all();
     }
 
     /// Block until a job is available (returning it marked `Running` and
@@ -508,18 +572,28 @@ impl JobQueue {
     /// Lightweight listing rows, in submission order, without cloning
     /// event vectors or summaries under the lock.
     pub fn briefs(&self) -> Vec<JobBrief> {
-        lock_recover(&self.inner)
-            .jobs
-            .values()
-            .map(|rec| JobBrief {
-                id: rec.id,
-                state: rec.state,
-                priority: rec.priority,
-                label: rec.spec.label(),
-                completed: rec.events.len(),
-                total: rec.events.last().map(|e| e.total).unwrap_or(0),
-            })
-            .collect()
+        lock_recover(&self.inner).jobs.values().map(brief_of).collect()
+    }
+
+    /// One page of listing rows: jobs with `id > after` in ascending id
+    /// (= submission) order, at most `limit`.  Returns the rows plus the
+    /// cursor to pass as the next `after`; `None` means this page
+    /// reached the end of the registry.
+    pub fn briefs_page(&self, after: Option<JobId>, limit: usize) -> (Vec<JobBrief>, Option<JobId>) {
+        let limit = limit.max(1);
+        let start = after.map(|a| a.saturating_add(1)).unwrap_or(0);
+        let inner = lock_recover(&self.inner);
+        let mut rows = Vec::new();
+        let mut more = false;
+        for rec in inner.jobs.range(start..).map(|(_, r)| r) {
+            if rows.len() == limit {
+                more = true;
+                break;
+            }
+            rows.push(brief_of(rec));
+        }
+        let next = if more { rows.last().map(|r| r.id) } else { None };
+        (rows, next)
     }
 
     /// Jobs waiting in the pending queue.
@@ -645,6 +719,8 @@ mod tests {
                 calib_policy: None,
                 peak_gram_bytes: None,
                 convergence: BTreeMap::new(),
+                mask_digest: "0000000000000000".into(),
+                resumed_units: 0,
             }),
         );
         q.finish(b, Err("boom".into()));
@@ -711,6 +787,45 @@ mod tests {
         assert_eq!(q.get(ids[3]).unwrap().state, JobState::Failed);
         // the still-queued job is never evicted
         assert_eq!(q.get(ids[4]).unwrap().state, JobState::Queued);
+    }
+
+    #[test]
+    fn restore_requeues_with_original_identity() {
+        let q = JobQueue::new(4);
+        q.restore(7, spec("replayed"), 3, "corr-7");
+        q.restore(9, spec("replayed-too"), 0, "corr-9");
+        // double replay of a known id is a no-op
+        q.restore(7, spec("dup"), 0, "corr-dup");
+        let rec = q.get(7).unwrap();
+        assert_eq!(rec.state, JobState::Queued);
+        assert_eq!(rec.corr_id, "corr-7");
+        assert_eq!(rec.priority, 3);
+        assert_eq!(rec.spec.model, "replayed");
+        // fresh submissions never collide with replayed ids
+        let fresh = q.submit(spec("fresh"), 0).unwrap();
+        assert!(fresh > 9, "next_id must advance past replayed ids, got {fresh}");
+        // priority order still applies across replayed + fresh jobs
+        let (first, _) = q.pop_blocking(0).unwrap();
+        assert_eq!(first, 7);
+        // restored jobs satisfy the pop invariant (Queued → Running)
+        assert_eq!(q.get(7).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn briefs_page_cursors_through_the_registry() {
+        let q = JobQueue::new(16);
+        let ids: Vec<JobId> = (0..5).map(|_| q.submit(spec("m"), 0).unwrap()).collect();
+        let (page1, cur1) = q.briefs_page(None, 2);
+        assert_eq!(page1.iter().map(|b| b.id).collect::<Vec<_>>(), &ids[..2]);
+        let cur1 = cur1.expect("more pages remain");
+        let (page2, cur2) = q.briefs_page(Some(cur1), 2);
+        assert_eq!(page2.iter().map(|b| b.id).collect::<Vec<_>>(), &ids[2..4]);
+        let (page3, cur3) = q.briefs_page(cur2, 2);
+        assert_eq!(page3.iter().map(|b| b.id).collect::<Vec<_>>(), &ids[4..]);
+        assert!(cur3.is_none(), "final page carries no cursor");
+        // an exhausted cursor yields an empty page
+        let (rest, end) = q.briefs_page(Some(ids[4]), 2);
+        assert!(rest.is_empty() && end.is_none());
     }
 
     #[test]

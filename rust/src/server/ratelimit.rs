@@ -1,0 +1,156 @@
+//! Token-bucket rate limiting for the submit endpoint.
+//!
+//! Each peer IP gets an independent bucket: `SUBMIT_BURST` tokens of
+//! capacity refilling at `SUBMIT_RATE_PER_SEC`.  A submit with an empty
+//! bucket is shed with `429 Too Many Requests` + `Retry-After` instead
+//! of being queued — the queue's own capacity bound then only has to
+//! absorb *accepted* work, and a single misbehaving client cannot
+//! starve the others' submissions.
+//!
+//! The table of buckets is itself bounded (`MAX_PEERS`): under a
+//! rotating-address flood, buckets idle longer than [`IDLE_EVICT`] are
+//! dropped before a new peer is admitted, so memory stays O(active
+//! peers), not O(distinct addresses ever seen).
+
+use std::collections::BTreeMap;
+use std::net::IpAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::sync::lock_recover;
+
+/// Sustained refill rate for `POST /jobs`, tokens per second per peer.
+/// Generous: real submissions are seconds apart (a job runs far longer
+/// than that); only a tight submit loop ever sees a 429.
+pub const SUBMIT_RATE_PER_SEC: f64 = 50.0;
+/// Bucket capacity — short bursts above the sustained rate are fine.
+pub const SUBMIT_BURST: f64 = 100.0;
+/// Upper bound on tracked peers before idle buckets are evicted.
+const MAX_PEERS: usize = 1024;
+/// Buckets untouched this long are eligible for eviction.
+const IDLE_EVICT: Duration = Duration::from_secs(60);
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-peer token buckets behind one mutex (the critical section is a
+/// map lookup + float arithmetic; contention is negligible next to the
+/// request parse that precedes it).
+pub struct RateLimiter {
+    rate: f64,
+    burst: f64,
+    max_peers: usize,
+    peers: Mutex<BTreeMap<IpAddr, Bucket>>,
+}
+
+impl RateLimiter {
+    pub fn new(rate: f64, burst: f64) -> Self {
+        Self::with_capacity(rate, burst, MAX_PEERS)
+    }
+
+    fn with_capacity(rate: f64, burst: f64, max_peers: usize) -> Self {
+        Self { rate, burst, max_peers, peers: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The default limiter for `POST /jobs`.
+    pub fn for_submit() -> Self {
+        Self::new(SUBMIT_RATE_PER_SEC, SUBMIT_BURST)
+    }
+
+    /// Take one token for `peer`.  A `None` peer (the socket's address
+    /// lookup failed) is allowed through: the limiter sheds load, it is
+    /// not authentication.
+    pub fn allow(&self, peer: Option<IpAddr>) -> bool {
+        match peer {
+            Some(ip) => self.allow_at(ip, Instant::now()),
+            None => true,
+        }
+    }
+
+    fn allow_at(&self, ip: IpAddr, now: Instant) -> bool {
+        let mut peers = lock_recover(&self.peers);
+        if peers.len() >= self.max_peers && !peers.contains_key(&ip) {
+            peers.retain(|_, b| now.saturating_duration_since(b.last) < IDLE_EVICT);
+            if peers.len() >= self.max_peers {
+                // every tracked peer is active and the table is full:
+                // shed the newcomer rather than grow without bound
+                return false;
+            }
+        }
+        let bucket = peers
+            .entry(ip)
+            .or_insert(Bucket { tokens: self.burst, last: now });
+        let dt = now.saturating_duration_since(bucket.last).as_secs_f64();
+        bucket.tokens = (bucket.tokens + dt * self.rate).min(self.burst);
+        bucket.last = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ip(last: u8) -> IpAddr {
+        IpAddr::from([127, 0, 0, last])
+    }
+
+    #[test]
+    fn burst_is_bounded_and_refills_over_time() {
+        let rl = RateLimiter::new(10.0, 3.0);
+        let t0 = Instant::now();
+        assert!(rl.allow_at(ip(1), t0));
+        assert!(rl.allow_at(ip(1), t0));
+        assert!(rl.allow_at(ip(1), t0));
+        assert!(!rl.allow_at(ip(1), t0), "burst exhausted");
+        // 0.25 s at 10 tokens/s refills two-and-a-half tokens
+        let t1 = t0 + Duration::from_millis(250);
+        assert!(rl.allow_at(ip(1), t1));
+        assert!(rl.allow_at(ip(1), t1));
+        assert!(!rl.allow_at(ip(1), t1));
+    }
+
+    #[test]
+    fn peers_have_independent_buckets() {
+        let rl = RateLimiter::new(1.0, 1.0);
+        let t0 = Instant::now();
+        assert!(rl.allow_at(ip(1), t0));
+        assert!(!rl.allow_at(ip(1), t0));
+        assert!(rl.allow_at(ip(2), t0), "peer 2 has its own bucket");
+    }
+
+    #[test]
+    fn unknown_peer_is_always_allowed() {
+        let rl = RateLimiter::new(1.0, 1.0);
+        assert!(rl.allow(None));
+        assert!(rl.allow(None));
+    }
+
+    #[test]
+    fn idle_buckets_are_evicted_under_table_pressure() {
+        let rl = RateLimiter::with_capacity(1.0, 1.0, 2);
+        let t0 = Instant::now();
+        assert!(rl.allow_at(ip(1), t0));
+        assert!(rl.allow_at(ip(2), t0));
+        // a third peer two minutes later evicts the two idle buckets
+        let t1 = t0 + Duration::from_secs(120);
+        assert!(rl.allow_at(ip(3), t1));
+        assert_eq!(lock_recover(&rl.peers).len(), 1);
+    }
+
+    #[test]
+    fn full_table_of_active_peers_sheds_newcomers() {
+        let rl = RateLimiter::with_capacity(10.0, 10.0, 2);
+        let t0 = Instant::now();
+        assert!(rl.allow_at(ip(1), t0));
+        assert!(rl.allow_at(ip(2), t0));
+        assert!(!rl.allow_at(ip(3), t0), "no room and nothing idle");
+    }
+}

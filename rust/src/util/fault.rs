@@ -1,0 +1,349 @@
+//! Deterministic fault injection for robustness testing.
+//!
+//! Production code is instrumented with named **fault sites** — a call
+//! to [`hit`] at the places failures actually happen (I/O, gram
+//! assembly, the FW hot loop, worker execution, the network surface).
+//! When no [`FaultPlan`] is armed a site costs one relaxed atomic load,
+//! the same disabled-path discipline as [`crate::util::telemetry`];
+//! when a plan is armed, each rule fires an error, a panic, or a delay
+//! at a chosen hit count, so crash-recovery and retry behavior become
+//! *reproducible* tests instead of luck.
+//!
+//! The canonical sites (see the USAGE fault-site catalog):
+//!
+//! | site                  | instrumented where                        |
+//! |-----------------------|-------------------------------------------|
+//! | `io.read`             | journal / checkpoint loads                |
+//! | `io.write.checkpoint` | per-block checkpoint writes               |
+//! | `gram.compute`        | staged gram assembly (`run_blocks`)       |
+//! | `fw.iter`             | per-layer mask optimization (retryable)   |
+//! | `worker.panic`        | server worker job execution               |
+//! | `net.accept`          | the HTTP accept loop                      |
+//! | `net.mid-response`    | `/events` streaming, between chunks       |
+//!
+//! Plans come from code ([`arm`]) or the `SPARSEFW_FAULTS` environment
+//! variable ([`install_from_env`]), either as JSON
+//! (`{"seed": 7, "rules": [{"site": "fw.iter", "kind": "error",
+//! "at": 2, "times": 1}]}`) or the compact form
+//! `site:kind[:at[:ms]]`, comma-separated (`fw.iter:error:2`,
+//! `net.mid-response:delay:1:50`).  Every injected fault emits a
+//! `fault` telemetry span tagged with the site and kind, and bumps the
+//! process-wide [`injected_total`] counter exported by `/metrics`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::prng::mix64;
+use crate::util::sync::lock_recover;
+
+/// The canonical fault-site names (the chaos lane sweeps this list).
+pub const SITES: &[&str] = &[
+    "io.read",
+    "io.write.checkpoint",
+    "gram.compute",
+    "fw.iter",
+    "worker.panic",
+    "net.accept",
+    "net.mid-response",
+];
+
+/// What an armed rule does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `hit` returns an `Err` naming the site.
+    Error,
+    /// `hit` panics (exercises `catch_unwind` containment).
+    Panic,
+    /// `hit` sleeps for the given number of milliseconds, then
+    /// succeeds (exercises timeouts and slow-path behavior).
+    Delay(u64),
+}
+
+impl FaultKind {
+    fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Error => "error",
+            FaultKind::Panic => "panic",
+            FaultKind::Delay(_) => "delay",
+        }
+    }
+}
+
+/// One armed rule: fire `kind` at site hits `at_hit .. at_hit+times`
+/// (1-based hit counts; `times == 0` means every hit from `at_hit` on).
+#[derive(Clone, Debug)]
+pub struct FaultRule {
+    pub site: String,
+    pub kind: FaultKind,
+    pub at_hit: u64,
+    pub times: u64,
+}
+
+/// A seeded set of rules.  The seed perturbs injected delays
+/// deterministically (so two chaos runs with the same plan observe the
+/// same schedule) and is echoed in the `fault` span for provenance.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse either the JSON form or the compact
+    /// `site:kind[:at[:ms]]` comma list (see the module docs).
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let s = s.trim();
+        if s.starts_with('{') {
+            Self::from_json(&json::parse(s).context("parsing SPARSEFW_FAULTS JSON")?)
+        } else {
+            let mut plan = FaultPlan::default();
+            for entry in s.split(',').filter(|e| !e.trim().is_empty()) {
+                plan.rules.push(Self::parse_compact(entry.trim())?);
+            }
+            Ok(plan)
+        }
+    }
+
+    fn parse_compact(entry: &str) -> Result<FaultRule> {
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() < 2 || parts.len() > 4 {
+            bail!("fault rule `{entry}`: expected site:kind[:at[:ms]]");
+        }
+        let at_hit: u64 = match parts.get(2) {
+            Some(p) => p.parse().with_context(|| format!("fault rule `{entry}`: bad hit count"))?,
+            None => 1,
+        };
+        let ms: u64 = match parts.get(3) {
+            Some(p) => p.parse().with_context(|| format!("fault rule `{entry}`: bad delay ms"))?,
+            None => 25,
+        };
+        let kind = match parts[1] {
+            "error" => FaultKind::Error,
+            "panic" => FaultKind::Panic,
+            "delay" => FaultKind::Delay(ms),
+            other => bail!("fault rule `{entry}`: unknown kind `{other}`"),
+        };
+        Ok(FaultRule { site: parts[0].to_string(), kind, at_hit, times: 1 })
+    }
+
+    fn from_json(j: &Json) -> Result<FaultPlan> {
+        let seed = j.at(&["seed"]).as_usize().unwrap_or(0) as u64;
+        let mut rules = Vec::new();
+        if let Some(arr) = j.at(&["rules"]).as_arr() {
+            for r in arr {
+                let site = r
+                    .at(&["site"])
+                    .as_str()
+                    .context("fault rule missing `site`")?
+                    .to_string();
+                let ms = r.at(&["ms"]).as_usize().unwrap_or(25) as u64;
+                let kind = match r.at(&["kind"]).as_str().unwrap_or("error") {
+                    "error" => FaultKind::Error,
+                    "panic" => FaultKind::Panic,
+                    "delay" => FaultKind::Delay(ms),
+                    other => bail!("fault rule for `{site}`: unknown kind `{other}`"),
+                };
+                rules.push(FaultRule {
+                    site,
+                    kind,
+                    at_hit: (r.at(&["at"]).as_usize().unwrap_or(1) as u64).max(1),
+                    times: r.at(&["times"]).as_usize().unwrap_or(1) as u64,
+                });
+            }
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global registry
+// ---------------------------------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static PLAN: Mutex<Option<PlanState>> = Mutex::new(None);
+
+struct PlanState {
+    plan: FaultPlan,
+    /// Per-site hit counters (aligned with the rule list: a site shared
+    /// by several rules still counts hits once).
+    hits: std::collections::BTreeMap<String, u64>,
+}
+
+/// Arm a plan process-wide (replacing any previous one) and reset the
+/// hit counters.
+pub fn arm(plan: FaultPlan) {
+    let mut g = lock_recover(&PLAN);
+    *g = Some(PlanState { plan, hits: Default::default() });
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm: every site goes back to the one-atomic-load fast path.
+pub fn disarm() {
+    let mut g = lock_recover(&PLAN);
+    *g = None;
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// Is any plan armed?  (The fast-path check `hit` performs first.)
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Faults injected since process start (exported as
+/// `sparsefw_faults_injected_total`).
+pub fn injected_total() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Arm from `SPARSEFW_FAULTS` when set (the CLI calls this once at
+/// startup).  A malformed plan is an error — silently ignoring it
+/// would turn a chaos run into a green no-op.
+pub fn install_from_env() -> Result<()> {
+    if let Ok(v) = std::env::var("SPARSEFW_FAULTS") {
+        if !v.trim().is_empty() {
+            let plan = FaultPlan::parse(&v)?;
+            crate::info!("fault injection armed: {} rule(s) from SPARSEFW_FAULTS", plan.rules.len());
+            arm(plan);
+        }
+    }
+    Ok(())
+}
+
+/// A fault site.  Unarmed: one relaxed atomic load.  Armed: counts the
+/// hit and, when a rule matches, injects the configured failure —
+/// `Err` for [`FaultKind::Error`], an unwind for [`FaultKind::Panic`]
+/// (callers on request paths already contain panics via
+/// `catch_unwind`), a sleep for [`FaultKind::Delay`].
+pub fn hit(site: &str) -> Result<()> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    // decide under the lock, act outside it (a Delay must not hold the
+    // registry lock while sleeping)
+    let fired: Option<(FaultKind, u64)> = {
+        let mut g = lock_recover(&PLAN);
+        match g.as_mut() {
+            None => None,
+            Some(st) => {
+                let n = st.hits.entry(site.to_string()).or_insert(0);
+                *n += 1;
+                let count = *n;
+                let seed = st.plan.seed;
+                st.plan
+                    .rules
+                    .iter()
+                    .find(|r| {
+                        r.site == site
+                            && count >= r.at_hit
+                            && (r.times == 0 || count < r.at_hit + r.times)
+                    })
+                    .map(|r| (r.kind, seed))
+            }
+        }
+    };
+    let Some((kind, seed)) = fired else { return Ok(()) };
+    INJECTED.fetch_add(1, Ordering::Relaxed);
+    {
+        let _sp = crate::span!("fault", site = site, kind = kind.label());
+    }
+    match kind {
+        FaultKind::Error => bail!("injected fault at {site}"),
+        FaultKind::Panic => panic!("injected panic at fault site {site}"),
+        FaultKind::Delay(ms) => {
+            // deterministic ±25% jitter from the plan seed, so a seeded
+            // chaos run observes one fixed schedule
+            let jitter = mix64(seed ^ 0x6661756c74) % (ms / 2 + 1);
+            std::thread::sleep(Duration::from_millis(ms - ms / 4 + jitter));
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; tests serialize on this lock so
+    /// `cargo test`'s default parallelism can't interleave plans.
+    pub(crate) static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+    struct Disarm;
+    impl Drop for Disarm {
+        fn drop(&mut self) {
+            disarm();
+        }
+    }
+
+    #[test]
+    fn unarmed_sites_are_noops() {
+        let _g = lock_recover(&TEST_GUARD);
+        disarm();
+        for s in SITES {
+            assert!(hit(s).is_ok());
+        }
+    }
+
+    #[test]
+    fn error_fires_at_the_requested_hit_then_clears() {
+        let _g = lock_recover(&TEST_GUARD);
+        let _d = Disarm;
+        arm(FaultPlan {
+            seed: 1,
+            rules: vec![FaultRule {
+                site: "fw.iter".into(),
+                kind: FaultKind::Error,
+                at_hit: 2,
+                times: 1,
+            }],
+        });
+        assert!(hit("fw.iter").is_ok(), "hit 1 passes");
+        let e = hit("fw.iter").unwrap_err();
+        assert!(e.to_string().contains("injected fault at fw.iter"), "{e}");
+        assert!(hit("fw.iter").is_ok(), "hit 3 passes again (times=1)");
+        assert!(hit("io.read").is_ok(), "other sites unaffected");
+        assert!(injected_total() >= 1);
+    }
+
+    #[test]
+    fn panic_kind_unwinds() {
+        let _g = lock_recover(&TEST_GUARD);
+        let _d = Disarm;
+        arm(FaultPlan {
+            seed: 0,
+            rules: vec![FaultRule {
+                site: "worker.panic".into(),
+                kind: FaultKind::Panic,
+                at_hit: 1,
+                times: 1,
+            }],
+        });
+        let r = std::panic::catch_unwind(|| hit("worker.panic"));
+        assert!(r.is_err(), "panic kind must unwind");
+    }
+
+    #[test]
+    fn compact_and_json_plans_parse() {
+        let p = FaultPlan::parse("fw.iter:error:2, net.mid-response:delay:1:50").unwrap();
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].at_hit, 2);
+        assert_eq!(p.rules[1].kind, FaultKind::Delay(50));
+
+        let j = FaultPlan::parse(
+            r#"{"seed": 7, "rules": [{"site": "io.read", "kind": "panic", "at": 3, "times": 2}]}"#,
+        )
+        .unwrap();
+        assert_eq!(j.seed, 7);
+        assert_eq!(j.rules[0].kind, FaultKind::Panic);
+        assert_eq!(j.rules[0].at_hit, 3);
+        assert_eq!(j.rules[0].times, 2);
+
+        assert!(FaultPlan::parse("fw.iter").is_err(), "missing kind");
+        assert!(FaultPlan::parse("fw.iter:explode").is_err(), "unknown kind");
+    }
+}

@@ -2,9 +2,11 @@
 //! serde / rayon / tokio / rand, so JSON, parallelism, PRNGs and logging
 //! are implemented here and tested like any other module.
 
+pub mod fault;
 pub mod json;
 pub mod log;
 pub mod pool;
+pub mod retry;
 pub mod prng;
 pub mod sync;
 pub mod telemetry;

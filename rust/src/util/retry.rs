@@ -1,0 +1,236 @@
+//! Retry policies: bounded attempts, jittered exponential backoff,
+//! deadlines.
+//!
+//! Every retry loop in the crate goes through [`RetryPolicy::run`] (or
+//! carries its own attempt cap / [`Deadline`]) — the `sparsefw analyze`
+//! `unbounded-retry` lint flags loops that retry on error with neither.
+//! Jitter is seeded ([`crate::util::prng::Xoshiro256`]), so backoff
+//! schedules are reproducible under the fault-injection harness.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::prng::Xoshiro256;
+
+/// An optional wall-clock budget shared across attempts (and, for jobs,
+/// across pipeline stages — `--job-timeout`).
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    at: Option<Instant>,
+}
+
+impl Deadline {
+    /// No budget: never expires.
+    pub fn none() -> Deadline {
+        Deadline { at: None }
+    }
+
+    /// Expires `d` from now.
+    pub fn after(d: Duration) -> Deadline {
+        Deadline { at: Some(Instant::now() + d) }
+    }
+
+    /// Expires `secs` from now; `None` means no budget.
+    pub fn after_secs(secs: Option<f64>) -> Deadline {
+        match secs {
+            Some(s) if s > 0.0 => Deadline::after(Duration::from_secs_f64(s)),
+            _ => Deadline::none(),
+        }
+    }
+
+    pub fn expired(&self) -> bool {
+        self.at.is_some_and(|t| Instant::now() >= t)
+    }
+
+    /// Time left; `None` when there is no budget at all.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.at.map(|t| t.saturating_duration_since(Instant::now()))
+    }
+
+    /// `Err("deadline exceeded while <what>")` once expired — the
+    /// check long pipelines call between units of work.
+    pub fn check(&self, what: &str) -> Result<()> {
+        if self.expired() {
+            Err(anyhow!("deadline exceeded while {what}"))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Bounded retry with jittered exponential backoff.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts (≥ 1); 1 means "no retries".
+    pub max_attempts: u32,
+    /// Backoff before attempt 2 (doubles per attempt, capped).
+    pub base_delay: Duration,
+    /// Backoff ceiling.
+    pub max_delay: Duration,
+    /// Jitter seed — same seed, same schedule.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(20),
+            max_delay: Duration::from_secs(2),
+            jitter_seed: 0x7265747279, // "retry"
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A single attempt, no backoff.
+    pub fn disabled() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, ..Default::default() }
+    }
+
+    pub fn with_attempts(attempts: u32) -> RetryPolicy {
+        RetryPolicy { max_attempts: attempts.max(1), ..Default::default() }
+    }
+
+    /// Backoff before attempt `attempt` (1-based; attempt 1 never
+    /// waits).  Exponential with full jitter: uniform in
+    /// `(0, base · 2^(attempt-2)]`, capped at `max_delay`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        if attempt <= 1 {
+            return Duration::ZERO;
+        }
+        let exp = (attempt - 2).min(16);
+        let ceiling = self
+            .base_delay
+            .saturating_mul(1u32 << exp)
+            .min(self.max_delay)
+            .max(Duration::from_millis(1));
+        let mut rng = Xoshiro256::new(self.jitter_seed ^ u64::from(attempt));
+        ceiling.mul_f64(rng.next_f64().max(0.05))
+    }
+
+    /// Run `op` up to `max_attempts` times (fewer if `deadline`
+    /// expires), sleeping [`RetryPolicy::backoff`] between attempts.
+    /// The closure receives the 1-based attempt number.  On exhaustion
+    /// the last error is returned, annotated with the attempt count.
+    pub fn run<T>(
+        &self,
+        deadline: Deadline,
+        what: &str,
+        mut op: impl FnMut(u32) -> Result<T>,
+    ) -> Result<T> {
+        let mut attempt = 1u32;
+        loop {
+            deadline.check(what)?;
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) if attempt >= self.max_attempts => {
+                    return Err(e.context(format!("{what}: failed after {attempt} attempt(s)")));
+                }
+                Err(e) => {
+                    let mut wait = self.backoff(attempt + 1);
+                    if let Some(rem) = deadline.remaining() {
+                        if rem.is_zero() {
+                            return Err(e.context(format!(
+                                "{what}: deadline exceeded after {attempt} attempt(s)"
+                            )));
+                        }
+                        wait = wait.min(rem);
+                    }
+                    crate::debuglog!(
+                        "{what}: attempt {attempt}/{} failed ({e:#}); retrying in {wait:?}",
+                        self.max_attempts
+                    );
+                    std::thread::sleep(wait);
+                }
+            }
+            attempt += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let calls = AtomicU32::new(0);
+        let pol = RetryPolicy {
+            base_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let v = pol
+            .run(Deadline::none(), "transient op", |_a| {
+                if calls.fetch_add(1, Ordering::SeqCst) < 2 {
+                    Err(anyhow!("flaky"))
+                } else {
+                    Ok(42)
+                }
+            })
+            .unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn exhaustion_names_the_attempt_count() {
+        let pol = RetryPolicy {
+            max_attempts: 2,
+            base_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let e = pol
+            .run(Deadline::none(), "doomed op", |_a| -> Result<()> { Err(anyhow!("nope")) })
+            .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("doomed op"), "{msg}");
+        assert!(msg.contains("2 attempt"), "{msg}");
+    }
+
+    #[test]
+    fn deadline_stops_retries() {
+        let calls = AtomicU32::new(0);
+        let pol = RetryPolicy {
+            max_attempts: 1000,
+            base_delay: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let e = pol
+            .run(Deadline::after(Duration::from_millis(30)), "slow op", |_a| -> Result<()> {
+                calls.fetch_add(1, Ordering::SeqCst);
+                Err(anyhow!("still failing"))
+            })
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("deadline exceeded"), "{e:#}");
+        assert!(calls.load(Ordering::SeqCst) < 1000);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let pol = RetryPolicy::default();
+        assert_eq!(pol.backoff(1), Duration::ZERO);
+        for a in 2..12 {
+            let b1 = pol.backoff(a);
+            let b2 = pol.backoff(a);
+            assert_eq!(b1, b2, "same seed, same schedule");
+            assert!(b1 <= pol.max_delay);
+            assert!(b1 > Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn deadline_expiry_and_check() {
+        let d = Deadline::after(Duration::from_millis(5));
+        assert!(!d.expired());
+        assert!(d.check("warmup").is_ok());
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(d.expired());
+        let e = d.check("block 3/8").unwrap_err();
+        assert!(e.to_string().contains("block 3/8"));
+        assert!(Deadline::none().remaining().is_none());
+        assert!(!Deadline::after_secs(None).expired());
+    }
+}

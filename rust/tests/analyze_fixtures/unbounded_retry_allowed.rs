@@ -1,0 +1,22 @@
+//! The same retry-loop shapes, either genuinely bounded or silenced
+//! with a reasoned allow.  Must produce no findings.
+
+pub fn connect_bounded(deadline: Deadline) -> Result<Stream> {
+    loop {
+        deadline.check("connect")?;
+        match try_connect() {
+            Ok(s) => return Ok(s),
+            Err(_) => retry_backoff(),
+        }
+    }
+}
+
+pub fn connect_supervised() -> Stream {
+    // analyze: allow(unbounded-retry, "fixture: the supervisor kills this worker on a watchdog timer")
+    loop {
+        match try_connect() {
+            Ok(s) => return s,
+            Err(_) => retry_backoff(),
+        }
+    }
+}

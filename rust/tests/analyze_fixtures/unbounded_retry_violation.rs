@@ -1,0 +1,11 @@
+//! Seeded violation: a retry loop with neither an attempt cap nor a
+//! deadline — a fault that never clears spins it forever.
+
+pub fn connect_forever() -> Stream {
+    loop {
+        match try_connect() {
+            Ok(s) => return s,
+            Err(_) => retry_backoff(),
+        }
+    }
+}

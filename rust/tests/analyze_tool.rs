@@ -47,6 +47,10 @@ fn seeded_fixtures_produce_exact_diagnostics() {
          code",
         "stale_allow.rs:4: warning[stale-allow]: allow(panic-path) no longer matches \
          any finding; remove it",
+        "unbounded_retry_violation.rs:5: warning[unbounded-retry]: `loop` retry loop \
+         with neither an attempt cap nor a deadline; a fault that never clears spins \
+         it forever (use util::retry::RetryPolicy::run, or check a Deadline in the \
+         loop)",
     ];
     for e in expected {
         assert!(

@@ -1,0 +1,188 @@
+//! Crash recovery end-to-end: a `sparsefw serve --demo --journal DIR`
+//! child is killed with SIGKILL mid-job; a fresh process on the same
+//! workspace replays the journal, re-queues the job, resumes it from
+//! its verified per-unit checkpoints, and produces masks bit-identical
+//! to an uninterrupted run (certified by the order-independent
+//! `mask_digest` in the job summary).  Exercised for all three
+//! calibration policies — the dense path and both propagated ones.
+
+use std::fs;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use sparsefw::calib::CalibPolicy;
+use sparsefw::coordinator::{Allocation, JobSpec};
+use sparsefw::pruner::{FwEngine, Method, SparseFwConfig, SparsityPattern, Warmstart};
+use sparsefw::server::{demo_sessions, journal::mask_digest, Client};
+
+const WAIT: Duration = Duration::from_secs(120);
+
+/// SIGKILLs the child on drop so a panicking assertion can't leak a
+/// serve process (and its bound port) past the test.
+struct ServeChild {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        self.child.kill().ok();
+        self.child.wait().ok();
+    }
+}
+
+/// Spawn `sparsefw serve --demo --journal <dir>` on an ephemeral port
+/// and parse the bound address off stdout (stdout keeps draining on a
+/// thread afterwards so the child can never block on a full pipe).
+fn spawn_serve(journal: &Path) -> ServeChild {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_sparsefw"))
+        .args(["serve", "--demo", "--workers", "1", "--addr", "127.0.0.1:0", "--journal"])
+        .arg(journal)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn sparsefw serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let mut sent = false;
+        for line in BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if !sent {
+                if let Some(rest) = line.strip_prefix("listening on ") {
+                    tx.send(rest.trim().to_string()).ok();
+                    sent = true;
+                }
+            }
+        }
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("serve must print `listening on <addr>`");
+    ServeChild { child, addr }
+}
+
+/// A job slow enough (dense-engine SparseFW, thousands of iterations
+/// per layer) that plenty of wall time remains after the first unit
+/// checkpoint lands — the kill window the test needs.
+fn slow_demo_spec(policy: CalibPolicy) -> JobSpec {
+    JobSpec {
+        model: "demo".into(),
+        method: Method::sparsefw(SparseFwConfig {
+            iters: 10_000,
+            alpha: 0.5,
+            warmstart: Warmstart::Wanda,
+            engine: FwEngine::Dense,
+            ..Default::default()
+        }),
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+        calib_samples: 6,
+        calib_seed: 2,
+        calib_policy: policy,
+        ..Default::default()
+    }
+}
+
+/// Count `unit-*.json` checkpoint files anywhere under `dir`.
+fn unit_files(dir: &Path) -> usize {
+    let mut n = 0;
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let Ok(rd) = fs::read_dir(&d) else { continue };
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if e.file_name().to_string_lossy().starts_with("unit-") {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sfw-crash-{tag}-{}", std::process::id()));
+    fs::remove_dir_all(&dir).ok();
+    fs::create_dir_all(&dir).expect("create journal dir");
+    dir
+}
+
+/// One full kill/restart cycle: reference digest from an uninterrupted
+/// in-process run, then submit → first checkpoint lands → SIGKILL →
+/// restart on the same journal → the job resumes and its digest matches
+/// bit-for-bit.
+fn crash_cycle(tag: &str, policy: CalibPolicy) {
+    let spec = slow_demo_spec(policy);
+
+    // uninterrupted reference: the demo model is deterministic, so this
+    // in-process run fixes the bit-exact masks the resumed job must hit
+    let mut session = demo_sessions(1).remove(0);
+    let reference = session.execute(&spec).expect("reference run");
+    let want_digest = format!("{:016x}", mask_digest(reference.masks()));
+
+    let journal = fresh_dir(tag);
+    let serve = spawn_serve(&journal);
+    let client = Client::new(serve.addr.clone());
+    let id = client.submit(&spec, 0).expect("submit");
+
+    // kill the instant the first unit checkpoint is durable: the job is
+    // then provably mid-flight with most units still unpruned
+    let poll_deadline = Instant::now() + Duration::from_secs(90);
+    while unit_files(&journal) == 0 {
+        assert!(
+            Instant::now() < poll_deadline,
+            "no unit checkpoint appeared under {journal:?} within 90s"
+        );
+        thread::sleep(Duration::from_millis(3));
+    }
+    drop(serve); // SIGKILL — no drain, no cleanup, journal left as-is
+
+    // a fresh process on the same workspace replays the journal,
+    // re-queues job {id}, and resumes it from verified checkpoints
+    let serve2 = spawn_serve(&journal);
+    let client2 = Client::new(serve2.addr.clone());
+    let fin = client2.wait(id, WAIT).expect("replayed job finishes");
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "{fin:?}");
+    assert_eq!(
+        fin.at(&["result", "mask_digest"]).as_str(),
+        Some(want_digest.as_str()),
+        "resumed masks must be bit-identical to the uninterrupted run: {fin:?}"
+    );
+    assert!(
+        fin.at(&["result", "resumed_units"]).as_usize().unwrap_or(0) >= 1,
+        "the restart must restore at least the checkpointed unit: {fin:?}"
+    );
+
+    // graceful stop if it finishes promptly; ServeChild's Drop SIGKILLs
+    // either way, so a slow drain can't wedge the test
+    client2.shutdown(false).ok();
+    let reap_by = Instant::now() + Duration::from_secs(20);
+    drop(client2);
+    {
+        let mut serve2 = serve2;
+        while serve2.child.try_wait().ok().flatten().is_none() && Instant::now() < reap_by {
+            thread::sleep(Duration::from_millis(50));
+        }
+    }
+    fs::remove_dir_all(&journal).ok();
+}
+
+#[test]
+fn kill9_mid_job_resumes_bit_identical_dense() {
+    crash_cycle("dense", CalibPolicy::Dense);
+}
+
+#[test]
+fn kill9_mid_job_resumes_bit_identical_propagate_block() {
+    crash_cycle("block", CalibPolicy::PropagateBlock);
+}
+
+#[test]
+fn kill9_mid_job_resumes_bit_identical_propagate_layer() {
+    crash_cycle("layer", CalibPolicy::PropagateLayer);
+}

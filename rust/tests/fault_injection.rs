@@ -1,0 +1,175 @@
+//! Deterministic fault injection against a live server: each test arms
+//! a seeded [`sparsefw::util::fault::FaultPlan`], runs real jobs over
+//! real TCP sockets, and asserts the degradation the design promises —
+//! severed event streams reconnect, transient layer faults retry to
+//! success, injected worker panics fail one job without wedging the
+//! worker, and a waiting client gets a typed error (never a silent
+//! hang) when the job cannot exist.
+//!
+//! The fault registry is process-global, so every test here serializes
+//! through one mutex and disarms on drop (panic-safe); the registry's
+//! own unit-test guard lives in another crate and is not reachable from
+//! integration tests.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession};
+use sparsefw::data::{corpus, TokenBin};
+use sparsefw::model::testutil::{random_model, tiny_cfg};
+use sparsefw::pruner::{Method, SparsityPattern};
+use sparsefw::server::{Client, Server, ServerConfig, ServerHandle};
+use sparsefw::util::fault::{self, FaultPlan};
+
+const WAIT: Duration = Duration::from_secs(120);
+
+/// Serializes the tests in this binary around the process-global fault
+/// registry, arming `plan` on entry and disarming on drop (even when
+/// the test panics, so a failure cannot poison the next test's run).
+struct ArmedFaults(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ArmedFaults {
+    fn drop(&mut self) {
+        fault::disarm();
+    }
+}
+
+fn armed(compact_plan: &str) -> ArmedFaults {
+    static GUARD: Mutex<()> = Mutex::new(());
+    let g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    fault::arm(FaultPlan::parse(compact_plan).expect("valid compact fault plan"));
+    ArmedFaults(g)
+}
+
+fn spawn_server(workers: usize) -> (ServerHandle, Client) {
+    let model = random_model(&tiny_cfg(), 1);
+    let bin = TokenBin::from_tokens(corpus::generate(6, 8192));
+    let sessions: Vec<PruneSession> = (0..workers)
+        .map(|_| {
+            let mut models = BTreeMap::new();
+            models.insert("test".to_string(), model.clone());
+            PruneSession::in_memory(models, bin.clone(), bin.clone())
+        })
+        .collect();
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), workers, ..Default::default() };
+    let handle = Server::bind(&cfg, sessions).expect("server binds an ephemeral port");
+    let client = Client::new(handle.addr().to_string());
+    (handle, client)
+}
+
+fn base_spec() -> JobSpec {
+    JobSpec {
+        model: "test".into(),
+        method: Method::wanda(),
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+        calib_samples: 6,
+        calib_seed: 2,
+        ..Default::default()
+    }
+}
+
+/// Regression for the `Client::wait` silent-hang: a stream severed
+/// mid-response (`net.mid-response`) must be classified as a dropped
+/// transport, reconnected with backoff, and the wait must still return
+/// the finished job — with every layer event intact on the record.
+#[test]
+fn severed_event_stream_reconnects_and_wait_still_finishes() {
+    let _faults = armed("net.mid-response:error");
+    let before = fault::injected_total();
+    let (handle, client) = spawn_server(1);
+
+    let id = client.submit(&base_spec(), 0).expect("submit");
+    let fin = client.wait(id, WAIT).expect("wait survives the severed stream");
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "{fin:?}");
+    assert_eq!(fin.at(&["progress", "completed"]).as_usize(), Some(8));
+    assert_eq!(
+        fin.at(&["events"]).as_arr().map(|e| e.len()),
+        Some(8),
+        "reconnect must not lose layer events: {fin:?}"
+    );
+    assert!(
+        fault::injected_total() > before,
+        "the mid-response fault never fired; this test exercised nothing"
+    );
+    handle.shutdown();
+}
+
+/// A waiting client whose job does not exist gets a typed HTTP error
+/// promptly — the pre-hardening behaviour was an indefinite hang.
+#[test]
+fn wait_on_unknown_job_errors_fast_instead_of_hanging() {
+    let _faults = armed(""); // no rules; just serialize + clean registry
+    let (handle, client) = spawn_server(1);
+    let t0 = Instant::now();
+    let err = client.wait(999_999, WAIT).expect_err("unknown job must error");
+    assert!(format!("{err:#}").contains("404"), "{err:#}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "a 404 must fail fast, not burn the whole wait budget"
+    );
+    handle.shutdown();
+}
+
+/// A transient per-layer failure (`fw.iter`, one shot) is absorbed by
+/// the layer retry policy: the job completes and the fault counter
+/// proves the failure actually happened.
+#[test]
+fn transient_layer_fault_is_retried_to_success() {
+    let _faults = armed("fw.iter:error");
+    let before = fault::injected_total();
+    let (handle, client) = spawn_server(1);
+
+    let id = client.submit(&base_spec(), 0).expect("submit");
+    let fin = client.wait(id, WAIT).expect("wait");
+    assert_eq!(
+        fin.at(&["state"]).as_str(),
+        Some("done"),
+        "one transient layer fault must be retried away: {fin:?}"
+    );
+    assert_eq!(fault::injected_total(), before + 1, "exactly one injected failure");
+    handle.shutdown();
+}
+
+/// An injected panic inside the worker (`worker.panic`) fails that job
+/// with a clean error and spares the worker: the same (sole) worker
+/// must run the next job to completion, and the server keeps answering.
+#[test]
+fn injected_worker_panic_fails_the_job_and_spares_the_worker() {
+    let _faults = armed("worker.panic:panic");
+    let (handle, client) = spawn_server(1);
+
+    let id = client.submit(&base_spec(), 0).expect("submit");
+    let fin = client.wait(id, WAIT).expect("wait");
+    assert_eq!(fin.at(&["state"]).as_str(), Some("failed"), "{fin:?}");
+    let err = fin.at(&["error"]).as_str().unwrap_or("");
+    assert!(err.contains("worker panicked"), "{err}");
+    assert!(err.contains("injected panic"), "{err}");
+
+    let id2 = client.submit(&base_spec(), 0).expect("submit after panic");
+    let fin2 = client.wait(id2, WAIT).expect("wait after panic");
+    assert_eq!(fin2.at(&["state"]).as_str(), Some("done"), "{fin2:?}");
+
+    let h = client.healthz().expect("healthz after contained panic");
+    assert_eq!(h.at(&["ok"]).as_bool(), Some(true));
+    handle.shutdown();
+}
+
+/// An injected delay (`gram.compute`, 50 ms) slows the job without
+/// changing its result: the masks still land and the state is `done` —
+/// delays degrade latency, never correctness.  The spec propagates
+/// per block because `gram.compute` only fires on the staged paths.
+#[test]
+fn injected_delay_degrades_latency_not_correctness() {
+    use sparsefw::calib::CalibPolicy;
+    let _faults = armed("gram.compute:delay:1:50");
+    let before = fault::injected_total();
+    let (handle, client) = spawn_server(1);
+    let spec = JobSpec { calib_policy: CalibPolicy::PropagateBlock, ..base_spec() };
+    let id = client.submit(&spec, 0).expect("submit");
+    let fin = client.wait(id, WAIT).expect("wait");
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"), "{fin:?}");
+    assert!(fin.at(&["result", "mask_nnz"]).as_usize().unwrap_or(0) > 0);
+    assert!(fault::injected_total() > before, "the delay never fired");
+    handle.shutdown();
+}

@@ -127,6 +127,64 @@ wait "$SERVE_PID"
 trap - EXIT
 echo "   server smoke test OK"
 
+# chaos lane: every fault site × {error, panic, delay}, one server each
+# (SPARSEFW_FAULTS arms the site's first hit).  Acceptance per cell:
+# the job lands as done or as failed-naming-the-injection, the server
+# still answers status afterwards, and shutdown is clean — no hangs, no
+# lost jobs.  A fault can also legitimately fire during the startup
+# journal replay (io.read): then the process must refuse cleanly,
+# naming the injection in its log.
+echo "== chaos lane: fault-injection sweep (site x {error,panic,delay}) =="
+for SITE in io.read io.write.checkpoint gram.compute fw.iter \
+            worker.panic net.accept net.mid-response; do
+  for KIND in error panic delay; do
+    CHAOS_DIR="$(mktemp -d)"
+    CHAOS_LOG="$(mktemp)"
+    SPARSEFW_FAULTS="$SITE:$KIND" "$BIN" serve --demo --addr 127.0.0.1:0 \
+        --workers 1 --journal "$CHAOS_DIR" >"$CHAOS_LOG" 2>&1 &
+    CHAOS_PID=$!
+    trap 'kill "$CHAOS_PID" 2>/dev/null || true' EXIT
+    CADDR=""
+    for _ in $(seq 1 100); do
+        CADDR="$(sed -n 's/^listening on //p' "$CHAOS_LOG" | head -n1)"
+        [ -n "$CADDR" ] && break
+        kill -0 "$CHAOS_PID" 2>/dev/null || break
+        sleep 0.1
+    done
+    if [ -z "$CADDR" ]; then
+        grep -q "injected" "$CHAOS_LOG" || {
+            echo "chaos ($SITE:$KIND): server neither came up nor refused by injection:"
+            cat "$CHAOS_LOG"; exit 1; }
+        wait "$CHAOS_PID" 2>/dev/null || true
+        trap - EXIT
+        rm -rf "$CHAOS_DIR"
+        echo "   chaos $SITE:$KIND OK (clean startup refusal)"
+        continue
+    fi
+    # the armed site fires exactly once, and the submit connection can
+    # be the victim (net.accept): one retry, then the job must land
+    CH_OUT="$("$BIN" submit --addr "$CADDR" --model demo --method wanda \
+        --pattern per-row:0.5 --samples 8 --propagate block \
+        --timeout-secs 120 --wait 2>&1)" \
+      || CH_OUT="$CH_OUT
+$("$BIN" submit --addr "$CADDR" --model demo --method wanda \
+        --pattern per-row:0.5 --samples 8 --propagate block \
+        --timeout-secs 120 --wait 2>&1)" \
+      || { echo "chaos ($SITE:$KIND): submit failed twice: $CH_OUT"; cat "$CHAOS_LOG"; exit 1; }
+    echo "$CH_OUT" | grep -Eq "state=done|state=failed.*injected" \
+      || { echo "chaos ($SITE:$KIND): job neither done nor failed-by-injection: $CH_OUT"
+           cat "$CHAOS_LOG"; exit 1; }
+    "$BIN" status --addr "$CADDR" >/dev/null \
+      || { echo "chaos ($SITE:$KIND): server unresponsive after the fault"; cat "$CHAOS_LOG"; exit 1; }
+    "$BIN" shutdown --addr "$CADDR" >/dev/null
+    wait "$CHAOS_PID"
+    trap - EXIT
+    rm -rf "$CHAOS_DIR"
+    echo "   chaos $SITE:$KIND OK"
+  done
+done
+echo "   chaos lane OK (21/21 cells, zero hangs, zero lost jobs)"
+
 echo "== server queue micro-bench (BENCH_server.json) =="
 SPARSEFW_BENCH_JSON="$REPO/BENCH_server.json" cargo bench --bench server_queue
 echo "   wrote $REPO/BENCH_server.json"
