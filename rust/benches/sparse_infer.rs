@@ -1,47 +1,132 @@
-//! Deployment payoff bench: dense vs CSR linear-layer application at
-//! the paper's sparsity levels — the end-use case motivating pruning.
-//! Reported in EXPERIMENTS.md §Extensions.
+//! Sparse inference fast-path bench: dense vs CSR vs packed n:m
+//! linear-layer application at the paper's sparsity levels, on the two
+//! shapes served inference actually runs — prefill (a batch of tokens
+//! through `matmul_a_bt_into`) and decode (a single token through
+//! `matvec_into`).  The packed formats must beat dense at ≥75%
+//! sparsity on both shapes; CI writes the report to BENCH_infer.json
+//! (via `SPARSEFW_BENCH_JSON`) for the perf trajectory.
 
 use sparsefw::bench::Bencher;
 use sparsefw::pruner::mask::SparsityPattern;
 use sparsefw::pruner::saliency::{magnitude_scores, saliency_mask};
+use sparsefw::tensor::matmul::dot;
+use sparsefw::tensor::nm::NmMat;
 use sparsefw::tensor::sparse::CsrMat;
 use sparsefw::tensor::{matmul_a_bt, Mat};
 use sparsefw::util::prng::Xoshiro256;
 
+/// Naive dense matvec — the decode-step baseline (`matmul_a_bt` is
+/// tuned for batched rows; a single token is just d_out dot products).
+fn dense_matvec(w: &Mat, x: &[f32], y: &mut [f32]) {
+    for i in 0..w.rows {
+        y[i] = dot(w.row(i), x);
+    }
+}
+
 fn main() {
     let mut rng = Xoshiro256::new(9);
     let mut b = Bencher::new("sparse_infer");
-    let batch = 128; // tokens per forward chunk
+    let batch = 128; // tokens per prefill chunk
 
     for &(dout, din) in &[(512usize, 128usize), (128, 512), (384, 128)] {
         let w = Mat::gaussian(dout, din, 1.0, &mut rng);
         let x = Mat::gaussian(batch, din, 1.0, &mut rng);
+        let xv: Vec<f32> = x.row(0).to_vec();
+        let mut out = Mat::zeros(batch, dout);
+        let mut yv = vec![0.0f32; dout];
 
-        let s = b.bench(&format!("dense/{dout}x{din}"), || {
+        // the masks under test: unstructured per-row sparsity (CSR's
+        // home turf) and uniform n:m structure (NmMat's invariant),
+        // both including the paper's ≥75% operating points
+        let per_row: Vec<(String, Mat)> = [0.5, 0.75, 0.9]
+            .iter()
+            .map(|&s| {
+                let mask = saliency_mask(
+                    &magnitude_scores(&w),
+                    &SparsityPattern::PerRow { sparsity: s },
+                );
+                (format!("csr{:.0}", s * 100.0), mask)
+            })
+            .collect();
+        let nm_patterns: Vec<(String, usize, usize)> = vec![
+            ("nm2:4".to_string(), 2, 4), // 50%
+            ("nm1:4".to_string(), 1, 4), // 75%
+            ("nm1:8".to_string(), 1, 8), // 87.5%
+        ];
+
+        // -- prefill ---------------------------------------------------
+        let s = b.bench(&format!("prefill/dense/{dout}x{din}"), || {
             std::hint::black_box(matmul_a_bt(&x, &w));
         });
-        let dense_mean = s.mean;
+        let dense_prefill = s.mean;
 
-        for sparsity in [0.5, 0.6, 0.75, 0.9] {
-            let mask = saliency_mask(
-                &magnitude_scores(&w),
-                &SparsityPattern::PerRow { sparsity },
-            );
-            let csr = CsrMat::from_masked(&w, &mask);
-            let s = b.bench(
-                &format!("csr{:.0}%/{dout}x{din}", sparsity * 100.0),
-                || {
-                    std::hint::black_box(csr.matmul_a_bt(&x));
-                },
-            );
+        for (label, mask) in &per_row {
+            let csr = CsrMat::from_masked(&w, mask);
+            let s = b.bench(&format!("prefill/{label}/{dout}x{din}"), || {
+                csr.matmul_a_bt_into(&x, &mut out, false);
+                std::hint::black_box(&out);
+            });
             println!(
-                "  -> {dout}x{din} @ {:.0}%: speedup {:.2}x, size {:.2}x dense",
-                sparsity * 100.0,
-                dense_mean.as_secs_f64() / s.mean.as_secs_f64(),
+                "  -> prefill {label} {dout}x{din}: speedup {:.2}x, size {:.2}x dense",
+                dense_prefill.as_secs_f64() / s.mean.as_secs_f64(),
                 csr.size_bytes() as f64 / (dout * din * 4) as f64,
             );
         }
+        for (label, keep, block) in &nm_patterns {
+            let mask = saliency_mask(
+                &magnitude_scores(&w),
+                &SparsityPattern::NM { keep: *keep, block: *block },
+            );
+            let nm = NmMat::from_masked(&w, &mask, *keep, *block).expect("n:m mask");
+            let s = b.bench(&format!("prefill/{label}/{dout}x{din}"), || {
+                nm.matmul_a_bt_into(&x, &mut out, false);
+                std::hint::black_box(&out);
+            });
+            println!(
+                "  -> prefill {label} {dout}x{din}: speedup {:.2}x, size {:.2}x dense",
+                dense_prefill.as_secs_f64() / s.mean.as_secs_f64(),
+                nm.size_bytes() as f64 / (dout * din * 4) as f64,
+            );
+        }
+
+        // -- decode (batch = 1, the generate loop's shape) -------------
+        let s = b.bench(&format!("decode/dense/{dout}x{din}"), || {
+            dense_matvec(&w, &xv, &mut yv);
+            std::hint::black_box(&yv);
+        });
+        let dense_decode = s.mean;
+
+        for (label, mask) in &per_row {
+            let csr = CsrMat::from_masked(&w, mask);
+            let s = b.bench(&format!("decode/{label}/{dout}x{din}"), || {
+                csr.matvec_into(&xv, &mut yv, false);
+                std::hint::black_box(&yv);
+            });
+            println!(
+                "  -> decode {label} {dout}x{din}: speedup {:.2}x",
+                dense_decode.as_secs_f64() / s.mean.as_secs_f64(),
+            );
+        }
+        for (label, keep, block) in &nm_patterns {
+            let mask = saliency_mask(
+                &magnitude_scores(&w),
+                &SparsityPattern::NM { keep: *keep, block: *block },
+            );
+            let nm = NmMat::from_masked(&w, &mask, *keep, *block).expect("n:m mask");
+            let s = b.bench(&format!("decode/{label}/{dout}x{din}"), || {
+                nm.matvec_into(&xv, &mut yv, false);
+                std::hint::black_box(&yv);
+            });
+            println!(
+                "  -> decode {label} {dout}x{din}: speedup {:.2}x",
+                dense_decode.as_secs_f64() / s.mean.as_secs_f64(),
+            );
+        }
     }
+
     b.report();
+    let path = std::env::var("SPARSEFW_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_infer.json".to_string());
+    b.report_json(&path).expect("writing bench json");
+    println!("\nbench json written to {path}");
 }

@@ -24,6 +24,14 @@
 //! from the USAGE table, so an undocumented metric is invisible and a
 //! renamed one leaves the docs lying.  Like `registry-coverage`, these
 //! findings cannot be `allow`ed.
+//!
+//! `route-coverage`: every route the server's request dispatch matches
+//! (`src/server/api.rs`, the `route()` match arms of the shape
+//! `("METHOD", ["seg", id, …])`) must appear in the USAGE endpoint
+//! table in `src/main.rs`, rendered as `/seg/:id/…`.  A route shipped
+//! without docs is an API nobody can discover; a renamed one leaves
+//! the table lying.  Guarded arms and `..` rest-patterns (the 405/404
+//! fallbacks) are skipped.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -254,6 +262,137 @@ pub fn check_metrics_usage(src_root: &Path, out: &mut Vec<Finding>) {
                      documented in the USAGE metric catalog"
                 ),
             });
+        }
+    }
+}
+
+/// Extract the documentable routes from request-dispatch source text:
+/// every single-line match arm of the shape `("METHOD", ["seg", id])`
+/// becomes `(METHOD, /seg/:id)` — string-literal segments stay
+/// literal, bare identifiers render as `:name` placeholders.  Guarded
+/// arms (` if `) and `..` rest-patterns (the 405/404 fallbacks) are
+/// not routes and are skipped.
+pub fn routes_in(text: &str) -> Vec<(String, String)> {
+    const METHODS: &[&str] = &["GET", "POST", "PUT", "PATCH", "DELETE"];
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let Some(open) = line.find("(\"") else { continue };
+        let rest = &line[open + 2..];
+        let Some(method) = METHODS
+            .iter()
+            .find(|m| rest.strip_prefix(**m).is_some_and(|r| r.starts_with("\", [")))
+        else {
+            continue;
+        };
+        let after = &rest[method.len() + 4..]; // past `", [`
+        let Some(end) = after.find(']') else { continue };
+        let list = &after[..end];
+        if after[end..].contains(" if ") || list.contains("..") {
+            continue;
+        }
+        let mut segs = Vec::new();
+        let mut well_formed = true;
+        for seg in list.split(',') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            if let Some(lit) = seg.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+                segs.push(lit.to_string());
+            } else if seg.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                segs.push(format!(":{seg}"));
+            } else {
+                well_formed = false;
+            }
+        }
+        if well_formed && !segs.is_empty() {
+            out.push((method.to_string(), format!("/{}", segs.join("/"))));
+        }
+    }
+    out
+}
+
+/// Every route the server's API dispatch matches
+/// (`src/server/api.rs`) must appear — as its `/seg/:id` path — in the
+/// USAGE endpoint table in `src/main.rs`.  Like the other coverage
+/// lints, these findings cannot be `allow`ed.
+pub fn check_routes_usage(src_root: &Path, out: &mut Vec<Finding>) {
+    let label = "src/main.rs (USAGE)";
+    let root = src_root.parent().unwrap_or(src_root);
+    let api_path = root.join("src/server/api.rs");
+    let Ok(api_text) = std::fs::read_to_string(&api_path) else {
+        out.push(Finding {
+            file: "src/server/api.rs".to_string(),
+            line: 0,
+            lint: "route-coverage".into(),
+            message: format!("surface file missing or unreadable: {}", api_path.display()),
+        });
+        return;
+    };
+    let usage_path = root.join("src/main.rs");
+    let Ok(usage_text) = std::fs::read_to_string(&usage_path) else {
+        out.push(Finding {
+            file: label.to_string(),
+            line: 0,
+            lint: "route-coverage".into(),
+            message: format!("surface file missing or unreadable: {}", usage_path.display()),
+        });
+        return;
+    };
+    for (method, path) in routes_in(&api_text) {
+        // the USAGE table lines METHOD and path up in columns, so the
+        // path string alone is the stable token to require
+        if !usage_text.contains(&path) {
+            out.push(Finding {
+                file: label.to_string(),
+                line: 0,
+                lint: "route-coverage".into(),
+                message: format!(
+                    "route `{method} {path}` (server api.rs dispatch) is not \
+                     documented in the USAGE endpoint table"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_parser_extracts_paths() {
+        let src = r#"
+            match (req.method.as_str(), segs.as_slice()) {
+                ("GET", ["healthz"]) => healthz(state),
+                ("POST", ["jobs"]) => submit(req),
+                ("GET", ["jobs", id]) => status(id),
+                ("POST", ["jobs", id, "eval"]) => eval_job(req, state, id),
+                ("GET", [a, id, c]) if a == "jobs" && c == "events" => stream(id),
+                (_, ["jobs", ..]) | (_, ["healthz"]) => not_allowed(),
+            }
+        "#;
+        let routes = routes_in(src);
+        assert!(routes.contains(&("GET".to_string(), "/healthz".to_string())));
+        assert!(routes.contains(&("POST".to_string(), "/jobs".to_string())));
+        assert!(routes.contains(&("GET".to_string(), "/jobs/:id".to_string())));
+        assert!(routes.contains(&("POST".to_string(), "/jobs/:id/eval".to_string())));
+        // guarded arms and `..` rest-pattern fallbacks are not routes
+        assert_eq!(routes.len(), 4);
+    }
+
+    #[test]
+    fn live_dispatch_routes_parse() {
+        // the real dispatch must yield the full route set (guard rail:
+        // if route() is refactored into a shape routes_in can't read,
+        // the route-coverage lint would silently stop checking)
+        let text = std::fs::read_to_string("src/server/api.rs").unwrap();
+        let routes = routes_in(&text);
+        for expect in ["/jobs", "/jobs/:id", "/jobs/:id/eval", "/jobs/:id/generate", "/metrics"] {
+            assert!(
+                routes.iter().any(|(_, p)| p == expect),
+                "route {expect} not parsed from api.rs; got {routes:?}"
+            );
         }
     }
 }

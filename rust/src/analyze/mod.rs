@@ -17,6 +17,7 @@
 //! | `unchecked-index` | panic paths | `x[i]` indexing in request-serving code |
 //! | `registry-coverage` | consistency | a registered method missing from the registry test, the `table1_methods` bench, or USAGE |
 //! | `metrics-coverage` | consistency | a metric in [`crate::server::METRIC_CATALOG`] missing from the USAGE metric catalog |
+//! | `route-coverage` | consistency | a route in the server's API dispatch (`server/api.rs`) missing from the USAGE endpoint table |
 //! | `codec-fields` | consistency | a `to_json`/`from_json` pair whose key sets differ |
 //! | `unbounded-retry` | robustness | a `loop`/`while` retry loop with neither an attempt cap nor a deadline |
 //! | `stale-allow` | meta | an `// analyze: allow(..)` annotation that no longer suppresses anything |
@@ -202,6 +203,7 @@ pub fn analyze_tree(cfg: &AnalyzeConfig) -> Result<Vec<Finding>> {
     if cfg.check_registry {
         consistency::check_registry(&cfg.src_root, &mut findings);
         consistency::check_metrics_usage(&cfg.src_root, &mut findings);
+        consistency::check_routes_usage(&cfg.src_root, &mut findings);
     }
 
     let findings = apply_allows(&sources, findings);

@@ -114,6 +114,26 @@ impl PruneResult {
         Ok(out)
     }
 
+    /// Compile the pruned model for sparse inference: packs each
+    /// layer's (reconstructed) weights + mask straight into the
+    /// per-layer `dense | csr | nm` representation — the serving
+    /// artifact behind `eval --sparse`, `generate`, and the server's
+    /// `POST /jobs/:id/{eval,generate}` — without materializing a
+    /// second dense model.
+    pub fn compile(
+        &self,
+        model: &Gpt,
+        format: crate::model::compiled::SparseFormat,
+    ) -> Result<crate::model::compiled::CompiledModel> {
+        crate::model::compiled::CompiledModel::compile(
+            model,
+            &self.masks,
+            &self.new_weights,
+            format,
+            crate::model::compiled::DEFAULT_CROSSOVER,
+        )
+    }
+
     /// Mean relative error reduction vs warmstart (SparseFW runs).
     pub fn mean_rel_reduction(&self) -> Option<f64> {
         if self.warm_objs.is_empty() {

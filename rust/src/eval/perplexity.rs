@@ -10,15 +10,21 @@
 use anyhow::Result;
 
 use crate::data::TokenBin;
-use crate::model::forward::{forward, sequence_nll};
+use crate::model::forward::{forward, sequence_nll, ForwardModel};
 use crate::model::Gpt;
 use crate::runtime::PjrtRuntime;
 use crate::util::pool::parallel_map;
 
 /// Perplexity of `model` over up to `max_seqs` non-overlapping
-/// sequences from `bin`, using the native forward pass.
-pub fn perplexity_native(model: &Gpt, bin: &TokenBin, max_seqs: usize) -> Result<f64> {
-    let seqs = bin.sequential(model.cfg.seq_len, max_seqs);
+/// sequences from `bin`, using the native forward pass.  Generic over
+/// the [`ForwardModel`] seam: the same code scores the dense [`Gpt`]
+/// and a [`crate::model::compiled::CompiledModel`].
+pub fn perplexity_native<M: ForwardModel + Sync + ?Sized>(
+    model: &M,
+    bin: &TokenBin,
+    max_seqs: usize,
+) -> Result<f64> {
+    let seqs = bin.sequential(model.cfg().seq_len, max_seqs);
     anyhow::ensure!(!seqs.is_empty(), "test bin shorter than one sequence");
     let nlls: Vec<f64> = parallel_map(seqs.len(), |i| {
         let out = forward(model, &seqs[i], false);
@@ -80,6 +86,40 @@ mod tests {
         // near-zero-init model ≈ uniform over the vocab; must be within a
         // loose band of vocab size (256)
         assert!(ppl > 50.0 && ppl < 400.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn compiled_model_matches_masked_dense_ppl() {
+        use crate::model::compiled::{CompiledModel, SparseFormat, DEFAULT_CROSSOVER};
+        use crate::pruner::saliency::{magnitude_scores, saliency_mask};
+        use crate::pruner::SparsityPattern;
+
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 3);
+        let bin = TokenBin::from_tokens(corpus::generate(11, 2048));
+        let pat = SparsityPattern::NM { keep: 2, block: 4 };
+        let masks: std::collections::BTreeMap<_, _> = cfg
+            .layers()
+            .iter()
+            .map(|l| {
+                (l.name.clone(), saliency_mask(&magnitude_scores(model.mat(&l.name)), &pat))
+            })
+            .collect();
+        let masked = model.apply_masks(&masks).unwrap();
+        let compiled = CompiledModel::compile(
+            &model,
+            &masks,
+            &std::collections::BTreeMap::new(),
+            SparseFormat::Auto,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        let dense_ppl = perplexity_native(&masked, &bin, 8).unwrap();
+        let sparse_ppl = perplexity_native(&compiled, &bin, 8).unwrap();
+        assert!(
+            (dense_ppl - sparse_ppl).abs() / dense_ppl < 1e-4,
+            "{dense_ppl} vs {sparse_ppl}"
+        );
     }
 
     #[test]

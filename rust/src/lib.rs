@@ -145,6 +145,31 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! ## Serving pruned models: the sparse inference fast path
+//!
+//! Pruning's payoff is cheaper inference, so a [`coordinator`]
+//! `PruneResult` compiles into a [`model::compiled::CompiledModel`]:
+//! each pruned linear packed into the cheapest format its mask
+//! supports ([`tensor::sparse::CsrMat`] for unstructured masks, the
+//! interleaved [`tensor::nm::NmMat`] when the mask satisfies a uniform
+//! n:m invariant, masked dense above the density crossover), behind
+//! the same [`model::forward::ForwardModel`] seam the dense stepper
+//! uses — one forward implementation scores both:
+//!
+//! ```text
+//! PruneResult ──compile──▶ CompiledModel (dense | csr | n:m per layer)
+//!      │                        ├─ eval --sparse   logit + ppl equivalence
+//!      │                        ├─ generate        KV-cached decode loop
+//!      ▼                        └─ CompiledCache (LRU, compile-once)
+//!   worker_loop ──────────────────────▶ POST /jobs/:id/{eval,generate}
+//! ```
+//!
+//! A serving server compiles each completed job's model once
+//! (worker-side, before the job flips to `done`) and answers
+//! `eval`/`generate` requests from the LRU [`server`] cache;
+//! `benches/sparse_infer.rs` A/Bs dense vs CSR vs n:m on prefill and
+//! decode shapes (`BENCH_infer.json`).
+//!
 //! ## Crash safety: journal, checkpoints, fault injection
 //!
 //! With `--journal DIR` the server (and `sparsefw prune`) becomes
@@ -250,6 +275,7 @@ pub mod prelude {
     pub use crate::coordinator::{
         Allocation, EvalSpec, JobResult, JobSpec, PruneSession,
     };
+    pub use crate::model::compiled::{CompiledModel, SparseFormat};
     pub use crate::model::{Gpt, GptConfig};
     pub use crate::pruner::{
         FwEngine, LayerPruner, Method, MethodCaps, MethodRegistry, PruneMethod, RefinePass,

@@ -5,11 +5,13 @@
 //!   methods                      — list the open method registry
 //!   prune    [--model --method --pattern|--owl --backend --refine …]
 //!            [--spec job.json --save-spec job.json]
-//!   eval     [--model --masks file]
+//!   eval     [--model --masks file --sparse --sparse-format]
+//!   generate                     — sample tokens from a compiled sparse model
 //!   selfcheck                    — PJRT vs native numerical cross-check
 //!   analyze                      — project-invariant static analysis (lints)
 //!   trace                        — render FW convergence certificates
-//!   serve    [--addr --workers --queue-cap --calib-cache --demo --trace-out]
+//!   serve    [--addr --workers --queue-cap --calib-cache --compiled-cache
+//!             --demo --trace-out]
 //!   submit / status / shutdown   — client side of a running server
 //!   report-table1 / report-table2 / report-fig2 / report-fig3 / report-fig4
 //!
@@ -62,7 +64,16 @@ USAGE: sparsefw <subcommand> [flags]
              [--trace-every N] [--trace-out trace.ndjson]
              [--result-out result.json]
              [--journal DIR] [--job-timeout SECS]
-  eval       --model M [--masks masks.safetensors] [--pjrt]
+  eval       --model M [--masks masks.safetensors] [--pjrt] [--demo]
+             [--sparse [--sparse-format auto|dense|csr|nm]]
+                                  --sparse compiles the masked model into
+                                  packed sparse formats and cross-checks
+                                  logits + perplexity vs the masked dense
+  generate   [--model M | --demo] [--masks masks.safetensors]
+             [--prompt T1,T2,…] [--max-new N] [--temperature T]
+             [--seed S] [--sparse-format auto|dense|csr|nm]
+                                  KV-cached decode from the compiled
+                                  model (temperature <= 0 is greedy)
   selfcheck                       cross-check PJRT kernels vs native math
   analyze    [--src DIR] [--deny-warnings]
                                   run the project lints over the source
@@ -73,8 +84,8 @@ USAGE: sparsefw <subcommand> [flags]
                                   tables (gap decay; layers whose final
                                   duality gap exceeds G are flagged)
   serve      [--addr HOST:PORT] [--workers N] [--queue-cap N]
-             [--calib-cache N] [--conn-threads N] [--history-cap N]
-             [--demo] [--trace-out trace.ndjson]
+             [--calib-cache N] [--compiled-cache N] [--conn-threads N]
+             [--history-cap N] [--demo] [--trace-out trace.ndjson]
              [--journal DIR] [--job-timeout SECS]
   resume     --journal DIR [--demo] [--job-timeout SECS]
                                   finish interrupted prune runs from
@@ -149,6 +160,8 @@ on.  Lint catalog:
                           test, the table1_methods bench, or this USAGE
     metrics-coverage      a metric in the server's METRIC_CATALOG
                           missing from this USAGE's metric catalog
+    route-coverage        a route in the server's API dispatch missing
+                          from this USAGE's endpoint table
     codec-fields          a to_json/from_json pair whose key sets differ
     stale-allow           an allow annotation that suppresses nothing
     unbounded-retry       a retry loop with neither an attempt cap nor
@@ -177,6 +190,51 @@ GET /metrics exposes queue depth / cache hits / worker utilization.
 to completion, --stream follows live progress); port 0 in --addr
 picks an ephemeral port (printed as `listening on …`).  --demo serves
 a randomly-initialized tiny model without an artifacts workspace.
+
+SERVING PRUNED MODELS
+
+A pruned model is more than masks: the sparse inference fast path
+packs each pruned linear into the cheapest format its mask supports
+and runs the forward pass on the packed data, never materializing the
+masked dense weights.  Formats:
+
+    dense   W⊙M, plain matmul       masks too dense to pay for
+                                    indirection (density > 0.4)
+    csr     row-ptr + col-idx + val unstructured / per-row masks
+    nm      interleaved n:m groups  n kept values per m-column group,
+            (values + offset nibbles)  balanced rows, no row pointers
+
+--sparse-format auto (the default everywhere) picks per layer: n:m
+when the mask satisfies a uniform n:m invariant (m in {4,8,16}), dense
+above the density crossover, CSR otherwise.  `eval --sparse` proves
+the compiled model faithful (logit max|Δ| vs the masked dense model,
+plus both perplexities); `generate` runs the KV-cached decode loop on
+it; benches/sparse_infer.rs A/Bs dense vs csr vs nm on prefill and
+decode shapes (BENCH_infer.json in CI).
+
+A serving server compiles each completed job's result once
+(worker-side, before the job flips to done) into an LRU cache
+(--compiled-cache N models, default 4), then answers inference
+requests from the cache.  Endpoint table:
+
+    POST   /jobs                   submit a JobSpec
+    GET    /jobs                   list jobs (?after=ID&limit=N pages)
+    GET    /jobs/:id               status + progress + result summary
+    GET    /jobs/:id/events        chunked NDJSON live progress
+    GET    /jobs/:id/trace         trace spans for the job's corr ID
+    POST   /jobs/:id/eval          perplexity of the compiled model
+                                   (body {\"max_seqs\": N}, optional)
+    POST   /jobs/:id/generate      sample from the compiled model
+                                   (body {\"prompt\": [...], \"max_new\",
+                                   \"temperature\", \"seed\"})
+    DELETE /jobs/:id               cancel a queued job
+    GET    /methods                the method registry
+    GET    /healthz                liveness + build info
+    GET    /metrics                metrics (JSON / ?format=prometheus)
+    POST   /shutdown               graceful shutdown (?drain=1)
+
+The route-coverage lint keeps this table in sync with the server's
+actual dispatch (src/server/api.rs).
 
 DURABILITY & FAILURE HANDLING
 
@@ -283,6 +341,12 @@ buckets (1ms..2min) with p50/p95/p99 in the JSON form.  Catalog:
     sparsefw_queue_depth               gauge      queued jobs
     sparsefw_uptime_seconds            gauge      seconds since bind
     sparsefw_peak_gram_bytes           gauge      staged-gram high-water
+    sparsefw_models_compiled_total     counter    serving models compiled
+                                                  at job completion
+    sparsefw_compiled_cache_hits_total counter    compiled-model cache hits
+    sparsefw_compiled_cache_misses_total counter  compiled-model cache
+                                                  misses
+    sparsefw_compiled_cache_models     gauge      compiled models resident
     sparsefw_queue_wait_seconds        histogram  submit -> start
     sparsefw_job_wall_seconds          histogram  per-job wall time
     sparsefw_phase_calib_seconds       histogram  calibration spans
@@ -290,6 +354,8 @@ buckets (1ms..2min) with p50/p95/p99 in the JSON form.  Catalog:
     sparsefw_phase_fw_seconds          histogram  per-layer FW spans
     sparsefw_phase_refine_seconds      histogram  refine spans
     sparsefw_phase_io_seconds          histogram  result/eval spans
+    sparsefw_eval_request_seconds      histogram  POST /jobs/:id/eval
+    sparsefw_generate_request_seconds  histogram  POST /jobs/:id/generate
 
 The catalog lives in server::METRIC_CATALOG; the metrics-coverage lint
 keeps this table and that list in sync.
@@ -335,6 +401,28 @@ fn open_session(args: &Args) -> Result<PruneSession> {
     Ok(PruneSession::new(open_ws(args)?))
 }
 
+/// `--demo` swaps the artifacts workspace for the in-memory demo model
+/// (same model `serve --demo` uses) — prune/eval/generate all honour it.
+fn open_session_or_demo(args: &Args) -> Result<PruneSession> {
+    if args.has("demo") {
+        server::demo_sessions(1)
+            .into_iter()
+            .next()
+            .context("building the demo session")
+    } else {
+        open_session(args)
+    }
+}
+
+/// Default model name: the demo session only knows "demo".
+fn default_model(args: &Args) -> &'static str {
+    if args.has("demo") {
+        "demo"
+    } else {
+        "tiny"
+    }
+}
+
 fn run(args: &Args) -> Result<()> {
     // SPARSEFW_TRACE=stderr installs the pretty-printing span sink
     sparsefw::util::telemetry::install_from_env();
@@ -349,6 +437,7 @@ fn run(args: &Args) -> Result<()> {
         Some("methods") => methods_cmd(args),
         Some("prune") => prune(args),
         Some("eval") => eval_cmd(args),
+        Some("generate") => generate_cmd(args),
         Some("selfcheck") => selfcheck(args),
         Some("analyze") => analyze_cmd(args),
         Some("trace") => trace_cmd(args),
@@ -538,8 +627,11 @@ fn print_eval(model_name: &str, ev: &EvalSummary, sparsity: Option<f64>) {
 
 fn prune(args: &Args) -> Result<()> {
     use sparsefw::util::telemetry::{self, NdjsonSink, TraceSink};
-    let mut session = open_session(args)?;
-    let spec = build_spec(args)?;
+    let mut session = open_session_or_demo(args)?;
+    let mut spec = build_spec(args)?;
+    if args.has("demo") && args.get("model").is_none() {
+        spec.model = default_model(args).to_string();
+    }
     if let Some(path) = args.get("save-spec") {
         spec.save(Path::new(path))?;
         info!("job spec written to {path}");
@@ -622,24 +714,30 @@ fn prune(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn eval_cmd(args: &Args) -> Result<()> {
-    let mut session = open_session(args)?;
-    let model_name = args.get("model").unwrap_or("tiny").to_string();
-    // one-shot subcommand: load via the workspace directly instead of
-    // the session cache, so only one copy of the checkpoint is live
-    let mut model = {
-        let ws = session.workspace().expect("session opened from a workspace");
-        ws.load_model(&model_name)?
-    };
-
-    if let Some(mask_file) = args.get("masks") {
-        let tensors = safetensors::load(Path::new(mask_file))?;
-        let masks: BTreeMap<String, Mat> = tensors
+/// Load `--masks FILE` as mask matrices (empty map without the flag).
+fn load_masks(args: &Args) -> Result<BTreeMap<String, Mat>> {
+    match args.get("masks") {
+        Some(mask_file) => safetensors::load(Path::new(mask_file))?
             .into_iter()
             .map(|(k, t)| Ok((k, t.to_mat()?)))
-            .collect::<Result<_>>()?;
+            .collect::<Result<_>>(),
+        None => Ok(BTreeMap::new()),
+    }
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let mut session = open_session_or_demo(args)?;
+    let model_name = args.get("model").unwrap_or(default_model(args)).to_string();
+    let mut model = session.model(&model_name)?.clone();
+
+    let masks = load_masks(args)?;
+    if !masks.is_empty() {
         model = model.apply_masks(&masks)?;
-        info!("applied {mask_file}; sparsity = {:.3}", model.pruned_sparsity());
+        info!("applied masks; sparsity = {:.3}", model.pruned_sparsity());
+    }
+
+    if args.has("sparse") {
+        return eval_sparse(args, &mut session, &model_name, &model, &masks);
     }
 
     let espec = eval_spec(args)?;
@@ -652,6 +750,107 @@ fn eval_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `eval --sparse` — compile the masked model into packed sparse
+/// formats and cross-check it against the masked dense model: logit
+/// max-abs-diff on a few held-out sequences, then both perplexities.
+/// Exits non-zero if the compiled forward drifts past tolerance, so CI
+/// can lean on it as an end-to-end equivalence gate.
+fn eval_sparse(
+    args: &Args,
+    session: &mut PruneSession,
+    model_name: &str,
+    masked: &Gpt,
+    masks: &BTreeMap<String, Mat>,
+) -> Result<()> {
+    use sparsefw::eval::perplexity_native;
+    use sparsefw::model::compiled::{CompiledModel, SparseFormat, DEFAULT_CROSSOVER};
+    use sparsefw::model::forward::forward;
+
+    const LOGIT_TOL: f32 = 1e-3;
+
+    let format = SparseFormat::parse(args.get("sparse-format").unwrap_or("auto"))?;
+    let compiled = {
+        let base = session.model(model_name)?;
+        CompiledModel::compile(base, masks, &BTreeMap::new(), format, DEFAULT_CROSSOVER)?
+    };
+    println!("{model_name} [--sparse-format {}]: {}", format.label(), compiled.summary());
+
+    let espec = eval_spec(args)?;
+    let bin = session.test_bin()?;
+    let seqs = bin.sequential(masked.cfg.seq_len, 4);
+    anyhow::ensure!(!seqs.is_empty(), "test bin shorter than one sequence");
+    let mut max_diff = 0.0f32;
+    for s in &seqs {
+        let dense_out = forward(masked, s, false);
+        let sparse_out = forward(&compiled, s, false);
+        max_diff = max_diff.max(dense_out.logits.max_abs_diff(&sparse_out.logits));
+    }
+    println!("logit max|Δ| vs masked dense = {max_diff:.3e} over {} seq(s)", seqs.len());
+    anyhow::ensure!(
+        max_diff < LOGIT_TOL,
+        "compiled forward drifted from the masked dense model: \
+         logit max|Δ| = {max_diff:.3e} (tolerance {LOGIT_TOL:.0e})"
+    );
+
+    let dense_ppl = perplexity_native(masked, bin, espec.seqs)?;
+    let sparse_ppl = perplexity_native(&compiled, bin, espec.seqs)?;
+    println!(
+        "ppl masked-dense={dense_ppl:.3} compiled={sparse_ppl:.3} (rel diff {:.2e})",
+        (dense_ppl - sparse_ppl).abs() / dense_ppl.max(1e-12),
+    );
+    Ok(())
+}
+
+/// `sparsefw generate` — compile the (optionally masked) model and run
+/// the KV-cached decode loop.  Deterministic for a fixed seed: the
+/// `tokens:` line is stable across runs, which the CI smoke lane
+/// asserts.
+fn generate_cmd(args: &Args) -> Result<()> {
+    use sparsefw::model::compiled::{
+        CompiledModel, GenerateParams, SparseFormat, DEFAULT_CROSSOVER,
+    };
+
+    let mut session = open_session_or_demo(args)?;
+    let model_name = args.get("model").unwrap_or(default_model(args)).to_string();
+    let masks = load_masks(args)?;
+    let format = SparseFormat::parse(args.get("sparse-format").unwrap_or("auto"))?;
+    let compiled = {
+        let base = session.model(&model_name)?;
+        CompiledModel::compile(base, &masks, &BTreeMap::new(), format, DEFAULT_CROSSOVER)?
+    };
+    info!("compiled {model_name}: {}", compiled.summary());
+
+    let prompt: Vec<u8> = match args.get("prompt") {
+        Some(s) => s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<u8>()
+                    .context("--prompt must be comma-separated token ids (0-255)")
+            })
+            .collect::<Result<_>>()?,
+        None => vec![1, 2, 3],
+    };
+    let params = GenerateParams {
+        max_new: args.get_usize("max-new", 16)?,
+        temperature: args.get_f64("temperature", 0.0)?,
+        seed: args.get_u64("seed", 7)?,
+    };
+
+    let started = std::time::Instant::now();
+    let generated = compiled.generate(&prompt, &params)?;
+    let wall_ms = started.elapsed().as_secs_f64() * 1e3;
+    let rendered: Vec<String> = generated.tokens.iter().map(|t| t.to_string()).collect();
+    println!("tokens: {}", rendered.join(" "));
+    println!(
+        "generated {} token(s) from a {}-token prompt in {wall_ms:.1} ms ({:.3} ms/token)",
+        generated.tokens.len() - generated.prompt_len,
+        generated.prompt_len,
+        wall_ms / generated.decode_steps.max(1) as f64,
+    );
+    Ok(())
+}
+
 /// Run the pruning job server (blocks until `POST /shutdown` or
 /// `sparsefw shutdown`).
 fn serve(args: &Args) -> Result<()> {
@@ -660,6 +859,8 @@ fn serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2)?.max(1),
         queue_capacity: args.get_usize("queue-cap", 256)?,
         calib_cache_cap: args.get_usize("calib-cache", DEFAULT_CALIB_CACHE_CAP)?,
+        compiled_cache_cap: args
+            .get_usize("compiled-cache", server::DEFAULT_COMPILED_CACHE_CAP)?,
         conn_threads: args.get_usize("conn-threads", 8)?,
         job_history_cap: args.get_usize("history-cap", 1024)?,
         trace_out: args.get("trace-out").map(String::from),

@@ -1,0 +1,722 @@
+//! Compiled sparse models — the deployment artifact of a pruning run.
+//!
+//! A [`CompiledModel`] packs each pruned linear of a [`Gpt`] into the
+//! cheapest representation its mask supports — dense (`W ⊙ M`), CSR
+//! ([`CsrMat`]), or packed n:m ([`NmMat`]) — straight from a pruning
+//! result's masks and reconstructed weights, without materializing a
+//! second dense model.  It implements the stepper's
+//! [`ForwardModel`] seam, so perplexity evaluation reuses the exact
+//! same `forward_embed/block/head` code as the dense path, and adds a
+//! KV-cached batch=1 decode loop ([`CompiledModel::decode_step`]) for
+//! the latency-bound `generate` regime where sparsity pays most: the
+//! decode step runs on the `matvec_into` kernels, never the full
+//! matmul.
+//!
+//! Format choice (`auto`):
+//! 1. mask has n:m structure (every aligned group ≤ `keep` survivors,
+//!    packed density ≈ raw density) → [`NmMat`];
+//! 2. density above [`DEFAULT_CROSSOVER`] → masked dense (index
+//!    chasing loses to the blocked dense matmul there);
+//! 3. otherwise → [`CsrMat`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::matmul::dot;
+use crate::tensor::nm::NmMat;
+use crate::tensor::sparse::CsrMat;
+use crate::tensor::{matmul_a_bt, Mat};
+use crate::util::prng::Xoshiro256;
+
+use super::forward::{gelu, BlockNames, ForwardModel};
+use super::{Gpt, GptConfig};
+
+/// Measured CSR-vs-dense crossover density: above this, the blocked
+/// dense matmul beats index chasing (see `benches/sparse_infer.rs`),
+/// so `auto` keeps the layer dense.
+pub const DEFAULT_CROSSOVER: f64 = 0.4;
+
+/// User-selectable packing policy (`--sparse-format`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SparseFormat {
+    /// Per-layer choice from mask pattern + density crossover.
+    Auto,
+    /// Masked dense everywhere (the baseline the benches A/B against).
+    Dense,
+    /// CSR everywhere.
+    Csr,
+    /// Packed n:m everywhere; compilation fails if a mask has no n:m
+    /// structure.
+    Nm,
+}
+
+impl SparseFormat {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(SparseFormat::Auto),
+            "dense" => Ok(SparseFormat::Dense),
+            "csr" => Ok(SparseFormat::Csr),
+            "nm" => Ok(SparseFormat::Nm),
+            _ => bail!("unknown sparse format {s:?} (want auto|dense|csr|nm)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SparseFormat::Auto => "auto",
+            SparseFormat::Dense => "dense",
+            SparseFormat::Csr => "csr",
+            SparseFormat::Nm => "nm",
+        }
+    }
+}
+
+/// One compiled linear layer.
+#[derive(Clone, Debug)]
+pub enum LayerWeights {
+    DenseW(Mat),
+    Csr(CsrMat),
+    Nm(NmMat),
+}
+
+impl LayerWeights {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerWeights::DenseW(_) => "dense",
+            LayerWeights::Csr(_) => "csr",
+            LayerWeights::Nm(_) => "nm",
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            LayerWeights::DenseW(w) => w.numel() * 4,
+            LayerWeights::Csr(c) => c.size_bytes(),
+            LayerWeights::Nm(n) => n.size_bytes(),
+        }
+    }
+
+    /// out = a·Wᵀ (out += when `accumulate`) — the prefill kernel.
+    pub fn matmul_a_bt_into(&self, a: &Mat, out: &mut Mat, accumulate: bool) {
+        match self {
+            LayerWeights::DenseW(w) => {
+                let c = matmul_a_bt(a, w);
+                if accumulate {
+                    out.add_inplace(&c);
+                } else {
+                    *out = c;
+                }
+            }
+            LayerWeights::Csr(c) => c.matmul_a_bt_into(a, out, accumulate),
+            LayerWeights::Nm(n) => n.matmul_a_bt_into(a, out, accumulate),
+        }
+    }
+
+    /// y = W·x (y += when `accumulate`) — the batch=1 decode kernel.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32], accumulate: bool) {
+        match self {
+            LayerWeights::DenseW(w) => {
+                assert_eq!(x.len(), w.cols);
+                assert_eq!(y.len(), w.rows);
+                for i in 0..w.rows {
+                    let acc = dot(w.row(i), x);
+                    if accumulate {
+                        y[i] += acc;
+                    } else {
+                        y[i] = acc;
+                    }
+                }
+            }
+            LayerWeights::Csr(c) => c.matvec_into(x, y, accumulate),
+            LayerWeights::Nm(n) => n.matvec_into(x, y, accumulate),
+        }
+    }
+}
+
+/// A model compiled for sparse inference.  Never-pruned params
+/// (embeddings, layernorms, the tied head) stay dense; the 4·n_layers
+/// pruned linears each carry their packed representation.
+pub struct CompiledModel {
+    cfg: GptConfig,
+    dense_params: BTreeMap<String, Mat>,
+    layer_weights: BTreeMap<String, LayerWeights>,
+    names: Vec<BlockNames>,
+}
+
+impl CompiledModel {
+    /// Pack `base`'s pruned linears under `masks`, preferring
+    /// reconstructed weights from `new_weights` (SparseGPT / FW-refine
+    /// output) over the base weights.  Layers without a mask stay
+    /// dense.  No second dense `Gpt` is ever materialized — each layer
+    /// goes straight from (weights, mask) to its packed form.
+    pub fn compile(
+        base: &Gpt,
+        masks: &BTreeMap<String, Mat>,
+        new_weights: &BTreeMap<String, Mat>,
+        format: SparseFormat,
+        crossover: f64,
+    ) -> Result<Self> {
+        let cfg = base.cfg.clone();
+        let mut layer_weights = BTreeMap::new();
+        for l in cfg.layers() {
+            let w = new_weights
+                .get(&l.name)
+                .or_else(|| base.params.get(&l.name))
+                .with_context(|| format!("compile: missing weights for {}", l.name))?;
+            ensure!(
+                (w.rows, w.cols) == (l.d_out, l.d_in),
+                "compile: {} has shape {}x{}, want {}x{}",
+                l.name,
+                w.rows,
+                w.cols,
+                l.d_out,
+                l.d_in
+            );
+            let lw = match masks.get(&l.name) {
+                None => LayerWeights::DenseW(w.clone()),
+                Some(mask) => {
+                    ensure!(
+                        (mask.rows, mask.cols) == (w.rows, w.cols),
+                        "compile: mask shape mismatch for {}",
+                        l.name
+                    );
+                    pack_layer(w, mask, format, crossover)
+                        .with_context(|| format!("compile: packing {}", l.name))?
+                }
+            };
+            layer_weights.insert(l.name.clone(), lw);
+        }
+        let dense_params: BTreeMap<String, Mat> = base
+            .params
+            .iter()
+            .filter(|(name, _)| !layer_weights.contains_key(name.as_str()))
+            .map(|(name, m)| (name.clone(), m.clone()))
+            .collect();
+        let names = BlockNames::for_model(&cfg);
+        Ok(Self { cfg, dense_params, layer_weights, names })
+    }
+
+    /// (dense, csr, nm) layer counts over the pruned linears.
+    pub fn format_counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for lw in self.layer_weights.values() {
+            match lw {
+                LayerWeights::DenseW(_) => c.0 += 1,
+                LayerWeights::Csr(_) => c.1 += 1,
+                LayerWeights::Nm(_) => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// Bytes of the packed pruned linears.
+    pub fn packed_bytes(&self) -> usize {
+        self.layer_weights.values().map(LayerWeights::size_bytes).sum()
+    }
+
+    /// Bytes the same linears occupy dense (f32).
+    pub fn dense_equiv_bytes(&self) -> usize {
+        self.cfg.layers().iter().map(|l| l.d_out * l.d_in * 4).sum()
+    }
+
+    /// Per-layer packed format, for reporting.
+    pub fn layer_format(&self, name: &str) -> Option<&'static str> {
+        self.layer_weights.get(name).map(LayerWeights::label)
+    }
+
+    /// One-line compile report: `formats dense/csr/nm = a/b/c, packed
+    /// X KiB vs dense Y KiB`.
+    pub fn summary(&self) -> String {
+        let (d, c, n) = self.format_counts();
+        format!(
+            "formats dense/csr/nm = {}/{}/{}, packed {:.1} KiB vs dense {:.1} KiB",
+            d,
+            c,
+            n,
+            self.packed_bytes() as f64 / 1024.0,
+            self.dense_equiv_bytes() as f64 / 1024.0
+        )
+    }
+
+    fn layer(&self, name: &str) -> &LayerWeights {
+        self.layer_weights
+            .get(name)
+            .unwrap_or_else(|| panic!("missing compiled layer {name}"))
+    }
+
+    /// Fresh KV cache for a batch=1 decode stream.
+    pub fn begin_decode(&self) -> DecodeState {
+        let d = self.cfg.d_model;
+        DecodeState {
+            k: (0..self.cfg.n_layers).map(|_| Mat::zeros(0, d)).collect(),
+            v: (0..self.cfg.n_layers).map(|_| Mat::zeros(0, d)).collect(),
+            pos: 0,
+        }
+    }
+
+    /// Advance the decode stream by one token; returns the next-token
+    /// logits.  Every pruned linear runs through `matvec_into` — one
+    /// row of work, no full-sequence matmul, attention against the
+    /// cached K/V only.
+    pub fn decode_step(&self, token: u8, st: &mut DecodeState) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (d, n_heads) = (cfg.d_model, cfg.n_heads);
+        let hd = d / n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let pos = st.pos;
+        assert!(pos < cfg.seq_len, "decode past seq_len {}", cfg.seq_len);
+        assert!((token as usize) < cfg.vocab_size, "token out of vocab");
+
+        let te = self.dense_params["tok_emb"].row(token as usize);
+        let pe = self.dense_params["pos_emb"].row(pos);
+        let mut x: Vec<f32> = te.iter().zip(pe).map(|(a, b)| a + b).collect();
+
+        let mut qkv = vec![0.0f32; 3 * d];
+        let mut scores = vec![0.0f32; pos + 1];
+        for (bi, names) in self.names.iter().enumerate() {
+            let h = layernorm_row(
+                &x,
+                self.dense_params[&names.ln1_g].row(0),
+                self.dense_params[&names.ln1_b].row(0),
+            );
+            self.layer(&names.wqkv).matvec_into(&h, &mut qkv, false);
+            push_row(&mut st.k[bi], &qkv[d..2 * d]);
+            push_row(&mut st.v[bi], &qkv[2 * d..3 * d]);
+
+            let mut attn = vec![0.0f32; d];
+            for head in 0..n_heads {
+                let ho = head * hd;
+                let q = &qkv[ho..ho + hd];
+                for (j, s) in scores.iter_mut().enumerate() {
+                    *s = dot(q, &st.k[bi].row(j)[ho..ho + hd]) * scale;
+                }
+                softmax_slice(&mut scores);
+                for (j, &s) in scores.iter().enumerate() {
+                    let vrow = &st.v[bi].row(j)[ho..ho + hd];
+                    for (o, vv) in attn[ho..ho + hd].iter_mut().zip(vrow) {
+                        *o += s * vv;
+                    }
+                }
+            }
+            self.layer(&names.wo).matvec_into(&attn, &mut x, true);
+
+            let h2 = layernorm_row(
+                &x,
+                self.dense_params[&names.ln2_g].row(0),
+                self.dense_params[&names.ln2_b].row(0),
+            );
+            let mut up = vec![0.0f32; cfg.d_ff];
+            self.layer(&names.wup).matvec_into(&h2, &mut up, false);
+            for v in &mut up {
+                *v = gelu(*v);
+            }
+            self.layer(&names.wdown).matvec_into(&up, &mut x, true);
+        }
+
+        let xf = layernorm_row(
+            &x,
+            self.dense_params["lnf_g"].row(0),
+            self.dense_params["lnf_b"].row(0),
+        );
+        let tok_emb = &self.dense_params["tok_emb"];
+        let mut logits = vec![0.0f32; cfg.vocab_size];
+        for (r, l) in logits.iter_mut().enumerate() {
+            *l = dot(tok_emb.row(r), &xf);
+        }
+        st.pos += 1;
+        logits
+    }
+
+    /// Greedy (`temperature <= 0`) or seeded temperature sampling off
+    /// the decode stream's `forward_head` logits.  Generation stops at
+    /// `prompt.len() + max_new` tokens or the model's `seq_len`,
+    /// whichever comes first.
+    pub fn generate(&self, prompt: &[u8], p: &GenerateParams) -> Result<Generated> {
+        ensure!(!prompt.is_empty(), "generate: empty prompt");
+        ensure!(
+            prompt.len() <= self.cfg.seq_len,
+            "generate: prompt len {} exceeds seq_len {}",
+            prompt.len(),
+            self.cfg.seq_len
+        );
+        for &t in prompt {
+            ensure!(
+                (t as usize) < self.cfg.vocab_size,
+                "generate: token {t} out of vocab {}",
+                self.cfg.vocab_size
+            );
+        }
+        let cap = self.cfg.seq_len.min(prompt.len() + p.max_new);
+        let mut st = self.begin_decode();
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.decode_step(t, &mut st);
+        }
+        let mut rng = Xoshiro256::new(p.seed);
+        let mut tokens = prompt.to_vec();
+        let mut decode_steps = prompt.len();
+        while tokens.len() < cap {
+            let next = sample_token(&logits, p.temperature, &mut rng);
+            tokens.push(next);
+            if tokens.len() < cap {
+                logits = self.decode_step(next, &mut st);
+                decode_steps += 1;
+            }
+        }
+        Ok(Generated { prompt_len: prompt.len(), tokens, decode_steps })
+    }
+}
+
+impl ForwardModel for CompiledModel {
+    fn cfg(&self) -> &GptConfig {
+        &self.cfg
+    }
+
+    fn dense(&self, name: &str) -> &Mat {
+        self.dense_params
+            .get(name)
+            .unwrap_or_else(|| panic!("missing dense param {name}"))
+    }
+
+    fn linear_into(&self, name: &str, x: &Mat, out: &mut Mat, accumulate: bool) {
+        self.layer(name).matmul_a_bt_into(x, out, accumulate);
+    }
+
+    fn block_names(&self) -> &[BlockNames] {
+        &self.names
+    }
+}
+
+/// KV cache of one batch=1 decode stream.
+pub struct DecodeState {
+    /// Per block, cached key rows (pos × d_model).
+    k: Vec<Mat>,
+    /// Per block, cached value rows (pos × d_model).
+    v: Vec<Mat>,
+    pos: usize,
+}
+
+impl DecodeState {
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Sampling knobs for [`CompiledModel::generate`].
+pub struct GenerateParams {
+    pub max_new: usize,
+    /// `<= 0` means greedy argmax.
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+/// Output of [`CompiledModel::generate`].
+pub struct Generated {
+    /// Prompt followed by the sampled continuation.
+    pub tokens: Vec<u8>,
+    pub prompt_len: usize,
+    /// Decode-loop iterations taken (for ms/token accounting).
+    pub decode_steps: usize,
+}
+
+fn pack_layer(
+    w: &Mat,
+    mask: &Mat,
+    format: SparseFormat,
+    crossover: f64,
+) -> Result<LayerWeights> {
+    let density = mask.count_nonzero() as f64 / mask.numel().max(1) as f64;
+    match format {
+        SparseFormat::Dense => Ok(LayerWeights::DenseW(w.hadamard(mask))),
+        SparseFormat::Csr => Ok(LayerWeights::Csr(CsrMat::from_masked(w, mask))),
+        SparseFormat::Nm => {
+            let (keep, block) = NmMat::detect(mask, 1.0)
+                .context("mask has no n:m structure (some aligned group is full)")?;
+            Ok(LayerWeights::Nm(NmMat::from_masked(w, mask, keep, block)?))
+        }
+        SparseFormat::Auto => {
+            // balanced n:m structure packs tighter than CSR and
+            // partitions statically — take it whenever padding waste
+            // is negligible (packed density ≈ raw density)
+            if let Some((keep, block)) = NmMat::detect(mask, density * 1.1 + 1e-9) {
+                return Ok(LayerWeights::Nm(NmMat::from_masked(w, mask, keep, block)?));
+            }
+            if density > crossover {
+                return Ok(LayerWeights::DenseW(w.hadamard(mask)));
+            }
+            Ok(LayerWeights::Csr(CsrMat::from_masked(w, mask)))
+        }
+    }
+}
+
+fn layernorm_row(x: &[f32], g: &[f32], b: &[f32]) -> Vec<f32> {
+    let n = x.len() as f32;
+    let mean = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let inv = 1.0 / (var + 1e-5f32).sqrt();
+    x.iter()
+        .zip(g.iter().zip(b))
+        .map(|(&v, (&gv, &bv))| (v - mean) * inv * gv + bv)
+        .collect()
+}
+
+fn softmax_slice(row: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let mut sum = 0.0;
+    for x in row.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+fn push_row(m: &mut Mat, row: &[f32]) {
+    debug_assert_eq!(row.len(), m.cols);
+    m.data.extend_from_slice(row);
+    m.rows += 1;
+}
+
+fn sample_token(logits: &[f32], temperature: f64, rng: &mut Xoshiro256) -> u8 {
+    if temperature <= 0.0 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best as u8;
+    }
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x)) as f64;
+    let probs: Vec<f64> = logits
+        .iter()
+        .map(|&x| ((x as f64 - max) / temperature).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    let mut u = rng.next_f64() * total;
+    for (i, &p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return i as u8;
+        }
+    }
+    (logits.len() - 1) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::forward;
+    use crate::model::testutil::{random_model, tiny_cfg};
+    use crate::pruner::saliency::{magnitude_scores, saliency_mask};
+    use crate::pruner::SparsityPattern;
+
+    fn masks_for(model: &Gpt, pattern: &SparsityPattern) -> BTreeMap<String, Mat> {
+        model
+            .cfg
+            .layers()
+            .iter()
+            .map(|l| {
+                let w = model.mat(&l.name);
+                (l.name.clone(), saliency_mask(&magnitude_scores(w), pattern))
+            })
+            .collect()
+    }
+
+    fn check_equivalence(pattern: &SparsityPattern, format: SparseFormat) {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 21);
+        let masks = masks_for(&model, pattern);
+        let masked = model.apply_masks(&masks).unwrap();
+        let compiled =
+            CompiledModel::compile(&model, &masks, &BTreeMap::new(), format, DEFAULT_CROSSOVER)
+                .unwrap();
+        let tokens: Vec<u8> = (0..24u8).map(|i| i.wrapping_mul(11)).collect();
+        let dense_logits = forward(&masked, &tokens, false).logits;
+        let sparse_logits = forward(&compiled, &tokens, false).logits;
+        assert!(
+            dense_logits.max_abs_diff(&sparse_logits) < 1e-3,
+            "{} / {}: max diff {}",
+            pattern.label(),
+            format.label(),
+            dense_logits.max_abs_diff(&sparse_logits)
+        );
+    }
+
+    #[test]
+    fn compiled_matches_dense_all_patterns_and_formats() {
+        let patterns = [
+            SparsityPattern::Unstructured { sparsity: 0.6 },
+            SparsityPattern::PerRow { sparsity: 0.75 },
+            SparsityPattern::NM { keep: 2, block: 4 },
+        ];
+        for pat in &patterns {
+            check_equivalence(pat, SparseFormat::Csr);
+            check_equivalence(pat, SparseFormat::Auto);
+        }
+        // full-nm packing needs an n:m-structured mask
+        check_equivalence(&SparsityPattern::NM { keep: 2, block: 4 }, SparseFormat::Nm);
+        check_equivalence(&SparsityPattern::NM { keep: 1, block: 8 }, SparseFormat::Nm);
+    }
+
+    #[test]
+    fn auto_picks_nm_for_nm_masks_and_csr_below_crossover() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 5);
+        let nm_masks = masks_for(&model, &SparsityPattern::NM { keep: 1, block: 4 });
+        let c = CompiledModel::compile(
+            &model,
+            &nm_masks,
+            &BTreeMap::new(),
+            SparseFormat::Auto,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        assert_eq!(
+            c.format_counts(),
+            (0, 0, 8),
+            "1:4 masks must all compile to NmMat, got {}",
+            c.summary()
+        );
+        assert_eq!(c.layer_format("blocks.0.wqkv"), Some("nm"));
+
+        let un_masks = masks_for(&model, &SparsityPattern::Unstructured { sparsity: 0.8 });
+        let c2 = CompiledModel::compile(
+            &model,
+            &un_masks,
+            &BTreeMap::new(),
+            SparseFormat::Auto,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        assert_eq!(c2.format_counts().0, 0, "20% density must not stay dense");
+
+        // near-dense masks stay dense under auto
+        let dense_masks = masks_for(&model, &SparsityPattern::Unstructured { sparsity: 0.05 });
+        let c3 = CompiledModel::compile(
+            &model,
+            &dense_masks,
+            &BTreeMap::new(),
+            SparseFormat::Auto,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        assert!(c3.format_counts().0 > 0, "95% density should stay dense: {}", c3.summary());
+    }
+
+    #[test]
+    fn reconstructed_weights_take_priority() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 9);
+        let masks = masks_for(&model, &SparsityPattern::PerRow { sparsity: 0.5 });
+        let mut new_weights = BTreeMap::new();
+        new_weights.insert("blocks.0.wqkv".to_string(), Mat::zeros(48, 16));
+        let c = CompiledModel::compile(
+            &model,
+            &masks,
+            &new_weights,
+            SparseFormat::Csr,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        let x = Mat::ones(2, 16);
+        let mut out = Mat::zeros(2, 48);
+        c.linear_into("blocks.0.wqkv", &x, &mut out, false);
+        assert_eq!(out.data, vec![0.0; 96]);
+    }
+
+    #[test]
+    fn decode_matches_prefill_logits() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 33);
+        let masks = masks_for(&model, &SparsityPattern::PerRow { sparsity: 0.5 });
+        let compiled = CompiledModel::compile(
+            &model,
+            &masks,
+            &BTreeMap::new(),
+            SparseFormat::Auto,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        let tokens: Vec<u8> = vec![5, 17, 40, 3, 99, 250, 1, 7];
+        let full = forward(&compiled, &tokens, false).logits;
+        let mut st = compiled.begin_decode();
+        let mut last = Vec::new();
+        for &t in &tokens {
+            last = compiled.decode_step(t, &mut st);
+        }
+        assert_eq!(st.pos(), tokens.len());
+        let frow = full.row(tokens.len() - 1);
+        for (j, &l) in last.iter().enumerate() {
+            assert!((l - frow[j]).abs() < 1e-3, "logit {j}: {} vs {}", l, frow[j]);
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_bounded() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 2);
+        let masks = masks_for(&model, &SparsityPattern::NM { keep: 2, block: 4 });
+        let compiled = CompiledModel::compile(
+            &model,
+            &masks,
+            &BTreeMap::new(),
+            SparseFormat::Auto,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        let p = GenerateParams { max_new: 12, temperature: 0.8, seed: 7 };
+        let a = compiled.generate(&[1, 2, 3], &p).unwrap();
+        let b = compiled.generate(&[1, 2, 3], &p).unwrap();
+        assert_eq!(a.tokens, b.tokens, "same seed ⇒ same sample");
+        assert_eq!(a.tokens.len(), 15);
+        assert_eq!(&a.tokens[..3], &[1, 2, 3]);
+
+        let greedy = GenerateParams { max_new: 6, temperature: 0.0, seed: 0 };
+        let g1 = compiled.generate(&[9, 9], &greedy).unwrap();
+        let g2 = compiled.generate(&[9, 9], &greedy).unwrap();
+        assert_eq!(g1.tokens, g2.tokens);
+
+        // capped by seq_len
+        let long = GenerateParams { max_new: 500, temperature: 0.0, seed: 0 };
+        let l = compiled.generate(&[4], &long).unwrap();
+        assert_eq!(l.tokens.len(), cfg.seq_len);
+
+        assert!(compiled.generate(&[], &greedy).is_err());
+    }
+
+    #[test]
+    fn nm_format_rejects_unstructured_masks() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 4);
+        // 5% sparsity: groups are full almost surely → no n:m structure
+        let masks = masks_for(&model, &SparsityPattern::Unstructured { sparsity: 0.05 });
+        let err = CompiledModel::compile(
+            &model,
+            &masks,
+            &BTreeMap::new(),
+            SparseFormat::Nm,
+            DEFAULT_CROSSOVER,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn packed_smaller_than_dense_at_high_sparsity() {
+        let cfg = tiny_cfg();
+        let model = random_model(&cfg, 6);
+        let masks = masks_for(&model, &SparsityPattern::NM { keep: 1, block: 4 });
+        let c = CompiledModel::compile(
+            &model,
+            &masks,
+            &BTreeMap::new(),
+            SparseFormat::Auto,
+            DEFAULT_CROSSOVER,
+        )
+        .unwrap();
+        assert!(c.packed_bytes() < c.dense_equiv_bytes());
+    }
+}

@@ -14,12 +14,59 @@
 //! `G = XXᵀ` — and (b) evaluation when the PJRT path is not selected.
 //! An integration test checks logits against the AOT `model_fwd`
 //! executable to ~1e-3.
+//!
+//! The stepper is generic over [`ForwardModel`]: the layer-application
+//! seam through which the four pruned linears per block are applied.
+//! The dense [`Gpt`] routes them through the blocked dense matmul; a
+//! [`crate::model::compiled::CompiledModel`] dispatches per layer to
+//! packed CSR / n:m kernels.  Everything that is never pruned
+//! (embeddings, layernorm gains/biases, the weight-tied head) stays a
+//! dense [`Mat`] on both sides of the seam.
 
 use std::collections::BTreeMap;
 
 use crate::tensor::{matmul_a_bt, Mat};
 
 use super::{Gpt, GptConfig};
+
+/// Layer-application seam: anything the transformer stepper can run on.
+///
+/// `linear_into` is the only place a pruned linear's weights are
+/// touched during a forward; implementations choose the representation
+/// (dense, CSR, packed n:m) per layer.  `accumulate` folds the residual
+/// add into the kernel (`out += x·Wᵀ`).
+pub trait ForwardModel {
+    fn cfg(&self) -> &GptConfig;
+    /// A never-pruned dense parameter: embeddings, layernorm params.
+    fn dense(&self, name: &str) -> &Mat;
+    /// out = x·Wᵀ for pruned linear `name` (out += x·Wᵀ when
+    /// `accumulate`); `out` must be pre-shaped (x.rows × d_out).
+    fn linear_into(&self, name: &str, x: &Mat, out: &mut Mat, accumulate: bool);
+    fn block_names(&self) -> &[BlockNames];
+}
+
+impl ForwardModel for Gpt {
+    fn cfg(&self) -> &GptConfig {
+        &self.cfg
+    }
+
+    fn dense(&self, name: &str) -> &Mat {
+        self.mat(name)
+    }
+
+    fn linear_into(&self, name: &str, x: &Mat, out: &mut Mat, accumulate: bool) {
+        let c = matmul_a_bt(x, self.mat(name));
+        if accumulate {
+            out.add_inplace(&c);
+        } else {
+            *out = c;
+        }
+    }
+
+    fn block_names(&self) -> &[BlockNames] {
+        Gpt::block_names(self)
+    }
+}
 
 /// Per-layer linear inputs captured during a forward pass, keyed by the
 /// pruned-layer param name; each is (L, d_in) for one sequence.
@@ -110,13 +157,22 @@ fn softmax_row(row: &mut [f32]) {
 }
 
 /// Causal multi-head self-attention for one sequence; `h` is (L, d).
-/// One (L×L) scores buffer is reused across heads — every entry of a
-/// row is overwritten before the softmax, so reuse is exact.
+/// Thin wrapper computing the qkv projection densely — the generic
+/// stepper projects through the [`ForwardModel`] seam first and calls
+/// [`attention_from_qkv`] directly.
 pub(crate) fn attention(h: &Mat, wqkv: &Mat, n_heads: usize) -> Mat {
-    let (l, d) = (h.rows, h.cols);
+    let qkv = matmul_a_bt(h, wqkv); // (L, 3d)
+    attention_from_qkv(&qkv, n_heads)
+}
+
+/// Attention over a precomputed `qkv` projection (L, 3d).  One (L×L)
+/// scores buffer is reused across heads — every entry of a row is
+/// overwritten before the softmax, so reuse is exact.
+pub(crate) fn attention_from_qkv(qkv: &Mat, n_heads: usize) -> Mat {
+    let l = qkv.rows;
+    let d = qkv.cols / 3;
     let hd = d / n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
-    let qkv = matmul_a_bt(h, wqkv); // (L, 3d)
 
     let mut out = Mat::zeros(l, d);
     let mut scores = Mat::zeros(l, l);
@@ -153,14 +209,14 @@ pub(crate) fn attention(h: &Mat, wqkv: &Mat, n_heads: usize) -> Mat {
 
 /// Stage 1 of the stepper: token + position embeddings for one
 /// sequence — the (L, d_model) initial residual stream.
-pub fn forward_embed(model: &Gpt, tokens: &[u8]) -> Mat {
-    let cfg = &model.cfg;
+pub fn forward_embed<M: ForwardModel + ?Sized>(model: &M, tokens: &[u8]) -> Mat {
+    let cfg = model.cfg();
     let l = tokens.len();
     assert!(l <= cfg.seq_len, "sequence longer than model seq_len");
     let d = cfg.d_model;
 
-    let tok_emb = model.mat("tok_emb");
-    let pos_emb = model.mat("pos_emb");
+    let tok_emb = model.dense("tok_emb");
+    let pos_emb = model.dense("pos_emb");
     let mut x = Mat::zeros(l, d);
     for (i, &t) in tokens.iter().enumerate() {
         let te = tok_emb.row(t as usize);
@@ -177,48 +233,53 @@ pub fn forward_embed(model: &Gpt, tokens: &[u8]) -> Mat {
 /// block `names.block`, using `model`'s *current* weights (which may
 /// already carry pruning masks).  When `captures` is provided, the four
 /// pruned-linear inputs are recorded under their full param names.
-pub fn forward_block(
-    model: &Gpt,
+pub fn forward_block<M: ForwardModel + ?Sized>(
+    model: &M,
     names: &BlockNames,
     x: &mut Mat,
     mut captures: Option<&mut Captures>,
 ) {
-    let h = layernorm(x, model.mat(&names.ln1_g), model.mat(&names.ln1_b));
+    let h = layernorm(x, model.dense(&names.ln1_g), model.dense(&names.ln1_b));
     if let Some(c) = captures.as_deref_mut() {
         c.insert(names.wqkv.clone(), h.clone());
     }
-    let attn_h = attention(&h, model.mat(&names.wqkv), model.cfg.n_heads);
+    let d = h.cols;
+    let mut qkv = Mat::zeros(h.rows, 3 * d);
+    model.linear_into(&names.wqkv, &h, &mut qkv, false);
+    let attn_h = attention_from_qkv(&qkv, model.cfg().n_heads);
     if let Some(c) = captures.as_deref_mut() {
         c.insert(names.wo.clone(), attn_h.clone());
     }
-    let proj = matmul_a_bt(&attn_h, model.mat(&names.wo));
-    x.add_inplace(&proj);
+    // residual add folded into the kernel: x += attn_h · Wᵀ
+    model.linear_into(&names.wo, &attn_h, x, true);
 
-    let h2 = layernorm(x, model.mat(&names.ln2_g), model.mat(&names.ln2_b));
+    let h2 = layernorm(x, model.dense(&names.ln2_g), model.dense(&names.ln2_b));
     if let Some(c) = captures.as_deref_mut() {
         c.insert(names.wup.clone(), h2.clone());
     }
-    let mut up = matmul_a_bt(&h2, model.mat(&names.wup));
+    let mut up = Mat::zeros(h2.rows, model.cfg().d_ff);
+    model.linear_into(&names.wup, &h2, &mut up, false);
     for v in &mut up.data {
         *v = gelu(*v);
     }
     if let Some(c) = captures.as_deref_mut() {
         c.insert(names.wdown.clone(), up.clone());
     }
-    let down = matmul_a_bt(&up, model.mat(&names.wdown));
-    x.add_inplace(&down);
+    model.linear_into(&names.wdown, &up, x, true);
 }
 
-/// Stage 3 of the stepper: final layernorm + weight-tied head.
-pub fn forward_head(model: &Gpt, x: &Mat) -> Mat {
-    let xf = layernorm(x, model.mat("lnf_g"), model.mat("lnf_b"));
-    matmul_a_bt(&xf, model.mat("tok_emb"))
+/// Stage 3 of the stepper: final layernorm + weight-tied head (the
+/// head is never pruned, so it stays a dense matmul on every
+/// representation).
+pub fn forward_head<M: ForwardModel + ?Sized>(model: &M, x: &Mat) -> Mat {
+    let xf = layernorm(x, model.dense("lnf_g"), model.dense("lnf_b"));
+    matmul_a_bt(&xf, model.dense("tok_emb"))
 }
 
 /// Forward one sequence of token ids; optionally capture pruned-linear
 /// inputs.  Mirrors `model.forward` in python.  Thin wrapper over the
 /// resumable stepper: embed → blocks → head.
-pub fn forward(model: &Gpt, tokens: &[u8], capture: bool) -> ForwardOutput {
+pub fn forward<M: ForwardModel + ?Sized>(model: &M, tokens: &[u8], capture: bool) -> ForwardOutput {
     let mut x = forward_embed(model, tokens);
     let mut captures: Option<Captures> = capture.then(BTreeMap::new);
     for names in model.block_names() {

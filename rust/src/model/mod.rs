@@ -6,6 +6,7 @@
 //! an integration test cross-checks native logits against the AOT
 //! `model_fwd` executable.
 
+pub mod compiled;
 pub mod forward;
 pub mod safetensors;
 

@@ -9,6 +9,8 @@
 //! | GET    | `/jobs/:id`       | status + per-layer progress + result summary |
 //! | GET    | `/jobs/:id/events`| chunked NDJSON live progress stream          |
 //! | GET    | `/jobs/:id/trace` | recent trace spans for the job's corr ID     |
+//! | POST   | `/jobs/:id/eval`  | perplexity of the job's compiled sparse model|
+//! | POST   | `/jobs/:id/generate` | sample tokens from the compiled model     |
 //! | DELETE | `/jobs/:id`       | cancel a queued job                          |
 //! | GET    | `/methods`        | the method registry: name, caps, defaults    |
 //! | GET    | `/healthz`        | liveness + uptime + build info               |
@@ -41,8 +43,8 @@ use crate::coordinator::{JobSpec, LayerEvent};
 use crate::util::json::Json;
 
 use super::http::{ChunkedWriter, Request, Response};
-use super::queue::{CancelError, JobId, JobRecord};
-use super::ServerState;
+use super::queue::{CancelError, JobId, JobRecord, JobState};
+use super::{CompiledEntry, ServerState};
 
 /// How long a streaming connection waits per wakeup before re-checking
 /// the stop flag.
@@ -128,6 +130,8 @@ fn route(req: &Request, state: &Arc<ServerState>, peer: Option<IpAddr>) -> Respo
         ("POST", ["jobs"]) => submit_job(req, state, peer),
         ("GET", ["jobs", id]) => job_status(state, id),
         ("GET", ["jobs", id, "trace"]) => job_trace(state, id),
+        ("POST", ["jobs", id, "eval"]) => eval_job(req, state, id),
+        ("POST", ["jobs", id, "generate"]) => generate_job(req, state, id),
         ("DELETE", ["jobs", id]) => cancel_job(state, id),
         ("POST", ["shutdown"]) => shutdown(req, state),
         (_, ["jobs", ..]) | (_, ["healthz"]) | (_, ["metrics"]) | (_, ["methods"])
@@ -297,6 +301,19 @@ fn metrics(req: &Request, state: &ServerState) -> Response {
                 ),
             ]),
         ),
+        // sparse inference serving (`POST /jobs/:id/{eval,generate}`):
+        // compile-once counter, LRU cache traffic, request latency
+        (
+            "inference",
+            Json::obj(vec![
+                ("models_compiled", state.compiled.compiled_total.load(Relaxed).into()),
+                ("cache_hits", state.compiled.hits.load(Relaxed).into()),
+                ("cache_misses", state.compiled.misses.load(Relaxed).into()),
+                ("cached_models", state.compiled.len().into()),
+                ("eval_request_seconds", m.infer_eval.to_json()),
+                ("generate_request_seconds", m.infer_generate.to_json()),
+            ]),
+        ),
     ]);
     Response::json(200, &v)
 }
@@ -436,6 +453,170 @@ fn job_status(state: &ServerState, id: &str) -> Response {
         Some(rec) => Response::json(200, &record_json(&rec)),
         None => Response::error(404, &format!("no job {id}")),
     }
+}
+
+// ---------------------------------------------------------------------------
+// Inference serving (`POST /jobs/:id/{eval,generate}`)
+// ---------------------------------------------------------------------------
+
+/// Default / ceiling for `eval` sequence counts: enough for a stable
+/// perplexity estimate without letting one request pin a handler thread.
+const DEFAULT_EVAL_SEQS: usize = 8;
+const MAX_EVAL_SEQS: usize = 256;
+/// Default / ceiling for `generate` continuation length (the model's
+/// own `seq_len` cap still applies underneath).
+const DEFAULT_MAX_NEW: usize = 16;
+const MAX_GENERATE_TOKENS: usize = 1024;
+
+/// Shared preamble for the serving endpoints: the job must exist, be
+/// `done`, and still have its compiled model in the LRU cache.
+fn serving_entry(state: &ServerState, id: &str) -> Result<(JobId, CompiledEntry), Response> {
+    let Some(id) = parse_id(id) else {
+        return Err(Response::error(400, "job id must be an integer"));
+    };
+    let Some(rec) = state.queue.get(id) else {
+        return Err(Response::error(404, &format!("no job {id}")));
+    };
+    if !matches!(rec.state, JobState::Done) {
+        return Err(Response::error(
+            409,
+            &format!(
+                "job {id} is {}; inference serves completed jobs only",
+                rec.state.label()
+            ),
+        ));
+    }
+    match state.compiled.get(id) {
+        Some(entry) => Ok((id, entry)),
+        None => Err(Response::error(
+            404,
+            &format!("job {id} has no compiled model cached (evicted?); re-run the job"),
+        )),
+    }
+}
+
+/// Parse the request body as JSON, treating an absent body as `{}` —
+/// every serving-endpoint parameter is optional except `prompt`.
+fn optional_body(req: &Request) -> Result<Json, Response> {
+    if req.body.is_empty() {
+        return Ok(Json::obj(Vec::new()));
+    }
+    req.body_json().map_err(|e| Response::error(400, &format!("{e:#}")))
+}
+
+/// `POST /jobs/:id/eval` — perplexity of the job's compiled sparse
+/// model over the held-out test bin (body: `{"max_seqs": N}`,
+/// optional).  The response carries the packed-format breakdown so
+/// clients can see what they are being served.
+fn eval_job(req: &Request, state: &ServerState, id: &str) -> Response {
+    let (id, entry) = match serving_entry(state, id) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let body = match optional_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let max_seqs = body
+        .at(&["max_seqs"])
+        .as_usize()
+        .unwrap_or(DEFAULT_EVAL_SEQS)
+        .clamp(1, MAX_EVAL_SEQS);
+    let started = std::time::Instant::now();
+    let ppl = match crate::eval::perplexity_native(&*entry.model, &entry.test_bin, max_seqs) {
+        Ok(p) => p,
+        Err(e) => return Response::error(500, &format!("eval failed: {e:#}")),
+    };
+    let wall = started.elapsed().as_secs_f64();
+    state.metrics.infer_eval.observe(wall);
+    let (dense, csr, nm) = entry.model.format_counts();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("id", (id as usize).into()),
+            ("ppl", ppl.into()),
+            ("max_seqs", max_seqs.into()),
+            (
+                "formats",
+                Json::obj(vec![
+                    ("dense", dense.into()),
+                    ("csr", csr.into()),
+                    ("nm", nm.into()),
+                ]),
+            ),
+            ("packed_bytes", entry.model.packed_bytes().into()),
+            ("dense_equiv_bytes", entry.model.dense_equiv_bytes().into()),
+            ("wall_ms", (wall * 1e3).into()),
+        ]),
+    )
+}
+
+/// `POST /jobs/:id/generate` — sample a continuation from the job's
+/// compiled model via the KV-cached decode loop (body: `{"prompt":
+/// [tokens], "max_new": N, "temperature": T, "seed": S}`; greedy when
+/// `temperature <= 0`).
+fn generate_job(req: &Request, state: &ServerState, id: &str) -> Response {
+    use crate::model::forward::ForwardModel;
+
+    let (id, entry) = match serving_entry(state, id) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let body = match req.body_json() {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let Some(Json::Arr(items)) = body.get("prompt") else {
+        return Response::error(400, "generate body needs a \"prompt\" token array");
+    };
+    let vocab = entry.model.cfg().vocab_size.min(u8::MAX as usize + 1);
+    let mut prompt = Vec::with_capacity(items.len());
+    for it in items {
+        match it.as_usize() {
+            Some(t) if t < vocab => prompt.push(t as u8),
+            _ => {
+                return Response::error(
+                    400,
+                    &format!("prompt tokens must be integers below vocab size {vocab}"),
+                )
+            }
+        }
+    }
+    let params = crate::model::compiled::GenerateParams {
+        max_new: body
+            .at(&["max_new"])
+            .as_usize()
+            .unwrap_or(DEFAULT_MAX_NEW)
+            .min(MAX_GENERATE_TOKENS),
+        temperature: body.at(&["temperature"]).as_f64().unwrap_or(0.0),
+        seed: body.at(&["seed"]).as_usize().unwrap_or(0) as u64,
+    };
+    let started = std::time::Instant::now();
+    let generated = match entry.model.generate(&prompt, &params) {
+        Ok(g) => g,
+        // generate's own failures are all input-shape violations
+        // (empty/overlong prompt), i.e. client errors
+        Err(e) => return Response::error(400, &format!("generate failed: {e:#}")),
+    };
+    let wall = started.elapsed().as_secs_f64();
+    state.metrics.infer_generate.observe(wall);
+    let tokens: Vec<Json> = generated.tokens.iter().map(|&t| (t as usize).into()).collect();
+    let ms_per_token = if generated.decode_steps > 0 {
+        wall * 1e3 / generated.decode_steps as f64
+    } else {
+        0.0
+    };
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("id", (id as usize).into()),
+            ("tokens", Json::Arr(tokens)),
+            ("prompt_len", generated.prompt_len.into()),
+            ("decode_steps", generated.decode_steps.into()),
+            ("wall_ms", (wall * 1e3).into()),
+            ("ms_per_token", ms_per_token.into()),
+        ]),
+    )
 }
 
 fn cancel_job(state: &ServerState, id: &str) -> Response {

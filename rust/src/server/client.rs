@@ -225,6 +225,37 @@ impl Client {
         self.request_ok("GET", &format!("/jobs/{id}/trace"), None)
     }
 
+    /// `POST /jobs/:id/eval` — score the completed job's compiled
+    /// sparse model on the server's held-out bin; `max_seqs = None`
+    /// uses the server default.
+    pub fn eval_job(&self, id: JobId, max_seqs: Option<usize>) -> Result<Json> {
+        let body = match max_seqs {
+            Some(n) => Some(Json::obj(vec![("max_seqs", n.into())])),
+            None => None,
+        };
+        self.request_ok("POST", &format!("/jobs/{id}/eval"), body.as_ref())
+    }
+
+    /// `POST /jobs/:id/generate` — sample a continuation from the
+    /// completed job's compiled model (`temperature <= 0` is greedy).
+    pub fn generate_job(
+        &self,
+        id: JobId,
+        prompt: &[u8],
+        max_new: usize,
+        temperature: f64,
+        seed: u64,
+    ) -> Result<Json> {
+        let tokens: Vec<Json> = prompt.iter().map(|&t| (t as usize).into()).collect();
+        let body = Json::obj(vec![
+            ("prompt", Json::Arr(tokens)),
+            ("max_new", max_new.into()),
+            ("temperature", temperature.into()),
+            ("seed", (seed as usize).into()),
+        ]);
+        self.request_ok("POST", &format!("/jobs/{id}/generate"), Some(&body))
+    }
+
     /// `GET /metrics?format=prometheus` — the raw text exposition.
     pub fn metrics_prometheus(&self) -> Result<String> {
         let mut stream = self.connect()?;

@@ -13,6 +13,7 @@
 //!   cancellation, graceful shutdown (in-flight jobs always complete).
 //! * [`api`] — the JSON API over [`crate::util::json`]: `POST /jobs`,
 //!   `GET /jobs[/:id[/events|/trace]]`, `DELETE /jobs/:id`,
+//!   `POST /jobs/:id/eval`, `POST /jobs/:id/generate`,
 //!   `GET /healthz`, `GET /metrics[?format=prometheus]`,
 //!   `POST /shutdown`.
 //! * [`client`] — a small blocking [`client::Client`] used by the CLI
@@ -32,6 +33,14 @@
 //! NDJSON file sink.  The [`METRIC_CATALOG`] is the single list behind
 //! the Prometheus text exposition and the `sparsefw analyze`
 //! metrics-coverage lint.
+//!
+//! Serving: when a job completes, its worker compiles the pruned model
+//! once into packed sparse formats
+//! ([`crate::model::compiled::CompiledModel`]) and parks it in the
+//! LRU-bounded [`CompiledCache`]; `POST /jobs/:id/eval` (perplexity)
+//! and `POST /jobs/:id/generate` (KV-cached sampling) then serve
+//! inference straight from the cache — each expensive prune becomes an
+//! amortizable read-heavy serving artifact.
 
 pub mod api;
 pub mod client;
@@ -95,7 +104,13 @@ pub struct ServerConfig {
     /// Wall-clock budget per job (`serve --job-timeout SECS`); crossing
     /// it fails the job cleanly between units (`None` = unbounded).
     pub job_timeout_secs: Option<f64>,
+    /// Compiled serving models retained in the LRU [`CompiledCache`]
+    /// (`serve --compiled-cache N`).
+    pub compiled_cache_cap: usize,
 }
+
+/// Default [`ServerConfig::compiled_cache_cap`].
+pub const DEFAULT_COMPILED_CACHE_CAP: usize = 4;
 
 impl Default for ServerConfig {
     fn default() -> Self {
@@ -109,6 +124,7 @@ impl Default for ServerConfig {
             trace_out: None,
             journal: None,
             job_timeout_secs: None,
+            compiled_cache_cap: DEFAULT_COMPILED_CACHE_CAP,
         }
     }
 }
@@ -291,6 +307,32 @@ pub const METRIC_CATALOG: &[(&str, &str, &str)] = &[
         "counter",
         "Faults fired by the deterministic injection harness",
     ),
+    (
+        "sparsefw_models_compiled_total",
+        "counter",
+        "Pruned models compiled into packed sparse serving formats",
+    ),
+    (
+        "sparsefw_compiled_cache_hits_total",
+        "counter",
+        "eval/generate requests served from the compiled-model cache",
+    ),
+    (
+        "sparsefw_compiled_cache_misses_total",
+        "counter",
+        "eval/generate requests whose compiled model was evicted or never compiled",
+    ),
+    ("sparsefw_compiled_cache_models", "gauge", "Compiled models currently cached"),
+    (
+        "sparsefw_eval_request_seconds",
+        "histogram",
+        "POST /jobs/:id/eval latency (sparse perplexity over the compiled model)",
+    ),
+    (
+        "sparsefw_generate_request_seconds",
+        "histogram",
+        "POST /jobs/:id/generate latency (KV-cached batch=1 decode)",
+    ),
 ];
 
 /// Render the full [`METRIC_CATALOG`] in the Prometheus text
@@ -322,6 +364,8 @@ fn histogram_for<'a>(state: &'a ServerState, name: &str) -> Option<&'a Histogram
         "sparsefw_phase_fw_seconds" => Some(&m.phase_fw),
         "sparsefw_phase_refine_seconds" => Some(&m.phase_refine),
         "sparsefw_phase_io_seconds" => Some(&m.phase_io),
+        "sparsefw_eval_request_seconds" => Some(&m.infer_eval),
+        "sparsefw_generate_request_seconds" => Some(&m.infer_generate),
         _ => None,
     }
 }
@@ -344,6 +388,16 @@ fn scalar_for(state: &ServerState, name: &str) -> f64 {
         "sparsefw_jobs_replayed_total" => m.jobs_replayed.load(Ordering::Relaxed) as f64,
         "sparsefw_jobs_shed_total" => m.jobs_shed.load(Ordering::Relaxed) as f64,
         "sparsefw_faults_injected_total" => crate::util::fault::injected_total() as f64,
+        "sparsefw_models_compiled_total" => {
+            state.compiled.compiled_total.load(Ordering::Relaxed) as f64
+        }
+        "sparsefw_compiled_cache_hits_total" => {
+            state.compiled.hits.load(Ordering::Relaxed) as f64
+        }
+        "sparsefw_compiled_cache_misses_total" => {
+            state.compiled.misses.load(Ordering::Relaxed) as f64
+        }
+        "sparsefw_compiled_cache_models" => state.compiled.len() as f64,
         _ => 0.0,
     }
 }
@@ -389,6 +443,10 @@ pub struct Metrics {
     pub phase_refine: Histogram,
     /// Result materialization + eval.
     pub phase_io: Histogram,
+    /// `POST /jobs/:id/eval` request latency (seconds).
+    pub infer_eval: Histogram,
+    /// `POST /jobs/:id/generate` request latency (seconds).
+    pub infer_generate: Histogram,
 }
 
 impl Metrics {
@@ -414,6 +472,8 @@ impl Metrics {
             phase_fw: Histogram::new(),
             phase_refine: Histogram::new(),
             phase_io: Histogram::new(),
+            infer_eval: Histogram::new(),
+            infer_generate: Histogram::new(),
         }
     }
 
@@ -451,11 +511,82 @@ impl Metrics {
     }
 }
 
+/// A completed job's serving artifact: the compiled sparse model plus
+/// the held-out bin its `eval` requests score against.
+#[derive(Clone)]
+pub struct CompiledEntry {
+    pub model: Arc<crate::model::compiled::CompiledModel>,
+    pub test_bin: Arc<TokenBin>,
+}
+
+/// LRU cache of compiled serving models, keyed by job ID — the
+/// inference sibling of the per-worker calibration memo.  Workers
+/// compile once at job completion ([`worker_loop`]); `eval`/`generate`
+/// handlers only ever read.  Hit/miss/compile counters feed
+/// `GET /metrics`.
+pub struct CompiledCache {
+    cap: usize,
+    /// Most-recently-used last.  A `Vec` scan is fine: `cap` is small
+    /// (a handful of models dominate serving traffic).
+    entries: std::sync::Mutex<Vec<(JobId, CompiledEntry)>>,
+    pub compiled_total: AtomicUsize,
+    pub hits: AtomicUsize,
+    pub misses: AtomicUsize,
+}
+
+impl CompiledCache {
+    fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            entries: std::sync::Mutex::new(Vec::new()),
+            compiled_total: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Park a freshly compiled model, evicting the least-recently-used
+    /// entry beyond capacity.
+    pub fn insert(&self, id: JobId, entry: CompiledEntry) {
+        let mut entries = crate::util::sync::lock_recover(&self.entries);
+        entries.retain(|(eid, _)| *eid != id);
+        entries.push((id, entry));
+        while entries.len() > self.cap {
+            entries.remove(0);
+        }
+        self.compiled_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Look up a job's compiled model, refreshing its LRU position.
+    pub fn get(&self, id: JobId) -> Option<CompiledEntry> {
+        let mut entries = crate::util::sync::lock_recover(&self.entries);
+        let Some(pos) = entries.iter().position(|(eid, _)| *eid == id) else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        let (eid, entry) = entries.remove(pos);
+        entries.push((eid, entry.clone()));
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(entry)
+    }
+
+    pub fn len(&self) -> usize {
+        crate::util::sync::lock_recover(&self.entries).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Shared server state: the queue/registry plus metrics.
 pub struct ServerState {
     pub queue: JobQueue,
     pub metrics: Metrics,
     pub started: Instant,
+    /// Compiled serving models of completed jobs, LRU-bounded
+    /// (`POST /jobs/:id/{eval,generate}` read from here).
+    pub compiled: CompiledCache,
     /// Recent trace events keyed by correlation ID, for
     /// `GET /jobs/:id/trace` (bounded per correlation and overall).
     pub trace_ring: Arc<RingSink>,
@@ -585,6 +716,7 @@ impl Server {
             queue: JobQueue::new(cfg.queue_capacity).with_history_cap(cfg.job_history_cap),
             metrics: Metrics::new(sessions.len()),
             started: Instant::now(),
+            compiled: CompiledCache::new(cfg.compiled_cache_cap),
             trace_ring: trace_ring.clone(),
             journal: journal_arc,
             limiter: ratelimit::RateLimiter::for_submit(),
@@ -773,6 +905,24 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
                 if let Some(b) = summary.peak_gram_bytes {
                     state.metrics.peak_gram_bytes.fetch_max(b, Ordering::Relaxed);
                 }
+                // compile the pruned model once into packed sparse
+                // formats so eval/generate requests serve straight
+                // from the cache — before finish() so a client that
+                // `--wait`ed on the job never races the compile
+                match compile_for_serving(&mut session, &res) {
+                    Ok(entry) => {
+                        crate::info!(
+                            "worker {worker}: job {id} compiled for serving ({})",
+                            entry.model.summary()
+                        );
+                        state.compiled.insert(id, entry);
+                    }
+                    Err(e) => {
+                        crate::warnlog!(
+                            "worker {worker}: job {id}: serving compile failed: {e:#}"
+                        );
+                    }
+                }
                 state.queue.finish(id, Ok(summary));
                 if let Some(j) = &state.journal {
                     j.record_state(id, "done");
@@ -790,6 +940,19 @@ fn worker_loop(state: Arc<ServerState>, mut session: PruneSession, worker: usize
         state.metrics.busy_workers.fetch_sub(1, Ordering::Relaxed);
     }
     crate::debuglog!("worker {worker}: exiting");
+}
+
+/// Build a completed job's serving artifact: compile the pruned model
+/// into per-layer packed formats (auto choice) and capture the
+/// held-out test bin its `eval` requests score against.
+fn compile_for_serving(
+    session: &mut PruneSession,
+    res: &crate::coordinator::JobResult,
+) -> Result<CompiledEntry> {
+    let model = session.model(&res.spec.model)?;
+    let compiled = res.prune.compile(model, crate::model::compiled::SparseFormat::Auto)?;
+    let test_bin = session.test_bin()?.clone();
+    Ok(CompiledEntry { model: Arc::new(compiled), test_bin: Arc::new(test_bin) })
 }
 
 /// Best-effort human-readable panic payload (`panic!("..")` produces a

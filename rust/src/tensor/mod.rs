@@ -9,6 +9,7 @@
 pub mod gather;
 pub mod linalg;
 pub mod matmul;
+pub mod nm;
 pub mod sparse;
 pub mod topk;
 

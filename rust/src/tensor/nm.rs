@@ -1,0 +1,384 @@
+//! Packed interleaved n:m sparse matrices — the semi-structured lane.
+//!
+//! An n:m mask keeps at most `n` weights in every aligned group of `m`
+//! columns, so every row stores *exactly* `groups × n` entries: rows
+//! are perfectly balanced, work partitions statically (no `row_ptr`
+//! indirection, no load-balance heuristics), and column positions
+//! compress to a 4-bit in-group offset (`m ≤ 16`).  This is the
+//! software analogue of the hardware 2:4 layout SparseSwaps targets:
+//! one f32 value plus half a byte of index per kept weight, vs CSR's
+//! f32 + u32.
+//!
+//! Groups with fewer than `n` survivors are padded with explicit 0.0
+//! values at distinct unkept offsets, keeping the balance invariant;
+//! groups with *more* than `n` survivors violate n:m and
+//! [`NmMat::from_masked`] rejects them.
+
+use anyhow::{bail, ensure, Result};
+
+use super::Mat;
+use crate::util::pool::chunk_ranges;
+
+/// Packed n:m ("keep:block") f32 matrix.
+#[derive(Clone, Debug)]
+pub struct NmMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// Kept weights per group (the `n` of n:m).
+    pub keep: usize,
+    /// Group width in columns (the `m` of n:m); ≤ 16 so offsets pack
+    /// into nibbles.
+    pub block: usize,
+    /// rows × (cols/block) × keep values, row-major then group-major.
+    pub values: Vec<f32>,
+    /// One 4-bit in-group column offset per value, two per byte
+    /// (low nibble = even entry index).
+    pub offsets: Vec<u8>,
+}
+
+impl NmMat {
+    /// Entries stored per row: (cols/block) · keep, identical for every
+    /// row — the balance property that makes static partitioning exact.
+    #[inline]
+    pub fn entries_per_row(&self) -> usize {
+        (self.cols / self.block) * self.keep
+    }
+
+    #[inline]
+    fn offset_at(&self, e: usize) -> usize {
+        let b = self.offsets[e >> 1];
+        (if e & 1 == 0 { b & 0x0F } else { b >> 4 }) as usize
+    }
+
+    /// Pack `w ⊙ mask` under the n:m invariant.  Like
+    /// [`super::sparse::CsrMat::from_masked`] this compresses by mask
+    /// membership (kept zeros stay addressable).  Errors when any
+    /// aligned `block`-group keeps more than `keep` entries, when
+    /// `block` doesn't divide `cols`, or when `block > 16`.
+    pub fn from_masked(w: &Mat, mask: &Mat, keep: usize, block: usize) -> Result<Self> {
+        ensure!(
+            (w.rows, w.cols) == (mask.rows, mask.cols),
+            "nm from_masked: shape mismatch {}x{} vs {}x{}",
+            w.rows,
+            w.cols,
+            mask.rows,
+            mask.cols
+        );
+        ensure!(block >= 2 && block <= 16, "nm block must be in 2..=16, got {block}");
+        ensure!(keep >= 1 && keep < block, "nm keep must be in 1..block, got {keep}:{block}");
+        ensure!(
+            w.cols % block == 0,
+            "nm block {} does not divide cols {}",
+            block,
+            w.cols
+        );
+        let groups = w.cols / block;
+        let entries = w.rows * groups * keep;
+        let mut values = Vec::with_capacity(entries);
+        let mut offsets = vec![0u8; (entries + 1) / 2];
+        let mut push = |e: usize, off: usize, values: &mut Vec<f32>, v: f32| {
+            values.push(v);
+            let nib = (off as u8) & 0x0F;
+            if e & 1 == 0 {
+                offsets[e >> 1] |= nib;
+            } else {
+                offsets[e >> 1] |= nib << 4;
+            }
+        };
+        let mut e = 0usize;
+        for i in 0..w.rows {
+            let wrow = w.row(i);
+            let mrow = mask.row(i);
+            for g in 0..groups {
+                let base = g * block;
+                let mut taken = 0usize;
+                for off in 0..block {
+                    if mrow[base + off] != 0.0 {
+                        if taken == keep {
+                            bail!(
+                                "mask violates {keep}:{block} at row {i}, group {g}: \
+                                 more than {keep} kept entries"
+                            );
+                        }
+                        push(e, off, &mut values, wrow[base + off]);
+                        taken += 1;
+                        e += 1;
+                    }
+                }
+                // pad underfull groups with explicit zeros at distinct
+                // unkept offsets so every row stores exactly the same
+                // entry count
+                let mut off = 0usize;
+                while taken < keep {
+                    while mrow[base + off] != 0.0 {
+                        off += 1;
+                    }
+                    push(e, off, &mut values, 0.0);
+                    taken += 1;
+                    e += 1;
+                    off += 1;
+                }
+            }
+        }
+        Ok(Self { rows: w.rows, cols: w.cols, keep, block, values, offsets })
+    }
+
+    /// Detect an n:m structure in `mask`: the smallest-density
+    /// `(keep, block)` over block ∈ {4, 8, 16} whose aligned groups
+    /// never exceed `keep` survivors and whose packed density does not
+    /// exceed `max_density`.  Returns `None` for masks that are not
+    /// (near-)balanced — those belong in CSR.
+    pub fn detect(mask: &Mat, max_density: f64) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize, f64)> = None;
+        for block in [4usize, 8, 16] {
+            if mask.cols % block != 0 || mask.cols == 0 {
+                continue;
+            }
+            let groups = mask.cols / block;
+            let mut max_keep = 0usize;
+            for i in 0..mask.rows {
+                let row = mask.row(i);
+                for g in 0..groups {
+                    let k = row[g * block..(g + 1) * block]
+                        .iter()
+                        .filter(|&&m| m != 0.0)
+                        .count();
+                    max_keep = max_keep.max(k);
+                }
+            }
+            if max_keep == 0 || max_keep >= block {
+                continue;
+            }
+            let packed = max_keep as f64 / block as f64;
+            if packed <= max_density && best.map_or(true, |(_, _, d)| packed < d) {
+                best = Some((max_keep, block, packed));
+            }
+        }
+        best.map(|(k, b, _)| (k, b))
+    }
+
+    /// Stored entries (incl. balance padding).
+    pub fn stored(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Nonzero stored values (excludes padding and kept zeros).
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Stored density keep/block — the compute cost per output, padding
+    /// included.
+    pub fn density(&self) -> f64 {
+        self.keep as f64 / self.block as f64
+    }
+
+    /// Bytes of the packed representation: 4 per value + half a byte
+    /// per offset.
+    pub fn size_bytes(&self) -> usize {
+        self.values.len() * 4 + self.offsets.len()
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let groups = self.cols / self.block;
+        let mut e = 0usize;
+        for i in 0..self.rows {
+            for g in 0..groups {
+                for _ in 0..self.keep {
+                    let j = g * self.block + self.offset_at(e);
+                    out.data[i * self.cols + j] += self.values[e];
+                    e += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// y = W·x (or y += W·x when `accumulate`) for one input vector —
+    /// the batch=1 decode kernel.
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32], accumulate: bool) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        let groups = self.cols / self.block;
+        let per_row = self.entries_per_row();
+        for i in 0..self.rows {
+            let mut e = i * per_row;
+            let mut acc = 0.0f32;
+            for g in 0..groups {
+                let base = g * self.block;
+                for _ in 0..self.keep {
+                    acc += self.values[e] * x[base + self.offset_at(e)];
+                    e += 1;
+                }
+            }
+            if accumulate {
+                y[i] += acc;
+            } else {
+                y[i] = acc;
+            }
+        }
+    }
+
+    /// C = A·Wᵀ (or C += A·Wᵀ when `accumulate`) with A (n × cols)
+    /// dense.  Rows of A partition *statically* across workers — every
+    /// W row costs exactly `entries_per_row` MACs, so equal chunks are
+    /// equal work by construction.
+    pub fn matmul_a_bt_into(&self, a: &Mat, c: &mut Mat, accumulate: bool) {
+        assert_eq!(a.cols, self.cols, "nm matmul_a_bt: inner dims");
+        assert_eq!((c.rows, c.cols), (a.rows, self.rows), "nm matmul_a_bt: out shape");
+        let (n, m) = (a.rows, self.rows);
+        let workers = crate::util::pool::default_workers(n);
+        let ranges = chunk_ranges(n, workers);
+        let groups = self.cols / self.block;
+        let per_row = self.entries_per_row();
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = &mut c.data;
+            for r in &ranges {
+                let (stripe, tail) = rest.split_at_mut(r.len() * m);
+                rest = tail;
+                let r = r.clone();
+                s.spawn(move || {
+                    for (li, ai) in r.clone().enumerate() {
+                        let arow = a.row(ai);
+                        let crow = &mut stripe[li * m..(li + 1) * m];
+                        let mut e = 0usize;
+                        for i in 0..m {
+                            let mut acc = 0.0f32;
+                            for g in 0..groups {
+                                let base = g * self.block;
+                                for _ in 0..self.keep {
+                                    acc += self.values[e] * arow[base + self.offset_at(e)];
+                                    e += 1;
+                                }
+                            }
+                            if accumulate {
+                                crow[i] += acc;
+                            } else {
+                                crow[i] = acc;
+                            }
+                        }
+                        debug_assert_eq!(e, m * per_row);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Allocating convenience wrapper over [`NmMat::matmul_a_bt_into`].
+    pub fn matmul_a_bt(&self, a: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, self.rows);
+        self.matmul_a_bt_into(a, &mut c, false);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_a_bt;
+    use crate::util::prng::Xoshiro256;
+
+    /// Top-`keep` |w| per aligned group — a by-construction n:m mask.
+    fn nm_mask(w: &Mat, keep: usize, block: usize) -> Mat {
+        let mut mask = Mat::zeros(w.rows, w.cols);
+        for i in 0..w.rows {
+            for g in 0..w.cols / block {
+                let base = g * block;
+                let mut idx: Vec<usize> = (0..block).collect();
+                idx.sort_by(|&a, &b| {
+                    w.at(i, base + b)
+                        .abs()
+                        .partial_cmp(&w.at(i, base + a).abs())
+                        .unwrap()
+                });
+                for &o in idx.iter().take(keep) {
+                    *mask.at_mut(i, base + o) = 1.0;
+                }
+            }
+        }
+        mask
+    }
+
+    #[test]
+    fn dense_equivalence_2_4() {
+        let mut rng = Xoshiro256::new(11);
+        let w = Mat::gaussian(24, 32, 1.0, &mut rng);
+        let mask = nm_mask(&w, 2, 4);
+        let nm = NmMat::from_masked(&w, &mask, 2, 4).unwrap();
+        assert_eq!(nm.stored(), 24 * 8 * 2);
+        assert_eq!(nm.to_dense().data, w.hadamard(&mask).data);
+
+        let a = Mat::gaussian(9, 32, 1.0, &mut rng);
+        let got = nm.matmul_a_bt(&a);
+        let want = matmul_a_bt(&a, &w.hadamard(&mask));
+        assert!(got.max_abs_diff(&want) < 1e-4);
+
+        let x: Vec<f32> = (0..32).map(|_| rng.next_f32()).collect();
+        let mut y = vec![0.0f32; 24];
+        nm.matvec_into(&x, &mut y, false);
+        let masked = w.hadamard(&mask);
+        for i in 0..24 {
+            let dot: f32 = masked.row(i).iter().zip(&x).map(|(a, b)| a * b).sum();
+            assert!((y[i] - dot).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn underfull_groups_pad_balanced() {
+        // row 0 keeps nothing in group 0 → padded with zeros, balance holds
+        let w = Mat::ones(2, 8);
+        let mut mask = nm_mask(&w, 1, 4);
+        *mask.at_mut(0, 0) = 0.0;
+        let m0: usize = (0..4).map(|j| (mask.at(0, j) != 0.0) as usize).sum();
+        assert_eq!(m0, 0);
+        let nm = NmMat::from_masked(&w, &mask, 1, 4).unwrap();
+        assert_eq!(nm.stored(), 2 * 2); // still exactly keep per group
+        assert_eq!(nm.to_dense().data, w.hadamard(&mask).data);
+    }
+
+    #[test]
+    fn rejects_invariant_violation() {
+        let w = Mat::ones(2, 8);
+        let mask = Mat::ones(2, 8); // 4 kept in every group of 4
+        let err = NmMat::from_masked(&w, &mask, 2, 4).unwrap_err();
+        assert!(err.to_string().contains("violates 2:4"), "{err}");
+        assert!(NmMat::from_masked(&w, &mask, 1, 5).is_err()); // 5 ∤ 8
+        assert!(NmMat::from_masked(&w, &mask, 8, 8).is_err()); // keep == block
+    }
+
+    #[test]
+    fn detect_finds_structure() {
+        let mut rng = Xoshiro256::new(13);
+        let w = Mat::gaussian(8, 16, 1.0, &mut rng);
+        let mask = nm_mask(&w, 2, 4);
+        assert_eq!(NmMat::detect(&mask, 0.55), Some((2, 4)));
+        // unstructured 50% mask: some group of 4 holds 3+ survivors,
+        // packed density blows past the cap
+        let unst = Mat::from_fn(8, 16, |i, j| f32::from((i * 7 + j * 3) % 16 < 8));
+        assert_eq!(NmMat::detect(&unst, 0.55), None);
+        assert_eq!(NmMat::detect(&Mat::zeros(4, 16), 0.55), None);
+    }
+
+    #[test]
+    fn kept_zero_stays_addressable() {
+        let mut w = Mat::ones(1, 4);
+        *w.at_mut(0, 1) = 0.0;
+        let mut mask = Mat::zeros(1, 4);
+        *mask.at_mut(0, 1) = 1.0;
+        *mask.at_mut(0, 3) = 1.0;
+        let nm = NmMat::from_masked(&w, &mask, 2, 4).unwrap();
+        assert_eq!(nm.stored(), 2);
+        assert_eq!(nm.to_dense().data, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn size_beats_csr_at_same_pattern() {
+        let mut rng = Xoshiro256::new(17);
+        let w = Mat::gaussian(32, 64, 1.0, &mut rng);
+        let mask = nm_mask(&w, 1, 4);
+        let nm = NmMat::from_masked(&w, &mask, 1, 4).unwrap();
+        let csr = crate::tensor::sparse::CsrMat::from_masked(&w, &mask);
+        assert!(nm.size_bytes() < csr.size_bytes());
+    }
+}

@@ -42,10 +42,26 @@ impl CsrMat {
     }
 
     /// Masked-weight constructor: CSR of `w ⊙ mask` (the deployment
-    /// artifact of a pruning run).
+    /// artifact of a pruning run).  Compresses by *mask membership*,
+    /// not by value: a kept weight whose reconstructed value is exactly
+    /// 0.0 (SparseGPT's `update` can produce these) stays addressable
+    /// so the stored pattern is the mask, bit for bit.
     pub fn from_masked(w: &Mat, mask: &Mat) -> Self {
         assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
-        Self::from_dense(&w.hadamard(mask))
+        let mut row_ptr = Vec::with_capacity(w.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..w.rows {
+            for (j, (&m, &v)) in mask.row(i).iter().zip(w.row(i)).enumerate() {
+                if m != 0.0 {
+                    col_idx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Self { rows: w.rows, cols: w.cols, row_ptr, col_idx, values }
     }
 
     pub fn nnz(&self) -> usize {
@@ -69,26 +85,47 @@ impl CsrMat {
 
     /// y = W·x for a single input vector (x length = cols).
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0f32; self.rows];
+        self.matvec_into(x, &mut y, false);
+        y
+    }
+
+    /// Zero-alloc twin of [`CsrMat::matvec`]: y = W·x, or y += W·x when
+    /// `accumulate` (the residual fold-in of the batch=1 decode step).
+    pub fn matvec_into(&self, x: &[f32], y: &mut [f32], accumulate: bool) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
         for i in 0..self.rows {
             let (s, e) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
             let mut acc = 0.0f32;
             for t in s..e {
                 acc += self.values[t] * x[self.col_idx[t] as usize];
             }
-            y[i] = acc;
+            if accumulate {
+                y[i] += acc;
+            } else {
+                y[i] = acc;
+            }
         }
-        y
     }
 
     /// C = A·Wᵀ with A (n × cols) dense — the sparse counterpart of
     /// `matmul_a_bt(a, w)` used by the linear layers.  Parallel over
     /// rows of A.
     pub fn matmul_a_bt(&self, a: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, self.rows);
+        self.matmul_a_bt_into(a, &mut c, false);
+        c
+    }
+
+    /// Fused, zero-alloc C = A·Wᵀ (or C += A·Wᵀ when `accumulate`, the
+    /// residual fold-in of the transformer block).  Parallel over row
+    /// blocks of A via the same striping as the dense matmul; `c` must
+    /// be pre-shaped (a.rows × self.rows).
+    pub fn matmul_a_bt_into(&self, a: &Mat, c: &mut Mat, accumulate: bool) {
         assert_eq!(a.cols, self.cols, "sparse matmul_a_bt: inner dims");
+        assert_eq!((c.rows, c.cols), (a.rows, self.rows), "sparse matmul_a_bt: out shape");
         let (n, m) = (a.rows, self.rows);
-        let mut c = Mat::zeros(n, m);
         let workers = default_workers(n);
         let ranges = chunk_ranges(n, workers);
         std::thread::scope(|s| {
@@ -108,13 +145,16 @@ impl CsrMat {
                             for t in st..e {
                                 acc += self.values[t] * arow[self.col_idx[t] as usize];
                             }
-                            crow[i] = acc;
+                            if accumulate {
+                                crow[i] += acc;
+                            } else {
+                                crow[i] = acc;
+                            }
                         }
                     }
                 });
             }
         });
-        c
     }
 
     /// Bytes of the CSR representation (deployment-size accounting).
@@ -186,6 +226,45 @@ mod tests {
                 let want = if (i + j) % 2 == 0 { w.at(i, j) } else { 0.0 };
                 assert_eq!(back.at(i, j), want);
             }
+        }
+    }
+
+    #[test]
+    fn from_masked_keeps_explicit_zeros() {
+        // A reconstructed weight can be exactly 0.0 on a kept position;
+        // the CSR pattern must still be the mask, not the value support.
+        let mut w = Mat::ones(4, 4);
+        *w.at_mut(1, 2) = 0.0; // kept by mask, value exactly zero
+        *w.at_mut(3, 3) = 0.0; // pruned anyway
+        let mask = Mat::from_fn(4, 4, |i, j| f32::from((i + j) % 2 == 0));
+        let csr = CsrMat::from_masked(&w, &mask);
+        assert_eq!(csr.nnz(), 8, "pattern follows the mask, incl. the kept zero");
+        let row1: Vec<u32> =
+            csr.col_idx[csr.row_ptr[1] as usize..csr.row_ptr[2] as usize].to_vec();
+        assert!(row1.contains(&2), "kept zero at (1,2) stays addressable");
+        assert_eq!(csr.to_dense().data, w.hadamard(&mask).data);
+    }
+
+    #[test]
+    fn into_twins_match_and_accumulate() {
+        let mut rng = Xoshiro256::new(8);
+        let w = sparse_random(16, 24, 0.3, 9);
+        let csr = CsrMat::from_dense(&w);
+        let a = Mat::gaussian(7, 24, 1.0, &mut rng);
+
+        let mut c = Mat::gaussian(7, 16, 1.0, &mut rng);
+        let resid = c.clone();
+        csr.matmul_a_bt_into(&a, &mut c, true);
+        let mut want = csr.matmul_a_bt(&a);
+        want.add_inplace(&resid);
+        assert!(c.max_abs_diff(&want) < 1e-5);
+
+        let x: Vec<f32> = (0..24).map(|_| rng.next_f32()).collect();
+        let mut y = vec![1.0f32; 16];
+        csr.matvec_into(&x, &mut y, true);
+        let base = csr.matvec(&x);
+        for i in 0..16 {
+            assert!((y[i] - (base[i] + 1.0)).abs() < 1e-5, "row {i}");
         }
     }
 

@@ -1,0 +1,142 @@
+//! Served sparse inference: prune a job over real TCP sockets, then
+//! answer `POST /jobs/:id/eval` and `POST /jobs/:id/generate` from its
+//! compiled model — asserting the worker compiled exactly once at job
+//! completion, the LRU cache served every request (hit accounting),
+//! greedy decode is deterministic, and the failure paths return the
+//! right HTTP classes.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession};
+use sparsefw::data::corpus;
+use sparsefw::data::TokenBin;
+use sparsefw::model::testutil::{random_model, tiny_cfg};
+use sparsefw::model::Gpt;
+use sparsefw::pruner::{Method, SparsityPattern};
+use sparsefw::server::{Client, Server, ServerConfig, ServerHandle};
+
+fn shared_model() -> Gpt {
+    random_model(&tiny_cfg(), 1)
+}
+
+fn session_over(model: &Gpt) -> PruneSession {
+    let bin = TokenBin::from_tokens(corpus::generate(6, 8192));
+    let mut models = BTreeMap::new();
+    models.insert("test".to_string(), model.clone());
+    PruneSession::in_memory(models, bin.clone(), bin)
+}
+
+fn spawn_server(workers: usize) -> (ServerHandle, Client) {
+    let model = shared_model();
+    let sessions: Vec<PruneSession> = (0..workers).map(|_| session_over(&model)).collect();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        ..Default::default()
+    };
+    let handle = Server::bind(&cfg, sessions).expect("server binds an ephemeral port");
+    let client = Client::new(handle.addr().to_string());
+    (handle, client)
+}
+
+fn base_spec() -> JobSpec {
+    JobSpec {
+        model: "test".into(),
+        method: Method::wanda(),
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+        calib_samples: 6,
+        calib_seed: 2,
+        ..Default::default()
+    }
+}
+
+const WAIT: Duration = Duration::from_secs(120);
+
+fn tokens_of(v: &sparsefw::util::json::Json) -> Vec<usize> {
+    v.at(&["tokens"])
+        .as_arr()
+        .expect("tokens array")
+        .iter()
+        .map(|t| t.as_usize().expect("token int"))
+        .collect()
+}
+
+#[test]
+fn eval_and_generate_serve_from_compiled_cache() {
+    let (handle, client) = spawn_server(1);
+    let id = client.submit(&base_spec(), 0).unwrap();
+    let fin = client.wait(id, WAIT).unwrap();
+    assert_eq!(fin.at(&["state"]).as_str(), Some("done"));
+
+    // eval: perplexity from the compiled model + format breakdown
+    let ev = client.eval_job(id, Some(4)).unwrap();
+    let ppl = ev.at(&["ppl"]).as_f64().expect("ppl");
+    assert!(ppl.is_finite() && ppl > 1.0, "ppl {ppl}");
+    assert!(ev.at(&["packed_bytes"]).as_usize().expect("packed_bytes") > 0);
+    let formats = ev.at(&["formats"]);
+    let total = formats.at(&["dense"]).as_usize().unwrap_or(0)
+        + formats.at(&["csr"]).as_usize().unwrap_or(0)
+        + formats.at(&["nm"]).as_usize().unwrap_or(0);
+    assert_eq!(total, tiny_cfg().layers().len(), "every pruned linear packed");
+
+    // generate: greedy decode is deterministic for a fixed seed
+    let g1 = client.generate_job(id, &[1, 2, 3], 8, 0.0, 7).unwrap();
+    let g2 = client.generate_job(id, &[1, 2, 3], 8, 0.0, 7).unwrap();
+    let (t1, t2) = (tokens_of(&g1), tokens_of(&g2));
+    assert_eq!(t1, t2, "greedy decode must be deterministic");
+    assert_eq!(t1.len(), 3 + 8);
+    assert_eq!(g1.at(&["prompt_len"]).as_usize(), Some(3));
+    assert_eq!(g1.at(&["decode_steps"]).as_usize(), Some(8));
+
+    // compile-once + cache accounting: one model compiled at job
+    // completion, every serving request above was a cache hit
+    let m = client.metrics().unwrap();
+    assert_eq!(m.at(&["inference", "models_compiled"]).as_usize(), Some(1));
+    assert!(m.at(&["inference", "cache_hits"]).as_usize().expect("hits") >= 3);
+    assert_eq!(m.at(&["inference", "cache_misses"]).as_usize(), Some(0));
+    assert_eq!(m.at(&["inference", "cached_models"]).as_usize(), Some(1));
+
+    // the new metrics reach the Prometheus exposition
+    let text = client.metrics_prometheus().unwrap();
+    for name in [
+        "sparsefw_models_compiled_total",
+        "sparsefw_compiled_cache_hits_total",
+        "sparsefw_compiled_cache_models",
+        "sparsefw_eval_request_seconds",
+        "sparsefw_generate_request_seconds",
+    ] {
+        assert!(text.contains(name), "{name} missing from prometheus exposition");
+    }
+
+    handle.shutdown();
+}
+
+#[test]
+fn inference_rejects_unknown_unfinished_and_bad_requests() {
+    let (handle, client) = spawn_server(1);
+
+    // unknown job → 404
+    let err = client.eval_job(999, None).unwrap_err().to_string();
+    assert!(err.contains("404"), "{err}");
+
+    let id = client.submit(&base_spec(), 0).unwrap();
+    client.wait(id, WAIT).unwrap();
+
+    // empty prompt → 400
+    let err = client
+        .generate_job(id, &[], 4, 0.0, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("400"), "{err}");
+
+    // overlong prompt (seq_len is 32 for the tiny model) → 400
+    let long = vec![1u8; 64];
+    let err = client
+        .generate_job(id, &long, 4, 0.0, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("400"), "{err}");
+
+    handle.shutdown();
+}

@@ -22,6 +22,31 @@ BIN="$REPO/rust/target/release/sparsefw"
 echo "== sparsefw analyze --deny-warnings (project lints) =="
 "$BIN" analyze --deny-warnings
 
+echo "== sparse inference smoke (prune -> eval --sparse -> generate) =="
+INFER_DIR="$(mktemp -d)"
+MASKS_FILE="$INFER_DIR/masks.safetensors"
+"$BIN" prune --demo --method wanda --pattern per-row:0.5 --samples 8 \
+    --out "$MASKS_FILE" >/dev/null 2>&1
+[ -s "$MASKS_FILE" ] || { echo "prune --out wrote no masks"; exit 1; }
+# eval --sparse exits non-zero if the compiled forward drifts from the
+# masked dense model past tolerance — an end-to-end equivalence gate
+SPARSE_OUT="$("$BIN" eval --demo --sparse --masks "$MASKS_FILE" 2>&1)" \
+    || { echo "eval --sparse failed: $SPARSE_OUT"; exit 1; }
+echo "$SPARSE_OUT" | grep -q "logit max" \
+    || { echo "eval --sparse printed no logit-equivalence line: $SPARSE_OUT"; exit 1; }
+echo "$SPARSE_OUT" | grep -q "ppl masked-dense=" \
+    || { echo "eval --sparse printed no perplexity cross-check: $SPARSE_OUT"; exit 1; }
+# greedy decode must be deterministic: two identical-seed runs agree
+GEN_A="$("$BIN" generate --demo --masks "$MASKS_FILE" --max-new 12 --seed 7 2>&1 \
+    | grep '^tokens:')"
+GEN_B="$("$BIN" generate --demo --masks "$MASKS_FILE" --max-new 12 --seed 7 2>&1 \
+    | grep '^tokens:')"
+[ -n "$GEN_A" ] || { echo "generate printed no tokens line"; exit 1; }
+[ "$GEN_A" = "$GEN_B" ] \
+    || { echo "generate is not deterministic: '$GEN_A' vs '$GEN_B'"; exit 1; }
+rm -rf "$INFER_DIR"
+echo "   sparse inference smoke OK (equivalence gate + deterministic decode)"
+
 echo "== server smoke test (serve --demo on an ephemeral port) =="
 SERVE_LOG="$(mktemp)"
 TRACE_NDJSON="$(mktemp)"
@@ -121,6 +146,34 @@ echo "$PROM" | grep -q "^sparsefw_phase_fw_seconds_bucket" \
     || { echo "prometheus exposition missing the fw phase histogram: $PROM"; exit 1; }
 echo "   observability smoke OK (corr ID + certificates + NDJSON + prometheus)"
 
+# seventh smoke path: served sparse inference — POST /jobs/:id/eval and
+# /jobs/:id/generate answer from the worker-compiled model cache (raw
+# /dev/tcp again; the image carries no curl)
+http_post() { # path body
+    exec 3<>"/dev/tcp/${ADDR%:*}/${ADDR##*:}"
+    printf 'POST %s HTTP/1.1\r\nHost: sparsefw\r\nContent-Type: application/json\r\nContent-Length: %s\r\nConnection: close\r\n\r\n%s' \
+        "$1" "${#2}" "$2" >&3
+    cat <&3
+    exec 3<&- 3>&-
+}
+EVAL_RESP="$(http_post "/jobs/$OBS_ID/eval" '{"max_seqs":4}')"
+echo "$EVAL_RESP" | grep -q '"ppl"' \
+    || { echo "POST /jobs/$OBS_ID/eval returned no ppl: $EVAL_RESP"; cat "$SERVE_LOG"; exit 1; }
+echo "$EVAL_RESP" | grep -q '"packed_bytes"' \
+    || { echo "eval response missing the format breakdown: $EVAL_RESP"; exit 1; }
+GEN_RESP="$(http_post "/jobs/$OBS_ID/generate" \
+    '{"prompt":[1,2,3],"max_new":8,"temperature":0.0,"seed":7}')"
+echo "$GEN_RESP" | grep -q '"tokens"' \
+    || { echo "POST /jobs/$OBS_ID/generate returned no tokens: $GEN_RESP"; cat "$SERVE_LOG"; exit 1; }
+PROM2="$(exec 3<>"/dev/tcp/${ADDR%:*}/${ADDR##*:}"; \
+    printf 'GET /metrics?format=prometheus HTTP/1.1\r\nHost: sparsefw\r\nConnection: close\r\n\r\n' >&3; \
+    cat <&3)"
+echo "$PROM2" | grep -Eq "^sparsefw_models_compiled_total [1-9]" \
+    || { echo "no models compiled for serving: $PROM2"; exit 1; }
+echo "$PROM2" | grep -Eq "^sparsefw_compiled_cache_hits_total [1-9]" \
+    || { echo "inference requests did not hit the compiled cache: $PROM2"; exit 1; }
+echo "   served inference smoke OK (eval + generate from the compiled cache)"
+
 "$BIN" status --addr "$ADDR"
 "$BIN" shutdown --addr "$ADDR"
 wait "$SERVE_PID"
@@ -200,6 +253,10 @@ echo "   wrote $REPO/BENCH_calib.json"
 echo "== telemetry overhead bench: spans off/on the FW layer (BENCH_trace.json) =="
 SPARSEFW_BENCH_JSON="$REPO/BENCH_trace.json" cargo bench --bench trace_overhead
 echo "   wrote $REPO/BENCH_trace.json"
+
+echo "== sparse inference bench: dense vs CSR vs n:m (BENCH_infer.json) =="
+SPARSEFW_BENCH_JSON="$REPO/BENCH_infer.json" cargo bench --bench sparse_infer
+echo "   wrote $REPO/BENCH_infer.json"
 
 # method-registry-driven end-to-end timings: iterates the registry, so
 # newly registered methods are benched automatically (prints a note and
