@@ -99,6 +99,26 @@ pub struct EmbedPrefix {
 }
 
 impl EmbedPrefix {
+    /// Reassemble a prefix from raw parts — the fleet hand-off path:
+    /// a worker receives its predecessor's exit hiddens over the wire
+    /// (`server::fleet::wire`) and resumes staged calibration from
+    /// them, without ever materializing the upstream blocks' grams.
+    pub(crate) fn from_parts(hiddens: Vec<Mat>, seq_len: usize) -> Self {
+        Self { hiddens, seq_len }
+    }
+
+    /// The per-sequence hidden states (read-only; serialization only).
+    pub(crate) fn hiddens(&self) -> &[Mat] {
+        &self.hiddens
+    }
+
+    /// Bit-exact digest of the carried hiddens — identical to
+    /// [`CalibState::digest`] over the same activations, so a wire
+    /// hand-off can be verified before a shard trusts it.
+    pub fn digest(&self) -> u64 {
+        digest_hiddens(&self.hiddens)
+    }
+
     /// Embed `seqs` (parallel over sequences).  All sequences must have
     /// the same length.
     pub fn new(model: &Gpt, seqs: &[Vec<u8>]) -> Result<Self> {
@@ -119,6 +139,22 @@ impl EmbedPrefix {
     pub fn seq_len(&self) -> usize {
         self.seq_len
     }
+}
+
+/// The shared digest behind [`CalibState::digest`] and
+/// [`EmbedPrefix::digest`]: dims + every f32 bit pattern,
+/// [`crate::util::prng::mix64`]-folded.
+fn digest_hiddens(hiddens: &[Mat]) -> u64 {
+    use crate::util::prng::mix64;
+    let mut h = mix64(0x63616c6962 ^ hiddens.len() as u64);
+    for m in hiddens {
+        h = mix64(h ^ m.rows as u64);
+        h = mix64(h ^ m.cols as u64);
+        for x in &m.data {
+            h = mix64(h ^ u64::from(x.to_bits()));
+        }
+    }
+    h
 }
 
 // ---------------------------------------------------------------------------
@@ -279,16 +315,15 @@ impl CalibState {
     /// when a block's grams were computed before the block's
     /// checkpointed outputs are trusted.
     pub fn digest(&self) -> u64 {
-        use crate::util::prng::mix64;
-        let mut h = mix64(0x63616c6962 ^ self.hiddens.len() as u64);
-        for m in &self.hiddens {
-            h = mix64(h ^ m.rows as u64);
-            h = mix64(h ^ m.cols as u64);
-            for x in &m.data {
-                h = mix64(h ^ u64::from(x.to_bits()));
-            }
-        }
-        h
+        digest_hiddens(&self.hiddens)
+    }
+
+    /// Surrender the residual streams as an [`EmbedPrefix`] — the exit
+    /// hand-off a fleet worker ships to its successor's shard.  Only
+    /// meaningful after the last `advance` of a shard (the hiddens then
+    /// are exactly what the next block would see).
+    pub fn into_prefix(self) -> EmbedPrefix {
+        EmbedPrefix { hiddens: self.hiddens, seq_len: self.seq_len }
     }
 
     /// Max gram sets simultaneously checked out so far.

@@ -39,7 +39,12 @@ use crate::tensor::Mat;
 use crate::util::json::{self, Json};
 use crate::util::retry::{Deadline, RetryPolicy};
 
-use super::{per_layer_patterns, run_blocks, run_layers, LayerRun, PruneResult};
+use super::{
+    per_layer_patterns, run_block_span, run_blocks, run_layer_span, run_layers, LayerRun,
+    PruneResult,
+};
+use crate::model::LayerInfo;
+use crate::pruner::LayerPruneOutput;
 
 // ---------------------------------------------------------------------------
 // Allocation
@@ -842,6 +847,93 @@ impl PruneSession {
 
         Ok(JobResult { spec: spec.clone(), prune, pruned_sparsity, eval })
     }
+
+    /// Execute one fleet shard — blocks `lo..hi` of `spec` — and hand
+    /// back the per-layer outputs plus the staged exit hiddens for the
+    /// successor shard.  This is the worker side of the distributed
+    /// pipeline (`server::fleet`): block 0's shard embeds the prefix
+    /// locally (memoized, same as single-node); every later shard
+    /// resumes from `entry`, the predecessor's wire hand-off, so the
+    /// worker never materializes grams outside its own blocks.
+    ///
+    /// Bit-identity with single-node execution comes from reusing the
+    /// same per-layer drivers ([`run_block_span`] / [`run_layer_span`])
+    /// against the same resolved patterns and calibration identity.
+    pub(crate) fn execute_shard(
+        &mut self,
+        spec: &JobSpec,
+        lo: usize,
+        hi: usize,
+        entry: Option<EmbedPrefix>,
+    ) -> Result<ShardOutcome> {
+        ensure!(spec.calib_samples > 0, "calib_samples must be positive");
+        ensure!(
+            spec.backend == Backend::Native,
+            "fleet shards run on the native backend (got {:?})",
+            spec.backend
+        );
+        self.model(&spec.model)?;
+        let deadline = Deadline::after_secs(self.job_timeout_secs);
+        let retry = self.retry.clone();
+        if spec.calib_policy.is_propagated() {
+            let patterns = spec.allocation.resolve(&self.models[&spec.model], None)?;
+            let prefix = match entry {
+                Some(p) => p,
+                None => {
+                    ensure!(lo == 0, "shard starting at block {lo} needs predecessor hiddens");
+                    self.embed_prefix(&spec.model, spec.calib_samples, spec.calib_seed)?
+                }
+            };
+            let model = &self.models[&spec.model];
+            let n_blocks = model.cfg.n_layers;
+            let state = CalibState::from_prefix(model, prefix)?;
+            let entry_digest = state.digest();
+            let run = LayerRun {
+                method: &spec.method,
+                patterns: &patterns,
+                refine: &spec.refine,
+                trace_every: spec.trace_every,
+                progress: None,
+                checkpoint: None,
+                retry,
+                deadline,
+                calib_id: None,
+            };
+            let (layers, state) =
+                run_block_span(model, state, &run, spec.calib_policy, lo, hi, n_blocks)?;
+            let exit = (hi < n_blocks).then(|| state.into_prefix());
+            Ok(ShardOutcome { layers, entry_digest, exit })
+        } else {
+            ensure!(entry.is_none(), "dense shards carry no hidden-state hand-off");
+            self.calibration(&spec.model, spec.calib_samples, spec.calib_seed)?;
+            let model = &self.models[&spec.model];
+            let calib =
+                &self.calibs[&(spec.model.clone(), spec.calib_samples, spec.calib_seed)].1;
+            let patterns = spec.allocation.resolve(model, Some(calib))?;
+            let run = LayerRun {
+                method: &spec.method,
+                patterns: &patterns,
+                refine: &spec.refine,
+                trace_every: spec.trace_every,
+                progress: None,
+                checkpoint: None,
+                retry,
+                deadline,
+                calib_id: None,
+            };
+            let layers = run_layer_span(model, calib, &run, lo, hi)?;
+            Ok(ShardOutcome { layers, entry_digest: 0, exit: None })
+        }
+    }
+}
+
+/// What one fleet shard produced: its layers' outputs (model order),
+/// the digest of the activations it started from, and — for staged
+/// shards with a successor — the exit hiddens to hand off.
+pub(crate) struct ShardOutcome {
+    pub layers: Vec<(LayerInfo, LayerPruneOutput)>,
+    pub entry_digest: u64,
+    pub exit: Option<EmbedPrefix>,
 }
 
 #[cfg(test)]

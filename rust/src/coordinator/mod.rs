@@ -693,6 +693,136 @@ pub(crate) fn run_blocks(
     Ok(result)
 }
 
+/// Dense-calibration shard driver for the fleet: prune blocks
+/// `lo..hi` (layers `4·lo..4·hi`) against a full one-shot calibration,
+/// native backend, returning outputs in model order.  Layers are
+/// independent given the grams, so a shard's outputs are bit-identical
+/// to the same layers' outputs in a single-node [`run_layers`] run.
+pub(crate) fn run_layer_span(
+    model: &Gpt,
+    calib: &Calibration,
+    run: &LayerRun,
+    lo: usize,
+    hi: usize,
+) -> Result<Vec<(LayerInfo, LayerPruneOutput)>> {
+    let layers = model.cfg.layers();
+    ensure!(
+        layers.len() == run.patterns.len(),
+        "pattern count {} != layer count {}",
+        run.patterns.len(),
+        layers.len()
+    );
+    ensure!(4 * hi <= layers.len() && lo <= hi, "shard blocks {lo}..{hi} out of range");
+    let span = 4 * (hi - lo);
+    let tctx = TraceContext::capture();
+    let outputs: Vec<Result<(LayerInfo, LayerPruneOutput)>> = parallel_map(span, |j| {
+        let _tg = tctx.enter();
+        let i = 4 * lo + j;
+        let l = &layers[i];
+        run.deadline.check(&format!("pruning layer {}", l.name))?;
+        let w = model.mat(&l.name);
+        let g = calib.try_gram(&l.name)?;
+        let out = run.prune_one_retrying(&NativeKernels, &l.name, w, g, &run.patterns[i])?;
+        Ok((l.clone(), out))
+    });
+    outputs.into_iter().collect()
+}
+
+/// Staged shard driver for the fleet: walk blocks `lo..hi` from a
+/// [`CalibState`] positioned at block `lo` (the predecessor shard's
+/// exit hiddens), prune each block exactly as [`run_blocks`] would —
+/// grams from the pruned-so-far working model, layers pruned against
+/// the original weights, hiddens re-forwarded through the masked block
+/// — and hand back the advanced state (the successor shard's entry).
+///
+/// `n_blocks` is the *job's* total block count: the final advance is
+/// skipped only when `hi == n_blocks` (no successor shard exists).
+pub(crate) fn run_block_span(
+    model: &Gpt,
+    mut state: CalibState,
+    run: &LayerRun,
+    policy: CalibPolicy,
+    lo: usize,
+    hi: usize,
+    n_blocks: usize,
+) -> Result<(Vec<(LayerInfo, LayerPruneOutput)>, CalibState)> {
+    let layers = model.cfg.layers();
+    ensure!(
+        layers.len() == run.patterns.len(),
+        "pattern count {} != layer count {}",
+        run.patterns.len(),
+        layers.len()
+    );
+    ensure!(policy.is_propagated(), "run_block_span requires a propagated CalibPolicy");
+    ensure!(lo <= hi && hi <= n_blocks && n_blocks == model.cfg.n_layers, "bad shard range {lo}..{hi}/{n_blocks}");
+    let mut work = model.clone();
+    let mut outputs: Vec<(LayerInfo, LayerPruneOutput)> = Vec::with_capacity(4 * (hi - lo));
+    for bi in lo..hi {
+        run.deadline.check(&format!("pruning block {}/{n_blocks}", bi + 1))?;
+        let block_layers = &layers[4 * bi..4 * bi + 4];
+        match policy {
+            CalibPolicy::Dense => unreachable!("checked above"),
+            CalibPolicy::PropagateBlock => {
+                let grams = {
+                    let _sp = crate::span!("gram", block = bi);
+                    run.retry.run(run.deadline, "computing calibration grams", |_attempt| {
+                        crate::util::fault::hit("gram.compute")
+                    })?;
+                    state.block_grams(&work, bi)?
+                };
+                let tctx = TraceContext::capture();
+                let outs: Vec<Result<LayerPruneOutput>> = parallel_map(4, |j| {
+                    let _tg = tctx.enter();
+                    let l = &block_layers[j];
+                    let g = grams.gram(&l.name)?;
+                    run.prune_one_retrying(
+                        &NativeKernels,
+                        &l.name,
+                        model.mat(&l.name),
+                        g,
+                        &run.patterns[4 * bi + j],
+                    )
+                });
+                drop(grams);
+                for (j, out) in outs.into_iter().enumerate() {
+                    let l = &block_layers[j];
+                    let out = out?;
+                    apply_output(&mut work, l, &out)?;
+                    outputs.push((l.clone(), out));
+                }
+            }
+            CalibPolicy::PropagateLayer => {
+                for (j, slot) in BlockSlot::ALL.iter().enumerate() {
+                    let l = &block_layers[j];
+                    let grams = {
+                        let _sp = crate::span!("gram", layer = &l.name);
+                        run.retry.run(run.deadline, "computing calibration grams", |_attempt| {
+                            crate::util::fault::hit("gram.compute")
+                        })?;
+                        state.layer_gram(&work, bi, *slot)?
+                    };
+                    let g = grams.gram(&l.name)?;
+                    let out = run.prune_one_retrying(
+                        &NativeKernels,
+                        &l.name,
+                        model.mat(&l.name),
+                        g,
+                        &run.patterns[4 * bi + j],
+                    )?;
+                    drop(grams);
+                    apply_output(&mut work, l, &out)?;
+                    outputs.push((l.clone(), out));
+                }
+            }
+        }
+        if bi + 1 < n_blocks {
+            let _sp = crate::span!("calib", advance_block = bi);
+            state.advance(&work, bi)?;
+        }
+    }
+    Ok((outputs, state))
+}
+
 /// Expand a per-layer sparsity map into per-row patterns in layer order.
 pub(crate) fn per_layer_patterns(
     model: &Gpt,
@@ -711,7 +841,7 @@ pub(crate) fn per_layer_patterns(
         .collect()
 }
 
-fn collect_outputs(
+pub(crate) fn collect_outputs(
     outputs: Vec<Result<(LayerInfo, LayerPruneOutput)>>,
     t0: Instant,
 ) -> Result<PruneResult> {

@@ -38,6 +38,99 @@ pub fn estimated_makespan(layers: &[LayerInfo], workers: usize) -> u64 {
     order_makespan(layers, &lpt_order(layers), workers)
 }
 
+// ---------------------------------------------------------------------------
+// Fleet shard planning
+// ---------------------------------------------------------------------------
+
+/// One planned fleet shard: a contiguous block range `lo..hi` (block
+/// granularity — staged hand-off happens at block boundaries) with its
+/// summed [`layer_flops`] cost.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub lo: usize,
+    pub hi: usize,
+    pub cost: u64,
+}
+
+/// Per-block FLOP costs (4 layers per block, model order).
+pub fn block_costs(layers: &[LayerInfo]) -> Vec<u64> {
+    let n_blocks = layers.len() / 4;
+    (0..n_blocks)
+        .map(|b| layers[4 * b..4 * b + 4].iter().map(layer_flops).sum())
+        .collect()
+}
+
+/// Partition a job's blocks into at most `n_shards` contiguous shards,
+/// balanced by cost (greedy proportional cuts).  Contiguity is a hard
+/// requirement — staged calibration hands hiddens forward at shard
+/// boundaries — so this is the classic linear-partition problem; the
+/// greedy `remaining / shards_left` cut is within one block of optimal
+/// on transformer-shaped cost vectors (blocks are near-uniform).
+/// Every block lands in exactly one shard; every shard is non-empty.
+pub fn plan_shards(layers: &[LayerInfo], n_shards: usize) -> Vec<ShardPlan> {
+    let costs = block_costs(layers);
+    let n_blocks = costs.len();
+    if n_blocks == 0 {
+        return Vec::new();
+    }
+    let k = n_shards.max(1).min(n_blocks);
+    let mut plans = Vec::with_capacity(k);
+    let mut lo = 0usize;
+    let mut remaining: u64 = costs.iter().sum();
+    for s in 0..k {
+        let shards_left = (k - s) as u64;
+        let target = remaining.div_ceil(shards_left);
+        // leave at least one block for each remaining shard
+        let max_hi = n_blocks - (k - s - 1);
+        let mut hi = lo;
+        let mut acc = 0u64;
+        while hi < max_hi {
+            acc += costs[hi];
+            hi += 1;
+            if acc >= target {
+                break;
+            }
+        }
+        plans.push(ShardPlan { lo, hi, cost: acc });
+        remaining -= acc;
+        lo = hi;
+    }
+    plans
+}
+
+/// LPT assignment of shard costs to `workers`: shards in descending
+/// cost order, each to the least-loaded worker so far.  Returns one
+/// worker index per shard — the fleet coordinator's dispatch-preference
+/// order across heterogeneous worker counts.
+pub fn assign_shards(costs: &[u64], workers: usize) -> Vec<usize> {
+    let w = workers.max(1);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(costs[i]));
+    let mut loads = vec![0u64; w];
+    let mut assignment = vec![0usize; costs.len()];
+    for &i in &order {
+        let (best, _) = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(wi, &l)| (l, wi))
+            .expect("at least one worker");
+        assignment[i] = best;
+        loads[best] += costs[i];
+    }
+    assignment
+}
+
+/// Makespan of an explicit shard→worker assignment.
+pub fn assignment_makespan(costs: &[u64], assignment: &[usize], workers: usize) -> u64 {
+    let mut loads = vec![0u64; workers.max(1)];
+    for (i, &w) in assignment.iter().enumerate() {
+        if let Some(l) = loads.get_mut(w) {
+            *l += costs.get(i).copied().unwrap_or(0);
+        }
+    }
+    loads.into_iter().max().unwrap_or(0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +176,83 @@ mod tests {
         // and the first dispatched job is an mlp_down
         let first = lpt_order(&layers)[0];
         assert!(layers[first].name.ends_with("wdown"), "{}", layers[first].name);
+    }
+
+    /// Heterogeneous transformer-ish layer set: blocks whose `d_ff`
+    /// varies, so block costs differ by more than an order of magnitude.
+    fn hetero_layers(blocks: usize) -> Vec<LayerInfo> {
+        let d = 8usize;
+        let mut layers = Vec::new();
+        for i in 0..blocks {
+            let ff = 16 << (i % 4); // 16, 32, 64, 128, 16, …
+            layers.push(layer(&format!("blocks.{i}.wqkv"), 3 * d, d));
+            layers.push(layer(&format!("blocks.{i}.wo"), d, d));
+            layers.push(layer(&format!("blocks.{i}.wup"), ff, d));
+            layers.push(layer(&format!("blocks.{i}.wdown"), d, ff));
+        }
+        layers
+    }
+
+    #[test]
+    fn plan_shards_partitions_every_block_exactly_once() {
+        for blocks in [1usize, 2, 3, 5, 8, 13] {
+            let layers = hetero_layers(blocks);
+            for n_shards in [1usize, 2, 3, 4, 7, 16] {
+                let plans = plan_shards(&layers, n_shards);
+                assert_eq!(plans.len(), n_shards.min(blocks), "blocks={blocks} shards={n_shards}");
+                // contiguous, non-empty, covering 0..blocks exactly
+                let mut next = 0usize;
+                for p in &plans {
+                    assert_eq!(p.lo, next, "gap/overlap at shard {p:?}");
+                    assert!(p.hi > p.lo, "empty shard {p:?}");
+                    next = p.hi;
+                }
+                assert_eq!(next, blocks);
+                let costs = block_costs(&layers);
+                for p in &plans {
+                    assert_eq!(p.cost, costs[p.lo..p.hi].iter().sum::<u64>());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lpt_assignment_no_worse_than_round_robin() {
+        // heterogeneous shard sizes × heterogeneous worker counts: the
+        // LPT greedy must never lose to naive round-robin placement
+        for blocks in [4usize, 6, 8, 12] {
+            let layers = hetero_layers(blocks);
+            for n_shards in [2usize, 3, 4, 6] {
+                let plans = plan_shards(&layers, n_shards);
+                let costs: Vec<u64> = plans.iter().map(|p| p.cost).collect();
+                for workers in [1usize, 2, 3, 4, 5] {
+                    let lpt = assign_shards(&costs, workers);
+                    let rr: Vec<usize> = (0..costs.len()).map(|i| i % workers).collect();
+                    let m_lpt = assignment_makespan(&costs, &lpt, workers);
+                    let m_rr = assignment_makespan(&costs, &rr, workers);
+                    assert!(
+                        m_lpt <= m_rr,
+                        "blocks={blocks} shards={n_shards} workers={workers}: \
+                         lpt {m_lpt} > round-robin {m_rr}"
+                    );
+                    // every shard got exactly one worker, in range
+                    assert_eq!(lpt.len(), costs.len());
+                    assert!(lpt.iter().all(|&w| w < workers));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lpt_assignment_strictly_beats_round_robin_on_skewed_costs() {
+        // two heavy shards round-robin onto the same worker when the
+        // shard list alternates heavy/light in index order
+        let costs = vec![100u64, 1, 100, 1];
+        let rr: Vec<usize> = (0..4).map(|i| i % 2).collect(); // heavy, heavy on worker 0
+        let lpt = assign_shards(&costs, 2);
+        assert!(
+            assignment_makespan(&costs, &lpt, 2) < assignment_makespan(&costs, &rr, 2)
+        );
     }
 
     #[test]

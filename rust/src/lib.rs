@@ -145,6 +145,27 @@
 //! # anyhow::Ok(())
 //! ```
 //!
+//! One tier up, the [`server::fleet`] subsystem shards a single job
+//! across machines: the objective is block-decomposable, so a
+//! coordinator (`serve --coordinator`) partitions each job into
+//! contiguous block-range shards (LPT over per-block FLOP costs) and
+//! fleet workers (`serve --worker`) pull them over the same HTTP API:
+//!
+//! ```text
+//! client ─▶ POST /jobs ─▶ coordinator (plan_shards · LPT dispatch · reap/requeue)
+//!                            ├──▶ worker 0 ─┐  register / poll+heartbeat /
+//!                            ├──▶ worker 1 ─┤  execute_shard / report
+//!                            └──▶ worker N ─┘
+//!              staged hand-off: shard i's exit hiddens (EmbedPrefix,
+//!              digest-checked) are shard i+1's calibration entry
+//! ```
+//!
+//! Workers run the ordinary `PruneSession` path on their block range
+//! and ship layers back as journal checkpoints, so the assembled
+//! result is bit-identical to a single-node run (same `mask_digest`
+//! for every `--propagate` policy); dead workers are reaped on missed
+//! heartbeats and their shards requeue on live ones.
+//!
 //! ## Serving pruned models: the sparse inference fast path
 //!
 //! Pruning's payoff is cheaper inference, so a [`coordinator`]

@@ -87,11 +87,17 @@ USAGE: sparsefw <subcommand> [flags]
              [--calib-cache N] [--compiled-cache N] [--conn-threads N]
              [--history-cap N] [--demo] [--trace-out trace.ndjson]
              [--journal DIR] [--job-timeout SECS]
+             [--auth-token TOKEN] [--coordinator]
+             [--fleet-timeout-secs S]
+  serve      --worker --coordinator-addr HOST:PORT [--label NAME]
+             [--poll-ms MS] [--demo] [--auth-token TOKEN]
+                                  join a coordinator's fleet: no
+                                  listener, pulls shards over HTTP
   resume     --journal DIR [--demo] [--job-timeout SECS]
                                   finish interrupted prune runs from
                                   their on-disk checkpoints
   submit     <prune flags…> --addr HOST:PORT [--priority N]
-             [--wait] [--stream] [--corr-id ID]
+             [--wait] [--stream] [--corr-id ID] [--token TOKEN]
   status     --addr HOST:PORT [--job ID]
   shutdown   --addr HOST:PORT [--drain]
   report-table1 | report-table2 | report-fig2 | report-fig3 | report-fig4
@@ -232,9 +238,26 @@ requests from the cache.  Endpoint table:
     GET    /healthz                liveness + build info
     GET    /metrics                metrics (JSON / ?format=prometheus)
     POST   /shutdown               graceful shutdown (?drain=1)
+    GET    /spec                   machine-readable API description
+                                   (routes + metric catalog as JSON)
+    GET    /fleet                  fleet status: workers, shard table
+    POST   /fleet/workers          register a fleet worker (body
+                                   {\"label\": …}; returns worker id)
+    POST   /fleet/workers/:id/poll heartbeat + lease the next ready
+                                   shard (body {\"busy\": bool})
+    POST   /fleet/shards/:id/result  report a shard's pruned layers
+                                   (or failure) back to the coordinator
 
 The route-coverage lint keeps this table in sync with the server's
-actual dispatch (src/server/api.rs).
+actual dispatch (src/server/api.rs); GET /spec serves the same table
+as JSON, generated from the same parsed source.
+
+Auth.  `serve --auth-token TOKEN` (or the SPARSEFW_AUTH_TOKEN env var)
+requires `Authorization: Bearer TOKEN` on every mutating route (POST /
+DELETE); reads stay open.  Requests with a missing or wrong token get
+401 + WWW-Authenticate.  The client side sends the token via
+`submit/status/shutdown --token TOKEN` (or the same env var), and
+fleet workers pass it with `serve --worker --auth-token`.
 
 DURABILITY & FAILURE HANDLING
 
@@ -288,6 +311,42 @@ Injected faults flow through the same retry/journal machinery as real
 ones: an `error` retries (then fails the job cleanly), a `panic` is
 contained to the worker/connection that hit it, a `delay` exercises
 timeouts.  sparsefw_faults_injected_total counts fired faults.
+
+FLEET (DISTRIBUTED PRUNING)
+
+The layer-wise FW objective is block-decomposable, so one job shards
+at transformer-block granularity across machines.  `serve
+--coordinator` accepts jobs through the normal API and, instead of
+pruning locally, partitions each job into contiguous block-range
+shards (LPT over per-block FLOP costs) and hands them to fleet
+workers; `serve --worker --coordinator-addr HOST:PORT` joins the
+fleet:
+
+    client ── POST /jobs ──▶ coordinator (serve --coordinator)
+                                │ plan shards, pull-based dispatch
+                 ┌──────────────┼───────────────┐
+                 ▼              ▼               ▼
+             worker 0       worker 1   …   worker N-1
+           (serve --worker: poll, prune shard, report)
+
+Worker lifecycle: register (POST /fleet/workers) -> poll
+(/fleet/workers/:id/poll, which doubles as the heartbeat) -> lease the
+costliest ready shard -> prune it with the ordinary PruneSession path
+-> report (/fleet/shards/:id/result) -> poll again.  Under --propagate
+block|layer the coordinator threads the staged hand-off between
+shards: shard i's exit hidden states (an O(shard)-memory EmbedPrefix,
+digest-checked on both ends) become shard i+1's calibration entry, so
+shard i+1 only becomes ready once i completes; dense jobs run all
+shards concurrently.  A worker that misses heartbeats for
+--fleet-timeout-secs (default 10) is reaped and its leased shards
+requeue on live workers (bounded attempts, then the job fails
+cleanly); results for stale leases are dropped so duplicated work
+stays deterministic.  Assembled results are bit-identical to a
+single-node run — same mask_digest for every --propagate policy — and
+worker trace spans ship back with results so `trace --job` shows one
+tree.  With no live workers the coordinator falls back to pruning
+locally.  Shard-level transitions land in the PR 8 journal; fleet
+gauges (sparsefw_fleet_*) land in /metrics.
 
 OBSERVABILITY
 
@@ -356,6 +415,16 @@ buckets (1ms..2min) with p50/p95/p99 in the JSON form.  Catalog:
     sparsefw_phase_io_seconds          histogram  result/eval spans
     sparsefw_eval_request_seconds      histogram  POST /jobs/:id/eval
     sparsefw_generate_request_seconds  histogram  POST /jobs/:id/generate
+    sparsefw_fleet_workers_registered_total counter  fleet workers ever
+                                                  registered
+    sparsefw_fleet_workers_live        gauge      fleet workers within
+                                                  the heartbeat window
+    sparsefw_fleet_shards_dispatched_total counter  shard leases handed
+                                                  to fleet workers
+    sparsefw_fleet_shards_requeued_total counter  shards requeued after
+                                                  worker loss / defects
+    sparsefw_fleet_handoff_bytes_total counter    staged hidden-state
+                                                  hand-off bytes shipped
 
 The catalog lives in server::METRIC_CATALOG; the metrics-coverage lint
 keeps this table and that list in sync.
@@ -853,7 +922,42 @@ fn generate_cmd(args: &Args) -> Result<()> {
 
 /// Run the pruning job server (blocks until `POST /shutdown` or
 /// `sparsefw shutdown`).
+/// `--auth-token TOKEN` with the SPARSEFW_AUTH_TOKEN env var as the
+/// fallback (empty env values count as unset).
+fn auth_token(args: &Args) -> Option<String> {
+    args.get("auth-token")
+        .map(String::from)
+        .or_else(|| std::env::var("SPARSEFW_AUTH_TOKEN").ok())
+        .filter(|t| !t.is_empty())
+}
+
 fn serve(args: &Args) -> Result<()> {
+    if args.has("worker") {
+        // Fleet worker mode: no listener of our own — join a
+        // coordinator's fleet and pull shards until killed.
+        let coordinator = args
+            .get("coordinator-addr")
+            .context("serve --worker needs --coordinator-addr HOST:PORT")?;
+        let mut opts = server::fleet::WorkerOptions::new(
+            coordinator,
+            args.get("label").unwrap_or("worker"),
+        );
+        opts.token = auth_token(args);
+        opts.poll_ms = args.get_u64("poll-ms", 100)?;
+        let session = if args.has("demo") {
+            info!("fleet worker on the --demo in-memory model");
+            server::demo_sessions(1)
+                .into_iter()
+                .next()
+                .context("building the demo session")?
+        } else {
+            server::workspace_sessions(args.get("artifacts"), 1)?
+                .into_iter()
+                .next()
+                .context("building the workspace session")?
+        };
+        return server::fleet::run_worker(&opts, session);
+    }
     let cfg = ServerConfig {
         addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
         workers: args.get_usize("workers", 2)?.max(1),
@@ -866,6 +970,9 @@ fn serve(args: &Args) -> Result<()> {
         trace_out: args.get("trace-out").map(String::from),
         journal: args.get("journal").map(String::from),
         job_timeout_secs: args.get_f64_opt("job-timeout")?,
+        auth_token: auth_token(args),
+        coordinator: args.has("coordinator"),
+        fleet_timeout_secs: args.get_f64("fleet-timeout-secs", 10.0)?,
     };
     let sessions = if args.has("demo") {
         info!("serving the --demo in-memory model (no artifacts workspace)");
@@ -931,7 +1038,16 @@ fn resume(args: &Args) -> Result<()> {
 }
 
 fn client_from(args: &Args) -> server::Client {
-    server::Client::new(args.get("addr").unwrap_or("127.0.0.1:7878"))
+    let client = server::Client::new(args.get("addr").unwrap_or("127.0.0.1:7878"));
+    match args
+        .get("token")
+        .map(String::from)
+        .or_else(|| std::env::var("SPARSEFW_AUTH_TOKEN").ok())
+        .filter(|t| !t.is_empty())
+    {
+        Some(token) => client.with_token(token),
+        None => client,
+    }
 }
 
 /// One line per job the server reports.
@@ -949,6 +1065,9 @@ fn print_job_line(v: &Json) {
             r.at(&["total_err"]).as_f64().unwrap_or(0.0),
             r.at(&["wall_seconds"]).as_f64().unwrap_or(0.0),
         ));
+        if let Some(d) = r.at(&["mask_digest"]).as_str() {
+            line.push_str(&format!(" mask_digest={d}"));
+        }
         if let Some(red) = r.at(&["mean_rel_reduction"]).as_f64() {
             line.push_str(&format!(" mean_rel_reduction={:.1}%", red * 100.0));
         }

@@ -17,6 +17,18 @@
 //! | GET    | `/metrics`        | counters/gauges/histograms (JSON; append     |
 //! |        |                   | `?format=prometheus` for text exposition)    |
 //! | POST   | `/shutdown`       | graceful shutdown (`?drain=1` runs backlog)  |
+//! | GET    | `/spec`           | machine-readable API description (routes +  |
+//! |        |                   | metric catalog), generated from this file    |
+//! | GET    | `/fleet`          | fleet status: workers, shard table, counters |
+//! | POST   | `/fleet/workers`  | register a fleet worker (coordinator only)   |
+//! | POST   | `/fleet/workers/:id/poll` | heartbeat + lease the next ready shard|
+//! | POST   | `/fleet/shards/:id/result` | report a shard's layers / failure   |
+//!
+//! Auth: with `serve --auth-token` (or `SPARSEFW_AUTH_TOKEN`) every
+//! mutating request (POST/DELETE/PUT/PATCH) must carry `Authorization:
+//! Bearer <token>`; anything else is refused with `401` +
+//! `WWW-Authenticate`.  Read-only GETs stay open so dashboards and
+//! health probes keep working.
 //!
 //! Submitted specs parse through the global
 //! [`crate::pruner::MethodRegistry`], so a job naming an unregistered
@@ -42,9 +54,11 @@ use std::time::Duration;
 use crate::coordinator::{JobSpec, LayerEvent};
 use crate::util::json::Json;
 
+use super::fleet::{self, wire};
 use super::http::{ChunkedWriter, Request, Response};
 use super::queue::{CancelError, JobId, JobRecord, JobState};
 use super::{CompiledEntry, ServerState};
+use crate::util::telemetry::TraceSink as _;
 
 /// How long a streaming connection waits per wakeup before re-checking
 /// the stop flag.
@@ -121,11 +135,16 @@ pub(crate) fn handle_connection(stream: TcpStream, state: Arc<ServerState>) {
 }
 
 fn route(req: &Request, state: &Arc<ServerState>, peer: Option<IpAddr>) -> Response {
+    // bearer-token gate on every mutating method; reads stay open
+    if let Some(resp) = check_auth(req, state) {
+        return resp;
+    }
     let segs = req.segments();
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
         ("GET", ["metrics"]) => metrics(req, state),
         ("GET", ["methods"]) => list_methods(),
+        ("GET", ["spec"]) => api_spec(),
         ("GET", ["jobs"]) => list_jobs(req, state),
         ("POST", ["jobs"]) => submit_job(req, state, peer),
         ("GET", ["jobs", id]) => job_status(state, id),
@@ -133,13 +152,38 @@ fn route(req: &Request, state: &Arc<ServerState>, peer: Option<IpAddr>) -> Respo
         ("POST", ["jobs", id, "eval"]) => eval_job(req, state, id),
         ("POST", ["jobs", id, "generate"]) => generate_job(req, state, id),
         ("DELETE", ["jobs", id]) => cancel_job(state, id),
+        ("GET", ["fleet"]) => fleet_status(state),
+        ("POST", ["fleet", "workers"]) => fleet_register(req, state),
+        ("POST", ["fleet", "workers", id, "poll"]) => fleet_poll(req, state, id),
+        ("POST", ["fleet", "shards", id, "result"]) => fleet_result(req, state, id),
         ("POST", ["shutdown"]) => shutdown(req, state),
         (_, ["jobs", ..]) | (_, ["healthz"]) | (_, ["metrics"]) | (_, ["methods"])
-        | (_, ["shutdown"]) => {
+        | (_, ["shutdown"]) | (_, ["spec"]) | (_, ["fleet", ..]) => {
             Response::error(405, &format!("{} not allowed here", req.method))
         }
         _ => Response::error(404, &format!("no route for {}", req.path)),
     }
+}
+
+/// `Some(401)` when the server requires a bearer token and this
+/// mutating request lacks it (or presents the wrong one).
+fn check_auth(req: &Request, state: &ServerState) -> Option<Response> {
+    let token = state.auth_token.as_deref()?;
+    if !matches!(req.method.as_str(), "POST" | "DELETE" | "PUT" | "PATCH") {
+        return None;
+    }
+    let ok = req
+        .headers
+        .get("authorization")
+        .and_then(|h| h.strip_prefix("Bearer "))
+        .is_some_and(|t| t.trim() == token);
+    if ok {
+        return None;
+    }
+    Some(
+        Response::error(401, "missing or invalid bearer token")
+            .with_header("WWW-Authenticate", "Bearer realm=\"sparsefw\""),
+    )
 }
 
 /// `GET /methods` — the registry listing: every registered method's
@@ -646,6 +690,136 @@ fn shutdown(req: &Request, state: &ServerState) -> Response {
         200,
         &Json::obj(vec![("ok", true.into()), ("draining", drain.into())]),
     )
+}
+
+// ---------------------------------------------------------------------------
+// API self-description + fleet endpoints
+// ---------------------------------------------------------------------------
+
+/// `GET /spec` — a machine-readable description of this server's API,
+/// generated from the same route table the `route-coverage` lint reads
+/// (this very file) plus the [`super::METRIC_CATALOG`].  A client can
+/// diff it against its expectations before submitting anything.
+fn api_spec() -> Response {
+    static ROUTES: std::sync::OnceLock<Vec<(String, String)>> = std::sync::OnceLock::new();
+    let routes = ROUTES
+        .get_or_init(|| crate::analyze::consistency::routes_in(include_str!("api.rs")));
+    let routes_json: Vec<Json> = routes
+        .iter()
+        .map(|(m, p)| {
+            Json::obj(vec![("method", m.as_str().into()), ("path", p.as_str().into())])
+        })
+        .collect();
+    let metrics: Vec<Json> = super::METRIC_CATALOG
+        .iter()
+        .map(|&(n, k, h)| {
+            Json::obj(vec![("name", n.into()), ("type", k.into()), ("help", h.into())])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("version", env!("CARGO_PKG_VERSION").into()),
+            ("routes", Json::Arr(routes_json)),
+            ("metrics", Json::Arr(metrics)),
+        ]),
+    )
+}
+
+fn not_coordinator() -> Response {
+    Response::error(
+        409,
+        "this server is not a fleet coordinator (start it with serve --coordinator)",
+    )
+}
+
+/// `GET /fleet` — worker registry + active shard table + fleet counters.
+fn fleet_status(state: &ServerState) -> Response {
+    match &state.fleet {
+        Some(f) => Response::json(200, &f.status_json()),
+        None => not_coordinator(),
+    }
+}
+
+/// `POST /fleet/workers` — register a worker process; body
+/// `{"label": …}` (optional).  Returns the fleet-unique worker id.
+fn fleet_register(req: &Request, state: &ServerState) -> Response {
+    let Some(f) = &state.fleet else { return not_coordinator() };
+    let body = match optional_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let label = body.at(&["label"]).as_str().unwrap_or("worker").to_string();
+    let id = f.register(&label);
+    crate::info!("fleet: worker {id} ({label}) registered");
+    Response::json(201, &Json::obj(vec![("worker", (id as usize).into())]))
+}
+
+/// `POST /fleet/workers/:id/poll` — heartbeat + lease.  Body
+/// `{"busy": true}` refreshes the lease without requesting work; the
+/// response carries an `assignment` key iff a shard was leased.
+fn fleet_poll(req: &Request, state: &ServerState, id: &str) -> Response {
+    let Some(f) = &state.fleet else { return not_coordinator() };
+    let Ok(worker) = id.parse::<u64>() else {
+        return Response::error(400, "worker id must be an integer");
+    };
+    let body = match optional_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let busy = body.at(&["busy"]).as_bool().unwrap_or(false);
+    match f.poll(worker, busy) {
+        Ok(Some(a)) => Response::json(
+            200,
+            &Json::obj(vec![("assignment", wire::assignment_to_json(&a))]),
+        ),
+        Ok(None) => Response::json(200, &Json::obj(Vec::new())),
+        Err(e) => Response::error(404, &format!("{e:#}")),
+    }
+}
+
+/// `POST /fleet/shards/:id/result` — a worker reporting one shard.
+/// Acceptance happens under the fleet lock; the follow-up I/O —
+/// journal shard line, live progress events, grafting the worker's
+/// trace spans into the coordinator ring — happens here, outside it.
+fn fleet_result(req: &Request, state: &ServerState, id: &str) -> Response {
+    let Some(f) = &state.fleet else { return not_coordinator() };
+    let Ok(shard) = id.parse::<usize>() else {
+        return Response::error(400, "shard id must be an integer");
+    };
+    let body = match req.body_json() {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    let r = match wire::result_from_json(&body) {
+        Ok(r) => r,
+        Err(e) => return Response::error(400, &format!("bad shard result: {e:#}")),
+    };
+    if r.shard != shard {
+        return Response::error(400, &format!("path shard {shard} != body shard {}", r.shard));
+    }
+    match f.accept_result(r) {
+        Ok(acc) => {
+            if let Some(j) = &state.journal {
+                j.record_shard(acc.job, acc.shard, acc.state_label, acc.worker);
+            }
+            for ev in acc.layer_events {
+                state.queue.push_event(acc.job, ev);
+            }
+            for ev in &acc.spans {
+                state.trace_ring.record(ev);
+            }
+            Response::json(
+                200,
+                &Json::obj(vec![
+                    ("job", (acc.job as usize).into()),
+                    ("shard", acc.shard.into()),
+                    ("state", acc.state_label.into()),
+                ]),
+            )
+        }
+        Err(e) => Response::error(409, &format!("{e:#}")),
+    }
 }
 
 /// Chunked NDJSON stream: replay recorded [`LayerEvent`]s, then follow

@@ -57,6 +57,9 @@ pub struct Client {
     /// spans + log lines) with it.  `None` lets the server mint one
     /// per job.
     pub corr_id: Option<String>,
+    /// Bearer token sent as `Authorization: Bearer …` on every request
+    /// — required by servers running with `--auth-token`.
+    pub token: Option<String>,
 }
 
 impl Client {
@@ -66,12 +69,19 @@ impl Client {
             timeout: Duration::from_secs(30),
             connect_timeout: Duration::from_secs(5),
             corr_id: None,
+            token: None,
         }
     }
 
     /// Builder: tag every request from this client with `corr_id`.
     pub fn with_corr_id(mut self, corr_id: impl Into<String>) -> Self {
         self.corr_id = Some(corr_id.into());
+        self
+    }
+
+    /// Builder: authenticate every request with a bearer `token`.
+    pub fn with_token(mut self, token: impl Into<String>) -> Self {
+        self.token = Some(token.into());
         self
     }
 
@@ -119,12 +129,18 @@ impl Client {
             .as_deref()
             .map(|c| format!("X-Sparsefw-Corr-Id: {c}\r\n"))
             .unwrap_or_default();
+        let auth = self
+            .token
+            .as_deref()
+            .map(|t| format!("Authorization: Bearer {t}\r\n"))
+            .unwrap_or_default();
         write!(
             stream,
             "{method} {path} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\
-             Content-Type: application/json\r\n{}Content-Length: {}\r\n\r\n{}",
+             Content-Type: application/json\r\n{}{}Content-Length: {}\r\n\r\n{}",
             self.addr,
             corr,
+            auth,
             body_text.len(),
             body_text,
         )?;
@@ -169,6 +185,17 @@ impl Client {
     }
 
     // -- API ----------------------------------------------------------------
+
+    /// Generic `POST path` with a JSON body — the fleet worker's
+    /// transport (register / poll / shard results all go through here).
+    pub fn post(&self, path: &str, body: &Json) -> Result<Json> {
+        self.request_ok("POST", path, Some(body))
+    }
+
+    /// Generic `GET path`.
+    pub fn get(&self, path: &str) -> Result<Json> {
+        self.request_ok("GET", path, None)
+    }
 
     /// `POST /jobs`; returns the assigned job id.
     pub fn submit(&self, spec: &JobSpec, priority: i64) -> Result<JobId> {

@@ -1,0 +1,809 @@
+//! Coordinator side of the pruning fleet.
+//!
+//! One [`FleetState`] lives on a `sparsefw serve --coordinator`
+//! process.  Jobs still arrive through the unchanged public API
+//! (`POST /jobs` → the same [`JobQueue`]); instead of worker *threads*
+//! popping the queue, a single [`dispatcher_loop`] thread pops each job
+//! and runs it across the registered worker *processes*:
+//!
+//! 1. **Plan** — [`plan_shards`] cuts the job's blocks into contiguous
+//!    shards (contiguity is forced by the staged hand-off; blocks are
+//!    the natural unit because the layer-wise objective is
+//!    block-decomposable).
+//! 2. **Dispatch** — workers pull work: `POST /fleet/workers/:id/poll`
+//!    leases the *costliest ready* pending shard (pull-based LPT — the
+//!    same greedy [`assign_shards`] computes statically, realized
+//!    online as each worker frees up).  Dense shards are all ready at
+//!    once and run in parallel; staged shards become ready as their
+//!    predecessor lands, forming a pipeline whose hand-off is the
+//!    predecessor's exit hiddens (O(shard) memory per worker, never
+//!    O(model)).
+//! 3. **Collect** — results are accepted by `(job, shard)`, so a
+//!    worker presumed dead that reports late is simply a second,
+//!    bit-identical copy (execution is deterministic) and the stale
+//!    copy is dropped.  Missed heartbeats mark a worker dead and
+//!    requeue its leased shards on the live set, with a bounded
+//!    attempt budget.
+//! 4. **Assemble** — shard results are journal [`LayerCheckpoint`]s;
+//!    the same `to_output` path the crash-recovery suite proves
+//!    bit-identical reconstructs every layer, and the standard
+//!    [`collect_outputs`] builds the [`PruneResult`], so
+//!    `JobSummary::mask_digest` matches a single-node run bit for bit.
+//!
+//! If no worker registers within the heartbeat window (or the job
+//! targets a non-native backend), the dispatcher falls back to plain
+//! local execution — a coordinator with no fleet degrades to a
+//! single-worker server, it never wedges.
+//!
+//! Lock discipline: `FleetState.inner` is a plain mutex held only for
+//! in-memory bookkeeping; all I/O (journal appends, trace recording,
+//! HTTP) happens outside it, in the API handlers or the dispatcher.
+//!
+//! [`JobQueue`]: crate::server::queue::JobQueue
+//! [`plan_shards`]: crate::coordinator::schedule::plan_shards
+//! [`assign_shards`]: crate::coordinator::schedule::assign_shards
+//! [`collect_outputs`]: crate::coordinator::collect_outputs
+//! [`PruneResult`]: crate::coordinator::PruneResult
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::calib::EmbedPrefix;
+use crate::config::Backend;
+use crate::coordinator::schedule::{plan_shards, ShardPlan};
+use crate::coordinator::{
+    collect_outputs, JobResult, JobSpec, LayerEvent, PruneSession, StagedStats,
+};
+use crate::server::journal::LayerCheckpoint;
+use crate::server::queue::{JobId, JobSummary};
+use crate::util::json::Json;
+use crate::util::sync::{lock_recover, wait_timeout_recover};
+use crate::util::telemetry::{self, TraceEvent};
+
+use super::super::ServerState;
+use super::wire::{self, ShardAssignment, ShardResult};
+
+/// A shard is abandoned (and the job failed) after this many lease
+/// attempts — a shard that kills every worker it lands on must not
+/// requeue forever (the `unbounded-retry` lint's concern, applied to
+/// the cluster).
+pub const MAX_SHARD_ATTEMPTS: usize = 5;
+
+/// Remapped span IDs for grafted worker spans start here, far above
+/// anything the local `span!` counter will reach, so coordinator-local
+/// and remote span IDs can never collide in the trace ring.
+const REMOTE_SPAN_BASE: u64 = 1 << 48;
+
+// ---------------------------------------------------------------------------
+// State
+// ---------------------------------------------------------------------------
+
+struct WorkerEntry {
+    label: String,
+    last_seen: Instant,
+    live: bool,
+    shards_done: usize,
+}
+
+enum ShardPhase {
+    Pending,
+    Leased { worker: u64 },
+    Done,
+}
+
+impl ShardPhase {
+    fn label(&self) -> &'static str {
+        match self {
+            ShardPhase::Pending => "pending",
+            ShardPhase::Leased { .. } => "leased",
+            ShardPhase::Done => "done",
+        }
+    }
+}
+
+struct ShardState {
+    plan: ShardPlan,
+    phase: ShardPhase,
+    attempts: usize,
+    /// Staged entry hiddens, populated when the predecessor lands
+    /// (`None` for shard 0 and for dense shards: no hand-off).
+    entry: Option<EmbedPrefix>,
+    /// Digest the dispatched entry decodes to; the worker echoes the
+    /// digest it actually started from and the two must agree.
+    expect_digest: Option<u64>,
+    layers: Vec<LayerCheckpoint>,
+}
+
+struct ActiveJob {
+    id: JobId,
+    corr: String,
+    spec: JobSpec,
+    n_blocks: usize,
+    staged: bool,
+    total_layers: usize,
+    completed_layers: usize,
+    shards: Vec<ShardState>,
+    failed: Option<String>,
+}
+
+impl ActiveJob {
+    fn done(&self) -> bool {
+        self.shards.iter().all(|s| matches!(s.phase, ShardPhase::Done))
+    }
+}
+
+#[derive(Default)]
+struct FleetInner {
+    workers: BTreeMap<u64, WorkerEntry>,
+    job: Option<ActiveJob>,
+}
+
+/// Everything the coordinator knows about its fleet: the worker
+/// registry, the active job's shard table, and the fleet counters
+/// behind the `sparsefw_fleet_*` metrics.
+pub struct FleetState {
+    /// A worker whose last heartbeat is older than this is presumed
+    /// dead; its leased shards requeue on the live set.
+    pub heartbeat_timeout: Duration,
+    pub workers_registered: AtomicUsize,
+    pub shards_dispatched: AtomicUsize,
+    pub shards_requeued: AtomicUsize,
+    pub handoff_bytes: AtomicUsize,
+    next_worker: AtomicU64,
+    next_span: AtomicU64,
+    inner: Mutex<FleetInner>,
+    cv: Condvar,
+}
+
+/// What accepting one shard result produced — everything the API
+/// handler needs to do the I/O the lock must not hold: journal lines,
+/// progress events for the live stream, and remapped trace spans.
+pub(crate) struct Accepted {
+    pub job: JobId,
+    pub shard: usize,
+    pub worker: u64,
+    /// `"done"`, `"requeued"`, or `"stale"` (duplicate of a shard that
+    /// already landed — deterministic execution makes it bit-identical,
+    /// so it is simply dropped).
+    pub state_label: &'static str,
+    pub layer_events: Vec<LayerEvent>,
+    pub spans: Vec<TraceEvent>,
+}
+
+impl FleetState {
+    pub fn new(heartbeat_timeout: Duration) -> Self {
+        Self {
+            heartbeat_timeout,
+            workers_registered: AtomicUsize::new(0),
+            shards_dispatched: AtomicUsize::new(0),
+            shards_requeued: AtomicUsize::new(0),
+            handoff_bytes: AtomicUsize::new(0),
+            next_worker: AtomicU64::new(0),
+            next_span: AtomicU64::new(REMOTE_SPAN_BASE),
+            inner: Mutex::new(FleetInner::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register a worker; returns its fleet-unique ID.
+    pub fn register(&self, label: &str) -> u64 {
+        let id = self.next_worker.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut inner = lock_recover(&self.inner);
+        inner.workers.insert(
+            id,
+            WorkerEntry {
+                label: label.to_string(),
+                last_seen: Instant::now(),
+                live: true,
+                shards_done: 0,
+            },
+        );
+        self.workers_registered.fetch_add(1, Ordering::Relaxed);
+        self.cv.notify_all();
+        id
+    }
+
+    /// Live (heartbeating) worker count — the `sparsefw_fleet_workers_live`
+    /// gauge, and the shard-count input to job planning.
+    pub fn live_workers(&self) -> usize {
+        let inner = lock_recover(&self.inner);
+        inner
+            .workers
+            .values()
+            .filter(|w| w.live && w.last_seen.elapsed() <= self.heartbeat_timeout)
+            .count()
+    }
+
+    /// Heartbeat + lease: refresh the worker's liveness and, unless it
+    /// is mid-shard (`busy`), lease it the costliest ready shard.
+    pub(crate) fn poll(&self, worker: u64, busy: bool) -> Result<Option<ShardAssignment>> {
+        let mut inner = lock_recover(&self.inner);
+        let Some(w) = inner.workers.get_mut(&worker) else {
+            bail!("unknown worker {worker}; register first (POST /fleet/workers)")
+        };
+        w.last_seen = Instant::now();
+        w.live = true;
+        if busy {
+            return Ok(None);
+        }
+        let Some(job) = inner.job.as_mut() else { return Ok(None) };
+        if job.failed.is_some() {
+            return Ok(None);
+        }
+        // pull-based LPT: the costliest *ready* pending shard.  Dense
+        // jobs have every shard ready (parallel fan-out); staged jobs
+        // expose shard i only once shard i-1 landed (pipeline).
+        let mut best: Option<usize> = None;
+        for i in 0..job.shards.len() {
+            let pending = job
+                .shards
+                .get(i)
+                .is_some_and(|s| matches!(s.phase, ShardPhase::Pending));
+            if !pending {
+                continue;
+            }
+            let ready = !job.staged
+                || i == 0
+                || job
+                    .shards
+                    .get(i - 1)
+                    .is_some_and(|p| matches!(p.phase, ShardPhase::Done));
+            if !ready {
+                continue;
+            }
+            let cost = job.shards.get(i).map(|s| s.plan.cost).unwrap_or(0);
+            let best_cost =
+                best.and_then(|b| job.shards.get(b)).map(|s| s.plan.cost).unwrap_or(0);
+            if best.is_none() || cost > best_cost {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { return Ok(None) };
+        let Some(s) = job.shards.get_mut(i) else { return Ok(None) };
+        s.phase = ShardPhase::Leased { worker };
+        let assignment = ShardAssignment {
+            job: job.id,
+            shard: i,
+            corr: job.corr.clone(),
+            lo: s.plan.lo,
+            hi: s.plan.hi,
+            n_blocks: job.n_blocks,
+            spec: job.spec.clone(),
+            entry: s.entry.clone(),
+        };
+        self.shards_dispatched.fetch_add(1, Ordering::Relaxed);
+        if let Some(p) = &assignment.entry {
+            self.handoff_bytes.fetch_add(wire::handoff_bytes(p), Ordering::Relaxed);
+        }
+        Ok(Some(assignment))
+    }
+
+    /// Accept one shard result.  Success stores the shard's layers,
+    /// arms the successor's hand-off, and reports progress; failure
+    /// requeues the shard (bounded by [`MAX_SHARD_ATTEMPTS`]).
+    pub(crate) fn accept_result(&self, r: ShardResult) -> Result<Accepted> {
+        let mut inner = lock_recover(&self.inner);
+        if let Some(w) = inner.workers.get_mut(&r.worker) {
+            w.last_seen = Instant::now();
+            w.live = true;
+            if r.ok {
+                w.shards_done += 1;
+            }
+        }
+        let Some(job) = inner.job.as_mut() else {
+            bail!("no active fleet job (result for job {} shard {})", r.job, r.shard)
+        };
+        let corr = job.corr.clone();
+        let mut acc = Accepted {
+            job: job.id,
+            shard: r.shard,
+            worker: r.worker,
+            state_label: "stale",
+            layer_events: Vec::new(),
+            spans: Vec::new(),
+        };
+        if job.id != r.job {
+            return Ok(acc); // a previous job's straggler: drop
+        }
+        let staged = job.staged;
+        let n_blocks = job.n_blocks;
+        let Some(s) = job.shards.get_mut(r.shard) else {
+            bail!("job {} has no shard {}", r.job, r.shard)
+        };
+        if matches!(s.phase, ShardPhase::Done) {
+            return Ok(acc); // duplicate of a landed shard: bit-identical, drop
+        }
+        // Any defect in the result — reported failure, hand-off digest
+        // mismatch, wrong layer count, missing successor hand-off —
+        // requeues the shard rather than erroring: erroring would leave
+        // the lease stuck on a live worker, and re-execution is cheap
+        // and deterministic.  The attempt budget bounds the retries.
+        let span = 4 * (s.plan.hi - s.plan.lo);
+        let needs_exit = staged && s.plan.hi < n_blocks;
+        let defect = if !r.ok {
+            Some(r.error.clone().unwrap_or_else(|| "unspecified worker error".into()))
+        } else if s.expect_digest.is_some_and(|want| r.entry_digest != want) {
+            Some(format!(
+                "entry digest {:016x} != dispatched {:016x}",
+                r.entry_digest,
+                s.expect_digest.unwrap_or(0)
+            ))
+        } else if r.layers.len() != span {
+            Some(format!("returned {} layers, want {span}", r.layers.len()))
+        } else if needs_exit && r.exit.is_none() {
+            Some("missing the hand-off its successor needs".into())
+        } else {
+            None
+        };
+        if let Some(err) = defect {
+            s.phase = ShardPhase::Pending;
+            s.attempts += 1;
+            acc.state_label = "requeued";
+            if s.attempts >= MAX_SHARD_ATTEMPTS {
+                job.failed = Some(format!(
+                    "shard {} failed {} times, giving up (last: {err})",
+                    r.shard, s.attempts
+                ));
+            }
+            self.shards_requeued.fetch_add(1, Ordering::Relaxed);
+            self.cv.notify_all();
+            return Ok(acc);
+        }
+        s.layers = r.layers;
+        s.phase = ShardPhase::Done;
+        acc.state_label = "done";
+        if needs_exit {
+            if let Some(exit) = r.exit {
+                let digest = exit.digest();
+                if let Some(next) = job.shards.get_mut(r.shard + 1) {
+                    next.entry = Some(exit);
+                    next.expect_digest = Some(digest);
+                }
+            }
+        }
+        // progress events (completion order, like the local pool)
+        let total = job.total_layers;
+        let mut completed = job.completed_layers;
+        if let Some(s) = job.shards.get(r.shard) {
+            for ck in &s.layers {
+                acc.layer_events.push(LayerEvent {
+                    layer: ck.name.clone(),
+                    index: completed,
+                    total,
+                    obj: ck.obj,
+                });
+                completed += 1;
+            }
+        }
+        job.completed_layers = completed;
+        acc.spans = self.remap_spans(&corr, &r.spans);
+        self.cv.notify_all();
+        Ok(acc)
+    }
+
+    /// Graft worker-side spans into the coordinator's ID space: every
+    /// remote span gets a fresh ID above [`REMOTE_SPAN_BASE`], parents
+    /// are rewritten through the same map (unknown parents become
+    /// roots), and every span is re-tagged with the job's correlation
+    /// ID so `GET /jobs/:id/trace` returns one joined tree.
+    fn remap_spans(&self, corr: &str, spans: &[TraceEvent]) -> Vec<TraceEvent> {
+        if corr.is_empty() {
+            return Vec::new(); // ring slices are keyed by corr; nothing to file under
+        }
+        let mut map: BTreeMap<u64, u64> = BTreeMap::new();
+        for ev in spans {
+            map.insert(ev.span_id, self.next_span.fetch_add(1, Ordering::Relaxed));
+        }
+        let corr: Arc<str> = Arc::from(corr);
+        spans
+            .iter()
+            .map(|ev| TraceEvent {
+                span_id: map.get(&ev.span_id).copied().unwrap_or(0),
+                parent_id: map.get(&ev.parent_id).copied().unwrap_or(0),
+                corr_id: Some(corr.clone()),
+                name: ev.name,
+                fields: Vec::new(),
+                wall_ms: ev.wall_ms,
+                mono_us: ev.mono_us,
+                dur_us: ev.dur_us,
+            })
+            .collect()
+    }
+
+    /// Expire workers whose heartbeat lapsed and requeue their leased
+    /// shards.  Returns the indices of the requeued shards.
+    pub(crate) fn reap(&self) -> Vec<usize> {
+        let mut inner = lock_recover(&self.inner);
+        let timeout = self.heartbeat_timeout;
+        let mut dead: Vec<u64> = Vec::new();
+        for (&id, w) in inner.workers.iter_mut() {
+            if w.live && w.last_seen.elapsed() > timeout {
+                w.live = false;
+                dead.push(id);
+            }
+        }
+        if dead.is_empty() {
+            return Vec::new();
+        }
+        let mut requeued = Vec::new();
+        if let Some(job) = inner.job.as_mut() {
+            for (i, s) in job.shards.iter_mut().enumerate() {
+                let ShardPhase::Leased { worker } = s.phase else { continue };
+                if !dead.contains(&worker) {
+                    continue;
+                }
+                s.phase = ShardPhase::Pending;
+                s.attempts += 1;
+                requeued.push(i);
+                if s.attempts >= MAX_SHARD_ATTEMPTS {
+                    job.failed = Some(format!(
+                        "shard {i} lost {} workers, giving up",
+                        s.attempts
+                    ));
+                }
+            }
+        }
+        if !requeued.is_empty() {
+            self.shards_requeued.fetch_add(requeued.len(), Ordering::Relaxed);
+            self.cv.notify_all();
+        }
+        requeued
+    }
+
+    /// Install a freshly planned job (one at a time: the dispatcher is
+    /// single-threaded, mirroring the one-PruneSession-per-worker
+    /// invariant of the local path).
+    fn install_job(
+        &self,
+        id: JobId,
+        corr: &str,
+        spec: JobSpec,
+        n_blocks: usize,
+        total_layers: usize,
+        plans: Vec<ShardPlan>,
+        staged: bool,
+    ) {
+        let shards = plans
+            .into_iter()
+            .map(|plan| ShardState {
+                plan,
+                phase: ShardPhase::Pending,
+                attempts: 0,
+                entry: None,
+                expect_digest: None,
+                layers: Vec::new(),
+            })
+            .collect();
+        let mut inner = lock_recover(&self.inner);
+        inner.job = Some(ActiveJob {
+            id,
+            corr: corr.to_string(),
+            spec,
+            n_blocks,
+            staged,
+            total_layers,
+            completed_layers: 0,
+            shards,
+            failed: None,
+        });
+        self.cv.notify_all();
+    }
+
+    /// Block until something changes (a result landed, a reap fired),
+    /// then report `(all shards done, failure)`.
+    fn wait_progress(&self, dur: Duration) -> (bool, Option<String>) {
+        let inner = lock_recover(&self.inner);
+        let (inner, _timed_out) = wait_timeout_recover(&self.cv, inner, dur);
+        match &inner.job {
+            Some(j) => (j.done(), j.failed.clone()),
+            None => (false, Some("fleet job vanished mid-run".into())),
+        }
+    }
+
+    /// Tear down the active job, returning its shards' checkpoints in
+    /// shard (= model) order.
+    fn take_job(&self, id: JobId) -> Result<Vec<LayerCheckpoint>> {
+        let mut inner = lock_recover(&self.inner);
+        let job = inner.job.take().context("no active fleet job to collect")?;
+        ensure!(job.id == id, "active fleet job is {}, not {id}", job.id);
+        Ok(job.shards.into_iter().flat_map(|s| s.layers).collect())
+    }
+
+    fn clear_job(&self) {
+        lock_recover(&self.inner).job = None;
+    }
+
+    /// `GET /fleet` — registry + shard table snapshot.
+    pub fn status_json(&self) -> Json {
+        let inner = lock_recover(&self.inner);
+        let workers: Vec<Json> = inner
+            .workers
+            .iter()
+            .map(|(&id, w)| {
+                Json::obj(vec![
+                    ("id", Json::from(id as usize)),
+                    ("label", Json::from(w.label.as_str())),
+                    (
+                        "live",
+                        Json::from(w.live && w.last_seen.elapsed() <= self.heartbeat_timeout),
+                    ),
+                    ("shards_done", Json::from(w.shards_done)),
+                    ("last_seen_secs", Json::from(w.last_seen.elapsed().as_secs_f64())),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("workers", Json::Arr(workers)),
+            (
+                "workers_registered",
+                Json::from(self.workers_registered.load(Ordering::Relaxed)),
+            ),
+            (
+                "shards_dispatched",
+                Json::from(self.shards_dispatched.load(Ordering::Relaxed)),
+            ),
+            (
+                "shards_requeued",
+                Json::from(self.shards_requeued.load(Ordering::Relaxed)),
+            ),
+            ("handoff_bytes", Json::from(self.handoff_bytes.load(Ordering::Relaxed))),
+        ];
+        if let Some(job) = &inner.job {
+            let shards: Vec<Json> = job
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Json::obj(vec![
+                        ("shard", Json::from(i)),
+                        ("lo", Json::from(s.plan.lo)),
+                        ("hi", Json::from(s.plan.hi)),
+                        ("state", Json::from(s.phase.label())),
+                        ("attempts", Json::from(s.attempts)),
+                    ])
+                })
+                .collect();
+            fields.push((
+                "job",
+                Json::obj(vec![
+                    ("id", Json::from(job.id as usize)),
+                    ("staged", Json::from(job.staged)),
+                    ("shards", Json::Arr(shards)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+/// The coordinator's job thread: pops the public queue exactly like a
+/// local [`worker_loop`] would, but executes each job across the fleet.
+/// Runs until the queue shuts down and drains.
+///
+/// [`worker_loop`]: super::super::worker_loop
+pub(crate) fn dispatcher_loop(state: Arc<ServerState>, mut session: PruneSession) {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let Some(fleet) = state.fleet.clone() else { return };
+    let (mut hits_seen, mut misses_seen) = session.calib_stats();
+    while let Some((id, spec)) = state.queue.pop_blocking(0) {
+        state.metrics.busy_workers.fetch_add(1, Ordering::Relaxed);
+        let rec = state.queue.get(id);
+        let corr = rec.as_ref().map(|r| r.corr_id.clone()).unwrap_or_default();
+        if let Some(r) = &rec {
+            state.metrics.queue_wait.observe(r.queued_secs());
+        }
+        let _corr_guard = telemetry::with_correlation(&corr);
+        crate::info!("fleet dispatcher: job {id} starting ({})", spec.label());
+        if let Some(j) = &state.journal {
+            j.record_state(id, "running");
+        }
+        // local-fallback progress; fleet shards report theirs through
+        // the /fleet/shards/:id/result handler instead
+        let progress_state = state.clone();
+        session.on_progress(move |e| progress_state.queue.push_event(id, e.clone()));
+        // contain panics exactly like the local worker_loop: an unwound
+        // dispatcher would wedge every subsequent job in Queued forever
+        let outcome = {
+            let _sp = crate::span!("job", id = id, fleet = 1);
+            match catch_unwind(AssertUnwindSafe(|| {
+                run_fleet_job(&state, &fleet, &mut session, id, &spec, &corr)
+            })) {
+                Ok(res) => res,
+                Err(_) => {
+                    fleet.clear_job();
+                    Err(anyhow::anyhow!("fleet dispatcher panicked running job {id}"))
+                }
+            }
+        };
+        session.clear_progress();
+        let (hits, misses) = session.calib_stats();
+        state.metrics.calib_hits.fetch_add(hits - hits_seen, Ordering::Relaxed);
+        state.metrics.calib_misses.fetch_add(misses - misses_seen, Ordering::Relaxed);
+        (hits_seen, misses_seen) = (hits, misses);
+        match outcome {
+            Ok(res) => {
+                let summary = JobSummary::from_result(&res);
+                crate::info!(
+                    "fleet dispatcher: job {id} done in {:.2}s (Σ err {:.4e}, digest {})",
+                    summary.wall_seconds,
+                    summary.total_err,
+                    summary.mask_digest
+                );
+                state.metrics.jobs_done.fetch_add(1, Ordering::Relaxed);
+                state.metrics.job_wall.observe(summary.wall_seconds);
+                state
+                    .metrics
+                    .job_wall_ms
+                    .fetch_add((summary.wall_seconds * 1e3) as u64, Ordering::Relaxed);
+                state.metrics.fw_iters.fetch_add(summary.fw_iters, Ordering::Relaxed);
+                if summary.calib_policy.is_some() {
+                    state.metrics.jobs_propagated.fetch_add(1, Ordering::Relaxed);
+                }
+                if let Some(b) = summary.peak_gram_bytes {
+                    state.metrics.peak_gram_bytes.fetch_max(b, Ordering::Relaxed);
+                }
+                match super::super::compile_for_serving(&mut session, &res) {
+                    Ok(entry) => {
+                        state.compiled.insert(id, entry);
+                    }
+                    Err(e) => {
+                        crate::warnlog!("fleet job {id}: serving compile failed: {e:#}");
+                    }
+                }
+                state.queue.finish(id, Ok(summary));
+                if let Some(j) = &state.journal {
+                    j.record_state(id, "done");
+                }
+            }
+            Err(e) => {
+                crate::warnlog!("fleet dispatcher: job {id} failed: {e:#}");
+                fleet.clear_job();
+                state.metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                state.queue.finish(id, Err(format!("{e:#}")));
+                if let Some(j) = &state.journal {
+                    j.record_state(id, "failed");
+                }
+            }
+        }
+        state.metrics.busy_workers.fetch_sub(1, Ordering::Relaxed);
+    }
+    crate::debuglog!("fleet dispatcher: exiting");
+}
+
+/// Execute one job across the fleet (or locally, when no worker is
+/// live within the heartbeat window or the backend is not native).
+fn run_fleet_job(
+    state: &Arc<ServerState>,
+    fleet: &Arc<FleetState>,
+    session: &mut PruneSession,
+    id: JobId,
+    spec: &JobSpec,
+    corr: &str,
+) -> Result<JobResult> {
+    let t0 = Instant::now();
+    // wait out the registration window, then degrade gracefully
+    let wait_until = Instant::now() + fleet.heartbeat_timeout;
+    while fleet.live_workers() == 0 {
+        if Instant::now() >= wait_until {
+            crate::info!("fleet: no live workers; job {id} runs locally on the coordinator");
+            return session.execute(spec);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    if spec.backend != Backend::Native {
+        crate::info!("fleet: {:?} backend is coordinator-local; job {id} runs locally", spec.backend);
+        return session.execute(spec);
+    }
+
+    // plan: contiguous block shards, one per live worker (clamped)
+    let staged = spec.calib_policy.is_propagated();
+    let (layers, n_blocks) = {
+        let model = session.model(&spec.model)?;
+        // fail fast on an unresolvable allocation (OWL under staging)
+        // before any shard is dispatched
+        if staged {
+            spec.allocation.resolve(model, None)?;
+        }
+        (model.cfg.layers(), model.cfg.n_layers)
+    };
+    let n_shards = fleet.live_workers().clamp(1, n_blocks.max(1));
+    let plans = plan_shards(&layers, n_shards);
+    ensure!(!plans.is_empty(), "job {id} has no blocks to shard");
+    let n_planned = plans.len();
+    fleet.install_job(id, corr, spec.clone(), n_blocks, layers.len(), plans, staged);
+    if let Some(j) = &state.journal {
+        for i in 0..n_planned {
+            j.record_shard(id, i, "planned", 0);
+        }
+    }
+    crate::info!(
+        "fleet: job {id} planned as {n_planned} shard(s) across {} live worker(s){}",
+        fleet.live_workers(),
+        if staged { " (staged pipeline)" } else { "" }
+    );
+
+    // collect: workers pull shards via the API handlers; this thread
+    // only reaps lapsed heartbeats and waits for the table to fill
+    loop {
+        let (done, failed) = fleet.wait_progress(Duration::from_millis(250));
+        if let Some(msg) = failed {
+            fleet.clear_job();
+            bail!("fleet job {id} failed: {msg}");
+        }
+        if done {
+            break;
+        }
+        let requeued = fleet.reap();
+        if !requeued.is_empty() {
+            crate::warnlog!(
+                "fleet: requeued shard(s) {requeued:?} from lapsed worker(s) on job {id}"
+            );
+            if let Some(j) = &state.journal {
+                for &i in &requeued {
+                    j.record_shard(id, i, "requeued", 0);
+                }
+            }
+        }
+    }
+
+    // assemble: checkpoints → outputs → PruneResult, identical to the
+    // crash-recovery resume path (bit-exact by construction)
+    let checkpoints = fleet.take_job(id)?;
+    ensure!(
+        checkpoints.len() == layers.len(),
+        "fleet job {id} assembled {} layers, want {}",
+        checkpoints.len(),
+        layers.len()
+    );
+    let outputs: Vec<Result<_>> = checkpoints
+        .into_iter()
+        .map(|ck| {
+            let l = layers
+                .get(ck.index)
+                .with_context(|| format!("checkpoint index {} out of range", ck.index))?;
+            ensure!(
+                l.name == ck.name,
+                "checkpoint {} landed at index {} ({})",
+                ck.name,
+                ck.index,
+                l.name
+            );
+            Ok((l.clone(), ck.to_output()?))
+        })
+        .collect();
+    let mut prune = collect_outputs(outputs, t0)?;
+    if staged {
+        // calibration-memory accounting happened on the workers; the
+        // coordinator records the policy + block walk (peak bytes are
+        // per-worker O(shard) and not aggregated here)
+        prune.staged = Some(StagedStats {
+            policy: spec.calib_policy,
+            blocks: n_blocks,
+            peak_gram_bytes: 0,
+            total_gram_bytes: layers.iter().map(|l| l.d_in * l.d_in * 4).sum(),
+            peak_live_gram_sets: 0,
+        });
+    }
+
+    // eval tail, mirroring PruneSession::execute
+    let mut pruned_sparsity = None;
+    let mut eval = None;
+    if let Some(espec) = spec.eval {
+        let _sp = crate::span!("io", model = &spec.model);
+        let pruned = {
+            let model = session.model(&spec.model)?;
+            prune.apply(model)?
+        };
+        pruned_sparsity = Some(pruned.pruned_sparsity());
+        eval = Some(session.evaluate(&pruned, &espec)?);
+    }
+    Ok(JobResult { spec: spec.clone(), prune, pruned_sparsity, eval })
+}

@@ -1,0 +1,35 @@
+//! Distributed pruning fleet: shard one job across N workers.
+//!
+//! The layer-wise FW objective is block-decomposable, so a pruning job
+//! splits naturally at transformer-block granularity.  This module
+//! turns that observation into a coordinator/worker topology layered
+//! on the existing HTTP/JSON server — no new transport, no new job
+//! API:
+//!
+//! ```text
+//!   client ── POST /jobs ──▶ coordinator (sparsefw serve --coordinator)
+//!                               │  plan_shards: contiguous block ranges
+//!                               │  pull-based LPT dispatch + heartbeats
+//!              ┌────────────────┼─────────────────┐
+//!              ▼                ▼                  ▼
+//!          worker 0         worker 1     …    worker N-1
+//!        (serve --worker, PruneSession::execute_shard)
+//!              │   staged hand-off: exit hiddens of shard i are
+//!              └──▶ the entry of shard i+1 (EmbedPrefix, digest-checked)
+//! ```
+//!
+//! Submodules:
+//! - [`wire`] — JSON codecs for assignments, results, hidden-state
+//!   hand-offs, and trace spans (all symmetric reader/writer pairs).
+//! - [`coordinator`] — shard table, worker registry, reaping/requeue,
+//!   and the dispatcher thread that assembles shard results into a
+//!   [`JobResult`](crate::coordinator::JobResult) bit-identical to a
+//!   single-node run.
+//! - [`worker`] — the poll–execute–report loop.
+
+pub mod coordinator;
+pub mod wire;
+pub mod worker;
+
+pub use coordinator::{FleetState, MAX_SHARD_ATTEMPTS};
+pub use worker::{run_worker, WorkerOptions};

@@ -1,0 +1,367 @@
+//! Wire formats for the fleet protocol.
+//!
+//! Everything here rides the same JSON-over-HTTP layer as the public
+//! job API; the only new demand is *bit-exactness*.  Staged calibration
+//! hands hidden states from one shard to its successor, and the fleet's
+//! acceptance bar is a [`JobSummary::mask_digest`] identical to a
+//! single-node run — so floats travel as exact little-endian f32 bit
+//! patterns in hex (the journal's checkpoint encoding, proven
+//! bit-identical by the crash-recovery suite), never as decimal JSON
+//! numbers.  Hand-offs additionally carry their [`EmbedPrefix::digest`]
+//! and the decoder verifies it, so a corrupted or truncated transfer
+//! fails loudly at the boundary instead of silently skewing every
+//! downstream gram.
+//!
+//! Shard results ship their layers as [`LayerCheckpoint`]s (reusing the
+//! journal codec) plus the worker-side trace spans, so the coordinator
+//! can graft remote spans into its own ring and `sparsefw trace --job`
+//! shows one tree for a fleet job.
+//!
+//! [`JobSummary::mask_digest`]: crate::server::queue::JobSummary
+
+use anyhow::{ensure, Context, Result};
+
+use crate::calib::EmbedPrefix;
+use crate::coordinator::JobSpec;
+use crate::server::journal::{f32s_to_hex, hex_to_f32s, parse_hex_u64, u64_hex, LayerCheckpoint};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::telemetry::TraceEvent;
+
+// ---------------------------------------------------------------------------
+// Matrices + hidden-state hand-off
+// ---------------------------------------------------------------------------
+
+pub(crate) fn mat_to_json(m: &Mat) -> Json {
+    Json::obj(vec![
+        ("rows", Json::from(m.rows)),
+        ("cols", Json::from(m.cols)),
+        ("data_hex", Json::from(f32s_to_hex(&m.data))),
+    ])
+}
+
+pub(crate) fn mat_from_json(j: &Json) -> Result<Mat> {
+    let rows = j.at(&["rows"]).as_usize().context("mat missing `rows`")?;
+    let cols = j.at(&["cols"]).as_usize().context("mat missing `cols`")?;
+    let data =
+        hex_to_f32s(j.at(&["data_hex"]).as_str().context("mat missing `data_hex`")?)?;
+    ensure!(
+        data.len() == rows * cols,
+        "mat payload has {} f32s, want {rows}×{cols}",
+        data.len()
+    );
+    let mut m = Mat::zeros(rows, cols);
+    m.data.copy_from_slice(&data);
+    Ok(m)
+}
+
+/// Serialize a staged hand-off: the predecessor shard's exit hiddens
+/// plus their digest (the decoder re-derives and verifies it).
+pub(crate) fn handoff_to_json(p: &EmbedPrefix) -> Json {
+    Json::obj(vec![
+        ("seq_len", Json::from(p.seq_len())),
+        ("hiddens", Json::Arr(p.hiddens().iter().map(mat_to_json).collect())),
+        ("digest", Json::from(u64_hex(p.digest()))),
+    ])
+}
+
+pub(crate) fn handoff_from_json(j: &Json) -> Result<EmbedPrefix> {
+    let seq_len = j.at(&["seq_len"]).as_usize().context("hand-off missing `seq_len`")?;
+    let hiddens: Vec<Mat> = j
+        .at(&["hiddens"])
+        .as_arr()
+        .context("hand-off missing `hiddens`")?
+        .iter()
+        .map(mat_from_json)
+        .collect::<Result<_>>()?;
+    let p = EmbedPrefix::from_parts(hiddens, seq_len);
+    let want =
+        parse_hex_u64(j.at(&["digest"]).as_str().context("hand-off missing `digest`")?)?;
+    ensure!(
+        p.digest() == want,
+        "hand-off digest mismatch: decoded {:016x}, sender claimed {want:016x}",
+        p.digest()
+    );
+    Ok(p)
+}
+
+/// Raw f32 payload size of a hand-off (feeds the
+/// `sparsefw_fleet_handoff_bytes_total` counter).
+pub(crate) fn handoff_bytes(p: &EmbedPrefix) -> usize {
+    p.hiddens().iter().map(|m| m.data.len() * 4).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Trace spans
+// ---------------------------------------------------------------------------
+
+/// Span names the fleet ships across the wire.  [`TraceEvent::name`] is
+/// `&'static str` by construction, so decoded names are interned
+/// against this set; anything unrecognized (a future worker version)
+/// lands as `"remote"` rather than being dropped.
+const SPAN_NAMES: &[&str] =
+    &["job", "shard", "calib", "gram", "fw", "refine", "io", "handoff", "remote"];
+
+fn intern_span_name(s: &str) -> &'static str {
+    SPAN_NAMES.iter().find(|n| **n == s).copied().unwrap_or("remote")
+}
+
+pub(crate) fn span_to_json(ev: &TraceEvent) -> Json {
+    Json::obj(vec![
+        ("span", Json::from(u64_hex(ev.span_id))),
+        ("parent", Json::from(u64_hex(ev.parent_id))),
+        ("name", Json::from(ev.name)),
+        ("wall_ms", Json::from(ev.wall_ms as usize)),
+        ("mono_us", Json::from(ev.mono_us as usize)),
+        ("dur_us", Json::from(ev.dur_us as usize)),
+    ])
+}
+
+/// Decode a worker-side span.  The correlation ID and structured fields
+/// are intentionally not shipped: the coordinator re-tags every grafted
+/// span with the job's own correlation ID when it remaps span IDs.
+pub(crate) fn span_from_json(j: &Json) -> Result<TraceEvent> {
+    Ok(TraceEvent {
+        span_id: parse_hex_u64(
+            j.at(&["span"]).as_str().context("span record missing `span`")?,
+        )?,
+        parent_id: parse_hex_u64(
+            j.at(&["parent"]).as_str().context("span record missing `parent`")?,
+        )?,
+        corr_id: None,
+        name: intern_span_name(
+            j.at(&["name"]).as_str().context("span record missing `name`")?,
+        ),
+        fields: Vec::new(),
+        wall_ms: j.at(&["wall_ms"]).as_usize().unwrap_or(0) as u64,
+        mono_us: j.at(&["mono_us"]).as_usize().unwrap_or(0) as u64,
+        dur_us: j.at(&["dur_us"]).as_usize().unwrap_or(0) as u64,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shard assignment (coordinator → worker)
+// ---------------------------------------------------------------------------
+
+/// One leased unit of fleet work: blocks `lo..hi` of `spec`, plus the
+/// predecessor's exit hiddens when the job runs staged calibration and
+/// this is not the first shard.
+pub struct ShardAssignment {
+    pub job: u64,
+    /// Shard index within the job's plan (also the lease identity —
+    /// results are accepted by `(job, shard)`).
+    pub shard: usize,
+    /// The job's correlation ID; the worker executes under it so its
+    /// spans join the coordinator's trace tree.
+    pub corr: String,
+    pub lo: usize,
+    pub hi: usize,
+    /// The *job's* total block count (the worker's final `advance` is
+    /// skipped only when `hi == n_blocks`).
+    pub n_blocks: usize,
+    pub spec: JobSpec,
+    /// Staged entry hiddens; `None` for dense shards and for shard 0
+    /// (which embeds the prefix locally, same as single-node).
+    pub entry: Option<EmbedPrefix>,
+}
+
+pub(crate) fn assignment_to_json(a: &ShardAssignment) -> Json {
+    let mut fields = vec![
+        ("job", Json::from(a.job as usize)),
+        ("shard", Json::from(a.shard)),
+        ("corr", Json::from(a.corr.as_str())),
+        ("lo", Json::from(a.lo)),
+        ("hi", Json::from(a.hi)),
+        ("n_blocks", Json::from(a.n_blocks)),
+        ("spec", a.spec.to_json()),
+    ];
+    if let Some(p) = &a.entry {
+        fields.push(("entry", handoff_to_json(p)));
+    }
+    Json::obj(fields)
+}
+
+pub(crate) fn assignment_from_json(j: &Json) -> Result<ShardAssignment> {
+    let entry = match j.get("entry") {
+        Some(e) => Some(handoff_from_json(e)?),
+        None => None,
+    };
+    Ok(ShardAssignment {
+        job: j.at(&["job"]).as_usize().context("assignment missing `job`")? as u64,
+        shard: j.at(&["shard"]).as_usize().context("assignment missing `shard`")?,
+        corr: j.at(&["corr"]).as_str().unwrap_or_default().to_string(),
+        lo: j.at(&["lo"]).as_usize().context("assignment missing `lo`")?,
+        hi: j.at(&["hi"]).as_usize().context("assignment missing `hi`")?,
+        n_blocks: j.at(&["n_blocks"]).as_usize().context("assignment missing `n_blocks`")?,
+        spec: JobSpec::from_json(j.at(&["spec"])).context("assignment spec")?,
+        entry,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shard result (worker → coordinator)
+// ---------------------------------------------------------------------------
+
+/// What a worker reports back for one leased shard.
+pub struct ShardResult {
+    pub worker: u64,
+    pub job: u64,
+    pub shard: usize,
+    pub ok: bool,
+    pub error: Option<String>,
+    /// Digest of the activations the shard started from — the
+    /// coordinator cross-checks it against the digest of what it
+    /// dispatched, closing the loop on the staged hand-off.
+    pub entry_digest: u64,
+    /// The shard's pruned layers, model order (journal codec: exact
+    /// mask bits + f32 weight bit patterns).
+    pub layers: Vec<LayerCheckpoint>,
+    /// Exit hiddens for the successor shard (staged, `hi < n_blocks`).
+    pub exit: Option<EmbedPrefix>,
+    /// Worker-side trace spans captured during execution.
+    pub spans: Vec<TraceEvent>,
+}
+
+pub(crate) fn result_to_json(r: &ShardResult) -> Json {
+    let mut fields = vec![
+        ("worker", Json::from(r.worker as usize)),
+        ("job", Json::from(r.job as usize)),
+        ("shard", Json::from(r.shard)),
+        ("ok", Json::from(r.ok)),
+        ("entry_digest", Json::from(u64_hex(r.entry_digest))),
+        ("layers", Json::Arr(r.layers.iter().map(LayerCheckpoint::to_json).collect())),
+        ("spans", Json::Arr(r.spans.iter().map(span_to_json).collect())),
+    ];
+    if let Some(e) = &r.error {
+        fields.push(("error", Json::from(e.as_str())));
+    }
+    if let Some(p) = &r.exit {
+        fields.push(("exit", handoff_to_json(p)));
+    }
+    Json::obj(fields)
+}
+
+pub(crate) fn result_from_json(j: &Json) -> Result<ShardResult> {
+    let layers: Vec<LayerCheckpoint> = match j.at(&["layers"]).as_arr() {
+        Some(a) => a.iter().map(LayerCheckpoint::from_json).collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    let spans: Vec<TraceEvent> = match j.at(&["spans"]).as_arr() {
+        Some(a) => a.iter().map(span_from_json).collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    let exit = match j.get("exit") {
+        Some(e) => Some(handoff_from_json(e)?),
+        None => None,
+    };
+    Ok(ShardResult {
+        worker: j.at(&["worker"]).as_usize().unwrap_or(0) as u64,
+        job: j.at(&["job"]).as_usize().context("shard result missing `job`")? as u64,
+        shard: j.at(&["shard"]).as_usize().context("shard result missing `shard`")?,
+        ok: j.at(&["ok"]).as_bool().unwrap_or(false),
+        error: j.at(&["error"]).as_str().map(str::to_string),
+        entry_digest: parse_hex_u64(j.at(&["entry_digest"]).as_str().unwrap_or("0"))?,
+        layers,
+        exit,
+        spans,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, seed: f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for (i, x) in m.data.iter_mut().enumerate() {
+            // non-trivial bit patterns, including subnormals and exact
+            // decimals that would not survive a decimal float round-trip
+            *x = (seed + i as f32 * 0.3).sin() * 1e-3 + f32::MIN_POSITIVE * i as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn handoff_roundtrip_is_bit_exact() {
+        let p = EmbedPrefix::from_parts(vec![mat(4, 6, 0.1), mat(4, 6, 2.7)], 4);
+        let d = p.digest();
+        let j = handoff_to_json(&p);
+        // through a full text round-trip, like the real wire
+        let text = crate::util::json::to_string(&j);
+        let back = handoff_from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.digest(), d);
+        for (a, b) in p.hiddens().iter().zip(back.hiddens()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn handoff_decoder_rejects_corruption() {
+        let p = EmbedPrefix::from_parts(vec![mat(3, 3, 1.0)], 3);
+        // tamper with the claimed digest: the decoder must refuse
+        let mut j = handoff_to_json(&p);
+        if let Json::Obj(m) = &mut j {
+            m.insert("digest".into(), Json::from(u64_hex(0xdeadbeef)));
+        }
+        let err = handoff_from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("digest mismatch"), "{err:#}");
+        // and a truncated payload fails the shape check
+        let mut j = handoff_to_json(&p);
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(hs)) = m.get_mut("hiddens") {
+                if let Some(Json::Obj(h0)) = hs.first_mut() {
+                    let short = f32s_to_hex(&[1.0f32; 3]);
+                    h0.insert("data_hex".into(), Json::from(short));
+                }
+            }
+        }
+        assert!(handoff_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn assignment_roundtrip() {
+        let a = ShardAssignment {
+            job: 12,
+            shard: 2,
+            corr: "c-abc".into(),
+            lo: 4,
+            hi: 8,
+            n_blocks: 12,
+            spec: JobSpec::default(),
+            entry: Some(EmbedPrefix::from_parts(vec![mat(2, 4, 0.5)], 2)),
+        };
+        let text = crate::util::json::to_string(&assignment_to_json(&a));
+        let b = assignment_from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!((b.job, b.shard, b.lo, b.hi, b.n_blocks), (12, 2, 4, 8, 12));
+        assert_eq!(b.corr, "c-abc");
+        assert_eq!(b.spec.model, a.spec.model);
+        assert_eq!(b.entry.unwrap().digest(), a.entry.unwrap().digest());
+    }
+
+    #[test]
+    fn span_names_intern_to_statics() {
+        let ev = TraceEvent {
+            span_id: 7,
+            parent_id: 3,
+            corr_id: None,
+            name: "fw",
+            fields: vec![("layer", "blocks.0.wo".into())],
+            wall_ms: 1,
+            mono_us: 2,
+            dur_us: 3,
+        };
+        let back = span_from_json(&span_to_json(&ev)).unwrap();
+        assert_eq!(back.name, "fw");
+        assert_eq!((back.span_id, back.parent_id, back.dur_us), (7, 3, 3));
+        // unknown names land as "remote", not an error
+        let j = Json::obj(vec![
+            ("span", Json::from(u64_hex(1))),
+            ("parent", Json::from(u64_hex(0))),
+            ("name", Json::from("mystery")),
+            ("wall_ms", Json::from(0usize)),
+            ("mono_us", Json::from(0usize)),
+            ("dur_us", Json::from(0usize)),
+        ]);
+        assert_eq!(span_from_json(&j).unwrap().name, "remote");
+    }
+}

@@ -1,0 +1,223 @@
+//! Worker side of the pruning fleet (`sparsefw serve --worker`).
+//!
+//! A worker owns one [`PruneSession`] and no listener: it registers
+//! with the coordinator, then pulls work over the same blocking
+//! [`Client`] the CLI uses — `POST /fleet/workers/:id/poll` leases a
+//! shard, [`PruneSession::execute_shard`] runs it on the standard
+//! per-layer drivers, and `POST /fleet/shards/:id/result` ships the
+//! layers back as journal checkpoints (the bit-exact codec).  While a
+//! shard runs, a sidecar thread keeps heartbeating (`{busy: true}`)
+//! so a long FW solve is not mistaken for a dead worker.
+//!
+//! The worker records its trace spans into a private [`RingSink`]
+//! under the job's correlation ID and ships them with the result; the
+//! coordinator grafts them into its own ring so `sparsefw trace --job`
+//! shows one tree spanning both processes.
+//!
+//! Failure is the coordinator's problem by design: a worker that dies
+//! mid-shard simply stops heartbeating and its lease requeues.  The
+//! only local failure policy is a bounded retry on coordinator
+//! round-trips — after [`MAX_CONSECUTIVE_FAILURES`] straight network
+//! errors the worker exits instead of spinning forever.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::PruneSession;
+use crate::server::journal::LayerCheckpoint;
+use crate::server::Client;
+use crate::util::json::Json;
+use crate::util::telemetry::{self, RingSink, TraceSink};
+
+use super::wire::{self, ShardAssignment, ShardResult};
+
+/// Consecutive failed coordinator round-trips before the worker gives
+/// up and exits (a dead coordinator must not leave workers spinning).
+pub const MAX_CONSECUTIVE_FAILURES: usize = 30;
+
+/// How a worker process runs.
+pub struct WorkerOptions {
+    /// Coordinator address (`host:port`).
+    pub coordinator: String,
+    /// Bearer token, when the coordinator runs with `--auth-token`.
+    pub token: Option<String>,
+    /// Human-readable label shown in `GET /fleet`.
+    pub label: String,
+    /// Idle poll / heartbeat interval.
+    pub poll_ms: u64,
+    /// Cooperative shutdown flag (tests; the CLI runs until killed).
+    pub stop: Arc<AtomicBool>,
+    /// Test hook: on taking lease number N (0-based), exit without
+    /// reporting or heartbeating — indistinguishable from a worker
+    /// SIGKILLed mid-shard, which is exactly what it simulates.
+    pub abscond_on_lease: Option<usize>,
+}
+
+impl WorkerOptions {
+    pub fn new(coordinator: impl Into<String>, label: impl Into<String>) -> Self {
+        Self {
+            coordinator: coordinator.into(),
+            token: None,
+            label: label.into(),
+            poll_ms: 100,
+            stop: Arc::new(AtomicBool::new(false)),
+            abscond_on_lease: None,
+        }
+    }
+
+    fn client(&self) -> Client {
+        let mut c = Client::new(self.coordinator.clone());
+        if let Some(t) = &self.token {
+            c = c.with_token(t.clone());
+        }
+        c
+    }
+}
+
+/// Register, then poll-execute-report until `stop` is set or the
+/// coordinator stays unreachable past the retry budget.
+pub fn run_worker(opts: &WorkerOptions, mut session: PruneSession) -> Result<()> {
+    let c = opts.client();
+    let reg = c
+        .post(
+            "/fleet/workers",
+            &Json::obj(vec![("label", Json::from(opts.label.as_str()))]),
+        )
+        .context("registering with the fleet coordinator")?;
+    let id = reg
+        .at(&["worker"])
+        .as_usize()
+        .context("register response carries no worker id")? as u64;
+    crate::info!(
+        "fleet worker {id} ({}): registered with coordinator {}",
+        opts.label,
+        opts.coordinator
+    );
+    let poll_path = format!("/fleet/workers/{id}/poll");
+    let mut failures = 0usize;
+    let mut leases = 0usize;
+    while !opts.stop.load(Ordering::Relaxed) {
+        let resp = match c.post(&poll_path, &Json::obj(vec![("busy", Json::from(false))])) {
+            Ok(v) => {
+                failures = 0;
+                v
+            }
+            Err(e) => {
+                failures += 1;
+                if failures >= MAX_CONSECUTIVE_FAILURES {
+                    return Err(e.context(format!(
+                        "fleet worker {id}: coordinator unreachable \
+                         ({failures} consecutive poll failures)"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(opts.poll_ms));
+                continue;
+            }
+        };
+        let Some(aj) = resp.get("assignment") else {
+            std::thread::sleep(Duration::from_millis(opts.poll_ms));
+            continue;
+        };
+        let a = wire::assignment_from_json(aj).context("decoding shard assignment")?;
+        if opts.abscond_on_lease == Some(leases) {
+            crate::warnlog!(
+                "fleet worker {id}: absconding with job {} shard {} (test hook)",
+                a.job,
+                a.shard
+            );
+            return Ok(());
+        }
+        leases += 1;
+        crate::info!(
+            "fleet worker {id}: leased job {} shard {} (blocks {}..{})",
+            a.job,
+            a.shard,
+            a.lo,
+            a.hi
+        );
+        // heartbeat sidecar: `{busy: true}` refreshes the lease without
+        // requesting work, so a slow shard never looks like a death
+        let done = Arc::new(AtomicBool::new(false));
+        let hb = {
+            let done = done.clone();
+            let hb_client = opts.client();
+            let path = poll_path.clone();
+            let interval = Duration::from_millis(opts.poll_ms.max(1));
+            std::thread::spawn(move || {
+                while !done.load(Ordering::Relaxed) {
+                    // best-effort: a missed beat just ages the lease
+                    let _ = hb_client.post(&path, &Json::obj(vec![("busy", Json::from(true))]));
+                    std::thread::sleep(interval);
+                }
+            })
+        };
+        let result = execute_assignment(id, &a, &mut session);
+        done.store(true, Ordering::Relaxed);
+        let _ = hb.join();
+        let path = format!("/fleet/shards/{}/result", a.shard);
+        match c.post(&path, &wire::result_to_json(&result)) {
+            Ok(v) => crate::info!(
+                "fleet worker {id}: job {} shard {} reported ({})",
+                a.job,
+                a.shard,
+                v.at(&["state"]).as_str().unwrap_or("?")
+            ),
+            Err(e) => crate::warnlog!(
+                "fleet worker {id}: reporting job {} shard {} failed: {e:#} \
+                 (coordinator will requeue it)",
+                a.job,
+                a.shard
+            ),
+        }
+    }
+    crate::info!("fleet worker {id}: stopping");
+    Ok(())
+}
+
+/// Run one leased shard and package the outcome — including the spans
+/// it traced — as a wire [`ShardResult`].  Never errors: a failed
+/// shard becomes an `ok: false` result the coordinator requeues.
+fn execute_assignment(worker: u64, a: &ShardAssignment, session: &mut PruneSession) -> ShardResult {
+    let ring = Arc::new(RingSink::new(2048, 4));
+    let sink: Arc<dyn TraceSink> = ring.clone();
+    telemetry::add_sink(sink.clone());
+    let outcome = {
+        let _corr = telemetry::with_correlation(&a.corr);
+        let _sp = crate::span!("shard", job = a.job, shard = a.shard, lo = a.lo, hi = a.hi);
+        session.execute_shard(&a.spec, a.lo, a.hi, a.entry.clone())
+    };
+    telemetry::remove_sink(&sink);
+    let spans = ring.events_for(&a.corr);
+    match outcome {
+        Ok(out) => ShardResult {
+            worker,
+            job: a.job,
+            shard: a.shard,
+            ok: true,
+            error: None,
+            entry_digest: out.entry_digest,
+            layers: out
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(i, (info, o))| LayerCheckpoint::from_output(4 * a.lo + i, &info.name, o))
+                .collect(),
+            exit: out.exit,
+            spans,
+        },
+        Err(e) => ShardResult {
+            worker,
+            job: a.job,
+            shard: a.shard,
+            ok: false,
+            error: Some(format!("{e:#}")),
+            entry_digest: 0,
+            layers: Vec::new(),
+            exit: None,
+            spans,
+        },
+    }
+}

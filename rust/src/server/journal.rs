@@ -54,7 +54,7 @@ pub const JOURNAL_FILE: &str = "jobs.ndjson";
 // Hex + checksum primitives
 // ---------------------------------------------------------------------------
 
-fn bytes_to_hex(bytes: &[u8]) -> String {
+pub(crate) fn bytes_to_hex(bytes: &[u8]) -> String {
     let mut s = String::with_capacity(bytes.len() * 2);
     for b in bytes {
         for nib in [b >> 4, b & 0xf] {
@@ -64,7 +64,7 @@ fn bytes_to_hex(bytes: &[u8]) -> String {
     s
 }
 
-fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
+pub(crate) fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
     ensure!(s.len() % 2 == 0, "odd-length hex string");
     let mut out = Vec::with_capacity(s.len() / 2);
     let mut hi: Option<u8> = None;
@@ -78,11 +78,11 @@ fn hex_to_bytes(s: &str) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-fn u64_hex(x: u64) -> String {
+pub(crate) fn u64_hex(x: u64) -> String {
     format!("{x:016x}")
 }
 
-fn parse_hex_u64(s: &str) -> Result<u64> {
+pub(crate) fn parse_hex_u64(s: &str) -> Result<u64> {
     u64::from_str_radix(s, 16).with_context(|| format!("bad hex u64 `{s}`"))
 }
 
@@ -155,7 +155,7 @@ fn unpack_mask(bits: &[u8], rows: usize, cols: usize) -> Result<Mat> {
     Ok(m)
 }
 
-fn f32s_to_hex(xs: &[f32]) -> String {
+pub(crate) fn f32s_to_hex(xs: &[f32]) -> String {
     let mut bytes = Vec::with_capacity(xs.len() * 4);
     for x in xs {
         bytes.extend_from_slice(&x.to_le_bytes());
@@ -163,7 +163,7 @@ fn f32s_to_hex(xs: &[f32]) -> String {
     bytes_to_hex(&bytes)
 }
 
-fn hex_to_f32s(s: &str) -> Result<Vec<f32>> {
+pub(crate) fn hex_to_f32s(s: &str) -> Result<Vec<f32>> {
     let bytes = hex_to_bytes(s)?;
     ensure!(bytes.len() % 4 == 0, "f32 hex string not a multiple of 4 bytes");
     let mut out = Vec::with_capacity(bytes.len() / 4);
@@ -251,7 +251,7 @@ impl LayerCheckpoint {
         })
     }
 
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         let mut fields = vec![
             ("index", Json::from(self.index)),
             ("name", Json::from(self.name.as_str())),
@@ -273,7 +273,7 @@ impl LayerCheckpoint {
         Json::obj(fields)
     }
 
-    fn from_json(j: &Json) -> Result<LayerCheckpoint> {
+    pub(crate) fn from_json(j: &Json) -> Result<LayerCheckpoint> {
         let name = j
             .at(&["name"])
             .as_str()
@@ -635,6 +635,22 @@ impl Journal {
         ]));
     }
 
+    /// Record a fleet shard transition (`dispatched`, `done`,
+    /// `requeued`, `failed`) with the worker it was leased to.  Replay
+    /// ignores these lines (job-level state drives requeueing); they
+    /// exist so a restarted coordinator — and an operator reading the
+    /// journal — can reconstruct which worker held which blocks when.
+    pub fn record_shard(&self, id: u64, shard: usize, state: &str, worker: u64) {
+        self.append(&Json::obj(vec![
+            ("ev", Json::from("shard")),
+            ("id", Json::from(id as usize)),
+            ("shard", Json::from(shard)),
+            ("state", Json::from(state)),
+            ("worker", Json::from(worker as usize)),
+            ("ts_ms", Json::Num(now_ms() as f64)),
+        ]));
+    }
+
     /// Record a state transition (`running`, `done`, `failed`,
     /// `cancelled`).
     pub fn record_state(&self, id: u64, state: &str) {
@@ -835,6 +851,10 @@ mod tests {
             j.record_state(1, "running");
             j.record_state(1, "done");
             j.record_state(2, "running"); // crashed mid-run
+            // fleet shard lines are observability, not job state: they
+            // must not resurrect job 1 or finish job 2
+            j.record_shard(1, 0, "done", 7);
+            j.record_shard(2, 1, "dispatched", 9);
         }
         // a torn final line must not break replay
         {

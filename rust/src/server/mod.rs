@@ -18,6 +18,10 @@
 //!   `POST /shutdown`.
 //! * [`client`] — a small blocking [`client::Client`] used by the CLI
 //!   (`sparsefw submit/status/shutdown`), examples, and tests.
+//! * [`fleet`] — the distributed tier: `serve --coordinator` shards
+//!   each job across `serve --worker` processes at block granularity
+//!   with staged hidden-state hand-off (same public job API, same
+//!   bit-exact results).
 //!
 //! Each worker thread owns one [`PruneSession`] over the shared
 //! workspace, so repeated jobs hit the session's model cache and
@@ -44,6 +48,7 @@
 
 pub mod api;
 pub mod client;
+pub mod fleet;
 pub mod http;
 pub mod journal;
 pub mod queue;
@@ -107,6 +112,18 @@ pub struct ServerConfig {
     /// Compiled serving models retained in the LRU [`CompiledCache`]
     /// (`serve --compiled-cache N`).
     pub compiled_cache_cap: usize,
+    /// Bearer token required on every mutating route (`serve
+    /// --auth-token` / `SPARSEFW_AUTH_TOKEN`); `None` = open server.
+    pub auth_token: Option<String>,
+    /// Run as a fleet coordinator (`serve --coordinator`): jobs are
+    /// sharded across registered worker processes instead of local
+    /// worker threads (see [`fleet`]).
+    pub coordinator: bool,
+    /// Fleet heartbeat window in seconds: a worker silent for longer is
+    /// presumed dead and its leased shards requeue; also how long a
+    /// job waits for a first worker before falling back to local
+    /// execution.
+    pub fleet_timeout_secs: f64,
 }
 
 /// Default [`ServerConfig::compiled_cache_cap`].
@@ -125,6 +142,9 @@ impl Default for ServerConfig {
             journal: None,
             job_timeout_secs: None,
             compiled_cache_cap: DEFAULT_COMPILED_CACHE_CAP,
+            auth_token: None,
+            coordinator: false,
+            fleet_timeout_secs: 10.0,
         }
     }
 }
@@ -333,6 +353,31 @@ pub const METRIC_CATALOG: &[(&str, &str, &str)] = &[
         "histogram",
         "POST /jobs/:id/generate latency (KV-cached batch=1 decode)",
     ),
+    (
+        "sparsefw_fleet_workers_registered_total",
+        "counter",
+        "Fleet workers ever registered via POST /fleet/workers",
+    ),
+    (
+        "sparsefw_fleet_workers_live",
+        "gauge",
+        "Fleet workers currently within the heartbeat window",
+    ),
+    (
+        "sparsefw_fleet_shards_dispatched_total",
+        "counter",
+        "Shard leases handed to fleet workers",
+    ),
+    (
+        "sparsefw_fleet_shards_requeued_total",
+        "counter",
+        "Shards requeued after a worker death or failed result",
+    ),
+    (
+        "sparsefw_fleet_handoff_bytes_total",
+        "counter",
+        "Staged hidden-state hand-off bytes shipped to workers",
+    ),
 ];
 
 /// Render the full [`METRIC_CATALOG`] in the Prometheus text
@@ -398,6 +443,29 @@ fn scalar_for(state: &ServerState, name: &str) -> f64 {
             state.compiled.misses.load(Ordering::Relaxed) as f64
         }
         "sparsefw_compiled_cache_models" => state.compiled.len() as f64,
+        "sparsefw_fleet_workers_registered_total" => state
+            .fleet
+            .as_ref()
+            .map(|f| f.workers_registered.load(Ordering::Relaxed) as f64)
+            .unwrap_or(0.0),
+        "sparsefw_fleet_workers_live" => {
+            state.fleet.as_ref().map(|f| f.live_workers() as f64).unwrap_or(0.0)
+        }
+        "sparsefw_fleet_shards_dispatched_total" => state
+            .fleet
+            .as_ref()
+            .map(|f| f.shards_dispatched.load(Ordering::Relaxed) as f64)
+            .unwrap_or(0.0),
+        "sparsefw_fleet_shards_requeued_total" => state
+            .fleet
+            .as_ref()
+            .map(|f| f.shards_requeued.load(Ordering::Relaxed) as f64)
+            .unwrap_or(0.0),
+        "sparsefw_fleet_handoff_bytes_total" => state
+            .fleet
+            .as_ref()
+            .map(|f| f.handoff_bytes.load(Ordering::Relaxed) as f64)
+            .unwrap_or(0.0),
         _ => 0.0,
     }
 }
@@ -597,6 +665,12 @@ pub struct ServerState {
     /// Token-bucket limiter shedding abusive `POST /jobs` rates with
     /// 429 before they reach the queue.
     pub limiter: ratelimit::RateLimiter,
+    /// Fleet registry + shard table when this server is a coordinator
+    /// (`serve --coordinator`); `None` on plain servers (fleet routes
+    /// answer 409).
+    pub fleet: Option<Arc<fleet::FleetState>>,
+    /// Bearer token every mutating request must present (`None` = open).
+    pub auth_token: Option<String>,
     stopping: AtomicBool,
 }
 
@@ -690,8 +764,18 @@ impl Server {
     /// Bind `cfg.addr` and start one pruning worker per session plus the
     /// HTTP accept loop.  `sessions` must all serve the same underlying
     /// models — one per worker thread, each with its own memo.
-    pub fn bind(cfg: &ServerConfig, sessions: Vec<PruneSession>) -> Result<ServerHandle> {
+    ///
+    /// With [`ServerConfig::coordinator`] the local pool is replaced by
+    /// one fleet dispatcher thread: jobs shard across worker processes
+    /// registered over HTTP (see [`fleet`]), falling back to local
+    /// execution when none are live.
+    pub fn bind(cfg: &ServerConfig, mut sessions: Vec<PruneSession>) -> Result<ServerHandle> {
         ensure!(!sessions.is_empty(), "server needs at least one worker session");
+        if cfg.coordinator {
+            // the dispatcher is single-threaded (one fleet job at a
+            // time; parallelism lives across worker processes)
+            sessions.truncate(1);
+        }
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
@@ -720,6 +804,12 @@ impl Server {
             trace_ring: trace_ring.clone(),
             journal: journal_arc,
             limiter: ratelimit::RateLimiter::for_submit(),
+            fleet: cfg.coordinator.then(|| {
+                Arc::new(fleet::FleetState::new(Duration::from_secs_f64(
+                    cfg.fleet_timeout_secs.max(0.1),
+                )))
+            }),
+            auth_token: cfg.auth_token.clone(),
             stopping: AtomicBool::new(false),
         });
         for job in replayed {
@@ -757,10 +847,17 @@ impl Server {
                 }
                 session.set_job_timeout(cfg.job_timeout_secs);
                 let state = state.clone();
-                std::thread::Builder::new()
-                    .name(format!("sparsefw-worker-{i}"))
-                    .spawn(move || worker_loop(state, session, i))
-                    .with_context(|| format!("spawning worker thread {i}"))
+                if cfg.coordinator {
+                    std::thread::Builder::new()
+                        .name("sparsefw-dispatcher".into())
+                        .spawn(move || fleet::coordinator::dispatcher_loop(state, session))
+                        .context("spawning fleet dispatcher thread")
+                } else {
+                    std::thread::Builder::new()
+                        .name(format!("sparsefw-worker-{i}"))
+                        .spawn(move || worker_loop(state, session, i))
+                        .with_context(|| format!("spawning worker thread {i}"))
+                }
             })
             .collect::<Result<Vec<_>>>()?;
 
@@ -773,6 +870,11 @@ impl Server {
                 .context("spawning accept thread")?
         };
 
+        if cfg.coordinator {
+            crate::info!(
+                "sparsefw serve: coordinator mode (jobs shard across registered fleet workers)"
+            );
+        }
         crate::info!("sparsefw serve: listening on {addr} ({} workers)", state.metrics.workers);
         Ok(ServerHandle { addr, state, accept: Some(accept), workers, sinks })
     }

@@ -1,0 +1,310 @@
+//! Fleet integration: one pruning job sharded across ≥2 workers over
+//! real TCP sockets, asserted bit-identical to a single-node run.
+//!
+//! Covers the distributed-pruning acceptance criteria:
+//! - a coordinator + two fleet workers produce the same
+//!   `JobSummary.mask_digest` as a plain `PruneSession::execute` for
+//!   all three `--propagate` policies (dense, block, layer), with the
+//!   whole stack — registration, polling, staged hidden-state
+//!   hand-off, result assembly — speaking bearer-token auth;
+//! - killing a worker mid-shard (the `abscond_on_lease` hook, which
+//!   exits without reporting or heartbeating — indistinguishable from
+//!   SIGKILL) requeues its blocks on the surviving worker and the job
+//!   still converges to the single-node digest;
+//! - mutating routes without the token answer 401 + WWW-Authenticate
+//!   while reads stay open.
+
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparsefw::calib::CalibPolicy;
+use sparsefw::coordinator::{Allocation, JobSpec, PruneSession};
+use sparsefw::data::corpus;
+use sparsefw::data::TokenBin;
+use sparsefw::model::testutil::{random_model, tiny_cfg};
+use sparsefw::model::Gpt;
+use sparsefw::pruner::{Method, SparsityPattern};
+use sparsefw::server::fleet::WorkerOptions;
+use sparsefw::server::{fleet, Client, JobSummary, Server, ServerConfig, ServerHandle};
+
+const WAIT: Duration = Duration::from_secs(120);
+
+fn shared_model() -> Gpt {
+    random_model(&tiny_cfg(), 1)
+}
+
+fn session_over(model: &Gpt) -> PruneSession {
+    let bin = TokenBin::from_tokens(corpus::generate(6, 8192));
+    let mut models = BTreeMap::new();
+    models.insert("test".to_string(), model.clone());
+    PruneSession::in_memory(models, bin.clone(), bin)
+}
+
+fn spec_for(policy: CalibPolicy) -> JobSpec {
+    JobSpec {
+        model: "test".into(),
+        method: Method::wanda(),
+        allocation: Allocation::Uniform(SparsityPattern::PerRow { sparsity: 0.5 }),
+        calib_samples: 6,
+        calib_seed: 2,
+        calib_policy: policy,
+        ..Default::default()
+    }
+}
+
+/// Ephemeral-port coordinator over one in-memory session.
+fn spawn_coordinator(
+    model: &Gpt,
+    fleet_timeout_secs: f64,
+    token: Option<&str>,
+) -> (ServerHandle, Client) {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        coordinator: true,
+        fleet_timeout_secs,
+        auth_token: token.map(String::from),
+        ..Default::default()
+    };
+    let handle = Server::bind(&cfg, vec![session_over(model)]).expect("coordinator binds");
+    let mut client = Client::new(handle.addr().to_string());
+    if let Some(t) = token {
+        client = client.with_token(t);
+    }
+    (handle, client)
+}
+
+struct FleetWorker {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+impl FleetWorker {
+    fn stop(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.thread.join().expect("worker thread exits").expect("worker exits cleanly");
+    }
+}
+
+fn spawn_worker(
+    model: &Gpt,
+    addr: &str,
+    label: &str,
+    token: Option<&str>,
+    abscond_on_lease: Option<usize>,
+) -> FleetWorker {
+    let mut opts = WorkerOptions::new(addr, label);
+    opts.token = token.map(String::from);
+    opts.poll_ms = 20;
+    opts.abscond_on_lease = abscond_on_lease;
+    let stop = opts.stop.clone();
+    let session = session_over(model);
+    let thread = std::thread::spawn(move || fleet::run_worker(&opts, session));
+    FleetWorker { stop, thread }
+}
+
+/// Block until `GET /fleet` reports at least `n` live workers.
+fn wait_for_live_workers(client: &Client, n: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let status = client.get("/fleet").expect("GET /fleet");
+        let live = match status.at(&["workers"]) {
+            sparsefw::util::json::Json::Arr(ws) => ws
+                .iter()
+                .filter(|w| w.at(&["live"]).as_bool().unwrap_or(false))
+                .count(),
+            _ => 0,
+        };
+        if live >= n {
+            return;
+        }
+        assert!(Instant::now() < deadline, "only {live}/{n} workers came up");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The digest a plain single-node `PruneSession::execute` produces.
+fn single_node_digest(model: &Gpt, spec: &JobSpec) -> String {
+    let mut session = session_over(model);
+    let res = session.execute(spec).expect("single-node run");
+    JobSummary::from_result(&res).mask_digest
+}
+
+fn submit_and_finish(client: &Client, spec: &JobSpec) -> String {
+    let id = client.submit(spec, 0).expect("submit");
+    let fin = client.wait(id, WAIT).expect("job finishes");
+    assert_eq!(
+        fin.at(&["state"]).as_str(),
+        Some("done"),
+        "job {id} did not succeed: {fin:?}"
+    );
+    fin.at(&["result", "mask_digest"])
+        .as_str()
+        .expect("done job carries a mask_digest")
+        .to_string()
+}
+
+/// Tentpole acceptance: a job sharded across 2 workers — behind
+/// bearer auth end to end — is bit-identical to a single-node run for
+/// every calibration policy.
+#[test]
+fn fleet_digest_matches_single_node_for_all_policies() {
+    let model = shared_model();
+    let token = "fleet-secret";
+    let (handle, client) = spawn_coordinator(&model, 10.0, Some(token));
+    let addr = handle.addr().to_string();
+    let w0 = spawn_worker(&model, &addr, "w0", Some(token), None);
+    let w1 = spawn_worker(&model, &addr, "w1", Some(token), None);
+    wait_for_live_workers(&client, 2);
+
+    for policy in
+        [CalibPolicy::Dense, CalibPolicy::PropagateBlock, CalibPolicy::PropagateLayer]
+    {
+        let spec = spec_for(policy);
+        let fleet_digest = submit_and_finish(&client, &spec);
+        let local_digest = single_node_digest(&model, &spec);
+        assert_eq!(
+            fleet_digest, local_digest,
+            "fleet and single-node digests diverge under {policy:?}"
+        );
+    }
+
+    // the jobs really were split: every job shards into 2 with 2 live
+    // workers (tiny model = 2 blocks), so ≥ 6 leases over 3 jobs
+    let status = client.get("/fleet").expect("GET /fleet");
+    let dispatched = status.at(&["shards_dispatched"]).as_usize().unwrap_or(0);
+    assert!(dispatched >= 6, "expected ≥6 shard leases, saw {dispatched}");
+
+    w0.stop();
+    w1.stop();
+    handle.shutdown();
+}
+
+/// A worker that vanishes mid-shard (no report, no heartbeat — the
+/// moral equivalent of SIGKILL) is reaped after the heartbeat window
+/// and its blocks requeue on the survivor; the job still converges to
+/// the single-node digest.
+#[test]
+fn worker_loss_requeues_shards_and_converges() {
+    let model = shared_model();
+    // short heartbeat window so the reap happens in test time
+    let (handle, client) = spawn_coordinator(&model, 1.0, None);
+    let addr = handle.addr().to_string();
+    // staged policy: shards hand off sequentially, so exactly one of
+    // the two workers holds the lease the abscond hook fires on
+    let spec = spec_for(CalibPolicy::PropagateBlock);
+    let deserter = spawn_worker(&model, &addr, "deserter", None, Some(0));
+    let survivor = spawn_worker(&model, &addr, "survivor", None, None);
+    wait_for_live_workers(&client, 2);
+
+    let fleet_digest = submit_and_finish(&client, &spec);
+    assert_eq!(fleet_digest, single_node_digest(&model, &spec));
+
+    let status = client.get("/fleet").expect("GET /fleet");
+    let requeued = status.at(&["shards_requeued"]).as_usize().unwrap_or(0);
+    assert!(requeued >= 1, "deserter's shard was never requeued: {status:?}");
+
+    // the deserter's thread already returned Ok on its own
+    deserter.thread.join().expect("deserter joins").expect("deserter exits cleanly");
+    survivor.stop();
+    handle.shutdown();
+}
+
+/// Satellite: bearer auth — mutating routes 401 without the token
+/// (with a WWW-Authenticate challenge), reads stay open, and the
+/// token unlocks the full lifecycle.
+#[test]
+fn auth_token_gates_mutating_routes() {
+    let model = shared_model();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        auth_token: Some("sekrit".into()),
+        ..Default::default()
+    };
+    let handle = Server::bind(&cfg, vec![session_over(&model)]).expect("server binds");
+    let addr = handle.addr().to_string();
+
+    // no token: mutating route rejected…
+    let bare = Client::new(addr.clone());
+    let err = bare.submit(&spec_for(CalibPolicy::Dense), 0).expect_err("submit without token");
+    assert!(format!("{err:#}").contains("401"), "expected a 401, got: {err:#}");
+    // …with a WWW-Authenticate challenge on the raw response
+    let mut sock = std::net::TcpStream::connect(&addr).expect("connect");
+    sock.write_all(
+        b"POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 2\r\n\
+          Content-Type: application/json\r\nConnection: close\r\n\r\n{}",
+    )
+    .expect("write request");
+    let mut raw = String::new();
+    sock.read_to_string(&mut raw).expect("read response");
+    assert!(raw.starts_with("HTTP/1.1 401"), "expected 401, got: {raw}");
+    assert!(raw.contains("WWW-Authenticate: Bearer"), "missing challenge: {raw}");
+
+    // reads stay open without the token
+    assert!(bare.get("/healthz").is_ok());
+    assert!(bare.get("/jobs").is_ok());
+
+    // wrong token is as good as none
+    let wrong = Client::new(addr.clone()).with_token("not-it");
+    assert!(wrong.submit(&spec_for(CalibPolicy::Dense), 0).is_err());
+
+    // the right token unlocks the full lifecycle
+    let authed = Client::new(addr).with_token("sekrit");
+    let digest = submit_and_finish(&authed, &spec_for(CalibPolicy::Dense));
+    assert_eq!(digest, single_node_digest(&model, &spec_for(CalibPolicy::Dense)));
+    handle.shutdown();
+}
+
+/// Satellite: `GET /spec` serves the machine-readable API description
+/// generated from the real route table — every documented route and
+/// every catalog metric shows up.
+#[test]
+fn spec_endpoint_describes_routes_and_metrics() {
+    let model = shared_model();
+    let cfg =
+        ServerConfig { addr: "127.0.0.1:0".into(), workers: 1, ..Default::default() };
+    let handle = Server::bind(&cfg, vec![session_over(&model)]).expect("server binds");
+    let client = Client::new(handle.addr().to_string());
+
+    let spec = client.get("/spec").expect("GET /spec");
+    let routes = match spec.at(&["routes"]) {
+        sparsefw::util::json::Json::Arr(rs) => rs
+            .iter()
+            .map(|r| {
+                format!(
+                    "{} {}",
+                    r.at(&["method"]).as_str().unwrap_or("?"),
+                    r.at(&["path"]).as_str().unwrap_or("?")
+                )
+            })
+            .collect::<Vec<_>>(),
+        _ => panic!("routes is not an array: {spec:?}"),
+    };
+    for want in [
+        "POST /jobs",
+        "GET /jobs/:id",
+        "GET /spec",
+        "GET /fleet",
+        "POST /fleet/workers",
+        "POST /fleet/workers/:id/poll",
+        "POST /fleet/shards/:id/result",
+    ] {
+        assert!(routes.iter().any(|r| r == want), "missing route {want}: {routes:?}");
+    }
+    let metrics = match spec.at(&["metrics"]) {
+        sparsefw::util::json::Json::Arr(ms) => ms,
+        _ => panic!("metrics is not an array: {spec:?}"),
+    };
+    for &(name, kind, _) in sparsefw::server::METRIC_CATALOG {
+        assert!(
+            metrics.iter().any(|m| m.at(&["name"]).as_str() == Some(name)
+                && m.at(&["type"]).as_str() == Some(kind)),
+            "metric {name} missing from /spec"
+        );
+    }
+    handle.shutdown();
+}

@@ -238,6 +238,123 @@ $("$BIN" submit --addr "$CADDR" --model demo --method wanda \
 done
 echo "   chaos lane OK (21/21 cells, zero hangs, zero lost jobs)"
 
+# fleet lane: real coordinator + 2 worker processes behind bearer auth,
+# SIGKILL one worker mid-shard; the job must requeue the lost blocks on
+# the survivor, finish, and match the single-node mask_digest bit for
+# bit.  Each worker arms a one-shot 3s fw.iter delay (the fault
+# registry; a delay changes no results) so the kill reliably lands
+# while the shard is genuinely mid-flight.
+echo "== fleet smoke: coordinator + 2 workers, SIGKILL one mid-shard =="
+FLEET_JOB_FLAGS="--model demo --method wanda --pattern per-row:0.5 \
+    --samples 8 --propagate block"
+
+# single-node reference digest for the identical spec
+REF_LOG="$(mktemp)"
+"$BIN" serve --demo --addr 127.0.0.1:0 --workers 1 >"$REF_LOG" 2>&1 &
+REF_PID=$!
+trap 'kill "$REF_PID" 2>/dev/null || true' EXIT
+RADDR=""
+for _ in $(seq 1 100); do
+    RADDR="$(sed -n 's/^listening on //p' "$REF_LOG" | head -n1)"
+    [ -n "$RADDR" ] && break
+    sleep 0.1
+done
+[ -n "$RADDR" ] || { echo "reference server did not come up:"; cat "$REF_LOG"; exit 1; }
+# shellcheck disable=SC2086
+REF_OUT="$("$BIN" submit --addr "$RADDR" $FLEET_JOB_FLAGS --wait 2>&1)"
+REF_DIGEST="$(echo "$REF_OUT" | sed -n 's/.*mask_digest=\([0-9a-f]*\).*/\1/p' | head -n1)"
+[ -n "$REF_DIGEST" ] \
+    || { echo "no single-node mask_digest: $REF_OUT"; cat "$REF_LOG"; exit 1; }
+"$BIN" shutdown --addr "$RADDR" >/dev/null
+wait "$REF_PID"
+trap - EXIT
+echo "   single-node reference digest $REF_DIGEST"
+
+# coordinator (short heartbeat window so the reap lands in test time)
+# + two fleet workers, all speaking the same bearer token
+FTOKEN="ci-fleet-secret"
+CO_LOG="$(mktemp)"; W1_LOG="$(mktemp)"; W2_LOG="$(mktemp)"
+W1_PID=""; W2_PID=""
+"$BIN" serve --demo --coordinator --addr 127.0.0.1:0 \
+    --fleet-timeout-secs 2 --auth-token "$FTOKEN" >"$CO_LOG" 2>&1 &
+CO_PID=$!
+trap 'kill -9 "$CO_PID" $W1_PID $W2_PID 2>/dev/null || true' EXIT
+FADDR=""
+for _ in $(seq 1 100); do
+    FADDR="$(sed -n 's/^listening on //p' "$CO_LOG" | head -n1)"
+    [ -n "$FADDR" ] && break
+    sleep 0.1
+done
+[ -n "$FADDR" ] || { echo "coordinator did not come up:"; cat "$CO_LOG"; exit 1; }
+SPARSEFW_FAULTS='fw.iter:delay:1:3000' "$BIN" serve --worker \
+    --coordinator-addr "$FADDR" --demo --label w1 \
+    --auth-token "$FTOKEN" >"$W1_LOG" 2>&1 &
+W1_PID=$!
+SPARSEFW_FAULTS='fw.iter:delay:1:3000' "$BIN" serve --worker \
+    --coordinator-addr "$FADDR" --demo --label w2 \
+    --auth-token "$FTOKEN" >"$W2_LOG" 2>&1 &
+W2_PID=$!
+for _ in $(seq 1 100); do
+    grep -q "registered with coordinator" "$W1_LOG" \
+        && grep -q "registered with coordinator" "$W2_LOG" && break
+    sleep 0.1
+done
+grep -q "registered with coordinator" "$W1_LOG" \
+    || { echo "worker w1 never registered:"; cat "$W1_LOG" "$CO_LOG"; exit 1; }
+grep -q "registered with coordinator" "$W2_LOG" \
+    || { echo "worker w2 never registered:"; cat "$W2_LOG" "$CO_LOG"; exit 1; }
+
+# auth: an un-tokened submit to the coordinator must bounce with a 401
+# shellcheck disable=SC2086
+if NOAUTH_OUT="$("$BIN" submit --addr "$FADDR" $FLEET_JOB_FLAGS 2>&1)"; then
+    echo "un-tokened submit was accepted: $NOAUTH_OUT"; exit 1
+fi
+echo "$NOAUTH_OUT" | grep -q "401" \
+    || { echo "expected a 401 without the token: $NOAUTH_OUT"; exit 1; }
+
+# submit in the background, then SIGKILL the first worker to lease a
+# shard while that shard is still running
+FLEET_OUT="$(mktemp)"
+# shellcheck disable=SC2086
+"$BIN" submit --addr "$FADDR" --token "$FTOKEN" $FLEET_JOB_FLAGS \
+    --timeout-secs 300 --wait >"$FLEET_OUT" 2>&1 &
+SUB_PID=$!
+VICTIM=""; SURVIVOR=""
+for _ in $(seq 1 600); do
+    if grep -q "leased job" "$W1_LOG"; then VICTIM=$W1_PID; SURVIVOR=$W2_PID; break; fi
+    if grep -q "leased job" "$W2_LOG"; then VICTIM=$W2_PID; SURVIVOR=$W1_PID; break; fi
+    sleep 0.05
+done
+[ -n "$VICTIM" ] \
+    || { echo "no worker leased a shard:"; cat "$CO_LOG" "$W1_LOG" "$W2_LOG"; exit 1; }
+kill -9 "$VICTIM"
+echo "   SIGKILLed worker pid $VICTIM mid-shard"
+
+wait "$SUB_PID" || true
+grep -q "state=done" "$FLEET_OUT" \
+    || { echo "fleet job did not finish after the kill:"; cat "$FLEET_OUT" "$CO_LOG"; exit 1; }
+FLEET_DIGEST="$(sed -n 's/.*mask_digest=\([0-9a-f]*\).*/\1/p' "$FLEET_OUT" | head -n1)"
+[ "$FLEET_DIGEST" = "$REF_DIGEST" ] \
+    || { echo "fleet digest $FLEET_DIGEST != single-node $REF_DIGEST"
+         cat "$FLEET_OUT" "$CO_LOG"; exit 1; }
+grep -q "requeued shard" "$CO_LOG" \
+    || { echo "killed worker's shard was never requeued:"; cat "$CO_LOG"; exit 1; }
+FPROM="$(exec 3<>"/dev/tcp/${FADDR%:*}/${FADDR##*:}"; \
+    printf 'GET /metrics?format=prometheus HTTP/1.1\r\nHost: sparsefw\r\nConnection: close\r\n\r\n' >&3; \
+    cat <&3)"
+echo "$FPROM" | grep -Eq "^sparsefw_fleet_shards_dispatched_total [1-9]" \
+    || { echo "fleet exposition missing shard dispatches: $FPROM"; exit 1; }
+echo "$FPROM" | grep -Eq "^sparsefw_fleet_shards_requeued_total [1-9]" \
+    || { echo "fleet exposition missing the requeue count: $FPROM"; exit 1; }
+
+# clean shutdown: survivor first (it polls the coordinator), then the
+# coordinator itself over the authed client
+kill "$SURVIVOR" 2>/dev/null || true
+"$BIN" shutdown --addr "$FADDR" --token "$FTOKEN" >/dev/null
+wait "$CO_PID"
+trap - EXIT
+echo "   fleet smoke OK (kill-one-worker requeue, digest $FLEET_DIGEST)"
+
 echo "== server queue micro-bench (BENCH_server.json) =="
 SPARSEFW_BENCH_JSON="$REPO/BENCH_server.json" cargo bench --bench server_queue
 echo "   wrote $REPO/BENCH_server.json"
